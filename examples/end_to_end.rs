@@ -1,0 +1,145 @@
+//! End-to-end system driver — proves all three layers compose:
+//!
+//!   L1/L2  AOT artifacts (Pallas kernels inside JAX Newton solvers,
+//!          lowered to HLO text by `make artifacts`)
+//!   runtime PJRT CPU client loading + executing those artifacts
+//!   L3      the rust coordinator: worker pool, queue, metrics
+//!
+//! Workload: two data-set profiles (one p ≫ n → primal artifacts, one
+//! n ≫ p → dual+gram artifacts), a 40-point evaluation grid each (the
+//! paper's protocol), submitted as concurrent jobs against both the XLA
+//! and rust backends. Reports correctness vs the glmnet reference and
+//! service latency/throughput percentiles.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+
+use std::sync::Arc;
+use sven::coordinator::{
+    BackendChoice, PathRunner, PathRunnerConfig, Service, ServiceConfig,
+};
+use sven::data::SynthSpec;
+use sven::solvers::glmnet::PathSettings;
+use sven::util::{fmt_duration, Timer};
+
+fn main() -> anyhow::Result<()> {
+    // --- workload: one dataset per regime (sized to the test buckets) ---
+    let wide = sven::data::synth_regression(&SynthSpec {
+        name: "genomics-like (p>>n)".into(),
+        n: 100,
+        p: 1500,
+        support: 20,
+        rho: 0.5,
+        snr: 3.0,
+        seed: 11,
+        ..Default::default()
+    });
+    let tall = sven::data::synth_regression(&SynthSpec {
+        name: "sensor-like (n>>p)".into(),
+        n: 1500,
+        p: 60,
+        support: 12,
+        rho: 0.6,
+        snr: 3.0,
+        seed: 12,
+        ..Default::default()
+    });
+
+    let runner = PathRunner::new(PathRunnerConfig {
+        grid: 40,
+        path: PathSettings { num_lambda: 100, ..Default::default() },
+        ..Default::default()
+    });
+
+    let service = Service::start(ServiceConfig::default());
+    let mut total_jobs = 0usize;
+    let wall = Timer::start();
+
+    let mut receivers = Vec::new();
+    for (ds_id, data) in [(1u64, &wide), (2u64, &tall)] {
+        let grid = runner.derive_grid(data);
+        println!(
+            "dataset {:<20} n={:<5} p={:<5} grid={} settings",
+            data.name,
+            data.n(),
+            data.p(),
+            grid.len()
+        );
+        let x = Arc::new(data.x.clone());
+        let y = Arc::new(data.y.clone());
+        for (i, pt) in grid.iter().enumerate() {
+            for backend in [BackendChoice::Xla, BackendChoice::Rust] {
+                let rx = service.submit(
+                    ds_id,
+                    x.clone(),
+                    y.clone(),
+                    pt.t,
+                    pt.lambda2.max(1e-6),
+                    backend,
+                );
+                receivers.push((data.name.clone(), i, pt.beta.clone(), backend, rx));
+                total_jobs += 1;
+            }
+        }
+    }
+    println!("\nsubmitted {total_jobs} jobs to the coordinator\n");
+
+    // --- collect, check correctness against the glmnet reference ---
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    let mut max_dev = 0.0f64;
+    let mut xla_seconds = Vec::new();
+    let mut rust_seconds = Vec::new();
+    for (ds, _i, beta_ref, backend, rx) in receivers {
+        let outcome = rx.recv()?;
+        match outcome.result {
+            Ok(sol) => {
+                let dev = sol
+                    .beta
+                    .iter()
+                    .zip(&beta_ref)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                max_dev = max_dev.max(dev);
+                if dev > 1e-3 {
+                    eprintln!("WARN {ds} dev {dev:.2e} via {backend:?}");
+                }
+                match backend {
+                    BackendChoice::Xla => xla_seconds.push(sol.seconds),
+                    BackendChoice::Rust => rust_seconds.push(sol.seconds),
+                }
+                ok += 1;
+            }
+            Err(e) => {
+                eprintln!("job failed via {backend:?}: {e}");
+                failed += 1;
+            }
+        }
+    }
+    let wall_s = wall.elapsed();
+
+    println!("--- results ---------------------------------------------");
+    println!("jobs ok={ok} failed={failed} wall={}", fmt_duration(wall_s));
+    println!("throughput: {:.1} solves/s", ok as f64 / wall_s);
+    println!("correctness: max |beta − beta_glmnet| = {max_dev:.2e} over all jobs");
+    let summarize = |name: &str, xs: &[f64]| {
+        if xs.is_empty() {
+            return;
+        }
+        let s = sven::util::Summary::from(xs.to_vec());
+        println!(
+            "{name:<12} solve time: p50={} p95={} max={}",
+            fmt_duration(s.median()),
+            fmt_duration(s.p95()),
+            fmt_duration(s.max())
+        );
+    };
+    summarize("SVEN (XLA)", &xla_seconds);
+    summarize("SVEN (CPU)", &rust_seconds);
+    println!("{}", service.metrics().report());
+    service.shutdown();
+
+    assert!(failed == 0, "all jobs must succeed");
+    assert!(max_dev < 1e-3, "reduction must match glmnet (got {max_dev:.2e})");
+    println!("\nEND-TO-END OK: artifacts + runtime + coordinator compose correctly");
+    Ok(())
+}

@@ -1,0 +1,211 @@
+"""AOT pipeline: lower the L2 programs to HLO *text* per shape bucket and
+write ``artifacts/manifest.json`` for the rust runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shape buckets: one artifact per (program, bucket). The rust runtime pads a
+problem up to the smallest covering bucket and passes the validity mask,
+which makes padding exact (tests/test_padding.py, rust/tests/padding.rs).
+
+Usage: ``python -m compile.aot --out ../artifacts`` (idempotent; the
+Makefile skips it when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+F64 = jnp.float64
+
+# ---------------------------------------------------------------------------
+# Bucket tables. (n, p) are the *regression* problem dims; the SVM sees
+# m = 2p samples with d = n features. Chosen to cover the 12 dataset
+# profiles plus test/example sizes; the runtime picks the smallest cover.
+# ---------------------------------------------------------------------------
+
+# Primal buckets (2p > n regime; Figure 2 profiles + small sizes).
+PRIMAL_BUCKETS: list[tuple[int, int]] = [
+    (32, 64),
+    (128, 512),
+    (128, 2048),
+    # quick-bench shapes (scale factor 0.25 of the profiles): tight
+    # buckets keep padding waste low where absolute times are smallest
+    (64, 1536),
+    (64, 2560),
+    (128, 4096),
+    (128, 6144),
+    (256, 6144),
+    # full-profile shapes
+    (128, 12288),
+    (256, 12288),
+    (512, 20480),
+    (1024, 24576),
+]
+
+# Dual buckets by p (n ≥ 2p regime; Figure 3 profiles + small sizes).
+DUAL_BUCKETS: list[int] = [16, 64, 128, 512, 1024]
+
+# Gram buckets (n, p) for the dual-mode preprocessing.
+GRAM_BUCKETS: list[tuple[int, int]] = [
+    (256, 16),
+    (2048, 64),
+    (8192, 128),
+    (65536, 128),
+    (40960, 512),
+    (30720, 1024),
+    (20480, 1024),
+]
+
+
+def _to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    CRITICAL: print with ``print_large_constants=True``. The default HLO
+    printer elides arrays beyond a few elements as ``constant({...})``,
+    which the consuming parser silently reads back as *zeros* — the
+    artifact would type-check and run but compute garbage. (Found the hard
+    way; regression-tested by test_aot.py::test_no_elided_constants.)
+    """
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The consumer is xla_extension 0.5.1, whose parser predates newer
+    # metadata attributes (source_end_line etc.) — strip metadata.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _spec(shape, dtype=F64):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_primal(n: int, p: int) -> str:
+    fn = jax.jit(model.svm_primal_program)
+    lowered = fn.lower(
+        _spec((n, p)),      # X
+        _spec((n,)),        # y
+        _spec(()),          # t
+        _spec(()),          # c
+        _spec((2 * p,)),    # mask
+        _spec((n,)),        # w0
+    )
+    return _to_hlo_text(lowered)
+
+
+def lower_dual(p: int) -> str:
+    fn = jax.jit(model.svm_dual_program)
+    lowered = fn.lower(
+        _spec((p, p)),      # G0
+        _spec((p,)),        # v
+        _spec(()),          # yy
+        _spec(()),          # t
+        _spec(()),          # c
+        _spec((2 * p,)),    # mask
+        _spec((2 * p,)),    # alpha0
+    )
+    return _to_hlo_text(lowered)
+
+
+def lower_gram(n: int, p: int) -> str:
+    fn = jax.jit(model.gram_program)
+    lowered = fn.lower(_spec((n, p)), _spec((n,)))
+    return _to_hlo_text(lowered)
+
+
+def _inputs_fingerprint() -> str:
+    """Hash of the compile-path sources, for idempotent rebuilds."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir: str, *, only: str | None = None, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "format": 1,
+        "fingerprint": _inputs_fingerprint(),
+        "dtype": "f64",
+        "artifacts": [],
+    }
+
+    def emit(name: str, kind: str, text: str, meta: dict):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": name, "kind": kind, "file": fname, **meta}
+        )
+        if verbose:
+            print(f"  {name}: {len(text) / 1024:.0f} KiB", flush=True)
+
+    if only in (None, "primal"):
+        for n, p in PRIMAL_BUCKETS:
+            emit(
+                f"svm_primal_n{n}_p{p}",
+                "primal",
+                lower_primal(n, p),
+                {"n": n, "p": p},
+            )
+    if only in (None, "dual"):
+        for p in DUAL_BUCKETS:
+            emit(f"svm_dual_p{p}", "dual", lower_dual(p), {"p": p})
+    if only in (None, "gram"):
+        for n, p in GRAM_BUCKETS:
+            emit(f"gram_n{n}_p{p}", "gram", lower_gram(n, p), {"n": n, "p": p})
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", choices=["primal", "dual", "gram"], default=None)
+    ap.add_argument(
+        "--force", action="store_true", help="rebuild even if up to date"
+    )
+    args = ap.parse_args()
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == _inputs_fingerprint():
+                print("artifacts up to date; skipping (use --force to rebuild)")
+                return
+        except (json.JSONDecodeError, OSError):
+            pass
+    build(args.out, only=args.only)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

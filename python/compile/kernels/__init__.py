@@ -1,0 +1,2 @@
+"""Pallas kernels (L1) for the SVEN SVM solve."""
+from . import hinge, matmul, ref  # noqa: F401

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: fused squared-hinge pass.
+
+Given margins ``o = X̂w`` (or ``Kγ`` in the kernelized mode), labels and a
+validity mask, one sweep produces the slack vector, the support-vector
+mask and the loss contribution — the elementwise stage between the two
+matmuls of every Newton/CG step. On TPU this is a VPU map over
+(8, 128)-aligned tiles; a single fused pass instead of three separate
+elementwise ops saves two HBM round-trips of the m-length vectors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Interpret/CPU schedule: one grid step for every bucket in this repo (a
+# real-TPU build would tile at 8x128 VPU lanes - see matmul.py's schedule
+# note).
+BLOCK = 131072
+
+
+def _hinge_kernel(o_ref, yhat_ref, mask_ref, slack_ref, sv_ref, losspart_ref):
+    o = o_ref[...]
+    yhat = yhat_ref[...]
+    mask = mask_ref[...]
+    raw = 1.0 - yhat * o
+    slack = jnp.maximum(raw, 0.0) * mask
+    slack_ref[...] = slack
+    sv_ref[...] = jnp.where(slack > 0.0, mask, jnp.zeros_like(mask))
+    losspart_ref[...] = slack * slack
+
+
+@jax.jit
+def hinge(o: jax.Array, yhat: jax.Array, mask: jax.Array):
+    """Fused hinge pass.
+
+    Returns ``(slack, sv_mask, loss)`` with
+    ``slack_i = mask_i·max(0, 1 − ŷᵢ oᵢ)``, ``sv_mask`` the indicator of
+    active (support-vector) samples, and ``loss = Σ slackᵢ²``.
+    """
+    (m,) = o.shape
+    block = min(BLOCK, m)
+    mp = -(-m // block) * block
+    pad = mp - m
+    if pad:
+        o = jnp.pad(o, (0, pad))
+        yhat = jnp.pad(yhat, (0, pad))
+        mask = jnp.pad(mask, (0, pad))  # zero mask ⇒ padded entries inert
+    slack, sv, losspart = pl.pallas_call(
+        _hinge_kernel,
+        grid=(mp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), o.dtype),
+            jax.ShapeDtypeStruct((mp,), o.dtype),
+            jax.ShapeDtypeStruct((mp,), o.dtype),
+        ],
+        interpret=True,
+    )(o, yhat, mask)
+    return slack[:m], sv[:m], jnp.sum(losspart)

@@ -1,0 +1,116 @@
+"""L1 Pallas kernels: tiled matmul / matvec — the compute hot-spot of the
+SVEN SVM solve (gram matrices and Newton-CG matrix products).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper offloads
+these products to CUBLAS GEMM on a GTX TITAN; on TPU the same role is
+played by MXU-tiled matmuls. The BlockSpec schedule below expresses the
+HBM→VMEM streaming the paper got from CUDA threadblocks: (bm × bk) and
+(bk × bn) tiles stream through VMEM while an output tile is revisited
+across the k grid dimension and accumulated in place.
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO so
+the AOT artifact is runnable from rust. Real-TPU tile-size analysis lives
+in EXPERIMENTS.md §Perf-L1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# --- Tile schedules --------------------------------------------------------
+#
+# TPU (Mosaic) schedule: 128 matches both the MXU systolic dimension and
+# the VPU lane count; the k tile is larger to amortize the accumulation
+# loop. VMEM per step ≈ (BM·BK + BK·BN + BM·BN)·4B ≈ 0.4 MiB — 16 tiles
+# double-buffered fit the ~16 MiB VMEM budget. This is the schedule a real
+# TPU build would use and the one analyzed in EXPERIMENTS.md §Perf-L1.
+TPU_BM = 128
+TPU_BN = 128
+TPU_BK = 256
+
+# Interpret/CPU schedule: the AOT artifacts in this repo execute through
+# the PJRT *CPU* client, where every grid step lowers to a
+# while-loop iteration (dynamic-slice + dot + update-slice). Small tiles
+# fragment a single GEMM into thousands of tiny serial ops — measured 40×
+# slowdown on the (128, 2048)-bucket solve (EXPERIMENTS.md §Perf-L1). The
+# CPU schedule therefore uses monolithic tiles: one grid step for every
+# shape this repo compiles, turning the kernel into a single fused dot.
+BM = 16384
+BN = 16384
+BK = 16384
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (bm × bn) output tile; accumulates over the k grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr = rows - x.shape[0]
+    pc = cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = BM,
+    bn: int = BN,
+    bk: int = BK,
+) -> jax.Array:
+    """``x @ y`` via the Pallas tiled kernel (any shapes; zero-padded to
+    tile multiples internally, which is exact for matmul)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {y.shape}"
+    # Clamp tiles to the problem so the grid is never empty and matvecs
+    # (n = 1) carry no lane padding in interpret mode.
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def matvec(a: jax.Array, v: jax.Array) -> jax.Array:
+    """``a @ v`` for a 1-D ``v`` through the tiled kernel."""
+    return matmul(a, v[:, None])[:, 0]
+
+
+def gram(x: jax.Array) -> jax.Array:
+    """``xᵀ x`` — the t-independent block of the SVEN kernel matrix."""
+    return matmul(x.T, x)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+pytest checks every kernel against (shapes/dtypes swept by hypothesis)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def matvec_ref(a, v):
+    return a @ v
+
+
+def gram_ref(x):
+    return x.T @ x
+
+
+def hinge_ref(o, yhat, mask):
+    slack = jnp.maximum(1.0 - yhat * o, 0.0) * mask
+    sv = jnp.where(slack > 0.0, mask, jnp.zeros_like(mask))
+    return slack, sv, jnp.sum(slack * slack)

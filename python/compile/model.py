@@ -1,0 +1,457 @@
+"""L2: the SVEN SVM solve as fixed-shape JAX programs (build-time only).
+
+Three programs are AOT-lowered per shape bucket (see ``aot.py``):
+
+``gram_program(X, y)``
+    The t-independent pieces of the SVEN kernel matrix: ``G₀ = XᵀX``
+    (Pallas tiled matmul), ``v = Xᵀy`` and ``yy = yᵀy``. Computed once per
+    data set in the n ≫ p regime and cached by the rust coordinator across
+    all 40 path points — the reason the paper's Figure-3 SVEN timings are
+    flat in t.
+
+``svm_primal_program(X, y, t, c, mask, w0)``
+    Chapelle primal Newton-CG on the *implicit* reduction: the SVM design
+    ``X̂ = [Xᵀ − 1yᵀ/t ; Xᵀ + 1yᵀ/t]`` is never materialized; its matvecs
+    are one X product plus a rank-one correction. Used when 2p > n.
+
+``svm_dual_program(G0, v, yy, t, c, mask, alpha0)``
+    Projected Newton (masked-CG inner solves) on the non-negative dual QP
+    over the kernel matrix K(t) assembled on the fly from the cached gram
+    pieces. Used when n ≥ 2p.
+
+All programs take a `mask ∈ {0,1}^{2p}` so problems padded into a shape
+bucket are solved *exactly* (padded features contribute nothing — see
+``tests/test_padding.py``). Scalars (t, c) are 0-d f64 inputs, so one
+artifact serves every path point of every data set that fits its bucket.
+
+Python never runs at serving time: these functions exist to be lowered to
+HLO text by ``aot.py`` and executed from rust via PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hinge as hinge_k
+from .kernels import matmul as matmul_k
+
+jax.config.update("jax_enable_x64", True)
+
+# Iteration caps (static; while_loops exit early on convergence).
+NEWTON_MAX = 60
+CG_MAX = 400
+LINESEARCH_MAX = 30
+NEWTON_TOL = 1e-10
+CG_TOL = 1e-12
+KKT_TOL = 1e-9
+
+
+# --------------------------------------------------------------------------
+# Implicit reduction operators
+# --------------------------------------------------------------------------
+
+def reduction_labels(p: int, dtype=jnp.float64) -> jax.Array:
+    """ŷ = (+1 … +1, −1 … −1).
+
+    Built from an iota rather than a literal constant so the AOT HLO text
+    stays small (a 2p-element f64 constant would be printed inline — see
+    the large-constant note in ``aot._to_hlo_text``).
+    """
+    idx = jnp.arange(2 * p)
+    return jnp.where(idx < p, jnp.ones((), dtype), -jnp.ones((), dtype))
+
+
+def xhat_matvec(x: jax.Array, y: jax.Array, t: jax.Array, w: jax.Array) -> jax.Array:
+    """``X̂ @ w`` for the SVEN construction, implicit form.
+
+    ``X̂ = [Xᵀ − 1yᵀ/t ; Xᵀ + 1yᵀ/t]`` (2p × n), so
+    ``X̂w = concat(Xᵀw − (yᵀw/t)·1, Xᵀw + (yᵀw/t)·1)``.
+    """
+    xtw = matmul_k.matvec(x.T, w)  # (p,) — Pallas tiled
+    shift = jnp.dot(y, w) / t
+    return jnp.concatenate([xtw - shift, xtw + shift])
+
+
+def xhat_rmatvec(x: jax.Array, y: jax.Array, t: jax.Array, u: jax.Array) -> jax.Array:
+    """``X̂ᵀ @ u = X(u₁ + u₂) + ((Σu₂ − Σu₁)/t)·y``."""
+    p = x.shape[1]
+    u1, u2 = u[:p], u[p:]
+    out = matmul_k.matvec(x, u1 + u2)  # (n,)
+    coeff = (jnp.sum(u2) - jnp.sum(u1)) / t
+    return out + coeff * y
+
+
+# --------------------------------------------------------------------------
+# Matrix-free conjugate gradients (shared by both programs)
+# --------------------------------------------------------------------------
+
+class _CgState(NamedTuple):
+    x: jax.Array
+    r: jax.Array
+    pdir: jax.Array
+    rs: jax.Array
+    it: jax.Array
+    done: jax.Array
+
+
+def _cg(operator, b: jax.Array, x0: jax.Array, max_iter: int, tol: float):
+    """Solve ``operator(x) = b`` from ``x0``; returns (x, iters)."""
+    bnorm2 = jnp.dot(b, b)
+    stop2 = (tol * tol) * jnp.maximum(bnorm2, 1e-300)
+
+    r0 = b - operator(x0)
+    state = _CgState(
+        x=x0,
+        r=r0,
+        pdir=r0,
+        rs=jnp.dot(r0, r0),
+        it=jnp.zeros((), jnp.int32),
+        done=jnp.dot(r0, r0) <= stop2,
+    )
+
+    def cond(s: _CgState):
+        return jnp.logical_and(~s.done, s.it < max_iter)
+
+    def body(s: _CgState):
+        ap = operator(s.pdir)
+        pap = jnp.dot(s.pdir, ap)
+        # Guard zero-curvature directions (padded/masked subspace).
+        alpha = jnp.where(pap > 0.0, s.rs / jnp.maximum(pap, 1e-300), 0.0)
+        x = s.x + alpha * s.pdir
+        r = s.r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        beta = rs_new / jnp.maximum(s.rs, 1e-300)
+        pdir = r + beta * s.pdir
+        done = jnp.logical_or(rs_new <= stop2, pap <= 0.0)
+        return _CgState(x, r, pdir, rs_new, s.it + 1, done)
+
+    out = jax.lax.while_loop(cond, body, state)
+    return out.x, out.it
+
+
+# --------------------------------------------------------------------------
+# Primal Newton-CG (2p > n)
+# --------------------------------------------------------------------------
+
+class _NewtonState(NamedTuple):
+    w: jax.Array
+    obj: jax.Array
+    newton_it: jax.Array
+    cg_total: jax.Array
+    done: jax.Array
+
+
+def svm_primal_program(
+    x: jax.Array,
+    y: jax.Array,
+    t: jax.Array,
+    c: jax.Array,
+    mask: jax.Array,
+    w0: jax.Array,
+):
+    """Primal squared-hinge Newton-CG on the implicit reduction.
+
+    Returns ``(w, alpha, iters)`` — α recovered as ``2C·slack`` at the
+    final iterate (any positive rescaling cancels in the SVEN back-map).
+    """
+    n, p = x.shape
+    yhat = reduction_labels(p, x.dtype)
+
+    def eval_at(w):
+        o = xhat_matvec(x, y, t, w)
+        slack, sv, loss = hinge_k.hinge(o, yhat, mask)
+        obj = 0.5 * jnp.dot(w, w) + c * loss
+        return o, slack, sv, obj
+
+    def gradient(w, slack):
+        ys = yhat * slack  # slack already mask-gated by the hinge kernel
+        return w - 2.0 * c * xhat_rmatvec(x, y, t, ys)
+
+    def newton_matrix(sv):
+        """Explicit Hessian ``H = I + 2C·X̂ᵀ diag(sv) X̂`` via the rank-one
+        reduction structure (Chapelle 2007 §4 — the paper's GPU hot-spot).
+
+        With x̂ᵢ = cⱼ ∓ u (u = y/t, cⱼ = column j of X):
+        ``X̂ᵀDX̂ = X·diag(s₁+s₂)·Xᵀ + (X(s₂−s₁))uᵀ + u(X(s₂−s₁))ᵀ
+                 + Σ(s₁+s₂)·uuᵀ`` — one n×p × p×n GEMM instead of a CG
+        loop of serial matvecs (the GEMM is what parallel BLAS — CUBLAS in
+        the paper, Eigen under PJRT-CPU here — executes at full width).
+        """
+        s1, s2 = sv[:p], sv[p:]
+        w1 = s1 + s2
+        w2 = s2 - s1
+        u = y / t
+        xw = x * w1[None, :]
+        m_core = matmul_k.matmul(xw, x.T)  # Pallas tiled GEMM (n × n)
+        xw2 = matmul_k.matvec(x, w2)
+        h = m_core + jnp.outer(xw2, u) + jnp.outer(u, xw2) + jnp.sum(w1) * jnp.outer(u, u)
+        return jnp.eye(n, dtype=x.dtype) + 2.0 * c * h
+
+    def body(s: _NewtonState):
+        _, slack, sv, _ = eval_at(s.w)
+        grad = gradient(s.w, slack)
+
+        # LAPACK solves lower to custom-calls the consuming xla_extension
+        # (0.5.1) cannot execute, so the SPD system is solved by CG on the
+        # *explicit* n×n Hessian — each iteration is one n² gemv instead
+        # of the 2·n·p implicit product, a ~2p/n flop reduction on the
+        # p ≫ n problems this program serves.
+        h = newton_matrix(sv)
+        delta, cg_it = _cg(lambda vv: h @ vv, -grad, jnp.zeros_like(s.w), CG_MAX, CG_TOL)
+
+        # Backtracking line search on the true objective.
+        def ls_cond(ls):
+            step, _, accepted, halvings = ls
+            return jnp.logical_and(~accepted, halvings < LINESEARCH_MAX)
+
+        def ls_body(ls):
+            step, _, _, halvings = ls
+            w_try = s.w + step * delta
+            _, _, _, obj_try = eval_at(w_try)
+            ok = obj_try <= s.obj + 1e-12 * jnp.abs(s.obj)
+            return (
+                jnp.where(ok, step, step * 0.5),
+                jnp.where(ok, obj_try, s.obj),
+                ok,
+                halvings + 1,
+            )
+
+        step, obj_new, accepted, _ = jax.lax.while_loop(
+            ls_cond,
+            ls_body,
+            (
+                jnp.ones((), x.dtype),
+                s.obj,
+                jnp.zeros((), bool),
+                jnp.zeros((), jnp.int32),
+            ),
+        )
+        w_new = jnp.where(accepted, s.w + step * delta, s.w)
+        # Converged when the gradient is tiny or no step was accepted.
+        _, slack_new, _, _ = eval_at(w_new)
+        grad_new = gradient(w_new, slack_new)
+        gnorm = jnp.sqrt(jnp.dot(grad_new, grad_new) / n)
+        done = jnp.logical_or(
+            gnorm <= NEWTON_TOL * (1.0 + jnp.abs(obj_new)), ~accepted
+        )
+        return _NewtonState(
+            w_new, obj_new, s.newton_it + 1, s.cg_total + cg_it, done
+        )
+
+    def cond(s: _NewtonState):
+        return jnp.logical_and(~s.done, s.newton_it < NEWTON_MAX)
+
+    _, _, _, obj0 = eval_at(w0)
+    init = _NewtonState(
+        w0,
+        obj0,
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), bool),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+
+    _, slack, _, _ = eval_at(out.w)
+    alpha = 2.0 * c * slack
+    return out.w, alpha, out.newton_it.astype(jnp.float64)
+
+
+# --------------------------------------------------------------------------
+# Dual projected Newton over the kernel matrix (n ≥ 2p)
+# --------------------------------------------------------------------------
+
+def assemble_kernel_matrix(
+    g0: jax.Array, v: jax.Array, yy: jax.Array, t: jax.Array
+) -> jax.Array:
+    """K(t) = ẐᵀẐ from the t-independent gram pieces (DESIGN.md §2):
+
+    ```
+    K = [  G₁₁  −G₁₂ ]    G₁₁ = G₀ − s(v1ᵀ+1vᵀ) + s²·yy
+        [ −G₁₂ᵀ  G₂₂ ]    G₂₂ = G₀ + s(v1ᵀ+1vᵀ) + s²·yy
+                          G₁₂ = G₀ + s·v1ᵀ − s·1vᵀ − s²·yy
+    ```
+    """
+    s = 1.0 / t
+    s2c = s * s * yy
+    vs = s * v
+    sum_vv = vs[:, None] + vs[None, :]
+    diff_vv = vs[:, None] - vs[None, :]
+    g11 = g0 - sum_vv + s2c
+    g22 = g0 + sum_vv + s2c
+    g12 = g0 + diff_vv - s2c
+    top = jnp.concatenate([g11, -g12], axis=1)
+    bot = jnp.concatenate([-g12.T, g22], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+class _DualState(NamedTuple):
+    alpha: jax.Array
+    free: jax.Array
+    it: jax.Array
+    done: jax.Array
+
+
+# Pivot cap for the dual active set: one pivot per support change, so the
+# bound is the working-set size, not a Newton-style constant.
+DUAL_MAX = 500
+
+
+def svm_dual_program(
+    g0: jax.Array,
+    v: jax.Array,
+    yy: jax.Array,
+    t: jax.Array,
+    c: jax.Array,
+    mask: jax.Array,
+    alpha0: jax.Array,
+):
+    """Active-set solve of ``min_{α≥0} αᵀKα + ‖α‖²/(2C) − 2·1ᵀα``
+    (Lawson–Hanson NNLS structure, matching the rust backend).
+
+    The free set is *state*, not recomputed per iteration: each pivot
+    either (a) solves the equality-constrained subproblem on F by masked
+    CG and — if feasible — adds the single most-violating bound variable,
+    or (b) clips along the segment to the infeasible candidate and drops
+    the blocking variables. A plain projected Newton zigzags on this QP
+    (the twin columns ẑ_j⁺ ≈ −ẑ_j⁻ make the full-set system near-singular
+    and the clipped direction poor); the stateful pivot rule converges in
+    O(support) iterations instead.
+    """
+    k = assemble_kernel_matrix(g0, v, yy, t)
+    m = k.shape[0]
+    big = jnp.asarray(1e300, k.dtype)
+
+    def kdot(a):
+        return matmul_k.matvec(k, a)  # (m,) — Pallas tiled
+
+    def grad(a):
+        return 2.0 * kdot(a) + a / c - 2.0
+
+    # Hessian of the dual QP, built once per (t, C); each pivot solves a
+    # masked system directly (LAPACK-threaded Cholesky beats a loop of
+    # serial K·v gemvs on the CPU PJRT backend by a wide margin).
+    h_full = 2.0 * k + jnp.eye(m, dtype=k.dtype) / c
+
+    def body(s: _DualState):
+        # Subproblem on F: (2K + I/C)_FF · cand_F = 2·1_F with the
+        # complement forced to the identity so the system stays SPD.
+        free = s.free
+        ff = jnp.outer(free, free)
+        # CG, not LAPACK: custom-call-free HLO (see the primal's note).
+        h_masked = h_full * ff + jnp.diag(1.0 - free)
+        cand, _ = _cg(
+            lambda vv: h_masked @ vv, 2.0 * free, s.alpha * free, CG_MAX, CG_TOL
+        )
+        cand = cand * free
+
+        feasible = jnp.min(jnp.where(free > 0.0, cand, big)) >= -1e-14
+
+        # --- feasible branch: accept candidate, add worst violator -------
+        def accept(_):
+            a_new = jnp.maximum(cand, 0.0) * mask
+            g_new = grad(a_new)
+            gscale = 1.0 + jnp.max(jnp.abs(g_new * mask))
+            bound = mask * (1.0 - free)
+            viol = jnp.maximum(-g_new, 0.0) * bound
+            worst = jnp.argmax(viol)
+            has_viol = viol[worst] > KKT_TOL * gscale
+            free_new = jnp.where(
+                has_viol, free.at[worst].set(1.0), free
+            )
+            return a_new, free_new, ~has_viol
+
+        # --- infeasible branch: clip along segment, drop blockers --------
+        def clip(_):
+            neg = jnp.logical_and(free > 0.0, cand < -1e-14)
+            denom = jnp.maximum(s.alpha - cand, 1e-300)
+            ratios = jnp.where(neg, s.alpha / denom, big)
+            theta = jnp.minimum(jnp.min(ratios), 1.0)
+            a_new = jnp.maximum(s.alpha + theta * (cand - s.alpha), 0.0) * free
+            drop = jnp.logical_and(neg, a_new <= 1e-14)
+            free_new = jnp.where(drop, 0.0, free)
+            return a_new * mask, free_new, jnp.zeros((), bool)
+
+        a_new, free_new, done = jax.lax.cond(feasible, accept, clip, operand=None)
+        # Never let the free set go completely empty while the gradient
+        # still descends somewhere (e.g. θ = 0 clip on a zero iterate).
+        g_cur = grad(a_new)
+        empty = jnp.sum(free_new) == 0.0
+        seed = jnp.argmin(jnp.where(mask > 0.0, g_cur, big))
+        free_new = jnp.where(empty, free_new.at[seed].set(1.0), free_new)
+        return _DualState(a_new, free_new, s.it + 1, done)
+
+    def cond(s: _DualState):
+        return jnp.logical_and(~s.done, s.it < DUAL_MAX)
+
+    # Warm start seeds the free set (values are re-solved, matching the
+    # rust backend — value-based warm starts with the wrong dual scale are
+    # what stalled the previous projected-Newton formulation).
+    g0_grad = -2.0 * jnp.ones((m,), k.dtype)  # gradient at α = 0
+    seed0 = jnp.argmin(jnp.where(mask > 0.0, g0_grad, big))
+    free_init = jnp.where(
+        jnp.sum((alpha0 > 0.0) * mask) > 0.0,
+        (alpha0 > 0.0).astype(k.dtype) * mask,
+        jnp.zeros((m,), k.dtype).at[seed0].set(1.0) * mask,
+    )
+    init = _DualState(
+        jnp.zeros((m,), k.dtype),
+        free_init,
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), bool),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    return out.alpha, out.it.astype(jnp.float64)
+
+
+# --------------------------------------------------------------------------
+# Gram program (dual-mode preprocessing, cached across path points)
+# --------------------------------------------------------------------------
+
+def gram_program(x: jax.Array, y: jax.Array):
+    """``(G₀, v, yy) = (XᵀX, Xᵀy, yᵀy)`` — Pallas tiled gram."""
+    g0 = matmul_k.gram(x)
+    v = matmul_k.matvec(x.T, y)
+    yy = jnp.dot(y, y)
+    return g0, v, yy
+
+
+# --------------------------------------------------------------------------
+# Reference solvers for pytest (not exported as artifacts)
+# --------------------------------------------------------------------------
+
+def sven_backmap(alpha: jax.Array, p: int, t) -> jax.Array:
+    """β = t·(α⁺ − α⁻)/Σα (paper Algorithm 1, line 11)."""
+    total = jnp.sum(alpha)
+    scale = jnp.where(total > 1e-12, t / jnp.maximum(total, 1e-300), 0.0)
+    return scale * (alpha[:p] - alpha[p:])
+
+
+def sven_solve_primal(x, y, t, lambda2, mask=None, w0=None):
+    """End-to-end SVEN via the primal program (testing convenience)."""
+    n, p = x.shape
+    if mask is None:
+        mask = jnp.ones((2 * p,), x.dtype)
+    if w0 is None:
+        w0 = jnp.zeros((n,), x.dtype)
+    c = jnp.asarray(1.0 / (2.0 * max(lambda2, 5e-7)), x.dtype)
+    _, alpha, _ = svm_primal_program(x, y, jnp.asarray(t, x.dtype), c, mask, w0)
+    return sven_backmap(alpha, p, t)
+
+
+def sven_solve_dual(x, y, t, lambda2, mask=None, alpha0=None):
+    """End-to-end SVEN via gram + dual programs (testing convenience)."""
+    _, p = x.shape
+    if mask is None:
+        mask = jnp.ones((2 * p,), x.dtype)
+    if alpha0 is None:
+        alpha0 = jnp.zeros((2 * p,), x.dtype)
+    g0, v, yy = gram_program(x, y)
+    c = jnp.asarray(1.0 / (2.0 * max(lambda2, 5e-7)), x.dtype)
+    alpha, _ = svm_dual_program(
+        g0, v, yy, jnp.asarray(t, x.dtype), c, mask, alpha0
+    )
+    return sven_backmap(alpha, p, t)

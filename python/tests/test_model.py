@@ -1,0 +1,210 @@
+"""L2 solver correctness: the fixed-shape JAX SVEN programs must solve the
+Elastic Net exactly. Ground truth is an independent numpy coordinate
+descent (glmnet-style), mirroring the paper's correctness protocol
+(glmnet vs SVEN along the path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# Independent numpy reference: penalized-form Elastic Net CD
+# ---------------------------------------------------------------------------
+
+def cd_elastic_net(X, y, lam, kappa, tol=1e-13, max_epochs=20000):
+    """glmnet-convention CD: min 1/(2n)‖Xβ−y‖² + λ(κ|β|₁ + (1−κ)/2‖β‖²)."""
+    n, p = X.shape
+    beta = np.zeros(p)
+    r = y.copy()
+    l1, l2 = lam * kappa, lam * (1.0 - kappa)
+    colsq = (X ** 2).sum(0) / n
+    for _ in range(max_epochs):
+        delta = 0.0
+        for j in range(p):
+            zj = X[:, j] @ r / n + colsq[j] * beta[j]
+            bj = np.sign(zj) * max(abs(zj) - l1, 0.0) / (colsq[j] + l2)
+            if bj != beta[j]:
+                r -= X[:, j] * (bj - beta[j])
+                delta = max(delta, (bj - beta[j]) ** 2)
+                beta[j] = bj
+        if delta < tol:
+            break
+    return beta
+
+
+def make_problem(n, p, seed, support=4, snr=5.0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    X = (X - X.mean(0)) / np.maximum(X.std(0), 1e-12)
+    bt = np.zeros(p)
+    idx = rng.permutation(p)[:support]
+    bt[idx] = rng.choice([-1.0, 1.0], support) * (1.0 + rng.random(support))
+    signal = X @ bt
+    noise = rng.standard_normal(n)
+    y = signal + noise * np.linalg.norm(signal) / (snr * np.linalg.norm(noise))
+    y -= y.mean()
+    return X, y
+
+
+def grid_point(X, y, kappa=0.5, frac=0.3):
+    """One (t, λ₂) setting derived with the paper's protocol."""
+    n = X.shape[0]
+    lam_max = np.abs(X.T @ y).max() / (n * kappa)
+    lam = lam_max * frac
+    beta_star = cd_elastic_net(X, y, lam, kappa)
+    t = np.abs(beta_star).sum()
+    lambda2 = n * lam * (1.0 - kappa)
+    return beta_star, t, lambda2
+
+
+# ---------------------------------------------------------------------------
+# Exactness vs the independent CD reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p,seed", [(30, 12, 0), (20, 40, 1), (50, 8, 2)])
+def test_primal_matches_cd(n, p, seed):
+    X, y = make_problem(n, p, seed)
+    beta_star, t, lambda2 = grid_point(X, y)
+    if t < 1e-10:
+        pytest.skip("all-zero reference solution")
+    beta = np.asarray(
+        model.sven_solve_primal(jnp.array(X), jnp.array(y), float(t), float(lambda2))
+    )
+    np.testing.assert_allclose(beta, beta_star, atol=5e-5)
+
+
+@pytest.mark.parametrize("n,p,seed", [(60, 10, 3), (120, 20, 4), (80, 6, 5)])
+def test_dual_matches_cd(n, p, seed):
+    X, y = make_problem(n, p, seed)
+    beta_star, t, lambda2 = grid_point(X, y)
+    if t < 1e-10:
+        pytest.skip("all-zero reference solution")
+    beta = np.asarray(
+        model.sven_solve_dual(jnp.array(X), jnp.array(y), float(t), float(lambda2))
+    )
+    np.testing.assert_allclose(beta, beta_star, atol=5e-5)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_primal_dual_agree(seed):
+    X, y = make_problem(25, 15, 100 + seed)
+    _, t, lambda2 = grid_point(X, y, kappa=0.6, frac=0.25)
+    if t < 1e-10:
+        pytest.skip("all-zero reference solution")
+    bp = np.asarray(model.sven_solve_primal(jnp.array(X), jnp.array(y), float(t), float(lambda2)))
+    bd = np.asarray(model.sven_solve_dual(jnp.array(X), jnp.array(y), float(t), float(lambda2)))
+    np.testing.assert_allclose(bp, bd, atol=1e-8)
+
+
+def test_l1_budget_tight():
+    X, y = make_problem(30, 20, 200)
+    _, t, lambda2 = grid_point(X, y)
+    beta = np.asarray(model.sven_solve_primal(jnp.array(X), jnp.array(y), float(t), float(lambda2)))
+    assert np.abs(beta).sum() == pytest.approx(t, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Program building blocks
+# ---------------------------------------------------------------------------
+
+def test_xhat_operators_match_explicit():
+    rng = np.random.default_rng(9)
+    n, p, t = 11, 7, 0.8
+    X = rng.standard_normal((n, p))
+    y = rng.standard_normal(n)
+    Xh = np.vstack([X.T - y[None, :] / t, X.T + y[None, :] / t])  # (2p, n)
+    v = rng.standard_normal(n)
+    u = rng.standard_normal(2 * p)
+    got_mv = np.asarray(model.xhat_matvec(jnp.array(X), jnp.array(y), jnp.float64(t), jnp.array(v)))
+    np.testing.assert_allclose(got_mv, Xh @ v, atol=1e-11)
+    got_rmv = np.asarray(model.xhat_rmatvec(jnp.array(X), jnp.array(y), jnp.float64(t), jnp.array(u)))
+    np.testing.assert_allclose(got_rmv, Xh.T @ u, atol=1e-11)
+
+
+def test_kernel_matrix_assembly():
+    rng = np.random.default_rng(10)
+    n, p, t = 9, 5, 1.3
+    X = rng.standard_normal((n, p))
+    y = rng.standard_normal(n)
+    g0 = X.T @ X
+    v = X.T @ y
+    yy = y @ y
+    K = np.asarray(model.assemble_kernel_matrix(
+        jnp.array(g0), jnp.array(v), jnp.float64(yy), jnp.float64(t)))
+    # naive: columns z_i = yhat_i xhat_i
+    Xh = np.vstack([X.T - y[None, :] / t, X.T + y[None, :] / t])
+    yhat = np.concatenate([np.ones(p), -np.ones(p)])
+    Z = (Xh * yhat[:, None]).T  # n × 2p
+    np.testing.assert_allclose(K, Z.T @ Z, atol=1e-10)
+
+
+def test_gram_program_outputs():
+    rng = np.random.default_rng(11)
+    X = rng.standard_normal((40, 6))
+    y = rng.standard_normal(40)
+    g0, v, yy = model.gram_program(jnp.array(X), jnp.array(y))
+    np.testing.assert_allclose(np.asarray(g0), X.T @ X, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(v), X.T @ y, atol=1e-10)
+    assert float(yy) == pytest.approx(y @ y)
+
+
+def test_dual_warm_start_bad_scale_converges():
+    """Regression: a value-based warm start with the wrong dual scaling
+    must not stall the projected Newton (the line-search-failure → done
+    path); the gradient fallback guarantees progress."""
+    X, y = make_problem(60, 8, 700)
+    t, lambda2 = 1.2, 1.5
+    ref = np.asarray(model.sven_solve_dual(jnp.array(X), jnp.array(y), t, lambda2))
+    g0, v, yy = model.gram_program(jnp.array(X), jnp.array(y))
+    c = jnp.float64(1.0 / (2 * lambda2))
+    p = 8
+    # α0 on a β/t scale (what the coordinator's beta_to_warm feeds)
+    a0 = np.zeros(2 * p)
+    a0[0], a0[p + 1] = 0.9, 0.4
+    alpha, _ = model.svm_dual_program(
+        g0, v, yy, jnp.float64(t), c, jnp.ones(2 * p), jnp.array(a0))
+    beta = np.asarray(model.sven_backmap(alpha, p, t))
+    np.testing.assert_allclose(beta, ref, atol=1e-8)
+
+
+def test_degenerate_backmap_zero_alpha():
+    # |α|₁ = 0 (paper footnote 1): back-map must return β = 0, not NaN.
+    beta = np.asarray(model.sven_backmap(jnp.zeros(12), 6, 0.5))
+    np.testing.assert_allclose(beta, 0.0, atol=0)
+    assert np.all(np.isfinite(beta))
+
+
+def test_huge_budget_still_finite():
+    # t far beyond the ridge norm: the solve must stay finite and respect
+    # |β|₁ ≤ t (the coordinator flags this regime as SlackBudget).
+    X, y = make_problem(15, 6, 300)
+    beta = np.asarray(model.sven_solve_primal(jnp.array(X), jnp.array(y), 1e6, 0.5))
+    assert np.all(np.isfinite(beta))
+    assert np.abs(beta).sum() <= 1e6 * (1 + 1e-9)
+
+
+def test_warm_start_path_consistency():
+    # Solving with a warm start from a neighbouring path point must land
+    # on the same solution (artifact input `w0`/`alpha0` correctness).
+    X, y = make_problem(26, 13, 400)
+    _, t, lambda2 = grid_point(X, y, frac=0.3)
+    n, p = X.shape
+    Xj, yj = jnp.array(X), jnp.array(y)
+    mask = jnp.ones((2 * p,))
+    c = jnp.float64(1.0 / (2.0 * lambda2))
+    w_a, alpha_a, _ = model.svm_primal_program(
+        Xj, yj, jnp.float64(t), c, mask, jnp.zeros((n,)))
+    # warm start at a nearby budget, then resolve at t
+    w_b, _, _ = model.svm_primal_program(
+        Xj, yj, jnp.float64(t * 0.9), c, mask, jnp.zeros((n,)))
+    w_c, alpha_c, _ = model.svm_primal_program(
+        Xj, yj, jnp.float64(t), c, mask, w_b)
+    beta_a = np.asarray(model.sven_backmap(alpha_a, p, t))
+    beta_c = np.asarray(model.sven_backmap(alpha_c, p, t))
+    np.testing.assert_allclose(beta_a, beta_c, atol=1e-7)

@@ -1,0 +1,109 @@
+"""Shape-bucket padding exactness: a problem padded into a larger bucket
+with the validity mask must produce the *same* solution as the snug shape.
+This is the property the rust runtime's bucket manager relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_problem(n, p, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    X = (X - X.mean(0)) / np.maximum(X.std(0), 1e-12)
+    bt = np.zeros(p)
+    bt[: min(3, p)] = [1.2, -0.7, 0.4][: min(3, p)]
+    y = X @ bt + 0.1 * rng.standard_normal(n)
+    y -= y.mean()
+    return X, y
+
+
+def pad_problem(X, y, n_pad, p_pad):
+    """Zero-pad the regression problem to (n_pad, p_pad) and build the
+    sample mask over 2·p_pad (padded features masked out)."""
+    n, p = X.shape
+    Xp = np.zeros((n_pad, p_pad))
+    Xp[:n, :p] = X
+    yp = np.zeros(n_pad)
+    yp[:n] = y
+    mask = np.zeros(2 * p_pad)
+    mask[:p] = 1.0
+    mask[p_pad : p_pad + p] = 1.0
+    return Xp, yp, mask
+
+
+def unpad_beta(beta_p, p, p_pad):
+    return np.concatenate([beta_p[:p]])
+
+
+def test_primal_padding_exact():
+    n, p = 18, 10
+    X, y = make_problem(n, p, 0)
+    t, lambda2 = 0.8, 0.3
+    snug = np.asarray(model.sven_solve_primal(jnp.array(X), jnp.array(y), t, lambda2))
+
+    n_pad, p_pad = 32, 24
+    Xp, yp, mask = pad_problem(X, y, n_pad, p_pad)
+    c = jnp.float64(1.0 / (2.0 * lambda2))
+    _, alpha, _ = model.svm_primal_program(
+        jnp.array(Xp), jnp.array(yp), jnp.float64(t), c,
+        jnp.array(mask), jnp.zeros((n_pad,)))
+    alpha = np.asarray(alpha)
+    # padded sample slots must carry zero dual mass
+    assert np.all(alpha[p:p_pad] == 0.0)
+    assert np.all(alpha[p_pad + p :] == 0.0)
+    beta_padded = np.asarray(model.sven_backmap(jnp.array(alpha), p_pad, t))
+    np.testing.assert_allclose(beta_padded[:p], snug, atol=1e-9)
+    np.testing.assert_allclose(beta_padded[p:], 0.0, atol=0)
+
+
+def test_dual_padding_exact():
+    n, p = 60, 8
+    X, y = make_problem(n, p, 1)
+    t, lambda2 = 0.6, 0.4
+    snug = np.asarray(model.sven_solve_dual(jnp.array(X), jnp.array(y), t, lambda2))
+
+    n_pad, p_pad = 96, 16
+    Xp, yp, mask = pad_problem(X, y, n_pad, p_pad)
+    g0, v, yy = model.gram_program(jnp.array(Xp), jnp.array(yp))
+    c = jnp.float64(1.0 / (2.0 * lambda2))
+    alpha, _ = model.svm_dual_program(
+        g0, v, yy, jnp.float64(t), c, jnp.array(mask), jnp.zeros((2 * p_pad,)))
+    alpha = np.asarray(alpha)
+    assert np.all(alpha[p:p_pad] == 0.0)
+    assert np.all(alpha[p_pad + p :] == 0.0)
+    beta_padded = np.asarray(model.sven_backmap(jnp.array(alpha), p_pad, t))
+    np.testing.assert_allclose(beta_padded[:p], snug, atol=1e-9)
+
+
+def test_gram_padding_zero_blocks():
+    n, p = 20, 6
+    X, y = make_problem(n, p, 2)
+    Xp, yp, _ = pad_problem(X, y, 40, 12)
+    g0, v, yy = model.gram_program(jnp.array(Xp), jnp.array(yp))
+    g0 = np.asarray(g0)
+    v = np.asarray(v)
+    np.testing.assert_allclose(g0[:p, :p], X.T @ X, atol=1e-10)
+    np.testing.assert_allclose(g0[p:, :], 0.0, atol=0)
+    np.testing.assert_allclose(g0[:, p:], 0.0, atol=0)
+    np.testing.assert_allclose(v[:p], X.T @ y, atol=1e-10)
+    np.testing.assert_allclose(v[p:], 0.0, atol=0)
+    assert float(yy) == np.testing.assert_allclose(float(yy), y @ y, atol=1e-10) or True
+
+
+def test_n_only_padding_needs_no_mask_change():
+    # Padding samples (n) alone is exact with the same full mask.
+    n, p = 14, 9
+    X, y = make_problem(n, p, 3)
+    t, lambda2 = 0.5, 0.2
+    snug = np.asarray(model.sven_solve_primal(jnp.array(X), jnp.array(y), t, lambda2))
+    Xp = np.zeros((30, p))
+    Xp[:n] = X
+    yp = np.zeros(30)
+    yp[:n] = y
+    padded = np.asarray(model.sven_solve_primal(jnp.array(Xp), jnp.array(yp), t, lambda2))
+    np.testing.assert_allclose(padded, snug, atol=1e-10)

@@ -1,0 +1,6 @@
+//! Ablation studies (DESIGN.md §5): primal/dual crossover, warm starts,
+//! gram caching, bucket-padding overhead.
+//! Run: `cargo bench --bench ablations`
+fn main() {
+    sven::bench::figures::ablations(0);
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's Figure 1: regularization paths of glmnet and
+//! SVEN on the prostate-like data set match exactly.
+//! Run: `cargo bench --bench figure1`
+fn main() {
+    let dev = sven::bench::figures::figure1(0);
+    assert!(dev < 1e-3, "paths diverged: max dev {dev}");
+    println!("\nFigure 1 reproduced: paths match (max dev {dev:.2e} < 1e-3)");
+}

@@ -1,0 +1,8 @@
+//! Regenerates the paper's Figure 2: training-time comparison on the
+//! eight p >> n data-set profiles (glmnet / Shotgun / L1_LS / SVEN CPU
+//! vs SVEN XLA). Scale with SVEN_BENCH_SCALE=quick|mid|full.
+//! Run: `cargo bench --bench figure2`
+fn main() {
+    let rows = sven::bench::figures::figure2(0);
+    sven::bench::figures::write_csv("target/figure2.csv", &rows);
+}

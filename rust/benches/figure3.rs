@@ -1,0 +1,8 @@
+//! Regenerates the paper's Figure 3: training-time comparison on the
+//! four n >> p data-set profiles, where SVEN's cost is dominated by the
+//! one-off kernel (gram) computation.
+//! Run: `cargo bench --bench figure3`
+fn main() {
+    let rows = sven::bench::figures::figure3(0);
+    sven::bench::figures::write_csv("target/figure3.csv", &rows);
+}

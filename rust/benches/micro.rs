@@ -1,0 +1,75 @@
+//! Microbenchmarks of the substrate hot paths (gemm, gram, CD epoch,
+//! Newton step) — the profile targets of EXPERIMENTS.md §Perf.
+//! Run: `cargo bench --bench micro`
+use sven::bench::harness::measure;
+use sven::data::{synth_regression, SynthSpec};
+use sven::linalg::Mat;
+use sven::rng::Rng;
+use sven::solvers::glmnet::{self, GlmnetConfig};
+use sven::solvers::svm::{primal_newton, PrimalOptions, ReducedSamples, SampleSet};
+use sven::solvers::svm::samples::reduction_labels;
+
+fn main() {
+    let mut rng = Rng::seed_from(7);
+
+    // gemm 256x256x256
+    let a = Mat::from_fn(256, 256, |_, _| rng.normal());
+    let b = Mat::from_fn(256, 256, |_, _| rng.normal());
+    let m = measure(2, 10, || a.matmul(&b));
+    let flops = 2.0 * 256f64.powi(3);
+    println!(
+        "gemm 256^3: median {:.3}ms  ({:.2} GFLOP/s)",
+        m.summary.median() * 1e3,
+        flops / m.summary.median() / 1e9
+    );
+
+    // gram 512x256
+    let g = Mat::from_fn(512, 256, |_, _| rng.normal());
+    let m = measure(2, 10, || g.gram());
+    println!(
+        "gram 512x256 (AAᵀ): median {:.3}ms  ({:.2} GFLOP/s)",
+        m.summary.median() * 1e3,
+        512.0 * 512.0 * 256.0 / m.summary.median() / 1e9
+    );
+
+    // CD epoch on 200x2000
+    let d = synth_regression(&SynthSpec { n: 200, p: 2000, support: 20, seed: 1, ..Default::default() });
+    let lambda = glmnet::cd::lambda_max(&d.x, &d.y, 0.5) * 0.2;
+    let m = measure(1, 5, || {
+        glmnet::solve_penalized(&d.x, &d.y, lambda, &GlmnetConfig::default(), None)
+    });
+    println!("glmnet solve 200x2000: median {:.3}ms", m.summary.median() * 1e3);
+
+    // primal Newton on the reduction (implicit operator)
+    let samples = ReducedSamples { x: &d.x, y: &d.y, t: 1.0 };
+    let labels = reduction_labels(d.x.cols());
+    let mm = measure(1, 5, || {
+        primal_newton(&samples, &labels, 10.0, &PrimalOptions::default(), None)
+    });
+    println!(
+        "primal newton (m={}, d={}): median {:.3}ms",
+        samples.m(),
+        samples.d(),
+        mm.summary.median() * 1e3
+    );
+
+    // XLA single solve latency (bucket-padded), if artifacts exist
+    if let Ok(backend) = sven::runtime::XlaBackend::from_default_dir() {
+        use sven::solvers::sven::Sven;
+        let d2 = synth_regression(&SynthSpec { n: 100, p: 400, support: 10, seed: 2, ..Default::default() });
+        let grid = {
+            use sven::coordinator::{PathRunner, PathRunnerConfig};
+            PathRunner::new(PathRunnerConfig { grid: 3, ..Default::default() }).derive_grid(&d2)
+        };
+        if let Some(pt) = grid.last() {
+            let sven_xla = Sven::new(backend);
+            let prob = sven::solvers::elastic_net::EnProblem::new(
+                d2.x.clone(), d2.y.clone(), pt.t, pt.lambda2.max(1e-6));
+            let mut prep = sven_xla.prepare(&d2.x, &d2.y).unwrap();
+            let m = measure(2, 10, || {
+                sven_xla.solve_prepared(prep.as_mut(), &prob, None).unwrap()
+            });
+            println!("sven_xla solve 100x400 (prepared): median {:.3}ms", m.summary.median() * 1e3);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Timing primitives and table output for the figure benches.
+
+use crate::util::{Summary, Timer};
+
+/// One measured quantity.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub summary: Summary,
+    pub reps: usize,
+}
+
+/// Measure a closure: `warmup` unrecorded runs, then `reps` timed runs.
+pub fn measure<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        times.push(t.elapsed());
+    }
+    Measurement { summary: Summary::from(times), reps: reps.max(1) }
+}
+
+/// A row of a figure table: one (dataset, setting, algorithm) cell.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub dataset: String,
+    pub setting: usize,
+    pub t: f64,
+    pub lambda2: f64,
+    pub algorithm: String,
+    pub seconds: f64,
+    /// SVEN (XLA) seconds on the same setting — the figure's x-axis.
+    pub sven_xla_seconds: f64,
+    /// seconds / sven_xla_seconds (> 1 ⇒ above the diagonal: SVEN wins).
+    pub ratio: f64,
+    /// max |β − β_ref| against the glmnet reference (correctness check).
+    pub max_dev: f64,
+}
+
+impl BenchRow {
+    pub fn header() -> String {
+        format!(
+            "{:<14} {:>4} {:>10} {:>10} {:<10} {:>12} {:>12} {:>8} {:>10}",
+            "dataset", "set", "t", "lambda2", "algorithm", "time_s", "sven_xla_s", "ratio", "max_dev"
+        )
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<14} {:>4} {:>10.4} {:>10.4} {:<10} {:>12.6} {:>12.6} {:>8.2} {:>10.2e}",
+            self.dataset,
+            self.setting,
+            self.t,
+            self.lambda2,
+            self.algorithm,
+            self.seconds,
+            self.sven_xla_seconds,
+            self.ratio,
+            self.max_dev
+        )
+    }
+
+    /// CSV form (for EXPERIMENTS.md ingestion / plotting).
+    pub fn csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{}",
+            self.dataset,
+            self.setting,
+            self.t,
+            self.lambda2,
+            self.algorithm,
+            self.seconds,
+            self.sven_xla_seconds,
+            self.ratio,
+            self.max_dev
+        )
+    }
+
+    pub fn csv_header() -> &'static str {
+        "dataset,setting,t,lambda2,algorithm,seconds,sven_xla_seconds,ratio,max_dev"
+    }
+}
+
+/// Print a full table plus per-algorithm summary (the "who wins by what
+/// factor" digest that mirrors reading the scatter plot).
+pub fn print_table(title: &str, rows: &[BenchRow]) {
+    println!("\n=== {title} ===");
+    println!("{}", BenchRow::header());
+    for r in rows {
+        println!("{}", r.line());
+    }
+    // digest: per algorithm, geometric-mean ratio and win fraction
+    let mut algs: Vec<String> = rows.iter().map(|r| r.algorithm.clone()).collect();
+    algs.sort();
+    algs.dedup();
+    println!("--- digest (vs SVEN (XLA)) ---");
+    for alg in algs {
+        let rs: Vec<&BenchRow> = rows.iter().filter(|r| r.algorithm == alg).collect();
+        if rs.is_empty() {
+            continue;
+        }
+        let geo = (rs.iter().map(|r| r.ratio.max(1e-12).ln()).sum::<f64>()
+            / rs.len() as f64)
+            .exp();
+        let wins = rs.iter().filter(|r| r.ratio > 1.0).count();
+        let max_dev = rs.iter().map(|r| r.max_dev).fold(0.0f64, f64::max);
+        println!(
+            "{:<10} geo-mean ratio {:>7.2}x   sven-xla faster on {:>3}/{:<3}   max_dev {:.2e}",
+            alg,
+            geo,
+            wins,
+            rs.len(),
+            max_dev
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let m = measure(1, 5, || 1 + 1);
+        assert_eq!(m.reps, 5);
+        assert!(m.summary.min() >= 0.0);
+    }
+
+    #[test]
+    fn row_formats() {
+        let r = BenchRow {
+            dataset: "GLI-85".into(),
+            setting: 3,
+            t: 1.5,
+            lambda2: 0.2,
+            algorithm: "glmnet".into(),
+            seconds: 0.5,
+            sven_xla_seconds: 0.1,
+            ratio: 5.0,
+            max_dev: 1e-7,
+        };
+        assert!(r.line().contains("glmnet"));
+        assert_eq!(r.csv().split(',').count(), 9);
+    }
+}

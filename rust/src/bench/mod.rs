@@ -1,0 +1,35 @@
+//! Benchmark harness: regenerates every figure of the paper's evaluation
+//! (§5) plus our ablations. Criterion is unavailable offline, so this is
+//! a self-contained harness with warmup, repetition and order statistics;
+//! the `cargo bench` binaries in `rust/benches/` are thin wrappers over
+//! [`figures`].
+//!
+//! Scaling: set `SVEN_BENCH_SCALE=full` for the full 40-setting grid of
+//! the paper, or leave default (`quick`, 8 settings) for CI-sized runs.
+//! Either way the *geometry* of the comparison (who wins, how timing
+//! scales with t) is what the figures check.
+
+pub mod figures;
+pub mod harness;
+
+pub use harness::{measure, BenchRow, Measurement};
+
+/// Grid size per dataset, controlled by SVEN_BENCH_SCALE (quick|full).
+pub fn grid_size() -> usize {
+    match std::env::var("SVEN_BENCH_SCALE").as_deref() {
+        Ok("full") => 40,
+        Ok("mid") => 16,
+        _ => 8,
+    }
+}
+
+/// Dataset size multiplier for quick runs (full profiles are used for
+/// `full`/`mid`; quick shrinks generation so a whole figure finishes in
+/// minutes).
+pub fn size_factor() -> f64 {
+    match std::env::var("SVEN_BENCH_SCALE").as_deref() {
+        Ok("full") => 1.0,
+        Ok("mid") => 0.5,
+        _ => 0.25,
+    }
+}

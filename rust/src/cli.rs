@@ -1,0 +1,316 @@
+//! Hand-rolled CLI (no clap offline). Subcommands:
+//!
+//! ```text
+//! sven datasets                         list the 12 dataset profiles
+//! sven artifacts                        artifact registry status
+//! sven solve   --dataset GLI-85 [--t X --lambda2 Y] [--backend xla|rust]
+//! sven path    --dataset GLI-85 [--grid 40] [--backend xla|rust]
+//! sven serve   --requests 64 [--workers N]   demo service run
+//! ```
+
+use crate::coordinator::{BackendChoice, PathRunner, PathRunnerConfig, Service, ServiceConfig};
+use crate::data::{profile_by_name, ALL_PROFILES};
+use crate::solvers::elastic_net::EnProblem;
+use crate::solvers::glmnet::PathSettings;
+use crate::solvers::sven::{RustBackend, Sven};
+use crate::util::fmt_duration;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Parsed flags: `--key value` pairs plus positionals.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+/// Parse a raw arg list (everything after the subcommand).
+pub fn parse_args(raw: &[String]) -> Result<Args> {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut it = raw.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            flags.insert(key.to_string(), val);
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    Ok(Args { positional, flags })
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(
+                v.parse().map_err(|_| anyhow!("--{key} expects a number, got '{v}'"))?,
+            )),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(
+                v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'"))?,
+            )),
+        }
+    }
+}
+
+const USAGE: &str = "\
+SVEN — Support Vector Elastic Net (AAAI 2015 reproduction)
+
+USAGE:
+  sven <COMMAND> [FLAGS]
+
+COMMANDS:
+  datasets                 list the twelve dataset profiles
+  artifacts                show artifact registry / compile status
+  solve                    solve one Elastic Net problem
+      --dataset NAME       profile name (see `sven datasets`)
+      --seed N             generation seed            [default 0]
+      --t X                L1 budget (default: from a path point)
+      --lambda2 Y          L2 coefficient             [default 1.0]
+      --backend xla|rust   SVM backend                [default rust]
+  path                     sweep a regularization path (paper protocol)
+      --dataset NAME       profile name
+      --seed N             generation seed            [default 0]
+      --grid K             number of settings         [default 40]
+      --backend xla|rust   SVM backend                [default rust]
+  serve                    demo coordinator run
+      --requests N         number of jobs             [default 32]
+      --workers N          pool size                  [default cpus]
+      --backend xla|rust   SVM backend                [default rust]
+  help                     show this message
+";
+
+/// CLI entrypoint (used by `rust/src/main.rs`).
+pub fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = parse_args(&argv[1..])?;
+    match cmd.as_str() {
+        "datasets" => cmd_datasets(),
+        "artifacts" => cmd_artifacts(),
+        "solve" => cmd_solve(&args),
+        "path" => cmd_path(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `sven help`)"),
+    }
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!(
+        "{:<18} {:>9} {:>9} {:>8} {:>9} {:>7}  {}",
+        "name", "paper n", "paper p", "ours n", "ours p", "regime", "about"
+    );
+    for p in &ALL_PROFILES {
+        println!(
+            "{:<18} {:>9} {:>9} {:>8} {:>9} {:>7}  {}",
+            p.name,
+            p.paper_n,
+            p.paper_p,
+            p.n,
+            p.p,
+            match p.regime {
+                crate::data::Regime::PGreaterN => "p>>n",
+                crate::data::Regime::NGreaterP => "n>>p",
+            },
+            p.about
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let dir = crate::runtime::default_artifact_dir();
+    let reg = crate::runtime::Registry::load(&dir)?;
+    println!("artifact dir: {} ({} artifacts)", dir.display(), reg.artifacts.len());
+    for a in &reg.artifacts {
+        println!("  {:<24} kind={:?} n={} p={}", a.name, a.kind, a.n, a.p);
+    }
+    Ok(())
+}
+
+fn load_dataset(args: &Args) -> Result<crate::data::Dataset> {
+    let name = args.get("dataset").unwrap_or("GLI-85");
+    let seed = args.get_usize("seed")?.unwrap_or(0) as u64;
+    let profile = profile_by_name(name)
+        .ok_or_else(|| anyhow!("unknown dataset '{name}' (see `sven datasets`)"))?;
+    crate::info!("generating {name} (n={}, p={})", profile.n, profile.p);
+    Ok(profile.generate(seed))
+}
+
+fn backend_choice(args: &Args) -> Result<BackendChoice> {
+    match args.get("backend").unwrap_or("rust") {
+        "rust" | "cpu" => Ok(BackendChoice::Rust),
+        "xla" | "gpu" => Ok(BackendChoice::Xla),
+        other => bail!("--backend must be 'rust' or 'xla', got '{other}'"),
+    }
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let data = load_dataset(args)?;
+    let lambda2 = args.get_f64("lambda2")?.unwrap_or(1.0);
+    // Default budget: the largest-support point of a short derived path.
+    let t = match args.get_f64("t")? {
+        Some(t) => t,
+        None => {
+            let runner = PathRunner::new(PathRunnerConfig {
+                grid: 5,
+                path: PathSettings { num_lambda: 30, ..Default::default() },
+                ..Default::default()
+            });
+            let grid = runner.derive_grid(&data);
+            grid.last()
+                .map(|pt| pt.t)
+                .ok_or_else(|| anyhow!("could not derive a default budget"))?
+        }
+    };
+    let prob = EnProblem::new(data.x.clone(), data.y.clone(), t, lambda2);
+    let sol = match backend_choice(args)? {
+        BackendChoice::Rust => Sven::new(RustBackend::default()).solve(&prob)?,
+        BackendChoice::Xla => {
+            let backend = crate::runtime::XlaBackend::from_default_dir()?;
+            Sven::new(backend).solve(&prob)?
+        }
+    };
+    println!(
+        "solver={} t={t:.4} lambda2={lambda2:.4} nnz={} objective={:.6} time={}",
+        sol.solver.name(),
+        sol.nnz(),
+        sol.objective,
+        fmt_duration(sol.seconds)
+    );
+    if let Some(d) = sol.degenerate {
+        println!("degenerate: {d:?}");
+    }
+    Ok(())
+}
+
+fn cmd_path(args: &Args) -> Result<()> {
+    let data = load_dataset(args)?;
+    let grid = args.get_usize("grid")?.unwrap_or(40);
+    let runner = PathRunner::new(PathRunnerConfig { grid, ..Default::default() });
+    let points = runner.derive_grid(&data);
+    crate::info!("derived {} grid points", points.len());
+    let results = match backend_choice(args)? {
+        BackendChoice::Rust => {
+            runner.run(&data, &Sven::new(RustBackend::default()), &points)?
+        }
+        BackendChoice::Xla => {
+            let backend = crate::runtime::XlaBackend::from_default_dir()?;
+            runner.run(&data, &Sven::new(backend), &points)?
+        }
+    };
+    println!(
+        "{:>10} {:>10} {:>6} {:>10} {:>12}",
+        "t", "lambda2", "nnz", "time", "max|Δβ|"
+    );
+    for r in &results {
+        println!(
+            "{:>10.4} {:>10.4} {:>6} {:>10} {:>12.2e}",
+            r.t,
+            r.lambda2,
+            r.nnz,
+            fmt_duration(r.seconds),
+            r.max_dev
+        );
+    }
+    let dev = crate::coordinator::path::max_deviation(&results);
+    println!("max deviation vs glmnet reference across path: {dev:.2e}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.get_usize("requests")?.unwrap_or(32);
+    let backend = backend_choice(args)?;
+    let mut config = ServiceConfig::default();
+    if let Some(w) = args.get_usize("workers")? {
+        config.pool.workers = w;
+    }
+    let data = load_dataset(args)?;
+    let runner = PathRunner::new(PathRunnerConfig {
+        grid: requests.min(40),
+        ..Default::default()
+    });
+    let grid = runner.derive_grid(&data);
+    if grid.is_empty() {
+        bail!("no active path points for this dataset");
+    }
+    let service = Service::start(config);
+    let x = Arc::new(data.x.clone());
+    let y = Arc::new(data.y.clone());
+    let timer = crate::util::Timer::start();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let pt = &grid[i % grid.len()];
+            service.submit(1, x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-6), backend)
+        })
+        .collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv()?.result.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = timer.elapsed();
+    println!("{}", service.metrics().report());
+    println!(
+        "requests={requests} ok={ok} wall={} throughput={:.1} req/s",
+        fmt_duration(wall),
+        requests as f64 / wall
+    );
+    service.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse_args(&raw(&["--dataset", "Arcene", "pos1", "--grid", "10", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("dataset"), Some("Arcene"));
+        assert_eq!(a.get_usize("grid").unwrap(), Some(10));
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn numeric_flag_errors_are_friendly() {
+        let a = parse_args(&raw(&["--t", "abc"])).unwrap();
+        assert!(a.get_f64("t").is_err());
+    }
+
+    #[test]
+    fn backend_parse() {
+        let a = parse_args(&raw(&["--backend", "xla"])).unwrap();
+        assert_eq!(backend_choice(&a).unwrap(), BackendChoice::Xla);
+        let b = parse_args(&raw(&["--backend", "nope"])).unwrap();
+        assert!(backend_choice(&b).is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Service metrics: counters and latency records, cheap enough for the
+//! request hot path (atomics + a mutex-guarded reservoir only on
+//! completion).
+
+use crate::util::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Aggregated coordinator metrics.
+#[derive(Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    latencies: Mutex<Vec<f64>>,
+    queue_waits: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self, latency_s: f64, queue_wait_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies.lock().unwrap().push(latency_s);
+        self.queue_waits.lock().unwrap().push(queue_wait_s);
+    }
+
+    pub fn on_fail(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    /// End-to-end latency summary (None until something completed).
+    pub fn latency_summary(&self) -> Option<Summary> {
+        let l = self.latencies.lock().unwrap();
+        if l.is_empty() {
+            None
+        } else {
+            Some(Summary::from(l.clone()))
+        }
+    }
+
+    /// Queue-wait summary — the backpressure signal.
+    pub fn queue_wait_summary(&self) -> Option<Summary> {
+        let l = self.queue_waits.lock().unwrap();
+        if l.is_empty() {
+            None
+        } else {
+            Some(Summary::from(l.clone()))
+        }
+    }
+
+    /// One-line report for logs.
+    pub fn report(&self) -> String {
+        let lat = self
+            .latency_summary()
+            .map(|s| {
+                format!(
+                    "latency p50={} p95={} max={}",
+                    crate::util::fmt_duration(s.median()),
+                    crate::util::fmt_duration(s.p95()),
+                    crate::util::fmt_duration(s.max())
+                )
+            })
+            .unwrap_or_else(|| "latency n/a".into());
+        format!(
+            "submitted={} completed={} failed={} {lat}",
+            self.submitted(),
+            self.completed(),
+            self.failed()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_summary() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_complete(0.010, 0.001);
+        m.on_complete(0.020, 0.002);
+        m.on_fail();
+        assert_eq!(m.submitted(), 2);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.failed(), 1);
+        let s = m.latency_summary().unwrap();
+        assert!((s.median() - 0.015).abs() < 1e-12);
+        assert!(m.report().contains("completed=2"));
+    }
+
+    #[test]
+    fn empty_summaries_are_none() {
+        let m = Metrics::new();
+        assert!(m.latency_summary().is_none());
+        assert!(m.queue_wait_summary().is_none());
+    }
+}

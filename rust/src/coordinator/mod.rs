@@ -1,0 +1,27 @@
+//! L3 coordinator — the deployable system around the SVEN reduction.
+//!
+//! The paper's systems pitch is that the Elastic Net becomes "free" once
+//! you have an optimized parallel SVM; this module is the machinery that
+//! makes that a service rather than a script:
+//!
+//! - [`path`] — the paper's evaluation protocol as a scheduler: derive
+//!   the glmnet λ-path, subsample 40 settings with distinct supports, and
+//!   sweep them with prepared-problem reuse + warm starts.
+//! - [`queue`] — bounded MPMC work queue (condvar-based, backpressure).
+//! - [`pool`] — worker pool; each worker owns a thread-local solver
+//!   context (the PJRT handles are not `Send`).
+//! - [`service`] — the request loop: submit solve jobs, collect
+//!   responses, drain gracefully; per-request latency metrics.
+//! - [`metrics`] — counters and latency summaries.
+
+pub mod metrics;
+pub mod path;
+pub mod pool;
+pub mod queue;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use path::{PathRunResult, PathRunner, PathRunnerConfig};
+pub use pool::{Pool, PoolConfig};
+pub use queue::Queue;
+pub use service::{BackendChoice, Service, ServiceConfig, SolveJob, SolveOutcome};

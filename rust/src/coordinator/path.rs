@@ -1,0 +1,215 @@
+//! The paper's evaluation protocol as a reusable runner: derive the
+//! glmnet path, subsample settings with distinct support sizes, and sweep
+//! them with SVEN using prepared-problem reuse and warm starts — the
+//! access pattern behind Figures 1–3.
+
+use crate::data::Dataset;
+use crate::linalg::vecops;
+use crate::solvers::elastic_net::EnProblem;
+use crate::solvers::glmnet::{self, PathPoint, PathSettings};
+use crate::solvers::sven::{Sven, SvmBackend, SvmWarm};
+use crate::util::Timer;
+
+/// Configuration of a path run.
+#[derive(Clone, Debug)]
+pub struct PathRunnerConfig {
+    /// Number of evaluation settings (the paper uses 40).
+    pub grid: usize,
+    /// Dense-path settings used to derive the grid.
+    pub path: PathSettings,
+    /// Warm-start successive solves from the previous point.
+    pub warm_start: bool,
+    /// Floor for λ₂ so C stays finite when the grid contains κ = 1 points.
+    pub lambda2_floor: f64,
+}
+
+impl Default for PathRunnerConfig {
+    fn default() -> Self {
+        let mut path = PathSettings::default();
+        // The reference path defines the evaluation grid (t = |β*|₁), so
+        // its CD tolerance bounds every downstream comparison: at the
+        // default 1e-9 the dense end of the path carries ~1e-3 coordinate
+        // error, which would be misread as SVEN deviation.
+        path.cd.tol = 1e-13;
+        PathRunnerConfig { grid: 40, path, warm_start: true, lambda2_floor: 1e-6 }
+    }
+}
+
+/// One solved grid point, with reference and SVEN solutions side by side.
+#[derive(Clone, Debug)]
+pub struct PathRunResult {
+    pub t: f64,
+    pub lambda2: f64,
+    pub lambda: f64,
+    /// Reference (glmnet) coefficients.
+    pub beta_ref: Vec<f64>,
+    /// SVEN coefficients.
+    pub beta: Vec<f64>,
+    /// max_j |β − β_ref| for this point.
+    pub max_dev: f64,
+    pub nnz: usize,
+    /// SVEN solve seconds (excludes preparation, which is amortized).
+    pub seconds: f64,
+    pub iterations: usize,
+}
+
+/// Path runner over any SVEN backend.
+pub struct PathRunner {
+    pub config: PathRunnerConfig,
+}
+
+impl PathRunner {
+    pub fn new(config: PathRunnerConfig) -> Self {
+        PathRunner { config }
+    }
+
+    /// Derive the evaluation grid (paper protocol): glmnet dense path →
+    /// subsample `grid` points with distinct supports.
+    pub fn derive_grid(&self, data: &Dataset) -> Vec<PathPoint> {
+        let pts = glmnet::compute_path(&data.x, &data.y, &self.config.path);
+        glmnet::path::subsample_distinct(&pts, self.config.grid)
+    }
+
+    /// Sweep the grid with SVEN; returns per-point results including the
+    /// reference deviation (the paper's "identical results" check).
+    pub fn run<B: SvmBackend>(
+        &self,
+        data: &Dataset,
+        sven: &Sven<B>,
+        grid: &[PathPoint],
+    ) -> anyhow::Result<Vec<PathRunResult>> {
+        let mut prep = sven.prepare(&data.x, &data.y)?;
+        let mut results = Vec::with_capacity(grid.len());
+        let mut warm: Option<SvmWarm> = None;
+        for pt in grid {
+            let lambda2 = pt.lambda2.max(self.config.lambda2_floor);
+            let prob =
+                EnProblem::new(data.x.clone(), data.y.clone(), pt.t, lambda2);
+            let timer = Timer::start();
+            let sol = sven.solve_prepared(prep.as_mut(), &prob, warm.as_ref())?;
+            let seconds = timer.elapsed();
+            let max_dev = pt
+                .beta
+                .iter()
+                .zip(&sol.beta)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            if self.config.warm_start {
+                warm = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(pt.t)) });
+            }
+            results.push(PathRunResult {
+                t: pt.t,
+                lambda2,
+                lambda: pt.lambda,
+                beta_ref: pt.beta.clone(),
+                nnz: vecops::nnz(&sol.beta, 1e-8),
+                max_dev,
+                seconds,
+                iterations: sol.iterations,
+                beta: sol.beta,
+            });
+        }
+        Ok(results)
+    }
+
+    /// Convenience: derive the grid and run in one call.
+    pub fn derive_and_run<B: SvmBackend>(
+        &self,
+        data: &Dataset,
+        sven: &Sven<B>,
+    ) -> anyhow::Result<Vec<PathRunResult>> {
+        let grid = self.derive_grid(data);
+        self.run(data, sven, &grid)
+    }
+}
+
+/// Worst deviation across a whole run — the Figure-1 "paths match" stat.
+pub fn max_deviation(results: &[PathRunResult]) -> f64 {
+    results.iter().map(|r| r.max_dev).fold(0.0, f64::max)
+}
+
+impl crate::solvers::elastic_net::EnSolution {
+    /// Rebuild a feasible dual warm start from β (α⁺ = max(β,0)·Σ/t …):
+    /// approximate but effective — only used to seed the next path point.
+    pub fn beta_to_warm(&self, t: f64) -> Vec<f64> {
+        let p = self.beta.len();
+        let mut alpha = vec![0.0; 2 * p];
+        for j in 0..p {
+            if self.beta[j] > 0.0 {
+                alpha[j] = self.beta[j] / t;
+            } else {
+                alpha[p + j] = -self.beta[j] / t;
+            }
+        }
+        alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth_regression, SynthSpec};
+    use crate::solvers::sven::RustBackend;
+
+    fn dataset(n: usize, p: usize, seed: u64) -> Dataset {
+        synth_regression(&SynthSpec { n, p, support: 6, seed, ..Default::default() })
+    }
+
+    #[test]
+    fn grid_has_distinct_supports() {
+        let d = dataset(50, 30, 201);
+        let runner = PathRunner::new(PathRunnerConfig {
+            grid: 12,
+            path: PathSettings { num_lambda: 60, ..Default::default() },
+            ..Default::default()
+        });
+        let grid = runner.derive_grid(&d);
+        assert!(!grid.is_empty() && grid.len() <= 12);
+        let supports: Vec<usize> = grid.iter().map(|g| g.nnz).collect();
+        let mut dedup = supports.clone();
+        dedup.dedup();
+        assert_eq!(supports, dedup);
+    }
+
+    #[test]
+    fn sven_matches_reference_along_path() {
+        let d = dataset(40, 25, 202);
+        let runner = PathRunner::new(PathRunnerConfig {
+            grid: 8,
+            path: PathSettings { num_lambda: 40, ..Default::default() },
+            ..Default::default()
+        });
+        let sven = Sven::new(RustBackend::default());
+        let results = runner.derive_and_run(&d, &sven).unwrap();
+        assert!(!results.is_empty());
+        let dev = max_deviation(&results);
+        assert!(dev < 5e-4, "path deviation {dev}");
+    }
+
+    #[test]
+    fn dual_regime_path() {
+        let d = dataset(120, 10, 203);
+        let runner = PathRunner::new(PathRunnerConfig {
+            grid: 6,
+            path: PathSettings { num_lambda: 30, ..Default::default() },
+            ..Default::default()
+        });
+        let sven = Sven::new(RustBackend::default());
+        let results = runner.derive_and_run(&d, &sven).unwrap();
+        let dev = max_deviation(&results);
+        assert!(dev < 5e-4, "path deviation {dev}");
+    }
+
+    #[test]
+    fn timings_recorded() {
+        let d = dataset(30, 20, 204);
+        let runner = PathRunner::new(PathRunnerConfig {
+            grid: 4,
+            path: PathSettings { num_lambda: 25, ..Default::default() },
+            ..Default::default()
+        });
+        let sven = Sven::new(RustBackend::default());
+        let results = runner.derive_and_run(&d, &sven).unwrap();
+        assert!(results.iter().all(|r| r.seconds > 0.0));
+    }
+}

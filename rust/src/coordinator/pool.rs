@@ -1,0 +1,145 @@
+//! Worker pool over the bounded queue. Workers own thread-local state
+//! built by a factory (PJRT handles are not `Send`, so each worker builds
+//! its own solver context on its own thread).
+
+use super::queue::Queue;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Pool configuration.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    pub workers: usize,
+    pub queue_capacity: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4).min(8),
+            queue_capacity: 64,
+        }
+    }
+}
+
+/// A generic worker pool processing jobs of type `J`.
+pub struct Pool<J: Send + 'static> {
+    queue: Arc<Queue<J>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<J: Send + 'static> Pool<J> {
+    /// Spawn `config.workers` threads. For each worker, `ctx_factory(id)`
+    /// builds thread-local context (runs on the worker thread), and
+    /// `handler(ctx, job)` processes jobs until the queue closes.
+    pub fn spawn<C, F, H>(config: &PoolConfig, ctx_factory: F, handler: H) -> Self
+    where
+        F: Fn(usize) -> C + Send + Sync + 'static,
+        H: Fn(&mut C, J) + Send + Sync + 'static,
+        C: 'static,
+    {
+        let queue = Arc::new(Queue::bounded(config.queue_capacity));
+        let ctx_factory = Arc::new(ctx_factory);
+        let handler = Arc::new(handler);
+        let handles = (0..config.workers.max(1))
+            .map(|wid| {
+                let queue = queue.clone();
+                let ctx_factory = ctx_factory.clone();
+                let handler = handler.clone();
+                std::thread::Builder::new()
+                    .name(format!("sven-worker-{wid}"))
+                    .spawn(move || {
+                        let mut ctx = ctx_factory(wid);
+                        while let Some(job) = queue.pop() {
+                            handler(&mut ctx, job);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { queue, handles }
+    }
+
+    /// Submit a job (blocks under backpressure). Err if pool is shut down.
+    pub fn submit(&self, job: J) -> Result<(), J> {
+        self.queue.push(job)
+    }
+
+    /// Jobs waiting in the queue.
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Close the queue and join all workers (drains remaining jobs).
+    pub fn shutdown(self) {
+        self.queue.close();
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn processes_all_jobs() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let done2 = done.clone();
+        let pool = Pool::spawn(
+            &PoolConfig { workers: 3, queue_capacity: 4 },
+            |_wid| (),
+            move |_, job: usize| {
+                // trivial work
+                std::hint::black_box(job * 2);
+                done2.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        for i in 0..100 {
+            pool.submit(i).unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn thread_local_context_built_per_worker() {
+        let built = Arc::new(AtomicUsize::new(0));
+        let built2 = built.clone();
+        let pool = Pool::spawn(
+            &PoolConfig { workers: 4, queue_capacity: 4 },
+            move |_wid| {
+                built2.fetch_add(1, Ordering::Relaxed);
+                Vec::<usize>::new()
+            },
+            |ctx, job: usize| ctx.push(job),
+        );
+        for i in 0..8 {
+            pool.submit(i).unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(built.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn shutdown_drains_backlog() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let done2 = done.clone();
+        let pool = Pool::spawn(
+            &PoolConfig { workers: 1, queue_capacity: 64 },
+            |_| (),
+            move |_, _job: usize| {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                done2.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        for i in 0..20 {
+            pool.submit(i).unwrap();
+        }
+        pool.shutdown(); // must process everything already queued
+        assert_eq!(done.load(Ordering::Relaxed), 20);
+    }
+}

@@ -1,0 +1,158 @@
+//! Bounded multi-producer/multi-consumer queue with blocking push
+//! (backpressure) and pop, built on Mutex + Condvar — no external crates
+//! in the offline set provide this.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Bounded blocking queue. `close()` wakes all consumers; `pop` returns
+/// `None` once closed and drained.
+pub struct Queue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Queue<T> {
+    pub fn bounded(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Queue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push; returns `Err(item)` if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` when closed and empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = Queue::bounded(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = Queue::bounded(4);
+        q.push(7).unwrap();
+        q.close();
+        assert!(q.push(8).is_err());
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Arc::new(Queue::bounded(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            q2.push(2).unwrap(); // blocks until main pops
+            "pushed"
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(h.join().unwrap(), "pushed");
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered() {
+        let q = Arc::new(Queue::bounded(8));
+        let producers: Vec<_> = (0..4)
+            .map(|t| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push(t * 100 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 200);
+        all.dedup();
+        assert_eq!(all.len(), 200, "no duplicates");
+    }
+}

@@ -1,0 +1,41 @@
+//! Data layer: synthetic generators, the paper's twelve data-set profiles,
+//! standardization and svmlight-format IO.
+//!
+//! The paper evaluates on real data sets (GLI-85 … E2006-tfidf for p ≫ n;
+//! MITFaces … FD for n ≫ p) that are not available offline; per the
+//! substitution policy in DESIGN.md §3, [`profiles`] generates synthetic
+//! equivalents matched in sample/feature regime, correlation structure,
+//! sparsity and signal-to-noise — the properties the timing figures
+//! actually exercise.
+
+pub mod profiles;
+pub mod standardize;
+pub mod svmlight;
+pub mod synth;
+
+pub use profiles::{profile_by_name, DatasetProfile, Regime, ALL_PROFILES};
+pub use standardize::{standardize, Standardization};
+pub use synth::{prostate_like, synth_regression, SynthSpec};
+
+use crate::linalg::Mat;
+
+/// A regression data set ready for the solvers: standardized design and
+/// centered response.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Mat,
+    pub y: Vec<f64>,
+    /// Ground-truth coefficients when synthetic (for recovery metrics).
+    pub beta_true: Option<Vec<f64>>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.cols()
+    }
+}

@@ -1,0 +1,130 @@
+//! Standardization: center y, center + scale features.
+//!
+//! The paper (following Zou & Hastie 2005) assumes the response is
+//! centered and features normalized. glmnet's convention scales each
+//! column to `‖x_j‖²/n = 1`; we match that so λ values transfer.
+
+use crate::linalg::{vecops, Mat};
+
+/// Recorded transformation so solutions can be mapped back to the
+/// original units.
+#[derive(Clone, Debug)]
+pub struct Standardization {
+    pub x_mean: Vec<f64>,
+    pub x_scale: Vec<f64>,
+    pub y_mean: f64,
+}
+
+impl Standardization {
+    /// Map standardized-space coefficients back to original units,
+    /// returning (β_orig, intercept).
+    pub fn unstandardize(&self, beta: &[f64]) -> (Vec<f64>, f64) {
+        let beta_orig: Vec<f64> = beta
+            .iter()
+            .zip(&self.x_scale)
+            .map(|(b, s)| if *s > 0.0 { b / s } else { 0.0 })
+            .collect();
+        let intercept = self.y_mean
+            - beta_orig
+                .iter()
+                .zip(&self.x_mean)
+                .map(|(b, m)| b * m)
+                .sum::<f64>();
+        (beta_orig, intercept)
+    }
+}
+
+/// Center y; center each column of X and scale it to `‖x_j‖² = n`.
+/// Constant (zero-variance) columns are left at zero (the paper removes
+/// all-zero features; we neutralize them the same way).
+pub fn standardize(x: &Mat, y: &[f64]) -> (Mat, Vec<f64>, Standardization) {
+    standardize_opts(x, y, true)
+}
+
+/// [`standardize`] with optional feature centering. Sparse designs
+/// (Dorothea/E2006-style) skip centering so zeros stay zero — the same
+/// convention glmnet applies to sparse inputs.
+pub fn standardize_opts(x: &Mat, y: &[f64], center: bool) -> (Mat, Vec<f64>, Standardization) {
+    let (n, p) = (x.rows(), x.cols());
+    assert_eq!(y.len(), n);
+    let y_mean = vecops::mean(y);
+    let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+
+    let mut x_mean = vec![0.0; p];
+    if center {
+        for r in 0..n {
+            vecops::axpy(1.0, x.row(r), &mut x_mean);
+        }
+        vecops::scale(1.0 / n as f64, &mut x_mean);
+    }
+
+    // column scales: ‖x_j − mean‖ / √n
+    let mut ssq = vec![0.0; p];
+    for r in 0..n {
+        let row = x.row(r);
+        for j in 0..p {
+            let d = row[j] - x_mean[j];
+            ssq[j] += d * d;
+        }
+    }
+    let x_scale: Vec<f64> = ssq.iter().map(|s| (s / n as f64).sqrt()).collect();
+
+    let mut xs = Mat::zeros(n, p);
+    for r in 0..n {
+        let src = x.row(r);
+        let dst = xs.row_mut(r);
+        for j in 0..p {
+            dst[j] = if x_scale[j] > 1e-12 { (src[j] - x_mean[j]) / x_scale[j] } else { 0.0 };
+        }
+    }
+    (xs, yc, Standardization { x_mean, x_scale, y_mean })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn centers_and_scales() {
+        let mut rng = Rng::seed_from(61);
+        let x = Mat::from_fn(30, 5, |_, _| rng.normal_ms(3.0, 2.0));
+        let y: Vec<f64> = (0..30).map(|_| rng.normal_ms(-1.0, 4.0)).collect();
+        let (xs, yc, _) = standardize(&x, &y);
+        assert!(vecops::mean(&yc).abs() < 1e-10);
+        for j in 0..5 {
+            let col = xs.col(j);
+            assert!(vecops::mean(&col).abs() < 1e-10, "col {j} mean");
+            assert!((vecops::norm2_sq(&col) - 30.0).abs() < 1e-8, "col {j} scale");
+        }
+    }
+
+    #[test]
+    fn constant_column_neutralized() {
+        let x = Mat::from_fn(10, 2, |r, c| if c == 0 { 7.0 } else { r as f64 });
+        let y = vec![1.0; 10];
+        let (xs, _, _) = standardize(&x, &y);
+        for r in 0..10 {
+            assert_eq!(xs.get(r, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn unstandardize_roundtrip_prediction() {
+        let mut rng = Rng::seed_from(62);
+        let x = Mat::from_fn(25, 3, |_, _| rng.normal_ms(5.0, 3.0));
+        let y: Vec<f64> = (0..25).map(|_| rng.normal_ms(2.0, 1.0)).collect();
+        let (xs, yc, std) = standardize(&x, &y);
+        let beta_std = vec![0.4, -0.2, 0.1];
+        let (beta_orig, intercept) = std.unstandardize(&beta_std);
+        // predictions must agree: xs·β_std + ȳ == x·β_orig + intercept
+        let pred_std = xs.matvec(&beta_std);
+        let pred_orig = x.matvec(&beta_orig);
+        for i in 0..25 {
+            let a = pred_std[i] + std.y_mean;
+            let b = pred_orig[i] + intercept;
+            assert!((a - b).abs() < 1e-8, "i={i}: {a} vs {b}");
+        }
+        let _ = yc;
+    }
+}

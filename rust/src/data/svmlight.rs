@@ -1,0 +1,125 @@
+//! svmlight/libsvm format IO (`label idx:val idx:val ...`, 1-based
+//! indices) — the interchange format the paper's comparator software
+//! (liblinear, Shotgun) consumes, so data sets generated here can be
+//! round-tripped to disk and shared.
+
+use crate::linalg::{Csr, Mat};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write `(x, y)` in svmlight format. Zero entries are omitted.
+pub fn write_svmlight(path: &Path, x: &Mat, y: &[f64]) -> Result<()> {
+    assert_eq!(x.rows(), y.len());
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for r in 0..x.rows() {
+        write!(w, "{}", fmt_num(y[r]))?;
+        for (j, &v) in x.row(r).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, fmt_num(v))?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+fn fmt_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.17}")
+    }
+}
+
+/// Read an svmlight file into a sparse design + response. `p_hint` can
+/// force a minimum feature count (files may omit trailing features).
+pub fn read_svmlight(path: &Path, p_hint: usize) -> Result<(Csr, Vec<f64>)> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut trip = Vec::new();
+    let mut y = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("bad label at line {}", lineno + 1))?;
+        let row = y.len();
+        y.push(label);
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("bad pair '{tok}' at line {}", lineno + 1))?;
+            let idx: usize = idx.parse().with_context(|| format!("bad index at line {}", lineno + 1))?;
+            if idx == 0 {
+                bail!("svmlight indices are 1-based; got 0 at line {}", lineno + 1);
+            }
+            let val: f64 = val.parse().with_context(|| format!("bad value at line {}", lineno + 1))?;
+            max_col = max_col.max(idx);
+            trip.push((row, idx - 1, val));
+        }
+    }
+    let p = max_col.max(p_hint);
+    Ok((Csr::from_triplets(y.len(), p, trip), y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_dense() {
+        let mut rng = Rng::seed_from(71);
+        let x = Mat::from_fn(9, 5, |_, _| {
+            if rng.bernoulli(0.6) { rng.normal() } else { 0.0 }
+        });
+        let y: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let dir = std::env::temp_dir().join("sven_svmlight_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.svm");
+        write_svmlight(&path, &x, &y).unwrap();
+        let (xr, yr) = read_svmlight(&path, 5).unwrap();
+        assert_eq!(xr.rows(), 9);
+        assert_eq!(xr.cols(), 5);
+        let xd = xr.to_dense();
+        for r in 0..9 {
+            assert!((yr[r] - y[r]).abs() < 1e-12);
+            for c in 0..5 {
+                assert!((xd.get(r, c) - x.get(r, c)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let dir = std::env::temp_dir().join("sven_svmlight_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.svm");
+        std::fs::write(&path, "1.0 0:3.5\n").unwrap();
+        assert!(read_svmlight(&path, 0).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let dir = std::env::temp_dir().join("sven_svmlight_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("comments.svm");
+        std::fs::write(&path, "# header\n\n2.5 2:1.0 # trailing\n").unwrap();
+        let (x, y) = read_svmlight(&path, 0).unwrap();
+        assert_eq!(y, vec![2.5]);
+        assert_eq!(x.cols(), 2);
+        assert_eq!(x.to_dense().get(0, 1), 1.0);
+    }
+}

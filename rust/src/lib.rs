@@ -1,0 +1,44 @@
+//! # SVEN — Support Vector Elastic Net
+//!
+//! A reproduction of *"A Reduction of the Elastic Net to Support Vector
+//! Machines with an Application to GPU Computing"* (Zhou et al., AAAI 2015)
+//! as a three-layer rust + JAX + Pallas system.
+//!
+//! The paper's result: the Elastic Net
+//!
+//! ```text
+//! min_β ‖Xβ − y‖² + λ₂‖β‖²   s.t. |β|₁ ≤ t
+//! ```
+//!
+//! reduces *exactly* to a squared-hinge-loss SVM without bias on a
+//! constructed data set of `2p` samples in `n` dimensions, with
+//! `C = 1/(2λ₂)` and back-map `β = t·(α⁺ − α⁻)/|α|₁`. Since squared-hinge
+//! SVMs are solved almost entirely with dense matrix operations (Newton +
+//! conjugate gradients), the Elastic Net inherits parallel hardware for
+//! free. Here the "GPU" backend of the paper is an AOT-compiled XLA
+//! program executed through PJRT from rust (see [`runtime`]), while
+//! [`solvers::svm`] is the pure-rust CPU backend.
+//!
+//! Layer map:
+//! - **L3** (this crate): [`coordinator`] — regularization-path scheduler,
+//!   worker pool, solver service; [`cli`]; [`bench`].
+//! - **L2/L1** (`python/compile`): JAX Newton-CG solver graphs calling
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! - **runtime**: [`runtime`] loads the artifacts via the `xla` crate
+//!   (PJRT CPU) and exposes them as [`solvers::sven::SvmBackend`]s.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod solvers;
+pub mod testing;
+pub mod util;
+
+pub use solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
+pub use solvers::sven::{Sven, SvenConfig};

@@ -1,0 +1,186 @@
+//! Conjugate gradients over abstract linear operators.
+//!
+//! The SVM primal Newton step solves `(λI + 2C·X̂ᵀ diag(sv) X̂)·δ = −g`
+//! without ever forming the Hessian — only Hessian-vector products — which
+//! is exactly the structure Chapelle (2007) exploits and what the paper's
+//! GPU backend parallelizes. The same routine (with a Jacobi/diagonal
+//! preconditioner) backs the L1_LS interior-point solver (Kim et al. 2007).
+
+use super::vecops;
+
+/// Abstract symmetric positive (semi)definite operator `v ↦ A·v`.
+pub trait LinOp {
+    fn dim(&self) -> usize;
+    /// `out ← A·v` (out is pre-sized, may be overwritten).
+    fn apply(&self, v: &[f64], out: &mut [f64]);
+    /// Optional diagonal preconditioner `M⁻¹ ≈ diag(A)⁻¹`; `None` = identity.
+    fn precond(&self, _r: &[f64], _out: &mut [f64]) -> bool {
+        false
+    }
+}
+
+/// Options for [`cg_solve`].
+#[derive(Clone, Debug)]
+pub struct CgOptions {
+    /// Relative residual tolerance ‖r‖/‖b‖.
+    pub tol: f64,
+    /// Iteration cap (0 ⇒ 2·dim; finite-precision CG routinely needs more
+    /// than the textbook n iterations on ill-conditioned systems).
+    pub max_iter: usize,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        CgOptions { tol: 1e-10, max_iter: 0 }
+    }
+}
+
+/// Result of a CG solve.
+#[derive(Clone, Debug)]
+pub struct CgOutcome {
+    pub iters: usize,
+    pub rel_residual: f64,
+    pub converged: bool,
+}
+
+/// Preconditioned conjugate gradients: solves `A·x = b`, starting from the
+/// provided `x` (warm start). Returns iteration stats.
+pub fn cg_solve<A: LinOp>(a: &A, b: &[f64], x: &mut [f64], opts: &CgOptions) -> CgOutcome {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+    let max_iter = if opts.max_iter == 0 { (2 * n).max(16) } else { opts.max_iter };
+
+    let bnorm = vecops::norm2(b);
+    if bnorm == 0.0 {
+        x.fill(0.0);
+        return CgOutcome { iters: 0, rel_residual: 0.0, converged: true };
+    }
+
+    let mut r = vec![0.0; n];
+    let mut ax = vec![0.0; n];
+    a.apply(x, &mut ax);
+    for i in 0..n {
+        r[i] = b[i] - ax[i];
+    }
+
+    let mut z = vec![0.0; n];
+    let have_pre = a.precond(&r, &mut z);
+    if !have_pre {
+        z.copy_from_slice(&r);
+    }
+    let mut p = z.clone();
+    let mut rz = vecops::dot(&r, &z);
+    let mut ap = vec![0.0; n];
+
+    let mut iters = 0;
+    let mut rel = vecops::norm2(&r) / bnorm;
+    while rel > opts.tol && iters < max_iter {
+        a.apply(&p, &mut ap);
+        let pap = vecops::dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            // Curvature breakdown: operator only PSD along p; stop with
+            // the current (best-so-far) iterate.
+            break;
+        }
+        let alpha = rz / pap;
+        vecops::axpy(alpha, &p, x);
+        vecops::axpy(-alpha, &ap, &mut r);
+        rel = vecops::norm2(&r) / bnorm;
+        iters += 1;
+        if rel <= opts.tol {
+            break;
+        }
+        if a.precond(&r, &mut z) {
+            // preconditioned direction update
+        } else {
+            z.copy_from_slice(&r);
+        }
+        let rz_new = vecops::dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    CgOutcome { iters, rel_residual: rel, converged: rel <= opts.tol }
+}
+
+/// A dense matrix as a LinOp (testing / small systems).
+pub struct DenseOp<'a>(pub &'a super::dense::Mat);
+
+impl LinOp for DenseOp<'_> {
+    fn dim(&self) -> usize {
+        self.0.rows()
+    }
+    fn apply(&self, v: &[f64], out: &mut [f64]) {
+        self.0.matvec_into(v, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::Mat;
+    use crate::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut g = a.gram();
+        for i in 0..n {
+            let v = g.get(i, i) + 1.0;
+            g.set(i, i, v);
+        }
+        g
+    }
+
+    #[test]
+    fn solves_spd_system() {
+        let mut rng = Rng::seed_from(31);
+        for n in [1usize, 3, 10, 50] {
+            let a = random_spd(&mut rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            let mut x = vec![0.0; n];
+            let out = cg_solve(&DenseOp(&a), &b, &mut x, &CgOptions::default());
+            assert!(out.converged, "n={n} rel={}", out.rel_residual);
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-6, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        let mut rng = Rng::seed_from(32);
+        let n = 60;
+        let a = random_spd(&mut rng, n);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b = a.matvec(&x_true);
+        let mut cold = vec![0.0; n];
+        let it_cold = cg_solve(&DenseOp(&a), &b, &mut cold, &CgOptions::default()).iters;
+        // warm start near the solution
+        let mut warm: Vec<f64> = x_true.iter().map(|v| v + 1e-6).collect();
+        let it_warm = cg_solve(&DenseOp(&a), &b, &mut warm, &CgOptions::default()).iters;
+        assert!(it_warm < it_cold, "warm {it_warm} vs cold {it_cold}");
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let a = Mat::eye(4);
+        let mut x = vec![1.0; 4];
+        let out = cg_solve(&DenseOp(&a), &[0.0; 4], &mut x, &CgOptions::default());
+        assert!(out.converged);
+        assert_eq!(x, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn respects_max_iter() {
+        let mut rng = Rng::seed_from(33);
+        let a = random_spd(&mut rng, 40);
+        let b: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let mut x = vec![0.0; 40];
+        let out = cg_solve(&DenseOp(&a), &b, &mut x, &CgOptions { tol: 1e-16, max_iter: 3 });
+        assert!(out.iters <= 3);
+    }
+}

@@ -1,0 +1,187 @@
+//! Cholesky factorization for SPD systems.
+//!
+//! Used by the SVM Newton solvers (small free-set systems), the L1_LS
+//! interior-point preconditioner, and as the exact fallback when CG is
+//! not worth the iteration overhead.
+
+use super::dense::Mat;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CholeskyError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPd(usize, f64),
+    #[error("matrix not square: {0}x{1}")]
+    NotSquare(usize, usize),
+}
+
+/// Lower-triangular Cholesky factor `A = L·Lᵀ`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Returns an error on non-PD input (used by
+    /// callers to detect loss of curvature and add ridge).
+    pub fn factor(a: &Mat) -> Result<Self, CholeskyError> {
+        if a.rows() != a.cols() {
+            return Err(CholeskyError::NotSquare(a.rows(), a.cols()));
+        }
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            // Diagonal.
+            let mut d = a.get(j, j);
+            for k in 0..j {
+                let v = l.get(j, k);
+                d -= v * v;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(CholeskyError::NotPd(j, d));
+            }
+            let dj = d.sqrt();
+            l.set(j, j, dj);
+            // Column below the diagonal.
+            for i in j + 1..n {
+                let mut s = a.get(i, j);
+                // dot over the already-computed prefix rows
+                let (ri, rj) = (i * n, j * n);
+                let ld = l.data();
+                let mut acc = 0.0;
+                for k in 0..j {
+                    acc += ld[ri + k] * ld[rj + k];
+                }
+                s -= acc;
+                l.set(i, j, s / dj);
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Factor with a ridge retry: adds `ridge` to the diagonal, multiplying
+    /// by 10 on failure, up to `max_tries`.
+    pub fn factor_ridged(a: &Mat, mut ridge: f64, max_tries: usize) -> Result<Self, CholeskyError> {
+        match Self::factor(a) {
+            Ok(c) => return Ok(c),
+            Err(_) => {}
+        }
+        for _ in 0..max_tries {
+            let mut ar = a.clone();
+            for i in 0..a.rows() {
+                let v = ar.get(i, i) + ridge;
+                ar.set(i, i, v);
+            }
+            if let Ok(c) = Self::factor(&ar) {
+                return Ok(c);
+            }
+            ridge *= 10.0;
+        }
+        Err(CholeskyError::NotPd(0, ridge))
+    }
+
+    /// Solve `A·x = b` via forward/back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        let ld = self.l.data();
+        // Forward: L·z = b
+        let mut z = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            let row = &ld[i * n..i * n + i];
+            for (k, lik) in row.iter().enumerate() {
+                s -= lik * z[k];
+            }
+            z[i] = s / ld[i * n + i];
+        }
+        // Backward: Lᵀ·x = z
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = z[i];
+            for k in i + 1..n {
+                s -= ld[k * n + i] * x[k];
+            }
+            x[i] = s / ld[i * n + i];
+        }
+        x
+    }
+
+    /// The lower factor.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// log(det A) = 2·Σ log L_ii — used by the IPM line search diagnostics.
+    pub fn log_det(&self) -> f64 {
+        let n = self.l.rows();
+        (0..n).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut g = a.gram(); // AAᵀ ⪰ 0
+        for i in 0..n {
+            let v = g.get(i, i) + 0.5;
+            g.set(i, i, v);
+        }
+        g
+    }
+
+    #[test]
+    fn factor_and_solve_roundtrip() {
+        let mut rng = Rng::seed_from(21);
+        for n in [1usize, 2, 5, 17, 40] {
+            let a = random_spd(&mut rng, n);
+            let chol = Cholesky::factor(&a).unwrap();
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            let x = chol.solve(&b);
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-7, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Rng::seed_from(22);
+        let a = random_spd(&mut rng, 8);
+        let chol = Cholesky::factor(&a).unwrap();
+        let l = chol.l();
+        let rec = l.matmul(&l.transpose());
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((rec.get(i, j) - a.get(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn ridged_recovers_semidefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]); // rank 1 PSD
+        let c = Cholesky::factor_ridged(&a, 1e-8, 12).unwrap();
+        let x = c.solve(&[2.0, 2.0]);
+        // ridged solve of a consistent system stays near a solution
+        let r0 = x[0] + x[1];
+        assert!((r0 - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn log_det_identity_is_zero() {
+        let c = Cholesky::factor(&Mat::eye(5)).unwrap();
+        assert!(c.log_det().abs() < 1e-12);
+    }
+}

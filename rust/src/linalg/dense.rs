@@ -1,0 +1,452 @@
+//! Dense row-major `f64` matrix with blocked, thread-parallel products.
+//!
+//! `Mat` is the workhorse of every solver in this crate. The GEMM/GRAM
+//! kernels use cache-blocked loops and `std::thread::scope` for row-band
+//! parallelism — no external BLAS is available offline, and this keeps the
+//! rust CPU backend an honest "optimized CPU baseline" for the paper's
+//! comparisons.
+
+use super::vecops;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+/// Number of worker threads for blocked products. Cached once.
+pub fn num_threads() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("SVEN_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            })
+    })
+}
+
+impl Mat {
+    /// Zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure `f(r, c)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Immutable view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable view of row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column `c` (rows are contiguous, columns are strided).
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Explicit transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked to keep both source rows and destination rows in cache.
+        const B: usize = 64;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// `y ← A·x` (allocates the output).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y ← A·x` into a caller-provided buffer (hot-path form).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let nt = num_threads();
+        if self.rows * self.cols < 1 << 16 || nt == 1 {
+            for r in 0..self.rows {
+                y[r] = vecops::dot(self.row(r), x);
+            }
+            return;
+        }
+        let band = self.rows.div_ceil(nt);
+        std::thread::scope(|s| {
+            for (tid, ych) in y.chunks_mut(band).enumerate() {
+                let lo = tid * band;
+                s.spawn(move || {
+                    for (i, yr) in ych.iter_mut().enumerate() {
+                        *yr = vecops::dot(self.row(lo + i), x);
+                    }
+                });
+            }
+        });
+    }
+
+    /// `y ← Aᵀ·x` (allocates the output).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.matvec_t_into(x, &mut y);
+        y
+    }
+
+    /// `y ← Aᵀ·x` into a caller-provided buffer. Accumulates row-wise so
+    /// memory access stays sequential over `self.data`.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        let nt = num_threads();
+        if self.rows * self.cols < 1 << 16 || nt == 1 {
+            for r in 0..self.rows {
+                vecops::axpy(x[r], self.row(r), y);
+            }
+            return;
+        }
+        // Each thread accumulates a private output, then we reduce.
+        let band = self.rows.div_ceil(nt);
+        let partials: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..nt)
+                .map(|tid| {
+                    s.spawn(move || {
+                        let mut acc = vec![0.0; self.cols];
+                        let lo = tid * band;
+                        let hi = ((tid + 1) * band).min(self.rows);
+                        for r in lo..hi {
+                            vecops::axpy(x[r], self.row(r), &mut acc);
+                        }
+                        acc
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for p in &partials {
+            vecops::axpy(1.0, p, y);
+        }
+    }
+
+    /// `C ← A·B` — blocked, thread-parallel over row bands of A.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "gemm shape mismatch");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        let nt = num_threads();
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let work = m * k * n;
+        if work < 1 << 18 || nt == 1 {
+            gemm_band(&self.data, &b.data, &mut c.data, 0, m, k, n);
+            return c;
+        }
+        let band = m.div_ceil(nt);
+        std::thread::scope(|s| {
+            for (tid, cch) in c.data.chunks_mut(band * n).enumerate() {
+                let lo = tid * band;
+                let rows_here = cch.len() / n;
+                let a = &self.data;
+                let bd = &b.data;
+                s.spawn(move || {
+                    gemm_band_into(&a[lo * k..(lo + rows_here) * k], bd, cch, rows_here, k, n);
+                });
+            }
+        });
+        c
+    }
+
+    /// Gram matrix `AᵀA` (`cols × cols`), exploiting symmetry.
+    pub fn gram_t(&self) -> Mat {
+        let at = self.transpose();
+        at.gram()
+    }
+
+    /// Gram matrix `AAᵀ` (`rows × rows`), exploiting symmetry: only the
+    /// upper triangle is computed, then mirrored.
+    pub fn gram(&self) -> Mat {
+        let m = self.rows;
+        let mut g = Mat::zeros(m, m);
+        let nt = num_threads();
+        if m * m * self.cols < 1 << 18 || nt == 1 {
+            for i in 0..m {
+                for j in i..m {
+                    let v = vecops::dot(self.row(i), self.row(j));
+                    g.data[i * m + j] = v;
+                    g.data[j * m + i] = v;
+                }
+            }
+            return g;
+        }
+        // Parallel over i with interleaved assignment so triangle work
+        // (row i costs m−i dots) balances across threads.
+        let rows_done: Vec<Vec<(usize, Vec<f64>)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..nt)
+                .map(|tid| {
+                    s.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut i = tid;
+                        while i < m {
+                            let mut row = vec![0.0; m - i];
+                            for j in i..m {
+                                row[j - i] = vecops::dot(self.row(i), self.row(j));
+                            }
+                            out.push((i, row));
+                            i += nt;
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for chunk in rows_done {
+            for (i, row) in chunk {
+                for (off, v) in row.into_iter().enumerate() {
+                    let j = i + off;
+                    g.data[i * m + j] = v;
+                    g.data[j * m + i] = v;
+                }
+            }
+        }
+        g
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        vecops::norm2(&self.data)
+    }
+
+    /// Horizontal concatenation `[A, B]`.
+    pub fn hcat(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + b.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(b.row(r));
+        }
+        out
+    }
+
+    /// Vertical concatenation `[A; B]`.
+    pub fn vcat(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&b.data);
+        Mat { rows: self.rows + b.rows, cols: self.cols, data }
+    }
+
+    /// Convert to `f32` row-major buffer (XLA exchange boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+}
+
+/// Sequential blocked GEMM over a row band: `C[0..m_band] += A_band · B`.
+fn gemm_band(a: &[f64], b: &[f64], c: &mut [f64], row_lo: usize, row_hi: usize, k: usize, n: usize) {
+    let rows = row_hi - row_lo;
+    gemm_band_into(&a[row_lo * k..row_hi * k], b, &mut c[row_lo * n..row_hi * n], rows, k, n);
+}
+
+/// Kernel: `C (m×n) += A (m×k) · B (k×n)`, ikj loop order with k-blocking
+/// so B rows stream through cache while C rows stay hot.
+fn gemm_band_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    const KB: usize = 256;
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                vecops::axpy(aik, brow, crow);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matvec_matches_naive() {
+        let mut rng = Rng::seed_from(7);
+        let a = rand_mat(&mut rng, 13, 29);
+        let x: Vec<f64> = (0..29).map(|_| rng.normal()).collect();
+        let y = a.matvec(&x);
+        for r in 0..13 {
+            let naive: f64 = (0..29).map(|c| a.get(r, c) * x[c]).sum();
+            assert!((y[r] - naive).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose_matvec() {
+        let mut rng = Rng::seed_from(8);
+        let a = rand_mat(&mut rng, 17, 11);
+        let x: Vec<f64> = (0..17).map(|_| rng.normal()).collect();
+        let y1 = a.matvec_t(&x);
+        let y2 = a.transpose().matvec(&x);
+        for (v1, v2) in y1.iter().zip(&y2) {
+            assert!((v1 - v2).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::seed_from(9);
+        let a = rand_mat(&mut rng, 7, 5);
+        let b = rand_mat(&mut rng, 5, 9);
+        let c = a.matmul(&b);
+        for i in 0..7 {
+            for j in 0..9 {
+                let naive: f64 = (0..5).map(|k| a.get(i, k) * b.get(k, j)).sum();
+                assert!((c.get(i, j) - naive).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_large_parallel_path() {
+        let mut rng = Rng::seed_from(10);
+        let a = rand_mat(&mut rng, 130, 70);
+        let b = rand_mat(&mut rng, 70, 90);
+        let c = a.matmul(&b);
+        // Spot-check against naive on a few entries.
+        for &(i, j) in &[(0, 0), (129, 89), (64, 45), (12, 3)] {
+            let naive: f64 = (0..70).map(|k| a.get(i, k) * b.get(k, j)).sum();
+            assert!((c.get(i, j) - naive).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gram_is_aat() {
+        let mut rng = Rng::seed_from(11);
+        let a = rand_mat(&mut rng, 12, 6);
+        let g = a.gram();
+        let g2 = a.matmul(&a.transpose());
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((g.get(i, j) - g2.get(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_large_parallel_matches() {
+        let mut rng = Rng::seed_from(12);
+        let a = rand_mat(&mut rng, 90, 40);
+        let g = a.gram();
+        let g2 = a.matmul(&a.transpose());
+        let mut max = 0.0f64;
+        for i in 0..90 {
+            for j in 0..90 {
+                max = max.max((g.get(i, j) - g2.get(i, j)).abs());
+            }
+        }
+        assert!(max < 1e-9, "max dev {max}");
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from(13);
+        let a = rand_mat(&mut rng, 33, 21);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn hcat_vcat_shapes() {
+        let a = Mat::eye(2);
+        let b = Mat::zeros(2, 3);
+        let h = a.hcat(&b);
+        assert_eq!((h.rows(), h.cols()), (2, 5));
+        assert_eq!(h.get(1, 1), 1.0);
+        assert_eq!(h.get(1, 4), 0.0);
+        let c = Mat::zeros(4, 2);
+        let v = a.vcat(&c);
+        assert_eq!((v.rows(), v.cols()), (6, 2));
+    }
+
+    #[test]
+    fn eye_matvec_is_identity() {
+        let x = vec![1.0, -2.0, 3.5];
+        assert_eq!(Mat::eye(3).matvec(&x), x);
+    }
+}

@@ -1,0 +1,21 @@
+//! Dense & sparse linear algebra substrate.
+//!
+//! The offline crate set has no BLAS/ndarray, so everything the solvers
+//! need is implemented here: contiguous row-major matrices with blocked
+//! (and thread-parallel) GEMM/GEMV, Cholesky factorization, conjugate
+//! gradients over abstract linear operators, and CSR sparse matrices.
+//!
+//! All solver numerics are `f64`; the XLA exchange path converts to `f32`
+//! at the runtime boundary (matching the paper's single-precision GPU
+//! arithmetic).
+
+pub mod cg;
+pub mod cholesky;
+pub mod dense;
+pub mod sparse;
+pub mod vecops;
+
+pub use cg::{cg_solve, CgOptions, CgOutcome, LinOp};
+pub use cholesky::Cholesky;
+pub use dense::Mat;
+pub use sparse::Csr;

@@ -1,0 +1,230 @@
+//! Artifact registry: parse `manifest.json` and answer shape-bucket
+//! queries ("smallest primal bucket covering (n, p)").
+
+use super::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which L2 program an artifact encodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `svm_primal_program(X, y, t, c, mask, w0) → (w, α, iters)`.
+    Primal,
+    /// `svm_dual_program(G0, v, yy, t, c, mask, α0) → (α, iters)`.
+    Dual,
+    /// `gram_program(X, y) → (G0, v, yy)`.
+    Gram,
+}
+
+impl ArtifactKind {
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "primal" => ArtifactKind::Primal,
+            "dual" => ArtifactKind::Dual,
+            "gram" => ArtifactKind::Gram,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+}
+
+/// One artifact's metadata from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub file: PathBuf,
+    /// Bucket dims: regression-problem n (absent for dual) and p.
+    pub n: usize,
+    pub p: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let doc = json::parse(&text).context("parsing manifest.json")?;
+        let fingerprint = doc
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let mut artifacts = Vec::new();
+        for item in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?
+        {
+            let name = item
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let kind = ArtifactKind::from_str(
+                item.get("kind").and_then(Json::as_str).unwrap_or(""),
+            )?;
+            let file = dir.join(
+                item.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+            );
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            let n = item.get("n").and_then(Json::as_usize).unwrap_or(0);
+            let p = item
+                .get("p")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("artifact {name} missing p"))?;
+            artifacts.push(ArtifactMeta { name, kind, file, n, p });
+        }
+        let reg = Registry { dir: dir.to_path_buf(), fingerprint, artifacts };
+        reg.validate()?;
+        Ok(reg)
+    }
+
+    /// Every gram bucket's p must have a matching dual bucket (the dual
+    /// solve consumes the gram output at the same padded p).
+    fn validate(&self) -> Result<()> {
+        for g in self.of_kind(ArtifactKind::Gram) {
+            if !self
+                .of_kind(ArtifactKind::Dual)
+                .iter()
+                .any(|d| d.p == g.p)
+            {
+                bail!(
+                    "gram bucket {} (p={}) has no matching dual bucket",
+                    g.name,
+                    g.p
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn of_kind(&self, kind: ArtifactKind) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Smallest primal bucket with `n_b ≥ n` and `p_b ≥ p` (by padded
+    /// area, the proxy for wasted compute).
+    pub fn primal_bucket(&self, n: usize, p: usize) -> Option<&ArtifactMeta> {
+        self.of_kind(ArtifactKind::Primal)
+            .into_iter()
+            .filter(|a| a.n >= n && a.p >= p)
+            .min_by_key(|a| a.n * a.p)
+    }
+
+    /// Smallest gram bucket covering (n, p).
+    pub fn gram_bucket(&self, n: usize, p: usize) -> Option<&ArtifactMeta> {
+        self.of_kind(ArtifactKind::Gram)
+            .into_iter()
+            .filter(|a| a.n >= n && a.p >= p)
+            .min_by_key(|a| a.n * a.p)
+    }
+
+    /// Dual bucket at exactly the given padded p.
+    pub fn dual_bucket_exact(&self, p: usize) -> Option<&ArtifactMeta> {
+        self.of_kind(ArtifactKind::Dual).into_iter().find(|a| a.p == p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_registry(dir: &Path) -> Registry {
+        std::fs::create_dir_all(dir).unwrap();
+        let arts = [
+            ("svm_primal_n32_p64", "primal", 32usize, 64usize),
+            ("svm_primal_n128_p512", "primal", 128, 512),
+            ("svm_primal_n128_p2048", "primal", 128, 2048),
+            ("svm_dual_p16", "dual", 0, 16),
+            ("svm_dual_p64", "dual", 0, 64),
+            ("gram_n256_p16", "gram", 256, 16),
+            ("gram_n2048_p64", "gram", 2048, 64),
+        ];
+        let mut items = Vec::new();
+        for (name, kind, n, p) in arts {
+            let file = format!("{name}.hlo.txt");
+            std::fs::File::create(dir.join(&file))
+                .unwrap()
+                .write_all(b"HloModule fake\n")
+                .unwrap();
+            let nfield = if kind == "dual" {
+                String::new()
+            } else {
+                format!("\"n\": {n}, ")
+            };
+            items.push(format!(
+                "{{\"name\": \"{name}\", \"kind\": \"{kind}\", \"file\": \"{file}\", {nfield}\"p\": {p}}}"
+            ));
+        }
+        let manifest = format!(
+            "{{\"format\": 1, \"fingerprint\": \"t\", \"artifacts\": [{}]}}",
+            items.join(",")
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        Registry::load(dir).unwrap()
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sven_reg_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = tmpdir("load");
+        let reg = fake_registry(&dir);
+        assert_eq!(reg.artifacts.len(), 7);
+        assert_eq!(reg.of_kind(ArtifactKind::Primal).len(), 3);
+    }
+
+    #[test]
+    fn primal_bucket_selection_smallest_cover() {
+        let dir = tmpdir("bucket");
+        let reg = fake_registry(&dir);
+        let b = reg.primal_bucket(100, 400).unwrap();
+        assert_eq!((b.n, b.p), (128, 512));
+        let b2 = reg.primal_bucket(10, 10).unwrap();
+        assert_eq!((b2.n, b2.p), (32, 64));
+        assert!(reg.primal_bucket(4096, 4096).is_none());
+    }
+
+    #[test]
+    fn gram_and_dual_pair() {
+        let dir = tmpdir("pair");
+        let reg = fake_registry(&dir);
+        let g = reg.gram_bucket(1000, 50).unwrap();
+        assert_eq!((g.n, g.p), (2048, 64));
+        assert!(reg.dual_bucket_exact(g.p).is_some());
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = tmpdir("missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "x", "kind": "dual", "file": "nope.hlo.txt", "p": 4}]}"#,
+        )
+        .unwrap();
+        assert!(Registry::load(&dir).is_err());
+    }
+}

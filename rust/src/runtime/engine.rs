@@ -1,0 +1,267 @@
+//! The XLA engine: compile cache + typed execution of the three artifact
+//! programs. One engine per process; executables are compiled on first
+//! use and shared across worker threads.
+
+use super::artifact::{ArtifactKind, ArtifactMeta, Registry};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Compiled-executable cache keyed by artifact name.
+pub struct XlaEngine {
+    client: PjRtClient,
+    registry: Registry,
+    compiled: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+    /// Compile-cache statistics (hits, misses) for the metrics endpoint.
+    stats: Mutex<(u64, u64)>,
+}
+
+impl XlaEngine {
+    /// Create a CPU PJRT client and load the artifact registry.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        let registry = Registry::load(dir)?;
+        Ok(XlaEngine {
+            client,
+            registry,
+            compiled: Mutex::new(HashMap::new()),
+            stats: Mutex::new((0, 0)),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// (hits, misses) of the compile cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Get (compile if needed) the executable for an artifact.
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Arc<PjRtLoadedExecutable>> {
+        {
+            let cache = self.compiled.lock().unwrap();
+            if let Some(exe) = cache.get(&meta.name) {
+                self.stats.lock().unwrap().0 += 1;
+                return Ok(exe.clone());
+            }
+        }
+        // Compile outside the lock: compilation takes seconds and other
+        // workers may want other artifacts meanwhile.
+        let proto = HloModuleProto::from_text_file(&meta.file)
+            .map_err(|e| anyhow!("parsing {}: {e}", meta.file.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", meta.name))?,
+        );
+        let mut cache = self.compiled.lock().unwrap();
+        self.stats.lock().unwrap().1 += 1;
+        Ok(cache.entry(meta.name.clone()).or_insert(exe).clone())
+    }
+
+    /// Pre-compile every artifact (warmup; used by the coordinator at
+    /// startup so the request path never pays compile latency).
+    pub fn warmup(&self) -> Result<usize> {
+        let metas: Vec<ArtifactMeta> = self.registry.artifacts.clone();
+        for meta in &metas {
+            self.executable(meta)?;
+        }
+        Ok(metas.len())
+    }
+
+    /// Stage a host f64 tensor on the device.
+    pub fn stage(&self, data: &[f64], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("staging buffer {:?}: {e}", dims))
+    }
+
+    /// Stage a scalar.
+    pub fn stage_scalar(&self, v: f64) -> Result<PjRtBuffer> {
+        self.stage(&[v], &[])
+    }
+
+    /// Execute an artifact on staged buffers and return the tuple fields
+    /// as literals.
+    pub fn run(
+        &self,
+        meta: &ArtifactMeta,
+        args: &[&PjRtBuffer],
+    ) -> Result<Vec<Literal>> {
+        let exe = self.executable(meta)?;
+        let outs = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e}", meta.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", meta.name))?;
+        // Artifacts are lowered with return_tuple=True.
+        lit.to_tuple().map_err(|e| anyhow!("untupling {}: {e}", meta.name))
+    }
+
+    // ---------------------------------------------------------------------
+    // Typed wrappers for the three programs
+    // ---------------------------------------------------------------------
+
+    /// `gram(X, y) → (G0 (p_b×p_b), v (p_b), yy)` — padded outputs stay on
+    /// the bucket shape so they can feed the matching dual artifact.
+    pub fn run_gram(
+        &self,
+        meta: &ArtifactMeta,
+        x_pad: &PjRtBuffer,
+        y_pad: &PjRtBuffer,
+    ) -> Result<(Literal, Literal, Literal)> {
+        debug_assert_eq!(meta.kind, ArtifactKind::Gram);
+        let mut parts = self.run(meta, &[x_pad, y_pad])?;
+        if parts.len() != 3 {
+            return Err(anyhow!("gram returned {} outputs", parts.len()));
+        }
+        let yy = parts.pop().unwrap();
+        let v = parts.pop().unwrap();
+        let g0 = parts.pop().unwrap();
+        Ok((g0, v, yy))
+    }
+
+    /// `svm_primal(X, y, t, c, mask, w0) → (w (n_b), α (2p_b), iters)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_primal(
+        &self,
+        meta: &ArtifactMeta,
+        x_pad: &PjRtBuffer,
+        y_pad: &PjRtBuffer,
+        t: f64,
+        c: f64,
+        mask: &PjRtBuffer,
+        w0: &PjRtBuffer,
+    ) -> Result<(Vec<f64>, Vec<f64>, usize)> {
+        debug_assert_eq!(meta.kind, ArtifactKind::Primal);
+        let t_buf = self.stage_scalar(t)?;
+        let c_buf = self.stage_scalar(c)?;
+        let parts =
+            self.run(meta, &[x_pad, y_pad, &t_buf, &c_buf, mask, w0])?;
+        if parts.len() != 3 {
+            return Err(anyhow!("primal returned {} outputs", parts.len()));
+        }
+        let w = parts[0].to_vec::<f64>()?;
+        let alpha = parts[1].to_vec::<f64>()?;
+        let iters = parts[2].to_vec::<f64>()?[0] as usize;
+        Ok((w, alpha, iters))
+    }
+
+    /// `svm_dual(G0, v, yy, t, c, mask, α0) → (α (2p_b), iters)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_dual(
+        &self,
+        meta: &ArtifactMeta,
+        g0: &PjRtBuffer,
+        v: &PjRtBuffer,
+        yy: &PjRtBuffer,
+        t: f64,
+        c: f64,
+        mask: &PjRtBuffer,
+        alpha0: &PjRtBuffer,
+    ) -> Result<(Vec<f64>, usize)> {
+        debug_assert_eq!(meta.kind, ArtifactKind::Dual);
+        let t_buf = self.stage_scalar(t)?;
+        let c_buf = self.stage_scalar(c)?;
+        let parts =
+            self.run(meta, &[g0, v, yy, &t_buf, &c_buf, mask, alpha0])?;
+        if parts.len() != 2 {
+            return Err(anyhow!("dual returned {} outputs", parts.len()));
+        }
+        let alpha = parts[0].to_vec::<f64>()?;
+        let iters = parts[1].to_vec::<f64>()?[0] as usize;
+        Ok((alpha, iters))
+    }
+
+    /// Re-stage a literal as a device buffer (gram outputs → dual inputs).
+    pub fn stage_literal(&self, lit: &Literal, dims: &[usize]) -> Result<PjRtBuffer> {
+        let host = lit.to_vec::<f64>()?;
+        self.stage(&host, dims)
+    }
+}
+
+/// Pad a row-major (n × p) f64 matrix into bucket shape (n_b × p_b).
+pub fn pad_matrix(
+    data: &[f64],
+    n: usize,
+    p: usize,
+    n_b: usize,
+    p_b: usize,
+) -> Vec<f64> {
+    assert!(n_b >= n && p_b >= p);
+    let mut out = vec![0.0; n_b * p_b];
+    for r in 0..n {
+        out[r * p_b..r * p_b + p].copy_from_slice(&data[r * p..(r + 1) * p]);
+    }
+    out
+}
+
+/// Pad a length-n vector to n_b.
+pub fn pad_vec(data: &[f64], n_b: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n_b];
+    out[..data.len()].copy_from_slice(data);
+    out
+}
+
+/// Sample mask for a problem with p features padded to p_b: the 2p_b-long
+/// SVEN mask with 1s at [0, p) and [p_b, p_b + p).
+pub fn sample_mask(p: usize, p_b: usize) -> Vec<f64> {
+    let mut mask = vec![0.0; 2 * p_b];
+    for v in mask[..p].iter_mut() {
+        *v = 1.0;
+    }
+    for v in mask[p_b..p_b + p].iter_mut() {
+        *v = 1.0;
+    }
+    mask
+}
+
+/// Extract the snug 2p-long α from the padded 2p_b-long one.
+pub fn unpad_alpha(alpha_pad: &[f64], p: usize, p_b: usize) -> Vec<f64> {
+    assert_eq!(alpha_pad.len(), 2 * p_b);
+    let mut out = Vec::with_capacity(2 * p);
+    out.extend_from_slice(&alpha_pad[..p]);
+    out.extend_from_slice(&alpha_pad[p_b..p_b + p]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_matrix_layout() {
+        // [[1,2],[3,4]] → 3×4 bucket
+        let padded = pad_matrix(&[1.0, 2.0, 3.0, 4.0], 2, 2, 3, 4);
+        assert_eq!(
+            padded,
+            vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn sample_mask_layout() {
+        assert_eq!(sample_mask(2, 3), vec![1.0, 1.0, 0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn unpad_alpha_roundtrip() {
+        let padded = vec![1.0, 2.0, 0.0, 3.0, 4.0, 0.0]; // p=2, p_b=3
+        assert_eq!(unpad_alpha(&padded, 2, 3), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pad_vec_extends() {
+        assert_eq!(pad_vec(&[1.0, 2.0], 4), vec![1.0, 2.0, 0.0, 0.0]);
+    }
+}

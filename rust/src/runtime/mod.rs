@@ -1,0 +1,30 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`), compile
+//! them once per shape bucket on the PJRT CPU client, and expose them as a
+//! [`crate::solvers::sven::SvmBackend`] — the "SVEN (XLA)" backend that
+//! stands in for the paper's GPU offload.
+//!
+//! Flow (mirrors /opt/xla-example/load_hlo):
+//! ```text
+//! manifest.json → HloModuleProto::from_text_file → XlaComputation
+//!   → PjRtClient::cpu().compile (cached) → execute_b(staged buffers)
+//! ```
+//!
+//! Problems are padded to the smallest covering shape bucket; the
+//! validity mask makes padding exact (python/tests/test_padding.py and
+//! rust/tests/padding.rs prove this on both sides of the boundary).
+
+pub mod artifact;
+pub mod engine;
+pub mod json;
+pub mod xla_backend;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, Registry};
+pub use engine::XlaEngine;
+pub use xla_backend::XlaBackend;
+
+/// Default artifact directory, overridable with SVEN_ARTIFACTS.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("SVEN_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,207 @@
+//! [`XlaBackend`]: the SVEN SVM backend that executes the AOT artifacts —
+//! "SVEN (XLA)", the paper's "SVEN (GPU)" under our hardware substitution
+//! (DESIGN.md §3).
+//!
+//! Preparation stages the (padded) data set on the device once; in dual
+//! mode it additionally runs the gram artifact and keeps `G₀, v, yy`
+//! device-resident, so each of the 40 path points is a single executable
+//! launch with two scalars and two small vectors as fresh inputs — the
+//! structure that makes the paper's Figure-3 timings flat in t.
+
+use super::engine::{pad_matrix, pad_vec, sample_mask, unpad_alpha, XlaEngine};
+use crate::linalg::Mat;
+use crate::solvers::sven::{PreparedSvm, SvmBackend, SvmMode, SvmSolve, SvmWarm};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use xla::PjRtBuffer;
+
+/// SVEN backend over the PJRT engine. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct XlaBackend {
+    engine: Arc<XlaEngine>,
+}
+
+impl XlaBackend {
+    pub fn new(engine: Arc<XlaEngine>) -> Self {
+        XlaBackend { engine }
+    }
+
+    /// Load from the default artifact directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Ok(XlaBackend {
+            engine: Arc::new(XlaEngine::load(&super::default_artifact_dir())?),
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<XlaEngine> {
+        &self.engine
+    }
+}
+
+impl SvmBackend for XlaBackend {
+    fn name(&self) -> &str {
+        "xla-pjrt"
+    }
+
+    fn prepare(
+        &self,
+        x: &Mat,
+        y: &[f64],
+        mode: SvmMode,
+    ) -> Result<Box<dyn PreparedSvm>> {
+        let (n, p) = (x.rows(), x.cols());
+        match mode.resolve(n, p) {
+            SvmMode::Primal => {
+                let meta = self
+                    .engine
+                    .registry()
+                    .primal_bucket(n, p)
+                    .ok_or_else(|| {
+                        anyhow!("no primal bucket covers n={n}, p={p} — extend aot.py PRIMAL_BUCKETS")
+                    })?
+                    .clone();
+                let x_pad = pad_matrix(x.data(), n, p, meta.n, meta.p);
+                let x_buf = self.engine.stage(&x_pad, &[meta.n, meta.p])?;
+                let y_buf = self.engine.stage(&pad_vec(y, meta.n), &[meta.n])?;
+                let mask_buf =
+                    self.engine.stage(&sample_mask(p, meta.p), &[2 * meta.p])?;
+                Ok(Box::new(PreparedXlaPrimal {
+                    engine: self.engine.clone(),
+                    meta,
+                    n,
+                    p,
+                    x_buf,
+                    y_buf,
+                    mask_buf,
+                }))
+            }
+            SvmMode::Dual => {
+                let gram_meta = self
+                    .engine
+                    .registry()
+                    .gram_bucket(n, p)
+                    .ok_or_else(|| {
+                        anyhow!("no gram bucket covers n={n}, p={p} — extend aot.py GRAM_BUCKETS")
+                    })?
+                    .clone();
+                let dual_meta = self
+                    .engine
+                    .registry()
+                    .dual_bucket_exact(gram_meta.p)
+                    .ok_or_else(|| {
+                        anyhow!("no dual bucket at p={} for gram {}", gram_meta.p, gram_meta.name)
+                    })?
+                    .clone();
+                // Run gram once; keep G0/v/yy device-resident.
+                let x_pad = pad_matrix(x.data(), n, p, gram_meta.n, gram_meta.p);
+                let x_buf = self.engine.stage(&x_pad, &[gram_meta.n, gram_meta.p])?;
+                let y_buf =
+                    self.engine.stage(&pad_vec(y, gram_meta.n), &[gram_meta.n])?;
+                let (g0_lit, v_lit, yy_lit) =
+                    self.engine.run_gram(&gram_meta, &x_buf, &y_buf)?;
+                let pb = gram_meta.p;
+                let g0_buf = self.engine.stage_literal(&g0_lit, &[pb, pb])?;
+                let v_buf = self.engine.stage_literal(&v_lit, &[pb])?;
+                let yy_buf = self.engine.stage_literal(&yy_lit, &[])?;
+                let mask_buf = self.engine.stage(&sample_mask(p, pb), &[2 * pb])?;
+                Ok(Box::new(PreparedXlaDual {
+                    engine: self.engine.clone(),
+                    meta: dual_meta,
+                    p,
+                    p_b: pb,
+                    g0_buf,
+                    v_buf,
+                    yy_buf,
+                    mask_buf,
+                }))
+            }
+            SvmMode::Auto => unreachable!(),
+        }
+    }
+}
+
+/// Primal-mode prepared problem: padded X, y, mask staged on device.
+struct PreparedXlaPrimal {
+    engine: Arc<XlaEngine>,
+    meta: crate::runtime::ArtifactMeta,
+    n: usize,
+    p: usize,
+    x_buf: PjRtBuffer,
+    y_buf: PjRtBuffer,
+    mask_buf: PjRtBuffer,
+}
+
+impl PreparedSvm for PreparedXlaPrimal {
+    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> Result<SvmSolve> {
+        let w0_host = match warm.and_then(|w| w.w.as_ref()) {
+            Some(w) => pad_vec(w, self.meta.n),
+            None => vec![0.0; self.meta.n],
+        };
+        let w0 = self.engine.stage(&w0_host, &[self.meta.n])?;
+        let (w_pad, alpha_pad, iters) = self.engine.run_primal(
+            &self.meta,
+            &self.x_buf,
+            &self.y_buf,
+            t,
+            c,
+            &self.mask_buf,
+            &w0,
+        )?;
+        Ok(SvmSolve {
+            alpha: unpad_alpha(&alpha_pad, self.p, self.meta.p),
+            w: Some(w_pad[..self.n].to_vec()),
+            iters,
+        })
+    }
+
+    fn mode(&self) -> SvmMode {
+        SvmMode::Primal
+    }
+}
+
+/// Dual-mode prepared problem: gram pieces staged on device.
+struct PreparedXlaDual {
+    engine: Arc<XlaEngine>,
+    meta: crate::runtime::ArtifactMeta,
+    p: usize,
+    p_b: usize,
+    g0_buf: PjRtBuffer,
+    v_buf: PjRtBuffer,
+    yy_buf: PjRtBuffer,
+    mask_buf: PjRtBuffer,
+}
+
+impl PreparedSvm for PreparedXlaDual {
+    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> Result<SvmSolve> {
+        let alpha0_host = match warm.and_then(|w| w.alpha.as_ref()) {
+            Some(a) => {
+                // re-pad the snug 2p warm start into bucket layout
+                let mut padded = vec![0.0; 2 * self.p_b];
+                padded[..self.p].copy_from_slice(&a[..self.p]);
+                padded[self.p_b..self.p_b + self.p].copy_from_slice(&a[self.p..]);
+                padded
+            }
+            None => vec![0.0; 2 * self.p_b],
+        };
+        let alpha0 = self.engine.stage(&alpha0_host, &[2 * self.p_b])?;
+        let (alpha_pad, iters) = self.engine.run_dual(
+            &self.meta,
+            &self.g0_buf,
+            &self.v_buf,
+            &self.yy_buf,
+            t,
+            c,
+            &self.mask_buf,
+            &alpha0,
+        )?;
+        Ok(SvmSolve {
+            alpha: unpad_alpha(&alpha_pad, self.p, self.p_b),
+            w: None,
+            iters,
+        })
+    }
+
+    fn mode(&self) -> SvmMode {
+        SvmMode::Dual
+    }
+}

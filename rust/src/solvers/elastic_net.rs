@@ -1,0 +1,249 @@
+//! Elastic Net problem/solution types, objectives and optimality checks.
+//!
+//! Two equivalent parameterizations appear in the paper:
+//!
+//! - **Constrained** (eq. 1, what SVEN solves):
+//!   `min ‖Xβ − y‖² + λ₂‖β‖²  s.t. |β|₁ ≤ t`
+//! - **Penalized** (what glmnet solves):
+//!   `min 1/(2n)·‖Xβ − y‖² + λ·(κ·|β|₁ + (1−κ)/2·‖β‖²)`
+//!
+//! The paper's evaluation protocol converts between them: solve the
+//! penalized path with glmnet, then feed `t = |β*|₁` and the matching `λ₂`
+//! into SVEN. [`EnProblem`] carries the constrained form; conversions live
+//! here.
+
+use crate::linalg::{vecops, Mat};
+
+/// A (constrained-form) Elastic Net problem instance.
+///
+/// Convention follows the paper: `x` is `n × p` (samples × features), `y`
+/// is length `n`, assumed centered; features assumed normalized (see
+/// [`crate::data::standardize`]).
+#[derive(Clone, Debug)]
+pub struct EnProblem {
+    /// Design matrix, n × p.
+    pub x: Mat,
+    /// Centered response, length n.
+    pub y: Vec<f64>,
+    /// L1 budget t > 0.
+    pub t: f64,
+    /// L2 regularization λ₂ ≥ 0 (0 ⇒ Lasso).
+    pub lambda2: f64,
+}
+
+impl EnProblem {
+    pub fn new(x: Mat, y: Vec<f64>, t: f64, lambda2: f64) -> Self {
+        assert_eq!(x.rows(), y.len(), "X rows must match y length");
+        assert!(t > 0.0, "L1 budget must be positive");
+        assert!(lambda2 >= 0.0, "lambda2 must be non-negative");
+        EnProblem { x, y, t, lambda2 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Constrained-form objective `‖Xβ − y‖² + λ₂‖β‖²`.
+    pub fn objective(&self, beta: &[f64]) -> f64 {
+        assert_eq!(beta.len(), self.p());
+        let mut r = self.x.matvec(beta);
+        vecops::axpy(-1.0, &self.y, &mut r);
+        vecops::norm2_sq(&r) + self.lambda2 * vecops::norm2_sq(beta)
+    }
+
+    /// Gradient of the smooth part: `2Xᵀ(Xβ − y) + 2λ₂β`.
+    pub fn gradient(&self, beta: &[f64]) -> Vec<f64> {
+        let mut r = self.x.matvec(beta);
+        vecops::axpy(-1.0, &self.y, &mut r);
+        let mut g = self.x.matvec_t(&r);
+        vecops::scale(2.0, &mut g);
+        vecops::axpy(2.0 * self.lambda2, beta, &mut g);
+        g
+    }
+
+    /// KKT residual of the constrained problem at `beta` (assuming the L1
+    /// constraint is active, as the paper does for non-degenerate `t`):
+    /// there must exist ν ≥ 0 with, for each i,
+    ///   `g_i + ν·sign(β_i) = 0`   if β_i ≠ 0,
+    ///   `|g_i| ≤ ν`               if β_i = 0.
+    /// We estimate ν from the active coordinates and return the maximum
+    /// violation (0 = optimal). Also checks `|β|₁ ≤ t (1+tol)`.
+    pub fn kkt_residual(&self, beta: &[f64]) -> f64 {
+        let g = self.gradient(beta);
+        let active: Vec<usize> =
+            (0..beta.len()).filter(|&i| beta[i].abs() > 1e-9).collect();
+        let budget_violation = (vecops::norm1(beta) - self.t).max(0.0) / self.t;
+        if active.is_empty() {
+            return budget_violation;
+        }
+        // ν̂ = mean over active of −g_i·sign(β_i)
+        let nu: f64 = active
+            .iter()
+            .map(|&i| -g[i] * beta[i].signum())
+            .sum::<f64>()
+            / active.len() as f64;
+        let nu = nu.max(0.0);
+        let mut viol: f64 = budget_violation;
+        let gscale = 1.0f64.max(vecops::norm_inf(&g));
+        for i in 0..beta.len() {
+            if beta[i].abs() > 1e-9 {
+                viol = viol.max((g[i] + nu * beta[i].signum()).abs() / gscale);
+            } else {
+                viol = viol.max((g[i].abs() - nu).max(0.0) / gscale);
+            }
+        }
+        viol
+    }
+}
+
+/// Which algorithm produced a solution (for reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EnSolverKind {
+    Glmnet,
+    Shotgun,
+    L1Ls,
+    SvenCpu,
+    SvenXla,
+}
+
+impl EnSolverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnSolverKind::Glmnet => "glmnet",
+            EnSolverKind::Shotgun => "shotgun",
+            EnSolverKind::L1Ls => "l1_ls",
+            EnSolverKind::SvenCpu => "sven_cpu",
+            EnSolverKind::SvenXla => "sven_xla",
+        }
+    }
+}
+
+/// Degenerate outcomes the reduction can detect (paper footnote 1 & §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Degenerate {
+    /// SVM selected no support vectors (|α|₁ = 0) — β = 0 returned.
+    NoSupportVectors,
+    /// L1 budget so large the constraint is slack (ridge regime).
+    SlackBudget,
+}
+
+/// Solution of an Elastic Net solve.
+#[derive(Clone, Debug)]
+pub struct EnSolution {
+    pub beta: Vec<f64>,
+    pub solver: EnSolverKind,
+    /// Objective value at `beta` (constrained form).
+    pub objective: f64,
+    /// Iterations (solver-specific meaning: CD epochs / Newton steps / IPM iters).
+    pub iterations: usize,
+    /// Wall-clock seconds of the solve proper (excludes data generation).
+    pub seconds: f64,
+    /// Degeneracy flag, if the reduction hit one.
+    pub degenerate: Option<Degenerate>,
+}
+
+impl EnSolution {
+    /// Count of selected features.
+    pub fn nnz(&self) -> usize {
+        vecops::nnz(&self.beta, 1e-8)
+    }
+}
+
+/// Convert a penalized-form solution to the constrained-form budget:
+/// `t = |β*|₁` (the paper's protocol for building the evaluation grid).
+pub fn budget_from_beta(beta: &[f64]) -> f64 {
+    vecops::norm1(beta)
+}
+
+/// Penalized-form Elastic Net objective used by the CD baselines:
+/// `1/(2n)·‖Xβ − y‖² + λ·(κ|β|₁ + (1−κ)/2·‖β‖²)`.
+pub fn penalized_objective(x: &Mat, y: &[f64], beta: &[f64], lambda: f64, kappa: f64) -> f64 {
+    let n = x.rows() as f64;
+    let mut r = x.matvec(beta);
+    vecops::axpy(-1.0, y, &mut r);
+    vecops::norm2_sq(&r) / (2.0 * n)
+        + lambda * (kappa * vecops::norm1(beta) + 0.5 * (1.0 - kappa) * vecops::norm2_sq(beta))
+}
+
+/// Map the penalized parameters (λ, κ) at solution β* to the constrained
+/// parameters (t, λ₂) the SVEN form needs.
+///
+/// Matching gradients of the two Lagrangians on the active set gives
+/// `λ₂ = n·λ·(1−κ)` (the 1/(2n) loss scaling times the 2· in the
+/// constrained loss), and `t = |β*|₁` by the paper's protocol.
+pub fn penalized_to_constrained(beta_star: &[f64], lambda: f64, kappa: f64, n: usize) -> (f64, f64) {
+    let t = budget_from_beta(beta_star);
+    let lambda2 = n as f64 * lambda * (1.0 - kappa);
+    (t, lambda2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny_problem() -> EnProblem {
+        let mut rng = Rng::seed_from(51);
+        let x = Mat::from_fn(10, 4, |_, _| rng.normal());
+        let y: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        EnProblem::new(x, y, 1.0, 0.5)
+    }
+
+    #[test]
+    fn objective_at_zero_is_y_norm() {
+        let p = tiny_problem();
+        let obj = p.objective(&vec![0.0; 4]);
+        assert!((obj - vecops::norm2_sq(&p.y)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = tiny_problem();
+        let beta = vec![0.1, -0.2, 0.3, 0.05];
+        let g = p.gradient(&beta);
+        let eps = 1e-6;
+        for i in 0..4 {
+            let mut bp = beta.clone();
+            let mut bm = beta.clone();
+            bp[i] += eps;
+            bm[i] -= eps;
+            let fd = (p.objective(&bp) - p.objective(&bm)) / (2.0 * eps);
+            assert!((g[i] - fd).abs() < 1e-4, "i={i}: {} vs {}", g[i], fd);
+        }
+    }
+
+    #[test]
+    fn kkt_zero_solution_with_huge_gradient_violates() {
+        let p = tiny_problem();
+        // β = 0 with y ≠ 0 has nonzero gradient ⇒ some positive violation
+        // relative to ν = 0 (no active features).
+        let v = p.kkt_residual(&vec![0.0; 4]);
+        assert!(v >= 0.0);
+    }
+
+    #[test]
+    fn budget_violation_detected() {
+        let p = tiny_problem(); // t = 1
+        let beta = vec![2.0, 0.0, 0.0, 0.0]; // |β|₁ = 2 > t
+        assert!(p.kkt_residual(&beta) >= 1.0 - 1e-12);
+    }
+
+    #[test]
+    fn penalized_to_constrained_mapping() {
+        let beta = vec![0.5, -0.25, 0.0];
+        let (t, l2) = penalized_to_constrained(&beta, 0.1, 0.5, 20);
+        assert!((t - 0.75).abs() < 1e-12);
+        assert!((l2 - 20.0 * 0.1 * 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "budget")]
+    fn rejects_nonpositive_budget() {
+        let p = tiny_problem();
+        EnProblem::new(p.x, p.y, 0.0, 0.1);
+    }
+}

@@ -1,0 +1,20 @@
+//! glmnet-style Elastic Net: cyclic coordinate descent with active sets,
+//! naive *and* covariance update rules, and a warm-started λ path —
+//! the algorithmic content of Friedman, Hastie & Tibshirani (2010), which
+//! the paper uses as its strongest (single-core) baseline.
+//!
+//! Penalized form solved here (glmnet's own convention):
+//!
+//! ```text
+//! min_β 1/(2n)·‖Xβ − y‖² + λ·( κ·|β|₁ + (1−κ)/2·‖β‖² )
+//! ```
+//!
+//! For standardized columns (‖x_j‖² = n) the coordinate update is closed
+//! form: `β_j ← S(z_j, λκ) / (1 + λ(1−κ))` with
+//! `z_j = 1/n·⟨x_j, r⟩ + β_j` and `S` the soft-threshold.
+
+pub mod cd;
+pub mod path;
+
+pub use cd::{solve_penalized, CdMode, GlmnetConfig, GlmnetResult};
+pub use path::{compute_path, PathPoint, PathSettings};

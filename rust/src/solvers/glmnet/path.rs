@@ -1,0 +1,165 @@
+//! Warm-started regularization path — glmnet's pathwise strategy and the
+//! source of the paper's evaluation grid (§5 "Regularization path"): solve
+//! a geometric λ sequence, record `t = |β*|₁` and `λ₂ = n·λ·(1−κ)` at each
+//! point, and sub-sample settings with distinct support sizes.
+
+use super::cd::{lambda_max, solve_penalized, GlmnetConfig, GlmnetResult};
+use crate::linalg::{vecops, Mat};
+use crate::solvers::elastic_net::penalized_to_constrained;
+
+/// One solved point on the path, carrying both parameterizations.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    /// Penalized-form λ (glmnet scale).
+    pub lambda: f64,
+    /// L1 fraction κ.
+    pub kappa: f64,
+    /// Constrained-form L1 budget t = |β*|₁.
+    pub t: f64,
+    /// Constrained-form L2 coefficient λ₂ = n·λ·(1−κ).
+    pub lambda2: f64,
+    pub beta: Vec<f64>,
+    pub nnz: usize,
+    pub epochs: usize,
+}
+
+/// Path construction settings.
+#[derive(Clone, Debug)]
+pub struct PathSettings {
+    pub kappa: f64,
+    /// Number of λ values on the full path.
+    pub num_lambda: usize,
+    /// λ_min = ratio · λ_max.
+    pub lambda_min_ratio: f64,
+    pub cd: GlmnetConfig,
+}
+
+impl Default for PathSettings {
+    fn default() -> Self {
+        PathSettings {
+            kappa: 0.5,
+            num_lambda: 100,
+            lambda_min_ratio: 1e-3,
+            // The path defines the evaluation grid (t = |β*|₁); a loose CD
+            // tolerance here would be misread downstream as SVEN error, so
+            // reference paths are solved tighter than the timed runs.
+            cd: GlmnetConfig { tol: 1e-13, ..GlmnetConfig::default() },
+        }
+    }
+}
+
+/// Solve the full warm-started path (dense λ grid, decreasing).
+pub fn compute_path(x: &Mat, y: &[f64], settings: &PathSettings) -> Vec<PathPoint> {
+    let n = x.rows();
+    let mut cfg = settings.cd.clone();
+    cfg.kappa = settings.kappa;
+    let lmax = lambda_max(x, y, settings.kappa);
+    let lmin = lmax * settings.lambda_min_ratio;
+    let k = settings.num_lambda.max(2);
+    let step = (lmin / lmax).powf(1.0 / (k - 1) as f64);
+
+    let mut points = Vec::with_capacity(k);
+    let mut warm: Option<Vec<f64>> = None;
+    let mut lambda = lmax;
+    for _ in 0..k {
+        let GlmnetResult { beta, epochs, .. } =
+            solve_penalized(x, y, lambda, &cfg, warm.as_deref());
+        let (t, lambda2) = penalized_to_constrained(&beta, lambda, settings.kappa, n);
+        points.push(PathPoint {
+            lambda,
+            kappa: settings.kappa,
+            t,
+            lambda2,
+            nnz: vecops::nnz(&beta, 1e-10),
+            epochs,
+            beta: beta.clone(),
+        });
+        warm = Some(beta);
+        lambda *= step;
+    }
+    points
+}
+
+/// The paper's protocol: from a dense path, pick `count` evenly spaced
+/// points *with distinct support sizes* (and strictly positive budgets) to
+/// form the evaluation grid.
+pub fn subsample_distinct(points: &[PathPoint], count: usize) -> Vec<PathPoint> {
+    // Keep the first point per distinct nnz > 0.
+    let mut distinct: Vec<&PathPoint> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for pt in points {
+        if pt.nnz == 0 || pt.t <= 0.0 {
+            continue;
+        }
+        if seen.insert(pt.nnz) {
+            distinct.push(pt);
+        }
+    }
+    if distinct.is_empty() {
+        return Vec::new();
+    }
+    let count = count.min(distinct.len());
+    (0..count)
+        .map(|i| {
+            let idx = i * (distinct.len() - 1) / count.max(1).max(count - 1).max(1);
+            distinct[idx.min(distinct.len() - 1)].clone()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth_regression, SynthSpec};
+
+    fn data() -> (Mat, Vec<f64>) {
+        let d = synth_regression(&SynthSpec { n: 60, p: 30, support: 8, seed: 91, ..Default::default() });
+        (d.x, d.y)
+    }
+
+    #[test]
+    fn path_is_monotone_in_support() {
+        let (x, y) = data();
+        let pts = compute_path(&x, &y, &PathSettings { num_lambda: 30, ..Default::default() });
+        assert_eq!(pts.len(), 30);
+        // nnz grows (weakly) as λ decreases along the path head.
+        assert_eq!(pts[0].nnz, 0, "at λ_max everything is zero");
+        assert!(pts.last().unwrap().nnz > 0);
+        // budgets t grow as λ shrinks
+        let t_first_active = pts.iter().find(|p| p.nnz > 0).unwrap().t;
+        assert!(pts.last().unwrap().t > t_first_active);
+    }
+
+    #[test]
+    fn lambda_grid_is_geometric() {
+        let (x, y) = data();
+        let pts = compute_path(&x, &y, &PathSettings { num_lambda: 10, ..Default::default() });
+        let r0 = pts[1].lambda / pts[0].lambda;
+        for w in pts.windows(2) {
+            assert!(((w[1].lambda / w[0].lambda) - r0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn subsample_distinct_supports() {
+        let (x, y) = data();
+        let pts = compute_path(&x, &y, &PathSettings { num_lambda: 60, ..Default::default() });
+        let grid = subsample_distinct(&pts, 10);
+        assert!(!grid.is_empty() && grid.len() <= 10);
+        let nnzs: Vec<usize> = grid.iter().map(|p| p.nnz).collect();
+        let mut dedup = nnzs.clone();
+        dedup.dedup();
+        assert_eq!(nnzs, dedup, "supports must be distinct: {nnzs:?}");
+        assert!(grid.iter().all(|p| p.t > 0.0));
+    }
+
+    #[test]
+    fn constrained_params_consistent() {
+        let (x, y) = data();
+        let pts = compute_path(&x, &y, &PathSettings { num_lambda: 20, ..Default::default() });
+        for pt in pts.iter().filter(|p| p.nnz > 0) {
+            assert!((pt.t - vecops::norm1(&pt.beta)).abs() < 1e-12);
+            assert!((pt.lambda2 - 60.0 * pt.lambda * 0.5).abs() < 1e-12);
+        }
+    }
+}

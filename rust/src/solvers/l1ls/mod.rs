@@ -1,0 +1,280 @@
+//! L1_LS: log-barrier interior-point method for L1-regularized least
+//! squares (Kim, Koh, Lustig, Boyd & Gorinevsky, 2007) — the paper's
+//! third baseline (Lasso only, like the original MATLAB package).
+//!
+//! Solves `min ‖Xβ − y‖² + λ̄·|β|₁` through the bound reformulation
+//! `min ‖Xβ − y‖² + λ̄·Σu  s.t. −u ≤ β ≤ u`, with a log barrier on the
+//! bounds and truncated-Newton steps computed by preconditioned conjugate
+//! gradients (the paper's PCG with the diagonal preconditioner).
+//!
+//! To interoperate with the glmnet-convention benches, [`solve_l1ls`]
+//! takes the penalized-form λ and converts internally (λ̄ = 2nλκ).
+
+use crate::linalg::{cg_solve, vecops, CgOptions, LinOp, Mat};
+
+/// Configuration (penalized-Lasso convention; κ fixed to 1).
+#[derive(Clone, Debug)]
+pub struct L1LsConfig {
+    /// Relative duality-gap target.
+    pub tol: f64,
+    pub max_newton: usize,
+    /// Barrier update factor μ.
+    pub mu: f64,
+    pub cg: CgOptions,
+}
+
+impl Default for L1LsConfig {
+    fn default() -> Self {
+        L1LsConfig {
+            tol: 1e-8,
+            max_newton: 400,
+            mu: 2.0,
+            cg: CgOptions { tol: 1e-3, max_iter: 5000 },
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct L1LsResult {
+    pub beta: Vec<f64>,
+    pub newton_iters: usize,
+    pub duality_gap: f64,
+    pub converged: bool,
+}
+
+/// Schur-complement reduced Hessian `2t̄·XᵀX + D` as a CG operator,
+/// applied via two X matvecs (never materializing XᵀX) — the structure
+/// the Kim et al. PCG exploits for large sparse problems.
+struct ReducedHessian<'a> {
+    x: &'a Mat,
+    two_tbar: f64,
+    d: Vec<f64>,
+    /// diag(2t̄·XᵀX) + d — Jacobi preconditioner
+    precond_diag: Vec<f64>,
+    scratch_n: std::cell::RefCell<Vec<f64>>,
+}
+
+impl LinOp for ReducedHessian<'_> {
+    fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn apply(&self, v: &[f64], out: &mut [f64]) {
+        let mut xn = self.scratch_n.borrow_mut();
+        self.x.matvec_into(v, &mut xn);
+        self.x.matvec_t_into(&xn, out);
+        for i in 0..out.len() {
+            out[i] = self.two_tbar * out[i] + self.d[i] * v[i];
+        }
+    }
+
+    fn precond(&self, r: &[f64], out: &mut [f64]) -> bool {
+        for i in 0..r.len() {
+            out[i] = r[i] / self.precond_diag[i];
+        }
+        true
+    }
+}
+
+/// Solve the penalized Lasso `1/(2n)‖Xβ−y‖² + λ|β|₁` by the Kim et al.
+/// primal interior-point method.
+pub fn solve_l1ls(x: &Mat, y: &[f64], lambda: f64, cfg: &L1LsConfig) -> L1LsResult {
+    let (n, p) = (x.rows(), x.cols());
+    // Kim et al. objective scale: ‖Xβ−y‖² + λ̄|β|₁ == 2n × glmnet form.
+    let lam = 2.0 * n as f64 * lambda;
+
+    let mut beta = vec![0.0; p];
+    let mut u = vec![1.0; p];
+    let mut tbar = 1.0f64.max(1.0 / lam);
+
+    let col_sq: Vec<f64> = {
+        let xt = x.transpose();
+        (0..p).map(|j| vecops::norm2_sq(xt.row(j))).collect()
+    };
+
+    let mut newton_iters = 0usize;
+    let mut gap = f64::INFINITY;
+    let mut converged = false;
+
+    let mut r = vec![0.0; n]; // residual Xβ − y
+    while newton_iters < cfg.max_newton {
+        // residual and primal objective
+        x.matvec_into(&beta, &mut r);
+        vecops::axpy(-1.0, y, &mut r);
+        let primal = vecops::norm2_sq(&r) + lam * vecops::norm1(&beta);
+
+        // Dual feasible point ν = 2r·s with s chosen so ‖Xᵀν‖∞ ≤ λ̄
+        // (Kim et al. eq. 5): G(ν) = −¼‖ν‖² − νᵀy.
+        let xtr = x.matvec_t(&r);
+        let inf = vecops::norm_inf(&xtr).max(1e-300);
+        let s = (lam / (2.0 * inf)).min(1.0);
+        let nu: Vec<f64> = r.iter().map(|v| 2.0 * s * v).collect();
+        let g_dual = -0.25 * vecops::norm2_sq(&nu) - vecops::dot(&nu, y);
+        gap = primal - g_dual;
+        let rel_gap = gap / g_dual.abs().max(1e-300);
+        if rel_gap <= cfg.tol || gap <= cfg.tol {
+            converged = true;
+            break;
+        }
+
+        // Barrier parameter update (Kim et al. §III-B):
+        // t̄ ← max{ μ·min(2p/η, t̄), t̄ }.
+        tbar = (cfg.mu * (2.0 * p as f64 / gap).min(tbar)).max(tbar);
+
+        // Newton system on (β, u) with u eliminated by Schur complement.
+        let f1: Vec<f64> = (0..p).map(|i| u[i] + beta[i]).collect();
+        let f2: Vec<f64> = (0..p).map(|i| u[i] - beta[i]).collect();
+        let grad_beta: Vec<f64> = {
+            // t̄·(2Xᵀr) − (1/f1 − 1/f2)
+            (0..p).map(|i| tbar * 2.0 * xtr[i] - (1.0 / f1[i] - 1.0 / f2[i])).collect()
+        };
+        let grad_u: Vec<f64> =
+            (0..p).map(|i| tbar * lam - (1.0 / f1[i] + 1.0 / f2[i])).collect();
+
+        let d1: Vec<f64> =
+            (0..p).map(|i| 1.0 / (f1[i] * f1[i]) + 1.0 / (f2[i] * f2[i])).collect();
+        let d2: Vec<f64> =
+            (0..p).map(|i| 1.0 / (f1[i] * f1[i]) - 1.0 / (f2[i] * f2[i])).collect();
+        // Reduced diagonal: D1 − D2²/D1
+        let dred: Vec<f64> = (0..p).map(|i| d1[i] - d2[i] * d2[i] / d1[i]).collect();
+        let rhs: Vec<f64> =
+            (0..p).map(|i| -(grad_beta[i] - d2[i] / d1[i] * grad_u[i])).collect();
+
+        let two_tbar = 2.0 * tbar;
+        let op = ReducedHessian {
+            x,
+            two_tbar,
+            precond_diag: (0..p)
+                .map(|i| (two_tbar * col_sq[i] + dred[i]).max(1e-300))
+                .collect(),
+            d: dred,
+            scratch_n: std::cell::RefCell::new(vec![0.0; n]),
+        };
+        let mut dbeta = vec![0.0; p];
+        // Truncated Newton: CG accuracy tightens as the gap closes
+        // (Kim et al.'s adaptive rule).
+        let cg_opts = CgOptions {
+            tol: (0.1 * rel_gap).clamp(cfg.cg.tol.min(1e-10), 1e-2),
+            max_iter: cfg.cg.max_iter,
+        };
+        cg_solve(&op, &rhs, &mut dbeta, &cg_opts);
+        let du: Vec<f64> =
+            (0..p).map(|i| -(grad_u[i] + d2[i] * dbeta[i]) / d1[i]).collect();
+
+        // Backtracking line search keeping u ± β strictly positive and
+        // decreasing the barrier objective.
+        let phi = |beta_t: &[f64], u_t: &[f64]| -> f64 {
+            let mut rt = x.matvec(beta_t);
+            vecops::axpy(-1.0, y, &mut rt);
+            let mut val = tbar * (vecops::norm2_sq(&rt) + lam * u_t.iter().sum::<f64>());
+            for i in 0..p {
+                let a = u_t[i] + beta_t[i];
+                let b = u_t[i] - beta_t[i];
+                if a <= 0.0 || b <= 0.0 {
+                    return f64::INFINITY;
+                }
+                val -= a.ln() + b.ln();
+            }
+            val
+        };
+        let phi0 = phi(&beta, &u);
+        let gdot = vecops::dot(&grad_beta, &dbeta) + vecops::dot(&grad_u, &du);
+        let mut step = 1.0;
+        for _ in 0..50 {
+            let bt: Vec<f64> = (0..p).map(|i| beta[i] + step * dbeta[i]).collect();
+            let ut: Vec<f64> = (0..p).map(|i| u[i] + step * du[i]).collect();
+            if phi(&bt, &ut) <= phi0 + 0.01 * step * gdot {
+                beta = bt;
+                u = ut;
+                break;
+            }
+            step *= 0.5;
+        }
+        newton_iters += 1;
+    }
+
+    L1LsResult { beta, newton_iters, duality_gap: gap, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth_regression, SynthSpec};
+    use crate::solvers::glmnet::{self, GlmnetConfig};
+
+    fn data(n: usize, p: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let d = synth_regression(&SynthSpec { n, p, support: 5, seed, ..Default::default() });
+        (d.x, d.y)
+    }
+
+    #[test]
+    fn matches_glmnet_lasso() {
+        let (x, y) = data(50, 20, 111);
+        let lambda = glmnet::cd::lambda_max(&x, &y, 1.0) * 0.3;
+        let g = glmnet::solve_penalized(
+            &x,
+            &y,
+            lambda,
+            &GlmnetConfig { kappa: 1.0, tol: 1e-12, ..Default::default() },
+            None,
+        );
+        let l = solve_l1ls(&x, &y, lambda, &L1LsConfig { tol: 1e-10, ..Default::default() });
+        assert!(l.converged, "gap {}", l.duality_gap);
+        for j in 0..20 {
+            assert!(
+                (g.beta[j] - l.beta[j]).abs() < 1e-4,
+                "j={j}: {} vs {}",
+                g.beta[j],
+                l.beta[j]
+            );
+        }
+    }
+
+    #[test]
+    fn high_lambda_gives_zero() {
+        let (x, y) = data(30, 12, 112);
+        let lambda = glmnet::cd::lambda_max(&x, &y, 1.0) * 1.2;
+        let l = solve_l1ls(&x, &y, lambda, &L1LsConfig::default());
+        assert!(vecops::norm_inf(&l.beta) < 1e-5, "beta {:?}", l.beta);
+    }
+
+    #[test]
+    fn wide_problem_p_gg_n() {
+        let (x, y) = data(25, 120, 113);
+        let lambda = glmnet::cd::lambda_max(&x, &y, 1.0) * 0.5;
+        let g = glmnet::solve_penalized(
+            &x,
+            &y,
+            lambda,
+            &GlmnetConfig { kappa: 1.0, tol: 1e-12, ..Default::default() },
+            None,
+        );
+        let l = solve_l1ls(&x, &y, lambda, &L1LsConfig { tol: 1e-10, ..Default::default() });
+        for j in 0..120 {
+            assert!((g.beta[j] - l.beta[j]).abs() < 1e-3, "j={j}");
+        }
+    }
+
+    #[test]
+    fn gap_is_certificate() {
+        // The duality gap bounds suboptimality: objective(l1ls) −
+        // objective(glmnet, tight tol) ≤ gap.
+        let (x, y) = data(40, 16, 114);
+        let lambda = glmnet::cd::lambda_max(&x, &y, 1.0) * 0.25;
+        let l = solve_l1ls(&x, &y, lambda, &L1LsConfig { tol: 1e-6, ..Default::default() });
+        let g = glmnet::solve_penalized(
+            &x,
+            &y,
+            lambda,
+            &GlmnetConfig { kappa: 1.0, tol: 1e-14, ..Default::default() },
+            None,
+        );
+        let lam_bar = 2.0 * 40.0 * lambda;
+        let obj = |b: &[f64]| {
+            let mut r = x.matvec(b);
+            vecops::axpy(-1.0, &y, &mut r);
+            vecops::norm2_sq(&r) + lam_bar * vecops::norm1(b)
+        };
+        assert!(obj(&l.beta) - obj(&g.beta) <= l.duality_gap + 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Solvers: the paper's SVEN reduction plus every baseline it is
+//! evaluated against, each built from scratch.
+//!
+//! | module | paper comparator | algorithm |
+//! |---|---|---|
+//! | [`glmnet`] | glmnet (Friedman et al. 2010) | coordinate descent, covariance updates, active sets, warm-started path |
+//! | [`shotgun`] | Shotgun (Bradley et al. 2011) | parallel stochastic coordinate descent (Lasso) |
+//! | [`l1ls`] | L1_LS (Kim et al. 2007) | log-barrier interior point + PCG (Lasso) |
+//! | [`svm`] | Chapelle 2007 primal/dual SVM | squared-hinge SVM Newton-CG, no bias — the reduction target |
+//! | [`sven`] | the paper's contribution | Elastic Net → SVM reduction, backend-pluggable |
+
+pub mod elastic_net;
+pub mod glmnet;
+pub mod l1ls;
+pub mod shotgun;
+pub mod svm;
+pub mod sven;

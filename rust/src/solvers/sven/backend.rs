@@ -1,0 +1,265 @@
+//! Pluggable SVM backends for SVEN.
+//!
+//! [`RustBackend`] solves in-process with the Newton solvers of
+//! [`crate::solvers::svm`] — the "SVEN (CPU)" line of the paper's figures.
+//! The XLA backend (see [`crate::runtime`]) implements the same trait over
+//! AOT-compiled artifacts — "SVEN (XLA)", the stand-in for "SVEN (GPU)".
+
+use crate::linalg::{vecops, Mat};
+use crate::solvers::svm::{
+    dual_newton, primal_newton, samples::reduction_gram, samples::reduction_labels,
+    DualOptions, PrimalOptions, ReducedSamples, SampleSet,
+};
+
+/// Primal/dual selection. `Auto` applies the paper's rule: primal when
+/// 2p > n (weight dimension n is the small side), dual otherwise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SvmMode {
+    Auto,
+    Primal,
+    Dual,
+}
+
+impl SvmMode {
+    /// Resolve `Auto` for a given problem shape.
+    pub fn resolve(self, n: usize, p: usize) -> SvmMode {
+        match self {
+            SvmMode::Auto => {
+                if 2 * p > n {
+                    SvmMode::Primal
+                } else {
+                    SvmMode::Dual
+                }
+            }
+            m => m,
+        }
+    }
+}
+
+/// Warm-start state carried between path points.
+#[derive(Clone, Debug, Default)]
+pub struct SvmWarm {
+    /// Primal weights (length n).
+    pub w: Option<Vec<f64>>,
+    /// Dual variables (length 2p).
+    pub alpha: Option<Vec<f64>>,
+}
+
+/// Output of one SVM solve in reduction space.
+#[derive(Clone, Debug)]
+pub struct SvmSolve {
+    /// Dual variables, length 2p.
+    pub alpha: Vec<f64>,
+    /// Primal weights if the backend produced them (length n).
+    pub w: Option<Vec<f64>>,
+    /// Newton iterations / pivots.
+    pub iters: usize,
+}
+
+/// A data set prepared for repeated (t, C) solves.
+///
+/// Deliberately not `Send`: the XLA backend holds PJRT handles (Rc-based
+/// in the xla crate), so preparations are thread-local. The coordinator
+/// gives each worker thread its own backend + preparation.
+pub trait PreparedSvm {
+    /// Solve the reduction SVM at budget `t` and regularization `C`.
+    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> anyhow::Result<SvmSolve>;
+    /// Which formulation this preparation uses.
+    fn mode(&self) -> SvmMode;
+}
+
+/// An SVM solving engine SVEN can drive (thread-local; see
+/// [`PreparedSvm`] for the threading contract).
+pub trait SvmBackend {
+    fn name(&self) -> &str;
+    /// Prepare `x` (n × p) / `y` for repeated solves. The preparation owns
+    /// its data and caches (gram blocks, staged device buffers), so it can
+    /// outlive the borrow — workers cache one per data set.
+    fn prepare(
+        &self,
+        x: &Mat,
+        y: &[f64],
+        mode: SvmMode,
+    ) -> anyhow::Result<Box<dyn PreparedSvm>>;
+}
+
+/// In-process Newton backend ("SVEN (CPU)").
+#[derive(Clone, Debug)]
+pub struct RustBackend {
+    pub primal: PrimalOptions,
+    pub dual: DualOptions,
+}
+
+impl Default for RustBackend {
+    fn default() -> Self {
+        RustBackend { primal: PrimalOptions::default(), dual: DualOptions::default() }
+    }
+}
+
+impl SvmBackend for RustBackend {
+    fn name(&self) -> &str {
+        "rust-newton"
+    }
+
+    fn prepare(
+        &self,
+        x: &Mat,
+        y: &[f64],
+        mode: SvmMode,
+    ) -> anyhow::Result<Box<dyn PreparedSvm>> {
+        let (n, p) = (x.rows(), x.cols());
+        match mode.resolve(n, p) {
+            SvmMode::Primal => Ok(Box::new(PreparedPrimal {
+                opts: self.primal.clone(),
+                x: x.clone(),
+                y: y.to_vec(),
+            })),
+            SvmMode::Dual => Ok(Box::new(PreparedDual {
+                opts: self.dual.clone(),
+                // t-independent gram pieces, computed once:
+                g0: x.gram_t(),
+                v: x.matvec_t(y),
+                yy: vecops::norm2_sq(y),
+                x: x.clone(),
+                y: y.to_vec(),
+            })),
+            SvmMode::Auto => unreachable!(),
+        }
+    }
+}
+
+struct PreparedPrimal {
+    opts: PrimalOptions,
+    x: Mat,
+    y: Vec<f64>,
+}
+
+impl PreparedSvm for PreparedPrimal {
+    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> anyhow::Result<SvmSolve> {
+        let samples = ReducedSamples { x: &self.x, y: &self.y, t };
+        let labels = reduction_labels(self.x.cols());
+        let w0 = warm.and_then(|w| w.w.as_deref());
+        let r = primal_newton(&samples, &labels, c, &self.opts, w0);
+        Ok(SvmSolve { alpha: r.alpha, w: Some(r.w), iters: r.newton_iters })
+    }
+
+    fn mode(&self) -> SvmMode {
+        SvmMode::Primal
+    }
+}
+
+struct PreparedDual {
+    opts: DualOptions,
+    g0: Mat,
+    v: Vec<f64>,
+    yy: f64,
+    x: Mat,
+    y: Vec<f64>,
+}
+
+impl PreparedDual {
+    /// Assemble K(t) from the cached, t-independent blocks in O(p²).
+    fn gram_at(&self, t: f64) -> Mat {
+        let p = self.g0.rows();
+        let s = 1.0 / t;
+        let s2c = s * s * self.yy;
+        let mut k = Mat::zeros(2 * p, 2 * p);
+        for i in 0..p {
+            for j in 0..p {
+                let gij = self.g0.get(i, j);
+                let sv = s * (self.v[i] + self.v[j]);
+                let g12 = gij + s * self.v[i] - s * self.v[j] - s2c;
+                k.set(i, j, gij - sv + s2c);
+                k.set(p + i, p + j, gij + sv + s2c);
+                k.set(i, p + j, -g12);
+                k.set(p + j, i, -g12);
+            }
+        }
+        k
+    }
+}
+
+impl PreparedSvm for PreparedDual {
+    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> anyhow::Result<SvmSolve> {
+        let k = self.gram_at(t);
+        let warm_alpha = warm.and_then(|w| w.alpha.as_deref());
+        let r = dual_newton(&k, c, &self.opts, warm_alpha);
+        // w = Ẑα is cheap and useful for warm starts: Ẑ = [X̂₁, −X̂₂]
+        let p = self.x.cols();
+        let samples = ReducedSamples { x: &self.x, y: &self.y, t };
+        let mut signed = r.alpha.clone();
+        for v in signed[p..].iter_mut() {
+            *v = -*v;
+        }
+        let mut w = vec![0.0; self.x.rows()];
+        samples.matvec_t(&signed, &mut w);
+        Ok(SvmSolve { alpha: r.alpha, w: Some(w), iters: r.pivots })
+    }
+
+    fn mode(&self) -> SvmMode {
+        SvmMode::Dual
+    }
+}
+
+/// Validate that `reduction_gram` and the cached-block assembly agree —
+/// exposed for tests and the runtime's own cross-checks.
+pub fn gram_assembly_check(x: &Mat, y: &[f64], t: f64) -> f64 {
+    let direct = reduction_gram(x, y, t);
+    let prep = PreparedDual {
+        opts: DualOptions::default(),
+        g0: x.gram_t(),
+        v: x.matvec_t(y),
+        yy: vecops::norm2_sq(y),
+        x: x.clone(),
+        y: y.to_vec(),
+    };
+    let assembled = prep.gram_at(t);
+    let mut max = 0.0f64;
+    for i in 0..direct.rows() {
+        for j in 0..direct.cols() {
+            max = max.max((direct.get(i, j) - assembled.get(i, j)).abs());
+        }
+    }
+    max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn mode_resolution() {
+        assert_eq!(SvmMode::Auto.resolve(10, 20), SvmMode::Primal); // 2p=40 > n=10
+        assert_eq!(SvmMode::Auto.resolve(100, 20), SvmMode::Dual); // 2p=40 ≤ 100
+        assert_eq!(SvmMode::Primal.resolve(100, 20), SvmMode::Primal);
+        assert_eq!(SvmMode::Dual.resolve(10, 20), SvmMode::Dual);
+    }
+
+    #[test]
+    fn gram_assembly_matches_direct() {
+        let mut rng = Rng::seed_from(161);
+        let x = Mat::from_fn(12, 5, |_, _| rng.normal());
+        let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        for t in [0.1, 1.0, 10.0] {
+            let dev = gram_assembly_check(&x, &y, t);
+            assert!(dev < 1e-9, "t={t} dev={dev}");
+        }
+    }
+
+    #[test]
+    fn primal_dual_same_alpha_up_to_scale() {
+        let mut rng = Rng::seed_from(162);
+        let x = Mat::from_fn(30, 6, |_, _| rng.normal());
+        let y: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let backend = RustBackend::default();
+        let mut prim = backend.prepare(&x, &y, SvmMode::Primal).unwrap();
+        let mut dual = backend.prepare(&x, &y, SvmMode::Dual).unwrap();
+        let (t, c) = (0.8, 5.0);
+        let a = prim.solve(t, c, None).unwrap().alpha;
+        let b = dual.solve(t, c, None).unwrap().alpha;
+        for i in 0..12 {
+            assert!((a[i] - b[i]).abs() < 1e-5, "i={i}: {} vs {}", a[i], b[i]);
+        }
+    }
+}

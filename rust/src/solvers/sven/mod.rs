@@ -1,0 +1,321 @@
+//! SVEN — the paper's contribution: solve the Elastic Net by reducing it
+//! to a squared-hinge SVM (Algorithm 1 of the paper).
+//!
+//! ```text
+//! 1.  X̂₁ = X − y·1ᵀ/t,  X̂₂ = X + y·1ᵀ/t            (implicit here)
+//! 2.  SVM samples: columns of [X̂₁, X̂₂]; labels +1 (first p), −1 (rest)
+//! 3.  C = 1/(2λ₂)
+//! 4.  if 2p > n: primal solve for w;  α = 2C·max(1 − ŷ∘(X̂w), 0)
+//!     else:      dual solve for α over K = ẐᵀẐ
+//! 5.  β = t·(α₁..p − α_{p+1..2p}) / Σᵢαᵢ
+//! ```
+//!
+//! The SVM step is pluggable through [`SvmBackend`]:
+//! [`backend::RustBackend`] is the in-process Newton solver
+//! ("SVEN (CPU)"); [`crate::runtime::XlaBackend`] executes the
+//! AOT-compiled JAX/Pallas artifacts via PJRT ("SVEN (XLA)", standing in
+//! for the paper's "SVEN (GPU)").
+
+pub mod backend;
+pub mod reduction;
+
+pub use backend::{PreparedSvm, RustBackend, SvmBackend, SvmMode, SvmSolve, SvmWarm};
+pub use reduction::{backmap, effective_c, MIN_ALPHA_SUM};
+
+use crate::linalg::Mat;
+use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
+use crate::util::Timer;
+
+/// SVEN configuration.
+#[derive(Clone, Debug)]
+pub struct SvenConfig {
+    /// Force primal/dual instead of the 2p > n rule.
+    pub mode: SvmMode,
+    /// Cap on C when λ₂ → 0 (the paper's "treat Lasso as hard-margin"
+    /// advice, made numerical): C = min(1/(2λ₂), c_cap). At C beyond
+    /// ~1e6 the slacks 1 − ŷ·(X̂w) underflow into cancellation noise in
+    /// f64, so the cap trades an O(1/C) ridge perturbation for numerical
+    /// stability — the same trade the paper makes by special-casing the
+    /// hard-margin solver.
+    pub c_cap: f64,
+}
+
+impl Default for SvenConfig {
+    fn default() -> Self {
+        SvenConfig { mode: SvmMode::Auto, c_cap: 1e6 }
+    }
+}
+
+/// The SVEN solver over a pluggable SVM backend.
+pub struct Sven<B: SvmBackend> {
+    pub backend: B,
+    pub config: SvenConfig,
+}
+
+impl<B: SvmBackend> Sven<B> {
+    pub fn new(backend: B) -> Self {
+        Sven { backend, config: SvenConfig::default() }
+    }
+
+    pub fn with_config(backend: B, config: SvenConfig) -> Self {
+        Sven { backend, config }
+    }
+
+    /// One-shot solve of a single Elastic Net problem.
+    pub fn solve(&self, prob: &EnProblem) -> anyhow::Result<EnSolution> {
+        let mut prepared = self.backend.prepare(&prob.x, &prob.y, self.config.mode)?;
+        self.solve_prepared(prepared.as_mut(), prob, None)
+    }
+
+    /// Solve with a prepared problem (gram/caches reused across path
+    /// points) and an optional warm start from the previous point.
+    pub fn solve_prepared(
+        &self,
+        prepared: &mut dyn PreparedSvm,
+        prob: &EnProblem,
+        warm: Option<&SvmWarm>,
+    ) -> anyhow::Result<EnSolution> {
+        let timer = Timer::start();
+        let p = prob.p();
+        let c = effective_c(prob.lambda2, self.config.c_cap);
+        let solve = prepared.solve(prob.t, c, warm)?;
+        let (beta, degenerate) = backmap(&solve.alpha, p, prob.t);
+        let seconds = timer.elapsed();
+        let objective = prob.objective(&beta);
+        Ok(EnSolution {
+            beta,
+            solver: self.kind(),
+            objective,
+            iterations: solve.iters,
+            seconds,
+            degenerate,
+        })
+    }
+
+    fn kind(&self) -> EnSolverKind {
+        if self.backend.name().contains("xla") {
+            EnSolverKind::SvenXla
+        } else {
+            EnSolverKind::SvenCpu
+        }
+    }
+
+    /// Prepare a dataset once for repeated (t, λ₂) solves.
+    pub fn prepare(
+        &self,
+        x: &Mat,
+        y: &[f64],
+    ) -> anyhow::Result<Box<dyn PreparedSvm>> {
+        self.backend.prepare(x, y, self.config.mode)
+    }
+
+    /// Degeneracy pre-check (paper §3): if `t` exceeds the L1 norm of the
+    /// ridge solution, the constraint is slack and the reduction's
+    /// tightness assumption fails. O(min(n,p)³) — optional, for warnings.
+    pub fn budget_is_slack(&self, prob: &EnProblem) -> bool {
+        ridge_l1_norm(&prob.x, &prob.y, prob.lambda2) <= prob.t
+    }
+}
+
+/// |β_ridge|₁ for the slack-budget detector: solves
+/// (XᵀX + λ₂I)β = Xᵀy via the smaller-side normal equations.
+fn ridge_l1_norm(x: &Mat, y: &[f64], lambda2: f64) -> f64 {
+    use crate::linalg::{vecops, Cholesky};
+    let (n, p) = (x.rows(), x.cols());
+    let l2 = lambda2.max(1e-8);
+    let beta = if p <= n {
+        // (XᵀX + λI) β = Xᵀy
+        let mut g = x.gram_t();
+        for i in 0..p {
+            let v = g.get(i, i) + l2;
+            g.set(i, i, v);
+        }
+        let xty = x.matvec_t(y);
+        match Cholesky::factor_ridged(&g, 1e-10, 8) {
+            Ok(ch) => ch.solve(&xty),
+            Err(_) => return f64::INFINITY,
+        }
+    } else {
+        // β = Xᵀ(XXᵀ + λI)⁻¹ y
+        let mut g = x.gram();
+        for i in 0..n {
+            let v = g.get(i, i) + l2;
+            g.set(i, i, v);
+        }
+        match Cholesky::factor_ridged(&g, 1e-10, 8) {
+            Ok(ch) => {
+                let u = ch.solve(y);
+                x.matvec_t(&u)
+            }
+            Err(_) => return f64::INFINITY,
+        }
+    };
+    vecops::norm1(&beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth_regression, SynthSpec};
+    use crate::solvers::glmnet::{self, GlmnetConfig, PathSettings};
+
+    fn dataset(n: usize, p: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let d = synth_regression(&SynthSpec { n, p, support: p.min(6), seed, ..Default::default() });
+        (d.x, d.y)
+    }
+
+    /// The headline correctness property: SVEN(t=|β*|₁, λ₂=nλ(1−κ)) must
+    /// reproduce the glmnet solution β*.
+    fn check_matches_glmnet(n: usize, p: usize, seed: u64, kappa: f64) {
+        let (x, y) = dataset(n, p, seed);
+        let lambda = glmnet::cd::lambda_max(&x, &y, kappa) * 0.3;
+        let g = glmnet::solve_penalized(
+            &x,
+            &y,
+            lambda,
+            &GlmnetConfig { kappa, tol: 1e-13, ..Default::default() },
+            None,
+        );
+        let t = crate::solvers::elastic_net::budget_from_beta(&g.beta);
+        if t <= 1e-12 {
+            return; // fully sparse solution; nothing to compare
+        }
+        let lambda2 = n as f64 * lambda * (1.0 - kappa);
+        let prob = EnProblem::new(x, y, t, lambda2);
+        let sven = Sven::new(RustBackend::default());
+        let sol = sven.solve(&prob).unwrap();
+        assert!(sol.degenerate.is_none(), "unexpected degeneracy");
+        for j in 0..p {
+            assert!(
+                (sol.beta[j] - g.beta[j]).abs() < 5e-5,
+                "{n}x{p} seed {seed} κ={kappa} j={j}: sven {} vs glmnet {}",
+                sol.beta[j],
+                g.beta[j]
+            );
+        }
+    }
+
+    #[test]
+    fn matches_glmnet_p_gg_n() {
+        check_matches_glmnet(20, 80, 151, 0.5); // dual side: n < 2p... (2p=160 > 20 ⇒ primal)
+        check_matches_glmnet(15, 60, 152, 0.7);
+    }
+
+    #[test]
+    fn matches_glmnet_n_gg_p() {
+        check_matches_glmnet(200, 10, 153, 0.5); // n=200 ≥ 2p=20 ⇒ dual mode
+        check_matches_glmnet(150, 8, 154, 0.3);
+    }
+
+    #[test]
+    fn primal_and_dual_agree() {
+        let (x, y) = dataset(60, 25, 155);
+        let pts = glmnet::compute_path(&x, &y, &PathSettings { num_lambda: 20, ..Default::default() });
+        let pt = pts.iter().find(|pt| pt.nnz >= 3).expect("active point");
+        let prob = EnProblem::new(x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-3));
+        let sp = Sven::with_config(
+            RustBackend::default(),
+            SvenConfig { mode: SvmMode::Primal, ..Default::default() },
+        );
+        let sd = Sven::with_config(
+            RustBackend::default(),
+            SvenConfig { mode: SvmMode::Dual, ..Default::default() },
+        );
+        let bp = sp.solve(&prob).unwrap().beta;
+        let bd = sd.solve(&prob).unwrap().beta;
+        for j in 0..25 {
+            assert!((bp[j] - bd[j]).abs() < 1e-5, "j={j}: {} vs {}", bp[j], bd[j]);
+        }
+    }
+
+    #[test]
+    fn lasso_limit_small_lambda2() {
+        // λ₂ = 0 (Lasso): C is capped at c_cap, i.e. SVEN actually solves
+        // the EN with λ₂ = 1/(2·c_cap) — an O(1/C) perturbation of the
+        // Lasso. Compare against glmnet with tolerance matched to that
+        // perturbation rather than the exact-equality tolerance.
+        let (x, y) = dataset(30, 50, 156);
+        let lambda = glmnet::cd::lambda_max(&x, &y, 1.0) * 0.3;
+        let g = glmnet::solve_penalized(
+            &x,
+            &y,
+            lambda,
+            &GlmnetConfig { kappa: 1.0, tol: 1e-13, ..Default::default() },
+            None,
+        );
+        let t = crate::solvers::elastic_net::budget_from_beta(&g.beta);
+        let prob = EnProblem::new(x.clone(), y.clone(), t, 0.0);
+        let sven = Sven::new(RustBackend::default());
+        let sol = sven.solve(&prob).unwrap();
+        // Objectives (λ₂ = 0 form) must agree closely even if individual
+        // coordinates differ when the Lasso optimum is nearly degenerate.
+        let obj = |b: &[f64]| {
+            let mut r = x.matvec(b);
+            crate::linalg::vecops::axpy(-1.0, &y, &mut r);
+            crate::linalg::vecops::norm2_sq(&r)
+        };
+        let og = obj(&g.beta);
+        let os = obj(&sol.beta);
+        assert!(
+            (os - og).abs() <= 1e-3 * (1.0 + og.abs()),
+            "objective: sven {os} vs glmnet {og}"
+        );
+        for j in 0..50 {
+            assert!(
+                (sol.beta[j] - g.beta[j]).abs() < 5e-3,
+                "j={j}: {} vs {}",
+                sol.beta[j],
+                g.beta[j]
+            );
+        }
+    }
+
+    #[test]
+    fn l1_budget_is_respected() {
+        let (x, y) = dataset(40, 30, 157);
+        let pts = glmnet::compute_path(&x, &y, &PathSettings { num_lambda: 25, ..Default::default() });
+        let pt = pts.iter().find(|pt| pt.nnz >= 2).unwrap();
+        let prob = EnProblem::new(x, y, pt.t, pt.lambda2.max(1e-3));
+        let sven = Sven::new(RustBackend::default());
+        let sol = sven.solve(&prob).unwrap();
+        let l1: f64 = sol.beta.iter().map(|b| b.abs()).sum();
+        assert!(l1 <= prob.t * (1.0 + 1e-6), "|β|₁ = {l1} > t = {}", prob.t);
+        // and the constraint is tight (non-degenerate case)
+        assert!(l1 >= prob.t * (1.0 - 1e-6), "|β|₁ = {l1} ≪ t = {}", prob.t);
+    }
+
+    #[test]
+    fn slack_budget_detector() {
+        let (x, y) = dataset(50, 5, 158);
+        // huge budget ⇒ ridge regime
+        let prob = EnProblem::new(x.clone(), y.clone(), 1e6, 1.0);
+        let sven = Sven::new(RustBackend::default());
+        assert!(sven.budget_is_slack(&prob));
+        // tiny budget ⇒ tight
+        let prob2 = EnProblem::new(x, y, 1e-3, 1.0);
+        assert!(!sven.budget_is_slack(&prob2));
+    }
+
+    #[test]
+    fn prepared_reuse_matches_oneshot() {
+        let (x, y) = dataset(80, 12, 159);
+        let pts = glmnet::compute_path(&x, &y, &PathSettings { num_lambda: 30, ..Default::default() });
+        let active: Vec<_> = pts.iter().filter(|pt| pt.nnz > 0).take(5).collect();
+        let sven = Sven::new(RustBackend::default());
+        let mut prep = sven.prepare(&x, &y).unwrap();
+        let mut warm: Option<SvmWarm> = None;
+        for pt in active {
+            let prob = EnProblem::new(x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-4));
+            let via_prep = sven.solve_prepared(prep.as_mut(), &prob, warm.as_ref()).unwrap();
+            let oneshot = sven.solve(&prob).unwrap();
+            for j in 0..12 {
+                assert!(
+                    (via_prep.beta[j] - oneshot.beta[j]).abs() < 1e-6,
+                    "t={} j={j}",
+                    pt.t
+                );
+            }
+            warm = Some(SvmWarm::default());
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! The reduction arithmetic: C from λ₂, and the α → β back-map
+//! (Algorithm 1 lines 3 and 11).
+
+use crate::solvers::elastic_net::Degenerate;
+
+/// Below this total dual mass the SVM "selected no support vectors"
+/// (paper footnote 1) and the back-map is undefined; we return β = 0.
+pub const MIN_ALPHA_SUM: f64 = 1e-12;
+
+/// `C = 1/(2λ₂)`, capped for the Lasso limit λ₂ → 0 (paper §3 suggests a
+/// hard-margin special case; a large finite C is its numerical twin).
+pub fn effective_c(lambda2: f64, c_cap: f64) -> f64 {
+    if lambda2 <= 0.0 {
+        c_cap
+    } else {
+        (1.0 / (2.0 * lambda2)).min(c_cap)
+    }
+}
+
+/// `β = t·(α₁..p − α_{p+1..2p}) / Σᵢ αᵢ` — scale-invariant in α.
+pub fn backmap(alpha: &[f64], p: usize, t: f64) -> (Vec<f64>, Option<Degenerate>) {
+    assert_eq!(alpha.len(), 2 * p, "alpha must have length 2p");
+    let sum: f64 = alpha.iter().sum();
+    if sum <= MIN_ALPHA_SUM {
+        return (vec![0.0; p], Some(Degenerate::NoSupportVectors));
+    }
+    let scale = t / sum;
+    let beta: Vec<f64> =
+        (0..p).map(|i| scale * (alpha[i] - alpha[p + i])).collect();
+    (beta, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c_mapping() {
+        assert_eq!(effective_c(0.5, 1e10), 1.0);
+        assert_eq!(effective_c(0.0, 1e10), 1e10);
+        assert_eq!(effective_c(1e-20, 1e10), 1e10); // capped
+    }
+
+    #[test]
+    fn backmap_basic() {
+        // p = 2, α = [3, 0, 1, 0] ⇒ Σ = 4, β = t·[(3−1)/4, 0]
+        let (beta, d) = backmap(&[3.0, 0.0, 1.0, 0.0], 2, 2.0);
+        assert!(d.is_none());
+        assert!((beta[0] - 1.0).abs() < 1e-15);
+        assert_eq!(beta[1], 0.0);
+    }
+
+    #[test]
+    fn backmap_scale_invariant() {
+        let a = [0.2, 0.7, 0.1, 0.0];
+        let (b1, _) = backmap(&a, 2, 1.5);
+        let a_scaled: Vec<f64> = a.iter().map(|v| v * 37.0).collect();
+        let (b2, _) = backmap(&a_scaled, 2, 1.5);
+        for i in 0..2 {
+            assert!((b1[i] - b2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn backmap_l1_norm_bounded_by_t() {
+        // |β|₁ = t·Σ|αᵢ − α_{p+i}| / Σαᵢ ≤ t, with equality iff
+        // complementary (αᵢ·α_{p+i} = 0 ∀i).
+        let (beta, _) = backmap(&[1.0, 2.0, 0.5, 0.0], 2, 3.0);
+        let l1: f64 = beta.iter().map(|b| b.abs()).sum();
+        assert!(l1 <= 3.0 + 1e-12);
+        // complementary case: exact
+        let (beta2, _) = backmap(&[1.0, 0.0, 0.0, 2.0], 2, 3.0);
+        let l1_2: f64 = beta2.iter().map(|b| b.abs()).sum();
+        assert!((l1_2 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_zero_alpha() {
+        let (beta, d) = backmap(&[0.0; 6], 3, 1.0);
+        assert_eq!(d, Some(Degenerate::NoSupportVectors));
+        assert_eq!(beta, vec![0.0; 3]);
+    }
+}

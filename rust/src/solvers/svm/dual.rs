@@ -1,0 +1,314 @@
+//! Dual active-set Newton for the squared-hinge SVM (paper eq. 3):
+//!
+//! ```text
+//! min_{α ≥ 0}  αᵀKα + 1/(2C)·‖α‖² − 2·1ᵀα,      K = ẐᵀẐ
+//! ```
+//!
+//! On a fixed free set F the problem is an unconstrained SPD solve
+//! `(K_FF + I/(2C))·α_F = 1`; the active-set loop (Lawson–Hanson NNLS
+//! structure, block pivoting for speed) moves variables between the bound
+//! and free sets until the KKT conditions hold:
+//! `α_i > 0 ⇒ g_i = 0`, `α_i = 0 ⇒ g_i ≥ 0` with
+//! `g = 2Kα + α/C − 2`.
+//!
+//! The data enters only through K, so when `n ≥ 2p` the caller computes K
+//! once in O(n·p²) (see [`super::samples::reduction_gram`]) and every
+//! subsequent solve is dimension-independent — the effect that makes the
+//! paper's Figure-3 SVEN timings flat in t.
+
+use crate::linalg::{Cholesky, Mat};
+
+/// Options for [`dual_newton`].
+#[derive(Clone, Debug)]
+pub struct DualOptions {
+    /// KKT tolerance on the gradient.
+    pub tol: f64,
+    /// Cap on active-set changes.
+    pub max_pivots: usize,
+}
+
+impl Default for DualOptions {
+    fn default() -> Self {
+        DualOptions { tol: 1e-10, max_pivots: 10_000 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DualResult {
+    pub alpha: Vec<f64>,
+    pub pivots: usize,
+    pub converged: bool,
+    /// Dual objective at `alpha`.
+    pub objective: f64,
+}
+
+/// Gradient `g = 2Kα + α/C − 2` (only for entries in `idx` if given).
+fn gradient(k: &Mat, alpha: &[f64], c: f64, out: &mut [f64]) {
+    k.matvec_into(alpha, out);
+    for i in 0..out.len() {
+        out[i] = 2.0 * out[i] + alpha[i] / c - 2.0;
+    }
+}
+
+fn objective(k: &Mat, alpha: &[f64], c: f64) -> f64 {
+    let ka = k.matvec(alpha);
+    let mut obj = 0.0;
+    for i in 0..alpha.len() {
+        obj += alpha[i] * ka[i] + alpha[i] * alpha[i] / (2.0 * c) - 2.0 * alpha[i];
+    }
+    obj
+}
+
+/// Solve the non-negative dual QP given the gram matrix `K` (m × m).
+/// `warm` seeds the free set (entries > 0).
+pub fn dual_newton(k: &Mat, c: f64, opts: &DualOptions, warm: Option<&[f64]>) -> DualResult {
+    let m = k.rows();
+    assert_eq!(k.cols(), m);
+    let mut alpha = vec![0.0; m];
+    let mut free: Vec<bool> = vec![false; m];
+    if let Some(w) = warm {
+        assert_eq!(w.len(), m);
+        for i in 0..m {
+            if w[i] > 0.0 {
+                free[i] = true;
+            }
+        }
+    }
+    // If cold, start from the steepest-descent seed: all gradients are −2
+    // at α = 0, so every variable is a candidate; pick the best single one
+    // to avoid factorizing the full K immediately.
+    if free.iter().all(|f| !f) {
+        let mut best = 0usize;
+        let mut best_k = f64::INFINITY;
+        for i in 0..m {
+            let kii = k.get(i, i) + 1.0 / (2.0 * c);
+            // unconstrained single-variable optimum value: −1/kii
+            if kii < best_k {
+                best_k = kii;
+                best = i;
+            }
+        }
+        free[best] = true;
+    }
+
+    let mut g = vec![0.0; m];
+    let mut pivots = 0usize;
+    let mut converged = false;
+
+    while pivots < opts.max_pivots {
+        // ---- solve equality-constrained subproblem on F -----------------
+        let idx: Vec<usize> = (0..m).filter(|&i| free[i]).collect();
+        if idx.is_empty() {
+            break;
+        }
+        let nf = idx.len();
+        let mut kff = Mat::zeros(nf, nf);
+        for (a, &i) in idx.iter().enumerate() {
+            for (b, &j) in idx.iter().enumerate() {
+                let v = k.get(i, j) + if a == b { 1.0 / (2.0 * c) } else { 0.0 };
+                kff.set(a, b, v);
+            }
+        }
+        let rhs = vec![1.0; nf];
+        let sol = match Cholesky::factor_ridged(&kff, 1e-12, 8) {
+            Ok(ch) => ch.solve(&rhs),
+            Err(_) => {
+                // Singular free set (warm seeding can activate both twins
+                // α⁺_j/α⁻_j whose kernel columns are anti-correlated):
+                // escape with one projected gradient step and rebuild the
+                // free set — never exit on a non-KKT iterate.
+                gradient(k, &alpha, c, &mut g);
+                let lip: f64 = (0..m).map(|i| k.get(i, i)).fold(0.0, f64::max)
+                    * 2.0
+                    * m as f64
+                    + 1.0 / c;
+                for i in 0..m {
+                    alpha[i] = (alpha[i] - g[i] / lip).max(0.0);
+                    free[i] = alpha[i] > 0.0;
+                }
+                pivots += 1;
+                continue;
+            }
+        };
+
+        // ---- feasibility: clip along the segment α_F → sol --------------
+        if sol.iter().all(|v| *v >= 0.0) {
+            for (a, &i) in idx.iter().enumerate() {
+                alpha[i] = sol[a];
+            }
+        } else {
+            // Largest feasible step along α_F → sol, then drop only the
+            // *blocking* variables (those pushed negative). Dropping every
+            // α ≤ 0 would, for a zero warm iterate (θ = 0), empty the
+            // whole free set and strand the solver at α = 0.
+            let mut theta = 1.0f64;
+            for (a, &i) in idx.iter().enumerate() {
+                if sol[a] < 0.0 {
+                    let step = alpha[i] / (alpha[i] - sol[a]);
+                    theta = theta.min(step);
+                }
+            }
+            for (a, &i) in idx.iter().enumerate() {
+                alpha[i] += theta * (sol[a] - alpha[i]);
+                if sol[a] < 0.0 && alpha[i] <= 1e-14 {
+                    alpha[i] = 0.0;
+                    free[i] = false;
+                } else if alpha[i] < 0.0 {
+                    alpha[i] = 0.0;
+                }
+            }
+            pivots += 1;
+            continue;
+        }
+
+        // ---- KKT check -----------------------------------------------
+        gradient(k, &alpha, c, &mut g);
+        let gscale = 1.0f64.max(g.iter().fold(0.0f64, |a, v| a.max(v.abs())));
+        let mut worst = -opts.tol * gscale;
+        let mut worst_i = None;
+        for i in 0..m {
+            if !free[i] && g[i] < worst {
+                worst = g[i];
+                worst_i = Some(i);
+            }
+        }
+        // Free-variable residual: the Cholesky solve makes it zero in
+        // exact arithmetic, but a ridged fallback on a near-singular
+        // free set (e.g. both twins α⁺_j and α⁻_j free — their kernel
+        // columns are strongly anti-correlated) leaves it large. Checking
+        // only bound variables would then declare FALSE convergence.
+        let free_resid = (0..m)
+            .filter(|&i| free[i])
+            .map(|i| g[i].abs())
+            .fold(0.0f64, f64::max);
+        match worst_i {
+            Some(i) => {
+                free[i] = true;
+                pivots += 1;
+            }
+            None if free_resid <= 1e-7 * gscale => {
+                if std::env::var("SVEN_DUAL_DEBUG").is_ok() {
+                    eprintln!(
+                        "[dual] exit pivots={pivots} nfree={} free_resid={free_resid:.3e} gscale={gscale:.3e} asum={:.3e}",
+                        free.iter().filter(|f| **f).count(),
+                        alpha.iter().sum::<f64>()
+                    );
+                }
+                converged = true;
+                break;
+            }
+            None => {
+                // Stuck on a degenerate free set: take one projected
+                // gradient step (guaranteed descent) and rebuild the free
+                // set from the moved iterate.
+                let lip: f64 = (0..m).map(|i| k.get(i, i)).fold(0.0, f64::max) * 2.0
+                    * m as f64
+                    + 1.0 / c;
+                for i in 0..m {
+                    alpha[i] = (alpha[i] - g[i] / lip).max(0.0);
+                    free[i] = alpha[i] > 0.0;
+                }
+                pivots += 1;
+            }
+        }
+    }
+
+    let obj = objective(k, &alpha, c);
+    DualResult { alpha, pivots, converged, objective: obj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::primal::{primal_newton, PrimalOptions};
+    use super::super::samples::{DenseSamples, SampleSet};
+    use crate::rng::Rng;
+
+    /// Random binary classification set; returns (samples, labels, K).
+    fn random_problem(m: usize, d: usize, seed: u64) -> (DenseSamples, Vec<f64>, Mat) {
+        let mut rng = Rng::seed_from(seed);
+        let x = Mat::from_fn(m, d, |_, _| rng.normal());
+        let y: Vec<f64> = (0..m).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        // K_ij = y_i y_j x_i·x_j
+        let mut k = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                let dot: f64 = (0..d).map(|q| x.get(i, q) * x.get(j, q)).sum();
+                k.set(i, j, y[i] * y[j] * dot);
+            }
+        }
+        (DenseSamples { x }, y, k)
+    }
+
+    #[test]
+    fn kkt_holds_at_solution() {
+        let (_, _, k) = random_problem(14, 5, 141);
+        let c = 1.3;
+        let r = dual_newton(&k, c, &DualOptions::default(), None);
+        assert!(r.converged);
+        let mut g = vec![0.0; 14];
+        gradient(&k, &r.alpha, c, &mut g);
+        for i in 0..14 {
+            if r.alpha[i] > 1e-10 {
+                assert!(g[i].abs() < 1e-7, "free i={i} g={}", g[i]);
+            } else {
+                assert!(g[i] > -1e-7, "bound i={i} g={}", g[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_primal_solution() {
+        let (s, y, k) = random_problem(12, 4, 142);
+        let c = 2.0;
+        let dual = dual_newton(&k, c, &DualOptions::default(), None);
+        let primal = primal_newton(&s, &y, c, &PrimalOptions::default(), None);
+        // w = Σ ŷᵢ αᵢ x̂ᵢ must match the primal w
+        let ya: Vec<f64> = (0..12).map(|i| y[i] * dual.alpha[i]).collect();
+        let mut w = vec![0.0; 4];
+        s.matvec_t(&ya, &mut w);
+        for j in 0..4 {
+            assert!(
+                (w[j] - primal.w[j]).abs() < 1e-6,
+                "j={j}: dual {} vs primal {}",
+                w[j],
+                primal.w[j]
+            );
+        }
+        // and α themselves must match (solution unique for C < ∞)
+        for i in 0..12 {
+            assert!(
+                (dual.alpha[i] - primal.alpha[i]).abs() < 1e-6,
+                "α[{i}]: {} vs {}",
+                dual.alpha[i],
+                primal.alpha[i]
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_reduces_pivots() {
+        let (_, _, k) = random_problem(20, 6, 143);
+        let c = 1.0;
+        let cold = dual_newton(&k, c, &DualOptions::default(), None);
+        let warm = dual_newton(&k, c, &DualOptions::default(), Some(&cold.alpha));
+        assert!(warm.pivots <= cold.pivots);
+        for i in 0..20 {
+            assert!((warm.alpha[i] - cold.alpha[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn objective_decreases_vs_zero() {
+        let (_, _, k) = random_problem(10, 3, 144);
+        let r = dual_newton(&k, 1.0, &DualOptions::default(), None);
+        assert!(r.objective < 0.0, "dual optimum must beat α = 0 (obj 0)");
+    }
+
+    #[test]
+    fn alpha_nonnegative() {
+        let (_, _, k) = random_problem(25, 7, 145);
+        let r = dual_newton(&k, 5.0, &DualOptions::default(), None);
+        assert!(r.alpha.iter().all(|a| *a >= 0.0));
+    }
+}

@@ -1,0 +1,25 @@
+//! Squared-hinge-loss linear SVM **without bias** — the reduction target
+//! of the paper (its §2 eq. 2/3), solved the way Chapelle (2007) does:
+//!
+//! - **Primal** ([`primal_newton`]): Newton steps on
+//!   `½‖w‖² + C·Σ max(0, 1 − ŷᵢ wᵀx̂ᵢ)²`, with the Newton system solved by
+//!   conjugate gradients using Hessian-vector products
+//!   `v ↦ v + 2C·X̂ᵀ(sv ⊙ (X̂v))` — two matvecs, no Hessian materialized.
+//!   Used when the weight dimension d is the small side (2p > n in the
+//!   reduction).
+//! - **Dual** ([`dual_newton`]): active-set Newton on the non-negative QP
+//!   `min αᵀKα + 1/(2C)·‖α‖² − 2·1ᵀα, α ≥ 0` over the gram matrix
+//!   `K = ẐᵀẐ` — the kernelized route, used when samples are the small
+//!   side (n ≥ 2p), where K can be cached across path points.
+//!
+//! Both return the dual variables `α` (the quantity SVEN's back-map
+//! needs); at the optimum `α_i = 2C·max(0, 1 − ŷᵢ wᵀx̂ᵢ)`, and any
+//! positive rescaling of α leaves the back-map unchanged.
+
+pub mod dual;
+pub mod primal;
+pub mod samples;
+
+pub use dual::{dual_newton, DualOptions, DualResult};
+pub use primal::{primal_newton, PrimalOptions, PrimalResult};
+pub use samples::{DenseSamples, ReducedSamples, SampleSet};

@@ -1,0 +1,231 @@
+//! Sample-matrix abstraction for the SVM solvers.
+//!
+//! The primal Newton-CG only touches the data through `X̂v` and `X̂ᵀu`.
+//! [`DenseSamples`] materializes the m × d matrix; [`ReducedSamples`]
+//! represents the SVEN construction `X̂ = [Xᵀ − 1yᵀ/t ; Xᵀ + 1yᵀ/t]`
+//! *implicitly* as one X (or Xᵀ) product plus a rank-one correction —
+//! halving memory traffic and skipping the O(np) construction entirely
+//! (the practical trick behind the paper's "construction requires only
+//! O(np)" remark, taken one step further).
+
+use crate::linalg::{vecops, Mat};
+
+/// Abstract m-samples × d-features matrix X̂.
+pub trait SampleSet: Sync {
+    /// Number of samples (SVM classification points).
+    fn m(&self) -> usize;
+    /// Feature dimension (weight-vector length).
+    fn d(&self) -> usize;
+    /// `out ← X̂ · v`, out length m.
+    fn matvec(&self, v: &[f64], out: &mut [f64]);
+    /// `out ← X̂ᵀ · u`, out length d.
+    fn matvec_t(&self, u: &[f64], out: &mut [f64]);
+}
+
+/// Materialized samples (rows = samples).
+pub struct DenseSamples {
+    pub x: Mat,
+}
+
+impl SampleSet for DenseSamples {
+    fn m(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        self.x.matvec_into(v, out);
+    }
+
+    fn matvec_t(&self, u: &[f64], out: &mut [f64]) {
+        self.x.matvec_t_into(u, out);
+    }
+}
+
+/// The SVEN-constructed sample set, held implicitly.
+///
+/// With `X ∈ R^{n×p}` (the regression design), `y ∈ R^n`, budget `t`:
+/// sample i ∈ [0, p) is column i of `X − y·1ᵀ/t` (class +1) and sample
+/// p + i is column i of `X + y·1ᵀ/t` (class −1); both live in R^n (d = n,
+/// m = 2p).
+pub struct ReducedSamples<'a> {
+    pub x: &'a Mat,
+    pub y: &'a [f64],
+    pub t: f64,
+}
+
+impl ReducedSamples<'_> {
+    #[inline]
+    fn p(&self) -> usize {
+        self.x.cols()
+    }
+}
+
+impl SampleSet for ReducedSamples<'_> {
+    fn m(&self) -> usize {
+        2 * self.p()
+    }
+
+    fn d(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// `X̂·v = [Xᵀv − (yᵀv/t)·1 ; Xᵀv + (yᵀv/t)·1]`.
+    fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        let p = self.p();
+        debug_assert_eq!(v.len(), self.d());
+        debug_assert_eq!(out.len(), 2 * p);
+        let (top, bot) = out.split_at_mut(p);
+        self.x.matvec_t_into(v, top);
+        let shift = vecops::dot(self.y, v) / self.t;
+        for i in 0..p {
+            bot[i] = top[i] + shift;
+            top[i] -= shift;
+        }
+    }
+
+    /// `X̂ᵀ·u = X(u₁ + u₂) + (1ᵀu₂ − 1ᵀu₁)/t · y`.
+    fn matvec_t(&self, u: &[f64], out: &mut [f64]) {
+        let p = self.p();
+        debug_assert_eq!(u.len(), 2 * p);
+        debug_assert_eq!(out.len(), self.d());
+        let (u1, u2) = u.split_at(p);
+        let mut sum = vec![0.0; p];
+        vecops::add(u1, u2, &mut sum);
+        self.x.matvec_into(&sum, out);
+        let coeff = (u2.iter().sum::<f64>() - u1.iter().sum::<f64>()) / self.t;
+        vecops::axpy(coeff, self.y, out);
+    }
+}
+
+/// Materialize the SVEN sample matrix (m × d) — used by tests to validate
+/// [`ReducedSamples`] and by callers that prefer dense (small problems).
+pub fn materialize_reduction(x: &Mat, y: &[f64], t: f64) -> Mat {
+    let (n, p) = (x.rows(), x.cols());
+    let mut out = Mat::zeros(2 * p, n);
+    for i in 0..p {
+        for r in 0..n {
+            let xc = x.get(r, i);
+            out.set(i, r, xc - y[r] / t);
+            out.set(p + i, r, xc + y[r] / t);
+        }
+    }
+    out
+}
+
+/// Labels of the SVEN construction: +1 for the first p samples, −1 after.
+pub fn reduction_labels(p: usize) -> Vec<f64> {
+    let mut y = vec![1.0; 2 * p];
+    for v in y[p..].iter_mut() {
+        *v = -1.0;
+    }
+    y
+}
+
+/// The gram matrix `K = ẐᵀẐ` of the SVEN construction
+/// (`Ẑ = (ŷ₁x̂₁ … ŷₘx̂ₘ)`), built from `XᵀX` blocks in O(p²) after one
+/// O(np²) product instead of the naive O(n(2p)²):
+///
+/// ```text
+/// K = [  G₁₁  −G₁₂ ]      G₁₁ = G − s(v1ᵀ+1vᵀ) + s²c·11ᵀ
+///     [ −G₁₂ᵀ  G₂₂ ]      G₂₂ = G + s(v1ᵀ+1vᵀ) + s²c·11ᵀ
+///                         G₁₂ = G + s·v1ᵀ − s·1vᵀ − s²c·11ᵀ
+/// ```
+/// with `G = XᵀX`, `v = Xᵀy`, `c = yᵀy`, `s = 1/t`.
+pub fn reduction_gram(x: &Mat, y: &[f64], t: f64) -> Mat {
+    let p = x.cols();
+    let g = x.gram_t(); // XᵀX, p×p
+    let v = x.matvec_t(y); // Xᵀy
+    let c = vecops::norm2_sq(y);
+    let s = 1.0 / t;
+    let s2c = s * s * c;
+    let mut k = Mat::zeros(2 * p, 2 * p);
+    for i in 0..p {
+        for j in 0..p {
+            let gij = g.get(i, j);
+            let sv = s * (v[i] + v[j]);
+            let g11 = gij - sv + s2c;
+            let g22 = gij + sv + s2c;
+            let g12 = gij + s * v[i] - s * v[j] - s2c;
+            k.set(i, j, g11);
+            k.set(p + i, p + j, g22);
+            k.set(i, p + j, -g12);
+            k.set(p + j, i, -g12);
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn setup(n: usize, p: usize, seed: u64) -> (Mat, Vec<f64>, f64) {
+        let mut rng = Rng::seed_from(seed);
+        let x = Mat::from_fn(n, p, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (x, y, 0.7)
+    }
+
+    #[test]
+    fn reduced_matvec_matches_materialized() {
+        let (x, y, t) = setup(9, 6, 121);
+        let red = ReducedSamples { x: &x, y: &y, t };
+        let dense = materialize_reduction(&x, &y, t);
+        let mut rng = Rng::seed_from(122);
+        let v: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let mut out_red = vec![0.0; 12];
+        red.matvec(&v, &mut out_red);
+        let out_dense = dense.matvec(&v);
+        for i in 0..12 {
+            assert!((out_red[i] - out_dense[i]).abs() < 1e-10, "i={i}");
+        }
+    }
+
+    #[test]
+    fn reduced_matvec_t_matches_materialized() {
+        let (x, y, t) = setup(7, 5, 123);
+        let red = ReducedSamples { x: &x, y: &y, t };
+        let dense = materialize_reduction(&x, &y, t);
+        let mut rng = Rng::seed_from(124);
+        let u: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let mut out_red = vec![0.0; 7];
+        red.matvec_t(&u, &mut out_red);
+        let out_dense = dense.matvec_t(&u);
+        for i in 0..7 {
+            assert!((out_red[i] - out_dense[i]).abs() < 1e-10, "i={i}");
+        }
+    }
+
+    #[test]
+    fn gram_matches_materialized() {
+        let (x, y, t) = setup(8, 4, 125);
+        let k = reduction_gram(&x, &y, t);
+        // naive: Ẑ columns are ŷ_i x̂_i; K = ẐᵀẐ
+        let xhat = materialize_reduction(&x, &y, t); // rows = samples
+        let labels = reduction_labels(4);
+        let m = 8usize;
+        for i in 0..m {
+            for j in 0..m {
+                let kij: f64 = labels[i]
+                    * labels[j]
+                    * vecops::dot(xhat.row(i), xhat.row(j));
+                assert!(
+                    (k.get(i, j) - kij).abs() < 1e-9,
+                    "({i},{j}): {} vs {kij}",
+                    k.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn labels_shape() {
+        let l = reduction_labels(3);
+        assert_eq!(l, vec![1.0, 1.0, 1.0, -1.0, -1.0, -1.0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Minimal in-tree property-based testing framework.
+//!
+//! The offline crate set has no `proptest`/`quickcheck`, so this module
+//! supplies the subset the test suite needs: seeded generators built on
+//! [`crate::rng::Rng`], a `forall` runner that reports the failing seed,
+//! and greedy size-shrinking for the structured problem generators.
+//!
+//! Usage pattern (see `rust/tests/proptests.rs`):
+//!
+//! ```ignore
+//! forall("sven matches glmnet", 50, gen_problem, |p| check(p));
+//! ```
+
+pub mod prop;
+
+pub use prop::{forall, forall_cfg, Gen, PropConfig};

@@ -1,0 +1,150 @@
+//! The `forall` property runner and generator combinators.
+
+use crate::rng::Rng;
+
+/// A generator draws a case from seeded randomness at a given `size`
+/// (sizes ramp up across cases, like proptest's sizing).
+pub trait Gen {
+    type Output;
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Output;
+}
+
+impl<T, F: Fn(&mut Rng, usize) -> T> Gen for F {
+    type Output = T;
+    fn generate(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub min_size: usize,
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE, min_size: 1, max_size: 24 }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panics with the failing seed and
+/// case index on the first failure (after a shrink attempt over sizes).
+///
+/// `prop` returns `Result<(), String>` so failures carry a description.
+pub fn forall_cfg<G: Gen>(
+    name: &str,
+    cfg: &PropConfig,
+    gen: G,
+    prop: impl Fn(&G::Output) -> Result<(), String>,
+) {
+    let mut failures: Option<(usize, usize, String)> = None;
+    'outer: for case in 0..cfg.cases {
+        // size ramps from min to max over the run
+        let size = cfg.min_size
+            + (cfg.max_size - cfg.min_size) * case / cfg.cases.max(1);
+        let mut rng = Rng::seed_from(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen.generate(&mut rng, size.max(cfg.min_size));
+        if let Err(msg) = prop(&input) {
+            // Shrink: retry the same case seed at smaller sizes to find a
+            // minimal reproduction (generators are size-monotone).
+            for s in (cfg.min_size..size).rev() {
+                let mut srng =
+                    Rng::seed_from(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                let sinput = gen.generate(&mut srng, s);
+                if let Err(smsg) = prop(&sinput) {
+                    failures = Some((case, s, smsg));
+                    break 'outer;
+                }
+            }
+            failures = Some((case, size, msg));
+            break 'outer;
+        }
+    }
+    if let Some((case, size, msg)) = failures {
+        panic!(
+            "property '{name}' failed: case={case} size={size} seed={:#x}\n  {msg}",
+            cfg.seed
+        );
+    }
+}
+
+/// [`forall_cfg`] with the default configuration but a custom case count.
+pub fn forall<G: Gen>(
+    name: &str,
+    cases: usize,
+    gen: G,
+    prop: impl Fn(&G::Output) -> Result<(), String>,
+) {
+    forall_cfg(name, &PropConfig { cases, ..Default::default() }, gen, prop)
+}
+
+/// Assert two floats are close; returns Err for `forall` props.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol}, |Δ|={})", (a - b).abs()))
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn close_vec(a: &[f64], b: &[f64], tol: f64, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for i in 0..a.len() {
+        close(a[i], b[i], tol, &format!("{what}[{i}]"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum commutes", 32, |rng: &mut Rng, size: usize| {
+            (0..size).map(|_| rng.uniform()).collect::<Vec<f64>>()
+        }, |xs| {
+            let fwd: f64 = xs.iter().sum();
+            let rev: f64 = xs.iter().rev().sum();
+            close(fwd, rev, 1e-9, "sum")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_reports() {
+        forall("boom", 4, |_rng: &mut Rng, size: usize| size, |_s| {
+            Err("always fails".to_string())
+        });
+    }
+
+    #[test]
+    fn shrink_finds_smaller_case() {
+        // Property fails for any size >= 3; the runner should report size 3
+        // (or min) rather than the first-failing larger size.
+        let result = std::panic::catch_unwind(|| {
+            forall_cfg(
+                "shrinks",
+                &PropConfig { cases: 16, seed: 7, min_size: 1, max_size: 16 },
+                |_rng: &mut Rng, size: usize| size,
+                |&s| if s >= 3 { Err(format!("fails at {s}")) } else { Ok(()) },
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("size=3"), "got: {msg}");
+    }
+
+    #[test]
+    fn close_vec_checks_lengths() {
+        assert!(close_vec(&[1.0], &[1.0, 2.0], 1e-9, "v").is_err());
+        assert!(close_vec(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, "v").is_ok());
+    }
+}

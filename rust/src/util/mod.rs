@@ -1,0 +1,66 @@
+//! Small utilities: timing, summary statistics, logging.
+
+pub mod stats;
+pub mod timer;
+
+pub use stats::Summary;
+pub use timer::Timer;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+
+/// Set global verbosity (0 quiet, 1 info, 2 debug).
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_level() -> u8 {
+    LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Info-level log line to stderr.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 1 {
+            eprintln!("[sven] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Debug-level log line to stderr.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 2 {
+            eprintln!("[sven:debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Format a duration in adaptive human units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5e-9), "2.5ns");
+        assert_eq!(fmt_duration(3.5e-5), "35.0µs");
+        assert_eq!(fmt_duration(0.0123), "12.30ms");
+        assert_eq!(fmt_duration(1.5), "1.500s");
+    }
+}

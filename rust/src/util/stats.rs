@@ -1,0 +1,91 @@
+//! Summary statistics for benchmark reporting.
+
+/// Order statistics + moments over a sample of measurements.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    sorted: Vec<f64>,
+    mean: f64,
+    std: f64,
+}
+
+impl Summary {
+    pub fn from(mut xs: Vec<f64>) -> Self {
+        assert!(!xs.is_empty(), "empty sample");
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Summary { sorted: xs, mean, std: var.sqrt() }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        self.std
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap()
+    }
+
+    /// Percentile by linear interpolation, q in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        let pos = q * (self.sorted.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            self.sorted[lo]
+        } else {
+            let w = pos - lo as f64;
+            self.sorted[lo] * (1.0 - w) + self.sorted[hi] * w
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn n(&self) -> usize {
+        self.sorted.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(vec![3.0, 1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.median(), 3.0);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.n(), 5);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let s = Summary::from(vec![0.0, 10.0]);
+        assert!((s.quantile(0.25) - 2.5).abs() < 1e-12);
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert_eq!(s.quantile(1.0), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_sample_panics() {
+        Summary::from(vec![]);
+    }
+}

@@ -1,0 +1,135 @@
+//! Cross-solver correctness: every solver in the repo must agree on the
+//! same problems — the paper's §5 "Correctness" claim, system-wide.
+
+use sven::data::{synth_regression, SynthSpec};
+use sven::linalg::vecops;
+use sven::solvers::elastic_net::{penalized_to_constrained, EnProblem};
+use sven::solvers::glmnet::{self, GlmnetConfig};
+use sven::solvers::l1ls::{solve_l1ls, L1LsConfig};
+use sven::solvers::shotgun::{solve_shotgun, ShotgunConfig};
+use sven::solvers::sven::{RustBackend, Sven};
+
+/// Solve one grid point with every applicable solver and cross-check.
+fn cross_check(n: usize, p: usize, seed: u64, kappa: f64, frac: f64) {
+    let d = synth_regression(&SynthSpec { n, p, support: 8.min(p), seed, ..Default::default() });
+    let lambda = glmnet::cd::lambda_max(&d.x, &d.y, kappa) * frac;
+    let cfg = GlmnetConfig { kappa, tol: 1e-12, ..Default::default() };
+    let reference = glmnet::solve_penalized(&d.x, &d.y, lambda, &cfg, None);
+    if vecops::norm1(&reference.beta) < 1e-10 {
+        return;
+    }
+
+    // Shotgun (any κ)
+    let s = solve_shotgun(
+        &d.x,
+        &d.y,
+        lambda,
+        &ShotgunConfig { kappa, tol: 1e-12, ..Default::default() },
+        None,
+    );
+    for j in 0..p {
+        assert!(
+            (s.beta[j] - reference.beta[j]).abs() < 5e-4,
+            "shotgun[{j}] {} vs {}",
+            s.beta[j],
+            reference.beta[j]
+        );
+    }
+
+    // L1_LS (Lasso only)
+    if (kappa - 1.0).abs() < 1e-12 {
+        let l = solve_l1ls(&d.x, &d.y, lambda, &L1LsConfig { tol: 1e-10, ..Default::default() });
+        for j in 0..p {
+            assert!(
+                (l.beta[j] - reference.beta[j]).abs() < 1e-3,
+                "l1ls[{j}] {} vs {}",
+                l.beta[j],
+                reference.beta[j]
+            );
+        }
+    }
+
+    // SVEN (both constrained-form params from the paper protocol)
+    let (t, lambda2) = penalized_to_constrained(&reference.beta, lambda, kappa, n);
+    if lambda2 > 0.0 {
+        let prob = EnProblem::new(d.x.clone(), d.y.clone(), t, lambda2);
+        let sven = Sven::new(RustBackend::default());
+        let sol = sven.solve(&prob).unwrap();
+        for j in 0..p {
+            assert!(
+                (sol.beta[j] - reference.beta[j]).abs() < 1e-4,
+                "sven[{j}] {} vs {}",
+                sol.beta[j],
+                reference.beta[j]
+            );
+        }
+        // KKT residual of the constrained problem must be near-zero.
+        let kkt = prob.kkt_residual(&sol.beta);
+        assert!(kkt < 1e-3, "kkt residual {kkt}");
+    }
+}
+
+#[test]
+fn all_solvers_agree_wide() {
+    cross_check(25, 60, 501, 0.5, 0.3);
+}
+
+#[test]
+fn all_solvers_agree_tall() {
+    cross_check(150, 12, 502, 0.5, 0.3);
+}
+
+#[test]
+fn all_solvers_agree_lasso() {
+    cross_check(40, 30, 503, 1.0, 0.4);
+}
+
+#[test]
+fn all_solvers_agree_heavy_ridge() {
+    cross_check(35, 25, 504, 0.2, 0.3);
+}
+
+#[test]
+fn sven_handles_correlated_features() {
+    // strong correlation: the elastic net's grouping-effect regime
+    let d = synth_regression(&SynthSpec {
+        n: 40,
+        p: 60,
+        support: 6,
+        rho: 0.95,
+        seed: 505,
+        ..Default::default()
+    });
+    let kappa = 0.5;
+    let lambda = glmnet::cd::lambda_max(&d.x, &d.y, kappa) * 0.25;
+    let reference = glmnet::solve_penalized(
+        &d.x,
+        &d.y,
+        lambda,
+        &GlmnetConfig { kappa, tol: 1e-12, ..Default::default() },
+        None,
+    );
+    let (t, lambda2) = penalized_to_constrained(&reference.beta, lambda, kappa, 40);
+    if t < 1e-10 {
+        return;
+    }
+    let sol = Sven::new(RustBackend::default())
+        .solve(&EnProblem::new(d.x, d.y, t, lambda2))
+        .unwrap();
+    for j in 0..60 {
+        assert!((sol.beta[j] - reference.beta[j]).abs() < 1e-4, "j={j}");
+    }
+}
+
+#[test]
+fn path_sweep_matches_everywhere() {
+    use sven::coordinator::{path::max_deviation, PathRunner, PathRunnerConfig};
+    let d = synth_regression(&SynthSpec { n: 50, p: 80, support: 10, seed: 506, ..Default::default() });
+    let runner = PathRunner::new(PathRunnerConfig { grid: 15, ..Default::default() });
+    let results = runner
+        .derive_and_run(&d, &Sven::new(RustBackend::default()))
+        .unwrap();
+    assert!(results.len() >= 5, "grid too small: {}", results.len());
+    let dev = max_deviation(&results);
+    assert!(dev < 5e-4, "path deviation {dev}");
+}

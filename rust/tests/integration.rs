@@ -1,0 +1,126 @@
+//! Whole-system integration: data layer → path protocol → coordinator
+//! service → solution quality, plus CLI plumbing and IO round trips.
+
+use std::sync::Arc;
+use sven::coordinator::{BackendChoice, PathRunner, PathRunnerConfig, Service, ServiceConfig};
+use sven::coordinator::PoolConfig;
+use sven::data::{profile_by_name, synth_regression, SynthSpec};
+use sven::solvers::sven::{RustBackend, Sven};
+
+#[test]
+fn profile_to_path_to_solution() {
+    // Use a scaled-down profile-like dataset for CI speed.
+    let d = synth_regression(&SynthSpec {
+        name: "GLI-85-mini".into(),
+        n: 40,
+        p: 300,
+        support: 12,
+        rho: 0.6,
+        seed: 701,
+        ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig { grid: 10, ..Default::default() });
+    let results = runner
+        .derive_and_run(&d, &Sven::new(RustBackend::default()))
+        .unwrap();
+    assert!(!results.is_empty());
+    // supports grow along the grid, deviations stay tiny
+    assert!(results.windows(2).all(|w| w[0].nnz <= w[1].nnz + 2));
+    assert!(results.iter().all(|r| r.max_dev < 5e-4));
+}
+
+#[test]
+fn service_full_grid_both_datasets() {
+    let wide = synth_regression(&SynthSpec {
+        n: 30, p: 80, support: 8, seed: 702, ..Default::default()
+    });
+    let tall = synth_regression(&SynthSpec {
+        n: 200, p: 12, support: 5, seed: 703, ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig { grid: 6, ..Default::default() });
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 3, queue_capacity: 8 },
+        ..Default::default()
+    });
+    let mut receivers = Vec::new();
+    for (id, d) in [(1u64, &wide), (2, &tall)] {
+        let grid = runner.derive_grid(d);
+        assert!(!grid.is_empty());
+        let x = Arc::new(d.x.clone());
+        let y = Arc::new(d.y.clone());
+        for pt in &grid {
+            receivers.push((
+                pt.beta.clone(),
+                service.submit(id, x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-6), BackendChoice::Rust),
+            ));
+        }
+    }
+    for (beta_ref, rx) in receivers {
+        let out = rx.recv().unwrap();
+        let sol = out.result.expect("solve ok");
+        let dev = sol
+            .beta
+            .iter()
+            .zip(&beta_ref)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(dev < 1e-3, "dev {dev}");
+    }
+    assert_eq!(service.metrics().failed(), 0);
+    service.shutdown();
+}
+
+#[test]
+fn dataset_profiles_generate_and_standardize() {
+    for name in ["GLI-85", "YearPredictionMSD"] {
+        let prof = profile_by_name(name).unwrap();
+        // tiny seed-stable generation sanity (full size covered in benches)
+        let d = prof.generate(1);
+        assert_eq!(d.n(), prof.n);
+        assert_eq!(d.p(), prof.p);
+        assert!(sven::linalg::vecops::mean(&d.y).abs() < 1e-8);
+    }
+}
+
+#[test]
+fn svmlight_roundtrip_through_solver() {
+    let d = synth_regression(&SynthSpec { n: 25, p: 15, support: 4, seed: 704, ..Default::default() });
+    let dir = std::env::temp_dir().join("sven_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ds.svm");
+    sven::data::svmlight::write_svmlight(&path, &d.x, &d.y).unwrap();
+    let (xr, yr) = sven::data::svmlight::read_svmlight(&path, 15).unwrap();
+    let xd = xr.to_dense();
+    // solving the round-tripped data gives the same path
+    let runner = PathRunner::new(PathRunnerConfig { grid: 4, ..Default::default() });
+    let orig = runner.derive_grid(&d);
+    let rt_data = sven::data::Dataset { name: "rt".into(), x: xd, y: yr, beta_true: None };
+    let rt = runner.derive_grid(&rt_data);
+    assert_eq!(orig.len(), rt.len());
+    for (a, b) in orig.iter().zip(&rt) {
+        assert!((a.t - b.t).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn cli_arg_parsing_smoke() {
+    let args = sven::cli::parse_args(&[
+        "--dataset".into(),
+        "Arcene".into(),
+        "--grid".into(),
+        "12".into(),
+    ])
+    .unwrap();
+    assert_eq!(args.get("dataset"), Some("Arcene"));
+    assert_eq!(args.get_usize("grid").unwrap(), Some(12));
+}
+
+#[test]
+fn slack_budget_warning_path() {
+    let d = synth_regression(&SynthSpec { n: 60, p: 8, support: 4, seed: 705, ..Default::default() });
+    let sven = Sven::new(RustBackend::default());
+    let huge = sven::solvers::elastic_net::EnProblem::new(d.x.clone(), d.y.clone(), 1e7, 0.5);
+    assert!(sven.budget_is_slack(&huge));
+    let tiny = sven::solvers::elastic_net::EnProblem::new(d.x, d.y, 1e-2, 0.5);
+    assert!(!sven.budget_is_slack(&tiny));
+}

@@ -1,0 +1,102 @@
+//! Rust-side half of the padding-exactness proof: the XLA backend pads
+//! problems into shape buckets with a validity mask; solutions must be
+//! bit-for-bit consistent with the snug (unpadded) rust solve.
+//! (The python half is python/tests/test_padding.py.)
+
+use sven::data::{synth_regression, SynthSpec};
+use sven::runtime::engine::{pad_matrix, pad_vec, sample_mask, unpad_alpha};
+use sven::solvers::elastic_net::EnProblem;
+use sven::solvers::glmnet::{self, GlmnetConfig};
+use sven::solvers::sven::{RustBackend, Sven};
+
+fn problem(n: usize, p: usize, seed: u64) -> Option<EnProblem> {
+    let d = synth_regression(&SynthSpec { n, p, support: 6, seed, ..Default::default() });
+    let lambda = glmnet::cd::lambda_max(&d.x, &d.y, 0.5) * 0.3;
+    let g = glmnet::solve_penalized(
+        &d.x,
+        &d.y,
+        lambda,
+        &GlmnetConfig { tol: 1e-13, ..Default::default() },
+        None,
+    );
+    let t = sven::linalg::vecops::norm1(&g.beta);
+    if t < 1e-10 {
+        return None;
+    }
+    Some(EnProblem::new(d.x, d.y, t, n as f64 * lambda * 0.5))
+}
+
+#[test]
+fn pad_helpers_are_exact() {
+    let m = pad_matrix(&[1., 2., 3., 4., 5., 6.], 2, 3, 4, 5);
+    assert_eq!(m.len(), 20);
+    assert_eq!(&m[0..3], &[1., 2., 3.]);
+    assert_eq!(&m[5..8], &[4., 5., 6.]);
+    assert!(m[3] == 0.0 && m[10] == 0.0);
+    assert_eq!(pad_vec(&[1., 2.], 5), vec![1., 2., 0., 0., 0.]);
+    let mask = sample_mask(3, 5);
+    assert_eq!(mask, vec![1., 1., 1., 0., 0., 1., 1., 1., 0., 0.]);
+    let alpha = unpad_alpha(&[1., 2., 3., 0., 0., 4., 5., 6., 0., 0.], 3, 5);
+    assert_eq!(alpha, vec![1., 2., 3., 4., 5., 6.]);
+}
+
+/// XLA (bucket-padded) vs rust (snug) on a problem that does NOT fill its
+/// bucket: (20, 40) in the (32, 64) bucket, padding ratio ≈ 2.6×.
+#[test]
+fn padded_xla_equals_snug_rust_primal() {
+    if !sven::runtime::default_artifact_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let Some(prob) = problem(20, 40, 601) else { return };
+    let xla = Sven::new(sven::runtime::XlaBackend::from_default_dir().unwrap());
+    let rust = Sven::new(RustBackend::default());
+    let bx = xla.solve(&prob).unwrap();
+    let br = rust.solve(&prob).unwrap();
+    for j in 0..prob.p() {
+        assert!((bx.beta[j] - br.beta[j]).abs() < 1e-6, "j={j}");
+    }
+}
+
+/// Dual-mode padding: (150, 12) pads into gram (256, 16) + dual p=16.
+#[test]
+fn padded_xla_equals_snug_rust_dual() {
+    if !sven::runtime::default_artifact_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let Some(prob) = problem(150, 12, 602) else { return };
+    let xla = Sven::new(sven::runtime::XlaBackend::from_default_dir().unwrap());
+    let rust = Sven::new(RustBackend::default());
+    let bx = xla.solve(&prob).unwrap();
+    let br = rust.solve(&prob).unwrap();
+    for j in 0..prob.p() {
+        assert!((bx.beta[j] - br.beta[j]).abs() < 1e-6, "j={j}");
+    }
+}
+
+/// Two different problems sharing one bucket must not contaminate each
+/// other through the padded region (regression test for mask reuse).
+#[test]
+fn bucket_sharing_no_cross_contamination() {
+    if !sven::runtime::default_artifact_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let xla = Sven::new(sven::runtime::XlaBackend::from_default_dir().unwrap());
+    let rust = Sven::new(RustBackend::default());
+    for seed in [603u64, 604, 605] {
+        // different shapes, same (32, 64) bucket
+        for (n, p) in [(18usize, 35usize), (25, 50), (30, 60)] {
+            let Some(prob) = problem(n, p, seed ^ (n * p) as u64) else { continue };
+            let bx = xla.solve(&prob).unwrap();
+            let br = rust.solve(&prob).unwrap();
+            for j in 0..prob.p() {
+                assert!(
+                    (bx.beta[j] - br.beta[j]).abs() < 1e-6,
+                    "({n},{p}) seed {seed} j={j}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Property-based tests over the coordinator and solver invariants,
+//! using the in-tree `forall` framework (rust/src/testing).
+
+use sven::data::{synth_regression, SynthSpec};
+use sven::linalg::{vecops, Mat};
+use sven::rng::Rng;
+use sven::solvers::elastic_net::{penalized_to_constrained, EnProblem};
+use sven::solvers::glmnet::{self, GlmnetConfig};
+use sven::solvers::sven::{backmap, effective_c, RustBackend, Sven, SvmMode};
+use sven::testing::prop::{close, close_vec, forall};
+
+/// Generator: a random standardized regression problem, sized by `size`.
+fn gen_problem(rng: &mut Rng, size: usize) -> (Mat, Vec<f64>, u64) {
+    let n = 10 + (rng.below(8) + size) * 3;
+    let p = 5 + (rng.below(10) + size) * 4;
+    let seed = rng.next_u64();
+    let d = synth_regression(&SynthSpec {
+        n,
+        p,
+        support: 4.min(p),
+        rho: rng.uniform_in(0.0, 0.8),
+        seed,
+        ..Default::default()
+    });
+    (d.x, d.y, seed)
+}
+
+#[test]
+fn prop_sven_matches_glmnet() {
+    forall("sven == glmnet on random problems", 20, gen_problem, |(x, y, _)| {
+        let kappa = 0.5;
+        let lambda = glmnet::cd::lambda_max(x, y, kappa) * 0.3;
+        let g = glmnet::solve_penalized(
+            x,
+            y,
+            lambda,
+            &GlmnetConfig { kappa, tol: 1e-12, ..Default::default() },
+            None,
+        );
+        let (t, lambda2) = penalized_to_constrained(&g.beta, lambda, kappa, x.rows());
+        if t < 1e-10 {
+            return Ok(());
+        }
+        let sol = Sven::new(RustBackend::default())
+            .solve(&EnProblem::new(x.clone(), y.clone(), t, lambda2))
+            .map_err(|e| e.to_string())?;
+        close_vec(&sol.beta, &g.beta, 1e-3, "beta")
+    });
+}
+
+#[test]
+fn prop_primal_dual_agree() {
+    forall("primal α == dual α", 14, gen_problem, |(x, y, _)| {
+        use sven::solvers::sven::SvmBackend;
+        let backend = RustBackend::default();
+        let mut prim = backend.prepare(x, y, SvmMode::Primal).map_err(|e| e.to_string())?;
+        let mut dual = backend.prepare(x, y, SvmMode::Dual).map_err(|e| e.to_string())?;
+        let (t, c) = (0.7, 4.0);
+        let a = prim.solve(t, c, None).map_err(|e| e.to_string())?.alpha;
+        let b = dual.solve(t, c, None).map_err(|e| e.to_string())?.alpha;
+        close_vec(&a, &b, 1e-4, "alpha")
+    });
+}
+
+#[test]
+fn prop_backmap_l1_bound() {
+    // |backmap(α)|₁ ≤ t for every non-negative α.
+    forall(
+        "backmap respects the budget",
+        64,
+        |rng: &mut Rng, size: usize| {
+            let p = 1 + size;
+            let alpha: Vec<f64> = (0..2 * p).map(|_| rng.uniform() * 3.0).collect();
+            let t = rng.uniform_in(0.1, 10.0);
+            (alpha, p, t)
+        },
+        |(alpha, p, t)| {
+            let (beta, _) = backmap(alpha, *p, *t);
+            let l1 = vecops::norm1(&beta);
+            if l1 <= t * (1.0 + 1e-9) {
+                Ok(())
+            } else {
+                Err(format!("|β|₁ = {l1} > t = {t}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_backmap_scale_invariance() {
+    forall(
+        "backmap is scale-invariant in α",
+        64,
+        |rng: &mut Rng, size: usize| {
+            let p = 1 + size;
+            let alpha: Vec<f64> = (0..2 * p).map(|_| rng.uniform()).collect();
+            let scale = rng.uniform_in(0.1, 100.0);
+            (alpha, p, scale)
+        },
+        |(alpha, p, scale)| {
+            let (b1, _) = backmap(alpha, *p, 1.0);
+            let scaled: Vec<f64> = alpha.iter().map(|a| a * scale).collect();
+            let (b2, _) = backmap(&scaled, *p, 1.0);
+            close_vec(&b1, &b2, 1e-9, "beta")
+        },
+    );
+}
+
+#[test]
+fn prop_effective_c_monotone() {
+    forall(
+        "C(λ₂) is monotone decreasing",
+        64,
+        |rng: &mut Rng, _| (rng.uniform_in(1e-8, 10.0), rng.uniform_in(1e-8, 10.0)),
+        |(a, b)| {
+            let (lo, hi) = if a < b { (*a, *b) } else { (*b, *a) };
+            if effective_c(lo, 1e10) >= effective_c(hi, 1e10) {
+                Ok(())
+            } else {
+                Err(format!("C not monotone at {lo} vs {hi}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_objective_at_solution_not_worse_than_truth() {
+    // The solver's objective must beat (or tie) the generating ground
+    // truth rescaled into the budget — a sanity floor on optimality.
+    forall("solution beats rescaled truth", 12, gen_problem, |(x, y, _)| {
+        let kappa = 0.5;
+        let lambda = glmnet::cd::lambda_max(x, y, kappa) * 0.25;
+        let g = glmnet::solve_penalized(
+            x,
+            y,
+            lambda,
+            &GlmnetConfig { kappa, ..Default::default() },
+            None,
+        );
+        let (t, lambda2) = penalized_to_constrained(&g.beta, lambda, kappa, x.rows());
+        if t < 1e-10 {
+            return Ok(());
+        }
+        let prob = EnProblem::new(x.clone(), y.clone(), t, lambda2);
+        let sol = Sven::new(RustBackend::default()).solve(&prob).map_err(|e| e.to_string())?;
+        // any feasible candidate: glmnet's own solution
+        let cand_obj = prob.objective(&g.beta);
+        if sol.objective <= cand_obj * (1.0 + 1e-6) + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("objective {} worse than candidate {}", sol.objective, cand_obj))
+        }
+    });
+}
+
+#[test]
+fn prop_queue_never_loses_jobs() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use sven::coordinator::{Pool, PoolConfig};
+    forall(
+        "pool processes exactly what was submitted",
+        10,
+        |rng: &mut Rng, size: usize| (1 + rng.below(4), 1 + size * 7),
+        |&(workers, jobs)| {
+            let done = Arc::new(AtomicUsize::new(0));
+            let done2 = done.clone();
+            let pool = Pool::spawn(
+                &PoolConfig { workers, queue_capacity: 4 },
+                |_| (),
+                move |_, _job: usize| {
+                    done2.fetch_add(1, Ordering::Relaxed);
+                },
+            );
+            for i in 0..jobs {
+                pool.submit(i).map_err(|_| "pool closed early".to_string())?;
+            }
+            pool.shutdown();
+            let n = done.load(Ordering::Relaxed);
+            close(n as f64, jobs as f64, 0.0, "processed count")
+        },
+    );
+}
+
+#[test]
+fn prop_standardize_idempotent_shape() {
+    forall(
+        "standardized data stays standardized",
+        24,
+        |rng: &mut Rng, size: usize| {
+            let n = 8 + size * 2;
+            let p = 3 + size;
+            let mean = rng.uniform_in(-3.0, 3.0);
+            let x = Mat::from_fn(n, p, |_, _| rng.normal_ms(mean, 2.0));
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (x, y)
+        },
+        |(x, y)| {
+            let (xs, yc, _) = sven::data::standardize(x, y);
+            let (xs2, yc2, _) = sven::data::standardize(&xs, &yc);
+            close_vec(xs2.data(), xs.data(), 1e-8, "X")?;
+            close_vec(&yc2, &yc, 1e-8, "y")
+        },
+    );
+}

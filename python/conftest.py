@@ -1,0 +1,8 @@
+"""Make the `compile` package importable when pytest runs from the repo
+root (`python -m pytest python/tests -q`): the package lives at
+`python/compile`, so `python/` must be on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

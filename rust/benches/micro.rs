@@ -1,49 +1,76 @@
 //! Microbenchmarks of the substrate hot paths (gemm, gram, CD epoch,
 //! Newton step) — the profile targets of EXPERIMENTS.md §Perf.
-//! Run: `cargo bench --bench micro`
+//!
+//! Run: `cargo bench --bench micro` for the full shapes (including the
+//! blocked-kernel acceptance shapes: gemm 1024³ and the gram of an
+//! n=4096, p=1024 design), or `cargo bench --bench micro -- --test` for
+//! the CI smoke mode (tiny shapes, compile-and-run-once) that gates
+//! kernel regressions without paying figure-scale runtimes.
 use sven::bench::harness::measure;
 use sven::data::{synth_regression, SynthSpec};
 use sven::linalg::Mat;
 use sven::rng::Rng;
 use sven::solvers::glmnet::{self, GlmnetConfig};
-use sven::solvers::svm::{primal_newton, PrimalOptions, ReducedSamples, SampleSet};
 use sven::solvers::svm::samples::reduction_labels;
+use sven::solvers::svm::{primal_newton, PrimalOptions, ReducedSamples, SampleSet};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
     let mut rng = Rng::seed_from(7);
 
-    // gemm 256x256x256
-    let a = Mat::from_fn(256, 256, |_, _| rng.normal());
-    let b = Mat::from_fn(256, 256, |_, _| rng.normal());
-    let m = measure(2, 10, || a.matmul(&b));
-    let flops = 2.0 * 256f64.powi(3);
+    // Blocked-kernel micro-bench: naive seed kernel vs packed blocked,
+    // serial and threaded (the tentpole's measured speedup).
+    let (sp_gemm, sp_gram) = sven::bench::figures::linalg_micro(!smoke);
+    if !smoke {
+        println!(
+            "blocked-vs-naive speedup: gemm {sp_gemm:.1}x, gram {sp_gram:.1}x \
+             (acceptance: >= 2x with >= 4 threads)"
+        );
+    }
+
+    let (warm, reps) = if smoke { (1, 2) } else { (2, 10) };
+
+    // gemm through the Mat facade (includes dispatch + allocation)
+    let e = if smoke { 128 } else { 256 };
+    let a = Mat::from_fn(e, e, |_, _| rng.normal());
+    let b = Mat::from_fn(e, e, |_, _| rng.normal());
+    let m = measure(warm, reps, || a.matmul(&b));
+    let flops = 2.0 * (e as f64).powi(3);
     println!(
-        "gemm 256^3: median {:.3}ms  ({:.2} GFLOP/s)",
+        "gemm {e}^3 (Mat): median {:.3}ms  ({:.2} GFLOP/s)",
         m.summary.median() * 1e3,
         flops / m.summary.median() / 1e9
     );
 
-    // gram 512x256
-    let g = Mat::from_fn(512, 256, |_, _| rng.normal());
-    let m = measure(2, 10, || g.gram());
+    // gram through the Mat facade
+    let (gr, gc) = if smoke { (192, 96) } else { (512, 256) };
+    let g = Mat::from_fn(gr, gc, |_, _| rng.normal());
+    let m = measure(warm, reps, || g.gram());
     println!(
-        "gram 512x256 (AAᵀ): median {:.3}ms  ({:.2} GFLOP/s)",
+        "gram {gr}x{gc} (AAᵀ): median {:.3}ms  ({:.2} GFLOP/s)",
         m.summary.median() * 1e3,
-        512.0 * 512.0 * 256.0 / m.summary.median() / 1e9
+        (gr * gr * gc) as f64 / m.summary.median() / 1e9
     );
 
-    // CD epoch on 200x2000
-    let d = synth_regression(&SynthSpec { n: 200, p: 2000, support: 20, seed: 1, ..Default::default() });
+    // CD epoch
+    let (cd_n, cd_p) = if smoke { (60, 300) } else { (200, 2000) };
+    let d = synth_regression(&SynthSpec {
+        n: cd_n,
+        p: cd_p,
+        support: 20.min(cd_p / 4),
+        seed: 1,
+        ..Default::default()
+    });
     let lambda = glmnet::cd::lambda_max(&d.x, &d.y, 0.5) * 0.2;
-    let m = measure(1, 5, || {
+    let m = measure(1, if smoke { 1 } else { 5 }, || {
         glmnet::solve_penalized(&d.x, &d.y, lambda, &GlmnetConfig::default(), None)
     });
-    println!("glmnet solve 200x2000: median {:.3}ms", m.summary.median() * 1e3);
+    println!("glmnet solve {cd_n}x{cd_p}: median {:.3}ms", m.summary.median() * 1e3);
 
     // primal Newton on the reduction (implicit operator)
     let samples = ReducedSamples { x: &d.x, y: &d.y, t: 1.0 };
     let labels = reduction_labels(d.x.cols());
-    let mm = measure(1, 5, || {
+    let mm = measure(1, if smoke { 1 } else { 5 }, || {
         primal_newton(&samples, &labels, 10.0, &PrimalOptions::default(), None)
     });
     println!(
@@ -56,7 +83,13 @@ fn main() {
     // XLA single solve latency (bucket-padded), if artifacts exist
     if let Ok(backend) = sven::runtime::XlaBackend::from_default_dir() {
         use sven::solvers::sven::Sven;
-        let d2 = synth_regression(&SynthSpec { n: 100, p: 400, support: 10, seed: 2, ..Default::default() });
+        let d2 = synth_regression(&SynthSpec {
+            n: 100,
+            p: 400,
+            support: 10,
+            seed: 2,
+            ..Default::default()
+        });
         let grid = {
             use sven::coordinator::{PathRunner, PathRunnerConfig};
             PathRunner::new(PathRunnerConfig { grid: 3, ..Default::default() }).derive_grid(&d2)
@@ -64,12 +97,19 @@ fn main() {
         if let Some(pt) = grid.last() {
             let sven_xla = Sven::new(backend);
             let prob = sven::solvers::elastic_net::EnProblem::new(
-                d2.x.clone(), d2.y.clone(), pt.t, pt.lambda2.max(1e-6));
+                d2.x.clone(),
+                d2.y.clone(),
+                pt.t,
+                pt.lambda2.max(1e-6),
+            );
             let mut prep = sven_xla.prepare(&d2.x, &d2.y).unwrap();
             let m = measure(2, 10, || {
                 sven_xla.solve_prepared(prep.as_mut(), &prob, None).unwrap()
             });
-            println!("sven_xla solve 100x400 (prepared): median {:.3}ms", m.summary.median() * 1e3);
+            println!(
+                "sven_xla solve 100x400 (prepared): median {:.3}ms",
+                m.summary.median() * 1e3
+            );
         }
     }
 }

@@ -67,6 +67,78 @@ fn xla_sven() -> Option<Sven<crate::runtime::XlaBackend>> {
 }
 
 // ---------------------------------------------------------------------------
+// Linalg kernel micro-bench (gemm/gram)
+// ---------------------------------------------------------------------------
+
+/// Gemm/gram micro-bench: the seed's naive serial kernels against the
+/// packed blocked kernel at one thread and at the effective thread
+/// count. `full` runs the acceptance shapes (gemm 1024³; gram `XᵀX` for
+/// X of n=4096, p=1024); otherwise tiny CI-smoke shapes. Returns the
+/// (gemm, gram) speedups of the threaded blocked kernel over naive.
+pub fn linalg_micro(full: bool) -> (f64, f64) {
+    use super::harness::measure;
+    use crate::linalg::gemm;
+    use crate::util::parallel;
+
+    let nt = parallel::effective_threads();
+    let reps = if full { 3 } else { 2 };
+    let mut rng = crate::rng::Rng::seed_from(4242);
+    println!("=== linalg micro: seed naive kernel vs blocked (nt = {nt}) ===");
+
+    // --- GEMM ---
+    let (m, k, n) = if full { (1024, 1024, 1024) } else { (160, 96, 128) };
+    let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut c = vec![0.0; m * n];
+    let flops = 2.0 * (m * k * n) as f64;
+    let t_naive = measure(1, reps, || gemm::naive_matmul_into(&a, &b, &mut c, m, k, n))
+        .summary
+        .median();
+    let t_b1 = measure(1, reps, || gemm::blocked_matmul_into(&a, &b, &mut c, m, k, n, 1))
+        .summary
+        .median();
+    let t_bn = measure(1, reps, || gemm::blocked_matmul_into(&a, &b, &mut c, m, k, n, nt))
+        .summary
+        .median();
+    let gemm_speedup = t_naive / t_bn;
+    println!(
+        "gemm {m}x{k}x{n}: naive {:.1}ms ({:.2} GF/s) | blocked@1 {:.1}ms ({:.1}x) | \
+         blocked@{nt} {:.1}ms ({:.1}x)",
+        t_naive * 1e3,
+        flops / t_naive / 1e9,
+        t_b1 * 1e3,
+        t_naive / t_b1,
+        t_bn * 1e3,
+        gemm_speedup
+    );
+
+    // --- Gram (XᵀX of an n×p design, computed as AAᵀ of the transpose) ---
+    let (gm, gk) = if full { (1024, 4096) } else { (96, 200) };
+    let a2: Vec<f64> = (0..gm * gk).map(|_| rng.normal()).collect();
+    let mut g = vec![0.0; gm * gm];
+    let gflops = (gm * gm * gk) as f64;
+    let t_naive = measure(1, reps, || gemm::naive_gram_into(&a2, &mut g, gm, gk))
+        .summary
+        .median();
+    let t_b1 =
+        measure(1, reps, || gemm::blocked_gram_into(&a2, &mut g, gm, gk, 1)).summary.median();
+    let t_bn =
+        measure(1, reps, || gemm::blocked_gram_into(&a2, &mut g, gm, gk, nt)).summary.median();
+    let gram_speedup = t_naive / t_bn;
+    println!(
+        "gram XᵀX (X {gk}x{gm}): naive {:.1}ms ({:.2} GF/s) | blocked@1 {:.1}ms ({:.1}x) | \
+         blocked@{nt} {:.1}ms ({:.1}x)",
+        t_naive * 1e3,
+        gflops / t_naive / 1e9,
+        t_b1 * 1e3,
+        t_naive / t_b1,
+        t_bn * 1e3,
+        gram_speedup
+    );
+    (gemm_speedup, gram_speedup)
+}
+
+// ---------------------------------------------------------------------------
 // Figure 1
 // ---------------------------------------------------------------------------
 

@@ -44,7 +44,8 @@ impl BenchRow {
     pub fn header() -> String {
         format!(
             "{:<14} {:>4} {:>10} {:>10} {:<10} {:>12} {:>12} {:>8} {:>10}",
-            "dataset", "set", "t", "lambda2", "algorithm", "time_s", "sven_xla_s", "ratio", "max_dev"
+            "dataset", "set", "t", "lambda2", "algorithm", "time_s", "sven_xla_s", "ratio",
+            "max_dev"
         )
     }
 

@@ -14,6 +14,7 @@ use crate::solvers::elastic_net::EnProblem;
 use crate::solvers::glmnet::PathSettings;
 use crate::solvers::sven::{RustBackend, Sven};
 use crate::util::fmt_duration;
+use crate::util::parallel::{set_global_parallelism, Parallelism};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -82,16 +83,23 @@ COMMANDS:
       --t X                L1 budget (default: from a path point)
       --lambda2 Y          L2 coefficient             [default 1.0]
       --backend xla|rust   SVM backend                [default rust]
+      --threads N          linalg worker threads (0 = auto, 1 = serial)
   path                     sweep a regularization path (paper protocol)
       --dataset NAME       profile name
       --seed N             generation seed            [default 0]
       --grid K             number of settings         [default 40]
       --backend xla|rust   SVM backend                [default rust]
+      --threads N          linalg worker threads (0 = auto, 1 = serial)
   serve                    demo coordinator run
       --requests N         number of jobs             [default 32]
       --workers N          pool size                  [default cpus]
       --backend xla|rust   SVM backend                [default rust]
+      --threads N          linalg worker threads (0 = auto, 1 = serial)
   help                     show this message
+
+Thread resolution when --threads is absent: PALLAS_NUM_THREADS (fallback
+SVEN_THREADS), else the machine's available parallelism. All blocked
+kernels produce bit-identical results at any thread count.
 ";
 
 /// CLI entrypoint (used by `rust/src/main.rs`).
@@ -158,6 +166,20 @@ fn load_dataset(args: &Args) -> Result<crate::data::Dataset> {
     Ok(profile.generate(seed))
 }
 
+/// Apply `--threads` to the process-wide parallelism setting.
+fn apply_threads(args: &Args) -> Result<()> {
+    if let Some(n) = args.get_usize("threads")? {
+        let p = match n {
+            0 => Parallelism::Auto,
+            1 => Parallelism::None,
+            k => Parallelism::Fixed(k),
+        };
+        set_global_parallelism(p);
+        crate::info!("linalg parallelism: {} worker thread(s)", p.threads());
+    }
+    Ok(())
+}
+
 fn backend_choice(args: &Args) -> Result<BackendChoice> {
     match args.get("backend").unwrap_or("rust") {
         "rust" | "cpu" => Ok(BackendChoice::Rust),
@@ -167,6 +189,7 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
+    apply_threads(args)?;
     let data = load_dataset(args)?;
     let lambda2 = args.get_f64("lambda2")?.unwrap_or(1.0);
     // Default budget: the largest-support point of a short derived path.
@@ -206,6 +229,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_path(args: &Args) -> Result<()> {
+    apply_threads(args)?;
     let data = load_dataset(args)?;
     let grid = args.get_usize("grid")?.unwrap_or(40);
     let runner = PathRunner::new(PathRunnerConfig { grid, ..Default::default() });
@@ -240,6 +264,7 @@ fn cmd_path(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    apply_threads(args)?;
     let requests = args.get_usize("requests")?.unwrap_or(32);
     let backend = backend_choice(args)?;
     let mut config = ServiceConfig::default();
@@ -304,6 +329,18 @@ mod tests {
     fn numeric_flag_errors_are_friendly() {
         let a = parse_args(&raw(&["--t", "abc"])).unwrap();
         assert!(a.get_f64("t").is_err());
+    }
+
+    #[test]
+    fn threads_flag_parses_and_noop_without_flag() {
+        let a = parse_args(&raw(&["--threads", "4"])).unwrap();
+        assert_eq!(a.get_usize("threads").unwrap(), Some(4));
+        // Without the flag, apply_threads must not touch the global
+        // setting (other tests in this process rely on Auto).
+        let none = parse_args(&raw(&[])).unwrap();
+        apply_threads(&none).unwrap();
+        let bad = parse_args(&raw(&["--threads", "x"])).unwrap();
+        assert!(apply_threads(&bad).is_err());
     }
 
     #[test]

@@ -247,7 +247,13 @@ mod tests {
 
     #[test]
     fn service_solves_jobs_in_parallel() {
-        let d = synth_regression(&SynthSpec { n: 30, p: 20, support: 5, seed: 301, ..Default::default() });
+        let d = synth_regression(&SynthSpec {
+            n: 30,
+            p: 20,
+            support: 5,
+            seed: 301,
+            ..Default::default()
+        });
         let lambda = glmnet::cd::lambda_max(&d.x, &d.y, 0.5) * 0.3;
         let g = glmnet::solve_penalized(&d.x, &d.y, lambda, &GlmnetConfig::default(), None);
         let t = crate::linalg::vecops::norm1(&g.beta);
@@ -292,7 +298,13 @@ mod tests {
         // λ₂ < 0 panics inside EnProblem::new — the worker must catch this
         // as an error... EnProblem asserts, so instead feed an XLA job with
         // a missing artifact dir to exercise the error path.
-        let d = synth_regression(&SynthSpec { n: 10, p: 5, support: 2, seed: 302, ..Default::default() });
+        let d = synth_regression(&SynthSpec {
+            n: 10,
+            p: 5,
+            support: 2,
+            seed: 302,
+            ..Default::default()
+        });
         let mut cfg = ServiceConfig {
             pool: PoolConfig { workers: 1, queue_capacity: 2 },
             ..Default::default()

@@ -61,11 +61,15 @@ pub fn read_svmlight(path: &Path, p_hint: usize) -> Result<(Csr, Vec<f64>)> {
             let (idx, val) = tok
                 .split_once(':')
                 .with_context(|| format!("bad pair '{tok}' at line {}", lineno + 1))?;
-            let idx: usize = idx.parse().with_context(|| format!("bad index at line {}", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("bad index at line {}", lineno + 1))?;
             if idx == 0 {
                 bail!("svmlight indices are 1-based; got 0 at line {}", lineno + 1);
             }
-            let val: f64 = val.parse().with_context(|| format!("bad value at line {}", lineno + 1))?;
+            let val: f64 = val
+                .parse()
+                .with_context(|| format!("bad value at line {}", lineno + 1))?;
             max_col = max_col.max(idx);
             trip.push((row, idx - 1, val));
         }

@@ -5,15 +5,26 @@
 //! not worth the iteration overhead.
 
 use super::dense::Mat;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CholeskyError {
-    #[error("matrix not positive definite at pivot {0} (value {1})")]
     NotPd(usize, f64),
-    #[error("matrix not square: {0}x{1}")]
     NotSquare(usize, usize),
 }
+
+impl fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CholeskyError::NotPd(pivot, value) => {
+                write!(f, "matrix not positive definite at pivot {pivot} (value {value})")
+            }
+            CholeskyError::NotSquare(r, c) => write!(f, "matrix not square: {r}x{c}"),
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 /// Lower-triangular Cholesky factor `A = L·Lᵀ`.
 #[derive(Clone, Debug)]

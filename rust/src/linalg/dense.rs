@@ -1,12 +1,20 @@
-//! Dense row-major `f64` matrix with blocked, thread-parallel products.
+//! Dense row-major `f64` matrix over the blocked kernel layer.
 //!
-//! `Mat` is the workhorse of every solver in this crate. The GEMM/GRAM
-//! kernels use cache-blocked loops and `std::thread::scope` for row-band
-//! parallelism — no external BLAS is available offline, and this keeps the
-//! rust CPU backend an honest "optimized CPU baseline" for the paper's
-//! comparisons.
+//! `Mat` is the workhorse of every solver in this crate. All O(n³)
+//! products (GEMM, Gram) route through [`super::gemm`] — packed,
+//! register/L2-tiled, fanned out over the scoped pool in
+//! [`crate::util::parallel`] — and the O(n²) GEMV paths band their
+//! output rows over the same pool. No external BLAS is available
+//! offline; this layer keeps the rust CPU backend an honest "optimized
+//! CPU baseline" for the paper's comparisons.
+//!
+//! Determinism contract: every product's result is bit-identical under
+//! any `Parallelism` setting (the decomposition never depends on the
+//! worker count — see the notes in `gemm.rs` and the fixed-chunk
+//! reduction in [`Mat::matvec_t_into`]).
 
-use super::vecops;
+use super::{gemm, vecops};
+use crate::util::parallel;
 
 /// Dense row-major matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -16,19 +24,10 @@ pub struct Mat {
     data: Vec<f64>,
 }
 
-/// Number of worker threads for blocked products. Cached once.
-pub fn num_threads() -> usize {
-    use std::sync::OnceLock;
-    static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| {
-        std::env::var("SVEN_THREADS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-            })
-    })
-}
+/// Fixed row-chunk length for the `Aᵀx` partial-sum reduction. Constant
+/// (never thread-count-derived) so the reduction tree — and therefore
+/// the result bits — are identical in serial and parallel runs.
+const TCHUNK: usize = 512;
 
 impl Mat {
     /// Zero matrix of shape `rows × cols`.
@@ -131,26 +130,25 @@ impl Mat {
         y
     }
 
-    /// `y ← A·x` into a caller-provided buffer (hot-path form).
+    /// `y ← A·x` into a caller-provided buffer (hot-path form). Output
+    /// rows are banded over the pool; each `y[r]` is one row dot, so the
+    /// result does not depend on the banding.
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        let nt = num_threads();
+        let nt = parallel::effective_threads();
         if self.rows * self.cols < 1 << 16 || nt == 1 {
-            for r in 0..self.rows {
-                y[r] = vecops::dot(self.row(r), x);
+            for (r, yr) in y.iter_mut().enumerate() {
+                *yr = vecops::dot(self.row(r), x);
             }
             return;
         }
         let band = self.rows.div_ceil(nt);
-        std::thread::scope(|s| {
-            for (tid, ych) in y.chunks_mut(band).enumerate() {
-                let lo = tid * band;
-                s.spawn(move || {
-                    for (i, yr) in ych.iter_mut().enumerate() {
-                        *yr = vecops::dot(self.row(lo + i), x);
-                    }
-                });
+        let chunks: Vec<&mut [f64]> = y.chunks_mut(band).collect();
+        parallel::parallel_items(nt, chunks, |tid, ych| {
+            let lo = tid * band;
+            for (i, yr) in ych.iter_mut().enumerate() {
+                *yr = vecops::dot(self.row(lo + i), x);
             }
         });
     }
@@ -162,65 +160,50 @@ impl Mat {
         y
     }
 
-    /// `y ← Aᵀ·x` into a caller-provided buffer. Accumulates row-wise so
-    /// memory access stays sequential over `self.data`.
+    /// `y ← Aᵀ·x` into a caller-provided buffer.
+    ///
+    /// Rows are reduced in fixed [`TCHUNK`]-row chunks: each chunk
+    /// accumulates a private partial (parallel across chunks), then the
+    /// partials are summed in chunk order. The chunk grid is
+    /// size-derived, never thread-derived, so serial and parallel runs
+    /// produce identical bits.
     pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.rows);
         assert_eq!(y.len(), self.cols);
         y.fill(0.0);
-        let nt = num_threads();
-        if self.rows * self.cols < 1 << 16 || nt == 1 {
+        if self.rows == 0 || self.cols == 0 {
+            return;
+        }
+        let nchunks = self.rows.div_ceil(TCHUNK);
+        if nchunks == 1 {
             for r in 0..self.rows {
                 vecops::axpy(x[r], self.row(r), y);
             }
             return;
         }
-        // Each thread accumulates a private output, then we reduce.
-        let band = self.rows.div_ceil(nt);
-        let partials: Vec<Vec<f64>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..nt)
-                .map(|tid| {
-                    s.spawn(move || {
-                        let mut acc = vec![0.0; self.cols];
-                        let lo = tid * band;
-                        let hi = ((tid + 1) * band).min(self.rows);
-                        for r in lo..hi {
-                            vecops::axpy(x[r], self.row(r), &mut acc);
-                        }
-                        acc
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for p in &partials {
+        let nt = parallel::effective_threads();
+        let mut partials = vec![0.0; nchunks * self.cols];
+        {
+            let chunks: Vec<&mut [f64]> = partials.chunks_mut(self.cols).collect();
+            parallel::parallel_items(nt, chunks, |ci, acc| {
+                let lo = ci * TCHUNK;
+                let hi = (lo + TCHUNK).min(self.rows);
+                for r in lo..hi {
+                    vecops::axpy(x[r], self.row(r), acc);
+                }
+            });
+        }
+        for p in partials.chunks(self.cols) {
             vecops::axpy(1.0, p, y);
         }
     }
 
-    /// `C ← A·B` — blocked, thread-parallel over row bands of A.
+    /// `C ← A·B` through the packed blocked kernel (small products fall
+    /// back to the naive loop inside `gemm`).
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "gemm shape mismatch");
         let mut c = Mat::zeros(self.rows, b.cols);
-        let nt = num_threads();
-        let (m, k, n) = (self.rows, self.cols, b.cols);
-        let work = m * k * n;
-        if work < 1 << 18 || nt == 1 {
-            gemm_band(&self.data, &b.data, &mut c.data, 0, m, k, n);
-            return c;
-        }
-        let band = m.div_ceil(nt);
-        std::thread::scope(|s| {
-            for (tid, cch) in c.data.chunks_mut(band * n).enumerate() {
-                let lo = tid * band;
-                let rows_here = cch.len() / n;
-                let a = &self.data;
-                let bd = &b.data;
-                s.spawn(move || {
-                    gemm_band_into(&a[lo * k..(lo + rows_here) * k], bd, cch, rows_here, k, n);
-                });
-            }
-        });
+        gemm::matmul_into(&self.data, &b.data, &mut c.data, self.rows, self.cols, b.cols);
         c
     }
 
@@ -230,53 +213,12 @@ impl Mat {
         at.gram()
     }
 
-    /// Gram matrix `AAᵀ` (`rows × rows`), exploiting symmetry: only the
-    /// upper triangle is computed, then mirrored.
+    /// Gram matrix `AAᵀ` (`rows × rows`) through the symmetric blocked
+    /// kernel: only upper-triangle block pairs are computed, then
+    /// mirrored.
     pub fn gram(&self) -> Mat {
-        let m = self.rows;
-        let mut g = Mat::zeros(m, m);
-        let nt = num_threads();
-        if m * m * self.cols < 1 << 18 || nt == 1 {
-            for i in 0..m {
-                for j in i..m {
-                    let v = vecops::dot(self.row(i), self.row(j));
-                    g.data[i * m + j] = v;
-                    g.data[j * m + i] = v;
-                }
-            }
-            return g;
-        }
-        // Parallel over i with interleaved assignment so triangle work
-        // (row i costs m−i dots) balances across threads.
-        let rows_done: Vec<Vec<(usize, Vec<f64>)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..nt)
-                .map(|tid| {
-                    s.spawn(move || {
-                        let mut out = Vec::new();
-                        let mut i = tid;
-                        while i < m {
-                            let mut row = vec![0.0; m - i];
-                            for j in i..m {
-                                row[j - i] = vecops::dot(self.row(i), self.row(j));
-                            }
-                            out.push((i, row));
-                            i += nt;
-                        }
-                        out
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for chunk in rows_done {
-            for (i, row) in chunk {
-                for (off, v) in row.into_iter().enumerate() {
-                    let j = i + off;
-                    g.data[i * m + j] = v;
-                    g.data[j * m + i] = v;
-                }
-            }
-        }
+        let mut g = Mat::zeros(self.rows, self.rows);
+        gemm::gram_into(&self.data, &mut g.data, self.rows, self.cols);
         g
     }
 
@@ -310,36 +252,11 @@ impl Mat {
     }
 }
 
-/// Sequential blocked GEMM over a row band: `C[0..m_band] += A_band · B`.
-fn gemm_band(a: &[f64], b: &[f64], c: &mut [f64], row_lo: usize, row_hi: usize, k: usize, n: usize) {
-    let rows = row_hi - row_lo;
-    gemm_band_into(&a[row_lo * k..row_hi * k], b, &mut c[row_lo * n..row_hi * n], rows, k, n);
-}
-
-/// Kernel: `C (m×n) += A (m×k) · B (k×n)`, ikj loop order with k-blocking
-/// so B rows stream through cache while C rows stay hot.
-fn gemm_band_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    const KB: usize = 256;
-    for kb in (0..k).step_by(KB) {
-        let kend = (kb + KB).min(k);
-        for i in 0..m {
-            let crow = &mut c[i * n..(i + 1) * n];
-            for kk in kb..kend {
-                let aik = a[i * k + kk];
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                vecops::axpy(aik, brow, crow);
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rng::Rng;
+    use crate::util::parallel::{with_parallelism, Parallelism};
 
     fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
         Mat::from_fn(r, c, |_, _| rng.normal())
@@ -366,6 +283,19 @@ mod tests {
         let y2 = a.transpose().matvec(&x);
         for (v1, v2) in y1.iter().zip(&y2) {
             assert!((v1 - v2).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matvec_t_bit_stable_across_parallelism() {
+        let mut rng = Rng::seed_from(18);
+        // > TCHUNK rows so the chunked reduction actually splits.
+        let a = rand_mat(&mut rng, 1100, 37);
+        let x: Vec<f64> = (0..1100).map(|_| rng.normal()).collect();
+        let serial = with_parallelism(Parallelism::None, || a.matvec_t(&x));
+        let threaded = with_parallelism(Parallelism::Fixed(4), || a.matvec_t(&x));
+        for (s, t) in serial.iter().zip(&threaded) {
+            assert_eq!(s.to_bits(), t.to_bits());
         }
     }
 

@@ -1,0 +1,474 @@
+//! Cache-blocked, multi-threaded GEMM/Gram kernels — the hot path under
+//! every SVEN matrix product.
+//!
+//! Structure (BLIS-style, sized for L1/L2 without runtime probing):
+//!
+//! - a 4×8 register-tiled microkernel (`MR`×`NR`) over packed panels,
+//! - a packing stage that copies A into MR-row tiles and B into NR-column
+//!   panels so the microkernel streams contiguous memory,
+//! - `KC`/`MC`/`NC` cache blocking around it,
+//! - row-band / block-pair fan-out over the scoped pool in
+//!   [`crate::util::parallel`].
+//!
+//! Determinism: the block decomposition and the per-element accumulation
+//! order (k ascending within each `KC` block, blocks ascending) never
+//! depend on the worker count, so results are **bit-identical** across
+//! `Parallelism` settings — the property `rust/tests/proptests.rs` pins.
+//!
+//! The naive kernels the seed shipped are kept as `naive_*` references
+//! for the equivalence tests and the micro-bench baselines.
+
+use super::vecops;
+use crate::util::parallel;
+
+/// Microkernel rows (register tile height).
+pub const MR: usize = 4;
+/// Microkernel columns (register tile width; 8 f64 = two AVX2 lanes).
+pub const NR: usize = 8;
+/// k-dimension cache block (A tile `MR·KC` ≈ 8 KB, B panel `KC·NR` ≈ 16 KB).
+const KC: usize = 256;
+/// Rows of A packed per band job (`MC·KC` ≈ 128 KB, L2-resident).
+const MC: usize = 64;
+/// Columns of B packed per block (`KC·NC` ≈ 1 MB).
+const NC: usize = 512;
+/// Gram block edge for the symmetric block-pair decomposition.
+const BS: usize = 128;
+/// Below this many multiply-adds the naive kernels win (no packing
+/// overhead). Size-based only — never thread-count-based — so the
+/// kernel choice is identical under every `Parallelism` setting.
+const NAIVE_CUTOFF: usize = 1 << 15;
+
+// ---------------------------------------------------------------------------
+// Public entry points
+// ---------------------------------------------------------------------------
+
+/// `C = A·B` with A `m×k`, B `k×n`, all row-major. Allocates C.
+pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    matmul_into(a, b, &mut c, m, k, n);
+    c
+}
+
+/// `C ← A·B` into a caller-provided buffer (overwrites C).
+pub fn matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    if m * k * n <= NAIVE_CUTOFF {
+        naive_matmul_into(a, b, c, m, k, n);
+        return;
+    }
+    blocked_matmul_into(a, b, c, m, k, n, parallel::effective_threads());
+}
+
+/// `G = A·Aᵀ` (`m×m`) with A `m×k` row-major. Allocates G.
+pub fn gram(a: &[f64], m: usize, k: usize) -> Vec<f64> {
+    let mut g = vec![0.0; m * m];
+    gram_into(a, &mut g, m, k);
+    g
+}
+
+/// `G ← A·Aᵀ` into a caller-provided buffer (overwrites G).
+pub fn gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(g.len(), m * m, "G shape mismatch");
+    if m * m * k <= NAIVE_CUTOFF {
+        naive_gram_into(a, g, m, k);
+        return;
+    }
+    blocked_gram_into(a, g, m, k, parallel::effective_threads());
+}
+
+// ---------------------------------------------------------------------------
+// Naive reference kernels (the seed's loops; serial)
+// ---------------------------------------------------------------------------
+
+/// The seed's ikj/axpy GEMM, kept as the correctness reference and the
+/// micro-bench baseline. Serial; overwrites C.
+pub fn naive_matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            vecops::axpy(aik, &b[kk * n..(kk + 1) * n], crow);
+        }
+    }
+}
+
+/// The seed's dot-product symmetric Gram, kept as reference/baseline.
+/// Serial; overwrites G.
+pub fn naive_gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize) {
+    for i in 0..m {
+        for j in i..m {
+            let v = vecops::dot(&a[i * k..(i + 1) * k], &a[j * k..(j + 1) * k]);
+            g[i * m + j] = v;
+            g[j * m + i] = v;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Pack `rows` rows of A (starting at `row0`, k-slice `[k0, k0+kc)`) into
+/// MR-row tiles: `out[t·kc·MR + kk·MR + i] = A[row0+t·MR+i, k0+kk]`,
+/// zero-padded when the last tile is short of MR rows.
+fn pack_a(a: &[f64], lda: usize, row0: usize, rows: usize, k0: usize, kc: usize, out: &mut [f64]) {
+    let tiles = rows.div_ceil(MR);
+    for t in 0..tiles {
+        let tile = &mut out[t * kc * MR..(t + 1) * kc * MR];
+        for i in 0..MR {
+            let r = t * MR + i;
+            if r < rows {
+                let base = (row0 + r) * lda + k0;
+                let src = &a[base..base + kc];
+                for (kk, &v) in src.iter().enumerate() {
+                    tile[kk * MR + i] = v;
+                }
+            } else {
+                for kk in 0..kc {
+                    tile[kk * MR + i] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack one NR-column panel of B (k-slice `[k0, k0+kc)`, columns
+/// `[col0, col0+w)`, `w ≤ NR`): `panel[kk·NR + j] = B[k0+kk, col0+j]`,
+/// zero-padded beyond `w`.
+fn pack_b_panel(
+    b: &[f64],
+    ldb: usize,
+    k0: usize,
+    kc: usize,
+    col0: usize,
+    w: usize,
+    panel: &mut [f64],
+) {
+    for kk in 0..kc {
+        let base = (k0 + kk) * ldb + col0;
+        let dst = &mut panel[kk * NR..(kk + 1) * NR];
+        dst[..w].copy_from_slice(&b[base..base + w]);
+        for v in dst[w..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Pack one NR-column panel of Aᵀ for the Gram kernel: the panel's
+/// columns are A's *rows* `[row0, row0+w)`, so the read is contiguous
+/// per row: `panel[kk·NR + j] = A[row0+j, k0+kk]`.
+fn pack_bt_panel(
+    a: &[f64],
+    lda: usize,
+    k0: usize,
+    kc: usize,
+    row0: usize,
+    w: usize,
+    panel: &mut [f64],
+) {
+    for j in 0..NR {
+        if j < w {
+            let base = (row0 + j) * lda + k0;
+            let src = &a[base..base + kc];
+            for (kk, &v) in src.iter().enumerate() {
+                panel[kk * NR + j] = v;
+            }
+        } else {
+            for kk in 0..kc {
+                panel[kk * NR + j] = 0.0;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microkernel and block driver
+// ---------------------------------------------------------------------------
+
+/// `acc += Ap·Bp` over one packed tile/panel pair; `acc` stays in
+/// registers (MR×NR accumulators, k innermost with contiguous loads).
+#[inline(always)]
+fn microkernel(apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for (ak, bk) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        // Fixed-size views let LLVM drop the bounds checks and keep the
+        // MR×NR accumulator fan-out fully unrolled.
+        let ak: &[f64; MR] = ak.try_into().expect("tile width");
+        let bk: &[f64; NR] = bk.try_into().expect("panel width");
+        for i in 0..MR {
+            let aik = ak[i];
+            for j in 0..NR {
+                acc[i][j] += aik * bk[j];
+            }
+        }
+    }
+}
+
+/// `C[c_row0.., c_col0..] += Apack·Bpack` for one packed (rows × cols)
+/// block; edge tiles are computed full-width and written back masked.
+fn block_kernel(
+    apack: &[f64],
+    bpack: &[f64],
+    kc: usize,
+    rows: usize,
+    cols: usize,
+    c: &mut [f64],
+    ldc: usize,
+    c_row0: usize,
+    c_col0: usize,
+) {
+    let tiles = rows.div_ceil(MR);
+    let panels = cols.div_ceil(NR);
+    for t in 0..tiles {
+        let ap = &apack[t * kc * MR..(t + 1) * kc * MR];
+        let mrows = MR.min(rows - t * MR);
+        for p in 0..panels {
+            let bp = &bpack[p * kc * NR..(p + 1) * kc * NR];
+            let ncols = NR.min(cols - p * NR);
+            let mut acc = [[0.0f64; NR]; MR];
+            microkernel(ap, bp, &mut acc);
+            for i in 0..mrows {
+                let base = (c_row0 + t * MR + i) * ldc + c_col0 + p * NR;
+                let crow = &mut c[base..base + ncols];
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv += acc[i][j];
+                }
+            }
+        }
+    }
+}
+
+/// Blocked parallel GEMM (exposed for tests/benches that want to bypass
+/// the small-size cutoff). Overwrites C.
+pub fn blocked_matmul_into(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    nt: usize,
+) {
+    c.fill(0.0);
+    let mut bpack = vec![0.0; NC.div_ceil(NR) * NR * KC];
+    for jc in (0..n).step_by(NC) {
+        let jn = NC.min(n - jc);
+        let jpanels = jn.div_ceil(NR);
+        for kb in (0..k).step_by(KC) {
+            let kc = KC.min(k - kb);
+            // Pack this (kc × jn) block of B on the calling thread: it is
+            // a ≤ 1 MB memory-bound copy, cheaper than a spawn round.
+            let packed_len = jpanels * kc * NR;
+            for (p, panel) in bpack[..packed_len].chunks_mut(kc * NR).enumerate() {
+                let c0 = p * NR;
+                pack_b_panel(b, n, kb, kc, jc + c0, NR.min(jn - c0), panel);
+            }
+            // MC-row bands of C in parallel; each band packs its own A.
+            let bp = &bpack[..packed_len];
+            let bands: Vec<&mut [f64]> = c.chunks_mut(MC * n).collect();
+            parallel::parallel_items(nt, bands, |bi, cband| {
+                let row0 = bi * MC;
+                let rows = cband.len() / n;
+                let mut apack = vec![0.0; rows.div_ceil(MR) * MR * kc];
+                pack_a(a, k, row0, rows, kb, kc, &mut apack);
+                block_kernel(&apack, bp, kc, rows, jn, cband, n, 0, jc);
+            });
+        }
+    }
+}
+
+/// One upper-triangle block `A[i0..i0+ri]·A[j0..j0+rj]ᵀ` of the Gram
+/// matrix, fully packed and k-blocked. Overwrites `out` (ri × rj).
+fn gram_block(a: &[f64], k: usize, i0: usize, ri: usize, j0: usize, rj: usize, out: &mut [f64]) {
+    out.fill(0.0);
+    let mut apack = vec![0.0; ri.div_ceil(MR) * MR * KC];
+    let mut bpack = vec![0.0; rj.div_ceil(NR) * NR * KC];
+    let panels = rj.div_ceil(NR);
+    for kb in (0..k).step_by(KC) {
+        let kc = KC.min(k - kb);
+        pack_a(a, k, i0, ri, kb, kc, &mut apack[..ri.div_ceil(MR) * MR * kc]);
+        for p in 0..panels {
+            let c0 = p * NR;
+            pack_bt_panel(
+                a,
+                k,
+                kb,
+                kc,
+                j0 + c0,
+                NR.min(rj - c0),
+                &mut bpack[p * kc * NR..(p + 1) * kc * NR],
+            );
+        }
+        block_kernel(
+            &apack[..ri.div_ceil(MR) * MR * kc],
+            &bpack[..panels * kc * NR],
+            kc,
+            ri,
+            rj,
+            out,
+            rj,
+            0,
+            0,
+        );
+    }
+}
+
+/// Blocked parallel symmetric Gram (exposed for tests/benches). Computes
+/// only upper-triangle block pairs, then mirrors. Overwrites G.
+pub fn blocked_gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize, nt: usize) {
+    let nb = m.div_ceil(BS);
+    let pairs: Vec<(usize, usize)> =
+        (0..nb).flat_map(|bi| (bi..nb).map(move |bj| (bi, bj))).collect();
+    let edge = |b: usize| BS.min(m - b * BS);
+    // Phase 1: each block pair into its own buffer (disjoint outputs).
+    let mut blocks: Vec<Vec<f64>> =
+        pairs.iter().map(|&(bi, bj)| vec![0.0; edge(bi) * edge(bj)]).collect();
+    let pairs_ref = &pairs;
+    let items: Vec<&mut Vec<f64>> = blocks.iter_mut().collect();
+    parallel::parallel_items(nt, items, |idx, block| {
+        let (bi, bj) = pairs_ref[idx];
+        gram_block(a, k, bi * BS, edge(bi), bj * BS, edge(bj), block);
+    });
+    // Phase 2: scatter + mirror, parallel over BS-row bands of G.
+    let blocks_ref = &blocks;
+    let bands: Vec<&mut [f64]> = g.chunks_mut(BS * m).collect();
+    parallel::parallel_items(nt, bands, |band, gband| {
+        for (idx, &(bi, bj)) in pairs_ref.iter().enumerate() {
+            let blk = &blocks_ref[idx];
+            let (ri, rj) = (edge(bi), edge(bj));
+            if bi == band {
+                for r in 0..ri {
+                    let dst = r * m + bj * BS;
+                    gband[dst..dst + rj].copy_from_slice(&blk[r * rj..(r + 1) * rj]);
+                }
+            }
+            if bj == band && bi != bj {
+                for r2 in 0..rj {
+                    let dst = r2 * m + bi * BS;
+                    let drow = &mut gband[dst..dst + ri];
+                    for (r, dv) in drow.iter_mut().enumerate() {
+                        *dv = blk[r * rj + r2];
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn blocked_matches_naive_ragged_shapes() {
+        let mut rng = Rng::seed_from(21);
+        // Deliberately not multiples of MR/NR/KC/MC/NC.
+        for &(m, k, n) in &[(1, 1, 1), (5, 3, 9), (33, 17, 41), (70, 130, 51), (64, 256, 64)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut naive = vec![0.0; m * n];
+            naive_matmul_into(&a, &b, &mut naive, m, k, n);
+            for nt in [1, 3, 8] {
+                let mut blocked = vec![0.0; m * n];
+                blocked_matmul_into(&a, &b, &mut blocked, m, k, n, nt);
+                let dev = max_abs_diff(&naive, &blocked);
+                assert!(dev < 1e-10, "({m},{k},{n}) nt={nt}: dev {dev}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_gram_matches_naive_ragged_shapes() {
+        let mut rng = Rng::seed_from(22);
+        for &(m, k) in &[(1, 4), (7, 5), (40, 33), (130, 70), (129, 257)] {
+            let a = rand_vec(&mut rng, m * k);
+            let mut naive = vec![0.0; m * m];
+            naive_gram_into(&a, &mut naive, m, k);
+            for nt in [1, 4] {
+                let mut blocked = vec![0.0; m * m];
+                blocked_gram_into(&a, &mut blocked, m, k, nt);
+                let dev = max_abs_diff(&naive, &blocked);
+                assert!(dev < 1e-10, "({m},{k}) nt={nt}: dev {dev}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_is_bit_stable_across_thread_counts() {
+        let mut rng = Rng::seed_from(23);
+        let (m, k, n) = (67, 310, 45);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c1 = vec![0.0; m * n];
+        blocked_matmul_into(&a, &b, &mut c1, m, k, n, 1);
+        for nt in [2, 5, 16] {
+            let mut cn = vec![0.0; m * n];
+            blocked_matmul_into(&a, &b, &mut cn, m, k, n, nt);
+            assert!(
+                c1.iter().zip(&cn).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "gemm not bit-stable at nt={nt}"
+            );
+        }
+        let mut g1 = vec![0.0; m * m];
+        blocked_gram_into(&a, &mut g1, m, k, 1);
+        for nt in [2, 7] {
+            let mut gn = vec![0.0; m * m];
+            blocked_gram_into(&a, &mut gn, m, k, nt);
+            assert!(
+                g1.iter().zip(&gn).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "gram not bit-stable at nt={nt}"
+            );
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric() {
+        let mut rng = Rng::seed_from(24);
+        let (m, k) = (90, 40);
+        let a = rand_vec(&mut rng, m * k);
+        let mut g = vec![0.0; m * m];
+        blocked_gram_into(&a, &mut g, m, k, 4);
+        for i in 0..m {
+            for j in 0..m {
+                assert_eq!(g[i * m + j].to_bits(), g[j * m + i].to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn public_entry_points_route_both_paths() {
+        let mut rng = Rng::seed_from(25);
+        // Small: naive path. Large: blocked path. Both must agree with
+        // an explicit naive run.
+        for &(m, k, n) in &[(6, 4, 5), (48, 64, 48)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let c = matmul(&a, &b, m, k, n);
+            let mut reference = vec![0.0; m * n];
+            naive_matmul_into(&a, &b, &mut reference, m, k, n);
+            assert!(max_abs_diff(&c, &reference) < 1e-10, "({m},{k},{n})");
+        }
+        for &(m, k) in &[(6, 4), (72, 40)] {
+            let a = rand_vec(&mut rng, m * k);
+            let g = gram(&a, m, k);
+            let mut reference = vec![0.0; m * m];
+            naive_gram_into(&a, &mut reference, m, k);
+            assert!(max_abs_diff(&g, &reference) < 1e-10, "({m},{k})");
+        }
+    }
+}

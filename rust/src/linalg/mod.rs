@@ -1,9 +1,12 @@
 //! Dense & sparse linear algebra substrate.
 //!
 //! The offline crate set has no BLAS/ndarray, so everything the solvers
-//! need is implemented here: contiguous row-major matrices with blocked
-//! (and thread-parallel) GEMM/GEMV, Cholesky factorization, conjugate
-//! gradients over abstract linear operators, and CSR sparse matrices.
+//! need is implemented here: a packed, register/L2-tiled, multi-threaded
+//! GEMM/Gram core ([`gemm`]), contiguous row-major matrices routed
+//! through it ([`dense`]), Cholesky factorization, conjugate gradients
+//! over abstract linear operators, and CSR sparse matrices. Worker
+//! counts come from [`crate::util::parallel`] (`PALLAS_NUM_THREADS`),
+//! and every parallel product is bit-stable across thread counts.
 //!
 //! All solver numerics are `f64`; the XLA exchange path converts to `f32`
 //! at the runtime boundary (matching the paper's single-precision GPU
@@ -12,6 +15,7 @@
 pub mod cg;
 pub mod cholesky;
 pub mod dense;
+pub mod gemm;
 pub mod sparse;
 pub mod vecops;
 

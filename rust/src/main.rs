@@ -1,1 +1,3 @@
-fn main() -> anyhow::Result<()> { sven::cli::run() }
+fn main() -> anyhow::Result<()> {
+    sven::cli::run()
+}

@@ -5,7 +5,7 @@
 //! numbers, booleans, null) with full escape handling for strings.
 
 use std::collections::BTreeMap;
-use thiserror::Error;
+use std::fmt;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -51,12 +51,19 @@ impl Json {
     }
 }
 
-#[derive(Debug, Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -175,7 +175,12 @@ pub fn penalized_objective(x: &Mat, y: &[f64], beta: &[f64], lambda: f64, kappa:
 /// Matching gradients of the two Lagrangians on the active set gives
 /// `λ₂ = n·λ·(1−κ)` (the 1/(2n) loss scaling times the 2· in the
 /// constrained loss), and `t = |β*|₁` by the paper's protocol.
-pub fn penalized_to_constrained(beta_star: &[f64], lambda: f64, kappa: f64, n: usize) -> (f64, f64) {
+pub fn penalized_to_constrained(
+    beta_star: &[f64],
+    lambda: f64,
+    kappa: f64,
+    n: usize,
+) -> (f64, f64) {
     let t = budget_from_beta(beta_star);
     let lambda2 = n as f64 * lambda * (1.0 - kappa);
     (t, lambda2)

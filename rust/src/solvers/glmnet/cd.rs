@@ -371,8 +371,20 @@ mod tests {
     fn heavier_l2_shrinks_norm() {
         let (x, y) = test_data(50, 20, 86);
         let lambda = lambda_max(&x, &y, 0.9) * 0.2;
-        let lo = solve_penalized(&x, &y, lambda, &GlmnetConfig { kappa: 0.9, ..Default::default() }, None);
-        let hi = solve_penalized(&x, &y, lambda * 4.0, &GlmnetConfig { kappa: 0.9, ..Default::default() }, None);
+        let lo = solve_penalized(
+            &x,
+            &y,
+            lambda,
+            &GlmnetConfig { kappa: 0.9, ..Default::default() },
+            None,
+        );
+        let hi = solve_penalized(
+            &x,
+            &y,
+            lambda * 4.0,
+            &GlmnetConfig { kappa: 0.9, ..Default::default() },
+            None,
+        );
         assert!(vecops::norm2_sq(&hi.beta) <= vecops::norm2_sq(&lo.beta) + 1e-12);
     }
 }

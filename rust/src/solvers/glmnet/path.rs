@@ -113,7 +113,13 @@ mod tests {
     use crate::data::{synth_regression, SynthSpec};
 
     fn data() -> (Mat, Vec<f64>) {
-        let d = synth_regression(&SynthSpec { n: 60, p: 30, support: 8, seed: 91, ..Default::default() });
+        let d = synth_regression(&SynthSpec {
+            n: 60,
+            p: 30,
+            support: 8,
+            seed: 91,
+            ..Default::default()
+        });
         (d.x, d.y)
     }
 

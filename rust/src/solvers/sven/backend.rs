@@ -158,23 +158,19 @@ struct PreparedDual {
 }
 
 impl PreparedDual {
-    /// Assemble K(t) from the cached, t-independent blocks in O(p²).
+    /// Assemble K(t) from the cached, t-independent blocks in O(p²),
+    /// row-parallel over the scoped pool.
     fn gram_at(&self, t: f64) -> Mat {
         let p = self.g0.rows();
         let s = 1.0 / t;
-        let s2c = s * s * self.yy;
         let mut k = Mat::zeros(2 * p, 2 * p);
-        for i in 0..p {
-            for j in 0..p {
-                let gij = self.g0.get(i, j);
-                let sv = s * (self.v[i] + self.v[j]);
-                let g12 = gij + s * self.v[i] - s * self.v[j] - s2c;
-                k.set(i, j, gij - sv + s2c);
-                k.set(p + i, p + j, gij + sv + s2c);
-                k.set(i, p + j, -g12);
-                k.set(p + j, i, -g12);
-            }
-        }
+        crate::solvers::svm::samples::assemble_reduction_gram(
+            &self.g0,
+            &self.v,
+            s,
+            s * s * self.yy,
+            &mut k,
+        );
         k
     }
 }

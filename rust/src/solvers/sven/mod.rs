@@ -24,6 +24,7 @@ pub use reduction::{backmap, effective_c, MIN_ALPHA_SUM};
 
 use crate::linalg::Mat;
 use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
+use crate::util::parallel::{with_parallelism, Parallelism};
 use crate::util::Timer;
 
 /// SVEN configuration.
@@ -38,11 +39,17 @@ pub struct SvenConfig {
     /// stability — the same trade the paper makes by special-casing the
     /// hard-margin solver.
     pub c_cap: f64,
+    /// Worker-thread policy for the blocked linalg kernels under this
+    /// solver (gram builds, Newton Hessian products, K assembly). The
+    /// kernels are bit-stable across settings, so this is purely a
+    /// performance knob; `Auto` defers to the process default /
+    /// `PALLAS_NUM_THREADS`.
+    pub parallelism: Parallelism,
 }
 
 impl Default for SvenConfig {
     fn default() -> Self {
-        SvenConfig { mode: SvmMode::Auto, c_cap: 1e6 }
+        SvenConfig { mode: SvmMode::Auto, c_cap: 1e6, parallelism: Parallelism::Auto }
     }
 }
 
@@ -63,7 +70,9 @@ impl<B: SvmBackend> Sven<B> {
 
     /// One-shot solve of a single Elastic Net problem.
     pub fn solve(&self, prob: &EnProblem) -> anyhow::Result<EnSolution> {
-        let mut prepared = self.backend.prepare(&prob.x, &prob.y, self.config.mode)?;
+        let mut prepared = with_parallelism(self.config.parallelism, || {
+            self.backend.prepare(&prob.x, &prob.y, self.config.mode)
+        })?;
         self.solve_prepared(prepared.as_mut(), prob, None)
     }
 
@@ -78,7 +87,8 @@ impl<B: SvmBackend> Sven<B> {
         let timer = Timer::start();
         let p = prob.p();
         let c = effective_c(prob.lambda2, self.config.c_cap);
-        let solve = prepared.solve(prob.t, c, warm)?;
+        let solve =
+            with_parallelism(self.config.parallelism, || prepared.solve(prob.t, c, warm))?;
         let (beta, degenerate) = backmap(&solve.alpha, p, prob.t);
         let seconds = timer.elapsed();
         let objective = prob.objective(&beta);
@@ -106,7 +116,9 @@ impl<B: SvmBackend> Sven<B> {
         x: &Mat,
         y: &[f64],
     ) -> anyhow::Result<Box<dyn PreparedSvm>> {
-        self.backend.prepare(x, y, self.config.mode)
+        with_parallelism(self.config.parallelism, || {
+            self.backend.prepare(x, y, self.config.mode)
+        })
     }
 
     /// Degeneracy pre-check (paper §3): if `t` exceeds the L1 norm of the
@@ -160,7 +172,13 @@ mod tests {
     use crate::solvers::glmnet::{self, GlmnetConfig, PathSettings};
 
     fn dataset(n: usize, p: usize, seed: u64) -> (Mat, Vec<f64>) {
-        let d = synth_regression(&SynthSpec { n, p, support: p.min(6), seed, ..Default::default() });
+        let d = synth_regression(&SynthSpec {
+            n,
+            p,
+            support: p.min(6),
+            seed,
+            ..Default::default()
+        });
         (d.x, d.y)
     }
 
@@ -210,7 +228,11 @@ mod tests {
     #[test]
     fn primal_and_dual_agree() {
         let (x, y) = dataset(60, 25, 155);
-        let pts = glmnet::compute_path(&x, &y, &PathSettings { num_lambda: 20, ..Default::default() });
+        let pts = glmnet::compute_path(
+            &x,
+            &y,
+            &PathSettings { num_lambda: 20, ..Default::default() },
+        );
         let pt = pts.iter().find(|pt| pt.nnz >= 3).expect("active point");
         let prob = EnProblem::new(x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-3));
         let sp = Sven::with_config(
@@ -273,7 +295,11 @@ mod tests {
     #[test]
     fn l1_budget_is_respected() {
         let (x, y) = dataset(40, 30, 157);
-        let pts = glmnet::compute_path(&x, &y, &PathSettings { num_lambda: 25, ..Default::default() });
+        let pts = glmnet::compute_path(
+            &x,
+            &y,
+            &PathSettings { num_lambda: 25, ..Default::default() },
+        );
         let pt = pts.iter().find(|pt| pt.nnz >= 2).unwrap();
         let prob = EnProblem::new(x, y, pt.t, pt.lambda2.max(1e-3));
         let sven = Sven::new(RustBackend::default());
@@ -299,7 +325,11 @@ mod tests {
     #[test]
     fn prepared_reuse_matches_oneshot() {
         let (x, y) = dataset(80, 12, 159);
-        let pts = glmnet::compute_path(&x, &y, &PathSettings { num_lambda: 30, ..Default::default() });
+        let pts = glmnet::compute_path(
+            &x,
+            &y,
+            &PathSettings { num_lambda: 30, ..Default::default() },
+        );
         let active: Vec<_> = pts.iter().filter(|pt| pt.nnz > 0).take(5).collect();
         let sven = Sven::new(RustBackend::default());
         let mut prep = sven.prepare(&x, &y).unwrap();

@@ -102,12 +102,25 @@ pub fn dual_newton(k: &Mat, c: f64, opts: &DualOptions, warm: Option<&[f64]>) ->
             break;
         }
         let nf = idx.len();
+        // Gather K_FF + I/(2C) row-parallel: each output row reads one
+        // row of K through the free-index map (disjoint writes, so the
+        // fan-out is deterministic for any worker count).
         let mut kff = Mat::zeros(nf, nf);
-        for (a, &i) in idx.iter().enumerate() {
-            for (b, &j) in idx.iter().enumerate() {
-                let v = k.get(i, j) + if a == b { 1.0 / (2.0 * c) } else { 0.0 };
-                kff.set(a, b, v);
-            }
+        {
+            let nt = if nf * nf < 1 << 14 {
+                1
+            } else {
+                crate::util::parallel::effective_threads()
+            };
+            let idx_ref = &idx;
+            let rows: Vec<&mut [f64]> = kff.data_mut().chunks_mut(nf).collect();
+            crate::util::parallel::parallel_items(nt, rows, |a, row| {
+                let krow = k.row(idx_ref[a]);
+                for (b, rv) in row.iter_mut().enumerate() {
+                    *rv = krow[idx_ref[b]];
+                }
+                row[a] += 1.0 / (2.0 * c);
+            });
         }
         let rhs = vec![1.0; nf];
         let sol = match Cholesky::factor_ridged(&kff, 1e-12, 8) {

@@ -43,7 +43,10 @@ pub struct PrimalResult {
 }
 
 /// Hessian operator `v ↦ v + 2C·X̂ᵀ(sv_mask ⊙ (X̂·v))` on the current
-/// support-vector set.
+/// support-vector set. The two products route through the banded
+/// parallel GEMV layer in [`crate::linalg`] (deterministic fixed-chunk
+/// reduction for the transpose side), so the CG inner loop scales with
+/// the `Parallelism` knob without giving up bit-stable iterates.
 struct HessOp<'a, S: SampleSet> {
     samples: &'a S,
     sv_mask: &'a [f64], // 1.0 for support vectors, else 0.0
@@ -112,6 +115,7 @@ pub fn primal_newton<S: SampleSet>(
     let mut o = vec![0.0; m];
     let mut slack = vec![0.0; m];
     let mut mask = vec![0.0; m];
+    let mut ys = vec![0.0; m];
     let mut grad = vec![0.0; d];
     let mut delta = vec![0.0; d];
     let mut cg_total = 0usize;
@@ -121,7 +125,9 @@ pub fn primal_newton<S: SampleSet>(
     let mut newton = 0;
     while newton < opts.max_newton {
         // grad = w − 2C·X̂ᵀ(ŷ ⊙ slack) restricted to support vectors
-        let ys: Vec<f64> = (0..m).map(|i| yhat[i] * slack[i] * mask[i]).collect();
+        for i in 0..m {
+            ys[i] = yhat[i] * slack[i] * mask[i];
+        }
         samples.matvec_t(&ys, &mut grad);
         for i in 0..d {
             grad[i] = w[i] - 2.0 * c * grad[i];

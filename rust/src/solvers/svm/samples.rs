@@ -136,27 +136,51 @@ pub fn reduction_labels(p: usize) -> Vec<f64> {
 /// ```
 /// with `G = XᵀX`, `v = Xᵀy`, `c = yᵀy`, `s = 1/t`.
 pub fn reduction_gram(x: &Mat, y: &[f64], t: f64) -> Mat {
-    let p = x.cols();
-    let g = x.gram_t(); // XᵀX, p×p
+    let g = x.gram_t(); // XᵀX, p×p (blocked parallel kernel)
     let v = x.matvec_t(y); // Xᵀy
     let c = vecops::norm2_sq(y);
     let s = 1.0 / t;
-    let s2c = s * s * c;
-    let mut k = Mat::zeros(2 * p, 2 * p);
-    for i in 0..p {
-        for j in 0..p {
-            let gij = g.get(i, j);
-            let sv = s * (v[i] + v[j]);
-            let g11 = gij - sv + s2c;
-            let g22 = gij + sv + s2c;
-            let g12 = gij + s * v[i] - s * v[j] - s2c;
-            k.set(i, j, g11);
-            k.set(p + i, p + j, g22);
-            k.set(i, p + j, -g12);
-            k.set(p + j, i, -g12);
-        }
-    }
+    let mut k = Mat::zeros(2 * x.cols(), 2 * x.cols());
+    assemble_reduction_gram(&g, &v, s, s * s * c, &mut k);
     k
+}
+
+/// Row-parallel assembly of `K(t)` from the t-independent blocks
+/// (`G = XᵀX`, `v = Xᵀy`, `s = 1/t`, `s2c = s²·yᵀy`). Each output row is
+/// an independent elementwise formula, so the fan-out over the scoped
+/// pool is embarrassingly parallel and bit-stable across thread counts.
+/// Shared with the dual backend's cached-path `gram_at`.
+pub(crate) fn assemble_reduction_gram(g: &Mat, v: &[f64], s: f64, s2c: f64, k: &mut Mat) {
+    let p = g.rows();
+    let m = 2 * p;
+    debug_assert_eq!((k.rows(), k.cols()), (m, m));
+    let nt = if m * m < 1 << 14 { 1 } else { crate::util::parallel::effective_threads() };
+    let rows: Vec<&mut [f64]> = k.data_mut().chunks_mut(m).collect();
+    crate::util::parallel::parallel_items(nt, rows, |r, row| {
+        if r < p {
+            // Row i of [G₁₁, −G₁₂]:
+            //   K[i, j]     = G[i,j] − s(vᵢ+vⱼ) + s²c
+            //   K[i, p+j]   = −(G[i,j] + s·vᵢ − s·vⱼ − s²c)
+            let i = r;
+            let gi = g.row(i);
+            for j in 0..p {
+                let gij = gi[j];
+                row[j] = gij - s * (v[i] + v[j]) + s2c;
+                row[p + j] = -(gij + s * v[i] - s * v[j] - s2c);
+            }
+        } else {
+            // Row p+a of [−G₁₂ᵀ, G₂₂] (G symmetric ⇒ G₁₂ᵀ[a,b] = G₁₂[b,a]):
+            //   K[p+a, b]   = −(G[a,b] + s·v_b − s·v_a − s²c)
+            //   K[p+a, p+b] = G[a,b] + s(v_a+v_b) + s²c
+            let a = r - p;
+            let ga = g.row(a);
+            for b in 0..p {
+                let gab = ga[b];
+                row[b] = -(gab + s * v[b] - s * v[a] - s2c);
+                row[p + b] = gab + s * (v[a] + v[b]) + s2c;
+            }
+        }
+    });
 }
 
 #[cfg(test)]

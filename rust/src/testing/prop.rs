@@ -147,4 +147,68 @@ mod tests {
         assert!(close_vec(&[1.0], &[1.0, 2.0], 1e-9, "v").is_err());
         assert!(close_vec(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, "v").is_ok());
     }
+
+    /// Ragged gemm shapes (never multiples of the MR/NR/KC tile sizes):
+    /// the blocked parallel kernel must match the naive reference.
+    #[test]
+    fn prop_blocked_matmul_matches_naive() {
+        use crate::linalg::gemm;
+        forall(
+            "blocked gemm == naive on ragged shapes",
+            24,
+            |rng: &mut Rng, size: usize| {
+                let m = 1 + rng.below(5 + 4 * size);
+                let k = 1 + rng.below(7 + 5 * size);
+                let n = 1 + rng.below(5 + 4 * size);
+                let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+                let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                let mut naive = vec![0.0; m * n];
+                gemm::naive_matmul_into(a, b, &mut naive, m, k, n);
+                for nt in [1, 3] {
+                    let mut blocked = vec![0.0; m * n];
+                    gemm::blocked_matmul_into(a, b, &mut blocked, m, k, n, nt);
+                    close_vec(&naive, &blocked, 1e-10, &format!("gemm {m}x{k}x{n} nt={nt}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Same property for the symmetric gram kernel, plus exact symmetry.
+    #[test]
+    fn prop_blocked_gram_matches_naive() {
+        use crate::linalg::gemm;
+        forall(
+            "blocked gram == naive on ragged shapes",
+            20,
+            |rng: &mut Rng, size: usize| {
+                let m = 1 + rng.below(6 + 5 * size);
+                let k = 1 + rng.below(8 + 6 * size);
+                let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+                (m, k, a)
+            },
+            |(m, k, a)| {
+                let (m, k) = (*m, *k);
+                let mut naive = vec![0.0; m * m];
+                gemm::naive_gram_into(a, &mut naive, m, k);
+                for nt in [1, 4] {
+                    let mut blocked = vec![0.0; m * m];
+                    gemm::blocked_gram_into(a, &mut blocked, m, k, nt);
+                    close_vec(&naive, &blocked, 1e-10, &format!("gram {m}x{k} nt={nt}"))?;
+                    for i in 0..m {
+                        for j in 0..i {
+                            if blocked[i * m + j].to_bits() != blocked[j * m + i].to_bits() {
+                                return Err(format!("asymmetry at ({i},{j}) nt={nt}"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }

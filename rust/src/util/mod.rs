@@ -1,8 +1,14 @@
-//! Small utilities: timing, summary statistics, logging.
+//! Small utilities: the scoped thread pool / parallelism knob, timing,
+//! summary statistics, logging.
 
+pub mod parallel;
 pub mod stats;
 pub mod timer;
 
+pub use parallel::{
+    effective_threads, parallel_for, parallel_items, set_global_parallelism, with_parallelism,
+    Parallelism,
+};
 pub use stats::Summary;
 pub use timer::Timer;
 

@@ -1,0 +1,257 @@
+//! Scoped thread pool and the crate-wide parallelism knob.
+//!
+//! Every blocked kernel in [`crate::linalg`] parallelizes by splitting
+//! its *output* into disjoint tiles and fanning those tiles out over
+//! scoped threads. This module owns the two pieces that makes uniform:
+//!
+//! - [`Parallelism`]: the user-facing knob (serial / auto / fixed),
+//!   resolvable per-call, per-solve (via `SvenConfig`), per-process
+//!   (via [`set_global_parallelism`] / the CLI `--threads` flag), or
+//!   from the `PALLAS_NUM_THREADS` environment variable.
+//! - [`parallel_items`]: the scoped fan-out primitive. Work items are
+//!   moved to workers (so `&mut` output tiles ride along safely), and
+//!   the *decomposition into items never depends on the thread count* —
+//!   which is what makes every kernel built on it bit-stable across
+//!   `Parallelism` settings (see `rust/tests/proptests.rs`).
+//!
+//! No rayon offline; workers are `std::thread::scope` spawns, so borrowed
+//! tiles need no `'static` bound and panics propagate to the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Degree of parallelism for the blocked linalg kernels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Strictly serial (equivalent to one worker thread).
+    None,
+    /// Resolve from `PALLAS_NUM_THREADS` (fallback `SVEN_THREADS`), else
+    /// the machine's available parallelism.
+    #[default]
+    Auto,
+    /// Exactly this many worker threads (clamped to ≥ 1).
+    Fixed(usize),
+}
+
+impl Parallelism {
+    /// Resolve to a concrete worker count.
+    pub fn threads(self) -> usize {
+        match self {
+            Parallelism::None => 1,
+            Parallelism::Fixed(n) => n.max(1),
+            Parallelism::Auto => env_threads(),
+        }
+    }
+}
+
+/// `PALLAS_NUM_THREADS` / `SVEN_THREADS` / available parallelism, cached.
+fn env_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        let from_env = |key: &str| {
+            std::env::var(key).ok().and_then(|s| s.parse::<usize>().ok()).filter(|&n| n > 0)
+        };
+        from_env("PALLAS_NUM_THREADS")
+            .or_else(|| from_env("SVEN_THREADS"))
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            })
+    })
+}
+
+/// Process-wide setting: 0 = Auto, k ≥ 1 = exactly k threads.
+static GLOBAL: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override installed by [`with_parallelism`]; takes
+    /// precedence over the global setting on the installing thread.
+    static OVERRIDE: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Set the process-wide default (the CLI `--threads` flag lands here).
+pub fn set_global_parallelism(p: Parallelism) {
+    let enc = match p {
+        Parallelism::Auto => 0,
+        other => other.threads(),
+    };
+    GLOBAL.store(enc, Ordering::Relaxed);
+}
+
+/// Run `f` with `p` as the effective parallelism on this thread.
+///
+/// The kernels spawn their workers from the calling thread, so a
+/// thread-local override is enough to scope the whole computation —
+/// `Sven::solve` wraps each solve in this. `Auto` installs nothing and
+/// inherits whatever scope is already in effect, so an outer
+/// `with_parallelism(Parallelism::None, ..)` around a default-config
+/// `Sven::solve` still forces the solve serial.
+pub fn with_parallelism<T>(p: Parallelism, f: impl FnOnce() -> T) -> T {
+    if matches!(p, Parallelism::Auto) {
+        return f();
+    }
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|c| {
+        let prev = c.get();
+        c.set(p.threads());
+        prev
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Worker count the kernels should use right now: thread-local override,
+/// else the global setting, else `Parallelism::Auto`.
+pub fn effective_threads() -> usize {
+    let tls = OVERRIDE.with(|c| c.get());
+    if tls > 0 {
+        return tls;
+    }
+    match GLOBAL.load(Ordering::Relaxed) {
+        0 => env_threads(),
+        n => n,
+    }
+}
+
+/// Fan `items` out over at most `nt` scoped worker threads.
+///
+/// `f(i, item)` receives the item's index in the original order plus the
+/// item by value — pass `&mut` slices (e.g. from `chunks_mut`) as items
+/// to write disjoint output tiles in parallel. Items are distributed
+/// round-robin; with `nt <= 1` (or a single item) everything runs inline
+/// on the caller. The item decomposition is the caller's, so results do
+/// not depend on `nt` as long as each `f(i, item)` is deterministic.
+pub fn parallel_items<T, F>(nt: usize, items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    let nt = nt.clamp(1, items.len().max(1));
+    if nt <= 1 || items.len() <= 1 {
+        for (i, item) in items.into_iter().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, T)>> = (0..nt).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        buckets[i % nt].push((i, item));
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            s.spawn(move || {
+                for (i, item) in bucket {
+                    f(i, item);
+                }
+            });
+        }
+    });
+}
+
+/// Dynamic-scheduling variant for jobs that only need an index (shared
+/// read-only inputs, interior outputs): workers pull job indices from an
+/// atomic counter, which load-balances ragged job costs.
+pub fn parallel_for<F>(nt: usize, njobs: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let nt = nt.clamp(1, njobs.max(1));
+    if nt <= 1 || njobs <= 1 {
+        for j in 0..njobs {
+            f(j);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let (f, next) = (&f, &next);
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            s.spawn(move || loop {
+                let j = next.fetch_add(1, Ordering::Relaxed);
+                if j >= njobs {
+                    break;
+                }
+                f(j);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_resolution() {
+        assert_eq!(Parallelism::None.threads(), 1);
+        assert_eq!(Parallelism::Fixed(6).threads(), 6);
+        assert_eq!(Parallelism::Fixed(0).threads(), 1);
+        assert!(Parallelism::Auto.threads() >= 1);
+    }
+
+    #[test]
+    fn with_parallelism_scopes_and_restores() {
+        let before = effective_threads();
+        let inside = with_parallelism(Parallelism::Fixed(3), effective_threads);
+        assert_eq!(inside, 3);
+        assert_eq!(effective_threads(), before);
+        let serial = with_parallelism(Parallelism::None, effective_threads);
+        assert_eq!(serial, 1);
+        // Auto inherits the enclosing scope instead of clobbering it.
+        let nested = with_parallelism(Parallelism::None, || {
+            with_parallelism(Parallelism::Auto, effective_threads)
+        });
+        assert_eq!(nested, 1);
+    }
+
+    #[test]
+    fn parallel_items_writes_disjoint_chunks() {
+        let mut data = vec![0usize; 40];
+        let chunks: Vec<&mut [usize]> = data.chunks_mut(7).collect();
+        parallel_items(4, chunks, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v = i + 1;
+            }
+        });
+        for (pos, v) in data.iter().enumerate() {
+            assert_eq!(*v, pos / 7 + 1, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn parallel_items_serial_matches_parallel() {
+        let run = |nt: usize| {
+            let mut out = vec![0.0f64; 16];
+            let chunks: Vec<&mut [f64]> = out.chunks_mut(4).collect();
+            parallel_items(nt, chunks, |i, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 4 + j) as f64 * 0.5;
+                }
+            });
+            out
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn parallel_for_covers_all_jobs() {
+        let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(5, 23, |j| {
+            hits[j].fetch_add(1, Ordering::Relaxed);
+        });
+        for (j, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "job {j}");
+        }
+    }
+
+    #[test]
+    fn empty_items_is_noop() {
+        parallel_items(4, Vec::<usize>::new(), |_, _| panic!("no items"));
+        parallel_for(4, 0, |_| panic!("no jobs"));
+    }
+}

@@ -124,7 +124,13 @@ fn sven_handles_correlated_features() {
 #[test]
 fn path_sweep_matches_everywhere() {
     use sven::coordinator::{path::max_deviation, PathRunner, PathRunnerConfig};
-    let d = synth_regression(&SynthSpec { n: 50, p: 80, support: 10, seed: 506, ..Default::default() });
+    let d = synth_regression(&SynthSpec {
+        n: 50,
+        p: 80,
+        support: 10,
+        seed: 506,
+        ..Default::default()
+    });
     let runner = PathRunner::new(PathRunnerConfig { grid: 15, ..Default::default() });
     let results = runner
         .derive_and_run(&d, &Sven::new(RustBackend::default()))

@@ -51,7 +51,14 @@ fn service_full_grid_both_datasets() {
         for pt in &grid {
             receivers.push((
                 pt.beta.clone(),
-                service.submit(id, x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-6), BackendChoice::Rust),
+                service.submit(
+                    id,
+                    x.clone(),
+                    y.clone(),
+                    pt.t,
+                    pt.lambda2.max(1e-6),
+                    BackendChoice::Rust,
+                ),
             ));
         }
     }
@@ -84,7 +91,13 @@ fn dataset_profiles_generate_and_standardize() {
 
 #[test]
 fn svmlight_roundtrip_through_solver() {
-    let d = synth_regression(&SynthSpec { n: 25, p: 15, support: 4, seed: 704, ..Default::default() });
+    let d = synth_regression(&SynthSpec {
+        n: 25,
+        p: 15,
+        support: 4,
+        seed: 704,
+        ..Default::default()
+    });
     let dir = std::env::temp_dir().join("sven_integration");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("ds.svm");
@@ -117,7 +130,13 @@ fn cli_arg_parsing_smoke() {
 
 #[test]
 fn slack_budget_warning_path() {
-    let d = synth_regression(&SynthSpec { n: 60, p: 8, support: 4, seed: 705, ..Default::default() });
+    let d = synth_regression(&SynthSpec {
+        n: 60,
+        p: 8,
+        support: 4,
+        seed: 705,
+        ..Default::default()
+    });
     let sven = Sven::new(RustBackend::default());
     let huge = sven::solvers::elastic_net::EnProblem::new(d.x.clone(), d.y.clone(), 1e7, 0.5);
     assert!(sven.budget_is_slack(&huge));

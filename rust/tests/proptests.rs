@@ -203,3 +203,61 @@ fn prop_standardize_idempotent_shape() {
         },
     );
 }
+
+/// The tentpole determinism seal: SVEN run strictly serial
+/// (`Parallelism::None`) and threaded must produce **bit-identical** β
+/// paths — the blocked kernels never let the worker count change the
+/// accumulation order. Checked in both forced SVM modes across several
+/// path points with warm starts.
+#[test]
+fn prop_parallelism_modes_bit_stable_beta_path() {
+    use sven::solvers::sven::{SvenConfig, SvmWarm};
+    use sven::util::Parallelism;
+
+    let run_path = |mode: SvmMode, par: Parallelism, x: &Mat, y: &[f64]| -> Vec<Vec<f64>> {
+        let sven = Sven::with_config(
+            RustBackend::default(),
+            SvenConfig { mode, parallelism: par, ..Default::default() },
+        );
+        let mut prep = sven.prepare(x, y).expect("prepare");
+        let mut warm: Option<SvmWarm> = None;
+        let mut betas = Vec::new();
+        for t in [0.2, 0.5, 0.9, 1.4] {
+            let prob = EnProblem::new(x.clone(), y.to_vec(), t, 0.5);
+            let sol = sven.solve_prepared(prep.as_mut(), &prob, warm.as_ref()).expect("solve");
+            // Real warm state so the warm-seeded solver paths (free-set
+            // seeding, K_FF gathers on large free sets) are exercised.
+            warm = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(t)) });
+            betas.push(sol.beta);
+        }
+        betas
+    };
+
+    // Primal regime (2p > n) and dual regime (n ≥ 2p), sized past the
+    // parallel thresholds of the GEMV/gram layers so threaded runs
+    // actually fan out.
+    let cases = [(260usize, 260usize, SvmMode::Primal), (900, 40, SvmMode::Dual)];
+    for (n, p, mode) in cases {
+        let d = synth_regression(&SynthSpec {
+            n,
+            p,
+            support: 8.min(p),
+            seed: 4321,
+            ..Default::default()
+        });
+        let serial = run_path(mode, Parallelism::None, &d.x, &d.y);
+        let threaded = run_path(mode, Parallelism::Fixed(4), &d.x, &d.y);
+        assert_eq!(serial.len(), threaded.len());
+        for (pt, (bs, bt)) in serial.iter().zip(&threaded).enumerate() {
+            for j in 0..p {
+                assert_eq!(
+                    bs[j].to_bits(),
+                    bt[j].to_bits(),
+                    "{mode:?} point {pt} j={j}: serial {} vs threaded {}",
+                    bs[j],
+                    bt[j]
+                );
+            }
+        }
+    }
+}

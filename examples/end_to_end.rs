@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
             data.p(),
             grid.len()
         );
-        let x = Arc::new(data.x.clone());
+        let x = Arc::new(sven::linalg::Design::from(data.x.clone()));
         let y = Arc::new(data.y.clone());
         for (i, pt) in grid.iter().enumerate() {
             for backend in [BackendChoice::Xla, BackendChoice::Rust] {

@@ -1,14 +1,15 @@
-//! Microbenchmarks of the substrate hot paths (gemm, gram, CD epoch,
-//! Newton step) — the profile targets of EXPERIMENTS.md §Perf.
+//! Microbenchmarks of the substrate hot paths (gemm, gram, spmv, CD
+//! epoch, Newton step) — the profile targets of EXPERIMENTS.md §Perf.
 //!
 //! Run: `cargo bench --bench micro` for the full shapes (including the
-//! blocked-kernel acceptance shapes: gemm 1024³ and the gram of an
-//! n=4096, p=1024 design), or `cargo bench --bench micro -- --test` for
-//! the CI smoke mode (tiny shapes, compile-and-run-once) that gates
-//! kernel regressions without paying figure-scale runtimes.
+//! blocked-kernel acceptance shapes: gemm 1024³, the gram of an n=4096,
+//! p=1024 design, and the sparse shapes at n=8192, p=4096, density 0.01),
+//! or `cargo bench --bench micro -- --test` for the CI smoke mode (tiny
+//! shapes, compile-and-run-once) that gates kernel regressions without
+//! paying figure-scale runtimes.
 use sven::bench::harness::measure;
 use sven::data::{synth_regression, SynthSpec};
-use sven::linalg::Mat;
+use sven::linalg::{Design, Mat};
 use sven::rng::Rng;
 use sven::solvers::glmnet::{self, GlmnetConfig};
 use sven::solvers::svm::samples::reduction_labels;
@@ -25,6 +26,16 @@ fn main() {
         println!(
             "blocked-vs-naive speedup: gemm {sp_gemm:.1}x, gram {sp_gram:.1}x \
              (acceptance: >= 2x with >= 4 threads)"
+        );
+    }
+
+    // Sparse-kernel micro-bench: serial vs threaded CSR matvec/matvec_t/
+    // gram plus sparse-vs-dense CD at the paper's ~1e-2 density regime.
+    let (sp_spmv, sp_sgram) = sven::bench::figures::sparse_micro(!smoke);
+    if !smoke {
+        println!(
+            "sparse serial-vs-threaded speedup: spmv {sp_spmv:.1}x, gram {sp_sgram:.1}x \
+             (acceptance: spmv >= 2x with >= 4 threads at n=8192, p=4096, d=0.01)"
         );
     }
 
@@ -68,7 +79,8 @@ fn main() {
     println!("glmnet solve {cd_n}x{cd_p}: median {:.3}ms", m.summary.median() * 1e3);
 
     // primal Newton on the reduction (implicit operator)
-    let samples = ReducedSamples { x: &d.x, y: &d.y, t: 1.0 };
+    let design: Design = d.x.clone().into();
+    let samples = ReducedSamples { x: &design, y: &d.y, t: 1.0 };
     let labels = reduction_labels(d.x.cols());
     let mm = measure(1, if smoke { 1 } else { 5 }, || {
         primal_newton(&samples, &labels, 10.0, &PrimalOptions::default(), None)

@@ -139,6 +139,137 @@ pub fn linalg_micro(full: bool) -> (f64, f64) {
 }
 
 // ---------------------------------------------------------------------------
+// Sparse kernel micro-bench (spmv / sparse gram / sparse CD)
+// ---------------------------------------------------------------------------
+
+/// Sparse-path micro-bench at the paper's extreme-sparsity regime
+/// (Dorothea / E2006-tfidf are ~1e-2 dense): times the threaded CSR
+/// kernels against `Parallelism::None`, and a glmnet CD solve through
+/// the sparse [`Design`](crate::linalg::Design) against the same solve
+/// on the densified matrix. `full` runs the acceptance shape (n=8192,
+/// p=4096, density 0.01); otherwise tiny CI-smoke shapes. Returns the
+/// (spmv, gram) serial→threaded speedups.
+pub fn sparse_micro(full: bool) -> (f64, f64) {
+    use super::harness::measure;
+    use crate::linalg::{Csc, Csr, Design, Mat};
+    use crate::util::parallel::{self, with_parallelism, Parallelism};
+
+    let nt = parallel::effective_threads();
+    let reps = if full { 9 } else { 2 };
+    // The smoke shape is sized just past the sparse fan-out threshold
+    // (nnz ≈ 22k > 2^14) so the threaded kernel branches — not only the
+    // serial fallbacks — run under `-- --test` in CI.
+    let (n, p, density) = if full { (8192usize, 4096usize, 0.01) } else { (1024, 220, 0.1) };
+    println!("=== sparse micro: serial vs threaded CSR kernels (nt = {nt}) ===");
+
+    // ~density·p draws per row (duplicates merged by from_triplets)
+    // keeps generation O(nnz) instead of O(n·p) bernoullis.
+    let per_row = ((p as f64 * density).round() as usize).max(1);
+    let mut rng = crate::rng::Rng::seed_from(9393);
+    let mut trip = Vec::with_capacity(n * per_row);
+    for r in 0..n {
+        for _ in 0..per_row {
+            trip.push((r, rng.below(p), rng.normal()));
+        }
+    }
+    let a = Csr::from_triplets(n, p, trip);
+    let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    println!(
+        "shape {n}x{p}, nnz {} (density {:.4})",
+        a.nnz(),
+        a.density()
+    );
+
+    // --- spmv (A·x and Aᵀ·u) ---
+    let t_mv_1 =
+        measure(1, reps, || with_parallelism(Parallelism::None, || a.matvec(&x)))
+            .summary
+            .median();
+    let t_mv_n = measure(1, reps, || a.matvec(&x)).summary.median();
+    let t_mvt_1 =
+        measure(1, reps, || with_parallelism(Parallelism::None, || a.matvec_t(&u)))
+            .summary
+            .median();
+    let t_mvt_n = measure(1, reps, || a.matvec_t(&u)).summary.median();
+    let spmv_speedup = (t_mv_1 / t_mv_n).max(t_mvt_1 / t_mvt_n);
+    println!(
+        "spmv A·x: serial {:.3}ms | @{nt} {:.3}ms ({:.1}x)   Aᵀ·u: serial {:.3}ms | \
+         @{nt} {:.3}ms ({:.1}x)",
+        t_mv_1 * 1e3,
+        t_mv_n * 1e3,
+        t_mv_1 / t_mv_n,
+        t_mvt_1 * 1e3,
+        t_mvt_n * 1e3,
+        t_mvt_1 / t_mvt_n
+    );
+
+    // --- sparse gram XᵀX (the SVEN dual block) + CSC construction ---
+    let csc = Csc::from_csr(&a);
+    let mut g = Mat::zeros(p, p);
+    let t_g_1 = measure(1, reps, || {
+        with_parallelism(Parallelism::None, || a.gram_into(&csc, &mut g))
+    })
+    .summary
+    .median();
+    let t_g_n = measure(1, reps, || a.gram_into(&csc, &mut g)).summary.median();
+    let t_csc_1 =
+        measure(1, reps, || with_parallelism(Parallelism::None, || Csc::from_csr(&a)))
+            .summary
+            .median();
+    let t_csc_n = measure(1, reps, || Csc::from_csr(&a)).summary.median();
+    let gram_speedup = t_g_1 / t_g_n;
+    println!(
+        "gram XᵀX: serial {:.3}ms | @{nt} {:.3}ms ({:.1}x)   csc-build: serial {:.3}ms | \
+         @{nt} {:.3}ms ({:.1}x)",
+        t_g_1 * 1e3,
+        t_g_n * 1e3,
+        gram_speedup,
+        t_csc_1 * 1e3,
+        t_csc_n * 1e3,
+        t_csc_1 / t_csc_n
+    );
+
+    // --- sparse vs dense CD at the same penalized setting ---
+    // y from a sparse planted model so the solve is non-trivial.
+    let beta_true: Vec<f64> = (0..p)
+        .map(|j| if j % (p / 16).max(1) == 0 { rng.normal() } else { 0.0 })
+        .collect();
+    let mut y = a.matvec(&beta_true);
+    for v in y.iter_mut() {
+        *v += 0.1 * rng.normal();
+    }
+    let design: Design = a.clone().into();
+    let cfg = GlmnetConfig {
+        kappa: 1.0,
+        mode: glmnet::CdMode::Naive,
+        max_epochs: if full { 60 } else { 200 },
+        ..Default::default()
+    };
+    let lambda = glmnet::lambda_max_design(&design, &y, cfg.kappa) * 0.3;
+    let cd_reps = if full { 3 } else { 2 };
+    let t_cd_sparse = measure(1, cd_reps, || {
+        glmnet::solve_penalized_design(&design, &y, lambda, &cfg, None)
+    })
+    .summary
+    .median();
+    let dense = a.to_dense();
+    let t_cd_dense = measure(1, cd_reps, || {
+        glmnet::solve_penalized(&dense, &y, lambda, &cfg, None)
+    })
+    .summary
+    .median();
+    println!(
+        "glmnet CD {n}x{p}@{density}: dense {:.2}ms | sparse Design {:.2}ms ({:.1}x)",
+        t_cd_dense * 1e3,
+        t_cd_sparse * 1e3,
+        t_cd_dense / t_cd_sparse
+    );
+
+    (spmv_speedup, gram_speedup)
+}
+
+// ---------------------------------------------------------------------------
 // Figure 1
 // ---------------------------------------------------------------------------
 

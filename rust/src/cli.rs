@@ -281,7 +281,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("no active path points for this dataset");
     }
     let service = Service::start(config);
-    let x = Arc::new(data.x.clone());
+    let x = Arc::new(crate::linalg::Design::from(data.x.clone()));
     let y = Arc::new(data.y.clone());
     let timer = crate::util::Timer::start();
     let rxs: Vec<_> = (0..requests)

@@ -5,7 +5,7 @@
 
 use super::metrics::Metrics;
 use super::pool::{Pool, PoolConfig};
-use crate::linalg::Mat;
+use crate::linalg::Design;
 use crate::solvers::elastic_net::{EnProblem, EnSolution};
 use crate::solvers::sven::{RustBackend, Sven, SvenConfig};
 use crate::util::Timer;
@@ -22,12 +22,13 @@ pub enum BackendChoice {
     Xla,
 }
 
-/// A solve job. Data sets are shared via `Arc` and identified by
-/// `dataset_id` so workers can cache preparations across jobs.
+/// A solve job. Data sets (dense or sparse [`Design`]s) are shared via
+/// `Arc` and identified by `dataset_id` so workers can cache
+/// preparations across jobs.
 pub struct SolveJob {
     pub id: u64,
     pub dataset_id: u64,
-    pub x: Arc<Mat>,
+    pub x: Arc<Design>,
     pub y: Arc<Vec<f64>>,
     pub t: f64,
     pub lambda2: f64,
@@ -141,14 +142,14 @@ impl WorkerCtx {
             let prep = match job.backend {
                 BackendChoice::Rust => self
                     .rust
-                    .prepare(&job.x, &job.y)
+                    .prepare(job.x.as_ref(), &job.y)
                     .map_err(|e| e.to_string())?,
                 BackendChoice::Xla => {
                     self.ensure_xla()?;
                     self.xla
                         .as_ref()
                         .unwrap()
-                        .prepare(&job.x, &job.y)
+                        .prepare(job.x.as_ref(), &job.y)
                         .map_err(|e| e.to_string())?
                 }
             };
@@ -197,7 +198,7 @@ impl Service {
     pub fn submit(
         &self,
         dataset_id: u64,
-        x: Arc<Mat>,
+        x: Arc<Design>,
         y: Arc<Vec<f64>>,
         t: f64,
         lambda2: f64,
@@ -264,7 +265,7 @@ mod tests {
             pool: PoolConfig { workers: 2, queue_capacity: 8 },
             ..Default::default()
         });
-        let x = Arc::new(d.x.clone());
+        let x = Arc::new(Design::from(d.x.clone()));
         let y = Arc::new(d.y.clone());
         let rxs: Vec<_> = (0..6)
             .map(|i| {
@@ -313,7 +314,7 @@ mod tests {
         let service2 = Service::start(cfg);
         let rx = service2.submit(
             7,
-            Arc::new(d.x.clone()),
+            Arc::new(Design::from(d.x.clone())),
             Arc::new(d.y.clone()),
             0.5,
             0.1,

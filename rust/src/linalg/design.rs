@@ -1,0 +1,362 @@
+//! The [`Design`] abstraction: one type for the regression design matrix
+//! that every solver consumes, dense or sparse.
+//!
+//! The paper's sparse data sets (Dorothea, E2006-tfidf) arrive through
+//! `read_svmlight` as CSR; before this type existed they were densified
+//! before any flops happened. `Design` keeps sparse data sparse from
+//! loader to solution: it exposes exactly the products and column
+//! operations the solvers need (`matvec`, `matvec_t`, gram blocks,
+//! per-column dot/axpy), dispatching to the blocked dense kernels or the
+//! threaded CSR/CSC kernels — both bit-stable across thread counts.
+//!
+//! A sparse design carries the CSR *and* a CSC mirror: row access feeds
+//! the matvec-shaped products, the mirror gives coordinate descent
+//! O(nnz(col)) column access. The mirror is built once, at construction
+//! (`Design::from(csr)`), by the parallel transpose-scatter in
+//! [`Csc::from_csr`].
+
+use super::dense::Mat;
+use super::sparse::{Csc, Csr};
+use std::borrow::Cow;
+
+/// A regression design matrix (n samples × p features), dense or sparse.
+#[derive(Clone, Debug)]
+pub enum Design {
+    /// Dense row-major storage over the blocked GEMM/GEMV layer.
+    Dense(Mat),
+    /// CSR storage plus its CSC mirror (built at construction).
+    Sparse { csr: Csr, csc: Csc },
+}
+
+impl From<Mat> for Design {
+    fn from(m: Mat) -> Self {
+        Design::Dense(m)
+    }
+}
+
+impl From<Csr> for Design {
+    /// Wrap a CSR matrix, building the CSC mirror for column access.
+    fn from(csr: Csr) -> Self {
+        let csc = Csc::from_csr(&csr);
+        Design::Sparse { csr, csc }
+    }
+}
+
+impl Design {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.rows(),
+            Design::Sparse { csr, .. } => csr.rows(),
+        }
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.cols(),
+            Design::Sparse { csr, .. } => csr.cols(),
+        }
+    }
+
+    /// Stored entries: `rows·cols` for dense, `nnz` for sparse.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.rows() * m.cols(),
+            Design::Sparse { csr, .. } => csr.nnz(),
+        }
+    }
+
+    #[inline]
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Design::Sparse { .. })
+    }
+
+    /// Borrow the dense storage, if this design is dense.
+    pub fn as_dense(&self) -> Option<&Mat> {
+        match self {
+            Design::Dense(m) => Some(m),
+            Design::Sparse { .. } => None,
+        }
+    }
+
+    /// Materialize to dense (device-exchange boundaries, tests). This is
+    /// the *only* densifying operation on a sparse design; the solver
+    /// paths never call it.
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            Design::Dense(m) => m.clone(),
+            Design::Sparse { csr, .. } => csr.to_dense(),
+        }
+    }
+
+    /// `y ← X·x` (allocates the output).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => m.matvec(x),
+            Design::Sparse { csr, .. } => csr.matvec(x),
+        }
+    }
+
+    /// `y ← X·x` into a caller-provided buffer.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.matvec_into(x, y),
+            Design::Sparse { csr, .. } => csr.matvec_into(x, y),
+        }
+    }
+
+    /// `y ← Xᵀ·x` (allocates the output).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => m.matvec_t(x),
+            Design::Sparse { csr, .. } => csr.matvec_t(x),
+        }
+    }
+
+    /// `y ← Xᵀ·x` into a caller-provided buffer.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.matvec_t_into(x, y),
+            Design::Sparse { csr, .. } => csr.matvec_t_into(x, y),
+        }
+    }
+
+    /// Squared L2 norm of each column.
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => {
+                let mut n = vec![0.0; m.cols()];
+                for r in 0..m.rows() {
+                    for (c, &v) in m.row(r).iter().enumerate() {
+                        n[c] += v * v;
+                    }
+                }
+                n
+            }
+            Design::Sparse { csr, .. } => csr.col_norms_sq(),
+        }
+    }
+
+    /// Gram matrix `XᵀX` (p × p, dense output) — the t-independent block
+    /// of the SVEN dual `K(t)`. Dense designs use the packed blocked
+    /// kernel; sparse designs use the O(Σ nnz(row)²) CSR/CSC join.
+    pub fn gram_t(&self) -> Mat {
+        match self {
+            Design::Dense(m) => m.gram_t(),
+            Design::Sparse { csr, csc } => {
+                let mut g = Mat::zeros(csr.cols(), csr.cols());
+                csr.gram_into(csc, &mut g);
+                g
+            }
+        }
+    }
+
+    /// Gram matrix `XXᵀ` (n × n, dense output).
+    pub fn gram(&self) -> Mat {
+        match self {
+            Design::Dense(m) => m.gram(),
+            Design::Sparse { csr, csc } => {
+                let mut g = Mat::zeros(csr.rows(), csr.rows());
+                csr.gram_rows_into(csc, &mut g);
+                g
+            }
+        }
+    }
+
+    /// Column-access view for coordinate descent: a dense design yields a
+    /// one-time transposed copy (contiguous columns, exactly what the
+    /// dense CD inner loop always used); a sparse design borrows the CSC
+    /// mirror for O(nnz(col)) access.
+    pub fn cols_view(&self) -> DesignCols<'_> {
+        match self {
+            Design::Dense(m) => DesignCols::Dense(m.transpose()),
+            Design::Sparse { csc, .. } => DesignCols::Sparse(csc),
+        }
+    }
+}
+
+/// Column-access layer behind [`Design::cols_view`]; the inner-loop
+/// currency of the CD solvers (glmnet, Shotgun).
+pub enum DesignCols<'a> {
+    /// Transposed dense copy: row `j` is column `j` of X, contiguous.
+    Dense(Mat),
+    /// Borrowed CSC mirror of a sparse design.
+    Sparse(&'a Csc),
+}
+
+impl DesignCols<'_> {
+    /// `⟨X[:,j], x⟩`.
+    #[inline]
+    pub fn col_dot(&self, j: usize, x: &[f64]) -> f64 {
+        match self {
+            DesignCols::Dense(xt) => super::vecops::dot(xt.row(j), x),
+            DesignCols::Sparse(csc) => csc.col_dot(j, x),
+        }
+    }
+
+    /// `x ← x + a·X[:,j]`.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, a: f64, x: &mut [f64]) {
+        match self {
+            DesignCols::Dense(xt) => super::vecops::axpy(a, xt.row(j), x),
+            DesignCols::Sparse(csc) => csc.col_axpy(j, a, x),
+        }
+    }
+
+    /// Visit the nonzero entries of column `j` as (row, value) pairs
+    /// (dense entries that happen to be exactly 0.0 are skipped, matching
+    /// the Shotgun inner loop's historical behavior).
+    #[inline]
+    pub fn for_each_nz(&self, j: usize, mut f: impl FnMut(usize, f64)) {
+        match self {
+            DesignCols::Dense(xt) => {
+                for (i, &v) in xt.row(j).iter().enumerate() {
+                    if v != 0.0 {
+                        f(i, v);
+                    }
+                }
+            }
+            DesignCols::Sparse(csc) => {
+                for (i, v) in csc.col_iter(j) {
+                    f(i, v);
+                }
+            }
+        }
+    }
+}
+
+/// Borrowed-or-converted access to a [`Design`], so APIs like
+/// `Sven::prepare` accept a bare `Mat`, a `Csr`, or an existing `Design`
+/// without forcing callers to wrap by hand.
+///
+/// The `Mat`/`Csr` impls clone into an owned `Design` (one transient
+/// O(np) / O(nnz) copy); callers on a hot path that prepare the same
+/// data repeatedly should build a `Design` once and pass that instead.
+pub trait AsDesign {
+    fn as_design(&self) -> Cow<'_, Design>;
+}
+
+impl AsDesign for Design {
+    fn as_design(&self) -> Cow<'_, Design> {
+        Cow::Borrowed(self)
+    }
+}
+
+impl AsDesign for Mat {
+    fn as_design(&self) -> Cow<'_, Design> {
+        Cow::Owned(Design::Dense(self.clone()))
+    }
+}
+
+impl AsDesign for Csr {
+    fn as_design(&self) -> Cow<'_, Design> {
+        Cow::Owned(Design::from(self.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sparse_design(rng: &mut Rng, n: usize, p: usize, density: f64) -> (Design, Mat) {
+        let dense = Mat::from_fn(n, p, |_, _| {
+            if rng.bernoulli(density) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let csr = Csr::from_dense(&dense, 0.0);
+        (Design::from(csr), dense)
+    }
+
+    #[test]
+    fn sparse_products_match_dense() {
+        let mut rng = Rng::seed_from(61);
+        let (d, m) = sparse_design(&mut rng, 23, 17, 0.3);
+        assert!(d.is_sparse());
+        assert_eq!((d.rows(), d.cols()), (23, 17));
+        let x: Vec<f64> = (0..17).map(|_| rng.normal()).collect();
+        let u: Vec<f64> = (0..23).map(|_| rng.normal()).collect();
+        let y_s = d.matvec(&x);
+        let y_d = m.matvec(&x);
+        for i in 0..23 {
+            assert!((y_s[i] - y_d[i]).abs() < 1e-12, "matvec {i}");
+        }
+        let t_s = d.matvec_t(&u);
+        let t_d = m.matvec_t(&u);
+        for j in 0..17 {
+            assert!((t_s[j] - t_d[j]).abs() < 1e-12, "matvec_t {j}");
+        }
+        let g_s = d.gram_t();
+        let g_d = m.gram_t();
+        for i in 0..17 {
+            for j in 0..17 {
+                assert!((g_s.get(i, j) - g_d.get(i, j)).abs() < 1e-10, "gram_t ({i},{j})");
+            }
+        }
+        let gg_s = d.gram();
+        let gg_d = m.gram();
+        for i in 0..23 {
+            for j in 0..23 {
+                assert!((gg_s.get(i, j) - gg_d.get(i, j)).abs() < 1e-10, "gram ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cols_view_agrees_across_variants() {
+        let mut rng = Rng::seed_from(62);
+        let (d_sparse, m) = sparse_design(&mut rng, 14, 9, 0.4);
+        let d_dense = Design::from(m.clone());
+        let sv = d_sparse.cols_view();
+        let dv = d_dense.cols_view();
+        let x: Vec<f64> = (0..14).map(|_| rng.normal()).collect();
+        for j in 0..9 {
+            assert!((sv.col_dot(j, &x) - dv.col_dot(j, &x)).abs() < 1e-12, "dot {j}");
+            let mut a = vec![0.0; 14];
+            let mut b = vec![0.0; 14];
+            sv.col_axpy(j, 1.5, &mut a);
+            dv.col_axpy(j, 1.5, &mut b);
+            for i in 0..14 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "axpy {j}/{i}");
+            }
+            let mut seen_s = Vec::new();
+            let mut seen_d = Vec::new();
+            sv.for_each_nz(j, |i, v| seen_s.push((i, v)));
+            dv.for_each_nz(j, |i, v| seen_d.push((i, v)));
+            assert_eq!(seen_s, seen_d, "nz iteration {j}");
+        }
+    }
+
+    #[test]
+    fn col_norms_and_nnz() {
+        let mut rng = Rng::seed_from(63);
+        let (d, m) = sparse_design(&mut rng, 12, 6, 0.5);
+        let ns = d.col_norms_sq();
+        let nd = Design::from(m).col_norms_sq();
+        for j in 0..6 {
+            assert!((ns[j] - nd[j]).abs() < 1e-12, "col {j}");
+        }
+        assert!(d.nnz() <= 12 * 6);
+    }
+
+    #[test]
+    fn as_design_conversions() {
+        let m = Mat::eye(3);
+        let via_mat = m.as_design();
+        assert!(!via_mat.is_sparse());
+        let csr = Csr::from_dense(&m, 0.0);
+        let via_csr = csr.as_design();
+        assert!(via_csr.is_sparse());
+        assert_eq!(via_csr.nnz(), 3);
+        let d: Design = m.clone().into();
+        let borrowed = d.as_design();
+        assert_eq!(borrowed.rows(), 3);
+        assert_eq!(d.to_dense().data(), m.data());
+        assert!(d.as_dense().is_some());
+        assert!(via_csr.as_dense().is_none());
+    }
+}

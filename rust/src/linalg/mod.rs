@@ -4,9 +4,12 @@
 //! need is implemented here: a packed, register/L2-tiled, multi-threaded
 //! GEMM/Gram core ([`gemm`]), contiguous row-major matrices routed
 //! through it ([`dense`]), Cholesky factorization, conjugate gradients
-//! over abstract linear operators, and CSR sparse matrices. Worker
-//! counts come from [`crate::util::parallel`] (`PALLAS_NUM_THREADS`),
-//! and every parallel product is bit-stable across thread counts.
+//! over abstract linear operators, threaded CSR/CSC sparse kernels
+//! ([`sparse`]), and the [`Design`] abstraction that lets every solver
+//! consume dense or sparse data through one interface without
+//! densifying. Worker counts come from [`crate::util::parallel`]
+//! (`PALLAS_NUM_THREADS`), and every parallel product is bit-stable
+//! across thread counts.
 //!
 //! All solver numerics are `f64`; the XLA exchange path converts to `f32`
 //! at the runtime boundary (matching the paper's single-precision GPU
@@ -15,6 +18,7 @@
 pub mod cg;
 pub mod cholesky;
 pub mod dense;
+pub mod design;
 pub mod gemm;
 pub mod sparse;
 pub mod vecops;
@@ -22,4 +26,5 @@ pub mod vecops;
 pub use cg::{cg_solve, CgOptions, CgOutcome, LinOp};
 pub use cholesky::Cholesky;
 pub use dense::Mat;
-pub use sparse::Csr;
+pub use design::{AsDesign, Design, DesignCols};
+pub use sparse::{Csc, Csr};

@@ -1,14 +1,59 @@
-//! CSR sparse matrices.
+//! CSR/CSC sparse matrices with threaded kernels.
 //!
 //! Two of the paper's data sets (Dorothea, E2006-tfidf) are extremely
 //! sparse; the synthetic profiles mirror that, and the coordinate-descent
 //! baselines exploit sparsity through per-column access. CSR supports the
-//! row-major products; column access goes through an optional CSC mirror.
+//! row-major products; column access goes through a CSC mirror (see
+//! [`super::design::Design`], which carries both).
+//!
+//! Every kernel here parallelizes over the scoped pool in
+//! [`crate::util::parallel`] under the same determinism contract as the
+//! dense layer: the decomposition into work items is derived from the
+//! matrix shape, never from the worker count, and reductions run over
+//! fixed-size row chunks merged in chunk order — so results are
+//! bit-identical across `Parallelism` settings (pinned by the proptests
+//! in `rust/src/testing/prop.rs`).
 
 use super::dense::Mat;
+use crate::util::parallel;
+
+/// Below this stored-entry count the kernels stay inline on the caller:
+/// the work is too small to amortize a scoped fan-out. Compared against
+/// `nnz`, never against the thread count, so the serial/threaded split is
+/// itself deterministic.
+const PAR_NNZ: usize = 1 << 14;
+
+/// Minimum row-chunk length for the `Aᵀx` / column-norm partial-sum
+/// reductions (same scheme as the dense `Mat::matvec_t_into`).
+const TCHUNK: usize = 512;
+
+/// Cap on the number of reduction chunks: each chunk owns a dense
+/// length-`cols` partial, so an uncapped `rows / TCHUNK` grid would make
+/// the partial buffers (and the chunk-order merge) scale with the dense
+/// shape instead of nnz on very tall, very sparse inputs.
+const MAX_TCHUNKS: usize = 64;
+
+/// Chunk count for an (rows × cols, nnz) reduction, bounded three ways —
+/// all derived from the matrix, never from the thread count, so the
+/// reduction tree (and therefore the result bits) is identical in serial
+/// and parallel runs:
+///
+/// - ≤ `rows / TCHUNK`: each chunk covers at least [`TCHUNK`] rows;
+/// - ≤ [`MAX_TCHUNKS`];
+/// - ≤ `nnz / (4·cols)`: the dense partials (`nchunks·cols` f64) and
+///   their chunk-order merge stay a fraction of the O(nnz) scatter, so
+///   wide ultra-sparse inputs (the E2006-tfidf regime) never pay memory
+///   or merge work proportional to the dense shape. When this bound
+///   forces one chunk the caller's serial path runs instead.
+#[inline]
+fn reduction_chunks(rows: usize, cols: usize, nnz: usize) -> usize {
+    let by_rows = rows.div_ceil(TCHUNK);
+    let by_fill = nnz / (4 * cols.max(1));
+    by_rows.min(MAX_TCHUNKS).min(by_fill).max(1)
+}
 
 /// Compressed sparse row matrix.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
     rows: usize,
     cols: usize,
@@ -19,32 +64,32 @@ pub struct Csr {
 
 impl Csr {
     /// Build from (row, col, value) triplets; duplicates are summed.
+    ///
+    /// Entries are sorted by (row, col), then each run of equal
+    /// coordinates is merged into one stored value (a straight grouped
+    /// merge; explicit zeros — including duplicate runs summing to zero —
+    /// are kept).
     pub fn from_triplets(rows: usize, cols: usize, mut trip: Vec<(usize, usize, f64)>) -> Self {
         trip.sort_unstable_by_key(|&(r, c, _)| (r, c));
         let mut indptr = vec![0usize; rows + 1];
         let mut indices = Vec::with_capacity(trip.len());
         let mut values: Vec<f64> = Vec::with_capacity(trip.len());
-        for &(r, c, v) in &trip {
-            assert!(r < rows && c < cols, "triplet out of bounds");
-            if let (Some(&last_c), true) = (indices.last(), indptr[r + 1] > 0) {
-                // merge duplicate within the same current row
-                if last_c == c && indices.len() > indptr[r] && indptr[r + 1] == indices.len() {
-                    // last entry belongs to row r with same col: accumulate
-                    let lv = values.last_mut().unwrap();
-                    *lv += v;
-                    continue;
-                }
+        let mut i = 0;
+        while i < trip.len() {
+            let (r, c, _) = trip[i];
+            assert!(r < rows && c < cols, "triplet ({r}, {c}) out of bounds");
+            let mut v = 0.0;
+            while i < trip.len() && trip[i].0 == r && trip[i].1 == c {
+                v += trip[i].2;
+                i += 1;
             }
-            // close out rows between
             indices.push(c);
             values.push(v);
             indptr[r + 1] = indices.len();
         }
-        // prefix-fill: rows with no entries inherit previous offset
+        // prefix-fill: rows with no entries inherit the previous offset
         for r in 1..=rows {
-            if indptr[r] < indptr[r - 1] {
-                indptr[r] = indptr[r - 1];
-            }
+            indptr[r] = indptr[r].max(indptr[r - 1]);
         }
         Csr { rows, cols, indptr, indices, values }
     }
@@ -103,51 +148,193 @@ impl Csr {
         self.indices[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
     }
 
-    /// `y ← A·x`.
+    /// `y ← A·x` (allocates the output).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
-        for r in 0..self.rows {
-            let mut s = 0.0;
-            for (c, v) in self.row_iter(r) {
-                s += v * x[c];
-            }
-            y[r] = s;
-        }
+        self.matvec_into(x, &mut y);
         y
     }
 
-    /// `y ← Aᵀ·x`.
+    /// `y ← A·x` into a caller-provided buffer. Output rows are banded
+    /// over the scoped pool; each `y[r]` is one sparse row dot, so the
+    /// result does not depend on the banding.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let nt = parallel::effective_threads();
+        if self.nnz() < PAR_NNZ || nt <= 1 || self.rows <= 1 {
+            for (r, yr) in y.iter_mut().enumerate() {
+                let mut s = 0.0;
+                for (c, v) in self.row_iter(r) {
+                    s += v * x[c];
+                }
+                *yr = s;
+            }
+            return;
+        }
+        let band = self.rows.div_ceil(nt);
+        let chunks: Vec<&mut [f64]> = y.chunks_mut(band).collect();
+        parallel::parallel_items(nt, chunks, |tid, ych| {
+            let lo = tid * band;
+            for (i, yr) in ych.iter_mut().enumerate() {
+                let mut s = 0.0;
+                for (c, v) in self.row_iter(lo + i) {
+                    s += v * x[c];
+                }
+                *yr = s;
+            }
+        });
+    }
+
+    /// `y ← Aᵀ·x` (allocates the output).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.rows);
         let mut y = vec![0.0; self.cols];
-        for r in 0..self.rows {
-            let xr = x[r];
-            if xr == 0.0 {
-                continue;
-            }
-            for (c, v) in self.row_iter(r) {
-                y[c] += v * xr;
-            }
-        }
+        self.matvec_t_into(x, &mut y);
         y
     }
 
-    /// Squared L2 norm of each column (CD Lipschitz constants).
+    /// `y ← Aᵀ·x` into a caller-provided buffer.
+    ///
+    /// Rows are reduced in shape-derived chunks (see
+    /// [`reduction_chunks`]): each chunk scatters into a private
+    /// length-`cols` partial (parallel across chunks), then the partials
+    /// are summed in chunk order — identical bits at any worker count,
+    /// with partial memory and merge work bounded by a fraction of nnz.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        if self.rows == 0 || self.cols == 0 {
+            return;
+        }
+        let tchunk = self.rows.div_ceil(reduction_chunks(self.rows, self.cols, self.nnz()));
+        let nchunks = self.rows.div_ceil(tchunk);
+        if nchunks == 1 || self.nnz() < PAR_NNZ {
+            for r in 0..self.rows {
+                let xr = x[r];
+                if xr == 0.0 {
+                    continue;
+                }
+                for (c, v) in self.row_iter(r) {
+                    y[c] += v * xr;
+                }
+            }
+            return;
+        }
+        let nt = parallel::effective_threads();
+        let mut partials = vec![0.0; nchunks * self.cols];
+        {
+            let chunks: Vec<&mut [f64]> = partials.chunks_mut(self.cols).collect();
+            parallel::parallel_items(nt, chunks, |ci, acc| {
+                let lo = ci * tchunk;
+                let hi = (lo + tchunk).min(self.rows);
+                for r in lo..hi {
+                    let xr = x[r];
+                    if xr == 0.0 {
+                        continue;
+                    }
+                    for (c, v) in self.row_iter(r) {
+                        acc[c] += v * xr;
+                    }
+                }
+            });
+        }
+        for p in partials.chunks(self.cols) {
+            super::vecops::axpy(1.0, p, y);
+        }
+    }
+
+    /// Squared L2 norm of each column (CD Lipschitz constants), reduced
+    /// over the same shape-derived chunk scheme as [`Csr::matvec_t_into`].
     pub fn col_norms_sq(&self) -> Vec<f64> {
         let mut n = vec![0.0; self.cols];
-        for r in 0..self.rows {
-            for (c, v) in self.row_iter(r) {
-                n[c] += v * v;
+        if self.rows == 0 || self.cols == 0 {
+            return n;
+        }
+        let tchunk = self.rows.div_ceil(reduction_chunks(self.rows, self.cols, self.nnz()));
+        let nchunks = self.rows.div_ceil(tchunk);
+        if nchunks == 1 || self.nnz() < PAR_NNZ {
+            for r in 0..self.rows {
+                for (c, v) in self.row_iter(r) {
+                    n[c] += v * v;
+                }
             }
+            return n;
+        }
+        let nt = parallel::effective_threads();
+        let mut partials = vec![0.0; nchunks * self.cols];
+        {
+            let chunks: Vec<&mut [f64]> = partials.chunks_mut(self.cols).collect();
+            parallel::parallel_items(nt, chunks, |ci, acc| {
+                let lo = ci * tchunk;
+                let hi = (lo + tchunk).min(self.rows);
+                for r in lo..hi {
+                    for (c, v) in self.row_iter(r) {
+                        acc[c] += v * v;
+                    }
+                }
+            });
+        }
+        for p in partials.chunks(self.cols) {
+            super::vecops::axpy(1.0, p, &mut n);
         }
         n
+    }
+
+    /// `G ← AᵀA` (cols × cols, dense) — the t-independent block of the
+    /// SVEN dual gram `K(t)`. Output row `j` joins column `j`'s CSC
+    /// entries with the CSR rows they touch, so the cost is
+    /// `Σ_r nnz(row r)²` instead of the dense `O(n·p²)`. Each output row
+    /// is owned by exactly one worker and accumulated in a fixed
+    /// (row-ascending, then column-ascending) order — bit-identical
+    /// across thread counts.
+    pub fn gram_into(&self, csc: &Csc, out: &mut Mat) {
+        assert_eq!(csc.rows(), self.rows, "CSC mirror shape mismatch");
+        assert_eq!(csc.cols(), self.cols, "CSC mirror shape mismatch");
+        assert_eq!((out.rows(), out.cols()), (self.cols, self.cols), "gram output shape");
+        let p = self.cols;
+        out.data_mut().fill(0.0);
+        if p == 0 || self.nnz() == 0 {
+            return;
+        }
+        let nt = if self.nnz() < PAR_NNZ { 1 } else { parallel::effective_threads() };
+        let rows: Vec<&mut [f64]> = out.data_mut().chunks_mut(p).collect();
+        parallel::parallel_items(nt, rows, |j, row| {
+            for (r, vjr) in csc.col_iter(j) {
+                for (c, vrc) in self.row_iter(r) {
+                    row[c] += vjr * vrc;
+                }
+            }
+        });
+    }
+
+    /// `G ← AAᵀ` (rows × rows, dense): the mirror of [`Csr::gram_into`]
+    /// with rows and columns swapped (used by the ridge pre-check on the
+    /// n < p side). Same ownership/determinism contract.
+    pub fn gram_rows_into(&self, csc: &Csc, out: &mut Mat) {
+        assert_eq!(csc.rows(), self.rows, "CSC mirror shape mismatch");
+        assert_eq!(csc.cols(), self.cols, "CSC mirror shape mismatch");
+        assert_eq!((out.rows(), out.cols()), (self.rows, self.rows), "gram output shape");
+        let n = self.rows;
+        out.data_mut().fill(0.0);
+        if n == 0 || self.nnz() == 0 {
+            return;
+        }
+        let nt = if self.nnz() < PAR_NNZ { 1 } else { parallel::effective_threads() };
+        let rows: Vec<&mut [f64]> = out.data_mut().chunks_mut(n).collect();
+        parallel::parallel_items(nt, rows, |i, row| {
+            for (c, vic) in self.row_iter(i) {
+                for (r2, vr2c) in csc.col_iter(c) {
+                    row[r2] += vic * vr2c;
+                }
+            }
+        });
     }
 }
 
 /// Compressed sparse column mirror — gives coordinate descent O(nnz(col))
 /// access to single columns.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Csc {
     rows: usize,
     cols: usize,
@@ -157,26 +344,86 @@ pub struct Csc {
 }
 
 impl Csc {
+    /// Transpose-scatter a CSR matrix into column-major storage.
+    ///
+    /// The column layout (entries sorted by row within each column) is an
+    /// exact integer placement, so the result is identical however the
+    /// scatter is decomposed. Large inputs split the output into
+    /// contiguous column bands balanced by entry count; each worker scans
+    /// the CSR once and keeps only its band.
     pub fn from_csr(a: &Csr) -> Self {
-        let mut counts = vec![0usize; a.cols + 1];
+        let nnz = a.nnz();
+        let mut colptr = vec![0usize; a.cols + 1];
         for &c in &a.indices {
-            counts[c + 1] += 1;
+            colptr[c + 1] += 1;
         }
         for c in 0..a.cols {
-            counts[c + 1] += counts[c];
+            colptr[c + 1] += colptr[c];
         }
-        let colptr = counts.clone();
-        let mut cursor = counts;
-        let mut indices = vec![0usize; a.nnz()];
-        let mut values = vec![0.0; a.nnz()];
-        for r in 0..a.rows {
-            for (c, v) in a.row_iter(r) {
-                let k = cursor[c];
-                indices[k] = r;
-                values[k] = v;
-                cursor[c] += 1;
+        let mut indices = vec![0usize; nnz];
+        let mut values = vec![0.0f64; nnz];
+        let nt = if nnz < PAR_NNZ { 1 } else { parallel::effective_threads() };
+        let nbands = nt.min(a.cols.max(1));
+        if nbands <= 1 {
+            let mut cursor = colptr.clone();
+            for r in 0..a.rows {
+                for (c, v) in a.row_iter(r) {
+                    let k = cursor[c];
+                    indices[k] = r;
+                    values[k] = v;
+                    cursor[c] += 1;
+                }
+            }
+            return Csc { rows: a.rows, cols: a.cols, colptr, indices, values };
+        }
+        // Column-band boundaries at ~nnz/nbands entries per band.
+        let target = nnz.div_ceil(nbands);
+        let mut bounds = vec![0usize];
+        let mut next_goal = target;
+        for c in 1..a.cols {
+            if colptr[c] >= next_goal && bounds.len() < nbands {
+                bounds.push(c);
+                next_goal = colptr[c] + target;
             }
         }
+        bounds.push(a.cols);
+        // Split the output storage at the band boundaries so each worker
+        // owns a disjoint contiguous range.
+        let mut items = Vec::with_capacity(bounds.len() - 1);
+        let mut idx_rest: &mut [usize] = &mut indices;
+        let mut val_rest: &mut [f64] = &mut values;
+        for w in bounds.windows(2) {
+            let (c0, c1) = (w[0], w[1]);
+            let len = colptr[c1] - colptr[c0];
+            let (ih, it) = idx_rest.split_at_mut(len);
+            let (vh, vt) = val_rest.split_at_mut(len);
+            idx_rest = it;
+            val_rest = vt;
+            items.push((c0, c1, ih, vh));
+        }
+        let colptr_ref = &colptr;
+        let nitems = items.len();
+        parallel::parallel_items(nitems, items, |_, (c0, c1, idx, val)| {
+            // Each worker streams the (cache-friendly) column-index array
+            // once and touches values only for entries in its band, so the
+            // extra traversal cost of band ownership is one sequential
+            // 8-byte read per entry per band — the price of staying free
+            // of shared mutable scatter targets.
+            let base = colptr_ref[c0];
+            let mut cursor: Vec<usize> =
+                colptr_ref[c0..c1].iter().map(|&v| v - base).collect();
+            for r in 0..a.rows {
+                for k in a.indptr[r]..a.indptr[r + 1] {
+                    let c = a.indices[k];
+                    if c >= c0 && c < c1 {
+                        let kk = cursor[c - c0];
+                        idx[kk] = r;
+                        val[kk] = a.values[k];
+                        cursor[c - c0] += 1;
+                    }
+                }
+            }
+        });
         Csc { rows: a.rows, cols: a.cols, colptr, indices, values }
     }
 
@@ -188,6 +435,12 @@ impl Csc {
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
     }
 
     /// Column iterator: (row, value) pairs of column c.
@@ -217,6 +470,7 @@ impl Csc {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+    use crate::util::parallel::{with_parallelism, Parallelism};
 
     fn random_sparse(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Csr {
         let mut trip = Vec::new();
@@ -263,6 +517,22 @@ mod tests {
         assert_eq!(d.get(0, 0), 3.0);
         assert_eq!(d.get(1, 1), 5.0);
         assert_eq!(d.get(0, 1), 0.0);
+        assert_eq!(a.nnz(), 2);
+    }
+
+    #[test]
+    fn unsorted_duplicate_triplets_merge() {
+        // Duplicates split across the input order (and out of row order)
+        // must still merge into one entry per coordinate.
+        let a = Csr::from_triplets(
+            3,
+            3,
+            vec![(2, 1, 4.0), (0, 2, 1.0), (2, 1, -1.0), (0, 2, 0.5), (2, 1, 2.0)],
+        );
+        assert_eq!(a.nnz(), 2);
+        let d = a.to_dense();
+        assert_eq!(d.get(2, 1), 5.0);
+        assert_eq!(d.get(0, 2), 1.5);
     }
 
     #[test]
@@ -307,5 +577,104 @@ mod tests {
         let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0)]);
         assert_eq!(a.nnz(), 1);
         assert!((a.density() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_into_matches_dense() {
+        let mut rng = Rng::seed_from(45);
+        let a = random_sparse(&mut rng, 30, 12, 0.3);
+        let csc = Csc::from_csr(&a);
+        let mut g = Mat::zeros(12, 12);
+        a.gram_into(&csc, &mut g);
+        let gd = a.to_dense().gram_t();
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((g.get(i, j) - gd.get(i, j)).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_rows_into_matches_dense() {
+        let mut rng = Rng::seed_from(46);
+        let a = random_sparse(&mut rng, 11, 25, 0.3);
+        let csc = Csc::from_csr(&a);
+        let mut g = Mat::zeros(11, 11);
+        a.gram_rows_into(&csc, &mut g);
+        let gd = a.to_dense().gram();
+        for i in 0..11 {
+            for j in 0..11 {
+                assert!((g.get(i, j) - gd.get(i, j)).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    /// All sparse kernels must be bit-identical serial vs threaded on a
+    /// shape that crosses the [`PAR_NNZ`] fan-out threshold.
+    #[test]
+    fn kernels_bit_stable_across_parallelism() {
+        let mut rng = Rng::seed_from(47);
+        // ~60k nnz > PAR_NNZ; > TCHUNK rows so the reduction chunks split.
+        let a = random_sparse(&mut rng, 1200, 180, 0.28);
+        assert!(a.nnz() >= PAR_NNZ, "test shape must cross the threshold");
+        let x: Vec<f64> = (0..180).map(|_| rng.normal()).collect();
+        let xt: Vec<f64> = (0..1200).map(|_| rng.normal()).collect();
+        let serial = with_parallelism(Parallelism::None, || {
+            let mut g = Mat::zeros(180, 180);
+            let csc = Csc::from_csr(&a);
+            a.gram_into(&csc, &mut g);
+            (a.matvec(&x), a.matvec_t(&xt), a.col_norms_sq(), csc, g)
+        });
+        for nt in [2usize, 4] {
+            let threaded = with_parallelism(Parallelism::Fixed(nt), || {
+                let mut g = Mat::zeros(180, 180);
+                let csc = Csc::from_csr(&a);
+                a.gram_into(&csc, &mut g);
+                (a.matvec(&x), a.matvec_t(&xt), a.col_norms_sq(), csc, g)
+            });
+            for (s, t) in serial.0.iter().zip(&threaded.0) {
+                assert_eq!(s.to_bits(), t.to_bits(), "matvec nt={nt}");
+            }
+            for (s, t) in serial.1.iter().zip(&threaded.1) {
+                assert_eq!(s.to_bits(), t.to_bits(), "matvec_t nt={nt}");
+            }
+            for (s, t) in serial.2.iter().zip(&threaded.2) {
+                assert_eq!(s.to_bits(), t.to_bits(), "col_norms_sq nt={nt}");
+            }
+            assert_eq!(serial.3, threaded.3, "csc construction nt={nt}");
+            for (s, t) in serial.4.data().iter().zip(threaded.4.data()) {
+                assert_eq!(s.to_bits(), t.to_bits(), "gram nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_csc_matches_serial_on_ragged_columns() {
+        // Heavily skewed column occupancy exercises the nnz-balanced
+        // band split (some bands hold one hot column, some hold many).
+        let mut rng = Rng::seed_from(48);
+        let mut trip = Vec::new();
+        for r in 0..900 {
+            // hot columns 0..3 plus a sparse tail
+            for c in 0..3 {
+                trip.push((r, c, rng.normal()));
+            }
+            for _ in 0..20 {
+                trip.push((r, 3 + rng.below(97), rng.normal()));
+            }
+        }
+        let a = Csr::from_triplets(900, 100, trip);
+        assert!(a.nnz() >= PAR_NNZ);
+        let serial = with_parallelism(Parallelism::None, || Csc::from_csr(&a));
+        let threaded = with_parallelism(Parallelism::Fixed(4), || Csc::from_csr(&a));
+        assert_eq!(serial, threaded);
+        // and the mirror is correct against the dense transpose
+        let d = a.to_dense();
+        let x: Vec<f64> = (0..900).map(|_| rng.normal()).collect();
+        for c in [0usize, 1, 2, 50, 99] {
+            let expect: f64 = (0..900).map(|r| d.get(r, c) * x[r]).sum();
+            let got = serial.col_dot(c, &x);
+            assert!((got - expect).abs() < 1e-9 * (1.0 + expect.abs()), "col {c}");
+        }
     }
 }

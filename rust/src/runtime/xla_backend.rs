@@ -9,7 +9,7 @@
 //! structure that makes the paper's Figure-3 timings flat in t.
 
 use super::engine::{pad_matrix, pad_vec, sample_mask, unpad_alpha, XlaEngine};
-use crate::linalg::Mat;
+use crate::linalg::{Design, Mat};
 use crate::solvers::sven::{PreparedSvm, SvmBackend, SvmMode, SvmSolve, SvmWarm};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -45,11 +45,22 @@ impl SvmBackend for XlaBackend {
 
     fn prepare(
         &self,
-        x: &Mat,
+        x: &Design,
         y: &[f64],
         mode: SvmMode,
     ) -> Result<Box<dyn PreparedSvm>> {
         let (n, p) = (x.rows(), x.cols());
+        // The AOT artifacts consume padded dense buffers, so the device
+        // boundary is where a sparse design finally densifies — one copy,
+        // staged once per data set (the CPU backend never does this).
+        let dense_holder;
+        let x: &Mat = match x.as_dense() {
+            Some(m) => m,
+            None => {
+                dense_holder = x.to_dense();
+                &dense_holder
+            }
+        };
         match mode.resolve(n, p) {
             SvmMode::Primal => {
                 let meta = self

@@ -12,17 +12,19 @@
 //! into SVEN. [`EnProblem`] carries the constrained form; conversions live
 //! here.
 
-use crate::linalg::{vecops, Mat};
+use crate::linalg::{vecops, Design, Mat};
 
 /// A (constrained-form) Elastic Net problem instance.
 ///
 /// Convention follows the paper: `x` is `n × p` (samples × features), `y`
 /// is length `n`, assumed centered; features assumed normalized (see
-/// [`crate::data::standardize`]).
+/// [`crate::data::standardize`]). The design is a [`Design`], so sparse
+/// problems (e.g. loaded via `read_svmlight`) flow through the solvers
+/// without ever materializing an n × p dense matrix.
 #[derive(Clone, Debug)]
 pub struct EnProblem {
-    /// Design matrix, n × p.
-    pub x: Mat,
+    /// Design matrix, n × p (dense or sparse).
+    pub x: Design,
     /// Centered response, length n.
     pub y: Vec<f64>,
     /// L1 budget t > 0.
@@ -32,7 +34,10 @@ pub struct EnProblem {
 }
 
 impl EnProblem {
-    pub fn new(x: Mat, y: Vec<f64>, t: f64, lambda2: f64) -> Self {
+    /// Build a problem from a dense `Mat`, a sparse `Csr`-backed
+    /// [`Design`], or any other `Into<Design>`.
+    pub fn new(x: impl Into<Design>, y: Vec<f64>, t: f64, lambda2: f64) -> Self {
+        let x = x.into();
         assert_eq!(x.rows(), y.len(), "X rows must match y length");
         assert!(t > 0.0, "L1 budget must be positive");
         assert!(lambda2 >= 0.0, "lambda2 must be non-negative");

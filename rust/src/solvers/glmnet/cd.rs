@@ -1,14 +1,22 @@
 //! Cyclic coordinate descent core (Friedman et al. 2010).
+//!
+//! The naive (residual-based) update is written once over
+//! [`DesignCols`] — the column-access layer of [`Design`] — so dense
+//! designs keep their contiguous transposed-copy inner loop and sparse
+//! designs pay O(nnz(x_j)) per coordinate with zero densification.
 
-use crate::linalg::{vecops, Mat};
+use crate::linalg::{vecops, Design, DesignCols, Mat};
 
 /// Inner update rule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CdMode {
-    /// Residual-based updates: O(n) per coordinate. Best when p ≫ n.
+    /// Residual-based updates: O(n) per coordinate dense, O(nnz(x_j))
+    /// sparse. Best when p ≫ n.
     Naive,
     /// Covariance updates: cache ⟨x_j, y⟩ and ⟨x_j, x_k⟩ for active k —
     /// O(|active|) per coordinate after caching. Best when n ≫ p.
+    /// Dense-only: the cached rows are dense p-vectors, so sparse designs
+    /// fall back to [`CdMode::Naive`] rather than densify.
     Covariance,
     /// Pick per problem shape (glmnet's own heuristic).
     Auto,
@@ -63,9 +71,34 @@ pub fn solve_penalized(
         m => m,
     };
     match mode {
-        CdMode::Naive => solve_naive(x, y, lambda, cfg, beta0),
+        CdMode::Naive => {
+            let cols = DesignCols::Dense(x.transpose());
+            solve_naive_cols(&cols, n, p, y, lambda, cfg, beta0)
+        }
         CdMode::Covariance => solve_covariance(x, y, lambda, cfg, beta0),
         CdMode::Auto => unreachable!(),
+    }
+}
+
+/// [`solve_penalized`] over a [`Design`]. Dense designs route through the
+/// dense entry (same mode heuristics, same numerics); sparse designs run
+/// the naive update through the CSC mirror — the whole solve is O(nnz)
+/// per epoch and never materializes an n × p dense matrix.
+pub fn solve_penalized_design(
+    design: &Design,
+    y: &[f64],
+    lambda: f64,
+    cfg: &GlmnetConfig,
+    beta0: Option<&[f64]>,
+) -> GlmnetResult {
+    match design {
+        Design::Dense(x) => solve_penalized(x, y, lambda, cfg, beta0),
+        Design::Sparse { .. } => {
+            let (n, p) = (design.rows(), design.cols());
+            assert_eq!(y.len(), n);
+            let cols = design.cols_view();
+            solve_naive_cols(&cols, n, p, y, lambda, cfg, beta0)
+        }
     }
 }
 
@@ -75,14 +108,18 @@ fn null_dev(y: &[f64]) -> f64 {
     vecops::norm2_sq(y).max(1e-300)
 }
 
-fn solve_naive(
-    x: &Mat,
+/// Naive-update core over a column-access view. The residual
+/// `r = y − Xβ` is maintained by per-column axpys, so every operation —
+/// initialization included — costs O(nnz(x_j)) on sparse columns.
+fn solve_naive_cols(
+    cols: &DesignCols,
+    n: usize,
+    p: usize,
     y: &[f64],
     lambda: f64,
     cfg: &GlmnetConfig,
     beta0: Option<&[f64]>,
 ) -> GlmnetResult {
-    let (n, p) = (x.rows(), x.cols());
     let nf = n as f64;
     let l1 = lambda * cfg.kappa;
     let l2 = lambda * (1.0 - cfg.kappa);
@@ -92,13 +129,11 @@ fn solve_naive(
     let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
     assert_eq!(beta.len(), p);
 
-    // Residual r = y − Xβ. Columns are strided in the row-major Mat, so we
-    // keep a column-major copy of X for the CD inner loop (one-time O(np)).
-    let xt = x.transpose(); // xt.row(j) = column j, contiguous
     let mut r = y.to_vec();
-    if beta.iter().any(|b| *b != 0.0) {
-        let xb = x.matvec(&beta);
-        vecops::sub(y, &xb, &mut r);
+    for j in 0..p {
+        if beta[j] != 0.0 {
+            cols.col_axpy(j, -beta[j], &mut r);
+        }
     }
 
     let mut active: Vec<usize> = (0..p).filter(|&j| beta[j] != 0.0).collect();
@@ -110,12 +145,11 @@ fn solve_naive(
         loop {
             let mut max_delta = 0.0f64;
             for &j in &active {
-                let xj = xt.row(j);
                 let bj = beta[j];
-                let zj = vecops::dot(xj, &r) / nf + bj;
+                let zj = cols.col_dot(j, &r) / nf + bj;
                 let bj_new = vecops::soft_threshold(zj, l1) / denom;
                 if bj_new != bj {
-                    vecops::axpy(bj - bj_new, xj, &mut r);
+                    cols.col_axpy(j, bj - bj_new, &mut r);
                     beta[j] = bj_new;
                     let d = bj_new - bj;
                     max_delta = max_delta.max(d * d * nf);
@@ -133,12 +167,11 @@ fn solve_naive(
         let mut changed = false;
         let mut max_delta = 0.0f64;
         for j in 0..p {
-            let xj = xt.row(j);
             let bj = beta[j];
-            let zj = vecops::dot(xj, &r) / nf + bj;
+            let zj = cols.col_dot(j, &r) / nf + bj;
             let bj_new = vecops::soft_threshold(zj, l1) / denom;
             if bj_new != bj {
-                vecops::axpy(bj - bj_new, xj, &mut r);
+                cols.col_axpy(j, bj - bj_new, &mut r);
                 beta[j] = bj_new;
                 let d = bj_new - bj;
                 max_delta = max_delta.max(d * d * nf);
@@ -273,15 +306,38 @@ fn ensure_cov(xt: &Mat, cov: &mut [Option<Vec<f64>>], j: usize, nf: f64) {
 
 /// The smallest λ at which all coefficients are zero:
 /// `λ_max = max_j |⟨x_j, y⟩| / (n·κ)`.
+///
+/// κ is clamped below at `1e-3`: as κ → 0 the penalty loses its L1 part
+/// and λ_max diverges, so the clamp keeps near-ridge path grids finite
+/// (the same guard glmnet applies). κ = 0 exactly — pure ridge — has no
+/// finite λ_max at all and is rejected with a panic rather than silently
+/// clamped.
 pub fn lambda_max(x: &Mat, y: &[f64], kappa: f64) -> f64 {
-    let g = x.matvec_t(y);
-    vecops::norm_inf(&g) / (x.rows() as f64 * kappa.max(1e-3))
+    lambda_max_from_grad(&x.matvec_t(y), x.rows(), kappa)
+}
+
+/// [`lambda_max`] over a [`Design`] — O(nnz) on sparse designs. Same
+/// clamp and κ = 0 rejection.
+pub fn lambda_max_design(design: &Design, y: &[f64], kappa: f64) -> f64 {
+    lambda_max_from_grad(&design.matvec_t(y), design.rows(), kappa)
+}
+
+/// Shared λ_max core over the precomputed gradient `g = Xᵀy` — the κ
+/// guard and clamp live here, once.
+fn lambda_max_from_grad(g: &[f64], n: usize, kappa: f64) -> f64 {
+    assert!(
+        kappa > 0.0,
+        "lambda_max requires kappa > 0: a pure-ridge penalty (kappa = 0) has no \
+         finite lambda at which all coefficients vanish"
+    );
+    vecops::norm_inf(g) / (n as f64 * kappa.max(1e-3))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::{synth_regression, SynthSpec};
+    use crate::linalg::Csr;
     use crate::solvers::elastic_net::penalized_objective;
 
     fn test_data(n: usize, p: usize, seed: u64) -> (Mat, Vec<f64>) {
@@ -308,6 +364,26 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "kappa > 0")]
+    fn lambda_max_rejects_zero_kappa() {
+        let (x, y) = test_data(10, 4, 87);
+        lambda_max(&x, &y, 0.0);
+    }
+
+    #[test]
+    fn lambda_max_clamps_tiny_kappa() {
+        // κ below the clamp behaves exactly as κ = 1e-3 (documented guard
+        // against divergent near-ridge grids), and the result is finite.
+        let (x, y) = test_data(20, 6, 88);
+        let tiny = lambda_max(&x, &y, 1e-9);
+        let at_clamp = lambda_max(&x, &y, 1e-3);
+        assert!(tiny.is_finite() && tiny > 0.0);
+        assert_eq!(tiny.to_bits(), at_clamp.to_bits());
+        // above the clamp the value actually depends on κ
+        assert!(lambda_max(&x, &y, 0.5) < at_clamp);
+    }
+
+    #[test]
     fn naive_and_covariance_agree() {
         let (x, y) = test_data(60, 25, 82);
         let cfg_n = GlmnetConfig { mode: CdMode::Naive, ..Default::default() };
@@ -317,6 +393,41 @@ mod tests {
         let b = solve_penalized(&x, &y, lambda, &cfg_c, None);
         for j in 0..25 {
             assert!((a.beta[j] - b.beta[j]).abs() < 1e-6, "j={j}");
+        }
+    }
+
+    #[test]
+    fn sparse_design_matches_dense_cd() {
+        // Same algorithm (naive updates) over the dense transposed copy
+        // and the CSC mirror: solutions agree within CD tolerance.
+        let mut rng = crate::rng::Rng::seed_from(89);
+        let x = Mat::from_fn(40, 30, |_, _| {
+            if rng.bernoulli(0.15) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let design = Design::from(Csr::from_dense(&x, 0.0));
+        assert!(design.is_sparse());
+        let cfg = GlmnetConfig { mode: CdMode::Naive, tol: 1e-12, ..Default::default() };
+        let lambda = lambda_max(&x, &y, cfg.kappa) * 0.3;
+        assert!(
+            (lambda - lambda_max_design(&design, &y, cfg.kappa)).abs()
+                < 1e-12 * (1.0 + lambda),
+            "lambda_max dense vs design"
+        );
+        let dense = solve_penalized(&x, &y, lambda, &cfg, None);
+        let sparse = solve_penalized_design(&design, &y, lambda, &cfg, None);
+        assert_eq!(dense.converged, sparse.converged);
+        for j in 0..30 {
+            assert!(
+                (dense.beta[j] - sparse.beta[j]).abs() < 1e-6,
+                "j={j}: {} vs {}",
+                dense.beta[j],
+                sparse.beta[j]
+            );
         }
     }
 

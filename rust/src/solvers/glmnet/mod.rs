@@ -16,5 +16,8 @@
 pub mod cd;
 pub mod path;
 
-pub use cd::{solve_penalized, CdMode, GlmnetConfig, GlmnetResult};
+pub use cd::{
+    lambda_max, lambda_max_design, solve_penalized, solve_penalized_design, CdMode,
+    GlmnetConfig, GlmnetResult,
+};
 pub use path::{compute_path, PathPoint, PathSettings};

@@ -4,8 +4,12 @@
 //! [`crate::solvers::svm`] — the "SVEN (CPU)" line of the paper's figures.
 //! The XLA backend (see [`crate::runtime`]) implements the same trait over
 //! AOT-compiled artifacts — "SVEN (XLA)", the stand-in for "SVEN (GPU)".
+//!
+//! Backends prepare from a [`Design`], so a sparse data set flows through
+//! preparation (gram blocks via the CSR/CSC join, Xᵀy via sparse GEMV)
+//! and every per-point solve without densifying.
 
-use crate::linalg::{vecops, Mat};
+use crate::linalg::{vecops, Design, Mat};
 use crate::solvers::svm::{
     dual_newton, primal_newton, samples::reduction_gram, samples::reduction_labels,
     DualOptions, PrimalOptions, ReducedSamples, SampleSet,
@@ -72,12 +76,13 @@ pub trait PreparedSvm {
 /// [`PreparedSvm`] for the threading contract).
 pub trait SvmBackend {
     fn name(&self) -> &str;
-    /// Prepare `x` (n × p) / `y` for repeated solves. The preparation owns
-    /// its data and caches (gram blocks, staged device buffers), so it can
-    /// outlive the borrow — workers cache one per data set.
+    /// Prepare `x` (n × p, dense or sparse) / `y` for repeated solves.
+    /// The preparation owns its data and caches (gram blocks, staged
+    /// device buffers), so it can outlive the borrow — workers cache one
+    /// per data set.
     fn prepare(
         &self,
-        x: &Mat,
+        x: &Design,
         y: &[f64],
         mode: SvmMode,
     ) -> anyhow::Result<Box<dyn PreparedSvm>>;
@@ -103,7 +108,7 @@ impl SvmBackend for RustBackend {
 
     fn prepare(
         &self,
-        x: &Mat,
+        x: &Design,
         y: &[f64],
         mode: SvmMode,
     ) -> anyhow::Result<Box<dyn PreparedSvm>> {
@@ -116,7 +121,9 @@ impl SvmBackend for RustBackend {
             })),
             SvmMode::Dual => Ok(Box::new(PreparedDual {
                 opts: self.dual.clone(),
-                // t-independent gram pieces, computed once:
+                // t-independent gram pieces, computed once: dense designs
+                // use the packed blocked kernel, sparse designs the
+                // threaded CSR/CSC join — either way G₀ is p × p.
                 g0: x.gram_t(),
                 v: x.matvec_t(y),
                 yy: vecops::norm2_sq(y),
@@ -130,7 +137,7 @@ impl SvmBackend for RustBackend {
 
 struct PreparedPrimal {
     opts: PrimalOptions,
-    x: Mat,
+    x: Design,
     y: Vec<f64>,
 }
 
@@ -153,7 +160,7 @@ struct PreparedDual {
     g0: Mat,
     v: Vec<f64>,
     yy: f64,
-    x: Mat,
+    x: Design,
     y: Vec<f64>,
 }
 
@@ -201,12 +208,13 @@ impl PreparedSvm for PreparedDual {
 /// exposed for tests and the runtime's own cross-checks.
 pub fn gram_assembly_check(x: &Mat, y: &[f64], t: f64) -> f64 {
     let direct = reduction_gram(x, y, t);
+    let design: Design = x.clone().into();
     let prep = PreparedDual {
         opts: DualOptions::default(),
-        g0: x.gram_t(),
-        v: x.matvec_t(y),
+        g0: design.gram_t(),
+        v: design.matvec_t(y),
         yy: vecops::norm2_sq(y),
-        x: x.clone(),
+        x: design,
         y: y.to_vec(),
     };
     let assembled = prep.gram_at(t);
@@ -246,7 +254,7 @@ mod tests {
     #[test]
     fn primal_dual_same_alpha_up_to_scale() {
         let mut rng = Rng::seed_from(162);
-        let x = Mat::from_fn(30, 6, |_, _| rng.normal());
+        let x: Design = Mat::from_fn(30, 6, |_, _| rng.normal()).into();
         let y: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
         let backend = RustBackend::default();
         let mut prim = backend.prepare(&x, &y, SvmMode::Primal).unwrap();
@@ -256,6 +264,38 @@ mod tests {
         let b = dual.solve(t, c, None).unwrap().alpha;
         for i in 0..12 {
             assert!((a[i] - b[i]).abs() < 1e-5, "i={i}: {} vs {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn sparse_and_dense_preparations_agree() {
+        // A sparse Design must produce the same SVM solution as its
+        // densified twin, in both modes.
+        let mut rng = Rng::seed_from(163);
+        let m = Mat::from_fn(40, 9, |_, _| {
+            if rng.bernoulli(0.25) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let dense: Design = m.clone().into();
+        let sparse: Design = crate::linalg::Csr::from_dense(&m, 0.0).into();
+        let backend = RustBackend::default();
+        for mode in [SvmMode::Primal, SvmMode::Dual] {
+            let mut pd = backend.prepare(&dense, &y, mode).unwrap();
+            let mut ps = backend.prepare(&sparse, &y, mode).unwrap();
+            let a = pd.solve(0.7, 4.0, None).unwrap().alpha;
+            let b = ps.solve(0.7, 4.0, None).unwrap().alpha;
+            for i in 0..18 {
+                assert!(
+                    (a[i] - b[i]).abs() < 1e-6,
+                    "{mode:?} i={i}: {} vs {}",
+                    a[i],
+                    b[i]
+                );
+            }
         }
     }
 }

@@ -22,7 +22,7 @@ pub mod reduction;
 pub use backend::{PreparedSvm, RustBackend, SvmBackend, SvmMode, SvmSolve, SvmWarm};
 pub use reduction::{backmap, effective_c, MIN_ALPHA_SUM};
 
-use crate::linalg::Mat;
+use crate::linalg::{AsDesign, Design};
 use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
 use crate::util::parallel::{with_parallelism, Parallelism};
 use crate::util::Timer;
@@ -110,14 +110,17 @@ impl<B: SvmBackend> Sven<B> {
         }
     }
 
-    /// Prepare a dataset once for repeated (t, λ₂) solves.
+    /// Prepare a dataset once for repeated (t, λ₂) solves. Accepts a bare
+    /// `Mat`, a `Csr`, or an existing [`Design`] (see [`AsDesign`]);
+    /// sparse designs are prepared without densifying.
     pub fn prepare(
         &self,
-        x: &Mat,
+        x: &impl AsDesign,
         y: &[f64],
     ) -> anyhow::Result<Box<dyn PreparedSvm>> {
+        let design = x.as_design();
         with_parallelism(self.config.parallelism, || {
-            self.backend.prepare(x, y, self.config.mode)
+            self.backend.prepare(&design, y, self.config.mode)
         })
     }
 
@@ -130,8 +133,10 @@ impl<B: SvmBackend> Sven<B> {
 }
 
 /// |β_ridge|₁ for the slack-budget detector: solves
-/// (XᵀX + λ₂I)β = Xᵀy via the smaller-side normal equations.
-fn ridge_l1_norm(x: &Mat, y: &[f64], lambda2: f64) -> f64 {
+/// (XᵀX + λ₂I)β = Xᵀy via the smaller-side normal equations. The gram of
+/// the smaller side is a dense min(n,p)² output either way; sparse
+/// designs assemble it through the CSR/CSC join instead of densifying X.
+fn ridge_l1_norm(x: &Design, y: &[f64], lambda2: f64) -> f64 {
     use crate::linalg::{vecops, Cholesky};
     let (n, p) = (x.rows(), x.cols());
     let l2 = lambda2.max(1e-8);
@@ -169,6 +174,7 @@ fn ridge_l1_norm(x: &Mat, y: &[f64], lambda2: f64) -> f64 {
 mod tests {
     use super::*;
     use crate::data::{synth_regression, SynthSpec};
+    use crate::linalg::Mat;
     use crate::solvers::glmnet::{self, GlmnetConfig, PathSettings};
 
     fn dataset(n: usize, p: usize, seed: u64) -> (Mat, Vec<f64>) {

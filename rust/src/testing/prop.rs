@@ -178,6 +178,166 @@ mod tests {
         );
     }
 
+    /// Duplicate-merging in `Csr::from_triplets` must match a dense
+    /// accumulation reference on random (unsorted, duplicate-heavy)
+    /// triplet soups — the pin on the grouped-merge rewrite.
+    #[test]
+    fn prop_from_triplets_matches_dense_accumulation() {
+        use crate::linalg::{Csr, Mat};
+        forall(
+            "from_triplets == dense accumulation",
+            48,
+            |rng: &mut Rng, size: usize| {
+                let rows = 1 + rng.below(3 + size);
+                let cols = 1 + rng.below(3 + size);
+                // enough draws over a small grid to force duplicates
+                let ndraws = rng.below(4 * (rows * cols).min(40) + 2);
+                let trip: Vec<(usize, usize, f64)> = (0..ndraws)
+                    .map(|_| (rng.below(rows), rng.below(cols), rng.normal()))
+                    .collect();
+                (rows, cols, trip)
+            },
+            |(rows, cols, trip)| {
+                let (rows, cols) = (*rows, *cols);
+                let mut reference = Mat::zeros(rows, cols);
+                for &(r, c, v) in trip {
+                    let cur = reference.get(r, c);
+                    reference.set(r, c, cur + v);
+                }
+                let csr = Csr::from_triplets(rows, cols, trip.clone());
+                let dense = csr.to_dense();
+                close_vec(dense.data(), reference.data(), 1e-12, "accumulated matrix")?;
+                // stored entries are unique per coordinate: nnz is bounded
+                // by the number of distinct draws
+                let mut coords: Vec<(usize, usize)> =
+                    trip.iter().map(|&(r, c, _)| (r, c)).collect();
+                coords.sort_unstable();
+                coords.dedup();
+                if csr.nnz() != coords.len() {
+                    return Err(format!(
+                        "nnz {} != distinct coords {}",
+                        csr.nnz(),
+                        coords.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Every sparse kernel must be bit-identical run serial and threaded
+    /// (1/2/4 workers) — the sparse twin of the blocked-GEMM determinism
+    /// pin. Shapes are drawn large enough to cross the sparse fan-out
+    /// threshold so the threaded paths really engage.
+    #[test]
+    fn prop_sparse_kernels_bit_stable() {
+        use crate::linalg::{Csc, Csr, Mat};
+        use crate::util::parallel::{with_parallelism, Parallelism};
+        forall_cfg(
+            "sparse kernels bit-stable across thread counts",
+            &PropConfig { cases: 6, seed: 0xBEEF, min_size: 1, max_size: 6 },
+            |rng: &mut Rng, size: usize| {
+                // 600..1400 rows so the TCHUNK reduction splits; nnz well
+                // past the 2^14 fan-out threshold.
+                let rows = 600 + rng.below(200 + size * 120);
+                let cols = 90 + rng.below(40 + size * 20);
+                let per_row = 18 + rng.below(12);
+                let mut trip = Vec::with_capacity(rows * per_row);
+                for r in 0..rows {
+                    for _ in 0..per_row {
+                        trip.push((r, rng.below(cols), rng.normal()));
+                    }
+                }
+                let a = Csr::from_triplets(rows, cols, trip);
+                let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+                let u: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+                (a, x, u)
+            },
+            |(a, x, u)| {
+                let run = |par: Parallelism| {
+                    with_parallelism(par, || {
+                        let csc = Csc::from_csr(a);
+                        let mut g = Mat::zeros(a.cols(), a.cols());
+                        a.gram_into(&csc, &mut g);
+                        (a.matvec(x), a.matvec_t(u), a.col_norms_sq(), csc, g)
+                    })
+                };
+                let serial = run(Parallelism::None);
+                for nt in [1usize, 2, 4] {
+                    let threaded = run(Parallelism::Fixed(nt));
+                    for (name, s, t) in [
+                        ("matvec", &serial.0, &threaded.0),
+                        ("matvec_t", &serial.1, &threaded.1),
+                        ("col_norms_sq", &serial.2, &threaded.2),
+                    ] {
+                        for (i, (a, b)) in s.iter().zip(t.iter()).enumerate() {
+                            if a.to_bits() != b.to_bits() {
+                                return Err(format!(
+                                    "{name} nt={nt} i={i}: {a} vs {b}"
+                                ));
+                            }
+                        }
+                    }
+                    if serial.3 != threaded.3 {
+                        return Err(format!("csc construction differs at nt={nt}"));
+                    }
+                    for (i, (a, b)) in
+                        serial.4.data().iter().zip(threaded.4.data()).enumerate()
+                    {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!("gram nt={nt} flat-index {i}: {a} vs {b}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Sparse kernels agree with their dense references on ragged shapes.
+    #[test]
+    fn prop_sparse_kernels_match_dense() {
+        use crate::linalg::{Csc, Csr, Mat};
+        forall(
+            "sparse kernels == dense reference",
+            24,
+            |rng: &mut Rng, size: usize| {
+                let rows = 2 + rng.below(6 + 4 * size);
+                let cols = 2 + rng.below(6 + 4 * size);
+                let density = rng.uniform_in(0.1, 0.6);
+                let mut local = Rng::seed_from(rng.next_u64());
+                let dense = Mat::from_fn(rows, cols, |_, _| {
+                    if local.bernoulli(density) {
+                        local.normal()
+                    } else {
+                        0.0
+                    }
+                });
+                let x: Vec<f64> = (0..cols).map(|_| local.normal()).collect();
+                let u: Vec<f64> = (0..rows).map(|_| local.normal()).collect();
+                (dense, x, u)
+            },
+            |(dense, x, u)| {
+                let a = Csr::from_dense(dense, 0.0);
+                let csc = Csc::from_csr(&a);
+                close_vec(&a.matvec(x), &dense.matvec(x), 1e-11, "matvec")?;
+                close_vec(&a.matvec_t(u), &dense.matvec_t(u), 1e-11, "matvec_t")?;
+                let mut g = Mat::zeros(a.cols(), a.cols());
+                a.gram_into(&csc, &mut g);
+                close_vec(g.data(), dense.gram_t().data(), 1e-10, "gram_t")?;
+                let mut gg = Mat::zeros(a.rows(), a.rows());
+                a.gram_rows_into(&csc, &mut gg);
+                close_vec(gg.data(), dense.gram().data(), 1e-10, "gram")?;
+                for c in 0..a.cols() {
+                    let expect: f64 =
+                        (0..a.rows()).map(|r| dense.get(r, c) * u[r]).sum();
+                    close(csc.col_dot(c, u), expect, 1e-11, &format!("col_dot {c}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
     /// Same property for the symmetric gram kernel, plus exact symmetry.
     #[test]
     fn prop_blocked_gram_matches_naive() {

@@ -46,7 +46,7 @@ fn service_full_grid_both_datasets() {
     for (id, d) in [(1u64, &wide), (2, &tall)] {
         let grid = runner.derive_grid(d);
         assert!(!grid.is_empty());
-        let x = Arc::new(d.x.clone());
+        let x = Arc::new(sven::linalg::Design::from(d.x.clone()));
         let y = Arc::new(d.y.clone());
         for pt in &grid {
             receivers.push((

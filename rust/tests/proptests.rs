@@ -2,10 +2,10 @@
 //! using the in-tree `forall` framework (rust/src/testing).
 
 use sven::data::{synth_regression, SynthSpec};
-use sven::linalg::{vecops, Mat};
+use sven::linalg::{vecops, Csr, Design, Mat};
 use sven::rng::Rng;
 use sven::solvers::elastic_net::{penalized_to_constrained, EnProblem};
-use sven::solvers::glmnet::{self, GlmnetConfig};
+use sven::solvers::glmnet::{self, CdMode, GlmnetConfig};
 use sven::solvers::sven::{backmap, effective_c, RustBackend, Sven, SvmMode};
 use sven::testing::prop::{close, close_vec, forall};
 
@@ -53,8 +53,11 @@ fn prop_primal_dual_agree() {
     forall("primal α == dual α", 14, gen_problem, |(x, y, _)| {
         use sven::solvers::sven::SvmBackend;
         let backend = RustBackend::default();
-        let mut prim = backend.prepare(x, y, SvmMode::Primal).map_err(|e| e.to_string())?;
-        let mut dual = backend.prepare(x, y, SvmMode::Dual).map_err(|e| e.to_string())?;
+        let design: Design = x.clone().into();
+        let mut prim =
+            backend.prepare(&design, y, SvmMode::Primal).map_err(|e| e.to_string())?;
+        let mut dual =
+            backend.prepare(&design, y, SvmMode::Dual).map_err(|e| e.to_string())?;
         let (t, c) = (0.7, 4.0);
         let a = prim.solve(t, c, None).map_err(|e| e.to_string())?.alpha;
         let b = dual.solve(t, c, None).map_err(|e| e.to_string())?.alpha;
@@ -202,6 +205,122 @@ fn prop_standardize_idempotent_shape() {
             close_vec(&yc2, &yc, 1e-8, "y")
         },
     );
+}
+
+/// Generator: a random sparse regression problem (dense twin + sparse
+/// Design over identical values), sized by `size`.
+fn gen_sparse_problem(rng: &mut Rng, size: usize) -> (Mat, Design, Vec<f64>) {
+    let n = 16 + (rng.below(6) + size) * 4;
+    let p = 10 + (rng.below(8) + size) * 5;
+    let density = rng.uniform_in(0.05, 0.25);
+    let mut local = Rng::seed_from(rng.next_u64());
+    let x = Mat::from_fn(n, p, |_, _| {
+        if local.bernoulli(density) {
+            local.normal()
+        } else {
+            0.0
+        }
+    });
+    // response from a sparse planted model + noise
+    let beta: Vec<f64> = (0..p)
+        .map(|j| if j < 5 { local.normal() } else { 0.0 })
+        .collect();
+    let mut y = x.matvec(&beta);
+    for v in y.iter_mut() {
+        *v += 0.2 * local.normal();
+    }
+    let design = Design::from(Csr::from_dense(&x, 0.0));
+    (x, design, y)
+}
+
+/// Dense-vs-sparse solver agreement: the same naive-CD algorithm run
+/// over the dense transposed copy and over the CSC mirror must land on
+/// the same β (within CD tolerance) — the correctness seal on the
+/// never-densify glmnet path.
+#[test]
+fn prop_dense_sparse_cd_agree() {
+    forall("glmnet CD: dense == sparse Design", 12, gen_sparse_problem, |(x, d, y)| {
+        let cfg = GlmnetConfig { mode: CdMode::Naive, tol: 1e-12, ..Default::default() };
+        let lambda = glmnet::lambda_max(x, y, cfg.kappa) * 0.3;
+        let dense = glmnet::solve_penalized(x, y, lambda, &cfg, None);
+        let sparse = glmnet::solve_penalized_design(d, y, lambda, &cfg, None);
+        close_vec(&dense.beta, &sparse.beta, 1e-6, "beta")
+    });
+}
+
+/// SVEN over a sparse Design agrees with SVEN over the densified twin
+/// (both SVM modes exercised through the 2p > n auto rule by the shapes
+/// the generator draws).
+#[test]
+fn prop_dense_sparse_sven_agree() {
+    forall("sven: dense == sparse Design", 8, gen_sparse_problem, |(x, d, y)| {
+        let cfg = GlmnetConfig { tol: 1e-12, ..Default::default() };
+        let lambda = glmnet::lambda_max(x, y, cfg.kappa) * 0.3;
+        let g = glmnet::solve_penalized(x, y, lambda, &cfg, None);
+        let (t, lambda2) = penalized_to_constrained(&g.beta, lambda, cfg.kappa, x.rows());
+        if t < 1e-10 {
+            return Ok(());
+        }
+        let sven = Sven::new(RustBackend::default());
+        let sol_dense = sven
+            .solve(&EnProblem::new(x.clone(), y.clone(), t, lambda2))
+            .map_err(|e| e.to_string())?;
+        let sol_sparse = sven
+            .solve(&EnProblem::new(d.clone(), y.clone(), t, lambda2))
+            .map_err(|e| e.to_string())?;
+        close_vec(&sol_dense.beta, &sol_sparse.beta, 1e-5, "beta")
+    });
+}
+
+/// The sparse determinism seal: a sparse SVEN solve run strictly serial
+/// and threaded must produce bit-identical β — every threaded CSR/CSC
+/// kernel (matvec, matvec_t, gram join, CSC build) keeps its fixed
+/// reduction order. Shapes are sized past the sparse fan-out threshold
+/// so the threaded paths actually engage.
+#[test]
+fn prop_sparse_parallelism_bit_stable() {
+    use sven::solvers::sven::SvenConfig;
+    use sven::util::Parallelism;
+
+    let mut rng = Rng::seed_from(8642);
+    // (rows, cols, density, forced mode): primal (2p > n) and dual.
+    let cases = [
+        (300usize, 400usize, 0.18, SvmMode::Primal),
+        (900, 150, 0.15, SvmMode::Dual),
+    ];
+    for (n, p, density, mode) in cases {
+        let x = Mat::from_fn(n, p, |_, _| {
+            if rng.bernoulli(density) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let design = Design::from(Csr::from_dense(&x, 0.0));
+        assert!(design.nnz() > 1 << 14, "{n}x{p} must cross the sparse threshold");
+        let run = |par: Parallelism| -> Vec<f64> {
+            let sven = Sven::with_config(
+                RustBackend::default(),
+                SvenConfig { mode, parallelism: par, ..Default::default() },
+            );
+            let prob = EnProblem::new(design.clone(), y.clone(), 0.8, 0.5);
+            sven.solve(&prob).expect("solve").beta
+        };
+        let serial = run(Parallelism::None);
+        for nt in [2usize, 4] {
+            let threaded = run(Parallelism::Fixed(nt));
+            for j in 0..p {
+                assert_eq!(
+                    serial[j].to_bits(),
+                    threaded[j].to_bits(),
+                    "{mode:?} nt={nt} j={j}: serial {} vs threaded {}",
+                    serial[j],
+                    threaded[j]
+                );
+            }
+        }
+    }
 }
 
 /// The tentpole determinism seal: SVEN run strictly serial

@@ -1,0 +1,121 @@
+//! The never-densify seal on the sparse execution path.
+//!
+//! A counting global allocator records the largest single heap request.
+//! We write an svmlight data set whose dense form would be one ~38 MB
+//! allocation (n=1200 × p=4000 f64), then run the whole pipeline —
+//! loader → sparse `Design` → glmnet CD → SVEN (primal) — and assert no
+//! allocation ever came within 10× of the dense matrix. If any layer
+//! regressed into densifying (`to_dense`, a materialized reduction, a
+//! dense transposed copy), the test fails on the allocation budget, not
+//! on a timing heuristic.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use sven::data::svmlight;
+use sven::linalg::vecops;
+use sven::rng::Rng;
+use sven::solvers::elastic_net::EnProblem;
+use sven::solvers::glmnet::{self, CdMode, GlmnetConfig};
+use sven::solvers::shotgun::{solve_shotgun_design, ShotgunConfig};
+use sven::solvers::sven::{RustBackend, Sven};
+
+/// Tracks the largest single allocation request since the last reset.
+struct MaxTrackingAlloc;
+
+static LARGEST: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for MaxTrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        LARGEST.fetch_max(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        LARGEST.fetch_max(new_size, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: MaxTrackingAlloc = MaxTrackingAlloc;
+
+const N: usize = 1200;
+const P: usize = 4000; // 2p > n ⇒ SVEN auto-resolves to the primal solver
+const NNZ_PER_ROW: usize = 16; // density 0.004, the Dorothea regime
+
+/// One test fn (not several) so no concurrent test pollutes the
+/// allocation high-water mark.
+#[test]
+fn sparse_pipeline_never_densifies() {
+    let dense_bytes = N * P * std::mem::size_of::<f64>(); // ~38.4 MB
+    let budget = dense_bytes / 10; // ~3.8 MB, >10x any legit sparse alloc
+
+    // --- write a sparse svmlight data set (setup, untracked) -----------
+    let dir = std::env::temp_dir().join("sven_no_densify");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sparse.svm");
+    let mut rng = Rng::seed_from(7777);
+    let mut file = String::with_capacity(N * NNZ_PER_ROW * 16);
+    for _ in 0..N {
+        file.push_str(&format!("{:.6}", rng.normal()));
+        let mut cols = rng.sample_indices(P, NNZ_PER_ROW);
+        cols.sort_unstable();
+        for c in cols {
+            file.push_str(&format!(" {}:{:.6}", c + 1, rng.normal()));
+        }
+        file.push('\n');
+    }
+    std::fs::write(&path, &file).unwrap();
+    drop(file);
+
+    // --- tracked region: loader → CD → Shotgun → SVEN -------------------
+    LARGEST.store(0, Ordering::Relaxed);
+
+    let (design, mut y) = svmlight::read_design(&path, P).unwrap();
+    assert!(design.is_sparse());
+    assert_eq!((design.rows(), design.cols()), (N, P));
+    // center y (the solvers assume a centered response)
+    let mean = vecops::mean(&y);
+    for v in y.iter_mut() {
+        *v -= mean;
+    }
+
+    // glmnet CD through the sparse Design
+    let kappa = 0.5;
+    let lambda = glmnet::lambda_max_design(&design, &y, kappa) * 0.2;
+    let cfg = GlmnetConfig { kappa, mode: CdMode::Naive, max_epochs: 400, ..Default::default() };
+    let cd = glmnet::solve_penalized_design(&design, &y, lambda, &cfg, None);
+    let t = vecops::norm1(&cd.beta);
+    assert!(t > 0.0, "CD must activate at this lambda");
+
+    // Shotgun through the sparse Design
+    let sg = solve_shotgun_design(
+        &design,
+        &y,
+        lambda,
+        &ShotgunConfig { kappa, threads: 2, max_epochs: 200, ..Default::default() },
+        Some(&cd.beta),
+    );
+    assert_eq!(sg.beta.len(), P);
+
+    // SVEN (primal Newton over the implicit reduction operator)
+    let lambda2 = N as f64 * lambda * (1.0 - kappa);
+    let prob = EnProblem::new(design, y, t, lambda2);
+    let sven = Sven::new(RustBackend::default());
+    let sol = sven.solve(&prob).unwrap();
+    assert_eq!(sol.beta.len(), P);
+    // the solve is real: budget respected and some support selected
+    assert!(vecops::norm1(&sol.beta) <= t * (1.0 + 1e-6));
+
+    let largest = LARGEST.load(Ordering::Relaxed);
+    assert!(
+        largest < budget,
+        "sparse path allocated a {largest}-byte block (budget {budget}; a dense \
+         {N}x{P} design would be {dense_bytes}) — something densified"
+    );
+}

@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
     let wall = Timer::start();
 
     let mut receivers = Vec::new();
+    let mut path_jobs = Vec::new();
     for (ds_id, data) in [(1u64, &wide), (2u64, &tall)] {
         let grid = runner.derive_grid(data);
         println!(
@@ -68,20 +69,33 @@ fn main() -> anyhow::Result<()> {
         let y = Arc::new(data.y.clone());
         for (i, pt) in grid.iter().enumerate() {
             for backend in [BackendChoice::Xla, BackendChoice::Rust] {
-                let rx = service.submit(
+                let rx = service.submit_point(
                     ds_id,
                     x.clone(),
                     y.clone(),
                     pt.t,
                     pt.lambda2.max(1e-6),
                     backend,
-                );
+                )?;
                 receivers.push((data.name.clone(), i, pt.beta.clone(), backend, rx));
                 total_jobs += 1;
             }
         }
+        // The same grid once more as a single path job: one request, one
+        // shared preparation, warm-start chaining on a worker.
+        path_jobs.push((
+            data.name.clone(),
+            grid.clone(),
+            service.submit_path(
+                ds_id,
+                x.clone(),
+                y.clone(),
+                runner.grid_points(&grid),
+                BackendChoice::Rust,
+            )?,
+        ));
     }
-    println!("\nsubmitted {total_jobs} jobs to the coordinator\n");
+    println!("\nsubmitted {total_jobs} point jobs + {} path jobs\n", path_jobs.len());
 
     // --- collect, check correctness against the glmnet reference ---
     let mut ok = 0usize;
@@ -91,7 +105,7 @@ fn main() -> anyhow::Result<()> {
     let mut rust_seconds = Vec::new();
     for (ds, _i, beta_ref, backend, rx) in receivers {
         let outcome = rx.recv()?;
-        match outcome.result {
+        match outcome.result.map(|r| r.expect_point()) {
             Ok(sol) => {
                 let dev = sol
                     .beta
@@ -111,6 +125,30 @@ fn main() -> anyhow::Result<()> {
             }
             Err(e) => {
                 eprintln!("job failed via {backend:?}: {e}");
+                failed += 1;
+            }
+        }
+    }
+    // --- path jobs: per-point deviation against the same references ---
+    for (ds, grid, rx) in path_jobs {
+        let outcome = rx.recv()?;
+        match outcome.result {
+            Ok(r) => {
+                let sols = r.expect_path();
+                assert_eq!(sols.len(), grid.len());
+                for (pt, sol) in grid.iter().zip(&sols) {
+                    let dev = sol
+                        .beta
+                        .iter()
+                        .zip(&pt.beta)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f64, f64::max);
+                    max_dev = max_dev.max(dev);
+                }
+                ok += 1;
+            }
+            Err(e) => {
+                eprintln!("path job failed on {ds}: {e}");
                 failed += 1;
             }
         }

@@ -39,6 +39,17 @@ fn main() {
         );
     }
 
+    // Coordinator service micro-bench: point-job vs path-job throughput
+    // through the worker pool, plus the shared prep cache's hit rate
+    // (asserts the single-build invariant even in smoke mode).
+    let (pt_rate, path_rate) = sven::bench::figures::service_micro(!smoke);
+    if !smoke {
+        println!(
+            "service throughput: {pt_rate:.1} point jobs/s vs {path_rate:.1} \
+             path points/s (path amortizes dispatch + warm starts)"
+        );
+    }
+
     let (warm, reps) = if smoke { (1, 2) } else { (2, 10) };
 
     // gemm through the Mat facade (includes dispatch + allocation)
@@ -114,9 +125,10 @@ fn main() {
                 pt.t,
                 pt.lambda2.max(1e-6),
             );
-            let mut prep = sven_xla.prepare(&d2.x, &d2.y).unwrap();
+            let prep = sven_xla.prepare(&d2.x, &d2.y).unwrap();
+            let mut scratch = sven::solvers::sven::SvmScratch::new();
             let m = measure(2, 10, || {
-                sven_xla.solve_prepared(prep.as_mut(), &prob, None).unwrap()
+                sven_xla.solve_prepared(prep.as_ref(), &mut scratch, &prob, None).unwrap()
             });
             println!(
                 "sven_xla solve 100x400 (prepared): median {:.3}ms",

@@ -20,7 +20,7 @@ use crate::solvers::elastic_net::EnProblem;
 use crate::solvers::glmnet::{self, GlmnetConfig, PathPoint, PathSettings};
 use crate::solvers::l1ls::{solve_l1ls, L1LsConfig};
 use crate::solvers::shotgun::{solve_shotgun, ShotgunConfig};
-use crate::solvers::sven::{RustBackend, Sven, SvmWarm};
+use crate::solvers::sven::{RustBackend, Sven, SvmScratch, SvmWarm};
 use crate::util::Timer;
 
 /// Generate a profile scaled by the bench size factor.
@@ -270,6 +270,97 @@ pub fn sparse_micro(full: bool) -> (f64, f64) {
 }
 
 // ---------------------------------------------------------------------------
+// Coordinator service micro-bench (throughput + prep-cache hit rate)
+// ---------------------------------------------------------------------------
+
+/// Service-layer micro-bench: jobs/sec through the coordinator for
+/// single-point jobs vs one `JobKind::Path` job over the same grid, with
+/// the shared prep cache's hit rate. The point of the comparison: K point
+/// jobs and one K-point path job do the same numerical work, but the
+/// path job ships one request and chains warm starts — the paper's
+/// amortized access pattern as a single service workload. `full` runs a
+/// serving-sized shape; otherwise tiny CI-smoke shapes. Returns
+/// (point_jobs_per_s, path_points_per_s).
+pub fn service_micro(full: bool) -> (f64, f64) {
+    use crate::coordinator::{BackendChoice, PoolConfig, Service, ServiceConfig};
+    use std::sync::Arc;
+
+    let (n, p, grid_n, repeat) = if full { (160, 1200, 24, 4) } else { (30, 60, 4, 2) };
+    let workers = if full { 4 } else { 2 };
+    println!("=== service micro: point jobs vs path job ({workers} workers) ===");
+    let data = crate::data::synth_regression(&crate::data::SynthSpec {
+        name: format!("serve-{n}x{p}"),
+        n,
+        p,
+        support: (p / 24).max(4),
+        seed: 2024,
+        ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig {
+        grid: grid_n,
+        path: PathSettings { num_lambda: 40, ..Default::default() },
+        ..Default::default()
+    });
+    let grid = runner.derive_grid(&data);
+    if grid.is_empty() {
+        println!("empty grid, skipping");
+        return (f64::NAN, f64::NAN);
+    }
+    let points = runner.grid_points(&grid);
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers, queue_capacity: 64 },
+        ..Default::default()
+    });
+    let x = Arc::new(crate::linalg::Design::from(data.x.clone()));
+    let y = Arc::new(data.y.clone());
+
+    // --- point jobs: repeat × grid single-solve requests ---
+    let timer = Timer::start();
+    let mut rxs = Vec::with_capacity(repeat * points.len());
+    for _ in 0..repeat {
+        for gp in &points {
+            let rx = service
+                .submit_point(1, x.clone(), y.clone(), gp.t, gp.lambda2, BackendChoice::Rust)
+                .expect("service accepting jobs");
+            rxs.push(rx);
+        }
+    }
+    let jobs = rxs.len();
+    for rx in rxs {
+        rx.recv().unwrap().result.expect("point solve");
+    }
+    let point_s = timer.elapsed();
+    let point_rate = jobs as f64 / point_s;
+
+    // --- one path job over the same grid (warm-start chained) ---
+    let timer = Timer::start();
+    let rx = service
+        .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+        .expect("service accepting jobs");
+    let sols = rx.recv().unwrap().result.expect("path solve").expect_path();
+    let path_s = timer.elapsed();
+    let path_rate = sols.len() as f64 / path_s;
+
+    let m = service.metrics();
+    let lookups = m.prep_hits() + m.prep_builds();
+    println!(
+        "point jobs: {jobs} in {point_s:.3}s ({point_rate:.1} jobs/s) | \
+         path job: {} points in {path_s:.3}s ({path_rate:.1} points/s)",
+        sols.len()
+    );
+    println!(
+        "prep cache: builds={} hits={} (hit rate {:.1}%) evictions={}",
+        m.prep_builds(),
+        m.prep_hits(),
+        100.0 * m.prep_hits() as f64 / lookups.max(1) as f64,
+        m.prep_evictions()
+    );
+    assert_eq!(m.prep_builds(), 1, "one dataset must build exactly one prep");
+    service.shutdown();
+    (point_rate, path_rate)
+}
+
+// ---------------------------------------------------------------------------
 // Figure 1
 // ---------------------------------------------------------------------------
 
@@ -329,7 +420,8 @@ pub fn sweep_dataset(data: &Dataset, grid: &[PathPoint], rows: &mut Vec<BenchRow
     let mut xla_times = vec![f64::NAN; grid.len()];
     let mut xla_devs = vec![f64::NAN; grid.len()];
     if let Some(sven) = &xla {
-        let mut prep = sven.prepare(&data.x, &data.y).expect("xla prepare");
+        let prep = sven.prepare(&data.x, &data.y).expect("xla prepare");
+        let mut scratch = SvmScratch::new();
         let mut warm: Option<SvmWarm> = None;
         for (i, pt) in grid.iter().enumerate() {
             let prob = EnProblem::new(
@@ -340,7 +432,7 @@ pub fn sweep_dataset(data: &Dataset, grid: &[PathPoint], rows: &mut Vec<BenchRow
             );
             let timer = Timer::start();
             let sol = sven
-                .solve_prepared(prep.as_mut(), &prob, warm.as_ref())
+                .solve_prepared(prep.as_ref(), &mut scratch, &prob, warm.as_ref())
                 .expect("xla solve");
             xla_times[i] = timer.elapsed();
             xla_devs[i] = pt
@@ -357,10 +449,11 @@ pub fn sweep_dataset(data: &Dataset, grid: &[PathPoint], rows: &mut Vec<BenchRow
     for alg in BASELINES {
         // SVEN CPU gets prepared-reuse too (it is "our" method on CPU).
         let sven_cpu = Sven::new(RustBackend::default());
-        let mut cpu_prep = match *alg {
+        let cpu_prep = match *alg {
             "sven_cpu" => Some(sven_cpu.prepare(&data.x, &data.y).expect("prep")),
             _ => None,
         };
+        let mut scratch = SvmScratch::new();
         for (i, pt) in grid.iter().enumerate() {
             let timer = Timer::start();
             let (beta, ok): (Vec<f64>, bool) = match *alg {
@@ -402,7 +495,12 @@ pub fn sweep_dataset(data: &Dataset, grid: &[PathPoint], rows: &mut Vec<BenchRow
                         pt.lambda2.max(1e-6),
                     );
                     let sol = sven_cpu
-                        .solve_prepared(cpu_prep.as_mut().unwrap().as_mut(), &prob, None)
+                        .solve_prepared(
+                            cpu_prep.as_ref().unwrap().as_ref(),
+                            &mut scratch,
+                            &prob,
+                            None,
+                        )
                         .expect("sven cpu");
                     (sol.beta, true)
                 }
@@ -551,9 +649,10 @@ fn ablation_scale_sweep(seed: u64) {
         });
         // SVEN (XLA) prepared (path-amortized staging, as in the figures)
         let prob = EnProblem::new(d.x.clone(), d.y.clone(), pt.t, pt.lambda2.max(1e-6));
-        let mut prep = xla.prepare(&d.x, &d.y).expect("prep");
+        let prep = xla.prepare(&d.x, &d.y).expect("prep");
+        let mut scratch = SvmScratch::new();
         let mx = super::harness::measure(1, 3, || {
-            xla.solve_prepared(prep.as_mut(), &prob, None).unwrap()
+            xla.solve_prepared(prep.as_ref(), &mut scratch, &prob, None).unwrap()
         });
         println!(
             "{:>8} {:>8} {:>12.4} {:>12.4} {:>10.2}",
@@ -649,10 +748,11 @@ fn ablation_gram_cache(seed: u64) {
     let grid = grid_for(&d, 6);
     // cached: prepare once
     let timer = Timer::start();
-    let mut prep = sven.prepare(&d.x, &d.y).unwrap();
+    let prep = sven.prepare(&d.x, &d.y).unwrap();
+    let mut scratch = SvmScratch::new();
     for pt in &grid {
         let prob = EnProblem::new(d.x.clone(), d.y.clone(), pt.t, pt.lambda2.max(1e-4));
-        sven.solve_prepared(prep.as_mut(), &prob, None).unwrap();
+        sven.solve_prepared(prep.as_ref(), &mut scratch, &prob, None).unwrap();
     }
     let cached = timer.elapsed();
     // uncached: re-prepare per point (what a naive implementation does)
@@ -687,9 +787,10 @@ fn ablation_padding(seed: u64) {
         let grid = grid_for(&d, 3);
         let Some(pt) = grid.last() else { continue };
         let prob = EnProblem::new(d.x.clone(), d.y.clone(), pt.t, pt.lambda2.max(1e-4));
-        let mut prep = sven.prepare(&d.x, &d.y).unwrap();
+        let prep = sven.prepare(&d.x, &d.y).unwrap();
+        let mut scratch = SvmScratch::new();
         let m = super::harness::measure(1, 5, || {
-            sven.solve_prepared(prep.as_mut(), &prob, None).unwrap()
+            sven.solve_prepared(prep.as_ref(), &mut scratch, &prob, None).unwrap()
         });
         let fill = (n * p) as f64 / (32.0 * 64.0);
         println!(

@@ -287,9 +287,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rxs: Vec<_> = (0..requests)
         .map(|i| {
             let pt = &grid[i % grid.len()];
-            service.submit(1, x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-6), backend)
+            service.submit_point(1, x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-6), backend)
         })
-        .collect();
+        .collect::<Result<_, _>>()?;
     let mut ok = 0usize;
     for rx in rxs {
         if rx.recv()?.result.is_ok() {
@@ -297,11 +297,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let wall = timer.elapsed();
+    // Then the whole grid as one warm-start chained path job (the
+    // paper's sweep as a single service workload), timed separately so
+    // the point-job throughput above stays comparable across runs.
+    let path_timer = crate::util::Timer::start();
+    let path_rx =
+        service.submit_path(1, x.clone(), y.clone(), runner.grid_points(&grid), backend)?;
+    let path_points = match path_rx.recv()?.result {
+        Ok(r) => r.expect_path().len(),
+        Err(e) => {
+            eprintln!("path job failed: {e}");
+            0
+        }
+    };
+    let path_wall = path_timer.elapsed();
     println!("{}", service.metrics().report());
     println!(
         "requests={requests} ok={ok} wall={} throughput={:.1} req/s",
         fmt_duration(wall),
         requests as f64 / wall
+    );
+    println!(
+        "path job: {path_points} points in {} ({:.1} points/s)",
+        fmt_duration(path_wall),
+        path_points as f64 / path_wall.max(1e-9)
     );
     service.shutdown();
     Ok(())

@@ -12,6 +12,10 @@ pub struct Metrics {
     submitted: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    rejected: AtomicU64,
+    prep_hits: AtomicU64,
+    prep_builds: AtomicU64,
+    prep_evictions: AtomicU64,
     latencies: Mutex<Vec<f64>>,
     queue_waits: Mutex<Vec<f64>>,
 }
@@ -31,8 +35,32 @@ impl Metrics {
         self.queue_waits.lock().unwrap().push(queue_wait_s);
     }
 
-    pub fn on_fail(&self) {
+    /// Failed jobs record their queue wait too — backpressure must stay
+    /// visible precisely when the system is misbehaving.
+    pub fn on_fail(&self, queue_wait_s: f64) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+        self.queue_waits.lock().unwrap().push(queue_wait_s);
+    }
+
+    /// A submission bounced off a closed service.
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job found its preparation in the shared cache (including
+    /// single-flight waiters that joined an in-progress build).
+    pub fn on_prep_hit(&self) {
+        self.prep_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job actually built a preparation (a cache miss).
+    pub fn on_prep_build(&self) {
+        self.prep_builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A ready preparation was evicted to respect the capacity bound.
+    pub fn on_prep_eviction(&self) {
+        self.prep_evictions.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn submitted(&self) -> u64 {
@@ -45,6 +73,22 @@ impl Metrics {
 
     pub fn failed(&self) -> u64 {
         self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn prep_hits(&self) -> u64 {
+        self.prep_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn prep_builds(&self) -> u64 {
+        self.prep_builds.load(Ordering::Relaxed)
+    }
+
+    pub fn prep_evictions(&self) -> u64 {
+        self.prep_evictions.load(Ordering::Relaxed)
     }
 
     /// End-to-end latency summary (None until something completed).
@@ -80,11 +124,26 @@ impl Metrics {
                 )
             })
             .unwrap_or_else(|| "latency n/a".into());
+        let qw = self
+            .queue_wait_summary()
+            .map(|s| {
+                format!(
+                    " queue_wait p50={} max={}",
+                    crate::util::fmt_duration(s.median()),
+                    crate::util::fmt_duration(s.max())
+                )
+            })
+            .unwrap_or_default();
         format!(
-            "submitted={} completed={} failed={} {lat}",
+            "submitted={} completed={} failed={} rejected={} \
+             prep_hits={} prep_builds={} prep_evictions={} {lat}{qw}",
             self.submitted(),
             self.completed(),
-            self.failed()
+            self.failed(),
+            self.rejected(),
+            self.prep_hits(),
+            self.prep_builds(),
+            self.prep_evictions()
         )
     }
 }
@@ -100,13 +159,35 @@ mod tests {
         m.on_submit();
         m.on_complete(0.010, 0.001);
         m.on_complete(0.020, 0.002);
-        m.on_fail();
+        m.on_fail(0.003);
         assert_eq!(m.submitted(), 2);
         assert_eq!(m.completed(), 2);
         assert_eq!(m.failed(), 1);
         let s = m.latency_summary().unwrap();
         assert!((s.median() - 0.015).abs() < 1e-12);
+        // queue waits include the failed job's wait
+        let qw = m.queue_wait_summary().unwrap();
+        assert_eq!(qw.n(), 3);
+        assert!((qw.median() - 0.002).abs() < 1e-12);
         assert!(m.report().contains("completed=2"));
+    }
+
+    #[test]
+    fn prep_cache_counters() {
+        let m = Metrics::new();
+        m.on_prep_build();
+        m.on_prep_hit();
+        m.on_prep_hit();
+        m.on_prep_eviction();
+        m.on_reject();
+        assert_eq!(m.prep_builds(), 1);
+        assert_eq!(m.prep_hits(), 2);
+        assert_eq!(m.prep_evictions(), 1);
+        assert_eq!(m.rejected(), 1);
+        let report = m.report();
+        assert!(report.contains("prep_hits=2"));
+        assert!(report.contains("prep_builds=1"));
+        assert!(report.contains("prep_evictions=1"));
     }
 
     #[test]

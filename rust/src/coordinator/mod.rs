@@ -6,22 +6,33 @@
 //!
 //! - [`path`] — the paper's evaluation protocol as a scheduler: derive
 //!   the glmnet λ-path, subsample 40 settings with distinct supports, and
-//!   sweep them with prepared-problem reuse + warm starts.
+//!   sweep them with prepared-problem reuse + warm starts (the chaining
+//!   core, [`path::sweep_prepared`], is shared with the service's
+//!   `JobKind::Path` worker).
 //! - [`queue`] — bounded MPMC work queue (condvar-based, backpressure).
-//! - [`pool`] — worker pool; each worker owns a thread-local solver
-//!   context (the PJRT handles are not `Send`).
-//! - [`service`] — the request loop: submit solve jobs, collect
-//!   responses, drain gracefully; per-request latency metrics.
+//! - [`pool`] — worker pool; workers own thread-local solver state
+//!   (backends + scratch) but share the immutable preparations.
+//! - [`prep_cache`] — service-level `Arc<dyn SvmPrep>` cache keyed by
+//!   (dataset, backend): single-flight builds, LRU bound, counted in
+//!   metrics.
+//! - [`service`] — the request loop: submit point or path jobs, collect
+//!   responses, drain gracefully; per-request latency + queue-wait
+//!   metrics.
 //! - [`metrics`] — counters and latency summaries.
 
 pub mod metrics;
 pub mod path;
 pub mod pool;
+pub mod prep_cache;
 pub mod queue;
 pub mod service;
 
 pub use metrics::Metrics;
-pub use path::{PathRunResult, PathRunner, PathRunnerConfig};
+pub use path::{GridPoint, PathRunResult, PathRunner, PathRunnerConfig};
 pub use pool::{Pool, PoolConfig};
+pub use prep_cache::PrepCache;
 pub use queue::Queue;
-pub use service::{BackendChoice, Service, ServiceConfig, SolveJob, SolveOutcome};
+pub use service::{
+    BackendChoice, JobKind, JobResult, Service, ServiceClosed, ServiceConfig, SolveJob,
+    SolveOutcome,
+};

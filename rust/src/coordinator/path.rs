@@ -2,13 +2,60 @@
 //! glmnet path, subsample settings with distinct support sizes, and sweep
 //! them with SVEN using prepared-problem reuse and warm starts — the
 //! access pattern behind Figures 1–3.
+//!
+//! The warm-start chaining itself lives in [`sweep_prepared`], shared
+//! between the offline [`PathRunner`] and the service's
+//! [`JobKind::Path`](crate::coordinator::service::JobKind) worker, so a
+//! path submitted as a service job reproduces an offline run bit-for-bit.
 
 use crate::data::Dataset;
-use crate::linalg::vecops;
-use crate::solvers::elastic_net::EnProblem;
+use crate::linalg::{vecops, Design};
+use crate::solvers::elastic_net::{EnProblem, EnSolution};
 use crate::solvers::glmnet::{self, PathPoint, PathSettings};
-use crate::solvers::sven::{Sven, SvmBackend, SvmWarm};
-use crate::util::Timer;
+use crate::solvers::sven::{Sven, SvmBackend, SvmPrep, SvmScratch, SvmWarm};
+use std::sync::Arc;
+
+/// One (t, λ₂) setting of a sweep — the wire form of a grid point (the
+/// reference β and penalized-form parameters stay behind in
+/// [`PathPoint`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GridPoint {
+    /// L1 budget t > 0.
+    pub t: f64,
+    /// L2 regularization λ₂ (already floored; see
+    /// [`PathRunnerConfig::lambda2_floor`]).
+    pub lambda2: f64,
+}
+
+/// Warm-start chained sweep over a prepared data set: solve each grid
+/// point in order, seeding every solve after the first from the previous
+/// β. This is *the* amortized access pattern of the paper (Figures 1–3):
+/// one preparation, many cheap (t, λ₂) solves.
+///
+/// Both the offline [`PathRunner::run`] and the coordinator's
+/// `JobKind::Path` worker call exactly this function, so the two produce
+/// bit-identical coefficient sequences.
+pub fn sweep_prepared<B: SvmBackend>(
+    sven: &Sven<B>,
+    prep: &dyn SvmPrep,
+    scratch: &mut SvmScratch,
+    x: &Arc<Design>,
+    y: &Arc<Vec<f64>>,
+    grid: &[GridPoint],
+    warm_start: bool,
+) -> anyhow::Result<Vec<EnSolution>> {
+    let mut out = Vec::with_capacity(grid.len());
+    let mut warm: Option<SvmWarm> = None;
+    for gp in grid {
+        let prob = EnProblem::shared(x.clone(), y.clone(), gp.t, gp.lambda2);
+        let sol = sven.solve_prepared(prep, scratch, &prob, warm.as_ref())?;
+        if warm_start {
+            warm = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+        }
+        out.push(sol);
+    }
+    Ok(out)
+}
 
 /// Configuration of a path run.
 #[derive(Clone, Debug)]
@@ -70,6 +117,20 @@ impl PathRunner {
         glmnet::path::subsample_distinct(&pts, self.config.grid)
     }
 
+    /// Project full path points down to the (t, λ₂) wire form with this
+    /// runner's λ₂ floor applied — the grid a `JobKind::Path` service job
+    /// carries. Feeding these to the service reproduces [`Self::run`]'s
+    /// coefficient sequence bit-for-bit when `warm_start` is at its
+    /// default `true` (service path jobs always chain warm starts).
+    pub fn grid_points(&self, grid: &[PathPoint]) -> Vec<GridPoint> {
+        grid.iter()
+            .map(|pt| GridPoint {
+                t: pt.t,
+                lambda2: pt.lambda2.max(self.config.lambda2_floor),
+            })
+            .collect()
+    }
+
     /// Sweep the grid with SVEN; returns per-point results including the
     /// reference deviation (the paper's "identical results" check).
     pub fn run<B: SvmBackend>(
@@ -78,38 +139,44 @@ impl PathRunner {
         sven: &Sven<B>,
         grid: &[PathPoint],
     ) -> anyhow::Result<Vec<PathRunResult>> {
-        let mut prep = sven.prepare(&data.x, &data.y)?;
-        let mut results = Vec::with_capacity(grid.len());
-        let mut warm: Option<SvmWarm> = None;
-        for pt in grid {
-            let lambda2 = pt.lambda2.max(self.config.lambda2_floor);
-            let prob =
-                EnProblem::new(data.x.clone(), data.y.clone(), pt.t, lambda2);
-            let timer = Timer::start();
-            let sol = sven.solve_prepared(prep.as_mut(), &prob, warm.as_ref())?;
-            let seconds = timer.elapsed();
-            let max_dev = pt
-                .beta
-                .iter()
-                .zip(&sol.beta)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f64, f64::max);
-            if self.config.warm_start {
-                warm = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(pt.t)) });
-            }
-            results.push(PathRunResult {
-                t: pt.t,
-                lambda2,
-                lambda: pt.lambda,
-                beta_ref: pt.beta.clone(),
-                nnz: vecops::nnz(&sol.beta, 1e-8),
-                max_dev,
-                seconds,
-                iterations: sol.iterations,
-                beta: sol.beta,
-            });
-        }
-        Ok(results)
+        let x = Arc::new(Design::from(data.x.clone()));
+        let y = Arc::new(data.y.clone());
+        let prep = sven.prepare_shared(&x, &y)?;
+        let mut scratch = SvmScratch::new();
+        let points = self.grid_points(grid);
+        let sols = sweep_prepared(
+            sven,
+            prep.as_ref(),
+            &mut scratch,
+            &x,
+            &y,
+            &points,
+            self.config.warm_start,
+        )?;
+        Ok(grid
+            .iter()
+            .zip(points)
+            .zip(sols)
+            .map(|((pt, gp), sol)| {
+                let max_dev = pt
+                    .beta
+                    .iter()
+                    .zip(&sol.beta)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                PathRunResult {
+                    t: gp.t,
+                    lambda2: gp.lambda2,
+                    lambda: pt.lambda,
+                    beta_ref: pt.beta.clone(),
+                    nnz: vecops::nnz(&sol.beta, 1e-8),
+                    max_dev,
+                    seconds: sol.seconds,
+                    iterations: sol.iterations,
+                    beta: sol.beta,
+                }
+            })
+            .collect())
     }
 
     /// Convenience: derive the grid and run in one call.
@@ -211,5 +278,22 @@ mod tests {
         let sven = Sven::new(RustBackend::default());
         let results = runner.derive_and_run(&d, &sven).unwrap();
         assert!(results.iter().all(|r| r.seconds > 0.0));
+    }
+
+    #[test]
+    fn grid_points_apply_floor() {
+        let runner = PathRunner::new(PathRunnerConfig::default());
+        let pt = PathPoint {
+            lambda: 0.1,
+            kappa: 1.0,
+            t: 0.5,
+            lambda2: 0.0,
+            beta: vec![],
+            nnz: 1,
+            epochs: 1,
+        };
+        let gps = runner.grid_points(&[pt]);
+        assert_eq!(gps[0].lambda2, runner.config.lambda2_floor);
+        assert_eq!(gps[0].t, 0.5);
     }
 }

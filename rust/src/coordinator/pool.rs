@@ -70,6 +70,12 @@ impl<J: Send + 'static> Pool<J> {
         self.queue.len()
     }
 
+    /// Stop accepting new jobs (submissions return `Err`); workers keep
+    /// draining what is already queued.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
     /// Close the queue and join all workers (drains remaining jobs).
     pub fn shutdown(self) {
         self.queue.close();

@@ -1,0 +1,341 @@
+//! Service-level preparation cache with single-flight deduplication and
+//! LRU eviction.
+//!
+//! The paper's speed story is amortization: prepare a data set once
+//! (gram blocks / staged device buffers), then sweep many (t, λ₂)
+//! settings cheaply. Before this cache each of W pool workers rebuilt its
+//! own preparation for the same data set — W× the O(n·p·min(n,p)) prep
+//! cost per data set. Now preparations are immutable
+//! (`Arc<dyn SvmPrep>`, see [`crate::solvers::sven::SvmPrep`]) and live
+//! in one cache keyed by `(dataset_id, backend)`:
+//!
+//! - **Single-flight**: N workers racing on a cold key produce exactly
+//!   one build; the N−1 losers block on a condvar and receive the
+//!   winner's `Arc` (or its error).
+//! - **Bounded**: at most `capacity` ready entries, evicting the least
+//!   recently used (in-flight builds are never evicted).
+//! - **Observable**: hits, builds and evictions land in
+//!   [`Metrics`](super::metrics::Metrics).
+
+use super::metrics::Metrics;
+use crate::solvers::sven::SvmPrep;
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Result type of a build — errors are strings so they can be cloned to
+/// every single-flight waiter.
+type BuildResult = Result<Arc<dyn SvmPrep>, String>;
+
+/// A build in progress: waiters park on the condvar until the builder
+/// publishes the result.
+struct Flight {
+    done: Mutex<Option<BuildResult>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Self {
+        Flight { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn publish(&self, result: BuildResult) {
+        *self.done.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> BuildResult {
+        let mut g = self.done.lock().unwrap();
+        loop {
+            if let Some(r) = g.as_ref() {
+                return r.clone();
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+enum Entry {
+    Ready { prep: Arc<dyn SvmPrep>, last_used: u64 },
+    Building(Arc<Flight>),
+}
+
+/// RAII unwind guard around a build closure (see
+/// [`PrepCache::abort_build`]). Disarmed on the normal path.
+struct BuildGuard<'a, K: Eq + Hash + Clone> {
+    cache: &'a PrepCache<K>,
+    key: &'a K,
+    flight: &'a Arc<Flight>,
+    armed: bool,
+}
+
+impl<K: Eq + Hash + Clone> Drop for BuildGuard<'_, K> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.cache.abort_build(self.key, self.flight);
+        }
+    }
+}
+
+struct Inner<K> {
+    entries: HashMap<K, Entry>,
+    /// Monotone use counter backing the LRU order.
+    tick: u64,
+}
+
+/// Shared preparation cache. `K` is the cache key — the service uses
+/// `(dataset_id, BackendChoice)`.
+pub struct PrepCache<K: Eq + Hash + Clone> {
+    capacity: usize,
+    metrics: Arc<Metrics>,
+    inner: Mutex<Inner<K>>,
+}
+
+impl<K: Eq + Hash + Clone> PrepCache<K> {
+    /// A cache holding at most `capacity` ready preparations (≥ 1).
+    pub fn new(capacity: usize, metrics: Arc<Metrics>) -> Self {
+        PrepCache {
+            capacity: capacity.max(1),
+            metrics,
+            inner: Mutex::new(Inner { entries: HashMap::new(), tick: 0 }),
+        }
+    }
+
+    /// Ready entries currently cached.
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .entries
+            .values()
+            .filter(|e| matches!(e, Entry::Ready { .. }))
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch the preparation for `key`, building it with `build` exactly
+    /// once across all concurrent callers. A failed build is not cached:
+    /// the error propagates to the builder and every waiter, and the next
+    /// request retries.
+    pub fn get_or_build(
+        &self,
+        key: K,
+        build: impl FnOnce() -> BuildResult,
+    ) -> BuildResult {
+        let flight = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let now = inner.tick;
+            match inner.entries.get_mut(&key) {
+                Some(Entry::Ready { prep, last_used }) => {
+                    *last_used = now;
+                    self.metrics.on_prep_hit();
+                    return Ok(prep.clone());
+                }
+                Some(Entry::Building(flight)) => flight.clone(),
+                None => {
+                    let flight = Arc::new(Flight::new());
+                    inner.entries.insert(key.clone(), Entry::Building(flight.clone()));
+                    drop(inner);
+                    // We are the builder: run outside the lock so other
+                    // keys stay serviceable during the O(n·p·min(n,p))
+                    // build. The guard keeps a panicking build from
+                    // wedging the key: on unwind it removes the Building
+                    // entry and publishes an error so waiters unblock.
+                    self.metrics.on_prep_build();
+                    let mut guard =
+                        BuildGuard { cache: self, key: &key, flight: &flight, armed: true };
+                    let result = build();
+                    guard.armed = false;
+                    drop(guard);
+                    let mut inner = self.inner.lock().unwrap();
+                    match &result {
+                        Ok(prep) => {
+                            inner.tick += 1;
+                            let now = inner.tick;
+                            inner.entries.insert(
+                                key,
+                                Entry::Ready { prep: prep.clone(), last_used: now },
+                            );
+                            self.evict_over_capacity(&mut inner);
+                        }
+                        Err(_) => {
+                            inner.entries.remove(&key);
+                        }
+                    }
+                    drop(inner);
+                    flight.publish(result.clone());
+                    return result;
+                }
+            }
+        };
+        // Single-flight waiter: someone else is building this key.
+        let result = flight.wait();
+        if result.is_ok() {
+            self.metrics.on_prep_hit();
+        }
+        result
+    }
+
+    /// Unwind cleanup for a panicking build closure: drop the Building
+    /// entry and publish an error so single-flight waiters unblock
+    /// instead of parking forever (the panic itself keeps propagating).
+    fn abort_build(&self, key: &K, flight: &Arc<Flight>) {
+        let mut inner = self.inner.lock().unwrap();
+        let ours =
+            matches!(inner.entries.get(key), Some(Entry::Building(f)) if Arc::ptr_eq(f, flight));
+        if ours {
+            inner.entries.remove(key);
+        }
+        drop(inner);
+        flight.publish(Err("preparation build panicked".to_string()));
+    }
+
+    /// Evict least-recently-used ready entries until within capacity.
+    /// In-flight builds don't count and are never evicted.
+    fn evict_over_capacity(&self, inner: &mut Inner<K>) {
+        loop {
+            let ready = inner
+                .entries
+                .iter()
+                .filter_map(|(k, e)| match e {
+                    Entry::Ready { last_used, .. } => Some((k.clone(), *last_used)),
+                    Entry::Building(_) => None,
+                })
+                .collect::<Vec<_>>();
+            if ready.len() <= self.capacity {
+                return;
+            }
+            let (victim, _) = ready
+                .into_iter()
+                .min_by_key(|(_, last_used)| *last_used)
+                .expect("non-empty over-capacity set");
+            inner.entries.remove(&victim);
+            self.metrics.on_prep_eviction();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Design, Mat};
+    use crate::solvers::sven::{RustBackend, SvmBackend, SvmMode};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn dummy_prep() -> Arc<dyn SvmPrep> {
+        let x = Arc::new(Design::from(Mat::from_fn(6, 2, |r, c| (r + c) as f64)));
+        let y = Arc::new(vec![1.0; 6]);
+        RustBackend::default().prepare(&x, &y, SvmMode::Dual).unwrap()
+    }
+
+    #[test]
+    fn builds_once_then_hits() {
+        let metrics = Arc::new(Metrics::new());
+        let cache = PrepCache::new(4, metrics.clone());
+        let builds = AtomicUsize::new(0);
+        for _ in 0..5 {
+            cache
+                .get_or_build(1u64, || {
+                    builds.fetch_add(1, Ordering::Relaxed);
+                    Ok(dummy_prep())
+                })
+                .unwrap();
+        }
+        assert_eq!(builds.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.prep_builds(), 1);
+        assert_eq!(metrics.prep_hits(), 4);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_cold_key_single_flight() {
+        let metrics = Arc::new(Metrics::new());
+        let cache = Arc::new(PrepCache::new(4, metrics.clone()));
+        let builds = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let cache = cache.clone();
+                let builds = builds.clone();
+                std::thread::spawn(move || {
+                    cache
+                        .get_or_build(7u64, || {
+                            builds.fetch_add(1, Ordering::Relaxed);
+                            // widen the race window so waiters really park
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                            Ok(dummy_prep())
+                        })
+                        .unwrap()
+                })
+            })
+            .collect();
+        let preps: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(builds.load(Ordering::Relaxed), 1, "single-flight violated");
+        assert_eq!(metrics.prep_builds(), 1);
+        assert_eq!(metrics.prep_hits(), 7);
+        for p in &preps[1..] {
+            assert!(Arc::ptr_eq(p, &preps[0]), "all callers share one prep");
+        }
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity() {
+        let metrics = Arc::new(Metrics::new());
+        let cache = PrepCache::new(2, metrics.clone());
+        for key in [1u64, 2, 3] {
+            cache.get_or_build(key, || Ok(dummy_prep())).unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(metrics.prep_evictions(), 1);
+        // key 1 was the LRU victim: re-requesting it rebuilds
+        cache.get_or_build(1u64, || Ok(dummy_prep())).unwrap();
+        assert_eq!(metrics.prep_builds(), 4);
+        // key 3 was touched more recently than 2 after the re-insert? No:
+        // order of use is now [2, 3, 1] → requesting 2 rebuilds (evicted).
+        cache.get_or_build(3u64, || Ok(dummy_prep())).unwrap();
+        assert_eq!(metrics.prep_builds(), 4, "3 must still be cached");
+    }
+
+    #[test]
+    fn panicking_build_unwedges_waiters() {
+        let metrics = Arc::new(Metrics::new());
+        let cache = Arc::new(PrepCache::new(2, metrics.clone()));
+        let c2 = cache.clone();
+        let builder = std::thread::spawn(move || {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                c2.get_or_build(5u64, || {
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                    panic!("boom in build")
+                })
+            }));
+        });
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let c3 = cache.clone();
+        let waiter = std::thread::spawn(move || c3.get_or_build(5u64, || Ok(dummy_prep())));
+        builder.join().unwrap();
+        // The waiter either joined the doomed flight (and gets the panic
+        // error) or arrived after cleanup (and builds fine) — it must
+        // never deadlock.
+        if let Err(e) = waiter.join().unwrap() {
+            assert!(e.contains("panicked"), "unexpected error: {e}");
+        }
+        // The key is not wedged: a fresh request succeeds.
+        cache.get_or_build(5u64, || Ok(dummy_prep())).unwrap();
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn failed_builds_propagate_and_are_not_cached() {
+        let metrics = Arc::new(Metrics::new());
+        let cache = PrepCache::new(2, metrics.clone());
+        let err = cache.get_or_build(9u64, || Err("boom".to_string()));
+        assert_eq!(err.unwrap_err(), "boom");
+        assert_eq!(cache.len(), 0);
+        // next request retries the build
+        cache.get_or_build(9u64, || Ok(dummy_prep())).unwrap();
+        assert_eq!(metrics.prep_builds(), 2);
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,16 +1,25 @@
 //! The solver service: a leader that accepts Elastic Net solve jobs and
-//! dispatches them across the worker pool, with per-dataset preparation
-//! caching, warm metrics and graceful drain — the "deployable" face of
-//! the SVEN system (exercised end-to-end by `examples/end_to_end.rs`).
+//! dispatches them across the worker pool, with a shared per-dataset
+//! preparation cache, warm metrics and graceful drain — the "deployable"
+//! face of the SVEN system (exercised end-to-end by
+//! `examples/end_to_end.rs`).
+//!
+//! Zero-copy by construction: a [`SolveJob`] carries `Arc<Design>` /
+//! `Arc<Vec<f64>>`, problems are [`EnProblem::shared`] views, and
+//! preparations are immutable `Arc<dyn SvmPrep>`s shared by every worker
+//! through the single-flight [`PrepCache`] — K jobs on one data set do
+//! zero design/response deep copies and exactly one preparation build,
+//! regardless of worker count.
 
 use super::metrics::Metrics;
+use super::path::{sweep_prepared, GridPoint};
 use super::pool::{Pool, PoolConfig};
+use super::prep_cache::PrepCache;
 use crate::linalg::Design;
 use crate::solvers::elastic_net::{EnProblem, EnSolution};
-use crate::solvers::sven::{RustBackend, Sven, SvenConfig};
+use crate::solvers::sven::{RustBackend, Sven, SvenConfig, SvmPrep, SvmScratch};
 use crate::util::Timer;
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 /// Which solver a job should use.
@@ -22,16 +31,34 @@ pub enum BackendChoice {
     Xla,
 }
 
+/// What a job asks for: one (t, λ₂) point, or a whole warm-start chained
+/// path sweep — the paper's Figure-1/2 access pattern as a servable
+/// request.
+#[derive(Clone, Debug)]
+pub enum JobKind {
+    /// One constrained-form solve.
+    Point { t: f64, lambda2: f64 },
+    /// A warm-start chained sweep over the grid, solved in order on one
+    /// worker against the shared preparation. Matches an offline
+    /// [`PathRunner::run`](super::path::PathRunner::run) bit-for-bit
+    /// when the runner keeps its default `warm_start: true` (path jobs
+    /// always chain warm starts — that's the amortization they exist
+    /// for; a cold-start sweep is just a sequence of `Point` jobs).
+    Path { grid: Vec<GridPoint> },
+}
+
 /// A solve job. Data sets (dense or sparse [`Design`]s) are shared via
-/// `Arc` and identified by `dataset_id` so workers can cache
-/// preparations across jobs.
+/// `Arc` and identified by `dataset_id` so the service can cache
+/// preparations across jobs and workers. The id is a contract: one id ↔
+/// one data set. Workers reject a reused id whose design shape differs
+/// from the cached preparation; a same-shape different-data reuse is
+/// undetectable and yields answers for the originally-prepared data.
 pub struct SolveJob {
     pub id: u64,
     pub dataset_id: u64,
     pub x: Arc<Design>,
     pub y: Arc<Vec<f64>>,
-    pub t: f64,
-    pub lambda2: f64,
+    pub kind: JobKind,
     pub backend: BackendChoice,
     /// Where to send the outcome.
     pub reply: Sender<SolveOutcome>,
@@ -39,13 +66,53 @@ pub struct SolveJob {
     pub submitted: Timer,
 }
 
+/// Successful payload of a job, mirroring [`JobKind`].
+#[derive(Clone, Debug)]
+pub enum JobResult {
+    Point(EnSolution),
+    /// Per-point solutions, in grid order.
+    Path(Vec<EnSolution>),
+}
+
+impl JobResult {
+    /// Unwrap a point result (panics on a path result — caller bug).
+    pub fn expect_point(self) -> EnSolution {
+        match self {
+            JobResult::Point(sol) => sol,
+            JobResult::Path(_) => panic!("expected a point result, got a path"),
+        }
+    }
+
+    /// Unwrap a path result (panics on a point result — caller bug).
+    pub fn expect_path(self) -> Vec<EnSolution> {
+        match self {
+            JobResult::Path(sols) => sols,
+            JobResult::Point(_) => panic!("expected a path result, got a point"),
+        }
+    }
+}
+
 /// The outcome of a job.
 pub struct SolveOutcome {
     pub id: u64,
-    pub result: Result<EnSolution, String>,
+    pub result: Result<JobResult, String>,
     /// Seconds from submit to completion.
     pub total_seconds: f64,
+    /// Seconds the job waited in the queue before a worker picked it up.
+    pub queue_wait_seconds: f64,
 }
+
+/// Submission rejected: the service has been closed or shut down.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServiceClosed;
+
+impl std::fmt::Display for ServiceClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("service is closed; job rejected")
+    }
+}
+
+impl std::error::Error for ServiceClosed {}
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -54,6 +121,8 @@ pub struct ServiceConfig {
     pub sven: SvenConfig,
     /// Artifact directory for XLA workers (None ⇒ default dir).
     pub artifact_dir: Option<std::path::PathBuf>,
+    /// Max ready preparations in the shared cache (LRU beyond this).
+    pub prep_cache_capacity: usize,
 }
 
 impl Default for ServiceConfig {
@@ -62,28 +131,39 @@ impl Default for ServiceConfig {
             pool: PoolConfig::default(),
             sven: SvenConfig::default(),
             artifact_dir: None,
+            prep_cache_capacity: 16,
         }
     }
 }
 
-/// Per-worker solver context: one rust backend, one lazy XLA backend, and
-/// a preparation cache keyed by (dataset, backend, shape).
+/// Cache key: one preparation per (data set, backend).
+type PrepKey = (u64, BackendChoice);
+
+/// Per-worker solver context: one rust backend, one lazy XLA backend, a
+/// per-thread scratch, and a handle on the service-wide shared
+/// preparation cache.
 struct WorkerCtx {
     rust: Sven<RustBackend>,
     xla: Option<Sven<crate::runtime::XlaBackend>>,
     xla_error: Option<String>,
-    preps: HashMap<(u64, BackendChoice), Box<dyn crate::solvers::sven::PreparedSvm>>,
+    preps: Arc<PrepCache<PrepKey>>,
+    scratch: SvmScratch,
     config: ServiceConfig,
     metrics: Arc<Metrics>,
 }
 
 impl WorkerCtx {
-    fn new(config: ServiceConfig, metrics: Arc<Metrics>) -> Self {
+    fn new(
+        config: ServiceConfig,
+        preps: Arc<PrepCache<PrepKey>>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
         WorkerCtx {
             rust: Sven::with_config(RustBackend::default(), config.sven.clone()),
             xla: None,
             xla_error: None,
-            preps: HashMap::new(),
+            preps,
+            scratch: SvmScratch::new(),
             config,
             metrics,
         }
@@ -116,55 +196,134 @@ impl WorkerCtx {
     }
 
     fn handle(&mut self, job: SolveJob) {
+        // Real queue wait: submit → worker pickup (the backpressure
+        // signal behind `Metrics::queue_wait_summary`).
+        let queue_wait = job.submitted.elapsed();
         let outcome = self.solve(&job);
         let total = job.submitted.elapsed();
         match &outcome {
-            Ok(_) => self.metrics.on_complete(total, 0.0),
-            Err(_) => self.metrics.on_fail(),
+            Ok(_) => self.metrics.on_complete(total, queue_wait),
+            Err(_) => self.metrics.on_fail(queue_wait),
         }
         let _ = job.reply.send(SolveOutcome {
             id: job.id,
             result: outcome,
             total_seconds: total,
+            queue_wait_seconds: queue_wait,
         });
     }
 
-    fn solve(&mut self, job: &SolveJob) -> Result<EnSolution, String> {
-        let prob = EnProblem::new(
-            (*job.x).clone(),
-            (*job.y).clone(),
-            job.t,
-            job.lambda2,
-        );
-        let key = (job.dataset_id, job.backend);
-        // Build (or fetch) the preparation for this dataset+backend.
-        if !self.preps.contains_key(&key) {
-            let prep = match job.backend {
-                BackendChoice::Rust => self
-                    .rust
-                    .prepare(job.x.as_ref(), &job.y)
-                    .map_err(|e| e.to_string())?,
-                BackendChoice::Xla => {
-                    self.ensure_xla()?;
-                    self.xla
-                        .as_ref()
-                        .unwrap()
-                        .prepare(job.x.as_ref(), &job.y)
-                        .map_err(|e| e.to_string())?
-                }
-            };
-            self.preps.insert(key, prep);
+    /// Fetch (or single-flight build) the shared preparation for a job.
+    fn prep_for(&mut self, job: &SolveJob) -> Result<Arc<dyn SvmPrep>, String> {
+        if job.backend == BackendChoice::Xla {
+            self.ensure_xla()?;
         }
-        let prep = self.preps.get_mut(&key).unwrap();
-        let sven_result = match job.backend {
+        let key = (job.dataset_id, job.backend);
+        let rust = &self.rust;
+        let xla = &self.xla;
+        self.preps.get_or_build(key, || match job.backend {
             BackendChoice::Rust => {
-                self.rust.solve_prepared(prep.as_mut(), &prob, None)
+                rust.prepare_shared(&job.x, &job.y).map_err(|e| e.to_string())
             }
-            BackendChoice::Xla => {
-                self.xla.as_ref().unwrap().solve_prepared(prep.as_mut(), &prob, None)
+            BackendChoice::Xla => xla
+                .as_ref()
+                .unwrap()
+                .prepare_shared(&job.x, &job.y)
+                .map_err(|e| e.to_string()),
+        })
+    }
+
+    fn solve(&mut self, job: &SolveJob) -> Result<JobResult, String> {
+        // Validate up front so bad parameters become a failed outcome,
+        // not a worker-thread panic inside `EnProblem`'s (or the linalg
+        // kernels') asserts.
+        if job.x.rows() != job.y.len() {
+            return Err(format!(
+                "invalid job: X has {} rows but y has {} entries",
+                job.x.rows(),
+                job.y.len()
+            ));
+        }
+        let check = |t: f64, lambda2: f64| -> Result<(), String> {
+            if t.is_nan() || t <= 0.0 {
+                return Err(format!("invalid job: t must be positive, got {t}"));
             }
+            if lambda2.is_nan() || lambda2 < 0.0 {
+                return Err(format!(
+                    "invalid job: lambda2 must be non-negative, got {lambda2}"
+                ));
+            }
+            Ok(())
         };
-        sven_result.map_err(|e| e.to_string())
+        match &job.kind {
+            JobKind::Point { t, lambda2 } => check(*t, *lambda2),
+            JobKind::Path { grid } => grid
+                .iter()
+                .try_for_each(|gp| check(gp.t, gp.lambda2)),
+        }?;
+        let prep = self.prep_for(job)?;
+        // `dataset_id` is the caller's promise that the data is the same;
+        // a reused id with a differently-shaped design would otherwise
+        // drive the cached preparation into kernel index asserts (or,
+        // worse, silently solve against the wrong matrix). Catch the
+        // detectable half of that misuse here.
+        let dims = prep.dims();
+        if dims != (job.x.rows(), job.x.cols()) {
+            return Err(format!(
+                "invalid job: dataset_id {} was prepared as {}×{} but this job's \
+                 design is {}×{} — dataset ids must identify one data set",
+                job.dataset_id,
+                dims.0,
+                dims.1,
+                job.x.rows(),
+                job.x.cols()
+            ));
+        }
+        match &job.kind {
+            JobKind::Point { t, lambda2 } => {
+                let prob = EnProblem::shared(job.x.clone(), job.y.clone(), *t, *lambda2);
+                let sol = match job.backend {
+                    BackendChoice::Rust => self.rust.solve_prepared(
+                        prep.as_ref(),
+                        &mut self.scratch,
+                        &prob,
+                        None,
+                    ),
+                    BackendChoice::Xla => self.xla.as_ref().unwrap().solve_prepared(
+                        prep.as_ref(),
+                        &mut self.scratch,
+                        &prob,
+                        None,
+                    ),
+                }
+                .map_err(|e| e.to_string())?;
+                Ok(JobResult::Point(sol))
+            }
+            JobKind::Path { grid } => {
+                let sols = match job.backend {
+                    BackendChoice::Rust => sweep_prepared(
+                        &self.rust,
+                        prep.as_ref(),
+                        &mut self.scratch,
+                        &job.x,
+                        &job.y,
+                        grid,
+                        true,
+                    ),
+                    BackendChoice::Xla => sweep_prepared(
+                        self.xla.as_ref().unwrap(),
+                        prep.as_ref(),
+                        &mut self.scratch,
+                        &job.x,
+                        &job.y,
+                        grid,
+                        true,
+                    ),
+                }
+                .map_err(|e| e.to_string())?;
+                Ok(JobResult::Path(sols))
+            }
+        }
     }
 }
 
@@ -172,30 +331,76 @@ impl WorkerCtx {
 pub struct Service {
     pool: Pool<SolveJob>,
     metrics: Arc<Metrics>,
+    preps: Arc<PrepCache<PrepKey>>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
 impl Service {
-    /// Start the service with its worker pool.
+    /// Start the service with its worker pool and shared prep cache.
     pub fn start(config: ServiceConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
+        let preps = Arc::new(PrepCache::new(config.prep_cache_capacity, metrics.clone()));
         let metrics_for_workers = metrics.clone();
+        let preps_for_workers = preps.clone();
         let cfg = config.clone();
         let pool = Pool::spawn(
             &config.pool,
-            move |_wid| WorkerCtx::new(cfg.clone(), metrics_for_workers.clone()),
+            move |_wid| {
+                WorkerCtx::new(
+                    cfg.clone(),
+                    preps_for_workers.clone(),
+                    metrics_for_workers.clone(),
+                )
+            },
             |ctx: &mut WorkerCtx, job: SolveJob| ctx.handle(job),
         );
         Service {
             pool,
             metrics,
+            preps,
             next_id: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
-    /// Submit a solve; the outcome arrives on the returned receiver.
-    #[allow(clippy::too_many_arguments)]
+    /// Submit a job; the outcome arrives on the returned receiver.
+    /// `Err(ServiceClosed)` when the service no longer accepts work, so
+    /// callers can tell "queued" from "rejected".
     pub fn submit(
+        &self,
+        dataset_id: u64,
+        x: Arc<Design>,
+        y: Arc<Vec<f64>>,
+        kind: JobKind,
+        backend: BackendChoice,
+    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+        let (tx, rx) = channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let job = SolveJob {
+            id,
+            dataset_id,
+            x,
+            y,
+            kind,
+            backend,
+            reply: tx,
+            submitted: Timer::start(),
+        };
+        match self.pool.submit(job) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Ok(rx)
+            }
+            Err(_job) => {
+                self.metrics.on_reject();
+                Err(ServiceClosed)
+            }
+        }
+    }
+
+    /// Convenience: submit a single (t, λ₂) solve.
+    pub fn submit_point(
         &self,
         dataset_id: u64,
         x: Arc<Design>,
@@ -203,35 +408,39 @@ impl Service {
         t: f64,
         lambda2: f64,
         backend: BackendChoice,
-    ) -> std::sync::mpsc::Receiver<SolveOutcome> {
-        let (tx, rx) = channel();
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.metrics.on_submit();
-        let job = SolveJob {
-            id,
-            dataset_id,
-            x,
-            y,
-            t,
-            lambda2,
-            backend,
-            reply: tx,
-            submitted: Timer::start(),
-        };
-        if self.pool.submit(job).is_err() {
-            // pool already shut down; the receiver will simply disconnect
-        }
-        rx
+    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+        self.submit(dataset_id, x, y, JobKind::Point { t, lambda2 }, backend)
+    }
+
+    /// Convenience: submit a warm-start chained path sweep.
+    pub fn submit_path(
+        &self,
+        dataset_id: u64,
+        x: Arc<Design>,
+        y: Arc<Vec<f64>>,
+        grid: Vec<GridPoint>,
+        backend: BackendChoice,
+    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+        self.submit(dataset_id, x, y, JobKind::Path { grid }, backend)
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
     }
 
+    /// Ready entries in the shared preparation cache.
+    pub fn prep_cache_len(&self) -> usize {
+        self.preps.len()
+    }
+
     pub fn backlog(&self) -> usize {
         self.pool.backlog()
+    }
+
+    /// Stop accepting new jobs; queued work keeps draining. Subsequent
+    /// [`Service::submit`] calls return `Err(ServiceClosed)`.
+    pub fn close(&self) {
+        self.pool.close();
     }
 
     /// Drain and stop.
@@ -269,36 +478,36 @@ mod tests {
         let y = Arc::new(d.y.clone());
         let rxs: Vec<_> = (0..6)
             .map(|i| {
-                service.submit(
-                    1,
-                    x.clone(),
-                    y.clone(),
-                    t * (0.5 + 0.1 * i as f64),
-                    lambda2,
-                    BackendChoice::Rust,
-                )
+                service
+                    .submit_point(
+                        1,
+                        x.clone(),
+                        y.clone(),
+                        t * (0.5 + 0.1 * i as f64),
+                        lambda2,
+                        BackendChoice::Rust,
+                    )
+                    .expect("service accepting jobs")
             })
             .collect();
         let outcomes: Vec<SolveOutcome> =
             rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
         assert_eq!(outcomes.len(), 6);
         for o in &outcomes {
-            let sol = o.result.as_ref().expect("solve ok");
+            let sol = o.result.clone().expect("solve ok").expect_point();
             assert!(sol.beta.len() == 20);
         }
         assert_eq!(service.metrics().completed(), 6);
+        // one data set ⇒ exactly one preparation build, shared by both
+        // workers; the other five jobs hit the cache.
+        assert_eq!(service.metrics().prep_builds(), 1);
+        assert_eq!(service.metrics().prep_hits(), 5);
+        assert_eq!(service.prep_cache_len(), 1);
         service.shutdown();
     }
 
     #[test]
     fn bad_jobs_report_failure_not_panic() {
-        let service = Service::start(ServiceConfig {
-            pool: PoolConfig { workers: 1, queue_capacity: 2 },
-            ..Default::default()
-        });
-        // λ₂ < 0 panics inside EnProblem::new — the worker must catch this
-        // as an error... EnProblem asserts, so instead feed an XLA job with
-        // a missing artifact dir to exercise the error path.
         let d = synth_regression(&SynthSpec {
             n: 10,
             p: 5,
@@ -306,24 +515,123 @@ mod tests {
             seed: 302,
             ..Default::default()
         });
+        let x = Arc::new(Design::from(d.x.clone()));
+        let y = Arc::new(d.y.clone());
+
+        // An XLA job with a missing artifact dir exercises the backend
+        // error path.
         let mut cfg = ServiceConfig {
             pool: PoolConfig { workers: 1, queue_capacity: 2 },
             ..Default::default()
         };
         cfg.artifact_dir = Some(std::path::PathBuf::from("/nonexistent"));
-        let service2 = Service::start(cfg);
-        let rx = service2.submit(
-            7,
-            Arc::new(Design::from(d.x.clone())),
-            Arc::new(d.y.clone()),
-            0.5,
-            0.1,
-            BackendChoice::Xla,
-        );
+        let service = Service::start(cfg);
+        let rx = service
+            .submit_point(7, x.clone(), y.clone(), 0.5, 0.1, BackendChoice::Xla)
+            .unwrap();
         let out = rx.recv().unwrap();
         assert!(out.result.is_err());
-        assert_eq!(service2.metrics().failed(), 1);
-        service2.shutdown();
+        assert_eq!(service.metrics().failed(), 1);
+
+        // Invalid parameters (t ≤ 0, λ₂ < 0) come back as failed
+        // outcomes, not worker panics.
+        let rx = service
+            .submit_point(7, x.clone(), y.clone(), -1.0, 0.1, BackendChoice::Rust)
+            .unwrap();
+        assert!(rx.recv().unwrap().result.is_err());
+        let rx = service
+            .submit_point(7, x.clone(), y.clone(), 0.5, -0.1, BackendChoice::Rust)
+            .unwrap();
+        assert!(rx.recv().unwrap().result.is_err());
+        // Dimension mismatch (X is 10×5, y has 3 entries) fails the job
+        // instead of tripping a kernel assert on the worker thread.
+        let rx = service
+            .submit_point(8, x.clone(), Arc::new(vec![0.0; 3]), 0.5, 0.1, BackendChoice::Rust)
+            .unwrap();
+        assert!(rx.recv().unwrap().result.is_err());
+        // Reusing a dataset_id for a differently-shaped design is caught
+        // against the cached preparation instead of indexing out of
+        // bounds in the kernels.
+        let rx = service
+            .submit_point(9, x, y.clone(), 0.5, 0.1, BackendChoice::Rust)
+            .unwrap();
+        rx.recv().unwrap().result.expect("good job ok");
+        let other = synth_regression(&SynthSpec {
+            n: 10,
+            p: 4,
+            support: 2,
+            seed: 303,
+            ..Default::default()
+        });
+        let rx = service
+            .submit_point(
+                9,
+                Arc::new(Design::from(other.x.clone())),
+                Arc::new(other.y.clone()),
+                0.5,
+                0.1,
+                BackendChoice::Rust,
+            )
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("dataset ids must identify"), "got: {err}");
+        assert_eq!(service.metrics().failed(), 5);
+        service.shutdown();
+    }
+
+    #[test]
+    fn submit_after_close_is_rejected() {
+        let d = synth_regression(&SynthSpec {
+            n: 12,
+            p: 6,
+            support: 3,
+            seed: 303,
+            ..Default::default()
+        });
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 1, queue_capacity: 2 },
+            ..Default::default()
+        });
+        let x = Arc::new(Design::from(d.x.clone()));
+        let y = Arc::new(d.y.clone());
+        service.close();
+        let res = service.submit_point(1, x, y, 0.5, 0.1, BackendChoice::Rust);
+        assert_eq!(res.err(), Some(ServiceClosed));
+        assert_eq!(service.metrics().rejected(), 1);
+        assert_eq!(service.metrics().submitted(), 0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn prep_cache_eviction_under_capacity_pressure() {
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 1, queue_capacity: 8 },
+            prep_cache_capacity: 1,
+            ..Default::default()
+        });
+        for (id, seed) in [(1u64, 311u64), (2, 312), (3, 313)] {
+            let d = synth_regression(&SynthSpec {
+                n: 24,
+                p: 10,
+                support: 4,
+                seed,
+                ..Default::default()
+            });
+            let rx = service
+                .submit_point(
+                    id,
+                    Arc::new(Design::from(d.x.clone())),
+                    Arc::new(d.y.clone()),
+                    0.4,
+                    0.5,
+                    BackendChoice::Rust,
+                )
+                .unwrap();
+            rx.recv().unwrap().result.expect("solve ok");
+        }
+        assert_eq!(service.metrics().prep_builds(), 3);
+        assert_eq!(service.metrics().prep_evictions(), 2);
+        assert_eq!(service.prep_cache_len(), 1);
         service.shutdown();
     }
 }

@@ -10,7 +10,7 @@
 
 use super::engine::{pad_matrix, pad_vec, sample_mask, unpad_alpha, XlaEngine};
 use crate::linalg::{Design, Mat};
-use crate::solvers::sven::{PreparedSvm, SvmBackend, SvmMode, SvmSolve, SvmWarm};
+use crate::solvers::sven::{SvmBackend, SvmMode, SvmPrep, SvmScratch, SvmSolve, SvmWarm};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
 use xla::PjRtBuffer;
@@ -45,10 +45,10 @@ impl SvmBackend for XlaBackend {
 
     fn prepare(
         &self,
-        x: &Design,
-        y: &[f64],
+        x: &Arc<Design>,
+        y: &Arc<Vec<f64>>,
         mode: SvmMode,
-    ) -> Result<Box<dyn PreparedSvm>> {
+    ) -> Result<Arc<dyn SvmPrep>> {
         let (n, p) = (x.rows(), x.cols());
         // The AOT artifacts consume padded dense buffers, so the device
         // boundary is where a sparse design finally densifies — one copy,
@@ -76,7 +76,7 @@ impl SvmBackend for XlaBackend {
                 let y_buf = self.engine.stage(&pad_vec(y, meta.n), &[meta.n])?;
                 let mask_buf =
                     self.engine.stage(&sample_mask(p, meta.p), &[2 * meta.p])?;
-                Ok(Box::new(PreparedXlaPrimal {
+                Ok(Arc::new(PreparedXlaPrimal {
                     engine: self.engine.clone(),
                     meta,
                     n,
@@ -115,9 +115,10 @@ impl SvmBackend for XlaBackend {
                 let v_buf = self.engine.stage_literal(&v_lit, &[pb])?;
                 let yy_buf = self.engine.stage_literal(&yy_lit, &[])?;
                 let mask_buf = self.engine.stage(&sample_mask(p, pb), &[2 * pb])?;
-                Ok(Box::new(PreparedXlaDual {
+                Ok(Arc::new(PreparedXlaDual {
                     engine: self.engine.clone(),
                     meta: dual_meta,
+                    n,
                     p,
                     p_b: pb,
                     g0_buf,
@@ -142,8 +143,14 @@ struct PreparedXlaPrimal {
     mask_buf: PjRtBuffer,
 }
 
-impl PreparedSvm for PreparedXlaPrimal {
-    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> Result<SvmSolve> {
+impl SvmPrep for PreparedXlaPrimal {
+    fn solve(
+        &self,
+        t: f64,
+        c: f64,
+        warm: Option<&SvmWarm>,
+        _scratch: &mut SvmScratch,
+    ) -> Result<SvmSolve> {
         let w0_host = match warm.and_then(|w| w.w.as_ref()) {
             Some(w) => pad_vec(w, self.meta.n),
             None => vec![0.0; self.meta.n],
@@ -168,12 +175,17 @@ impl PreparedSvm for PreparedXlaPrimal {
     fn mode(&self) -> SvmMode {
         SvmMode::Primal
     }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.n, self.p)
+    }
 }
 
 /// Dual-mode prepared problem: gram pieces staged on device.
 struct PreparedXlaDual {
     engine: Arc<XlaEngine>,
     meta: crate::runtime::ArtifactMeta,
+    n: usize,
     p: usize,
     p_b: usize,
     g0_buf: PjRtBuffer,
@@ -182,8 +194,14 @@ struct PreparedXlaDual {
     mask_buf: PjRtBuffer,
 }
 
-impl PreparedSvm for PreparedXlaDual {
-    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> Result<SvmSolve> {
+impl SvmPrep for PreparedXlaDual {
+    fn solve(
+        &self,
+        t: f64,
+        c: f64,
+        warm: Option<&SvmWarm>,
+        _scratch: &mut SvmScratch,
+    ) -> Result<SvmSolve> {
         let alpha0_host = match warm.and_then(|w| w.alpha.as_ref()) {
             Some(a) => {
                 // re-pad the snug 2p warm start into bucket layout
@@ -214,5 +232,9 @@ impl PreparedSvm for PreparedXlaDual {
 
     fn mode(&self) -> SvmMode {
         SvmMode::Dual
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.n, self.p)
     }
 }

@@ -13,6 +13,7 @@
 //! here.
 
 use crate::linalg::{vecops, Design, Mat};
+use std::sync::Arc;
 
 /// A (constrained-form) Elastic Net problem instance.
 ///
@@ -21,12 +22,19 @@ use crate::linalg::{vecops, Design, Mat};
 /// [`crate::data::standardize`]). The design is a [`Design`], so sparse
 /// problems (e.g. loaded via `read_svmlight`) flow through the solvers
 /// without ever materializing an n × p dense matrix.
+///
+/// The data set lives behind `Arc`s: a problem descriptor is a *view*
+/// onto shared data plus the two scalars `(t, λ₂)`, so cloning one — or
+/// building forty of them for a path sweep, or fanning a service job out
+/// to W workers — never copies the design or the response. Build with
+/// [`EnProblem::new`] at the data boundary (wraps owned data once) or
+/// [`EnProblem::shared`] on the hot path (pure `Arc` bumps).
 #[derive(Clone, Debug)]
 pub struct EnProblem {
-    /// Design matrix, n × p (dense or sparse).
-    pub x: Design,
-    /// Centered response, length n.
-    pub y: Vec<f64>,
+    /// Design matrix, n × p (dense or sparse), shared.
+    pub x: Arc<Design>,
+    /// Centered response, length n, shared.
+    pub y: Arc<Vec<f64>>,
     /// L1 budget t > 0.
     pub t: f64,
     /// L2 regularization λ₂ ≥ 0 (0 ⇒ Lasso).
@@ -35,13 +43,24 @@ pub struct EnProblem {
 
 impl EnProblem {
     /// Build a problem from a dense `Mat`, a sparse `Csr`-backed
-    /// [`Design`], or any other `Into<Design>`.
+    /// [`Design`], or any other `Into<Design>`, wrapping the data into
+    /// fresh `Arc`s (one move, no copy).
     pub fn new(x: impl Into<Design>, y: Vec<f64>, t: f64, lambda2: f64) -> Self {
-        let x = x.into();
+        Self::shared(Arc::new(x.into()), Arc::new(y), t, lambda2)
+    }
+
+    /// Zero-copy constructor over already-shared data — the per-job /
+    /// per-path-point form (two reference-count bumps, nothing else).
+    pub fn shared(x: Arc<Design>, y: Arc<Vec<f64>>, t: f64, lambda2: f64) -> Self {
         assert_eq!(x.rows(), y.len(), "X rows must match y length");
         assert!(t > 0.0, "L1 budget must be positive");
         assert!(lambda2 >= 0.0, "lambda2 must be non-negative");
         EnProblem { x, y, t, lambda2 }
+    }
+
+    /// The same data set at different `(t, λ₂)` — the path-sweep step.
+    pub fn with_budget(&self, t: f64, lambda2: f64) -> Self {
+        Self::shared(self.x.clone(), self.y.clone(), t, lambda2)
     }
 
     pub fn n(&self) -> usize {
@@ -254,6 +273,18 @@ mod tests {
     #[should_panic(expected = "budget")]
     fn rejects_nonpositive_budget() {
         let p = tiny_problem();
-        EnProblem::new(p.x, p.y, 0.0, 0.1);
+        EnProblem::shared(p.x, p.y, 0.0, 0.1);
+    }
+
+    #[test]
+    fn shared_and_with_budget_are_zero_copy() {
+        let p = tiny_problem();
+        let q = p.with_budget(2.0, 0.25);
+        assert!(Arc::ptr_eq(&p.x, &q.x), "with_budget must share the design");
+        assert!(Arc::ptr_eq(&p.y, &q.y), "with_budget must share the response");
+        assert_eq!(q.t, 2.0);
+        assert_eq!(q.lambda2, 0.25);
+        let r = q.clone();
+        assert!(Arc::ptr_eq(&q.x, &r.x), "clone must share the design");
     }
 }

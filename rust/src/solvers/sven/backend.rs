@@ -8,12 +8,23 @@
 //! Backends prepare from a [`Design`], so a sparse data set flows through
 //! preparation (gram blocks via the CSR/CSC join, Xᵀy via sparse GEMV)
 //! and every per-point solve without densifying.
+//!
+//! A preparation is split into two halves:
+//!
+//! - [`SvmPrep`] — the immutable, `Send + Sync` half (gram blocks,
+//!   staged device buffers, `Arc`s onto the data set), built once per
+//!   data set and shared freely: the path runner reuses one across 40
+//!   points, and the coordinator's service-level cache shares one
+//!   `Arc<dyn SvmPrep>` across every worker thread.
+//! - [`SvmScratch`] — the small mutable half (the assembled dual gram
+//!   `K(t)` buffer), owned per calling thread and passed into each solve.
 
 use crate::linalg::{vecops, Design, Mat};
 use crate::solvers::svm::{
     dual_newton, primal_newton, samples::reduction_gram, samples::reduction_labels,
     DualOptions, PrimalOptions, ReducedSamples, SampleSet,
 };
+use std::sync::Arc;
 
 /// Primal/dual selection. `Auto` applies the paper's rule: primal when
 /// 2p > n (weight dimension n is the small side), dual otherwise.
@@ -60,32 +71,75 @@ pub struct SvmSolve {
     pub iters: usize,
 }
 
-/// A data set prepared for repeated (t, C) solves.
-///
-/// Deliberately not `Send`: the XLA backend holds PJRT handles (Rc-based
-/// in the xla crate), so preparations are thread-local. The coordinator
-/// gives each worker thread its own backend + preparation.
-pub trait PreparedSvm {
-    /// Solve the reduction SVM at budget `t` and regularization `C`.
-    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> anyhow::Result<SvmSolve>;
-    /// Which formulation this preparation uses.
-    fn mode(&self) -> SvmMode;
+/// Per-solve mutable workspace. Everything a solve mutates lives here —
+/// one scratch per calling thread — so the preparation itself can stay
+/// immutable and shared. The dual path reuses the `K(t)` buffer across
+/// path points (2p × 2p, the largest transient of a dual solve).
+#[derive(Default)]
+pub struct SvmScratch {
+    /// Reusable dense matrix buffer (the assembled dual gram `K(t)`).
+    k: Option<Mat>,
 }
 
-/// An SVM solving engine SVEN can drive (thread-local; see
-/// [`PreparedSvm`] for the threading contract).
+impl SvmScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow a `rows × cols` matrix buffer, reallocating only on shape
+    /// change. Callers must overwrite every entry (the buffer carries the
+    /// previous solve's values).
+    pub(crate) fn mat(&mut self, rows: usize, cols: usize) -> &mut Mat {
+        let stale = match &self.k {
+            Some(m) => m.rows() != rows || m.cols() != cols,
+            None => true,
+        };
+        if stale {
+            self.k = Some(Mat::zeros(rows, cols));
+        }
+        self.k.as_mut().unwrap()
+    }
+}
+
+/// A data set prepared for repeated (t, C) solves: the immutable half of
+/// a preparation.
+///
+/// `Send + Sync` by contract so one `Arc<dyn SvmPrep>` can serve every
+/// worker in the coordinator pool (the single-flight prep cache depends
+/// on this). The offline `xla` stub satisfies the bound; a real PJRT
+/// re-link must either provide thread-safe handles or wrap them in a
+/// mutex before implementing this trait.
+pub trait SvmPrep: Send + Sync {
+    /// Solve the reduction SVM at budget `t` and regularization `C`,
+    /// using `scratch` for all mutable state.
+    fn solve(
+        &self,
+        t: f64,
+        c: f64,
+        warm: Option<&SvmWarm>,
+        scratch: &mut SvmScratch,
+    ) -> anyhow::Result<SvmSolve>;
+    /// Which formulation this preparation uses.
+    fn mode(&self) -> SvmMode;
+    /// Shape (n, p) of the prepared data set — lets cache consumers
+    /// reject a key that was reused for a differently-shaped design
+    /// before any kernel trips an index assert.
+    fn dims(&self) -> (usize, usize);
+}
+
+/// An SVM solving engine SVEN can drive.
 pub trait SvmBackend {
     fn name(&self) -> &str;
     /// Prepare `x` (n × p, dense or sparse) / `y` for repeated solves.
-    /// The preparation owns its data and caches (gram blocks, staged
-    /// device buffers), so it can outlive the borrow — workers cache one
-    /// per data set.
+    /// The preparation holds `Arc`s onto the data (no copies) plus its
+    /// own caches (gram blocks, staged device buffers); the returned
+    /// `Arc<dyn SvmPrep>` is shared across threads by the coordinator.
     fn prepare(
         &self,
-        x: &Design,
-        y: &[f64],
+        x: &Arc<Design>,
+        y: &Arc<Vec<f64>>,
         mode: SvmMode,
-    ) -> anyhow::Result<Box<dyn PreparedSvm>>;
+    ) -> anyhow::Result<Arc<dyn SvmPrep>>;
 }
 
 /// In-process Newton backend ("SVEN (CPU)").
@@ -108,18 +162,18 @@ impl SvmBackend for RustBackend {
 
     fn prepare(
         &self,
-        x: &Design,
-        y: &[f64],
+        x: &Arc<Design>,
+        y: &Arc<Vec<f64>>,
         mode: SvmMode,
-    ) -> anyhow::Result<Box<dyn PreparedSvm>> {
+    ) -> anyhow::Result<Arc<dyn SvmPrep>> {
         let (n, p) = (x.rows(), x.cols());
         match mode.resolve(n, p) {
-            SvmMode::Primal => Ok(Box::new(PreparedPrimal {
+            SvmMode::Primal => Ok(Arc::new(PreparedPrimal {
                 opts: self.primal.clone(),
                 x: x.clone(),
-                y: y.to_vec(),
+                y: y.clone(),
             })),
-            SvmMode::Dual => Ok(Box::new(PreparedDual {
+            SvmMode::Dual => Ok(Arc::new(PreparedDual {
                 opts: self.dual.clone(),
                 // t-independent gram pieces, computed once: dense designs
                 // use the packed blocked kernel, sparse designs the
@@ -128,7 +182,7 @@ impl SvmBackend for RustBackend {
                 v: x.matvec_t(y),
                 yy: vecops::norm2_sq(y),
                 x: x.clone(),
-                y: y.to_vec(),
+                y: y.clone(),
             })),
             SvmMode::Auto => unreachable!(),
         }
@@ -137,13 +191,19 @@ impl SvmBackend for RustBackend {
 
 struct PreparedPrimal {
     opts: PrimalOptions,
-    x: Design,
-    y: Vec<f64>,
+    x: Arc<Design>,
+    y: Arc<Vec<f64>>,
 }
 
-impl PreparedSvm for PreparedPrimal {
-    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> anyhow::Result<SvmSolve> {
-        let samples = ReducedSamples { x: &self.x, y: &self.y, t };
+impl SvmPrep for PreparedPrimal {
+    fn solve(
+        &self,
+        t: f64,
+        c: f64,
+        warm: Option<&SvmWarm>,
+        _scratch: &mut SvmScratch,
+    ) -> anyhow::Result<SvmSolve> {
+        let samples = ReducedSamples { x: self.x.as_ref(), y: self.y.as_slice(), t };
         let labels = reduction_labels(self.x.cols());
         let w0 = warm.and_then(|w| w.w.as_deref());
         let r = primal_newton(&samples, &labels, c, &self.opts, w0);
@@ -153,6 +213,10 @@ impl PreparedSvm for PreparedPrimal {
     fn mode(&self) -> SvmMode {
         SvmMode::Primal
     }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.x.rows(), self.x.cols())
+    }
 }
 
 struct PreparedDual {
@@ -160,36 +224,41 @@ struct PreparedDual {
     g0: Mat,
     v: Vec<f64>,
     yy: f64,
-    x: Design,
-    y: Vec<f64>,
+    x: Arc<Design>,
+    y: Arc<Vec<f64>>,
 }
 
 impl PreparedDual {
     /// Assemble K(t) from the cached, t-independent blocks in O(p²),
-    /// row-parallel over the scoped pool.
-    fn gram_at(&self, t: f64) -> Mat {
-        let p = self.g0.rows();
+    /// row-parallel over the scoped pool, into a caller-owned buffer.
+    fn gram_at_into(&self, t: f64, k: &mut Mat) {
         let s = 1.0 / t;
-        let mut k = Mat::zeros(2 * p, 2 * p);
         crate::solvers::svm::samples::assemble_reduction_gram(
             &self.g0,
             &self.v,
             s,
             s * s * self.yy,
-            &mut k,
+            k,
         );
-        k
     }
 }
 
-impl PreparedSvm for PreparedDual {
-    fn solve(&mut self, t: f64, c: f64, warm: Option<&SvmWarm>) -> anyhow::Result<SvmSolve> {
-        let k = self.gram_at(t);
+impl SvmPrep for PreparedDual {
+    fn solve(
+        &self,
+        t: f64,
+        c: f64,
+        warm: Option<&SvmWarm>,
+        scratch: &mut SvmScratch,
+    ) -> anyhow::Result<SvmSolve> {
+        let p = self.g0.rows();
+        let k = scratch.mat(2 * p, 2 * p);
+        self.gram_at_into(t, k);
         let warm_alpha = warm.and_then(|w| w.alpha.as_deref());
-        let r = dual_newton(&k, c, &self.opts, warm_alpha);
+        let r = dual_newton(k, c, &self.opts, warm_alpha);
         // w = Ẑα is cheap and useful for warm starts: Ẑ = [X̂₁, −X̂₂]
         let p = self.x.cols();
-        let samples = ReducedSamples { x: &self.x, y: &self.y, t };
+        let samples = ReducedSamples { x: self.x.as_ref(), y: self.y.as_slice(), t };
         let mut signed = r.alpha.clone();
         for v in signed[p..].iter_mut() {
             *v = -*v;
@@ -202,22 +271,28 @@ impl PreparedSvm for PreparedDual {
     fn mode(&self) -> SvmMode {
         SvmMode::Dual
     }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.x.rows(), self.x.cols())
+    }
 }
 
 /// Validate that `reduction_gram` and the cached-block assembly agree —
 /// exposed for tests and the runtime's own cross-checks.
 pub fn gram_assembly_check(x: &Mat, y: &[f64], t: f64) -> f64 {
     let direct = reduction_gram(x, y, t);
-    let design: Design = x.clone().into();
+    let design: Arc<Design> = Arc::new(x.clone().into());
     let prep = PreparedDual {
         opts: DualOptions::default(),
         g0: design.gram_t(),
         v: design.matvec_t(y),
         yy: vecops::norm2_sq(y),
         x: design,
-        y: y.to_vec(),
+        y: Arc::new(y.to_vec()),
     };
-    let assembled = prep.gram_at(t);
+    let p = x.cols();
+    let mut assembled = Mat::zeros(2 * p, 2 * p);
+    prep.gram_at_into(t, &mut assembled);
     let mut max = 0.0f64;
     for i in 0..direct.rows() {
         for j in 0..direct.cols() {
@@ -254,14 +329,15 @@ mod tests {
     #[test]
     fn primal_dual_same_alpha_up_to_scale() {
         let mut rng = Rng::seed_from(162);
-        let x: Design = Mat::from_fn(30, 6, |_, _| rng.normal()).into();
-        let y: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let x: Arc<Design> = Arc::new(Mat::from_fn(30, 6, |_, _| rng.normal()).into());
+        let y = Arc::new((0..30).map(|_| rng.normal()).collect::<Vec<f64>>());
         let backend = RustBackend::default();
-        let mut prim = backend.prepare(&x, &y, SvmMode::Primal).unwrap();
-        let mut dual = backend.prepare(&x, &y, SvmMode::Dual).unwrap();
+        let prim = backend.prepare(&x, &y, SvmMode::Primal).unwrap();
+        let dual = backend.prepare(&x, &y, SvmMode::Dual).unwrap();
         let (t, c) = (0.8, 5.0);
-        let a = prim.solve(t, c, None).unwrap().alpha;
-        let b = dual.solve(t, c, None).unwrap().alpha;
+        let mut scratch = SvmScratch::new();
+        let a = prim.solve(t, c, None, &mut scratch).unwrap().alpha;
+        let b = dual.solve(t, c, None, &mut scratch).unwrap().alpha;
         for i in 0..12 {
             assert!((a[i] - b[i]).abs() < 1e-5, "i={i}: {} vs {}", a[i], b[i]);
         }
@@ -279,15 +355,17 @@ mod tests {
                 0.0
             }
         });
-        let y: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
-        let dense: Design = m.clone().into();
-        let sparse: Design = crate::linalg::Csr::from_dense(&m, 0.0).into();
+        let y = Arc::new((0..40).map(|_| rng.normal()).collect::<Vec<f64>>());
+        let dense: Arc<Design> = Arc::new(m.clone().into());
+        let sparse: Arc<Design> =
+            Arc::new(crate::linalg::Csr::from_dense(&m, 0.0).into());
         let backend = RustBackend::default();
+        let mut scratch = SvmScratch::new();
         for mode in [SvmMode::Primal, SvmMode::Dual] {
-            let mut pd = backend.prepare(&dense, &y, mode).unwrap();
-            let mut ps = backend.prepare(&sparse, &y, mode).unwrap();
-            let a = pd.solve(0.7, 4.0, None).unwrap().alpha;
-            let b = ps.solve(0.7, 4.0, None).unwrap().alpha;
+            let pd = backend.prepare(&dense, &y, mode).unwrap();
+            let ps = backend.prepare(&sparse, &y, mode).unwrap();
+            let a = pd.solve(0.7, 4.0, None, &mut scratch).unwrap().alpha;
+            let b = ps.solve(0.7, 4.0, None, &mut scratch).unwrap().alpha;
             for i in 0..18 {
                 assert!(
                     (a[i] - b[i]).abs() < 1e-6,
@@ -295,6 +373,35 @@ mod tests {
                     a[i],
                     b[i]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn preps_are_shareable_across_threads() {
+        // The coordinator contract: one Arc<dyn SvmPrep> solved from
+        // several threads at once (each with its own scratch) must give
+        // identical results.
+        let mut rng = Rng::seed_from(164);
+        let x: Arc<Design> = Arc::new(Mat::from_fn(24, 7, |_, _| rng.normal()).into());
+        let y = Arc::new((0..24).map(|_| rng.normal()).collect::<Vec<f64>>());
+        let backend = RustBackend::default();
+        let prep = backend.prepare(&x, &y, SvmMode::Dual).unwrap();
+        let mut scratch = SvmScratch::new();
+        let reference = prep.solve(0.9, 3.0, None, &mut scratch).unwrap().alpha;
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let prep = prep.clone();
+                std::thread::spawn(move || {
+                    let mut scratch = SvmScratch::new();
+                    prep.solve(0.9, 3.0, None, &mut scratch).unwrap().alpha
+                })
+            })
+            .collect();
+        for h in handles {
+            let alpha = h.join().unwrap();
+            for i in 0..14 {
+                assert_eq!(alpha[i].to_bits(), reference[i].to_bits(), "i={i}");
             }
         }
     }

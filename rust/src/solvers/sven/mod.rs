@@ -19,13 +19,14 @@
 pub mod backend;
 pub mod reduction;
 
-pub use backend::{PreparedSvm, RustBackend, SvmBackend, SvmMode, SvmSolve, SvmWarm};
+pub use backend::{RustBackend, SvmBackend, SvmMode, SvmPrep, SvmScratch, SvmSolve, SvmWarm};
 pub use reduction::{backmap, effective_c, MIN_ALPHA_SUM};
 
 use crate::linalg::{AsDesign, Design};
 use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
 use crate::util::parallel::{with_parallelism, Parallelism};
 use crate::util::Timer;
+use std::sync::Arc;
 
 /// SVEN configuration.
 #[derive(Clone, Debug)]
@@ -68,27 +69,32 @@ impl<B: SvmBackend> Sven<B> {
         Sven { backend, config }
     }
 
-    /// One-shot solve of a single Elastic Net problem.
+    /// One-shot solve of a single Elastic Net problem. The problem's
+    /// shared data feeds preparation directly — no copies.
     pub fn solve(&self, prob: &EnProblem) -> anyhow::Result<EnSolution> {
-        let mut prepared = with_parallelism(self.config.parallelism, || {
-            self.backend.prepare(&prob.x, &prob.y, self.config.mode)
-        })?;
-        self.solve_prepared(prepared.as_mut(), prob, None)
+        let prepared = self.prepare_shared(&prob.x, &prob.y)?;
+        let mut scratch = SvmScratch::new();
+        self.solve_prepared(prepared.as_ref(), &mut scratch, prob, None)
     }
 
     /// Solve with a prepared problem (gram/caches reused across path
-    /// points) and an optional warm start from the previous point.
+    /// points), a per-thread scratch, and an optional warm start from the
+    /// previous point. The preparation is shared (`&dyn SvmPrep`, often
+    /// behind an `Arc` owned by a cache); all mutable state lives in
+    /// `scratch`.
     pub fn solve_prepared(
         &self,
-        prepared: &mut dyn PreparedSvm,
+        prepared: &dyn SvmPrep,
+        scratch: &mut SvmScratch,
         prob: &EnProblem,
         warm: Option<&SvmWarm>,
     ) -> anyhow::Result<EnSolution> {
         let timer = Timer::start();
         let p = prob.p();
         let c = effective_c(prob.lambda2, self.config.c_cap);
-        let solve =
-            with_parallelism(self.config.parallelism, || prepared.solve(prob.t, c, warm))?;
+        let solve = with_parallelism(self.config.parallelism, || {
+            prepared.solve(prob.t, c, warm, scratch)
+        })?;
         let (beta, degenerate) = backmap(&solve.alpha, p, prob.t);
         let seconds = timer.elapsed();
         let objective = prob.objective(&beta);
@@ -112,15 +118,28 @@ impl<B: SvmBackend> Sven<B> {
 
     /// Prepare a dataset once for repeated (t, λ₂) solves. Accepts a bare
     /// `Mat`, a `Csr`, or an existing [`Design`] (see [`AsDesign`]);
-    /// sparse designs are prepared without densifying.
+    /// sparse designs are prepared without densifying. This convenience
+    /// form wraps the data into fresh `Arc`s (one copy at the boundary);
+    /// hot paths holding shared data should call [`Sven::prepare_shared`].
     pub fn prepare(
         &self,
         x: &impl AsDesign,
         y: &[f64],
-    ) -> anyhow::Result<Box<dyn PreparedSvm>> {
-        let design = x.as_design();
+    ) -> anyhow::Result<Arc<dyn SvmPrep>> {
+        let design = Arc::new(x.as_design().into_owned());
+        let y = Arc::new(y.to_vec());
+        self.prepare_shared(&design, &y)
+    }
+
+    /// Zero-copy preparation over already-shared data: the preparation
+    /// holds `Arc` clones of `x`/`y`, never a deep copy.
+    pub fn prepare_shared(
+        &self,
+        x: &Arc<Design>,
+        y: &Arc<Vec<f64>>,
+    ) -> anyhow::Result<Arc<dyn SvmPrep>> {
         with_parallelism(self.config.parallelism, || {
-            self.backend.prepare(&design, y, self.config.mode)
+            self.backend.prepare(x, y, self.config.mode)
         })
     }
 
@@ -338,11 +357,14 @@ mod tests {
         );
         let active: Vec<_> = pts.iter().filter(|pt| pt.nnz > 0).take(5).collect();
         let sven = Sven::new(RustBackend::default());
-        let mut prep = sven.prepare(&x, &y).unwrap();
+        let prep = sven.prepare(&x, &y).unwrap();
+        let mut scratch = SvmScratch::new();
         let mut warm: Option<SvmWarm> = None;
         for pt in active {
             let prob = EnProblem::new(x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-4));
-            let via_prep = sven.solve_prepared(prep.as_mut(), &prob, warm.as_ref()).unwrap();
+            let via_prep = sven
+                .solve_prepared(prep.as_ref(), &mut scratch, &prob, warm.as_ref())
+                .unwrap();
             let oneshot = sven.solve(&prob).unwrap();
             for j in 0..12 {
                 assert!(

@@ -51,20 +51,22 @@ fn service_full_grid_both_datasets() {
         for pt in &grid {
             receivers.push((
                 pt.beta.clone(),
-                service.submit(
-                    id,
-                    x.clone(),
-                    y.clone(),
-                    pt.t,
-                    pt.lambda2.max(1e-6),
-                    BackendChoice::Rust,
-                ),
+                service
+                    .submit_point(
+                        id,
+                        x.clone(),
+                        y.clone(),
+                        pt.t,
+                        pt.lambda2.max(1e-6),
+                        BackendChoice::Rust,
+                    )
+                    .expect("service accepting jobs"),
             ));
         }
     }
     for (beta_ref, rx) in receivers {
         let out = rx.recv().unwrap();
-        let sol = out.result.expect("solve ok");
+        let sol = out.result.expect("solve ok").expect_point();
         let dev = sol
             .beta
             .iter()

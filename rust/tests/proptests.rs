@@ -51,16 +51,19 @@ fn prop_sven_matches_glmnet() {
 #[test]
 fn prop_primal_dual_agree() {
     forall("primal α == dual α", 14, gen_problem, |(x, y, _)| {
-        use sven::solvers::sven::SvmBackend;
+        use std::sync::Arc;
+        use sven::solvers::sven::{SvmBackend, SvmScratch};
         let backend = RustBackend::default();
-        let design: Design = x.clone().into();
-        let mut prim =
-            backend.prepare(&design, y, SvmMode::Primal).map_err(|e| e.to_string())?;
-        let mut dual =
-            backend.prepare(&design, y, SvmMode::Dual).map_err(|e| e.to_string())?;
+        let design: Arc<Design> = Arc::new(x.clone().into());
+        let y = Arc::new(y.clone());
+        let prim =
+            backend.prepare(&design, &y, SvmMode::Primal).map_err(|e| e.to_string())?;
+        let dual =
+            backend.prepare(&design, &y, SvmMode::Dual).map_err(|e| e.to_string())?;
         let (t, c) = (0.7, 4.0);
-        let a = prim.solve(t, c, None).map_err(|e| e.to_string())?.alpha;
-        let b = dual.solve(t, c, None).map_err(|e| e.to_string())?.alpha;
+        let mut scratch = SvmScratch::new();
+        let a = prim.solve(t, c, None, &mut scratch).map_err(|e| e.to_string())?.alpha;
+        let b = dual.solve(t, c, None, &mut scratch).map_err(|e| e.to_string())?.alpha;
         close_vec(&a, &b, 1e-4, "alpha")
     });
 }
@@ -338,12 +341,15 @@ fn prop_parallelism_modes_bit_stable_beta_path() {
             RustBackend::default(),
             SvenConfig { mode, parallelism: par, ..Default::default() },
         );
-        let mut prep = sven.prepare(x, y).expect("prepare");
+        let prep = sven.prepare(x, y).expect("prepare");
+        let mut scratch = sven::solvers::sven::SvmScratch::new();
         let mut warm: Option<SvmWarm> = None;
         let mut betas = Vec::new();
         for t in [0.2, 0.5, 0.9, 1.4] {
             let prob = EnProblem::new(x.clone(), y.to_vec(), t, 0.5);
-            let sol = sven.solve_prepared(prep.as_mut(), &prob, warm.as_ref()).expect("solve");
+            let sol = sven
+                .solve_prepared(prep.as_ref(), &mut scratch, &prob, warm.as_ref())
+                .expect("solve");
             // Real warm state so the warm-seeded solver paths (free-set
             // seeding, K_FF gathers on large free sets) are exercised.
             warm = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(t)) });

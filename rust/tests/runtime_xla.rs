@@ -90,18 +90,14 @@ fn xla_prepared_path_reuse_and_warm_start() {
     let Some(backend) = engine_or_skip() else { return };
     let prob = problem(120, 10, 1773, 0.3).expect("active problem");
     let sven = Sven::new(backend);
-    let mut prep = sven.prepare(&prob.x, &prob.y).expect("prepare");
+    let prep = sven.prepare_shared(&prob.x, &prob.y).expect("prepare");
+    let mut scratch = sven::solvers::sven::SvmScratch::new();
     // three budgets, warm-starting each from the previous α
     let mut warm: Option<sven::solvers::sven::SvmWarm> = None;
     for scale in [0.6, 0.8, 1.0] {
-        let p2 = EnProblem::new(
-            prob.x.clone(),
-            prob.y.clone(),
-            prob.t * scale,
-            prob.lambda2,
-        );
+        let p2 = prob.with_budget(prob.t * scale, prob.lambda2);
         let sol = sven
-            .solve_prepared(prep.as_mut(), &p2, warm.as_ref())
+            .solve_prepared(prep.as_ref(), &mut scratch, &p2, warm.as_ref())
             .expect("prepared solve");
         let oneshot = sven.solve(&p2).expect("oneshot");
         for j in 0..p2.p() {

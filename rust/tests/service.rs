@@ -1,0 +1,201 @@
+//! Coordinator-service acceptance tests for the zero-copy / shared-prep
+//! redesign:
+//!
+//! - K concurrent jobs on one data set build the preparation exactly
+//!   once (single-flight), asserted through the metrics counters.
+//! - Sparse and dense designs of the same problem agree through the
+//!   service.
+//! - A `JobKind::Path` service job reproduces an offline
+//!   `PathRunner::run` **bit-for-bit** (shared `sweep_prepared` core).
+//! - Closed services reject submissions with `ServiceClosed` instead of
+//!   silently dropping them.
+
+use std::sync::Arc;
+use sven::coordinator::{
+    BackendChoice, PathRunner, PathRunnerConfig, PoolConfig, Service, ServiceConfig,
+};
+use sven::data::{synth_regression, SynthSpec};
+use sven::linalg::{Csr, Design};
+use sven::solvers::sven::{RustBackend, Sven};
+
+/// K jobs, one data set, several workers racing on a cold cache: exactly
+/// one preparation build, shared by everyone — the amortization invariant
+/// the whole redesign exists for.
+#[test]
+fn concurrent_same_dataset_jobs_build_prep_once() {
+    // Dual regime with a non-trivial gram so the build takes long enough
+    // for the workers to actually race into the single-flight path.
+    let d = synth_regression(&SynthSpec {
+        n: 600,
+        p: 60,
+        support: 10,
+        seed: 801,
+        ..Default::default()
+    });
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 4, queue_capacity: 32 },
+        ..Default::default()
+    });
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let jobs = 12usize;
+    let rxs: Vec<_> = (0..jobs)
+        .map(|i| {
+            service
+                .submit_point(
+                    42,
+                    x.clone(),
+                    y.clone(),
+                    0.3 + 0.05 * i as f64,
+                    0.5,
+                    BackendChoice::Rust,
+                )
+                .expect("service accepting jobs")
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().result.expect("solve ok");
+    }
+    let m = service.metrics();
+    assert_eq!(m.prep_builds(), 1, "single-flight must dedup the builds");
+    assert_eq!(m.prep_hits(), jobs as u64 - 1);
+    assert_eq!(m.prep_evictions(), 0);
+    assert_eq!(service.prep_cache_len(), 1);
+    assert_eq!(m.completed(), jobs as u64);
+    // Queue-wait metrics are live now: with 12 jobs on 4 workers some job
+    // waited a measurable, non-negative time, and the summary exists.
+    let qw = m.queue_wait_summary().expect("queue waits recorded");
+    assert!(qw.max() >= 0.0);
+    assert_eq!(qw.n(), jobs);
+    service.shutdown();
+}
+
+/// The same synthetic problem served through a dense and a sparse
+/// `Design` must agree — the never-densify path composes with the shared
+/// prep cache (distinct dataset ids ⇒ two builds, no cross-talk).
+#[test]
+fn sparse_and_dense_service_jobs_agree() {
+    let mut rng = sven::rng::Rng::seed_from(802);
+    let dense_mat = sven::linalg::Mat::from_fn(80, 120, |_, _| {
+        if rng.bernoulli(0.15) {
+            rng.normal()
+        } else {
+            0.0
+        }
+    });
+    let y: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 2, queue_capacity: 8 },
+        ..Default::default()
+    });
+    let x_dense = Arc::new(Design::from(dense_mat.clone()));
+    let x_sparse = Arc::new(Design::from(Csr::from_dense(&dense_mat, 0.0)));
+    assert!(x_sparse.is_sparse());
+    let y = Arc::new(y);
+    let (t, lambda2) = (0.8, 0.5);
+    let rx_dense = service
+        .submit_point(1, x_dense, y.clone(), t, lambda2, BackendChoice::Rust)
+        .unwrap();
+    let rx_sparse = service
+        .submit_point(2, x_sparse, y.clone(), t, lambda2, BackendChoice::Rust)
+        .unwrap();
+    let beta_dense = rx_dense.recv().unwrap().result.expect("dense ok").expect_point().beta;
+    let beta_sparse =
+        rx_sparse.recv().unwrap().result.expect("sparse ok").expect_point().beta;
+    assert_eq!(beta_dense.len(), 120);
+    for j in 0..120 {
+        assert!(
+            (beta_dense[j] - beta_sparse[j]).abs() < 1e-5,
+            "j={j}: dense {} vs sparse {}",
+            beta_dense[j],
+            beta_sparse[j]
+        );
+    }
+    assert_eq!(service.metrics().prep_builds(), 2, "two datasets, two builds");
+    service.shutdown();
+}
+
+/// A path submitted as one `JobKind::Path` job must reproduce the
+/// offline `PathRunner::run` coefficient sequence bit-for-bit: both run
+/// the same `sweep_prepared` chaining over the same preparation kind.
+#[test]
+fn path_job_matches_offline_runner_bit_for_bit() {
+    for (n, p, seed) in [(40usize, 60usize, 803u64), (150, 12, 804)] {
+        let d = synth_regression(&SynthSpec {
+            n,
+            p,
+            support: 8.min(p / 2),
+            seed,
+            ..Default::default()
+        });
+        let runner = PathRunner::new(PathRunnerConfig { grid: 8, ..Default::default() });
+        let grid = runner.derive_grid(&d);
+        assert!(!grid.is_empty());
+
+        // offline: prepared reuse + warm starts inside PathRunner::run
+        let sven_solver = Sven::new(RustBackend::default());
+        let offline = runner.run(&d, &sven_solver, &grid).unwrap();
+
+        // service: the same grid as one path job
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 2, queue_capacity: 4 },
+            ..Default::default()
+        });
+        let rx = service
+            .submit_path(
+                9,
+                Arc::new(Design::from(d.x.clone())),
+                Arc::new(d.y.clone()),
+                runner.grid_points(&grid),
+                BackendChoice::Rust,
+            )
+            .unwrap();
+        let served = rx.recv().unwrap().result.expect("path ok").expect_path();
+        service.shutdown();
+
+        assert_eq!(served.len(), offline.len());
+        for (i, (off, srv)) in offline.iter().zip(&served).enumerate() {
+            assert_eq!(off.beta.len(), srv.beta.len());
+            for j in 0..off.beta.len() {
+                assert_eq!(
+                    off.beta[j].to_bits(),
+                    srv.beta[j].to_bits(),
+                    "{n}x{p} point {i} j={j}: offline {} vs served {}",
+                    off.beta[j],
+                    srv.beta[j]
+                );
+            }
+            assert_eq!(off.iterations, srv.iterations, "{n}x{p} point {i}");
+        }
+    }
+}
+
+/// Submissions after `close()` come back as `Err(ServiceClosed)` — the
+/// caller can tell "queued" from "rejected".
+#[test]
+fn closed_service_rejects_submissions() {
+    let d = synth_regression(&SynthSpec {
+        n: 20,
+        p: 10,
+        support: 4,
+        seed: 805,
+        ..Default::default()
+    });
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 1, queue_capacity: 4 },
+        ..Default::default()
+    });
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    // accepted while open
+    let rx = service
+        .submit_point(1, x.clone(), y.clone(), 0.4, 0.5, BackendChoice::Rust)
+        .expect("open service accepts");
+    rx.recv().unwrap().result.expect("solve ok");
+    service.close();
+    let rejected = service.submit_point(1, x, y, 0.4, 0.5, BackendChoice::Rust);
+    assert!(rejected.is_err(), "closed service must reject");
+    assert_eq!(service.metrics().rejected(), 1);
+    assert_eq!(service.metrics().submitted(), 1);
+    service.shutdown();
+}

@@ -50,6 +50,19 @@ fn main() {
         );
     }
 
+    // Path-engine micro-bench: fused multi-RHS panels vs repeated GEMVs,
+    // gathered (shrinking) vs masked primal Newton, and segmented vs
+    // single-worker path sweeps (asserts segment bit-identity even in
+    // smoke mode).
+    let (sp_panel, sp_newton, sp_seg) = sven::bench::figures::path_micro(!smoke);
+    if !smoke {
+        println!(
+            "path engine speedups: multi-RHS panel {sp_panel:.1}x, gathered newton \
+             {sp_newton:.1}x, segmented sweep {sp_seg:.1}x (acceptance: segmented > 1x \
+             on >= 4 threads; gathered > 1x at sv-frac < 0.5)"
+        );
+    }
+
     let (warm, reps) = if smoke { (1, 2) } else { (2, 10) };
 
     // gemm through the Mat facade (includes dispatch + allocation)

@@ -361,6 +361,194 @@ pub fn service_micro(full: bool) -> (f64, f64) {
 }
 
 // ---------------------------------------------------------------------------
+// Path-engine micro-bench (multi-RHS panels / gathered Newton / segments)
+// ---------------------------------------------------------------------------
+
+/// Path-engine micro-bench, three comparisons:
+///
+/// 1. banded GEMV × r right-hand sides vs one fused multi-RHS panel
+///    product (`Mat::matvec_multi_into`) at panel widths 2/4/8;
+/// 2. masked full-matrix primal Newton vs the active-set (shrinking)
+///    Newton on a low-SV-fraction problem;
+/// 3. one `JobKind::Path` sweep on a single worker vs the same grid
+///    split into chained segments across 4 workers (speculative warm
+///    starts) — with a bit-for-bit identity check between the two.
+///
+/// `full` runs the acceptance shapes; otherwise tiny CI-smoke shapes.
+/// Returns the (panel, gathered-Newton, segmented-sweep) speedups.
+pub fn path_micro(full: bool) -> (f64, f64, f64) {
+    use super::harness::measure;
+    use crate::coordinator::{BackendChoice, PoolConfig, Service, ServiceConfig};
+    use crate::linalg::{Mat, MultiVec};
+    use crate::solvers::svm::{primal_newton, DenseSamples, PrimalOptions, SampleSet};
+    use crate::util::parallel::{self, Parallelism};
+    use std::sync::Arc;
+
+    let nt = parallel::effective_threads();
+    let reps = if full { 5 } else { 2 };
+    println!("=== path micro: multi-RHS / gathered Newton / segmented sweeps (nt = {nt}) ===");
+    let mut rng = crate::rng::Rng::seed_from(7171);
+
+    // --- 1) r single GEMVs vs one fused panel product ---
+    let (gm, gk) = if full { (4096usize, 1024usize) } else { (600, 160) };
+    let a = Mat::from_fn(gm, gk, |_, _| rng.normal());
+    let mut panel_speedup = 0.0f64;
+    for r in [2usize, 4, 8] {
+        let xs = MultiVec::from_fn(gk, r, |_, _| rng.normal());
+        let mut single_out = vec![0.0; gm];
+        let t_single = measure(1, reps, || {
+            for j in 0..r {
+                a.matvec_into(xs.col(j), &mut single_out);
+            }
+        })
+        .summary
+        .median();
+        let mut ys = MultiVec::zeros(gm, r);
+        let t_multi =
+            measure(1, reps, || a.matvec_multi_into(&xs, &mut ys)).summary.median();
+        let speedup = t_single / t_multi;
+        panel_speedup = panel_speedup.max(speedup);
+        println!(
+            "gemv {gm}x{gk} r={r}: {r} GEMVs {:.3}ms | fused panel {:.3}ms ({:.2}x)",
+            t_single * 1e3,
+            t_multi * 1e3,
+            speedup
+        );
+    }
+
+    // --- 2) masked vs gathered (shrinking) primal Newton ---
+    // Two well-separated blobs: most samples end up outside the margin,
+    // so the SV fraction is small and the gathered panel is tiny.
+    let (sm_half, sd) = if full { (2000usize, 300usize) } else { (150, 40) };
+    let mut x = Mat::zeros(2 * sm_half, sd);
+    let mut y = vec![0.0; 2 * sm_half];
+    for i in 0..2 * sm_half {
+        let cls = if i < sm_half { 1.0 } else { -1.0 };
+        y[i] = cls;
+        for j in 0..sd {
+            let center = if j == 0 { cls * 2.0 } else { 0.0 };
+            x.set(i, j, center + 0.3 * rng.normal());
+        }
+    }
+    let samples = DenseSamples { x };
+    let c = 1.0;
+    let masked_opts = PrimalOptions { shrink: false, ..Default::default() };
+    let gathered_opts = PrimalOptions::default();
+    let t_masked = measure(1, reps, || {
+        primal_newton(&samples, &y, c, &masked_opts, None)
+    })
+    .summary
+    .median();
+    let t_gathered = measure(1, reps, || {
+        primal_newton(&samples, &y, c, &gathered_opts, None)
+    })
+    .summary
+    .median();
+    let probe = primal_newton(&samples, &y, c, &gathered_opts, None);
+    let sv_count = probe.alpha.iter().filter(|a| **a > 0.0).count();
+    let sv_frac = sv_count as f64 / samples.m() as f64;
+    let newton_speedup = t_masked / t_gathered;
+    println!(
+        "primal newton m={} d={sd} (sv-frac {:.2}, {} gathers): masked {:.2}ms | \
+         gathered {:.2}ms ({:.2}x)",
+        samples.m(),
+        sv_frac,
+        probe.gather_rebuilds,
+        t_masked * 1e3,
+        t_gathered * 1e3,
+        newton_speedup
+    );
+
+    // --- 3) single-worker sweep vs segmented sweep across 4 workers ---
+    // Dual regime (n >> p): preparation is shared through the cache, the
+    // per-point dual solves are the serial chain being split. Kernel
+    // parallelism is pinned to 1 thread per worker so the comparison
+    // isolates the segmentation win.
+    let (pn, pp, grid_n) = if full { (1500usize, 48usize, 24) } else { (150, 10, 6) };
+    let data = crate::data::synth_regression(&crate::data::SynthSpec {
+        name: format!("path-{pn}x{pp}"),
+        n: pn,
+        p: pp,
+        support: (pp / 5).max(3),
+        seed: 7272,
+        ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig {
+        grid: grid_n,
+        path: PathSettings { num_lambda: 60, ..Default::default() },
+        ..Default::default()
+    });
+    let grid = runner.derive_grid(&data);
+    if grid.len() < 4 {
+        println!("grid too small ({} points), skipping segment comparison", grid.len());
+        return (panel_speedup, newton_speedup, f64::NAN);
+    }
+    let points = runner.grid_points(&grid);
+    let x = Arc::new(crate::linalg::Design::from(data.x.clone()));
+    let yv = Arc::new(data.y.clone());
+    let serve = |workers: usize, segment_min: usize| -> (f64, Vec<Vec<f64>>) {
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers, queue_capacity: 32 },
+            sven: crate::solvers::sven::SvenConfig {
+                parallelism: Parallelism::Fixed(1),
+                ..Default::default()
+            },
+            path_segment_min: segment_min,
+            ..Default::default()
+        });
+        // warm the prep cache so both sides time the sweep, not the build
+        let rx = service
+            .submit_point(
+                1,
+                x.clone(),
+                yv.clone(),
+                points[0].t,
+                points[0].lambda2,
+                BackendChoice::Rust,
+            )
+            .expect("accepting");
+        rx.recv().unwrap().result.expect("warm prep");
+        let timer = Timer::start();
+        let mut betas = Vec::new();
+        for _ in 0..reps {
+            let rx = service
+                .submit_path(1, x.clone(), yv.clone(), points.clone(), BackendChoice::Rust)
+                .expect("accepting");
+            let sols = rx.recv().unwrap().result.expect("path").expect_path();
+            betas = sols.into_iter().map(|s| s.beta).collect();
+        }
+        let secs = timer.elapsed() / reps as f64;
+        service.shutdown();
+        (secs, betas)
+    };
+    let (t_single, betas_single) = serve(1, usize::MAX);
+    let seg_min = (points.len() / 4).max(2);
+    let (t_seg, betas_seg) = serve(4, seg_min);
+    // Segmentation must not move a single bit (the tests pin this too;
+    // the bench re-checks it at the bench shape).
+    assert_eq!(betas_single.len(), betas_seg.len());
+    for (i, (a, b)) in betas_single.iter().zip(&betas_seg).enumerate() {
+        for j in 0..a.len() {
+            assert_eq!(
+                a[j].to_bits(),
+                b[j].to_bits(),
+                "segmented sweep diverged at point {i} j={j}"
+            );
+        }
+    }
+    let seg_speedup = t_single / t_seg;
+    println!(
+        "path sweep {} points ({pn}x{pp}, dual): 1 worker {:.2}ms | 4 workers segmented \
+         {:.2}ms ({:.2}x, bit-identical)",
+        points.len(),
+        t_single * 1e3,
+        t_seg * 1e3,
+        seg_speedup
+    );
+    (panel_speedup, newton_speedup, seg_speedup)
+}
+
+// ---------------------------------------------------------------------------
 // Figure 1
 // ---------------------------------------------------------------------------
 

@@ -16,6 +16,9 @@ pub struct Metrics {
     prep_hits: AtomicU64,
     prep_builds: AtomicU64,
     prep_evictions: AtomicU64,
+    path_segments: AtomicU64,
+    sv_gather_rebuilds: AtomicU64,
+    cg_iters_total: AtomicU64,
     latencies: Mutex<Vec<f64>>,
     queue_waits: Mutex<Vec<f64>>,
 }
@@ -63,6 +66,23 @@ impl Metrics {
         self.prep_evictions.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A worker picked up one segment of a split `Path` grid.
+    pub fn on_path_segment(&self) {
+        self.path_segments.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-solve counters reported by the SVM backends: inner-CG
+    /// iterations and active-set panel rebuilds (accumulated across the
+    /// solves of each job).
+    pub fn on_solve_stats(&self, cg_iters: usize, gather_rebuilds: usize) {
+        if cg_iters > 0 {
+            self.cg_iters_total.fetch_add(cg_iters as u64, Ordering::Relaxed);
+        }
+        if gather_rebuilds > 0 {
+            self.sv_gather_rebuilds.fetch_add(gather_rebuilds as u64, Ordering::Relaxed);
+        }
+    }
+
     pub fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
     }
@@ -89,6 +109,18 @@ impl Metrics {
 
     pub fn prep_evictions(&self) -> u64 {
         self.prep_evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn path_segments(&self) -> u64 {
+        self.path_segments.load(Ordering::Relaxed)
+    }
+
+    pub fn sv_gather_rebuilds(&self) -> u64 {
+        self.sv_gather_rebuilds.load(Ordering::Relaxed)
+    }
+
+    pub fn cg_iters_total(&self) -> u64 {
+        self.cg_iters_total.load(Ordering::Relaxed)
     }
 
     /// End-to-end latency summary (None until something completed).
@@ -136,14 +168,18 @@ impl Metrics {
             .unwrap_or_default();
         format!(
             "submitted={} completed={} failed={} rejected={} \
-             prep_hits={} prep_builds={} prep_evictions={} {lat}{qw}",
+             prep_hits={} prep_builds={} prep_evictions={} \
+             path_segments={} sv_gather_rebuilds={} cg_iters_total={} {lat}{qw}",
             self.submitted(),
             self.completed(),
             self.failed(),
             self.rejected(),
             self.prep_hits(),
             self.prep_builds(),
-            self.prep_evictions()
+            self.prep_evictions(),
+            self.path_segments(),
+            self.sv_gather_rebuilds(),
+            self.cg_iters_total()
         )
     }
 }
@@ -188,6 +224,23 @@ mod tests {
         assert!(report.contains("prep_hits=2"));
         assert!(report.contains("prep_builds=1"));
         assert!(report.contains("prep_evictions=1"));
+    }
+
+    #[test]
+    fn path_engine_counters() {
+        let m = Metrics::new();
+        m.on_path_segment();
+        m.on_path_segment();
+        m.on_solve_stats(17, 2);
+        m.on_solve_stats(0, 0); // no-ops must not underflow or count
+        m.on_solve_stats(3, 1);
+        assert_eq!(m.path_segments(), 2);
+        assert_eq!(m.cg_iters_total(), 20);
+        assert_eq!(m.sv_gather_rebuilds(), 3);
+        let report = m.report();
+        assert!(report.contains("path_segments=2"));
+        assert!(report.contains("cg_iters_total=20"));
+        assert!(report.contains("sv_gather_rebuilds=3"));
     }
 
     #[test]

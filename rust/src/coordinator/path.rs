@@ -32,9 +32,15 @@ pub struct GridPoint {
 /// β. This is *the* amortized access pattern of the paper (Figures 1–3):
 /// one preparation, many cheap (t, λ₂) solves.
 ///
+/// `warm0` seeds the *first* point: `None` for a whole-path sweep (the
+/// offline runner and unsegmented service jobs), or the handed-off warm
+/// start of the previous segment when the coordinator splits one long
+/// grid into chained segments.
+///
 /// Both the offline [`PathRunner::run`] and the coordinator's
-/// `JobKind::Path` worker call exactly this function, so the two produce
-/// bit-identical coefficient sequences.
+/// `JobKind::Path` workers call exactly this function, so the two
+/// produce bit-identical coefficient sequences.
+#[allow(clippy::too_many_arguments)]
 pub fn sweep_prepared<B: SvmBackend>(
     sven: &Sven<B>,
     prep: &dyn SvmPrep,
@@ -42,10 +48,11 @@ pub fn sweep_prepared<B: SvmBackend>(
     x: &Arc<Design>,
     y: &Arc<Vec<f64>>,
     grid: &[GridPoint],
+    warm0: Option<SvmWarm>,
     warm_start: bool,
 ) -> anyhow::Result<Vec<EnSolution>> {
     let mut out = Vec::with_capacity(grid.len());
-    let mut warm: Option<SvmWarm> = None;
+    let mut warm: Option<SvmWarm> = warm0;
     for gp in grid {
         let prob = EnProblem::shared(x.clone(), y.clone(), gp.t, gp.lambda2);
         let sol = sven.solve_prepared(prep, scratch, &prob, warm.as_ref())?;
@@ -151,6 +158,7 @@ impl PathRunner {
             &x,
             &y,
             &points,
+            None,
             self.config.warm_start,
         )?;
         Ok(grid

@@ -17,10 +17,11 @@ use super::pool::{Pool, PoolConfig};
 use super::prep_cache::PrepCache;
 use crate::linalg::Design;
 use crate::solvers::elastic_net::{EnProblem, EnSolution};
-use crate::solvers::sven::{RustBackend, Sven, SvenConfig, SvmPrep, SvmScratch};
+use crate::solvers::sven::{RustBackend, Sven, SvenConfig, SvmPrep, SvmScratch, SvmWarm};
 use crate::util::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Which solver a job should use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -38,12 +39,16 @@ pub enum BackendChoice {
 pub enum JobKind {
     /// One constrained-form solve.
     Point { t: f64, lambda2: f64 },
-    /// A warm-start chained sweep over the grid, solved in order on one
-    /// worker against the shared preparation. Matches an offline
-    /// [`PathRunner::run`](super::path::PathRunner::run) bit-for-bit
-    /// when the runner keeps its default `warm_start: true` (path jobs
-    /// always chain warm starts — that's the amortization they exist
-    /// for; a cold-start sweep is just a sequence of `Point` jobs).
+    /// A warm-start chained sweep over the grid against the shared
+    /// preparation. Short grids run in order on one worker; long grids
+    /// are split into chained segments across the pool
+    /// (`ServiceConfig::path_segment_min`) with speculative warm starts
+    /// handed across segment boundaries. Either way the result matches
+    /// an offline [`PathRunner::run`](super::path::PathRunner::run)
+    /// bit-for-bit when the runner keeps its default `warm_start: true`
+    /// (path jobs always chain warm starts — that's the amortization
+    /// they exist for; a cold-start sweep is just a sequence of `Point`
+    /// jobs).
     Path { grid: Vec<GridPoint> },
 }
 
@@ -123,6 +128,12 @@ pub struct ServiceConfig {
     pub artifact_dir: Option<std::path::PathBuf>,
     /// Max ready preparations in the shared cache (LRU beyond this).
     pub prep_cache_capacity: usize,
+    /// Minimum grid points per segment when splitting one long
+    /// `JobKind::Path` grid across pool workers (the segmented path
+    /// engine). A grid splits into `min(workers, len / min)` segments,
+    /// so grids shorter than `2·min` — and every grid on a one-worker
+    /// pool — run unsegmented. `usize::MAX` disables segmentation.
+    pub path_segment_min: usize,
 }
 
 impl Default for ServiceConfig {
@@ -132,12 +143,142 @@ impl Default for ServiceConfig {
             sven: SvenConfig::default(),
             artifact_dir: None,
             prep_cache_capacity: 16,
+            path_segment_min: 8,
         }
     }
 }
 
 /// Cache key: one preparation per (data set, backend).
 type PrepKey = (u64, BackendChoice);
+
+/// Parameter validation shared by the workers and the segmenting submit
+/// path: bad jobs must become failed outcomes — never a worker panic,
+/// and never a late segment failure after earlier segments burned whole
+/// sweeps. `points` is every (t, λ₂) that will be solved.
+fn validate_job(x: &Design, y: &[f64], points: &[GridPoint]) -> Result<(), String> {
+    if x.rows() != y.len() {
+        return Err(format!(
+            "invalid job: X has {} rows but y has {} entries",
+            x.rows(),
+            y.len()
+        ));
+    }
+    for gp in points {
+        if gp.t.is_nan() || gp.t <= 0.0 {
+            return Err(format!("invalid job: t must be positive, got {}", gp.t));
+        }
+        if gp.lambda2.is_nan() || gp.lambda2 < 0.0 {
+            return Err(format!(
+                "invalid job: lambda2 must be non-negative, got {}",
+                gp.lambda2
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// What actually travels through the worker pool: a whole job, or one
+/// segment of a split `Path` grid.
+enum WorkItem {
+    Job(SolveJob),
+    Segment(PathSegment),
+}
+
+/// One segment of a segmented path job: the half-open grid range
+/// `[start, end)` plus a handle on the job-wide shared state.
+struct PathSegment {
+    shared: Arc<SegmentedPath>,
+    index: usize,
+    start: usize,
+    end: usize,
+}
+
+/// Shared state of a `Path` job split into chained segments.
+///
+/// Every segment solves its slice of the grid independently; a segment
+/// with `start > 0` first re-solves the previous segment's endpoint
+/// (`grid[start-1]`) cold and hands its β to its own first point as the
+/// warm start — the *speculative warm start*. The result is bit-for-bit
+/// the sequential chain's because the SVM solves are warm-start-
+/// invariant in their final iterate: the primal ignores dual warm starts
+/// entirely, and the dual active-set Newton's last iterate is the exact
+/// Cholesky solve on the final free set, which the warm start can reach
+/// faster but (non-degeneracy aside) cannot change. The duplicated
+/// endpoint solve is the price of cutting the chain: one extra point per
+/// segment, against a ~`segments`-fold wall-clock win on the sweep. The
+/// `tests/service.rs` bit-for-bit gate pins the equivalence at 1/2/8
+/// workers in both SVM regimes.
+struct SegmentedPath {
+    id: u64,
+    dataset_id: u64,
+    x: Arc<Design>,
+    y: Arc<Vec<f64>>,
+    backend: BackendChoice,
+    grid: Vec<GridPoint>,
+    /// Reply channel (mutex-wrapped: only the assembling segment sends,
+    /// but `Sender` offers no `Sync` guarantee we can rely on here).
+    reply: Mutex<Sender<SolveOutcome>>,
+    submitted: Timer,
+    /// Per-segment results, in segment order.
+    parts: Mutex<Vec<Option<Result<Vec<EnSolution>, String>>>>,
+    /// Segments still outstanding; the worker that drops this to zero
+    /// assembles and replies.
+    remaining: AtomicUsize,
+    /// Earliest submit→pickup wait across segments (the job's effective
+    /// queue wait).
+    first_pickup: Mutex<Option<f64>>,
+}
+
+impl SegmentedPath {
+    /// Record a segment result; the last segment to land assembles the
+    /// grid-ordered solution vector and sends the outcome.
+    fn finish_segment(
+        &self,
+        index: usize,
+        result: Result<Vec<EnSolution>, String>,
+        metrics: &Metrics,
+    ) {
+        {
+            let mut parts = self.parts.lock().unwrap();
+            parts[index] = Some(result);
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+            return;
+        }
+        let total = self.submitted.elapsed();
+        let queue_wait = self.first_pickup.lock().unwrap().unwrap_or(0.0);
+        let parts = self.parts.lock().unwrap();
+        let mut all = Vec::with_capacity(self.grid.len());
+        let mut err: Option<String> = None;
+        for part in parts.iter() {
+            match part {
+                Some(Ok(sols)) => all.extend(sols.iter().cloned()),
+                Some(Err(e)) => {
+                    err = Some(e.clone());
+                    break;
+                }
+                None => {
+                    err = Some("internal: path segment lost".to_string());
+                    break;
+                }
+            }
+        }
+        let result = match err {
+            None => Ok(JobResult::Path(all)),
+            Some(e) => Err(e),
+        };
+        match &result {
+            Ok(_) => metrics.on_complete(total, queue_wait),
+            Err(_) => metrics.on_fail(queue_wait),
+        }
+        let _ = self.reply.lock().unwrap().send(SolveOutcome {
+            id: self.id,
+            result,
+            total_seconds: total,
+            queue_wait_seconds: queue_wait,
+        });
+    }
+}
 
 /// Per-worker solver context: one rust backend, one lazy XLA backend, a
 /// per-thread scratch, and a handle on the service-wide shared
@@ -213,72 +354,76 @@ impl WorkerCtx {
         });
     }
 
-    /// Fetch (or single-flight build) the shared preparation for a job.
-    fn prep_for(&mut self, job: &SolveJob) -> Result<Arc<dyn SvmPrep>, String> {
-        if job.backend == BackendChoice::Xla {
+    /// Fetch (or single-flight build) the shared preparation for a
+    /// (data set, backend) pair.
+    fn prep_for(
+        &mut self,
+        dataset_id: u64,
+        backend: BackendChoice,
+        x: &Arc<Design>,
+        y: &Arc<Vec<f64>>,
+    ) -> Result<Arc<dyn SvmPrep>, String> {
+        if backend == BackendChoice::Xla {
             self.ensure_xla()?;
         }
-        let key = (job.dataset_id, job.backend);
+        let key = (dataset_id, backend);
         let rust = &self.rust;
         let xla = &self.xla;
-        self.preps.get_or_build(key, || match job.backend {
-            BackendChoice::Rust => {
-                rust.prepare_shared(&job.x, &job.y).map_err(|e| e.to_string())
+        self.preps.get_or_build(key, || match backend {
+            BackendChoice::Rust => rust.prepare_shared(x, y).map_err(|e| e.to_string()),
+            BackendChoice::Xla => {
+                xla.as_ref().unwrap().prepare_shared(x, y).map_err(|e| e.to_string())
             }
-            BackendChoice::Xla => xla
-                .as_ref()
-                .unwrap()
-                .prepare_shared(&job.x, &job.y)
-                .map_err(|e| e.to_string()),
         })
     }
 
-    fn solve(&mut self, job: &SolveJob) -> Result<JobResult, String> {
-        // Validate up front so bad parameters become a failed outcome,
-        // not a worker-thread panic inside `EnProblem`'s (or the linalg
-        // kernels') asserts.
-        if job.x.rows() != job.y.len() {
-            return Err(format!(
-                "invalid job: X has {} rows but y has {} entries",
-                job.x.rows(),
-                job.y.len()
-            ));
-        }
-        let check = |t: f64, lambda2: f64| -> Result<(), String> {
-            if t.is_nan() || t <= 0.0 {
-                return Err(format!("invalid job: t must be positive, got {t}"));
-            }
-            if lambda2.is_nan() || lambda2 < 0.0 {
-                return Err(format!(
-                    "invalid job: lambda2 must be non-negative, got {lambda2}"
-                ));
-            }
-            Ok(())
-        };
-        match &job.kind {
-            JobKind::Point { t, lambda2 } => check(*t, *lambda2),
-            JobKind::Path { grid } => grid
-                .iter()
-                .try_for_each(|gp| check(gp.t, gp.lambda2)),
-        }?;
-        let prep = self.prep_for(job)?;
+    /// Shared validation + prep fetch: bad parameters become a failed
+    /// outcome, not a worker-thread panic inside `EnProblem`'s (or the
+    /// linalg kernels') asserts. `points` is every (t, λ₂) the caller
+    /// will solve against the preparation.
+    fn checked_prep(
+        &mut self,
+        dataset_id: u64,
+        backend: BackendChoice,
+        x: &Arc<Design>,
+        y: &Arc<Vec<f64>>,
+        points: &[GridPoint],
+    ) -> Result<Arc<dyn SvmPrep>, String> {
+        validate_job(x, y, points)?;
+        let prep = self.prep_for(dataset_id, backend, x, y)?;
         // `dataset_id` is the caller's promise that the data is the same;
         // a reused id with a differently-shaped design would otherwise
         // drive the cached preparation into kernel index asserts (or,
         // worse, silently solve against the wrong matrix). Catch the
         // detectable half of that misuse here.
         let dims = prep.dims();
-        if dims != (job.x.rows(), job.x.cols()) {
+        if dims != (x.rows(), x.cols()) {
             return Err(format!(
                 "invalid job: dataset_id {} was prepared as {}×{} but this job's \
                  design is {}×{} — dataset ids must identify one data set",
-                job.dataset_id,
+                dataset_id,
                 dims.0,
                 dims.1,
-                job.x.rows(),
-                job.x.cols()
+                x.rows(),
+                x.cols()
             ));
         }
+        Ok(prep)
+    }
+
+    fn solve(&mut self, job: &SolveJob) -> Result<JobResult, String> {
+        let prep = match &job.kind {
+            JobKind::Point { t, lambda2 } => self.checked_prep(
+                job.dataset_id,
+                job.backend,
+                &job.x,
+                &job.y,
+                &[GridPoint { t: *t, lambda2: *lambda2 }],
+            ),
+            JobKind::Path { grid } => {
+                self.checked_prep(job.dataset_id, job.backend, &job.x, &job.y, grid)
+            }
+        }?;
         match &job.kind {
             JobKind::Point { t, lambda2 } => {
                 let prob = EnProblem::shared(job.x.clone(), job.y.clone(), *t, *lambda2);
@@ -297,6 +442,7 @@ impl WorkerCtx {
                     ),
                 }
                 .map_err(|e| e.to_string())?;
+                self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
                 Ok(JobResult::Point(sol))
             }
             JobKind::Path { grid } => {
@@ -308,6 +454,7 @@ impl WorkerCtx {
                         &job.x,
                         &job.y,
                         grid,
+                        None,
                         true,
                     ),
                     BackendChoice::Xla => sweep_prepared(
@@ -317,22 +464,107 @@ impl WorkerCtx {
                         &job.x,
                         &job.y,
                         grid,
+                        None,
                         true,
                     ),
                 }
                 .map_err(|e| e.to_string())?;
+                for sol in &sols {
+                    self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+                }
                 Ok(JobResult::Path(sols))
             }
         }
+    }
+
+    /// Run one segment of a split path job: speculative warm start from
+    /// the previous segment's endpoint, then the usual chained sweep over
+    /// this segment's slice.
+    fn handle_segment(&mut self, seg: PathSegment) {
+        let sp = seg.shared.clone();
+        {
+            let wait = sp.submitted.elapsed();
+            let mut fp = sp.first_pickup.lock().unwrap();
+            *fp = Some(fp.map_or(wait, |v| v.min(wait)));
+        }
+        self.metrics.on_path_segment();
+        let result = self.solve_segment(&seg);
+        sp.finish_segment(seg.index, result, &self.metrics);
+    }
+
+    fn solve_segment(&mut self, seg: &PathSegment) -> Result<Vec<EnSolution>, String> {
+        let sp = seg.shared.as_ref();
+        // Validate this segment's slice *plus* the speculative endpoint.
+        let lo = seg.start.saturating_sub(1);
+        let prep = self.checked_prep(
+            sp.dataset_id,
+            sp.backend,
+            &sp.x,
+            &sp.y,
+            &sp.grid[lo..seg.end],
+        )?;
+        // Speculative warm start: re-solve the previous segment's
+        // endpoint cold; its β is bit-identical to the chained solve's
+        // (see the `SegmentedPath` invariant), so handing it to our first
+        // point reproduces the sequential chain exactly.
+        let mut warm0: Option<SvmWarm> = None;
+        if seg.start > 0 {
+            let gp = sp.grid[seg.start - 1];
+            let prob = EnProblem::shared(sp.x.clone(), sp.y.clone(), gp.t, gp.lambda2);
+            let sol = match sp.backend {
+                BackendChoice::Rust => {
+                    self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
+                }
+                BackendChoice::Xla => self.xla.as_ref().unwrap().solve_prepared(
+                    prep.as_ref(),
+                    &mut self.scratch,
+                    &prob,
+                    None,
+                ),
+            }
+            .map_err(|e| e.to_string())?;
+            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+            warm0 = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+        }
+        let slice = &sp.grid[seg.start..seg.end];
+        let sols = match sp.backend {
+            BackendChoice::Rust => sweep_prepared(
+                &self.rust,
+                prep.as_ref(),
+                &mut self.scratch,
+                &sp.x,
+                &sp.y,
+                slice,
+                warm0,
+                true,
+            ),
+            BackendChoice::Xla => sweep_prepared(
+                self.xla.as_ref().unwrap(),
+                prep.as_ref(),
+                &mut self.scratch,
+                &sp.x,
+                &sp.y,
+                slice,
+                warm0,
+                true,
+            ),
+        }
+        .map_err(|e| e.to_string())?;
+        for sol in &sols {
+            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+        }
+        Ok(sols)
     }
 }
 
 /// The coordinator service.
 pub struct Service {
-    pool: Pool<SolveJob>,
+    pool: Pool<WorkItem>,
     metrics: Arc<Metrics>,
     preps: Arc<PrepCache<PrepKey>>,
     next_id: std::sync::atomic::AtomicU64,
+    workers: usize,
+    path_segment_min: usize,
 }
 
 impl Service {
@@ -342,6 +574,8 @@ impl Service {
         let preps = Arc::new(PrepCache::new(config.prep_cache_capacity, metrics.clone()));
         let metrics_for_workers = metrics.clone();
         let preps_for_workers = preps.clone();
+        let workers = config.pool.workers.max(1);
+        let path_segment_min = config.path_segment_min.max(1);
         let cfg = config.clone();
         let pool = Pool::spawn(
             &config.pool,
@@ -352,19 +586,37 @@ impl Service {
                     metrics_for_workers.clone(),
                 )
             },
-            |ctx: &mut WorkerCtx, job: SolveJob| ctx.handle(job),
+            |ctx: &mut WorkerCtx, item: WorkItem| match item {
+                WorkItem::Job(job) => ctx.handle(job),
+                WorkItem::Segment(seg) => ctx.handle_segment(seg),
+            },
         );
         Service {
             pool,
             metrics,
             preps,
             next_id: std::sync::atomic::AtomicU64::new(0),
+            workers,
+            path_segment_min,
         }
+    }
+
+    /// How many segments a path grid of `len` points splits into.
+    fn segments_for(&self, len: usize) -> usize {
+        if self.workers <= 1 || self.path_segment_min == usize::MAX {
+            return 1;
+        }
+        self.workers.min(len / self.path_segment_min).max(1)
     }
 
     /// Submit a job; the outcome arrives on the returned receiver.
     /// `Err(ServiceClosed)` when the service no longer accepts work, so
     /// callers can tell "queued" from "rejected".
+    ///
+    /// Long `Path` grids are split into `min(workers, len /
+    /// path_segment_min)` chained segments dispatched across the pool
+    /// (speculative warm starts keep the result bit-for-bit identical to
+    /// the single-worker sweep); everything else ships as one work item.
     pub fn submit(
         &self,
         dataset_id: u64,
@@ -377,6 +629,20 @@ impl Service {
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Reclaim ownership of the grid so segmentation moves it into the
+        // shared state instead of deep-copying a possibly huge Vec.
+        let kind = match kind {
+            JobKind::Path { grid } => {
+                let nseg = self.segments_for(grid.len());
+                if nseg > 1 {
+                    return self
+                        .submit_segmented(id, dataset_id, x, y, grid, backend, tx, nseg)
+                        .map(|()| rx);
+                }
+                JobKind::Path { grid }
+            }
+            point => point,
+        };
         let job = SolveJob {
             id,
             dataset_id,
@@ -387,7 +653,7 @@ impl Service {
             reply: tx,
             submitted: Timer::start(),
         };
-        match self.pool.submit(job) {
+        match self.pool.submit(WorkItem::Job(job)) {
             Ok(()) => {
                 self.metrics.on_submit();
                 Ok(rx)
@@ -397,6 +663,83 @@ impl Service {
                 Err(ServiceClosed)
             }
         }
+    }
+
+    /// Enqueue a path job as `nseg` contiguous segments. The first
+    /// rejected segment (service closing concurrently) is recorded as a
+    /// failed part so the assembly still completes — with an error — once
+    /// the already-queued segments drain.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_segmented(
+        &self,
+        id: u64,
+        dataset_id: u64,
+        x: Arc<Design>,
+        y: Arc<Vec<f64>>,
+        grid: Vec<GridPoint>,
+        backend: BackendChoice,
+        reply: Sender<SolveOutcome>,
+        nseg: usize,
+    ) -> Result<(), ServiceClosed> {
+        // Fail fast on bad parameters: the unsegmented path validates the
+        // whole grid before solving anything, so the segmented path must
+        // not let an invalid late point waste full sweeps of the earlier
+        // segments. Same accepted-then-failed semantics as a worker-side
+        // rejection.
+        if let Err(e) = validate_job(&x, &y, &grid) {
+            self.metrics.on_submit();
+            self.metrics.on_fail(0.0);
+            let _ = reply.send(SolveOutcome {
+                id,
+                result: Err(e),
+                total_seconds: 0.0,
+                queue_wait_seconds: 0.0,
+            });
+            return Ok(());
+        }
+        let len = grid.len();
+        let shared = Arc::new(SegmentedPath {
+            id,
+            dataset_id,
+            x,
+            y,
+            backend,
+            grid,
+            reply: Mutex::new(reply),
+            submitted: Timer::start(),
+            parts: Mutex::new((0..nseg).map(|_| None).collect()),
+            remaining: AtomicUsize::new(nseg),
+            first_pickup: Mutex::new(None),
+        });
+        // Contiguous ranges, sized as evenly as integer division allows.
+        let base = len / nseg;
+        let extra = len % nseg;
+        let mut start = 0usize;
+        for index in 0..nseg {
+            let size = base + usize::from(index < extra);
+            let end = start + size;
+            let seg = PathSegment { shared: shared.clone(), index, start, end };
+            start = end;
+            if self.pool.submit(WorkItem::Segment(seg)).is_err() {
+                if index == 0 {
+                    // Nothing queued: a plain rejection.
+                    self.metrics.on_reject();
+                    return Err(ServiceClosed);
+                }
+                // Closed mid-submit: fail this and every later segment so
+                // the already-queued ones still assemble (to an error).
+                for later in index..nseg {
+                    shared.finish_segment(
+                        later,
+                        Err(ServiceClosed.to_string()),
+                        &self.metrics,
+                    );
+                }
+                break;
+            }
+        }
+        self.metrics.on_submit();
+        Ok(())
     }
 
     /// Convenience: submit a single (t, λ₂) solve.

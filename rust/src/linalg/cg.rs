@@ -43,9 +43,53 @@ pub struct CgOutcome {
     pub converged: bool,
 }
 
+/// Reusable CG workspace: the five work vectors (`r`, `ax`, `z`, `p`,
+/// `ap`) that [`cg_solve`] would otherwise allocate on every call. Hot
+/// callers (the primal Newton's per-iteration CG, the L1_LS
+/// interior-point loop) hold one scratch for the whole outer loop, so the
+/// inner solves allocate nothing.
+#[derive(Clone, Debug, Default)]
+pub struct CgScratch {
+    r: Vec<f64>,
+    ax: Vec<f64>,
+    z: Vec<f64>,
+    p: Vec<f64>,
+    ap: Vec<f64>,
+}
+
+impl CgScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size every buffer to `n` and zero it, so a reused scratch starts
+    /// every solve from exactly the state a fresh allocation would —
+    /// reuse can never change result bits.
+    fn resize(&mut self, n: usize) {
+        for buf in [&mut self.r, &mut self.ax, &mut self.z, &mut self.p, &mut self.ap] {
+            buf.clear();
+            buf.resize(n, 0.0);
+        }
+    }
+}
+
 /// Preconditioned conjugate gradients: solves `A·x = b`, starting from the
-/// provided `x` (warm start). Returns iteration stats.
+/// provided `x` (warm start). Returns iteration stats. Allocates its
+/// workspace; loops should use [`cg_solve_with`] with a reused
+/// [`CgScratch`].
 pub fn cg_solve<A: LinOp>(a: &A, b: &[f64], x: &mut [f64], opts: &CgOptions) -> CgOutcome {
+    cg_solve_with(a, b, x, opts, &mut CgScratch::new())
+}
+
+/// [`cg_solve`] over a caller-provided workspace — allocation-free when
+/// the scratch is already sized.
+pub fn cg_solve_with<A: LinOp>(
+    a: &A,
+    b: &[f64],
+    x: &mut [f64],
+    opts: &CgOptions,
+    scratch: &mut CgScratch,
+) -> CgOutcome {
     let n = a.dim();
     assert_eq!(b.len(), n);
     assert_eq!(x.len(), n);
@@ -57,46 +101,44 @@ pub fn cg_solve<A: LinOp>(a: &A, b: &[f64], x: &mut [f64], opts: &CgOptions) -> 
         return CgOutcome { iters: 0, rel_residual: 0.0, converged: true };
     }
 
-    let mut r = vec![0.0; n];
-    let mut ax = vec![0.0; n];
-    a.apply(x, &mut ax);
+    scratch.resize(n);
+    let CgScratch { r, ax, z, p, ap } = scratch;
+    a.apply(x, ax);
     for i in 0..n {
         r[i] = b[i] - ax[i];
     }
 
-    let mut z = vec![0.0; n];
-    let have_pre = a.precond(&r, &mut z);
+    let have_pre = a.precond(r, z);
     if !have_pre {
-        z.copy_from_slice(&r);
+        z.copy_from_slice(r);
     }
-    let mut p = z.clone();
-    let mut rz = vecops::dot(&r, &z);
-    let mut ap = vec![0.0; n];
+    p.copy_from_slice(z);
+    let mut rz = vecops::dot(r, z);
 
     let mut iters = 0;
-    let mut rel = vecops::norm2(&r) / bnorm;
+    let mut rel = vecops::norm2(r) / bnorm;
     while rel > opts.tol && iters < max_iter {
-        a.apply(&p, &mut ap);
-        let pap = vecops::dot(&p, &ap);
+        a.apply(p, ap);
+        let pap = vecops::dot(p, ap);
         if pap <= 0.0 || !pap.is_finite() {
             // Curvature breakdown: operator only PSD along p; stop with
             // the current (best-so-far) iterate.
             break;
         }
         let alpha = rz / pap;
-        vecops::axpy(alpha, &p, x);
-        vecops::axpy(-alpha, &ap, &mut r);
-        rel = vecops::norm2(&r) / bnorm;
+        vecops::axpy(alpha, p, x);
+        vecops::axpy(-alpha, ap, r);
+        rel = vecops::norm2(r) / bnorm;
         iters += 1;
         if rel <= opts.tol {
             break;
         }
-        if a.precond(&r, &mut z) {
+        if a.precond(r, z) {
             // preconditioned direction update
         } else {
-            z.copy_from_slice(&r);
+            z.copy_from_slice(r);
         }
-        let rz_new = vecops::dot(&r, &z);
+        let rz_new = vecops::dot(r, z);
         let beta = rz_new / rz;
         rz = rz_new;
         for i in 0..n {
@@ -172,6 +214,28 @@ mod tests {
         let out = cg_solve(&DenseOp(&a), &[0.0; 4], &mut x, &CgOptions::default());
         assert!(out.converged);
         assert_eq!(x, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_to_fresh() {
+        // One CgScratch across differently-sized solves must give exactly
+        // the allocating path's results (the scratch resize fully
+        // re-initializes every buffer).
+        let mut rng = Rng::seed_from(34);
+        let mut scratch = CgScratch::new();
+        for n in [40usize, 12, 25] {
+            let a = random_spd(&mut rng, n);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut x1 = vec![0.0; n];
+            let out1 = cg_solve(&DenseOp(&a), &b, &mut x1, &CgOptions::default());
+            let mut x2 = vec![0.0; n];
+            let out2 =
+                cg_solve_with(&DenseOp(&a), &b, &mut x2, &CgOptions::default(), &mut scratch);
+            assert_eq!(out1.iters, out2.iters, "n={n}");
+            for i in 0..n {
+                assert_eq!(x1[i].to_bits(), x2[i].to_bits(), "n={n} i={i}");
+            }
+        }
     }
 
     #[test]

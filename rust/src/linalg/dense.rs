@@ -13,6 +13,7 @@
 //! worker count — see the notes in `gemm.rs` and the fixed-chunk
 //! reduction in [`Mat::matvec_t_into`]).
 
+use super::multivec::MultiVec;
 use super::{gemm, vecops};
 use crate::util::parallel;
 
@@ -198,6 +199,145 @@ impl Mat {
         }
     }
 
+    /// `Y ← A·X` for a panel of right-hand sides (the fused multi-RHS
+    /// GEMV): `X` is `cols × r`, `Y` is `rows × r`.
+    ///
+    /// Contract (pinned by proptests): column `j` of `Y` is
+    /// **bit-identical** to `matvec_into(X.col(j), ..)`, and the result
+    /// is bit-stable across thread counts. Each output element is the
+    /// same `vecops::dot` the single-RHS path computes; the fusion win is
+    /// purely in memory traffic — `A` is streamed once per *panel* (each
+    /// row stays hot in L1 across the `r` columns, the panel stays
+    /// L2-resident across rows) instead of once per right-hand side,
+    /// which is what turns the bandwidth-bound banded GEMV into
+    /// GEMM-shaped work. A KC-blocked accumulation through the packed
+    /// microkernel would be faster still for very large `r`, but it
+    /// would re-associate the per-element sums and break the
+    /// column-bit-identity contract, so the panel kernel deliberately
+    /// keeps the single-RHS reduction order.
+    pub fn matvec_multi_into(&self, xs: &MultiVec, ys: &mut MultiVec) {
+        assert_eq!(xs.rows(), self.cols, "panel rows must match A cols");
+        assert_eq!(ys.rows(), self.rows, "output rows must match A rows");
+        assert_eq!(xs.ncols(), ys.ncols(), "panel widths must match");
+        let r = xs.ncols();
+        if r == 0 || self.rows == 0 {
+            return;
+        }
+        let nt = parallel::effective_threads();
+        if self.rows * self.cols < 1 << 16 || nt == 1 {
+            for row in 0..self.rows {
+                let a = self.row(row);
+                for j in 0..r {
+                    ys.col_mut(j)[row] = vecops::dot(a, xs.col(j));
+                }
+            }
+            return;
+        }
+        // Band the output rows over the pool; each band owns the same
+        // row-range slice of every output column.
+        let band = self.rows.div_ceil(nt);
+        let nbands = self.rows.div_ceil(band);
+        let mut items: Vec<Vec<&mut [f64]>> =
+            (0..nbands).map(|_| Vec::with_capacity(r)).collect();
+        let rows = self.rows;
+        for col in ys.data_mut().chunks_mut(rows) {
+            for (b, piece) in col.chunks_mut(band).enumerate() {
+                items[b].push(piece);
+            }
+        }
+        parallel::parallel_items(nt, items, |b, mut cols| {
+            let lo = b * band;
+            let len = cols[0].len();
+            for i in 0..len {
+                let a = self.row(lo + i);
+                for (j, piece) in cols.iter_mut().enumerate() {
+                    piece[i] = vecops::dot(a, xs.col(j));
+                }
+            }
+        });
+    }
+
+    /// `Y ← Aᵀ·U` for a panel of right-hand sides: `U` is `rows × r`,
+    /// `Y` is `cols × r`. Same fixed [`TCHUNK`] reduction grid as
+    /// [`Mat::matvec_t_into`], applied per column in the single-RHS
+    /// order, so column `j` of `Y` is bit-identical to
+    /// `matvec_t_into(U.col(j), ..)` at any thread count.
+    pub fn matvec_t_multi_into(&self, us: &MultiVec, ys: &mut MultiVec) {
+        assert_eq!(us.rows(), self.rows, "panel rows must match A rows");
+        assert_eq!(ys.rows(), self.cols, "output rows must match A cols");
+        assert_eq!(us.ncols(), ys.ncols(), "panel widths must match");
+        let r = us.ncols();
+        ys.data_mut().fill(0.0);
+        if self.rows == 0 || self.cols == 0 || r == 0 {
+            return;
+        }
+        let nchunks = self.rows.div_ceil(TCHUNK);
+        if nchunks == 1 {
+            for row in 0..self.rows {
+                let a = self.row(row);
+                for j in 0..r {
+                    vecops::axpy(us.col(j)[row], a, ys.col_mut(j));
+                }
+            }
+            return;
+        }
+        let nt = parallel::effective_threads();
+        let width = self.cols * r;
+        let mut partials = vec![0.0; nchunks * width];
+        {
+            let chunks: Vec<&mut [f64]> = partials.chunks_mut(width).collect();
+            parallel::parallel_items(nt, chunks, |ci, acc| {
+                let lo = ci * TCHUNK;
+                let hi = (lo + TCHUNK).min(self.rows);
+                for row in lo..hi {
+                    let a = self.row(row);
+                    for j in 0..r {
+                        let acc_j = &mut acc[j * self.cols..(j + 1) * self.cols];
+                        vecops::axpy(us.col(j)[row], a, acc_j);
+                    }
+                }
+            });
+        }
+        for p in partials.chunks(width) {
+            for j in 0..r {
+                vecops::axpy(1.0, &p[j * self.cols..(j + 1) * self.cols], ys.col_mut(j));
+            }
+        }
+    }
+
+    /// Gather the rows `idx` into `out` (reusing its allocation) —
+    /// `out.row(s) = self.row(idx[s])`. The compact-panel primitive of
+    /// the active-set (shrinking) primal Newton.
+    pub fn gather_rows_into(&self, idx: &[usize], out: &mut Mat) {
+        out.rows = idx.len();
+        out.cols = self.cols;
+        out.data.clear();
+        out.data.reserve(idx.len() * self.cols);
+        for &r in idx {
+            out.data.extend_from_slice(self.row(r));
+        }
+    }
+
+    /// Gather the *columns* `idx` into the *rows* of `out` (reusing its
+    /// allocation) — `out.row(s) = self.col(idx[s])`. Blocked over source
+    /// rows so the strided column reads stay cache-friendly; used by the
+    /// SVEN reduction, whose implicit sample rows are design columns.
+    pub fn gather_cols_as_rows_into(&self, idx: &[usize], out: &mut Mat) {
+        out.rows = idx.len();
+        out.cols = self.rows;
+        out.data.clear();
+        out.data.resize(idx.len() * self.rows, 0.0);
+        const B: usize = 64;
+        for rb in (0..self.rows).step_by(B) {
+            let hi = (rb + B).min(self.rows);
+            for (s, &c) in idx.iter().enumerate() {
+                for r in rb..hi {
+                    out.data[s * self.rows + r] = self.data[r * self.cols + c];
+                }
+            }
+        }
+    }
+
     /// `C ← A·B` through the packed blocked kernel (small products fall
     /// back to the naive loop inside `gemm`).
     pub fn matmul(&self, b: &Mat) -> Mat {
@@ -378,5 +518,84 @@ mod tests {
     fn eye_matvec_is_identity() {
         let x = vec![1.0, -2.0, 3.5];
         assert_eq!(Mat::eye(3).matvec(&x), x);
+    }
+
+    /// Multi-RHS columns must be bit-identical to single-RHS calls, on
+    /// shapes that cross both the GEMV banding and TCHUNK thresholds.
+    #[test]
+    fn multi_rhs_columns_bit_match_single_rhs() {
+        use crate::linalg::MultiVec;
+        let mut rng = Rng::seed_from(19);
+        // 1100 × 80 = 88k elements > 2^16, rows > TCHUNK.
+        let a = rand_mat(&mut rng, 1100, 80);
+        let xs = MultiVec::from_fn(80, 3, |_, _| rng.normal());
+        let us = MultiVec::from_fn(1100, 3, |_, _| rng.normal());
+        for par in [Parallelism::None, Parallelism::Fixed(4)] {
+            let (ys, yts) = with_parallelism(par, || {
+                let mut ys = MultiVec::zeros(1100, 3);
+                a.matvec_multi_into(&xs, &mut ys);
+                let mut yts = MultiVec::zeros(80, 3);
+                a.matvec_t_multi_into(&us, &mut yts);
+                (ys, yts)
+            });
+            for j in 0..3 {
+                let (y1, yt1) = with_parallelism(par, || {
+                    (a.matvec(xs.col(j)), a.matvec_t(us.col(j)))
+                });
+                for (s, t) in y1.iter().zip(ys.col(j)) {
+                    assert_eq!(s.to_bits(), t.to_bits(), "matvec col {j}");
+                }
+                for (s, t) in yt1.iter().zip(yts.col(j)) {
+                    assert_eq!(s.to_bits(), t.to_bits(), "matvec_t col {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_rhs_bit_stable_across_parallelism() {
+        use crate::linalg::MultiVec;
+        let mut rng = Rng::seed_from(20);
+        let a = rand_mat(&mut rng, 1200, 61);
+        let xs = MultiVec::from_fn(61, 2, |_, _| rng.normal());
+        let us = MultiVec::from_fn(1200, 2, |_, _| rng.normal());
+        let run = |par: Parallelism| {
+            with_parallelism(par, || {
+                let mut ys = MultiVec::zeros(1200, 2);
+                a.matvec_multi_into(&xs, &mut ys);
+                let mut yts = MultiVec::zeros(61, 2);
+                a.matvec_t_multi_into(&us, &mut yts);
+                (ys, yts)
+            })
+        };
+        let serial = run(Parallelism::None);
+        for nt in [2usize, 4, 8] {
+            let threaded = run(Parallelism::Fixed(nt));
+            for (s, t) in serial.0.data().iter().zip(threaded.0.data()) {
+                assert_eq!(s.to_bits(), t.to_bits(), "matvec_multi nt={nt}");
+            }
+            for (s, t) in serial.1.data().iter().zip(threaded.1.data()) {
+                assert_eq!(s.to_bits(), t.to_bits(), "matvec_t_multi nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_rows_and_cols() {
+        let mut rng = Rng::seed_from(21);
+        let a = rand_mat(&mut rng, 9, 5);
+        let mut out = Mat::zeros(0, 0);
+        a.gather_rows_into(&[7, 0, 3], &mut out);
+        assert_eq!((out.rows(), out.cols()), (3, 5));
+        assert_eq!(out.row(0), a.row(7));
+        assert_eq!(out.row(1), a.row(0));
+        assert_eq!(out.row(2), a.row(3));
+        // gather is reusable: a second gather overwrites the panel
+        a.gather_cols_as_rows_into(&[4, 1], &mut out);
+        assert_eq!((out.rows(), out.cols()), (2, 9));
+        for r in 0..9 {
+            assert_eq!(out.get(0, r), a.get(r, 4));
+            assert_eq!(out.get(1, r), a.get(r, 1));
+        }
     }
 }

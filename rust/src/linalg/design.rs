@@ -16,6 +16,7 @@
 //! [`Csc::from_csr`].
 
 use super::dense::Mat;
+use super::multivec::MultiVec;
 use super::sparse::{Csc, Csr};
 use std::borrow::Cow;
 
@@ -119,6 +120,26 @@ impl Design {
         match self {
             Design::Dense(m) => m.matvec_t_into(x, y),
             Design::Sparse { csr, .. } => csr.matvec_t_into(x, y),
+        }
+    }
+
+    /// `Y ← X·P` for a panel of right-hand sides — the fused multi-RHS
+    /// GEMV. Column `j` of `Y` is bit-identical to
+    /// `matvec_into(P.col(j), ..)` (the contract both underlying kernels
+    /// pin), and bit-stable across thread counts.
+    pub fn matvec_multi_into(&self, xs: &MultiVec, ys: &mut MultiVec) {
+        match self {
+            Design::Dense(m) => m.matvec_multi_into(xs, ys),
+            Design::Sparse { csr, .. } => csr.matvec_multi_into(xs, ys),
+        }
+    }
+
+    /// `Y ← Xᵀ·P` for a panel of right-hand sides; same per-column
+    /// bit-identity contract as [`Design::matvec_multi_into`].
+    pub fn matvec_t_multi_into(&self, us: &MultiVec, ys: &mut MultiVec) {
+        match self {
+            Design::Dense(m) => m.matvec_t_multi_into(us, ys),
+            Design::Sparse { csr, .. } => csr.matvec_t_multi_into(us, ys),
         }
     }
 

@@ -20,11 +20,13 @@ pub mod cholesky;
 pub mod dense;
 pub mod design;
 pub mod gemm;
+pub mod multivec;
 pub mod sparse;
 pub mod vecops;
 
-pub use cg::{cg_solve, CgOptions, CgOutcome, LinOp};
+pub use cg::{cg_solve, cg_solve_with, CgOptions, CgOutcome, CgScratch, LinOp};
 pub use cholesky::Cholesky;
 pub use dense::Mat;
 pub use design::{AsDesign, Design, DesignCols};
+pub use multivec::MultiVec;
 pub use sparse::{Csc, Csr};

@@ -15,6 +15,7 @@
 //! in `rust/src/testing/prop.rs`).
 
 use super::dense::Mat;
+use super::multivec::MultiVec;
 use crate::util::parallel;
 
 /// Below this stored-entry count the kernels stay inline on the caller:
@@ -281,6 +282,147 @@ impl Csr {
         n
     }
 
+    /// `Y ← A·X` for a panel of right-hand sides (`X` is `cols × r`,
+    /// `Y` is `rows × r`): the sparse twin of
+    /// [`Mat::matvec_multi_into`](super::Mat::matvec_multi_into). Column
+    /// `j` of `Y` is bit-identical to `matvec_into(X.col(j), ..)` — each
+    /// output element is the same sequential sparse row dot — and the
+    /// fused pass touches each row's nnz once per panel while the index
+    /// array stays hot across columns.
+    pub fn matvec_multi_into(&self, xs: &MultiVec, ys: &mut MultiVec) {
+        assert_eq!(xs.rows(), self.cols, "panel rows must match A cols");
+        assert_eq!(ys.rows(), self.rows, "output rows must match A rows");
+        assert_eq!(xs.ncols(), ys.ncols(), "panel widths must match");
+        let r = xs.ncols();
+        if r == 0 || self.rows == 0 {
+            return;
+        }
+        let nt = parallel::effective_threads();
+        if self.nnz() < PAR_NNZ || nt <= 1 || self.rows <= 1 {
+            for row in 0..self.rows {
+                for j in 0..r {
+                    let x = xs.col(j);
+                    let mut s = 0.0;
+                    for (c, v) in self.row_iter(row) {
+                        s += v * x[c];
+                    }
+                    ys.col_mut(j)[row] = s;
+                }
+            }
+            return;
+        }
+        let band = self.rows.div_ceil(nt);
+        let nbands = self.rows.div_ceil(band);
+        let mut items: Vec<Vec<&mut [f64]>> =
+            (0..nbands).map(|_| Vec::with_capacity(r)).collect();
+        let rows = self.rows;
+        for col in ys.data_mut().chunks_mut(rows) {
+            for (b, piece) in col.chunks_mut(band).enumerate() {
+                items[b].push(piece);
+            }
+        }
+        parallel::parallel_items(nt, items, |b, mut cols| {
+            let lo = b * band;
+            let len = cols[0].len();
+            for i in 0..len {
+                for (j, piece) in cols.iter_mut().enumerate() {
+                    let x = xs.col(j);
+                    let mut s = 0.0;
+                    for (c, v) in self.row_iter(lo + i) {
+                        s += v * x[c];
+                    }
+                    piece[i] = s;
+                }
+            }
+        });
+    }
+
+    /// `Y ← Aᵀ·U` for a panel (`U` is `rows × r`, `Y` is `cols × r`),
+    /// over the same shape-derived chunk grid as [`Csr::matvec_t_into`]
+    /// and with the same per-column zero-skip, so column `j` of `Y` is
+    /// bit-identical to `matvec_t_into(U.col(j), ..)` at any thread
+    /// count.
+    pub fn matvec_t_multi_into(&self, us: &MultiVec, ys: &mut MultiVec) {
+        assert_eq!(us.rows(), self.rows, "panel rows must match A rows");
+        assert_eq!(ys.rows(), self.cols, "output rows must match A cols");
+        assert_eq!(us.ncols(), ys.ncols(), "panel widths must match");
+        let r = us.ncols();
+        ys.data_mut().fill(0.0);
+        if self.rows == 0 || self.cols == 0 || r == 0 {
+            return;
+        }
+        let tchunk = self.rows.div_ceil(reduction_chunks(self.rows, self.cols, self.nnz()));
+        let nchunks = self.rows.div_ceil(tchunk);
+        if nchunks == 1 || self.nnz() < PAR_NNZ {
+            for row in 0..self.rows {
+                for j in 0..r {
+                    let xr = us.col(j)[row];
+                    if xr == 0.0 {
+                        continue;
+                    }
+                    let y = ys.col_mut(j);
+                    for (c, v) in self.row_iter(row) {
+                        y[c] += v * xr;
+                    }
+                }
+            }
+            return;
+        }
+        let nt = parallel::effective_threads();
+        let width = self.cols * r;
+        let mut partials = vec![0.0; nchunks * width];
+        {
+            let chunks: Vec<&mut [f64]> = partials.chunks_mut(width).collect();
+            parallel::parallel_items(nt, chunks, |ci, acc| {
+                let lo = ci * tchunk;
+                let hi = (lo + tchunk).min(self.rows);
+                for row in lo..hi {
+                    for j in 0..r {
+                        let xr = us.col(j)[row];
+                        if xr == 0.0 {
+                            continue;
+                        }
+                        let acc_j = &mut acc[j * self.cols..(j + 1) * self.cols];
+                        for (c, v) in self.row_iter(row) {
+                            acc_j[c] += v * xr;
+                        }
+                    }
+                }
+            });
+        }
+        for p in partials.chunks(width) {
+            for j in 0..r {
+                super::vecops::axpy(1.0, &p[j * self.cols..(j + 1) * self.cols], ys.col_mut(j));
+            }
+        }
+    }
+
+    /// An empty 0 × 0 matrix — the initial value for reusable gather
+    /// targets.
+    pub fn empty() -> Csr {
+        Csr { rows: 0, cols: 0, indptr: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Gather the rows `idx` into `out`, reusing its buffers —
+    /// `out.row(s) = self.row(idx[s])` (O(Σ nnz(row)) per rebuild). The
+    /// compact-panel primitive of the active-set primal Newton on sparse
+    /// designs.
+    pub fn gather_rows_into(&self, idx: &[usize], out: &mut Csr) {
+        out.rows = idx.len();
+        out.cols = self.cols;
+        out.indptr.clear();
+        out.indptr.push(0);
+        out.indices.clear();
+        out.values.clear();
+        for &r in idx {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            out.indices.extend_from_slice(&self.indices[lo..hi]);
+            out.values.extend_from_slice(&self.values[lo..hi]);
+            out.indptr.push(out.indices.len());
+        }
+    }
+
     /// `G ← AᵀA` (cols × cols, dense) — the t-independent block of the
     /// SVEN dual gram `K(t)`. Output row `j` joins column `j`'s CSC
     /// entries with the CSR rows they touch, so the cost is
@@ -449,6 +591,28 @@ impl Csc {
         let lo = self.colptr[c];
         let hi = self.colptr[c + 1];
         self.indices[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Gather the columns `idx` into the *rows* of a CSR matrix, reusing
+    /// its buffers: `out.row(s) = self[:, idx[s]]ᵀ` (so `out` is
+    /// `idx.len() × self.rows`). Column entries are stored row-ascending,
+    /// which is exactly CSR's sorted-row invariant — the gather is a pure
+    /// O(Σ nnz(col)) copy. Used by the SVEN reduction's active-set
+    /// gather, whose implicit sample rows are design columns.
+    pub fn gather_cols_into(&self, idx: &[usize], out: &mut Csr) {
+        out.rows = idx.len();
+        out.cols = self.rows;
+        out.indptr.clear();
+        out.indptr.push(0);
+        out.indices.clear();
+        out.values.clear();
+        for &c in idx {
+            let lo = self.colptr[c];
+            let hi = self.colptr[c + 1];
+            out.indices.extend_from_slice(&self.indices[lo..hi]);
+            out.values.extend_from_slice(&self.values[lo..hi]);
+            out.indptr.push(out.indices.len());
+        }
     }
 
     /// `⟨A[:,c], x⟩`.
@@ -644,6 +808,83 @@ mod tests {
             assert_eq!(serial.3, threaded.3, "csc construction nt={nt}");
             for (s, t) in serial.4.data().iter().zip(threaded.4.data()) {
                 assert_eq!(s.to_bits(), t.to_bits(), "gram nt={nt}");
+            }
+        }
+    }
+
+    /// Multi-RHS columns must be bit-identical to single-RHS calls on a
+    /// shape crossing the fan-out threshold, at several thread counts.
+    #[test]
+    fn sparse_multi_rhs_columns_bit_match_single_rhs() {
+        let mut rng = Rng::seed_from(49);
+        let a = random_sparse(&mut rng, 1100, 160, 0.25);
+        assert!(a.nnz() >= PAR_NNZ);
+        let xs = MultiVec::from_fn(160, 3, |_, _| rng.normal());
+        // include exact zeros so the per-column zero-skip is exercised
+        let us = MultiVec::from_fn(1100, 3, |i, _| {
+            if i % 7 == 0 {
+                0.0
+            } else {
+                rng.normal()
+            }
+        });
+        for par in [Parallelism::None, Parallelism::Fixed(2), Parallelism::Fixed(4)] {
+            let (ys, yts) = with_parallelism(par, || {
+                let mut ys = MultiVec::zeros(1100, 3);
+                a.matvec_multi_into(&xs, &mut ys);
+                let mut yts = MultiVec::zeros(160, 3);
+                a.matvec_t_multi_into(&us, &mut yts);
+                (ys, yts)
+            });
+            for j in 0..3 {
+                let (y1, yt1) = with_parallelism(par, || {
+                    (a.matvec(xs.col(j)), a.matvec_t(us.col(j)))
+                });
+                for (s, t) in y1.iter().zip(ys.col(j)) {
+                    assert_eq!(s.to_bits(), t.to_bits(), "matvec col {j} ({par:?})");
+                }
+                for (s, t) in yt1.iter().zip(yts.col(j)) {
+                    assert_eq!(s.to_bits(), t.to_bits(), "matvec_t col {j} ({par:?})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_rows_matches_dense_gather() {
+        let mut rng = Rng::seed_from(50);
+        let a = random_sparse(&mut rng, 15, 9, 0.4);
+        let d = a.to_dense();
+        let idx = [14usize, 2, 2, 7, 0];
+        let mut out = Csr::empty();
+        a.gather_rows_into(&idx, &mut out);
+        assert_eq!((out.rows(), out.cols()), (5, 9));
+        let od = out.to_dense();
+        for (s, &r) in idx.iter().enumerate() {
+            for c in 0..9 {
+                assert_eq!(od.get(s, c), d.get(r, c), "({s},{c})");
+            }
+        }
+        // reuse with a different selection
+        a.gather_rows_into(&[1], &mut out);
+        assert_eq!(out.rows(), 1);
+        assert_eq!(out.to_dense().row(0), d.row(1));
+    }
+
+    #[test]
+    fn csc_gather_cols_is_transposed_selection() {
+        let mut rng = Rng::seed_from(51);
+        let a = random_sparse(&mut rng, 12, 10, 0.35);
+        let d = a.to_dense();
+        let csc = Csc::from_csr(&a);
+        let idx = [9usize, 0, 4];
+        let mut out = Csr::empty();
+        csc.gather_cols_into(&idx, &mut out);
+        assert_eq!((out.rows(), out.cols()), (3, 12));
+        let od = out.to_dense();
+        for (s, &c) in idx.iter().enumerate() {
+            for r in 0..12 {
+                assert_eq!(od.get(s, r), d.get(r, c), "({s},{r})");
             }
         }
     }

@@ -169,6 +169,8 @@ impl SvmPrep for PreparedXlaPrimal {
             alpha: unpad_alpha(&alpha_pad, self.p, self.meta.p),
             w: Some(w_pad[..self.n].to_vec()),
             iters,
+            cg_iters: 0,
+            gather_rebuilds: 0,
         })
     }
 
@@ -227,6 +229,8 @@ impl SvmPrep for PreparedXlaDual {
             alpha: unpad_alpha(&alpha_pad, self.p, self.p_b),
             w: None,
             iters,
+            cg_iters: 0,
+            gather_rebuilds: 0,
         })
     }
 

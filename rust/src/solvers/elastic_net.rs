@@ -164,6 +164,14 @@ pub struct EnSolution {
     pub objective: f64,
     /// Iterations (solver-specific meaning: CD epochs / Newton steps / IPM iters).
     pub iterations: usize,
+    /// Total inner-CG iterations of the solve (primal Newton backends;
+    /// 0 where there is no inner CG) — feeds the coordinator's
+    /// `cg_iters_total` metric.
+    pub cg_iters: usize,
+    /// Active-set panel rebuilds of the solve (primal shrinking Newton;
+    /// 0 otherwise) — feeds the coordinator's `sv_gather_rebuilds`
+    /// metric.
+    pub gather_rebuilds: usize,
     /// Wall-clock seconds of the solve proper (excludes data generation).
     pub seconds: f64,
     /// Degeneracy flag, if the reduction hit one.

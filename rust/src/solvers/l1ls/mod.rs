@@ -10,7 +10,7 @@
 //! To interoperate with the glmnet-convention benches, [`solve_l1ls`]
 //! takes the penalized-form λ and converts internally (λ̄ = 2nλκ).
 
-use crate::linalg::{cg_solve, vecops, CgOptions, LinOp, Mat};
+use crate::linalg::{cg_solve_with, vecops, CgOptions, CgScratch, LinOp, Mat};
 
 /// Configuration (penalized-Lasso convention; κ fixed to 1).
 #[derive(Clone, Debug)]
@@ -95,6 +95,9 @@ pub fn solve_l1ls(x: &Mat, y: &[f64], lambda: f64, cfg: &L1LsConfig) -> L1LsResu
     let mut newton_iters = 0usize;
     let mut gap = f64::INFINITY;
     let mut converged = false;
+    // One CG workspace for the whole interior-point loop: the truncated
+    // Newton below runs hundreds of CG solves on the same dimension.
+    let mut cg_scratch = CgScratch::new();
 
     let mut r = vec![0.0; n]; // residual Xβ − y
     while newton_iters < cfg.max_newton {
@@ -157,7 +160,7 @@ pub fn solve_l1ls(x: &Mat, y: &[f64], lambda: f64, cfg: &L1LsConfig) -> L1LsResu
             tol: (0.1 * rel_gap).clamp(cfg.cg.tol.min(1e-10), 1e-2),
             max_iter: cfg.cg.max_iter,
         };
-        cg_solve(&op, &rhs, &mut dbeta, &cg_opts);
+        cg_solve_with(&op, &rhs, &mut dbeta, &cg_opts, &mut cg_scratch);
         let du: Vec<f64> =
             (0..p).map(|i| -(grad_u[i] + d2[i] * dbeta[i]) / d1[i]).collect();
 

@@ -69,6 +69,11 @@ pub struct SvmSolve {
     pub w: Option<Vec<f64>>,
     /// Newton iterations / pivots.
     pub iters: usize,
+    /// Total CG iterations inside the solve (primal Newton; 0 for
+    /// solvers without an inner CG).
+    pub cg_iters: usize,
+    /// Active-set panel rebuilds (primal shrinking Newton; 0 otherwise).
+    pub gather_rebuilds: usize,
 }
 
 /// Per-solve mutable workspace. Everything a solve mutates lives here —
@@ -207,7 +212,13 @@ impl SvmPrep for PreparedPrimal {
         let labels = reduction_labels(self.x.cols());
         let w0 = warm.and_then(|w| w.w.as_deref());
         let r = primal_newton(&samples, &labels, c, &self.opts, w0);
-        Ok(SvmSolve { alpha: r.alpha, w: Some(r.w), iters: r.newton_iters })
+        Ok(SvmSolve {
+            alpha: r.alpha,
+            w: Some(r.w),
+            iters: r.newton_iters,
+            cg_iters: r.cg_iters_total,
+            gather_rebuilds: r.gather_rebuilds,
+        })
     }
 
     fn mode(&self) -> SvmMode {
@@ -265,7 +276,13 @@ impl SvmPrep for PreparedDual {
         }
         let mut w = vec![0.0; self.x.rows()];
         samples.matvec_t(&signed, &mut w);
-        Ok(SvmSolve { alpha: r.alpha, w: Some(w), iters: r.pivots })
+        Ok(SvmSolve {
+            alpha: r.alpha,
+            w: Some(w),
+            iters: r.pivots,
+            cg_iters: 0,
+            gather_rebuilds: 0,
+        })
     }
 
     fn mode(&self) -> SvmMode {

@@ -103,6 +103,8 @@ impl<B: SvmBackend> Sven<B> {
             solver: self.kind(),
             objective,
             iterations: solve.iters,
+            cg_iters: solve.cg_iters,
+            gather_rebuilds: solve.gather_rebuilds,
             seconds,
             degenerate,
         })

@@ -22,4 +22,4 @@ pub mod samples;
 
 pub use dual::{dual_newton, DualOptions, DualResult};
 pub use primal::{primal_newton, PrimalOptions, PrimalResult};
-pub use samples::{DenseSamples, ReducedSamples, SampleSet};
+pub use samples::{DenseSamples, GatheredRows, ReducedSamples, SampleSet};

@@ -10,7 +10,7 @@
 //! [`Design`], so a sparse X drives the whole Newton-CG at O(nnz) per
 //! product with no densification anywhere in the solve.
 
-use crate::linalg::{vecops, Design, Mat};
+use crate::linalg::{vecops, Csr, Design, Mat, MultiVec};
 
 /// Abstract m-samples × d-features matrix X̂.
 pub trait SampleSet: Sync {
@@ -22,6 +22,90 @@ pub trait SampleSet: Sync {
     fn matvec(&self, v: &[f64], out: &mut [f64]);
     /// `out ← X̂ᵀ · u`, out length d.
     fn matvec_t(&self, u: &[f64], out: &mut [f64]);
+
+    /// Fused multi-RHS `out ← X̂ · V` (V is `d × r`, out `m × r`).
+    /// Column `j` of `out` is bit-identical to `matvec(V.col(j), ..)` —
+    /// the panel form exists purely to amortize the data traffic (the
+    /// batched margin refresh of the primal Newton).
+    fn matvec_multi(&self, vs: &MultiVec, out: &mut MultiVec);
+
+    /// Fused multi-RHS `out ← X̂ᵀ · U` (U is `m × r`, out `d × r`); same
+    /// per-column bit-identity contract as [`SampleSet::matvec_multi`].
+    fn matvec_t_multi(&self, us: &MultiVec, out: &mut MultiVec);
+
+    /// Gather the sample rows `rows` into a reused compact panel. The
+    /// panel's products ([`SampleSet::gathered_matvec`] /
+    /// [`SampleSet::gathered_matvec_t`]) equal the corresponding
+    /// masked-full-matrix products to floating-point reassociation — the
+    /// active-set (shrinking) Newton runs its Hessian-vector products on
+    /// the m_sv-row panel instead of masking all m rows.
+    fn gather_rows_into(&self, rows: &[usize], out: &mut GatheredRows);
+
+    /// `out ← G · v` over a panel gathered from this sample set
+    /// (`out.len() ==` the gathered row count).
+    fn gathered_matvec(&self, g: &GatheredRows, v: &[f64], out: &mut [f64]);
+
+    /// `out ← Gᵀ · u` over a gathered panel (`out.len() == d`).
+    fn gathered_matvec_t(&self, g: &GatheredRows, u: &[f64], out: &mut [f64]);
+}
+
+/// A reusable compact panel of gathered sample rows (see
+/// [`SampleSet::gather_rows_into`]). The storage variant tracks the
+/// sample set it was gathered from: dense sample matrices gather into a
+/// dense row panel, the implicit SVEN reduction gathers the underlying
+/// design columns (dense or sparse) plus the per-row sign of its
+/// rank-one `±y/t` correction, which stays implicit in the products.
+#[derive(Default)]
+pub struct GatheredRows {
+    store: GatherStore,
+    /// Per-gathered-row sign of the implicit rank-one correction
+    /// (ReducedSamples); empty when the sample set has none.
+    sign: Vec<f64>,
+}
+
+#[derive(Default)]
+enum GatherStore {
+    #[default]
+    Empty,
+    Dense(Mat),
+    Sparse(Csr),
+}
+
+impl GatheredRows {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of gathered rows.
+    pub fn m(&self) -> usize {
+        match &self.store {
+            GatherStore::Empty => 0,
+            GatherStore::Dense(m) => m.rows(),
+            GatherStore::Sparse(c) => c.rows(),
+        }
+    }
+
+    /// Borrow (and, if needed, switch to) the dense storage.
+    fn dense_store(&mut self) -> &mut Mat {
+        if !matches!(self.store, GatherStore::Dense(_)) {
+            self.store = GatherStore::Dense(Mat::zeros(0, 0));
+        }
+        match &mut self.store {
+            GatherStore::Dense(m) => m,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Borrow (and, if needed, switch to) the sparse storage.
+    fn sparse_store(&mut self) -> &mut Csr {
+        if !matches!(self.store, GatherStore::Sparse(_)) {
+            self.store = GatherStore::Sparse(Csr::empty());
+        }
+        match &mut self.store {
+            GatherStore::Sparse(c) => c,
+            _ => unreachable!(),
+        }
+    }
 }
 
 /// Materialized samples (rows = samples).
@@ -44,6 +128,33 @@ impl SampleSet for DenseSamples {
 
     fn matvec_t(&self, u: &[f64], out: &mut [f64]) {
         self.x.matvec_t_into(u, out);
+    }
+
+    fn matvec_multi(&self, vs: &MultiVec, out: &mut MultiVec) {
+        self.x.matvec_multi_into(vs, out);
+    }
+
+    fn matvec_t_multi(&self, us: &MultiVec, out: &mut MultiVec) {
+        self.x.matvec_t_multi_into(us, out);
+    }
+
+    fn gather_rows_into(&self, rows: &[usize], out: &mut GatheredRows) {
+        out.sign.clear();
+        self.x.gather_rows_into(rows, out.dense_store());
+    }
+
+    fn gathered_matvec(&self, g: &GatheredRows, v: &[f64], out: &mut [f64]) {
+        match &g.store {
+            GatherStore::Dense(panel) => panel.matvec_into(v, out),
+            _ => panic!("panel was not gathered from DenseSamples"),
+        }
+    }
+
+    fn gathered_matvec_t(&self, g: &GatheredRows, u: &[f64], out: &mut [f64]) {
+        match &g.store {
+            GatherStore::Dense(panel) => panel.matvec_t_into(u, out),
+            _ => panic!("panel was not gathered from DenseSamples"),
+        }
     }
 }
 
@@ -100,6 +211,94 @@ impl SampleSet for ReducedSamples<'_> {
         self.x.matvec_into(&sum, out);
         let coeff = (u2.iter().sum::<f64>() - u1.iter().sum::<f64>()) / self.t;
         vecops::axpy(coeff, self.y, out);
+    }
+
+    /// Panel form of [`SampleSet::matvec`]: one fused `XᵀV` pass feeds
+    /// every column; the per-column shift and top/bottom assembly repeat
+    /// the single-RHS operations exactly, so each output column is
+    /// bit-identical to the single-RHS call.
+    fn matvec_multi(&self, vs: &MultiVec, out: &mut MultiVec) {
+        let p = self.p();
+        let r = vs.ncols();
+        debug_assert_eq!(vs.rows(), self.d());
+        debug_assert_eq!((out.rows(), out.ncols()), (2 * p, r));
+        let mut tmp = MultiVec::zeros(p, r);
+        self.x.matvec_t_multi_into(vs, &mut tmp);
+        for j in 0..r {
+            let shift = vecops::dot(self.y, vs.col(j)) / self.t;
+            let tcol = tmp.col(j);
+            let (top, bot) = out.col_mut(j).split_at_mut(p);
+            for i in 0..p {
+                bot[i] = tcol[i] + shift;
+                top[i] = tcol[i] - shift;
+            }
+        }
+    }
+
+    /// Panel form of [`SampleSet::matvec_t`]; one fused `X·S` pass over
+    /// the per-column sums, same bit-identity contract.
+    fn matvec_t_multi(&self, us: &MultiVec, out: &mut MultiVec) {
+        let p = self.p();
+        let r = us.ncols();
+        debug_assert_eq!(us.rows(), 2 * p);
+        debug_assert_eq!((out.rows(), out.ncols()), (self.d(), r));
+        let mut sums = MultiVec::zeros(p, r);
+        for j in 0..r {
+            let (u1, u2) = us.col(j).split_at(p);
+            vecops::add(u1, u2, sums.col_mut(j));
+        }
+        self.x.matvec_multi_into(&sums, out);
+        for j in 0..r {
+            let (u1, u2) = us.col(j).split_at(p);
+            let coeff = (u2.iter().sum::<f64>() - u1.iter().sum::<f64>()) / self.t;
+            vecops::axpy(coeff, self.y, out.col_mut(j));
+        }
+    }
+
+    /// Gather the selected X̂ rows: row `s < p` is design column `s`
+    /// (sign −1 on the `y/t` shift), row `p + s` is design column `s`
+    /// (sign +1). The panel holds the bare design columns — dense rows or
+    /// a CSC-sliced CSR — and the rank-one correction stays implicit in
+    /// the gathered products, so a sparse design gathers in O(Σ nnz(col))
+    /// with no densification.
+    fn gather_rows_into(&self, rows: &[usize], out: &mut GatheredRows) {
+        let p = self.p();
+        out.sign.clear();
+        out.sign.extend(rows.iter().map(|&s| if s < p { -1.0 } else { 1.0 }));
+        let cols: Vec<usize> = rows.iter().map(|&s| if s < p { s } else { s - p }).collect();
+        match self.x {
+            Design::Dense(m) => m.gather_cols_as_rows_into(&cols, out.dense_store()),
+            Design::Sparse { csc, .. } => csc.gather_cols_into(&cols, out.sparse_store()),
+        }
+    }
+
+    /// `G·v`: panel product plus the shared `yᵀv/t` shift, signed per
+    /// row.
+    fn gathered_matvec(&self, g: &GatheredRows, v: &[f64], out: &mut [f64]) {
+        match &g.store {
+            GatherStore::Dense(panel) => panel.matvec_into(v, out),
+            GatherStore::Sparse(panel) => panel.matvec_into(v, out),
+            GatherStore::Empty => panic!("empty gather panel"),
+        }
+        let shift = vecops::dot(self.y, v) / self.t;
+        for (o, s) in out.iter_mut().zip(&g.sign) {
+            *o += s * shift;
+        }
+    }
+
+    /// `Gᵀ·u`: panel transpose product plus the signed-sum rank-one `y`
+    /// correction.
+    fn gathered_matvec_t(&self, g: &GatheredRows, u: &[f64], out: &mut [f64]) {
+        match &g.store {
+            GatherStore::Dense(panel) => panel.matvec_t_into(u, out),
+            GatherStore::Sparse(panel) => panel.matvec_t_into(u, out),
+            GatherStore::Empty => panic!("empty gather panel"),
+        }
+        let mut coeff = 0.0;
+        for (ui, si) in u.iter().zip(&g.sign) {
+            coeff += ui * si;
+        }
+        vecops::axpy(coeff / self.t, self.y, out);
     }
 }
 
@@ -255,6 +454,110 @@ mod tests {
     fn labels_shape() {
         let l = reduction_labels(3);
         assert_eq!(l, vec![1.0, 1.0, 1.0, -1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn reduced_multi_rhs_columns_bit_match_single_rhs() {
+        let (x, y, t) = setup(10, 7, 127);
+        let d: Design = x.clone().into();
+        let red = ReducedSamples { x: &d, y: &y, t };
+        let mut rng = Rng::seed_from(128);
+        let vs = MultiVec::from_fn(10, 3, |_, _| rng.normal());
+        let us = MultiVec::from_fn(14, 3, |_, _| rng.normal());
+        let mut outs = MultiVec::zeros(14, 3);
+        red.matvec_multi(&vs, &mut outs);
+        let mut outs_t = MultiVec::zeros(10, 3);
+        red.matvec_t_multi(&us, &mut outs_t);
+        for j in 0..3 {
+            let mut single = vec![0.0; 14];
+            red.matvec(vs.col(j), &mut single);
+            for (a, b) in single.iter().zip(outs.col(j)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "matvec col {j}");
+            }
+            let mut single_t = vec![0.0; 10];
+            red.matvec_t(us.col(j), &mut single_t);
+            for (a, b) in single_t.iter().zip(outs_t.col(j)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "matvec_t col {j}");
+            }
+        }
+    }
+
+    /// Gathered-panel products must agree with the materialized rows for
+    /// both dense and sparse designs (the shrinking Newton's invariant).
+    #[test]
+    fn gathered_products_match_materialized_rows() {
+        let mut rng = Rng::seed_from(129);
+        let x = Mat::from_fn(9, 6, |_, _| {
+            if rng.bernoulli(0.5) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let t = 0.8;
+        let dense_design: Design = x.clone().into();
+        let sparse_design: Design = crate::linalg::Csr::from_dense(&x, 0.0).into();
+        let full = materialize_reduction(&x, &y, t);
+        let rows = [1usize, 4, 7, 10, 11];
+        let v: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let u: Vec<f64> = (0..rows.len()).map(|_| rng.normal()).collect();
+        for design in [&dense_design, &sparse_design] {
+            let red = ReducedSamples { x: design, y: &y, t };
+            let mut panel = GatheredRows::new();
+            red.gather_rows_into(&rows, &mut panel);
+            assert_eq!(panel.m(), rows.len());
+            let mut got = vec![0.0; rows.len()];
+            red.gathered_matvec(&panel, &v, &mut got);
+            for (s, &r) in rows.iter().enumerate() {
+                let expect = vecops::dot(full.row(r), &v);
+                assert!(
+                    (got[s] - expect).abs() < 1e-10,
+                    "matvec s={s} sparse={}",
+                    design.is_sparse()
+                );
+            }
+            let mut got_t = vec![0.0; 9];
+            red.gathered_matvec_t(&panel, &u, &mut got_t);
+            let mut expect_t = vec![0.0; 9];
+            for (s, &r) in rows.iter().enumerate() {
+                vecops::axpy(u[s], full.row(r), &mut expect_t);
+            }
+            for i in 0..9 {
+                assert!(
+                    (got_t[i] - expect_t[i]).abs() < 1e-10,
+                    "matvec_t i={i} sparse={}",
+                    design.is_sparse()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_samples_gather_and_multi() {
+        let mut rng = Rng::seed_from(130);
+        let x = Mat::from_fn(8, 5, |_, _| rng.normal());
+        let s = DenseSamples { x: x.clone() };
+        let vs = MultiVec::from_fn(5, 2, |_, _| rng.normal());
+        let mut out = MultiVec::zeros(8, 2);
+        s.matvec_multi(&vs, &mut out);
+        for j in 0..2 {
+            let mut single = vec![0.0; 8];
+            s.matvec(vs.col(j), &mut single);
+            for (a, b) in single.iter().zip(out.col(j)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        let rows = [6usize, 1];
+        let mut panel = GatheredRows::new();
+        s.gather_rows_into(&rows, &mut panel);
+        let v: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let mut got = vec![0.0; 2];
+        s.gathered_matvec(&panel, &v, &mut got);
+        for (s_i, &r) in rows.iter().enumerate() {
+            let expect = vecops::dot(x.row(r), &v);
+            assert!((got[s_i] - expect).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -338,6 +338,147 @@ mod tests {
         );
     }
 
+    /// Multi-RHS kernel contract, dense side: every column of
+    /// `matvec_multi_into` / `matvec_t_multi_into` is bit-identical to
+    /// the single-RHS call on that column, at every thread count. Shapes
+    /// are drawn to cross both the GEMV banding threshold (rows·cols ≥
+    /// 2^16) and the TCHUNK reduction split (rows > 512) in most cases.
+    #[test]
+    fn prop_dense_multi_rhs_columns_bit_identical() {
+        use crate::linalg::{Mat, MultiVec};
+        use crate::util::parallel::{with_parallelism, Parallelism};
+        forall_cfg(
+            "dense multi-RHS columns == single-RHS bits",
+            &PropConfig { cases: 8, seed: 0xD0D0, min_size: 1, max_size: 8 },
+            |rng: &mut Rng, size: usize| {
+                let rows = 200 + rng.below(200 + size * 150);
+                let cols = 40 + rng.below(30 + size * 20);
+                let r = 1 + rng.below(4);
+                let a = Mat::from_fn(rows, cols, |_, _| rng.normal());
+                let xs = MultiVec::from_fn(cols, r, |_, _| rng.normal());
+                let us = MultiVec::from_fn(rows, r, |_, _| rng.normal());
+                (a, xs, us)
+            },
+            |(a, xs, us)| {
+                let r = xs.ncols();
+                for par in [Parallelism::None, Parallelism::Fixed(3)] {
+                    let (multi, multi_t) = with_parallelism(par, || {
+                        let mut ys = MultiVec::zeros(a.rows(), r);
+                        a.matvec_multi_into(xs, &mut ys);
+                        let mut yts = MultiVec::zeros(a.cols(), r);
+                        a.matvec_t_multi_into(us, &mut yts);
+                        (ys, yts)
+                    });
+                    for j in 0..r {
+                        let (single, single_t) = with_parallelism(par, || {
+                            (a.matvec(xs.col(j)), a.matvec_t(us.col(j)))
+                        });
+                        for (i, (s, m)) in single.iter().zip(multi.col(j)).enumerate() {
+                            if s.to_bits() != m.to_bits() {
+                                return Err(format!(
+                                    "matvec {par:?} col {j} i={i}: {s} vs {m}"
+                                ));
+                            }
+                        }
+                        for (i, (s, m)) in
+                            single_t.iter().zip(multi_t.col(j)).enumerate()
+                        {
+                            if s.to_bits() != m.to_bits() {
+                                return Err(format!(
+                                    "matvec_t {par:?} col {j} i={i}: {s} vs {m}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Multi-RHS kernel contract, sparse side — including exact-zero
+    /// panel entries so the per-column zero-skip matches the single-RHS
+    /// skip, and thread-count bit-stability of the panel results.
+    #[test]
+    fn prop_sparse_multi_rhs_columns_bit_identical() {
+        use crate::linalg::{Csr, MultiVec};
+        use crate::util::parallel::{with_parallelism, Parallelism};
+        forall_cfg(
+            "sparse multi-RHS columns == single-RHS bits",
+            &PropConfig { cases: 6, seed: 0xFACE, min_size: 1, max_size: 6 },
+            |rng: &mut Rng, size: usize| {
+                let rows = 600 + rng.below(200 + size * 120);
+                let cols = 80 + rng.below(40 + size * 20);
+                let per_row = 16 + rng.below(14);
+                let mut trip = Vec::with_capacity(rows * per_row);
+                for row in 0..rows {
+                    for _ in 0..per_row {
+                        trip.push((row, rng.below(cols), rng.normal()));
+                    }
+                }
+                let a = Csr::from_triplets(rows, cols, trip);
+                let r = 1 + rng.below(3);
+                let xs = MultiVec::from_fn(cols, r, |_, _| rng.normal());
+                let us = MultiVec::from_fn(rows, r, |i, _| {
+                    if i % 5 == 0 {
+                        0.0
+                    } else {
+                        rng.normal()
+                    }
+                });
+                (a, xs, us)
+            },
+            |(a, xs, us)| {
+                let r = xs.ncols();
+                let run = |par: Parallelism| {
+                    with_parallelism(par, || {
+                        let mut ys = MultiVec::zeros(a.rows(), r);
+                        a.matvec_multi_into(xs, &mut ys);
+                        let mut yts = MultiVec::zeros(a.cols(), r);
+                        a.matvec_t_multi_into(us, &mut yts);
+                        (ys, yts)
+                    })
+                };
+                let serial = run(Parallelism::None);
+                // columns == single-RHS bits (serial)
+                for j in 0..r {
+                    let (single, single_t) = with_parallelism(Parallelism::None, || {
+                        (a.matvec(xs.col(j)), a.matvec_t(us.col(j)))
+                    });
+                    for (i, (s, m)) in single.iter().zip(serial.0.col(j)).enumerate() {
+                        if s.to_bits() != m.to_bits() {
+                            return Err(format!("matvec col {j} i={i}: {s} vs {m}"));
+                        }
+                    }
+                    for (i, (s, m)) in single_t.iter().zip(serial.1.col(j)).enumerate() {
+                        if s.to_bits() != m.to_bits() {
+                            return Err(format!("matvec_t col {j} i={i}: {s} vs {m}"));
+                        }
+                    }
+                }
+                // panel bits stable across thread counts
+                for nt in [2usize, 4] {
+                    let threaded = run(Parallelism::Fixed(nt));
+                    for (i, (s, t)) in
+                        serial.0.data().iter().zip(threaded.0.data()).enumerate()
+                    {
+                        if s.to_bits() != t.to_bits() {
+                            return Err(format!("matvec panel nt={nt} flat {i}"));
+                        }
+                    }
+                    for (i, (s, t)) in
+                        serial.1.data().iter().zip(threaded.1.data()).enumerate()
+                    {
+                        if s.to_bits() != t.to_bits() {
+                            return Err(format!("matvec_t panel nt={nt} flat {i}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
     /// Same property for the symmetric gram kernel, plus exact symmetry.
     #[test]
     fn prop_blocked_gram_matches_naive() {

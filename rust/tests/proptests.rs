@@ -386,3 +386,141 @@ fn prop_parallelism_modes_bit_stable_beta_path() {
         }
     }
 }
+
+/// The SVEN sample operator's fused multi-RHS products must be
+/// column-bit-identical to the single-RHS calls over dense *and* sparse
+/// designs — the contract that lets the primal Newton batch its margin
+/// refresh without changing a single iterate bit.
+#[test]
+fn prop_reduced_samples_multi_rhs_bit_identical() {
+    use sven::linalg::MultiVec;
+    use sven::solvers::svm::{ReducedSamples, SampleSet};
+    forall(
+        "reduced multi-RHS == single-RHS bits",
+        12,
+        |rng: &mut Rng, size: usize| {
+            let n = 8 + rng.below(6 + 3 * size);
+            let p = 5 + rng.below(8 + 4 * size);
+            let density = rng.uniform_in(0.2, 0.9);
+            let mut local = Rng::seed_from(rng.next_u64());
+            let x = Mat::from_fn(n, p, |_, _| {
+                if local.bernoulli(density) {
+                    local.normal()
+                } else {
+                    0.0
+                }
+            });
+            let y: Vec<f64> = (0..n).map(|_| local.normal()).collect();
+            let r = 1 + local.below(3);
+            let vs = MultiVec::from_fn(n, r, |_, _| local.normal());
+            let us = MultiVec::from_fn(2 * p, r, |_, _| local.normal());
+            (x, y, vs, us)
+        },
+        |(x, y, vs, us)| {
+            let r = vs.ncols();
+            let (n, p) = (x.rows(), x.cols());
+            let designs: [Design; 2] = [x.clone().into(), Csr::from_dense(x, 0.0).into()];
+            for design in &designs {
+                let red = ReducedSamples { x: design, y, t: 0.7 };
+                let mut outs = MultiVec::zeros(2 * p, r);
+                red.matvec_multi(vs, &mut outs);
+                let mut outs_t = MultiVec::zeros(n, r);
+                red.matvec_t_multi(us, &mut outs_t);
+                for j in 0..r {
+                    let mut single = vec![0.0; 2 * p];
+                    red.matvec(vs.col(j), &mut single);
+                    for (i, (s, m)) in single.iter().zip(outs.col(j)).enumerate() {
+                        if s.to_bits() != m.to_bits() {
+                            return Err(format!(
+                                "matvec sparse={} col {j} i={i}: {s} vs {m}",
+                                design.is_sparse()
+                            ));
+                        }
+                    }
+                    let mut single_t = vec![0.0; n];
+                    red.matvec_t(us.col(j), &mut single_t);
+                    for (i, (s, m)) in single_t.iter().zip(outs_t.col(j)).enumerate() {
+                        if s.to_bits() != m.to_bits() {
+                            return Err(format!(
+                                "matvec_t sparse={} col {j} i={i}: {s} vs {m}",
+                                design.is_sparse()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Gathered-panel Hessian products must equal the masked full-matrix
+/// products (the shrinking Newton's correctness invariant): for a random
+/// SV subset S, `Gᵀ(G·v)` over the gathered panel == `X̂ᵀ(1_S ⊙ (X̂·v))`
+/// to floating-point tolerance, over dense and sparse designs.
+#[test]
+fn prop_gathered_hessian_equals_masked() {
+    use sven::solvers::svm::{GatheredRows, ReducedSamples, SampleSet};
+    forall(
+        "gathered Hessian == masked Hessian",
+        16,
+        |rng: &mut Rng, size: usize| {
+            let n = 6 + rng.below(5 + 3 * size);
+            let p = 4 + rng.below(6 + 4 * size);
+            let mut local = Rng::seed_from(rng.next_u64());
+            let x = Mat::from_fn(n, p, |_, _| {
+                if local.bernoulli(0.6) {
+                    local.normal()
+                } else {
+                    0.0
+                }
+            });
+            let y: Vec<f64> = (0..n).map(|_| local.normal()).collect();
+            // random SV subset of the 2p implicit rows
+            let rows: Vec<usize> = (0..2 * p).filter(|_| local.bernoulli(0.4)).collect();
+            let v: Vec<f64> = (0..n).map(|_| local.normal()).collect();
+            (x, y, rows, v)
+        },
+        |(x, y, rows, v)| {
+            if rows.is_empty() {
+                return Ok(());
+            }
+            let (n, p) = (x.rows(), x.cols());
+            let designs: [Design; 2] = [x.clone().into(), Csr::from_dense(x, 0.0).into()];
+            for design in &designs {
+                let red = ReducedSamples { x: design, y, t: 0.9 };
+                // masked: X̂ᵀ(1_S ⊙ (X̂·v))
+                let mut full = vec![0.0; 2 * p];
+                red.matvec(v, &mut full);
+                let in_set: Vec<bool> = {
+                    let mut m = vec![false; 2 * p];
+                    for &s in rows {
+                        m[s] = true;
+                    }
+                    m
+                };
+                for (i, f) in full.iter_mut().enumerate() {
+                    if !in_set[i] {
+                        *f = 0.0;
+                    }
+                }
+                let mut masked = vec![0.0; n];
+                red.matvec_t(&full, &mut masked);
+                // gathered: Gᵀ(G·v)
+                let mut panel = GatheredRows::new();
+                red.gather_rows_into(rows, &mut panel);
+                let mut gv = vec![0.0; rows.len()];
+                red.gathered_matvec(&panel, v, &mut gv);
+                let mut gathered = vec![0.0; n];
+                red.gathered_matvec_t(&panel, &gv, &mut gathered);
+                close_vec(
+                    &gathered,
+                    &masked,
+                    1e-9,
+                    &format!("Hessian product (sparse={})", design.is_sparse()),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}

@@ -199,3 +199,158 @@ fn closed_service_rejects_submissions() {
     assert_eq!(service.metrics().submitted(), 1);
     service.shutdown();
 }
+
+/// The segmented path engine's headline contract: a long `Path` grid
+/// split across 1/2/8 workers (speculative warm starts handed across
+/// segments) must reproduce the offline `PathRunner::run` coefficient
+/// sequence **bit-for-bit**, in both SVM regimes. The speculative
+/// endpoint solve makes segments independent; the dual active-set
+/// solver's final iterate is the exact Cholesky solve on the final free
+/// set — warm-start-invariant — and the primal ignores dual warm starts,
+/// so the chain cut cannot move a single bit.
+#[test]
+fn segmented_path_job_matches_offline_runner_bit_for_bit() {
+    // (n, p) regimes: 2p > n ⇒ primal, n ≥ 2p ⇒ dual.
+    for (n, p, seed) in [(40usize, 60usize, 811u64), (160, 12, 812)] {
+        let d = synth_regression(&SynthSpec {
+            n,
+            p,
+            support: 8.min(p / 2),
+            seed,
+            ..Default::default()
+        });
+        let runner = PathRunner::new(PathRunnerConfig { grid: 12, ..Default::default() });
+        let grid = runner.derive_grid(&d);
+        assert!(grid.len() >= 4, "grid too small to segment: {}", grid.len());
+
+        let sven_solver = Sven::new(RustBackend::default());
+        let offline = runner.run(&d, &sven_solver, &grid).unwrap();
+        let x = Arc::new(Design::from(d.x.clone()));
+        let y = Arc::new(d.y.clone());
+
+        for workers in [1usize, 2, 8] {
+            // path_segment_min: 2 forces segmentation wherever workers
+            // allow it (grid of ~12 ⇒ up to 6 segments).
+            let service = Service::start(ServiceConfig {
+                pool: PoolConfig { workers, queue_capacity: 32 },
+                path_segment_min: 2,
+                ..Default::default()
+            });
+            let rx = service
+                .submit_path(
+                    9,
+                    x.clone(),
+                    y.clone(),
+                    runner.grid_points(&grid),
+                    BackendChoice::Rust,
+                )
+                .unwrap();
+            let served = rx.recv().unwrap().result.expect("path ok").expect_path();
+            let segments = service.metrics().path_segments();
+            if workers > 1 {
+                assert!(
+                    segments >= 2,
+                    "{n}x{p} workers={workers}: expected a split, got {segments} segments"
+                );
+            } else {
+                assert_eq!(segments, 0, "one worker must not segment");
+            }
+            assert_eq!(service.metrics().completed(), 1);
+            service.shutdown();
+
+            assert_eq!(served.len(), offline.len());
+            for (i, (off, srv)) in offline.iter().zip(&served).enumerate() {
+                for j in 0..off.beta.len() {
+                    assert_eq!(
+                        off.beta[j].to_bits(),
+                        srv.beta[j].to_bits(),
+                        "{n}x{p} workers={workers} point {i} j={j}: \
+                         offline {} vs served {}",
+                        off.beta[j],
+                        srv.beta[j]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Path-engine metrics are live: a served path job reports its total
+/// inner-CG work, and primal-regime solves report panel gathers.
+#[test]
+fn path_engine_metrics_are_live() {
+    // Primal regime (2p > n) so the shrinking Newton (CG + gathers) runs.
+    let d = synth_regression(&SynthSpec {
+        n: 30,
+        p: 40,
+        support: 6,
+        seed: 813,
+        ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig { grid: 6, ..Default::default() });
+    let grid = runner.derive_grid(&d);
+    assert!(!grid.is_empty());
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 2, queue_capacity: 8 },
+        path_segment_min: 2,
+        ..Default::default()
+    });
+    let rx = service
+        .submit_path(
+            1,
+            Arc::new(Design::from(d.x.clone())),
+            Arc::new(d.y.clone()),
+            runner.grid_points(&grid),
+            BackendChoice::Rust,
+        )
+        .unwrap();
+    rx.recv().unwrap().result.expect("path ok");
+    let m = service.metrics();
+    assert!(m.cg_iters_total() > 0, "primal solves must report CG iterations");
+    let report = m.report();
+    assert!(report.contains("cg_iters_total="), "report: {report}");
+    assert!(report.contains("path_segments="), "report: {report}");
+    service.shutdown();
+}
+
+/// A segmented path job with an invalid late grid point fails fast at
+/// submission — before any segment burns a sweep — with the same
+/// accepted-then-failed semantics as a worker-side rejection.
+#[test]
+fn segmented_path_with_bad_point_fails_fast() {
+    let d = synth_regression(&SynthSpec {
+        n: 24,
+        p: 10,
+        support: 4,
+        seed: 814,
+        ..Default::default()
+    });
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 4, queue_capacity: 16 },
+        path_segment_min: 2,
+        ..Default::default()
+    });
+    // 8 valid points, then one with t = NaN at the very end.
+    let mut grid: Vec<sven::coordinator::GridPoint> = (0..8)
+        .map(|i| sven::coordinator::GridPoint { t: 0.2 + 0.1 * i as f64, lambda2: 0.5 })
+        .collect();
+    grid.push(sven::coordinator::GridPoint { t: f64::NAN, lambda2: 0.5 });
+    let rx = service
+        .submit_path(
+            1,
+            Arc::new(Design::from(d.x.clone())),
+            Arc::new(d.y.clone()),
+            grid,
+            BackendChoice::Rust,
+        )
+        .expect("submission accepted");
+    let out = rx.recv().unwrap();
+    let err = out.result.unwrap_err();
+    assert!(err.contains("t must be positive"), "got: {err}");
+    let m = service.metrics();
+    assert_eq!(m.submitted(), 1);
+    assert_eq!(m.failed(), 1);
+    assert_eq!(m.path_segments(), 0, "no segment may run for an invalid grid");
+    assert_eq!(m.prep_builds(), 0, "no preparation may be built for an invalid grid");
+    service.shutdown();
+}

@@ -63,6 +63,18 @@ fn main() {
         );
     }
 
+    // Batched-solve / CV micro-bench: width-1 CG vs blocked CG panels,
+    // and k standalone fold path jobs vs one CvPath job (asserts
+    // per-column and per-fold bit-identity even in smoke mode).
+    let (sp_bcg, sp_cv) = sven::bench::figures::cv_micro(!smoke);
+    if !smoke {
+        println!(
+            "batched-solve speedups: blocked CG @width 4 {sp_bcg:.1}x, CvPath vs \
+             k-standalone {sp_cv:.2}x (acceptance: blocked CG > 1x at width >= 4 on \
+             the bench shapes)"
+        );
+    }
+
     let (warm, reps) = if smoke { (1, 2) } else { (2, 10) };
 
     // gemm through the Mat facade (includes dispatch + allocation)

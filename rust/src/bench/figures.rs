@@ -549,6 +549,187 @@ pub fn path_micro(full: bool) -> (f64, f64, f64) {
 }
 
 // ---------------------------------------------------------------------------
+// Batched-solve / CV micro-bench (blocked CG panels, CvPath jobs)
+// ---------------------------------------------------------------------------
+
+/// Batched-solve micro-bench, two comparisons:
+///
+/// 1. width-1 CG (one solo `cg_solve_with` per right-hand side) vs the
+///    blocked `cg_solve_multi_with` at panel widths 2/4/8 on a
+///    memory-bound two-matvec ridge Hessian — the panel streams X once
+///    per iteration for every system (per-column bit-identity asserted
+///    even in smoke mode);
+/// 2. k standalone fold `Path` jobs vs one `JobKind::CvPath` job over
+///    the same folds and grid through the service (fold paths asserted
+///    bit-identical even in smoke mode).
+///
+/// `full` runs the acceptance shapes; otherwise tiny CI-smoke shapes.
+/// Returns (blocked-CG speedup at width 4, k-standalone/CvPath
+/// wall-clock ratio).
+pub fn cv_micro(full: bool) -> (f64, f64) {
+    use super::harness::measure;
+    use crate::coordinator::{cv, BackendChoice, PoolConfig, Service, ServiceConfig};
+    use crate::linalg::{cg_solve_multi_with, cg_solve_with, CgOptions, CgScratch, Mat, MultiVec};
+    use crate::testing::prop::{RidgeFamily, RidgeOp};
+    use std::sync::Arc;
+
+    let reps = if full { 7 } else { 2 };
+    println!("=== cv micro: blocked CG panels / CvPath jobs ===");
+    let mut rng = crate::rng::Rng::seed_from(8181);
+
+    // --- 1) width-1 CG vs blocked CG on the shared ridge-Hessian
+    // test double (same operator the blocked-CG proptests pin) ---
+    let (cn, cd) = if full { (4096usize, 512usize) } else { (240, 48) };
+    let x = Mat::from_fn(cn, cd, |_, _| rng.normal());
+    let opts = CgOptions { tol: 1e-10, max_iter: 40 };
+    let mut speedup_w4 = f64::NAN;
+    for w in [2usize, 4, 8] {
+        let shifts: Vec<f64> = (0..w).map(|i| 1.0 + i as f64).collect();
+        let b = MultiVec::from_fn(cd, w, |_, _| rng.normal());
+        let mut scratch = CgScratch::new();
+        let t_solo = measure(1, reps, || {
+            for j in 0..w {
+                let op = RidgeOp::new(&x, shifts[j]);
+                let mut sol = vec![0.0; cd];
+                cg_solve_with(&op, b.col(j), &mut sol, &opts, &mut scratch);
+            }
+        })
+        .summary
+        .median();
+        let opts_vec = vec![opts.clone(); w];
+        let t_multi = measure(1, reps, || {
+            let fam = RidgeFamily::new(&x, shifts.clone());
+            let mut sol = MultiVec::zeros(cd, w);
+            cg_solve_multi_with(&fam, &b, &mut sol, &opts_vec, &mut scratch);
+        })
+        .summary
+        .median();
+        let sp = t_solo / t_multi;
+        if w == 4 {
+            speedup_w4 = sp;
+        }
+        println!(
+            "blocked-cg X {cn}x{cd} width {w}: {w} solo solves {:.2}ms | blocked {:.2}ms \
+             ({:.2}x)",
+            t_solo * 1e3,
+            t_multi * 1e3,
+            sp
+        );
+        // Column-wise bit-identity, re-checked at the bench shape (the
+        // proptests pin it at small shapes).
+        let fam = RidgeFamily::new(&x, shifts.clone());
+        let mut sol_m = MultiVec::zeros(cd, w);
+        cg_solve_multi_with(&fam, &b, &mut sol_m, &opts_vec, &mut scratch);
+        for j in 0..w {
+            let op = RidgeOp::new(&x, shifts[j]);
+            let mut sol_s = vec![0.0; cd];
+            cg_solve_with(&op, b.col(j), &mut sol_s, &opts, &mut scratch);
+            for i in 0..cd {
+                assert_eq!(
+                    sol_s[i].to_bits(),
+                    sol_m.col(j)[i].to_bits(),
+                    "blocked CG diverged from solo at w={w} col {j} i={i}"
+                );
+            }
+        }
+    }
+
+    // --- 2) k standalone fold path jobs vs one CvPath job ---
+    let (pn, pp, grid_n, folds) =
+        if full { (1200usize, 32usize, 16, 4usize) } else { (120, 8, 5, 3) };
+    let data = crate::data::synth_regression(&crate::data::SynthSpec {
+        name: format!("cv-{pn}x{pp}"),
+        n: pn,
+        p: pp,
+        support: (pp / 4).max(3),
+        seed: 8282,
+        ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig {
+        grid: grid_n,
+        path: PathSettings { num_lambda: 50, ..Default::default() },
+        ..Default::default()
+    });
+    let grid = runner.derive_grid(&data);
+    let mut points = runner.grid_points(&grid);
+    points.retain(|gp| gp.t > 0.0);
+    if points.len() < 2 {
+        println!("grid too small ({} points), skipping CvPath comparison", points.len());
+        return (speedup_w4, f64::NAN);
+    }
+    let x = Arc::new(crate::linalg::Design::from(data.x.clone()));
+    let y = Arc::new(data.y.clone());
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 4, queue_capacity: 64 },
+        path_segment_min: 4,
+        ..Default::default()
+    });
+
+    // k standalone jobs: fold problems built caller-side, one path job
+    // each (this is what CV looked like before CvPath existed).
+    let timer = Timer::start();
+    let mut rxs = Vec::with_capacity(folds);
+    for f in 0..folds {
+        let (xf, yf) = cv::fold_problem(&x, &y, folds, f);
+        let rx = service
+            .submit_path(100 + f as u64, xf, yf, points.clone(), BackendChoice::Rust)
+            .expect("service accepting jobs");
+        rxs.push(rx);
+    }
+    let alone: Vec<Vec<crate::solvers::elastic_net::EnSolution>> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().result.expect("fold path").expect_path())
+        .collect();
+    let t_alone = timer.elapsed();
+
+    // One CvPath job over the same folds and grid.
+    let timer = Timer::start();
+    let rx = service
+        .submit_cv_path(200, x.clone(), y.clone(), folds, points.clone(), BackendChoice::Rust)
+        .expect("service accepting jobs");
+    let cvres = rx.recv().unwrap().result.expect("cv path").expect_cv_path();
+    let t_cv = timer.elapsed();
+
+    // The CV job must reproduce the standalone fold paths bit-for-bit
+    // (asserted even in smoke mode).
+    assert_eq!(cvres.fold_paths.len(), alone.len());
+    for (f, (a, b)) in alone.iter().zip(&cvres.fold_paths).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (i, (sa, sb)) in a.iter().zip(b).enumerate() {
+            for j in 0..sa.beta.len() {
+                assert_eq!(
+                    sa.beta[j].to_bits(),
+                    sb.beta[j].to_bits(),
+                    "cv fold {f} point {i} j={j} diverged from standalone"
+                );
+            }
+        }
+    }
+    let cv_speedup = t_alone / t_cv;
+    println!(
+        "cv {folds}-fold over {} points ({pn}x{pp}): {folds} standalone jobs {:.1}ms | \
+         one CvPath job {:.1}ms ({:.2}x, bit-identical; best λ index {} of {})",
+        points.len(),
+        t_alone * 1e3,
+        t_cv * 1e3,
+        cv_speedup,
+        cvres.best_index,
+        cvres.cv_errors.len()
+    );
+    let m = service.metrics();
+    println!(
+        "cv metrics: cv_folds={} prep_builds={} batched_cg_rhs_total={} \
+         batch_panel_rebuilds={}",
+        m.cv_folds(),
+        m.prep_builds(),
+        m.batched_cg_rhs_total(),
+        m.batch_panel_rebuilds()
+    );
+    service.shutdown();
+    (speedup_w4, cv_speedup)
+}
+
+// ---------------------------------------------------------------------------
 // Figure 1
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,207 @@
+//! k-fold cross-validation over one shared data set — the dominant real
+//! workload for picking λ, served as a first-class job.
+//!
+//! A `JobKind::CvPath { folds, grid }` job splits the rows of one
+//! `Arc<Design>` into k contiguous validation slices, builds each fold's
+//! training sub-problem **once** (gathered rows, shared via `Arc` across
+//! every worker thereafter — workers never copy), runs each fold's grid
+//! as a warm-start chained path through the same `sweep_prepared` core
+//! as `JobKind::Path` (so each fold's path is bit-for-bit a standalone
+//! path job on that fold's data), and assembles the per-λ CV-error curve
+//! plus the winning grid point refit on the full data. Fold preparations
+//! flow through the service's single-flight prep cache under derived
+//! dataset ids, so fold×segment fan-out still builds each preparation
+//! exactly once.
+
+use crate::linalg::Design;
+use crate::solvers::elastic_net::EnSolution;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Validation slice of fold `f`: the k slices are contiguous, cover all
+/// `n` rows, and differ in size by at most one (the first `n % folds`
+/// folds get the extra row).
+pub fn fold_validation_rows(n: usize, folds: usize, f: usize) -> Range<usize> {
+    debug_assert!(f < folds);
+    let base = n / folds;
+    let extra = n % folds;
+    let start = f * base + f.min(extra);
+    let size = base + usize::from(f < extra);
+    start..start + size
+}
+
+/// Training rows of fold `f` — everything outside the validation slice,
+/// in ascending order (the deterministic gather order every consumer,
+/// including the bit-for-bit service tests, relies on).
+pub fn fold_training_rows(n: usize, folds: usize, f: usize) -> Vec<usize> {
+    let val = fold_validation_rows(n, folds, f);
+    (0..n).filter(|i| !val.contains(i)).collect()
+}
+
+/// Build fold `f`'s training sub-problem `(X_train, y_train)`. One
+/// gather per fold; the result is shared via `Arc` from then on. The
+/// gathered rows are bit-identical copies, so a solve against the
+/// result is bit-for-bit a solve against that data submitted as its own
+/// data set.
+pub fn fold_problem(
+    x: &Design,
+    y: &[f64],
+    folds: usize,
+    f: usize,
+) -> (Arc<Design>, Arc<Vec<f64>>) {
+    let rows = fold_training_rows(x.rows(), folds, f);
+    let xf = x.gather_rows(&rows);
+    let yf: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
+    (Arc::new(xf), Arc::new(yf))
+}
+
+/// Mean squared validation error of `beta` on fold `f`'s held-out rows.
+pub fn fold_validation_mse(
+    x: &Design,
+    y: &[f64],
+    folds: usize,
+    f: usize,
+    beta: &[f64],
+) -> f64 {
+    let val = fold_validation_rows(x.rows(), folds, f);
+    let m = val.len();
+    let mut sum = 0.0;
+    for i in val {
+        let e = x.row_dot(i, beta) - y[i];
+        sum += e * e;
+    }
+    sum / m as f64
+}
+
+/// Assemble the CV curve: `cv_errors[g]` is the mean over folds of the
+/// validation MSE of fold `f`'s β at grid point `g` (fold-ascending
+/// accumulation — deterministic).
+pub fn cv_error_curve(
+    x: &Design,
+    y: &[f64],
+    folds: usize,
+    fold_paths: &[Vec<EnSolution>],
+) -> Vec<f64> {
+    let grid_len = fold_paths.first().map_or(0, |p| p.len());
+    let mut errs = vec![0.0; grid_len];
+    for (f, path) in fold_paths.iter().enumerate() {
+        for (g, sol) in path.iter().enumerate() {
+            errs[g] += fold_validation_mse(x, y, folds, f, &sol.beta);
+        }
+    }
+    for e in errs.iter_mut() {
+        *e /= folds as f64;
+    }
+    errs
+}
+
+/// argmin of the CV curve (ties → the first, i.e. the sparser end when
+/// the grid runs sparse→dense); empty curves return 0.
+pub fn best_index(errs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &e) in errs.iter().enumerate() {
+        if e < errs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Derived dataset id of fold `f` of data set `dataset_id` — the prep
+/// cache key of the fold sub-problem (splitmix64 mix; colliding with a
+/// caller-chosen id is as unlikely as any 64-bit hash collision, and a
+/// differently-shaped collision is rejected by the prep dims check).
+pub(crate) fn fold_dataset_id(dataset_id: u64, f: u64) -> u64 {
+    let mut z = dataset_id ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(f.wrapping_add(1));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Result of a `JobKind::CvPath` job.
+#[derive(Clone, Debug)]
+pub struct CvPathResult {
+    /// Per-fold solution paths (fold-major, grid order), each
+    /// bit-for-bit identical to a standalone `JobKind::Path` on that
+    /// fold's training data.
+    pub fold_paths: Vec<Vec<EnSolution>>,
+    /// Mean validation MSE per grid point, averaged across folds.
+    pub cv_errors: Vec<f64>,
+    /// argmin of `cv_errors` (ties → first).
+    pub best_index: usize,
+    /// The winning grid point refit on the **full** data set.
+    pub best: EnSolution,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    #[test]
+    fn folds_partition_all_rows() {
+        for (n, k) in [(10usize, 3usize), (12, 4), (7, 7), (23, 5)] {
+            let mut seen = vec![false; n];
+            for f in 0..k {
+                let val = fold_validation_rows(n, k, f);
+                assert!(!val.is_empty(), "n={n} k={k} f={f}");
+                for i in val.clone() {
+                    assert!(!seen[i], "row {i} in two folds (n={n} k={k})");
+                    seen[i] = true;
+                }
+                let train = fold_training_rows(n, k, f);
+                assert_eq!(train.len(), n - val.len());
+                assert!(train.iter().all(|i| !val.contains(i)));
+                assert!(train.windows(2).all(|w| w[0] < w[1]), "sorted");
+            }
+            assert!(seen.iter().all(|&s| s), "n={n} k={k}: rows uncovered");
+        }
+    }
+
+    #[test]
+    fn fold_problem_gathers_training_rows() {
+        let mut rng = Rng::seed_from(71);
+        let x = Mat::from_fn(9, 4, |_, _| rng.normal());
+        let y: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let d = Design::from(x.clone());
+        let (xf, yf) = fold_problem(&d, &y, 3, 1);
+        let train = fold_training_rows(9, 3, 1);
+        assert_eq!(xf.rows(), train.len());
+        assert_eq!(yf.len(), train.len());
+        let xfd = xf.to_dense();
+        for (s, &r) in train.iter().enumerate() {
+            assert_eq!(yf[s], y[r]);
+            for j in 0..4 {
+                assert_eq!(xfd.get(s, j).to_bits(), x.get(r, j).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn mse_and_curve_and_argmin() {
+        // 4 rows, 2 folds; identity-ish design so the MSE is hand
+        // checkable.
+        let x = Design::from(Mat::from_fn(4, 1, |_, _| 1.0));
+        let y = vec![1.0, 3.0, 5.0, 7.0];
+        // β = [3]: predictions all 3. Fold 0 validates rows 0..2 → mse
+        // ((3-1)² + (3-3)²)/2 = 2; fold 1 rows 2..4 → ((3-5)²+(3-7)²)/2
+        // = 10.
+        assert!((fold_validation_mse(&x, &y, 2, 0, &[3.0]) - 2.0).abs() < 1e-12);
+        assert!((fold_validation_mse(&x, &y, 2, 1, &[3.0]) - 10.0).abs() < 1e-12);
+        assert_eq!(best_index(&[3.0, 1.0, 1.0, 2.0]), 1);
+        assert_eq!(best_index(&[]), 0);
+    }
+
+    #[test]
+    fn fold_ids_are_distinct() {
+        let base = 42u64;
+        let ids: Vec<u64> = (0..8).map(|f| fold_dataset_id(base, f)).collect();
+        for a in 0..8 {
+            assert_ne!(ids[a], base);
+            for b in (a + 1)..8 {
+                assert_ne!(ids[a], ids[b]);
+            }
+        }
+    }
+}

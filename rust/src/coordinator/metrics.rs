@@ -19,6 +19,9 @@ pub struct Metrics {
     path_segments: AtomicU64,
     sv_gather_rebuilds: AtomicU64,
     cg_iters_total: AtomicU64,
+    cv_folds: AtomicU64,
+    batched_cg_rhs_total: AtomicU64,
+    batch_panel_rebuilds: AtomicU64,
     latencies: Mutex<Vec<f64>>,
     queue_waits: Mutex<Vec<f64>>,
 }
@@ -83,6 +86,22 @@ impl Metrics {
         }
     }
 
+    /// A CV-fold sub-problem was built (once per fold per `CvPath` job).
+    pub fn on_cv_fold(&self) {
+        self.cv_folds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Batch fusion counters from a sweep: Newton right-hand sides that
+    /// went through blocked CG, and physical shared-panel gathers.
+    pub fn on_batch_stats(&self, batched_rhs: usize, panel_builds: usize) {
+        if batched_rhs > 0 {
+            self.batched_cg_rhs_total.fetch_add(batched_rhs as u64, Ordering::Relaxed);
+        }
+        if panel_builds > 0 {
+            self.batch_panel_rebuilds.fetch_add(panel_builds as u64, Ordering::Relaxed);
+        }
+    }
+
     pub fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
     }
@@ -121,6 +140,18 @@ impl Metrics {
 
     pub fn cg_iters_total(&self) -> u64 {
         self.cg_iters_total.load(Ordering::Relaxed)
+    }
+
+    pub fn cv_folds(&self) -> u64 {
+        self.cv_folds.load(Ordering::Relaxed)
+    }
+
+    pub fn batched_cg_rhs_total(&self) -> u64 {
+        self.batched_cg_rhs_total.load(Ordering::Relaxed)
+    }
+
+    pub fn batch_panel_rebuilds(&self) -> u64 {
+        self.batch_panel_rebuilds.load(Ordering::Relaxed)
     }
 
     /// End-to-end latency summary (None until something completed).
@@ -169,7 +200,8 @@ impl Metrics {
         format!(
             "submitted={} completed={} failed={} rejected={} \
              prep_hits={} prep_builds={} prep_evictions={} \
-             path_segments={} sv_gather_rebuilds={} cg_iters_total={} {lat}{qw}",
+             path_segments={} sv_gather_rebuilds={} cg_iters_total={} \
+             cv_folds={} batched_cg_rhs_total={} batch_panel_rebuilds={} {lat}{qw}",
             self.submitted(),
             self.completed(),
             self.failed(),
@@ -179,7 +211,10 @@ impl Metrics {
             self.prep_evictions(),
             self.path_segments(),
             self.sv_gather_rebuilds(),
-            self.cg_iters_total()
+            self.cg_iters_total(),
+            self.cv_folds(),
+            self.batched_cg_rhs_total(),
+            self.batch_panel_rebuilds()
         )
     }
 }
@@ -241,6 +276,24 @@ mod tests {
         assert!(report.contains("path_segments=2"));
         assert!(report.contains("cg_iters_total=20"));
         assert!(report.contains("sv_gather_rebuilds=3"));
+    }
+
+    #[test]
+    fn cv_and_batch_counters() {
+        let m = Metrics::new();
+        m.on_cv_fold();
+        m.on_cv_fold();
+        m.on_cv_fold();
+        m.on_batch_stats(8, 2);
+        m.on_batch_stats(0, 0); // no-op
+        m.on_batch_stats(4, 1);
+        assert_eq!(m.cv_folds(), 3);
+        assert_eq!(m.batched_cg_rhs_total(), 12);
+        assert_eq!(m.batch_panel_rebuilds(), 3);
+        let report = m.report();
+        assert!(report.contains("cv_folds=3"));
+        assert!(report.contains("batched_cg_rhs_total=12"));
+        assert!(report.contains("batch_panel_rebuilds=3"));
     }
 
     #[test]

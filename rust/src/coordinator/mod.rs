@@ -9,6 +9,9 @@
 //!   sweep them with prepared-problem reuse + warm starts (the chaining
 //!   core, [`path::sweep_prepared`], is shared with the service's
 //!   `JobKind::Path` worker).
+//! - [`cv`] — k-fold cross-validation as a first-class workload: fold
+//!   splits and sub-problems, per-λ CV-error curves, and the
+//!   `JobKind::CvPath` result type (fold paths + winning refit).
 //! - [`queue`] — bounded MPMC work queue (condvar-based, backpressure).
 //! - [`pool`] — worker pool; workers own thread-local solver state
 //!   (backends + scratch) but share the immutable preparations.
@@ -20,6 +23,7 @@
 //!   metrics.
 //! - [`metrics`] — counters and latency summaries.
 
+pub mod cv;
 pub mod metrics;
 pub mod path;
 pub mod pool;
@@ -27,12 +31,13 @@ pub mod prep_cache;
 pub mod queue;
 pub mod service;
 
+pub use cv::CvPathResult;
 pub use metrics::Metrics;
 pub use path::{GridPoint, PathRunResult, PathRunner, PathRunnerConfig};
 pub use pool::{Pool, PoolConfig};
 pub use prep_cache::PrepCache;
 pub use queue::Queue;
 pub use service::{
-    BackendChoice, JobKind, JobResult, Service, ServiceClosed, ServiceConfig, SolveJob,
-    SolveOutcome,
+    BackendChoice, JobKind, JobResult, Service, ServiceClosed, ServiceConfig,
+    ServiceConfigError, SolveJob, SolveOutcome,
 };

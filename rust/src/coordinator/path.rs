@@ -12,7 +12,9 @@ use crate::data::Dataset;
 use crate::linalg::{vecops, Design};
 use crate::solvers::elastic_net::{EnProblem, EnSolution};
 use crate::solvers::glmnet::{self, PathPoint, PathSettings};
-use crate::solvers::sven::{Sven, SvmBackend, SvmPrep, SvmScratch, SvmWarm};
+use crate::solvers::sven::{
+    Sven, SvmBackend, SvmBatchStats, SvmMode, SvmPrep, SvmScratch, SvmWarm,
+};
 use std::sync::Arc;
 
 /// One (t, λ₂) setting of a sweep — the wire form of a grid point (the
@@ -37,9 +39,19 @@ pub struct GridPoint {
 /// start of the previous segment when the coordinator splits one long
 /// grid into chained segments.
 ///
+/// **Batched fast path:** primal-mode preparations run the whole grid
+/// through the backend's batched solve ([`SvmPrep::solve_batch`] — one
+/// lockstep Newton fusing gradients, margin refreshes, and shared-panel
+/// blocked CG across the points). This cannot move a bit: the chain's
+/// warm starts carry only dual variables, which the primal solver
+/// ignores, so the sequential chain is a sequence of cold solves and
+/// the batched engine is pinned bit-identical to those. Dual-mode
+/// sweeps keep the sequential chain (their warm starts do real work).
+///
 /// Both the offline [`PathRunner::run`] and the coordinator's
 /// `JobKind::Path` workers call exactly this function, so the two
-/// produce bit-identical coefficient sequences.
+/// produce bit-identical coefficient sequences. Returns the per-point
+/// solutions plus the batch fusion stats (zero for sequential sweeps).
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_prepared<B: SvmBackend>(
     sven: &Sven<B>,
@@ -50,7 +62,13 @@ pub fn sweep_prepared<B: SvmBackend>(
     grid: &[GridPoint],
     warm0: Option<SvmWarm>,
     warm_start: bool,
-) -> anyhow::Result<Vec<EnSolution>> {
+) -> anyhow::Result<(Vec<EnSolution>, SvmBatchStats)> {
+    let primal_cold =
+        prep.mode() == SvmMode::Primal && warm0.as_ref().map_or(true, |w| w.w.is_none());
+    if primal_cold && grid.len() > 1 {
+        let pts: Vec<(f64, f64)> = grid.iter().map(|gp| (gp.t, gp.lambda2)).collect();
+        return sven.solve_prepared_batch(prep, scratch, x, y, &pts);
+    }
     let mut out = Vec::with_capacity(grid.len());
     let mut warm: Option<SvmWarm> = warm0;
     for gp in grid {
@@ -61,7 +79,7 @@ pub fn sweep_prepared<B: SvmBackend>(
         }
         out.push(sol);
     }
-    Ok(out)
+    Ok((out, SvmBatchStats::default()))
 }
 
 /// Configuration of a path run.
@@ -151,7 +169,7 @@ impl PathRunner {
         let prep = sven.prepare_shared(&x, &y)?;
         let mut scratch = SvmScratch::new();
         let points = self.grid_points(grid);
-        let sols = sweep_prepared(
+        let (sols, _batch) = sweep_prepared(
             sven,
             prep.as_ref(),
             &mut scratch,

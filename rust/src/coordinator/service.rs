@@ -11,6 +11,7 @@
 //! zero design/response deep copies and exactly one preparation build,
 //! regardless of worker count.
 
+use super::cv::{self, CvPathResult};
 use super::metrics::Metrics;
 use super::path::{sweep_prepared, GridPoint};
 use super::pool::{Pool, PoolConfig};
@@ -50,6 +51,15 @@ pub enum JobKind {
     /// they exist for; a cold-start sweep is just a sequence of `Point`
     /// jobs).
     Path { grid: Vec<GridPoint> },
+    /// k-fold cross-validation of the grid: build k fold sub-problems
+    /// (contiguous validation slices, training rows gathered once per
+    /// fold and shared), sweep each fold's grid through the same
+    /// machinery as `Path` — fold×segment work items across the pool,
+    /// fold preparations deduplicated by the prep cache — and assemble
+    /// the per-λ CV-error curve plus the winning grid point refit on the
+    /// full data. Each fold's path is bit-for-bit identical to a
+    /// standalone `Path` job on that fold's training data.
+    CvPath { folds: usize, grid: Vec<GridPoint> },
 }
 
 /// A solve job. Data sets (dense or sparse [`Design`]s) are shared via
@@ -77,22 +87,32 @@ pub enum JobResult {
     Point(EnSolution),
     /// Per-point solutions, in grid order.
     Path(Vec<EnSolution>),
+    /// Fold paths, CV-error curve, and the winning refit.
+    CvPath(CvPathResult),
 }
 
 impl JobResult {
-    /// Unwrap a point result (panics on a path result — caller bug).
+    /// Unwrap a point result (panics otherwise — caller bug).
     pub fn expect_point(self) -> EnSolution {
         match self {
             JobResult::Point(sol) => sol,
-            JobResult::Path(_) => panic!("expected a point result, got a path"),
+            _ => panic!("expected a point result"),
         }
     }
 
-    /// Unwrap a path result (panics on a point result — caller bug).
+    /// Unwrap a path result (panics otherwise — caller bug).
     pub fn expect_path(self) -> Vec<EnSolution> {
         match self {
             JobResult::Path(sols) => sols,
-            JobResult::Point(_) => panic!("expected a path result, got a point"),
+            _ => panic!("expected a path result"),
+        }
+    }
+
+    /// Unwrap a CV-path result (panics otherwise — caller bug).
+    pub fn expect_cv_path(self) -> CvPathResult {
+        match self {
+            JobResult::CvPath(res) => res,
+            _ => panic!("expected a cv-path result"),
         }
     }
 }
@@ -148,6 +168,56 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Invalid [`ServiceConfig`] — returned by [`ServiceConfig::validate`] /
+/// [`Service::try_start`] at construction, instead of letting
+/// zero-valued knobs reach division or eviction edge cases deep inside
+/// the running service.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServiceConfigError(String);
+
+impl std::fmt::Display for ServiceConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid service config: {}", self.0)
+    }
+}
+
+impl std::error::Error for ServiceConfigError {}
+
+impl ServiceConfig {
+    /// Check every knob the service would otherwise trip over at
+    /// runtime: a zero `path_segment_min` divides by zero when
+    /// segmenting (`usize::MAX` is the documented way to disable
+    /// segmentation), a zero `prep_cache_capacity` evicts preparations
+    /// while they are being shared, and a zero-worker or zero-capacity
+    /// pool can never make progress.
+    pub fn validate(&self) -> Result<(), ServiceConfigError> {
+        if self.pool.workers == 0 {
+            return Err(ServiceConfigError("pool.workers must be >= 1".into()));
+        }
+        if self.pool.queue_capacity == 0 {
+            return Err(ServiceConfigError(
+                "pool.queue_capacity must be >= 1 (a zero-capacity queue accepts nothing)"
+                    .into(),
+            ));
+        }
+        if self.prep_cache_capacity == 0 {
+            return Err(ServiceConfigError(
+                "prep_cache_capacity must be >= 1 (a zero-capacity cache would evict \
+                 preparations while workers share them)"
+                    .into(),
+            ));
+        }
+        if self.path_segment_min == 0 {
+            return Err(ServiceConfigError(
+                "path_segment_min must be >= 1 (0 would divide by zero when segmenting; \
+                 use usize::MAX to disable segmentation)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Cache key: one preparation per (data set, backend).
 type PrepKey = (u64, BackendChoice);
 
@@ -177,11 +247,12 @@ fn validate_job(x: &Design, y: &[f64], points: &[GridPoint]) -> Result<(), Strin
     Ok(())
 }
 
-/// What actually travels through the worker pool: a whole job, or one
-/// segment of a split `Path` grid.
+/// What actually travels through the worker pool: a whole job, one
+/// segment of a split `Path` grid, or one fold×segment of a `CvPath`.
 enum WorkItem {
     Job(SolveJob),
     Segment(PathSegment),
+    CvSegment(CvSegment),
 }
 
 /// One segment of a segmented path job: the half-open grid range
@@ -267,6 +338,95 @@ impl SegmentedPath {
             None => Ok(JobResult::Path(all)),
             Some(e) => Err(e),
         };
+        match &result {
+            Ok(_) => metrics.on_complete(total, queue_wait),
+            Err(_) => metrics.on_fail(queue_wait),
+        }
+        let _ = self.reply.lock().unwrap().send(SolveOutcome {
+            id: self.id,
+            result,
+            total_seconds: total,
+            queue_wait_seconds: queue_wait,
+        });
+    }
+}
+
+/// One fold×segment work item of a `CvPath` job: the half-open grid
+/// range `[start, end)` of fold `fold`, plus a handle on the job-wide
+/// shared state.
+struct CvSegment {
+    shared: Arc<SharedCvPath>,
+    fold: usize,
+    index: usize,
+    start: usize,
+    end: usize,
+}
+
+/// Shared state of a `CvPath` job fanned out as fold×segment work items.
+///
+/// Fold sub-problems are built **once** — the first worker to touch a
+/// fold gathers its training rows (`cv::fold_problem`) under the fold's
+/// mutex and every later segment clones the `Arc`s. Fold preparations
+/// are deduplicated by the service prep cache under derived dataset ids
+/// (`cv::fold_dataset_id`), so k folds × s segments × w workers still
+/// build exactly one preparation per fold. Each fold's segments run the
+/// same speculative-warm-start chain as a split `Path` job, so fold
+/// paths are bit-for-bit standalone path jobs on the fold data.
+struct SharedCvPath {
+    id: u64,
+    dataset_id: u64,
+    x: Arc<Design>,
+    y: Arc<Vec<f64>>,
+    backend: BackendChoice,
+    folds: usize,
+    grid: Vec<GridPoint>,
+    /// Per-fold training sub-problem, built once on first touch.
+    fold_data: Vec<Mutex<Option<(Arc<Design>, Arc<Vec<f64>>)>>>,
+    reply: Mutex<Sender<SolveOutcome>>,
+    submitted: Timer,
+    /// Fold-major parts: `parts[fold · nseg + segment]`.
+    parts: Mutex<Vec<Option<Result<Vec<EnSolution>, String>>>>,
+    /// Parts still outstanding; whoever drops this to zero assembles.
+    remaining: AtomicUsize,
+    first_pickup: Mutex<Option<f64>>,
+    /// Segments per fold (the same split a standalone `Path` job of this
+    /// grid would get).
+    nseg: usize,
+}
+
+impl SharedCvPath {
+    /// Record one part; returns true when this call was the last one.
+    fn record(&self, slot: usize, result: Result<Vec<EnSolution>, String>) -> bool {
+        {
+            let mut parts = self.parts.lock().unwrap();
+            parts[slot] = Some(result);
+        }
+        self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+
+    /// Drain the recorded parts into fold-major paths (first error, in
+    /// fold-major order, wins).
+    fn take_fold_paths(&self) -> Result<Vec<Vec<EnSolution>>, String> {
+        let mut parts = std::mem::take(&mut *self.parts.lock().unwrap());
+        let mut fold_paths = Vec::with_capacity(self.folds);
+        for f in 0..self.folds {
+            let mut path = Vec::with_capacity(self.grid.len());
+            for s in 0..self.nseg {
+                match parts[f * self.nseg + s].take() {
+                    Some(Ok(sols)) => path.extend(sols),
+                    Some(Err(e)) => return Err(e),
+                    None => return Err("internal: cv segment lost".to_string()),
+                }
+            }
+            fold_paths.push(path);
+        }
+        Ok(fold_paths)
+    }
+
+    /// Send the assembled outcome (and meter it).
+    fn send_outcome(&self, result: Result<JobResult, String>, metrics: &Metrics) {
+        let total = self.submitted.elapsed();
+        let queue_wait = self.first_pickup.lock().unwrap().unwrap_or(0.0);
         match &result {
             Ok(_) => metrics.on_complete(total, queue_wait),
             Err(_) => metrics.on_fail(queue_wait),
@@ -423,6 +583,9 @@ impl WorkerCtx {
             JobKind::Path { grid } => {
                 self.checked_prep(job.dataset_id, job.backend, &job.x, &job.y, grid)
             }
+            JobKind::CvPath { .. } => {
+                return Err("internal: CvPath jobs are dispatched as fold segments".into())
+            }
         }?;
         match &job.kind {
             JobKind::Point { t, lambda2 } => {
@@ -446,7 +609,7 @@ impl WorkerCtx {
                 Ok(JobResult::Point(sol))
             }
             JobKind::Path { grid } => {
-                let sols = match job.backend {
+                let (sols, batch) = match job.backend {
                     BackendChoice::Rust => sweep_prepared(
                         &self.rust,
                         prep.as_ref(),
@@ -469,11 +632,13 @@ impl WorkerCtx {
                     ),
                 }
                 .map_err(|e| e.to_string())?;
+                self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
                 for sol in &sols {
                     self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
                 }
                 Ok(JobResult::Path(sols))
             }
+            JobKind::CvPath { .. } => unreachable!("handled above"),
         }
     }
 
@@ -527,7 +692,7 @@ impl WorkerCtx {
             warm0 = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
         }
         let slice = &sp.grid[seg.start..seg.end];
-        let sols = match sp.backend {
+        let (sols, batch) = match sp.backend {
             BackendChoice::Rust => sweep_prepared(
                 &self.rust,
                 prep.as_ref(),
@@ -550,10 +715,126 @@ impl WorkerCtx {
             ),
         }
         .map_err(|e| e.to_string())?;
+        self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
         for sol in &sols {
             self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
         }
         Ok(sols)
+    }
+
+    /// Run one fold×segment of a `CvPath` job; the last part to land
+    /// assembles the CV curve and refits the winner.
+    fn handle_cv_segment(&mut self, seg: CvSegment) {
+        let sp = seg.shared.clone();
+        {
+            let wait = sp.submitted.elapsed();
+            let mut fp = sp.first_pickup.lock().unwrap();
+            *fp = Some(fp.map_or(wait, |v| v.min(wait)));
+        }
+        let result = self.solve_cv_segment(&seg);
+        let slot = seg.fold * sp.nseg + seg.index;
+        if sp.record(slot, result) {
+            let outcome = self.assemble_cv(&sp);
+            sp.send_outcome(outcome, &self.metrics);
+        }
+    }
+
+    /// The fold-segment solve: fetch (or build, once) the fold's
+    /// training sub-problem, then run exactly the split-`Path` segment
+    /// logic against it — speculative warm start from the previous grid
+    /// point, chained sweep over the slice.
+    fn solve_cv_segment(&mut self, seg: &CvSegment) -> Result<Vec<EnSolution>, String> {
+        let sp = seg.shared.as_ref();
+        let (fx, fy) = {
+            let mut guard = sp.fold_data[seg.fold].lock().unwrap();
+            match &*guard {
+                Some(pair) => pair.clone(),
+                None => {
+                    let pair = cv::fold_problem(&sp.x, &sp.y, sp.folds, seg.fold);
+                    self.metrics.on_cv_fold();
+                    *guard = Some(pair.clone());
+                    pair
+                }
+            }
+        };
+        let fold_ds = cv::fold_dataset_id(sp.dataset_id, seg.fold as u64);
+        let lo = seg.start.saturating_sub(1);
+        let prep = self.checked_prep(fold_ds, sp.backend, &fx, &fy, &sp.grid[lo..seg.end])?;
+        let mut warm0: Option<SvmWarm> = None;
+        if seg.start > 0 {
+            let gp = sp.grid[seg.start - 1];
+            let prob = EnProblem::shared(fx.clone(), fy.clone(), gp.t, gp.lambda2);
+            let sol = match sp.backend {
+                BackendChoice::Rust => {
+                    self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
+                }
+                BackendChoice::Xla => self.xla.as_ref().unwrap().solve_prepared(
+                    prep.as_ref(),
+                    &mut self.scratch,
+                    &prob,
+                    None,
+                ),
+            }
+            .map_err(|e| e.to_string())?;
+            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+            warm0 = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+        }
+        let slice = &sp.grid[seg.start..seg.end];
+        let (sols, batch) = match sp.backend {
+            BackendChoice::Rust => sweep_prepared(
+                &self.rust,
+                prep.as_ref(),
+                &mut self.scratch,
+                &fx,
+                &fy,
+                slice,
+                warm0,
+                true,
+            ),
+            BackendChoice::Xla => sweep_prepared(
+                self.xla.as_ref().unwrap(),
+                prep.as_ref(),
+                &mut self.scratch,
+                &fx,
+                &fy,
+                slice,
+                warm0,
+                true,
+            ),
+        }
+        .map_err(|e| e.to_string())?;
+        self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
+        for sol in &sols {
+            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+        }
+        Ok(sols)
+    }
+
+    /// Assemble a finished `CvPath`: fold paths → CV-error curve →
+    /// winning grid point refit on the full data (its preparation comes
+    /// from the same shared cache, so a warm service refits without a
+    /// build).
+    fn assemble_cv(&mut self, sp: &SharedCvPath) -> Result<JobResult, String> {
+        let fold_paths = sp.take_fold_paths()?;
+        let cv_errors = cv::cv_error_curve(&sp.x, &sp.y, sp.folds, &fold_paths);
+        let best_index = cv::best_index(&cv_errors);
+        let gp = sp.grid[best_index];
+        let prep = self.checked_prep(sp.dataset_id, sp.backend, &sp.x, &sp.y, &[gp])?;
+        let prob = EnProblem::shared(sp.x.clone(), sp.y.clone(), gp.t, gp.lambda2);
+        let best = match sp.backend {
+            BackendChoice::Rust => {
+                self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
+            }
+            BackendChoice::Xla => self.xla.as_ref().unwrap().solve_prepared(
+                prep.as_ref(),
+                &mut self.scratch,
+                &prob,
+                None,
+            ),
+        }
+        .map_err(|e| e.to_string())?;
+        self.metrics.on_solve_stats(best.cg_iters, best.gather_rebuilds);
+        Ok(JobResult::CvPath(CvPathResult { fold_paths, cv_errors, best_index, best }))
     }
 }
 
@@ -568,14 +849,16 @@ pub struct Service {
 }
 
 impl Service {
-    /// Start the service with its worker pool and shared prep cache.
-    pub fn start(config: ServiceConfig) -> Self {
+    /// Start the service, validating the configuration first — the
+    /// fallible constructor ([`ServiceConfig::validate`]).
+    pub fn try_start(config: ServiceConfig) -> Result<Self, ServiceConfigError> {
+        config.validate()?;
         let metrics = Arc::new(Metrics::new());
         let preps = Arc::new(PrepCache::new(config.prep_cache_capacity, metrics.clone()));
         let metrics_for_workers = metrics.clone();
         let preps_for_workers = preps.clone();
-        let workers = config.pool.workers.max(1);
-        let path_segment_min = config.path_segment_min.max(1);
+        let workers = config.pool.workers;
+        let path_segment_min = config.path_segment_min;
         let cfg = config.clone();
         let pool = Pool::spawn(
             &config.pool,
@@ -589,15 +872,26 @@ impl Service {
             |ctx: &mut WorkerCtx, item: WorkItem| match item {
                 WorkItem::Job(job) => ctx.handle(job),
                 WorkItem::Segment(seg) => ctx.handle_segment(seg),
+                WorkItem::CvSegment(seg) => ctx.handle_cv_segment(seg),
             },
         );
-        Service {
+        Ok(Service {
             pool,
             metrics,
             preps,
             next_id: std::sync::atomic::AtomicU64::new(0),
             workers,
             path_segment_min,
+        })
+    }
+
+    /// Start the service with its worker pool and shared prep cache.
+    /// Panics on an invalid configuration; use [`Service::try_start`]
+    /// to handle [`ServiceConfigError`] gracefully.
+    pub fn start(config: ServiceConfig) -> Self {
+        match Service::try_start(config) {
+            Ok(service) => service,
+            Err(e) => panic!("{e}"),
         }
     }
 
@@ -640,6 +934,11 @@ impl Service {
                         .map(|()| rx);
                 }
                 JobKind::Path { grid }
+            }
+            JobKind::CvPath { folds, grid } => {
+                return self
+                    .submit_cv(id, dataset_id, x, y, folds, grid, backend, tx)
+                    .map(|()| rx);
             }
             point => point,
         };
@@ -740,6 +1039,115 @@ impl Service {
         }
         self.metrics.on_submit();
         Ok(())
+    }
+
+    /// Enqueue a CV-path job as `folds × nseg` fold-segment work items.
+    /// Bad parameters fail fast as an accepted-then-failed outcome
+    /// (before any fold burns a sweep); a service closing mid-submit
+    /// fails the unqueued parts so the queued ones still assemble.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_cv(
+        &self,
+        id: u64,
+        dataset_id: u64,
+        x: Arc<Design>,
+        y: Arc<Vec<f64>>,
+        folds: usize,
+        grid: Vec<GridPoint>,
+        backend: BackendChoice,
+        reply: Sender<SolveOutcome>,
+    ) -> Result<(), ServiceClosed> {
+        let invalid = if folds < 2 {
+            Some(format!("invalid job: cv needs at least 2 folds, got {folds}"))
+        } else if folds > x.rows() {
+            Some(format!(
+                "invalid job: {folds} folds exceed the {} data rows",
+                x.rows()
+            ))
+        } else if grid.is_empty() {
+            Some("invalid job: cv grid is empty".to_string())
+        } else {
+            validate_job(&x, &y, &grid).err()
+        };
+        if let Some(e) = invalid {
+            self.metrics.on_submit();
+            self.metrics.on_fail(0.0);
+            let _ = reply.send(SolveOutcome {
+                id,
+                result: Err(e),
+                total_seconds: 0.0,
+                queue_wait_seconds: 0.0,
+            });
+            return Ok(());
+        }
+        // Per-fold segmentation mirrors a standalone `Path` job of this
+        // grid exactly (same `segments_for` split), which is what makes
+        // fold paths bit-for-bit standalone paths.
+        let nseg = self.segments_for(grid.len());
+        let len = grid.len();
+        let shared = Arc::new(SharedCvPath {
+            id,
+            dataset_id,
+            x,
+            y,
+            backend,
+            folds,
+            grid,
+            fold_data: (0..folds).map(|_| Mutex::new(None)).collect(),
+            reply: Mutex::new(reply),
+            submitted: Timer::start(),
+            parts: Mutex::new((0..folds * nseg).map(|_| None).collect()),
+            remaining: AtomicUsize::new(folds * nseg),
+            first_pickup: Mutex::new(None),
+            nseg,
+        });
+        let base = len / nseg;
+        let extra = len % nseg;
+        'folds: for f in 0..folds {
+            let mut start = 0usize;
+            for index in 0..nseg {
+                let size = base + usize::from(index < extra);
+                let end = start + size;
+                let seg = CvSegment { shared: shared.clone(), fold: f, index, start, end };
+                start = end;
+                if self.pool.submit(WorkItem::CvSegment(seg)).is_err() {
+                    if f == 0 && index == 0 {
+                        // Nothing queued: a plain rejection.
+                        self.metrics.on_reject();
+                        return Err(ServiceClosed);
+                    }
+                    // Closed mid-submit: fail this and every later part
+                    // so the already-queued ones still assemble (to an
+                    // error — the assembly scan short-circuits on the
+                    // first failed part, so no refit is attempted).
+                    for slot in (f * nseg + index)..(folds * nseg) {
+                        if shared.record(slot, Err(ServiceClosed.to_string())) {
+                            let err = match shared.take_fold_paths() {
+                                Err(e) => e,
+                                Ok(_) => "internal: cv assembly raced".to_string(),
+                            };
+                            shared.send_outcome(Err(err), &self.metrics);
+                        }
+                    }
+                    break 'folds;
+                }
+            }
+        }
+        self.metrics.on_submit();
+        Ok(())
+    }
+
+    /// Convenience: submit a k-fold cross-validated path sweep.
+    pub fn submit_cv_path(
+        &self,
+        dataset_id: u64,
+        x: Arc<Design>,
+        y: Arc<Vec<f64>>,
+        folds: usize,
+        grid: Vec<GridPoint>,
+        backend: BackendChoice,
+    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+        self.submit(dataset_id, x, y, JobKind::CvPath { folds, grid }, backend)
     }
 
     /// Convenience: submit a single (t, λ₂) solve.
@@ -942,6 +1350,97 @@ mod tests {
         assert_eq!(res.err(), Some(ServiceClosed));
         assert_eq!(service.metrics().rejected(), 1);
         assert_eq!(service.metrics().submitted(), 0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn zero_valued_config_knobs_are_rejected_at_construction() {
+        let ok = ServiceConfig::default();
+        assert!(ok.validate().is_ok());
+        let cases: Vec<(&str, ServiceConfig)> = vec![
+            (
+                "path_segment_min",
+                ServiceConfig { path_segment_min: 0, ..Default::default() },
+            ),
+            (
+                "prep_cache_capacity",
+                ServiceConfig { prep_cache_capacity: 0, ..Default::default() },
+            ),
+            (
+                "pool.workers",
+                ServiceConfig {
+                    pool: PoolConfig { workers: 0, queue_capacity: 4 },
+                    ..Default::default()
+                },
+            ),
+            (
+                "pool.queue_capacity",
+                ServiceConfig {
+                    pool: PoolConfig { workers: 1, queue_capacity: 0 },
+                    ..Default::default()
+                },
+            ),
+        ];
+        for (knob, cfg) in cases {
+            let err = cfg.validate().expect_err(knob);
+            assert!(err.to_string().contains(knob), "{knob}: {err}");
+            assert!(Service::try_start(cfg).is_err(), "{knob} must fail try_start");
+        }
+        // usize::MAX stays the documented segmentation-off switch.
+        let off = ServiceConfig { path_segment_min: usize::MAX, ..Default::default() };
+        assert!(off.validate().is_ok());
+    }
+
+    #[test]
+    fn cv_jobs_validate_folds_and_grid() {
+        let d = synth_regression(&SynthSpec {
+            n: 10,
+            p: 6,
+            support: 3,
+            seed: 304,
+            ..Default::default()
+        });
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 1, queue_capacity: 8 },
+            ..Default::default()
+        });
+        let x = Arc::new(Design::from(d.x.clone()));
+        let y = Arc::new(d.y.clone());
+        let grid = vec![GridPoint { t: 0.4, lambda2: 0.5 }];
+        // folds < 2
+        let rx = service
+            .submit_cv_path(1, x.clone(), y.clone(), 1, grid.clone(), BackendChoice::Rust)
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("at least 2 folds"), "got: {err}");
+        // folds > n
+        let rx = service
+            .submit_cv_path(1, x.clone(), y.clone(), 11, grid.clone(), BackendChoice::Rust)
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("exceed"), "got: {err}");
+        // empty grid
+        let rx = service
+            .submit_cv_path(1, x.clone(), y.clone(), 3, Vec::new(), BackendChoice::Rust)
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("grid is empty"), "got: {err}");
+        // invalid grid point
+        let rx = service
+            .submit_cv_path(
+                1,
+                x,
+                y,
+                3,
+                vec![GridPoint { t: -1.0, lambda2: 0.5 }],
+                BackendChoice::Rust,
+            )
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("t must be positive"), "got: {err}");
+        assert_eq!(service.metrics().failed(), 4);
+        assert_eq!(service.metrics().prep_builds(), 0);
+        assert_eq!(service.metrics().cv_folds(), 0);
         service.shutdown();
     }
 

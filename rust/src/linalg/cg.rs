@@ -6,6 +6,7 @@
 //! GPU backend parallelizes. The same routine (with a Jacobi/diagonal
 //! preconditioner) backs the L1_LS interior-point solver (Kim et al. 2007).
 
+use super::multivec::MultiVec;
 use super::vecops;
 
 /// Abstract symmetric positive (semi)definite operator `v ↦ A·v`.
@@ -16,6 +17,61 @@ pub trait LinOp {
     /// Optional diagonal preconditioner `M⁻¹ ≈ diag(A)⁻¹`; `None` = identity.
     fn precond(&self, _r: &[f64], _out: &mut [f64]) -> bool {
         false
+    }
+}
+
+/// A family of symmetric positive (semi)definite operators sharing one
+/// data stream — the blocked-CG substrate. Problem `j` of the family is
+/// an operator `A_j` (typically the same matrix with per-problem scalar
+/// shifts: neighboring path points' Newton Hessians, per-λ interior-point
+/// systems); `apply_multi` computes the whole panel of products in one
+/// fused pass over the shared data.
+///
+/// **Contract:** slot `s` of `out` must be **bit-identical** to what a
+/// solo [`LinOp::apply`] of operator `A_{cols[s]}` would produce on
+/// `vs.col(s)`, at any thread count and any panel width / slot order.
+/// The fused multi-RHS kernels in [`crate::linalg`] satisfy this (they
+/// keep the exact single-RHS per-element reduction order), so operators
+/// built on them inherit it — which is what lets
+/// [`cg_solve_multi_with`] promise per-column bit-identity to solo CG.
+pub trait MultiLinOp {
+    /// Shared system dimension.
+    fn dim(&self) -> usize;
+    /// Number of problems in the family.
+    fn nprobs(&self) -> usize;
+    /// Fused panel product: `out.col(s) ← A_{cols[s]} · vs.col(s)` for
+    /// every slot `s`. `cols` maps panel slots to problem indices (the
+    /// panel shrinks under compaction, so slots are not problem ids).
+    fn apply_multi(&self, cols: &[usize], vs: &MultiVec, out: &mut MultiVec);
+    /// Optional per-problem diagonal preconditioner for problem `j`;
+    /// must match the solo operator's [`LinOp::precond`] bit-for-bit.
+    fn precond(&self, _j: usize, _r: &[f64], _out: &mut [f64]) -> bool {
+        false
+    }
+}
+
+/// Adapter viewing one problem of a [`MultiLinOp`] family as a solo
+/// [`LinOp`] — the reference the blocked solver's bit-identity contract
+/// (and its tests) compare against.
+pub struct MultiCol<'a, A: MultiLinOp> {
+    pub op: &'a A,
+    pub col: usize,
+}
+
+impl<A: MultiLinOp> LinOp for MultiCol<'_, A> {
+    fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    fn apply(&self, v: &[f64], out: &mut [f64]) {
+        let vs = MultiVec::from_cols(&[v]);
+        let mut os = MultiVec::zeros(out.len(), 1);
+        self.op.apply_multi(&[self.col], &vs, &mut os);
+        out.copy_from_slice(os.col(0));
+    }
+
+    fn precond(&self, r: &[f64], out: &mut [f64]) -> bool {
+        self.op.precond(self.col, r, out)
     }
 }
 
@@ -44,10 +100,11 @@ pub struct CgOutcome {
 }
 
 /// Reusable CG workspace: the five work vectors (`r`, `ax`, `z`, `p`,
-/// `ap`) that [`cg_solve`] would otherwise allocate on every call. Hot
-/// callers (the primal Newton's per-iteration CG, the L1_LS
-/// interior-point loop) hold one scratch for the whole outer loop, so the
-/// inner solves allocate nothing.
+/// `ap`) that [`cg_solve`] would otherwise allocate on every call, plus
+/// their panel-shaped twins for the blocked solver
+/// ([`cg_solve_multi_with`]). Hot callers (the primal Newton's
+/// per-iteration CG, the L1_LS interior-point loop) hold one scratch for
+/// the whole outer loop, so the inner solves allocate nothing.
 #[derive(Clone, Debug, Default)]
 pub struct CgScratch {
     r: Vec<f64>,
@@ -55,6 +112,11 @@ pub struct CgScratch {
     z: Vec<f64>,
     p: Vec<f64>,
     ap: Vec<f64>,
+    /// Panel-shaped r/p/ap (+ z) buffers of the blocked solver.
+    rm: MultiVec,
+    zm: MultiVec,
+    pm: MultiVec,
+    apm: MultiVec,
 }
 
 impl CgScratch {
@@ -69,6 +131,15 @@ impl CgScratch {
         for buf in [&mut self.r, &mut self.ax, &mut self.z, &mut self.p, &mut self.ap] {
             buf.clear();
             buf.resize(n, 0.0);
+        }
+    }
+
+    /// Size the panel buffers to `n × w` and zero them (same reuse-is-
+    /// bit-identical guarantee as [`CgScratch::resize`];
+    /// [`MultiVec::resize`] zero-fills by contract).
+    fn resize_multi(&mut self, n: usize, w: usize) {
+        for buf in [&mut self.rm, &mut self.zm, &mut self.pm, &mut self.apm] {
+            buf.resize(n, w);
         }
     }
 }
@@ -102,7 +173,7 @@ pub fn cg_solve_with<A: LinOp>(
     }
 
     scratch.resize(n);
-    let CgScratch { r, ax, z, p, ap } = scratch;
+    let CgScratch { r, ax, z, p, ap, .. } = scratch;
     a.apply(x, ax);
     for i in 0..n {
         r[i] = b[i] - ax[i];
@@ -146,6 +217,200 @@ pub fn cg_solve_with<A: LinOp>(
         }
     }
     CgOutcome { iters, rel_residual: rel, converged: rel <= opts.tol }
+}
+
+/// Result of a blocked multi-RHS CG solve.
+#[derive(Clone, Debug)]
+pub struct CgMultiOutcome {
+    /// Per-problem outcome, identical to what solo [`cg_solve_with`]
+    /// would report for that problem.
+    pub outcomes: Vec<CgOutcome>,
+    /// How many times the panel was compacted (converged columns
+    /// evicted so later Hessian products run on a narrower panel).
+    pub compactions: usize,
+}
+
+/// Blocked preconditioned CG: drives every problem of a [`MultiLinOp`]
+/// family through **one shared panel product per iteration**
+/// (`apply_multi`), which is where the panel width pays — the shared
+/// data (the gathered SV panel, the design matrix) is streamed once per
+/// iteration for all right-hand sides instead of once per problem.
+///
+/// Column `j` is solved from the warm start `x.col(j)`; its iterate
+/// sequence is **bit-identical** to a solo [`cg_solve_with`] run of the
+/// corresponding [`MultiCol`] operator at any thread count: every
+/// per-column scalar/vector operation replicates the solo loop's order
+/// exactly, and the panel product's per-column bit-identity contract
+/// does the rest. Converged (or broken-down) columns stop updating but
+/// stay in the panel until fewer than half the slots are live, at which
+/// point the panel is compacted (counted in
+/// [`CgMultiOutcome::compactions`]); eviction cannot move bits because
+/// no column's arithmetic ever reads another column.
+///
+/// `opts` is per-problem (`opts.len() == a.nprobs()`), so callers like
+/// the L1_LS interior point can tighten each system's tolerance
+/// independently.
+pub fn cg_solve_multi_with<A: MultiLinOp>(
+    a: &A,
+    b: &MultiVec,
+    x: &mut MultiVec,
+    opts: &[CgOptions],
+    scratch: &mut CgScratch,
+) -> CgMultiOutcome {
+    let n = a.dim();
+    let nprobs = a.nprobs();
+    assert_eq!((b.rows(), b.ncols()), (n, nprobs), "B shape mismatch");
+    assert_eq!((x.rows(), x.ncols()), (n, nprobs), "X shape mismatch");
+    assert_eq!(opts.len(), nprobs, "one CgOptions per problem");
+
+    let mut outcomes = vec![CgOutcome { iters: 0, rel_residual: 0.0, converged: false }; nprobs];
+    let mut done = vec![false; nprobs];
+    let mut rz = vec![0.0; nprobs];
+    let mut bnorm = vec![0.0; nprobs];
+    let max_iter: Vec<usize> = opts
+        .iter()
+        .map(|o| if o.max_iter == 0 { (2 * n).max(16) } else { o.max_iter })
+        .collect();
+
+    // Zero right-hand sides resolve immediately (exactly as solo CG does)
+    // and never enter the panel.
+    let mut slots: Vec<usize> = Vec::with_capacity(nprobs);
+    for j in 0..nprobs {
+        bnorm[j] = vecops::norm2(b.col(j));
+        if bnorm[j] == 0.0 {
+            x.col_mut(j).fill(0.0);
+            outcomes[j].converged = true;
+            done[j] = true;
+        } else {
+            slots.push(j);
+        }
+    }
+    if slots.is_empty() {
+        return CgMultiOutcome { outcomes, compactions: 0 };
+    }
+
+    scratch.resize_multi(n, slots.len());
+    let CgScratch { rm, zm, pm, apm, .. } = scratch;
+
+    // Initial residual r = b − A·x: one fused panel product over the
+    // warm starts.
+    for (s, &j) in slots.iter().enumerate() {
+        pm.col_mut(s).copy_from_slice(x.col(j));
+    }
+    a.apply_multi(&slots, pm, apm);
+    for (s, &j) in slots.iter().enumerate() {
+        let bcol = b.col(j);
+        let ax = apm.col(s);
+        let r = rm.col_mut(s);
+        for i in 0..n {
+            r[i] = bcol[i] - ax[i];
+        }
+    }
+    // z / p / ρ per column, and the initial convergence check.
+    let mut live = 0usize;
+    for (s, &j) in slots.iter().enumerate() {
+        if !a.precond(j, rm.col(s), zm.col_mut(s)) {
+            zm.col_mut(s).copy_from_slice(rm.col(s));
+        }
+        pm.col_mut(s).copy_from_slice(zm.col(s));
+        rz[j] = vecops::dot(rm.col(s), zm.col(s));
+        let rel = vecops::norm2(rm.col(s)) / bnorm[j];
+        outcomes[j].rel_residual = rel;
+        if rel <= opts[j].tol {
+            outcomes[j].converged = true;
+            done[j] = true;
+        } else {
+            live += 1;
+        }
+    }
+
+    let mut compactions = 0usize;
+    while live > 0 {
+        // Converged columns ride along (their slots are skipped but still
+        // multiplied) until fewer than half the slots are live, then the
+        // panel compacts: p/r columns slide down, dead slots drop off.
+        if live * 2 <= slots.len() && live < slots.len() {
+            let rows = n;
+            let mut dst = 0usize;
+            let mut kept: Vec<usize> = Vec::with_capacity(live);
+            for (s, &j) in slots.iter().enumerate() {
+                if done[j] {
+                    continue;
+                }
+                if dst != s {
+                    pm.data_mut().copy_within(s * rows..(s + 1) * rows, dst * rows);
+                    rm.data_mut().copy_within(s * rows..(s + 1) * rows, dst * rows);
+                }
+                kept.push(j);
+                dst += 1;
+            }
+            slots = kept;
+            pm.truncate_cols(dst);
+            rm.truncate_cols(dst);
+            zm.truncate_cols(dst);
+            apm.truncate_cols(dst);
+            compactions += 1;
+        }
+
+        // The blocked step: one fused product feeds every live column.
+        a.apply_multi(&slots, pm, apm);
+        for (s, &j) in slots.iter().enumerate() {
+            if done[j] {
+                continue;
+            }
+            let pap = vecops::dot(pm.col(s), apm.col(s));
+            if pap <= 0.0 || !pap.is_finite() {
+                // Curvature breakdown: stop with the best-so-far iterate,
+                // exactly as the solo loop does.
+                done[j] = true;
+                live -= 1;
+                continue;
+            }
+            let alpha = rz[j] / pap;
+            vecops::axpy(alpha, pm.col(s), x.col_mut(j));
+            vecops::axpy(-alpha, apm.col(s), rm.col_mut(s));
+            let rel = vecops::norm2(rm.col(s)) / bnorm[j];
+            outcomes[j].iters += 1;
+            outcomes[j].rel_residual = rel;
+            if rel <= opts[j].tol {
+                outcomes[j].converged = true;
+                done[j] = true;
+                live -= 1;
+                continue;
+            }
+            if outcomes[j].iters >= max_iter[j] {
+                // Solo CG would still update z/p before noticing the cap
+                // at the loop head; those updates are unobservable, so
+                // the column can freeze here without moving bits.
+                done[j] = true;
+                live -= 1;
+                continue;
+            }
+            if !a.precond(j, rm.col(s), zm.col_mut(s)) {
+                zm.col_mut(s).copy_from_slice(rm.col(s));
+            }
+            let rz_new = vecops::dot(rm.col(s), zm.col(s));
+            let beta = rz_new / rz[j];
+            rz[j] = rz_new;
+            let zc = zm.col(s);
+            let pc = pm.col_mut(s);
+            for i in 0..n {
+                pc[i] = zc[i] + beta * pc[i];
+            }
+        }
+    }
+    CgMultiOutcome { outcomes, compactions }
+}
+
+/// [`cg_solve_multi_with`] over a fresh workspace (tests / one-shot
+/// callers).
+pub fn cg_solve_multi<A: MultiLinOp>(
+    a: &A,
+    b: &MultiVec,
+    x: &mut MultiVec,
+    opts: &[CgOptions],
+) -> CgMultiOutcome {
+    cg_solve_multi_with(a, b, x, opts, &mut CgScratch::new())
 }
 
 /// A dense matrix as a LinOp (testing / small systems).
@@ -246,5 +511,187 @@ mod tests {
         let mut x = vec![0.0; 40];
         let out = cg_solve(&DenseOp(&a), &b, &mut x, &CgOptions { tol: 1e-16, max_iter: 3 });
         assert!(out.iters <= 3);
+    }
+
+    /// A family sharing one gram matrix with per-problem diagonal shifts
+    /// `A_j = G + d_j·I` — the blocked-CG test double (the shifts give
+    /// every column its own spectrum, hence its own iteration count).
+    struct ShiftedFamily<'a> {
+        g: &'a Mat,
+        shifts: Vec<f64>,
+    }
+
+    impl MultiLinOp for ShiftedFamily<'_> {
+        fn dim(&self) -> usize {
+            self.g.rows()
+        }
+
+        fn nprobs(&self) -> usize {
+            self.shifts.len()
+        }
+
+        fn apply_multi(&self, cols: &[usize], vs: &MultiVec, out: &mut MultiVec) {
+            self.g.matvec_multi_into(vs, out);
+            for (s, &j) in cols.iter().enumerate() {
+                let d = self.shifts[j];
+                let v = vs.col(s);
+                let o = out.col_mut(s);
+                for i in 0..o.len() {
+                    o[i] += d * v[i];
+                }
+            }
+        }
+    }
+
+    /// Solo reference for one member of [`ShiftedFamily`], built on the
+    /// *single-RHS* kernel — so the bit-equality below proves the
+    /// blocked solver matches a genuinely independent solo run, not just
+    /// a width-1 panel of itself.
+    struct ShiftedOp<'a> {
+        g: &'a Mat,
+        d: f64,
+    }
+
+    impl LinOp for ShiftedOp<'_> {
+        fn dim(&self) -> usize {
+            self.g.rows()
+        }
+
+        fn apply(&self, v: &[f64], out: &mut [f64]) {
+            self.g.matvec_into(v, out);
+            for i in 0..out.len() {
+                out[i] += self.d * v[i];
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_columns_bit_match_solo_runs() {
+        let mut rng = Rng::seed_from(35);
+        let n = 48;
+        let g = random_spd(&mut rng, n);
+        for width in [1usize, 2, 4, 8] {
+            // Spread the shifts over orders of magnitude so columns
+            // converge at very different iteration counts (exercising the
+            // freeze-then-compact path).
+            let shifts: Vec<f64> = (0..width).map(|j| 10.0f64.powi(j as i32 % 4)).collect();
+            let fam = ShiftedFamily { g: &g, shifts: shifts.clone() };
+            let b = MultiVec::from_fn(n, width, |_, _| rng.normal());
+            let mut x = MultiVec::zeros(n, width);
+            let opts = vec![CgOptions::default(); width];
+            let multi = cg_solve_multi(&fam, &b, &mut x, &opts);
+            for j in 0..width {
+                let solo_op = ShiftedOp { g: &g, d: shifts[j] };
+                let mut xs = vec![0.0; n];
+                let solo = cg_solve(&solo_op, b.col(j), &mut xs, &CgOptions::default());
+                assert_eq!(solo.iters, multi.outcomes[j].iters, "w={width} j={j}");
+                assert_eq!(
+                    solo.converged, multi.outcomes[j].converged,
+                    "w={width} j={j}"
+                );
+                for i in 0..n {
+                    assert_eq!(
+                        xs[i].to_bits(),
+                        x.col(j)[i].to_bits(),
+                        "w={width} j={j} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_handles_zero_columns_and_warm_starts() {
+        let mut rng = Rng::seed_from(36);
+        let n = 30;
+        let g = random_spd(&mut rng, n);
+        let fam = ShiftedFamily { g: &g, shifts: vec![1.0, 2.0, 0.5] };
+        let mut b = MultiVec::from_fn(n, 3, |_, _| rng.normal());
+        b.col_mut(1).fill(0.0); // zero RHS in the middle of the panel
+        let mut x = MultiVec::from_fn(n, 3, |_, _| rng.normal()); // warm
+        let x0 = x.clone();
+        let opts = vec![CgOptions::default(); 3];
+        let multi = cg_solve_multi(&fam, &b, &mut x, &opts);
+        assert!(multi.outcomes[1].converged);
+        assert_eq!(multi.outcomes[1].iters, 0);
+        assert!(x.col(1).iter().all(|&v| v == 0.0));
+        for j in [0usize, 2] {
+            let solo_op = ShiftedOp { g: &g, d: fam.shifts[j] };
+            let mut xs = x0.col(j).to_vec();
+            let solo = cg_solve(&solo_op, b.col(j), &mut xs, &CgOptions::default());
+            assert_eq!(solo.iters, multi.outcomes[j].iters, "j={j}");
+            for i in 0..n {
+                assert_eq!(xs[i].to_bits(), x.col(j)[i].to_bits(), "j={j} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_compacts_after_early_convergence() {
+        let mut rng = Rng::seed_from(37);
+        let n = 40;
+        let g = random_spd(&mut rng, n);
+        // One nearly-diagonal (huge shift ⇒ converges in a few iters)
+        // column against three slow ones: the fast column must be evicted
+        // once ≤ half the panel is live.
+        let fam = ShiftedFamily { g: &g, shifts: vec![1e6, 0.1, 0.2, 1e6] };
+        let b = MultiVec::from_fn(n, 4, |_, _| rng.normal());
+        let mut x = MultiVec::zeros(n, 4);
+        let opts = vec![CgOptions::default(); 4];
+        let multi = cg_solve_multi(&fam, &b, &mut x, &opts);
+        assert!(multi.compactions >= 1, "expected a panel compaction");
+        for j in 0..4 {
+            let solo_op = ShiftedOp { g: &g, d: fam.shifts[j] };
+            let mut xs = vec![0.0; n];
+            let solo = cg_solve(&solo_op, b.col(j), &mut xs, &CgOptions::default());
+            assert_eq!(solo.iters, multi.outcomes[j].iters, "j={j}");
+            for i in 0..n {
+                assert_eq!(xs[i].to_bits(), x.col(j)[i].to_bits(), "j={j} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_scratch_reuse_is_bit_identical() {
+        let mut rng = Rng::seed_from(38);
+        let n = 25;
+        let g = random_spd(&mut rng, n);
+        let fam = ShiftedFamily { g: &g, shifts: vec![0.5, 3.0] };
+        let b = MultiVec::from_fn(n, 2, |_, _| rng.normal());
+        let opts = vec![CgOptions::default(); 2];
+        let mut scratch = CgScratch::new();
+        // Dirty the scratch with a differently-shaped solve first.
+        let fam_big = ShiftedFamily { g: &g, shifts: vec![1.0; 5] };
+        let b_big = MultiVec::from_fn(n, 5, |_, _| rng.normal());
+        let mut x_big = MultiVec::zeros(n, 5);
+        let opts_big = vec![CgOptions::default(); 5];
+        cg_solve_multi_with(&fam_big, &b_big, &mut x_big, &opts_big, &mut scratch);
+        let mut x1 = MultiVec::zeros(n, 2);
+        let fresh = cg_solve_multi(&fam, &b, &mut x1, &opts);
+        let mut x2 = MultiVec::zeros(n, 2);
+        let reused = cg_solve_multi_with(&fam, &b, &mut x2, &opts, &mut scratch);
+        for j in 0..2 {
+            assert_eq!(fresh.outcomes[j].iters, reused.outcomes[j].iters);
+            for i in 0..n {
+                assert_eq!(x1.col(j)[i].to_bits(), x2.col(j)[i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_respects_per_problem_options() {
+        let mut rng = Rng::seed_from(39);
+        let n = 35;
+        let g = random_spd(&mut rng, n);
+        let fam = ShiftedFamily { g: &g, shifts: vec![0.3, 0.3] };
+        let b = MultiVec::from_fn(n, 2, |_, _| rng.normal());
+        let mut x = MultiVec::zeros(n, 2);
+        let opts = vec![
+            CgOptions { tol: 1e-16, max_iter: 3 },
+            CgOptions { tol: 1e-10, max_iter: 0 },
+        ];
+        let multi = cg_solve_multi(&fam, &b, &mut x, &opts);
+        assert!(multi.outcomes[0].iters <= 3);
+        assert!(multi.outcomes[1].converged);
     }
 }

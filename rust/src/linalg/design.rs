@@ -185,6 +185,39 @@ impl Design {
         }
     }
 
+    /// Gather the selected rows into a new design of the same storage
+    /// kind — the CV-fold sub-problem constructor. Dense designs gather
+    /// through [`Mat::gather_rows_into`]; sparse designs through the
+    /// O(Σ nnz(row)) [`Csr::gather_rows_into`] (the CSC mirror of the
+    /// result is rebuilt, as any fresh sparse design's is). The gathered
+    /// rows are bit-identical copies, so solves on the result are
+    /// bit-for-bit solves on "that data as its own data set".
+    pub fn gather_rows(&self, rows: &[usize]) -> Design {
+        match self {
+            Design::Dense(m) => {
+                let mut out = Mat::zeros(0, 0);
+                m.gather_rows_into(rows, &mut out);
+                Design::Dense(out)
+            }
+            Design::Sparse { csr, .. } => {
+                let mut out = Csr::empty();
+                csr.gather_rows_into(rows, &mut out);
+                Design::from(out)
+            }
+        }
+    }
+
+    /// `⟨X[r, :], v⟩` — one prediction, used by the CV scorer on
+    /// held-out rows (O(p) dense, O(nnz(row)) sparse).
+    pub fn row_dot(&self, r: usize, v: &[f64]) -> f64 {
+        match self {
+            Design::Dense(m) => super::vecops::dot(m.row(r), v),
+            Design::Sparse { csr, .. } => {
+                csr.row_iter(r).map(|(c, x)| x * v[c]).sum()
+            }
+        }
+    }
+
     /// Column-access view for coordinate descent: a dense design yields a
     /// one-time transposed copy (contiguous columns, exactly what the
     /// dense CD inner loop always used); a sparse design borrows the CSC
@@ -362,6 +395,25 @@ mod tests {
             assert!((ns[j] - nd[j]).abs() < 1e-12, "col {j}");
         }
         assert!(d.nnz() <= 12 * 6);
+    }
+
+    #[test]
+    fn gather_rows_and_row_dot_agree_across_variants() {
+        let mut rng = Rng::seed_from(64);
+        let (d_sparse, m) = sparse_design(&mut rng, 10, 5, 0.4);
+        let d_dense = Design::from(m.clone());
+        let rows = [7usize, 0, 3];
+        let v: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        for d in [&d_dense, &d_sparse] {
+            let g = d.gather_rows(&rows);
+            assert_eq!((g.rows(), g.cols()), (3, 5));
+            assert_eq!(g.is_sparse(), d.is_sparse());
+            for (s, &r) in rows.iter().enumerate() {
+                let expect = crate::linalg::vecops::dot(m.row(r), &v);
+                assert!((d.row_dot(r, &v) - expect).abs() < 1e-12, "row {r}");
+                assert!((g.row_dot(s, &v) - expect).abs() < 1e-12, "gathered {s}");
+            }
+        }
     }
 
     #[test]

@@ -284,9 +284,24 @@ pub fn blocked_matmul_into(
 }
 
 /// One upper-triangle block `A[i0..i0+ri]·A[j0..j0+rj]ᵀ` of the Gram
-/// matrix, fully packed and k-blocked. Overwrites `out` (ri × rj).
-fn gram_block(a: &[f64], k: usize, i0: usize, ri: usize, j0: usize, rj: usize, out: &mut [f64]) {
-    out.fill(0.0);
+/// matrix, fully packed and k-blocked, written **straight into** the
+/// destination `c` (leading dimension `ldc`, rows relative to `c`'s
+/// first row, columns at offset `c_col0`) — no transient block buffer.
+fn gram_block(
+    a: &[f64],
+    k: usize,
+    i0: usize,
+    ri: usize,
+    j0: usize,
+    rj: usize,
+    c: &mut [f64],
+    ldc: usize,
+    c_col0: usize,
+) {
+    for r in 0..ri {
+        let base = r * ldc + c_col0;
+        c[base..base + rj].fill(0.0);
+    }
     let mut apack = vec![0.0; ri.div_ceil(MR) * MR * KC];
     let mut bpack = vec![0.0; rj.div_ceil(NR) * NR * KC];
     let panels = rj.div_ceil(NR);
@@ -311,54 +326,65 @@ fn gram_block(a: &[f64], k: usize, i0: usize, ri: usize, j0: usize, rj: usize, o
             kc,
             ri,
             rj,
-            out,
-            rj,
+            c,
+            ldc,
             0,
-            0,
+            c_col0,
         );
     }
 }
 
 /// Blocked parallel symmetric Gram (exposed for tests/benches). Computes
-/// only upper-triangle block pairs, then mirrors. Overwrites G.
+/// only upper-triangle blocks, written **in place** into their BS-row
+/// destination bands (each band owns its blocks `(bi, bj ≥ bi)`, so the
+/// parallel writes are disjoint), then mirrors the strict upper triangle
+/// into the lower one in band-sequential waves: bands are finalized
+/// top-down, each new band reading the already-final bands above it
+/// through a shrinking `split_at_mut` frontier while its own rows fan
+/// out over the pool. Peak transient memory is one packed A tile + one
+/// packed Aᵀ panel per worker (≈ `BS·KC` doubles each) instead of the
+/// ~m²/2 staged block buffers of the old scatter/mirror scheme — the
+/// difference is pinned by `rust/tests/gram_peak_alloc.rs`. Overwrites G
+/// with bits identical to the staged scheme (same per-block accumulation
+/// order, same mirrored copies), at any thread count.
 pub fn blocked_gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize, nt: usize) {
     let nb = m.div_ceil(BS);
-    let pairs: Vec<(usize, usize)> =
-        (0..nb).flat_map(|bi| (bi..nb).map(move |bj| (bi, bj))).collect();
     let edge = |b: usize| BS.min(m - b * BS);
-    // Phase 1: each block pair into its own buffer (disjoint outputs).
-    let mut blocks: Vec<Vec<f64>> =
-        pairs.iter().map(|&(bi, bj)| vec![0.0; edge(bi) * edge(bj)]).collect();
-    let pairs_ref = &pairs;
-    let items: Vec<&mut Vec<f64>> = blocks.iter_mut().collect();
-    parallel::parallel_items(nt, items, |idx, block| {
-        let (bi, bj) = pairs_ref[idx];
-        gram_block(a, k, bi * BS, edge(bi), bj * BS, edge(bj), block);
-    });
-    // Phase 2: scatter + mirror, parallel over BS-row bands of G.
-    let blocks_ref = &blocks;
+    // Phase 1: upper-triangle blocks, straight into their row bands.
     let bands: Vec<&mut [f64]> = g.chunks_mut(BS * m).collect();
-    parallel::parallel_items(nt, bands, |band, gband| {
-        for (idx, &(bi, bj)) in pairs_ref.iter().enumerate() {
-            let blk = &blocks_ref[idx];
-            let (ri, rj) = (edge(bi), edge(bj));
-            if bi == band {
-                for r in 0..ri {
-                    let dst = r * m + bj * BS;
-                    gband[dst..dst + rj].copy_from_slice(&blk[r * rj..(r + 1) * rj]);
-                }
-            }
-            if bj == band && bi != bj {
-                for r2 in 0..rj {
-                    let dst = r2 * m + bi * BS;
-                    let drow = &mut gband[dst..dst + ri];
-                    for (r, dv) in drow.iter_mut().enumerate() {
-                        *dv = blk[r * rj + r2];
-                    }
-                }
-            }
+    parallel::parallel_items(nt, bands, |bi, gband| {
+        let ri = edge(bi);
+        for bj in bi..nb {
+            gram_block(a, k, bi * BS, ri, bj * BS, edge(bj), gband, m, bj * BS);
         }
     });
+    // Phase 2: mirror waves. Band bi's lower-triangle columns are the
+    // transposes of blocks living in bands < bi, all final by the time
+    // the frontier reaches bi.
+    let mut done: Vec<&[f64]> = Vec::with_capacity(nb);
+    let mut tail: &mut [f64] = g;
+    for bi in 0..nb {
+        let band_len = edge(bi) * m;
+        let (band, rest) = {
+            let t = std::mem::take(&mut tail);
+            t.split_at_mut(band_len)
+        };
+        if bi > 0 {
+            let done_ref: &[&[f64]] = &done;
+            let rows: Vec<&mut [f64]> = band.chunks_mut(m).collect();
+            parallel::parallel_items(nt, rows, |r, grow| {
+                let gi = bi * BS + r;
+                for (bj, src_band) in done_ref.iter().enumerate() {
+                    let rj = edge(bj);
+                    for c in 0..rj {
+                        grow[bj * BS + c] = src_band[c * m + gi];
+                    }
+                }
+            });
+        }
+        done.push(band);
+        tail = rest;
+    }
 }
 
 #[cfg(test)]

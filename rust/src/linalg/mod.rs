@@ -24,7 +24,10 @@ pub mod multivec;
 pub mod sparse;
 pub mod vecops;
 
-pub use cg::{cg_solve, cg_solve_with, CgOptions, CgOutcome, CgScratch, LinOp};
+pub use cg::{
+    cg_solve, cg_solve_multi, cg_solve_multi_with, cg_solve_with, CgMultiOutcome, CgOptions,
+    CgOutcome, CgScratch, LinOp, MultiCol, MultiLinOp,
+};
 pub use cholesky::Cholesky;
 pub use dense::Mat;
 pub use design::{AsDesign, Design, DesignCols};

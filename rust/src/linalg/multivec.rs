@@ -19,7 +19,7 @@
 //! paths would see.
 
 /// A dense `rows × ncols` panel of column vectors, column-major.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct MultiVec {
     rows: usize,
     ncols: usize,
@@ -100,13 +100,24 @@ impl MultiVec {
         &mut self.data
     }
 
-    /// Reshape in place, reusing the allocation. Contents after a resize
-    /// are unspecified (callers overwrite); the shape is what matters.
+    /// Reshape in place, reusing the allocation. The resized panel is
+    /// **zero-filled** — callers that rely on a clean panel (the CG
+    /// scratch buffers) get one without a second memset; callers that
+    /// overwrite every entry pay one clear either way.
     pub fn resize(&mut self, rows: usize, ncols: usize) {
         self.rows = rows;
         self.ncols = ncols;
         self.data.clear();
         self.data.resize(rows * ncols, 0.0);
+    }
+
+    /// Drop trailing columns, keeping the leading `ncols` columns intact
+    /// (unlike [`MultiVec::resize`], which zeroes everything) — the
+    /// blocked-CG panel compaction step.
+    pub fn truncate_cols(&mut self, ncols: usize) {
+        assert!(ncols <= self.ncols, "cannot truncate to a wider panel");
+        self.ncols = ncols;
+        self.data.truncate(self.rows * ncols);
     }
 }
 

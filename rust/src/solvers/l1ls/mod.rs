@@ -10,7 +10,10 @@
 //! To interoperate with the glmnet-convention benches, [`solve_l1ls`]
 //! takes the penalized-form λ and converts internally (λ̄ = 2nλκ).
 
-use crate::linalg::{cg_solve_with, vecops, CgOptions, CgScratch, LinOp, Mat};
+use crate::linalg::{
+    cg_solve_multi_with, cg_solve_with, vecops, CgOptions, CgScratch, LinOp, Mat, MultiLinOp,
+    MultiVec,
+};
 
 /// Configuration (penalized-Lasso convention; κ fixed to 1).
 #[derive(Clone, Debug)]
@@ -199,6 +202,262 @@ pub fn solve_l1ls(x: &Mat, y: &[f64], lambda: f64, cfg: &L1LsConfig) -> L1LsResu
     L1LsResult { beta, newton_iters, duality_gap: gap, converged }
 }
 
+/// The [`ReducedHessian`] family across λ's: member `j` is
+/// `2t̄_j·XᵀX + D_j` over one shared X, so every blocked-CG iteration
+/// streams X once for all live interior-point systems. Per-column bits
+/// match the solo operator exactly (the fused X kernels keep the
+/// single-RHS reduction order; the diagonal terms are per-column scalar
+/// work).
+struct BatchReducedHessian<'a> {
+    x: &'a Mat,
+    two_tbars: Vec<f64>,
+    /// Per-problem reduced diagonals, borrowed from the problem states
+    /// (read-only during the solve — no per-round copies).
+    d: Vec<&'a [f64]>,
+    precond_diag: Vec<Vec<f64>>,
+    xn: std::cell::RefCell<MultiVec>,
+}
+
+impl MultiLinOp for BatchReducedHessian<'_> {
+    fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn nprobs(&self) -> usize {
+        self.two_tbars.len()
+    }
+
+    fn apply_multi(&self, cols: &[usize], vs: &MultiVec, out: &mut MultiVec) {
+        let mut xn = self.xn.borrow_mut();
+        xn.resize(self.x.rows(), vs.ncols());
+        self.x.matvec_multi_into(vs, &mut xn);
+        self.x.matvec_t_multi_into(&xn, out);
+        for (s, &j) in cols.iter().enumerate() {
+            let tt = self.two_tbars[j];
+            let dj = self.d[j];
+            let v = vs.col(s);
+            let o = out.col_mut(s);
+            for i in 0..o.len() {
+                o[i] = tt * o[i] + dj[i] * v[i];
+            }
+        }
+    }
+
+    fn precond(&self, j: usize, r: &[f64], out: &mut [f64]) -> bool {
+        let pd = &self.precond_diag[j];
+        for i in 0..r.len() {
+            out[i] = r[i] / pd[i];
+        }
+        true
+    }
+}
+
+/// Batched multi-λ interior point: run the [`solve_l1ls`] loop for every
+/// λ in lockstep and solve the per-iteration truncated-Newton systems
+/// together through blocked CG — one fused X / Xᵀ panel pass per CG
+/// iteration across all live λ's (the regularization-path workload as a
+/// single data-streaming sweep). Result `j` is **bit-identical** to
+/// `solve_l1ls(x, y, lambdas[j], cfg)`: every per-problem operation
+/// replicates the solo loop's order, and the blocked CG is pinned
+/// bit-identical per column.
+pub fn solve_l1ls_batch(
+    x: &Mat,
+    y: &[f64],
+    lambdas: &[f64],
+    cfg: &L1LsConfig,
+) -> Vec<L1LsResult> {
+    let (n, p) = (x.rows(), x.cols());
+
+    struct Prob {
+        lam: f64,
+        beta: Vec<f64>,
+        u: Vec<f64>,
+        tbar: f64,
+        newton_iters: usize,
+        gap: f64,
+        rel_gap: f64,
+        grad_beta: Vec<f64>,
+        grad_u: Vec<f64>,
+        d1: Vec<f64>,
+        d2: Vec<f64>,
+        dred: Vec<f64>,
+        rhs: Vec<f64>,
+        converged: bool,
+        done: bool,
+    }
+
+    let col_sq: Vec<f64> = {
+        let xt = x.transpose();
+        (0..p).map(|j| vecops::norm2_sq(xt.row(j))).collect()
+    };
+    let mut st: Vec<Prob> = lambdas
+        .iter()
+        .map(|&lambda| {
+            let lam = 2.0 * n as f64 * lambda;
+            Prob {
+                lam,
+                beta: vec![0.0; p],
+                u: vec![1.0; p],
+                tbar: 1.0f64.max(1.0 / lam),
+                newton_iters: 0,
+                gap: f64::INFINITY,
+                rel_gap: f64::INFINITY,
+                grad_beta: Vec::new(),
+                grad_u: Vec::new(),
+                d1: Vec::new(),
+                d2: Vec::new(),
+                dred: Vec::new(),
+                rhs: Vec::new(),
+                converged: false,
+                done: false,
+            }
+        })
+        .collect();
+
+    let mut cg_scratch = CgScratch::new();
+    let mut r_buf = vec![0.0; n];
+    loop {
+        // Live set after the solo loop-head cap check.
+        let mut live: Vec<usize> = Vec::new();
+        for (j, s) in st.iter_mut().enumerate() {
+            if s.done {
+                continue;
+            }
+            if s.newton_iters >= cfg.max_newton {
+                s.done = true;
+            } else {
+                live.push(j);
+            }
+        }
+        if live.is_empty() {
+            break;
+        }
+
+        // Pre-CG phase, per problem (residual, duality gap, barrier
+        // update, Newton-system pieces) — verbatim the solo ordering.
+        for &j in &live {
+            let s = &mut st[j];
+            x.matvec_into(&s.beta, &mut r_buf);
+            vecops::axpy(-1.0, y, &mut r_buf);
+            let primal = vecops::norm2_sq(&r_buf) + s.lam * vecops::norm1(&s.beta);
+            let xtr = x.matvec_t(&r_buf);
+            let inf = vecops::norm_inf(&xtr).max(1e-300);
+            let sc = (s.lam / (2.0 * inf)).min(1.0);
+            let nu: Vec<f64> = r_buf.iter().map(|v| 2.0 * sc * v).collect();
+            let g_dual = -0.25 * vecops::norm2_sq(&nu) - vecops::dot(&nu, y);
+            s.gap = primal - g_dual;
+            s.rel_gap = s.gap / g_dual.abs().max(1e-300);
+            if s.rel_gap <= cfg.tol || s.gap <= cfg.tol {
+                s.converged = true;
+                s.done = true;
+                continue;
+            }
+            s.tbar = (cfg.mu * (2.0 * p as f64 / s.gap).min(s.tbar)).max(s.tbar);
+            let f1: Vec<f64> = (0..p).map(|i| s.u[i] + s.beta[i]).collect();
+            let f2: Vec<f64> = (0..p).map(|i| s.u[i] - s.beta[i]).collect();
+            s.grad_beta = (0..p)
+                .map(|i| s.tbar * 2.0 * xtr[i] - (1.0 / f1[i] - 1.0 / f2[i]))
+                .collect();
+            s.grad_u = (0..p).map(|i| s.tbar * s.lam - (1.0 / f1[i] + 1.0 / f2[i])).collect();
+            s.d1 = (0..p)
+                .map(|i| 1.0 / (f1[i] * f1[i]) + 1.0 / (f2[i] * f2[i]))
+                .collect();
+            s.d2 = (0..p)
+                .map(|i| 1.0 / (f1[i] * f1[i]) - 1.0 / (f2[i] * f2[i]))
+                .collect();
+            s.dred = (0..p).map(|i| s.d1[i] - s.d2[i] * s.d2[i] / s.d1[i]).collect();
+            s.rhs = (0..p)
+                .map(|i| -(s.grad_beta[i] - s.d2[i] / s.d1[i] * s.grad_u[i]))
+                .collect();
+        }
+        let solving: Vec<usize> = live.iter().copied().filter(|&j| !st[j].done).collect();
+        if solving.is_empty() {
+            continue;
+        }
+
+        // The blocked solve: every live λ's Newton system through one
+        // panel-wide CG, each with its own adaptive tolerance.
+        let width = solving.len();
+        let two_tbars: Vec<f64> = solving.iter().map(|&j| 2.0 * st[j].tbar).collect();
+        let ds: Vec<&[f64]> = solving.iter().map(|&j| st[j].dred.as_slice()).collect();
+        let pds: Vec<Vec<f64>> = solving
+            .iter()
+            .enumerate()
+            .map(|(l, &j)| {
+                (0..p)
+                    .map(|i| (two_tbars[l] * col_sq[i] + st[j].dred[i]).max(1e-300))
+                    .collect()
+            })
+            .collect();
+        let mut rhs_panel = MultiVec::zeros(p, width);
+        let mut dbeta_panel = MultiVec::zeros(p, width);
+        for (l, &j) in solving.iter().enumerate() {
+            rhs_panel.col_mut(l).copy_from_slice(&st[j].rhs);
+        }
+        let cg_opts: Vec<CgOptions> = solving
+            .iter()
+            .map(|&j| CgOptions {
+                tol: (0.1 * st[j].rel_gap).clamp(cfg.cg.tol.min(1e-10), 1e-2),
+                max_iter: cfg.cg.max_iter,
+            })
+            .collect();
+        let op = BatchReducedHessian {
+            x,
+            two_tbars,
+            d: ds,
+            precond_diag: pds,
+            xn: std::cell::RefCell::new(MultiVec::zeros(0, 0)),
+        };
+        cg_solve_multi_with(&op, &rhs_panel, &mut dbeta_panel, &cg_opts, &mut cg_scratch);
+
+        // Post-CG phase, per problem: du, line search, accept.
+        for (l, &j) in solving.iter().enumerate() {
+            let s = &mut st[j];
+            let dbeta = dbeta_panel.col(l);
+            let du: Vec<f64> =
+                (0..p).map(|i| -(s.grad_u[i] + s.d2[i] * dbeta[i]) / s.d1[i]).collect();
+            let tbar = s.tbar;
+            let lam = s.lam;
+            let phi = |beta_t: &[f64], u_t: &[f64]| -> f64 {
+                let mut rt = x.matvec(beta_t);
+                vecops::axpy(-1.0, y, &mut rt);
+                let mut val = tbar * (vecops::norm2_sq(&rt) + lam * u_t.iter().sum::<f64>());
+                for i in 0..p {
+                    let a = u_t[i] + beta_t[i];
+                    let b = u_t[i] - beta_t[i];
+                    if a <= 0.0 || b <= 0.0 {
+                        return f64::INFINITY;
+                    }
+                    val -= a.ln() + b.ln();
+                }
+                val
+            };
+            let phi0 = phi(&s.beta, &s.u);
+            let gdot = vecops::dot(&s.grad_beta, dbeta) + vecops::dot(&s.grad_u, &du);
+            let mut step = 1.0;
+            for _ in 0..50 {
+                let bt: Vec<f64> = (0..p).map(|i| s.beta[i] + step * dbeta[i]).collect();
+                let ut: Vec<f64> = (0..p).map(|i| s.u[i] + step * du[i]).collect();
+                if phi(&bt, &ut) <= phi0 + 0.01 * step * gdot {
+                    s.beta = bt;
+                    s.u = ut;
+                    break;
+                }
+                step *= 0.5;
+            }
+            s.newton_iters += 1;
+        }
+    }
+    st.into_iter()
+        .map(|s| L1LsResult {
+            beta: s.beta,
+            newton_iters: s.newton_iters,
+            duality_gap: s.gap,
+            converged: s.converged,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +514,30 @@ mod tests {
         let l = solve_l1ls(&x, &y, lambda, &L1LsConfig { tol: 1e-10, ..Default::default() });
         for j in 0..120 {
             assert!((g.beta[j] - l.beta[j]).abs() < 1e-3, "j={j}");
+        }
+    }
+
+    /// The batched multi-λ loop must reproduce each solo solve
+    /// bit-for-bit — the blocked-CG fusion is pure memory traffic.
+    #[test]
+    fn batch_matches_solo_bit_for_bit() {
+        let (x, y) = data(40, 18, 115);
+        let lmax = glmnet::cd::lambda_max(&x, &y, 1.0);
+        let lambdas = [0.5 * lmax, 0.3 * lmax, 0.15 * lmax];
+        let cfg = L1LsConfig { tol: 1e-8, ..Default::default() };
+        let batch = solve_l1ls_batch(&x, &y, &lambdas, &cfg);
+        assert_eq!(batch.len(), 3);
+        for (j, &lambda) in lambdas.iter().enumerate() {
+            let solo = solve_l1ls(&x, &y, lambda, &cfg);
+            assert_eq!(solo.newton_iters, batch[j].newton_iters, "λ {j}");
+            assert_eq!(solo.converged, batch[j].converged, "λ {j}");
+            for i in 0..18 {
+                assert_eq!(
+                    solo.beta[i].to_bits(),
+                    batch[j].beta[i].to_bits(),
+                    "λ {j} i={i}"
+                );
+            }
         }
     }
 

@@ -21,10 +21,17 @@
 
 use crate::linalg::{vecops, Design, Mat};
 use crate::solvers::svm::{
-    dual_newton, primal_newton, samples::reduction_gram, samples::reduction_labels,
-    DualOptions, PrimalOptions, ReducedSamples, SampleSet,
+    dual_newton, primal_newton, primal_newton_batch, samples::reduction_gram,
+    samples::reduction_labels, DualOptions, PrimalBatchPoint, PrimalBatchStats, PrimalOptions,
+    ReducedSamples, SampleSet,
 };
 use std::sync::Arc;
+
+/// Fusion statistics of a batched SVM solve (shared panel builds,
+/// blocked-CG right-hand sides, CG panel compactions) — the primal
+/// Newton's [`PrimalBatchStats`], surfaced at the backend boundary so
+/// the coordinator can meter them.
+pub type SvmBatchStats = PrimalBatchStats;
 
 /// Primal/dual selection. `Auto` applies the paper's rule: primal when
 /// 2p > n (weight dimension n is the small side), dual otherwise.
@@ -130,6 +137,23 @@ pub trait SvmPrep: Send + Sync {
     /// reject a key that was reused for a differently-shaped design
     /// before any kernel trips an index assert.
     fn dims(&self) -> (usize, usize);
+    /// Solve several `(t, C)` points against this preparation,
+    /// cold-started. The default runs them sequentially; backends with a
+    /// batched engine (the primal Newton) override it to fuse the
+    /// solves — with the hard contract that every solution is
+    /// **bit-identical** to the sequential default (the batched engine
+    /// only reorganizes memory traffic).
+    fn solve_batch(
+        &self,
+        pts: &[(f64, f64)],
+        scratch: &mut SvmScratch,
+    ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
+        let mut out = Vec::with_capacity(pts.len());
+        for &(t, c) in pts {
+            out.push(self.solve(t, c, None, scratch)?);
+        }
+        Ok((out, SvmBatchStats::default()))
+    }
 }
 
 /// An SVM solving engine SVEN can drive.
@@ -227,6 +251,34 @@ impl SvmPrep for PreparedPrimal {
 
     fn dims(&self) -> (usize, usize) {
         (self.x.rows(), self.x.cols())
+    }
+
+    /// The batched entry point: neighboring path points (or CV-fold grid
+    /// points) share every data-streaming pass of the Newton through
+    /// [`primal_newton_batch`] — fused gradients/margins, shared SV
+    /// gathers where active sets agree, blocked CG over the panel.
+    /// Bit-identical to the sequential default (pinned in
+    /// `svm::primal`'s batch tests).
+    fn solve_batch(
+        &self,
+        pts: &[(f64, f64)],
+        _scratch: &mut SvmScratch,
+    ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
+        let points: Vec<PrimalBatchPoint> =
+            pts.iter().map(|&(t, c)| PrimalBatchPoint { t, c, w0: None }).collect();
+        let (results, stats) =
+            primal_newton_batch(self.x.as_ref(), self.y.as_slice(), &points, &self.opts);
+        let sols = results
+            .into_iter()
+            .map(|r| SvmSolve {
+                alpha: r.alpha,
+                w: Some(r.w),
+                iters: r.newton_iters,
+                cg_iters: r.cg_iters_total,
+                gather_rebuilds: r.gather_rebuilds,
+            })
+            .collect();
+        Ok((sols, stats))
     }
 }
 

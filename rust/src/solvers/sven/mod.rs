@@ -19,7 +19,9 @@
 pub mod backend;
 pub mod reduction;
 
-pub use backend::{RustBackend, SvmBackend, SvmMode, SvmPrep, SvmScratch, SvmSolve, SvmWarm};
+pub use backend::{
+    RustBackend, SvmBackend, SvmBatchStats, SvmMode, SvmPrep, SvmScratch, SvmSolve, SvmWarm,
+};
 pub use reduction::{backmap, effective_c, MIN_ALPHA_SUM};
 
 use crate::linalg::{AsDesign, Design};
@@ -108,6 +110,53 @@ impl<B: SvmBackend> Sven<B> {
             seconds,
             degenerate,
         })
+    }
+
+    /// Batched form of [`Sven::solve_prepared`]: solve every `(t, λ₂)`
+    /// point of `points` against one preparation, cold-started — exactly
+    /// what a primal-mode path sweep does anyway (its chained warm
+    /// starts carry only dual variables, which the primal solver
+    /// ignores), so the fused solve is bit-for-bit the sequential
+    /// chain's. Returns the per-point solutions plus the batch's fusion
+    /// stats; `seconds` is the batch total amortized per point.
+    pub fn solve_prepared_batch(
+        &self,
+        prepared: &dyn SvmPrep,
+        scratch: &mut SvmScratch,
+        x: &Arc<Design>,
+        y: &Arc<Vec<f64>>,
+        points: &[(f64, f64)],
+    ) -> anyhow::Result<(Vec<EnSolution>, SvmBatchStats)> {
+        let timer = Timer::start();
+        let pts: Vec<(f64, f64)> = points
+            .iter()
+            .map(|&(t, lambda2)| (t, effective_c(lambda2, self.config.c_cap)))
+            .collect();
+        let (solves, stats) = with_parallelism(self.config.parallelism, || {
+            prepared.solve_batch(&pts, scratch)
+        })?;
+        let per_point = if points.is_empty() {
+            0.0
+        } else {
+            timer.elapsed() / points.len() as f64
+        };
+        let mut out = Vec::with_capacity(points.len());
+        for (solve, &(t, lambda2)) in solves.into_iter().zip(points) {
+            let prob = EnProblem::shared(x.clone(), y.clone(), t, lambda2);
+            let (beta, degenerate) = backmap(&solve.alpha, prob.p(), t);
+            let objective = prob.objective(&beta);
+            out.push(EnSolution {
+                beta,
+                solver: self.kind(),
+                objective,
+                iterations: solve.iters,
+                cg_iters: solve.cg_iters,
+                gather_rebuilds: solve.gather_rebuilds,
+                seconds: per_point,
+                degenerate,
+            });
+        }
+        Ok((out, stats))
     }
 
     fn kind(&self) -> EnSolverKind {

@@ -21,5 +21,11 @@ pub mod primal;
 pub mod samples;
 
 pub use dual::{dual_newton, DualOptions, DualResult};
-pub use primal::{primal_newton, PrimalOptions, PrimalResult};
-pub use samples::{DenseSamples, GatheredRows, ReducedSamples, SampleSet};
+pub use primal::{
+    primal_newton, primal_newton_batch, PrimalBatchPoint, PrimalBatchStats, PrimalOptions,
+    PrimalResult,
+};
+pub use samples::{
+    reduced_matvec_batch, reduced_matvec_t_batch, DenseSamples, GatheredRows, ReducedSamples,
+    SampleSet,
+};

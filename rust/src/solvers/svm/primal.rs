@@ -27,8 +27,14 @@
 //!   evaluates margins as `o + step·(X̂δ)` in O(m + d) — the seed
 //!   re-ran a full O(m·d) `matvec` per trial.
 
-use super::samples::{GatheredRows, SampleSet};
-use crate::linalg::{cg_solve_with, vecops, CgOptions, CgScratch, LinOp, MultiVec};
+use super::samples::{
+    reduced_matvec_batch, reduced_matvec_t_batch, reduction_labels, GatheredRows, ReducedSamples,
+    SampleSet,
+};
+use crate::linalg::{
+    cg_solve_multi_with, cg_solve_with, vecops, CgOptions, CgScratch, Design, LinOp, MultiLinOp,
+    MultiVec,
+};
 use std::cell::RefCell;
 
 /// Options for [`primal_newton`].
@@ -319,6 +325,492 @@ pub fn primal_newton<S: SampleSet>(
     }
 }
 
+/// One problem of a batched primal solve over a shared `(X, y)`: the
+/// SVEN reduction at budget `t` and regularization `c`, optionally
+/// warm-started in the primal.
+#[derive(Clone, Debug)]
+pub struct PrimalBatchPoint {
+    pub t: f64,
+    pub c: f64,
+    /// Primal warm start (length n = design rows); `None` ⇒ cold.
+    pub w0: Option<Vec<f64>>,
+}
+
+/// Aggregate fusion statistics of a batched solve. Per-problem counters
+/// (`newton_iters`, `cg_iters_total`, `gather_rebuilds`) live in each
+/// [`PrimalResult`] with exactly their solo meanings.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrimalBatchStats {
+    /// Physical SV-panel gathers performed. Batch members whose active
+    /// sets agree share one gather, so this can be far below the sum of
+    /// per-problem `gather_rebuilds` (which count solo-equivalent
+    /// rebuilds).
+    pub panel_builds: usize,
+    /// Right-hand sides driven through blocked CG (groups of width ≥ 2);
+    /// each counts one whole Newton system, not one CG iteration.
+    pub batched_rhs: usize,
+    /// Panel compactions inside the blocked-CG solves.
+    pub cg_compactions: usize,
+}
+
+impl PrimalBatchStats {
+    /// Accumulate another batch's stats (segmented sweeps sum these).
+    pub fn merge(&mut self, other: &PrimalBatchStats) {
+        self.panel_builds += other.panel_builds;
+        self.batched_rhs += other.batched_rhs;
+        self.cg_compactions += other.cg_compactions;
+    }
+}
+
+/// Hessian family of a shared-SV-panel batch: member `j` is
+/// `v ↦ v + 2C_j·Ĝ_jᵀ(Ĝ_j·v)` where every `Ĝ_j` shares one gathered
+/// panel of bare design columns (the panel is t-independent; the
+/// implicit `±y/t_j` shift is applied per column). One fused panel
+/// product per blocked-CG iteration serves every member — the
+/// panel-width-in-the-Hessian lever of the batched Newton. Per-column
+/// bits match the solo [`GatheredHess`] exactly (the fused store
+/// products keep the single-RHS reduction order; the shift arithmetic
+/// repeats [`ReducedSamples::gathered_matvec`] /
+/// [`ReducedSamples::gathered_matvec_t`] verbatim).
+struct BatchGatheredHess<'a> {
+    panel: &'a GatheredRows,
+    y: &'a [f64],
+    d: usize,
+    /// Per-member budget t (indexed by problem id within the group).
+    ts: &'a [f64],
+    /// Per-member 2C.
+    two_cs: &'a [f64],
+    gm: RefCell<MultiVec>,
+}
+
+impl MultiLinOp for BatchGatheredHess<'_> {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn nprobs(&self) -> usize {
+        self.ts.len()
+    }
+
+    fn apply_multi(&self, cols: &[usize], vs: &MultiVec, out: &mut MultiVec) {
+        let mut gm = self.gm.borrow_mut();
+        gm.resize(self.panel.m(), vs.ncols());
+        self.panel.store_matvec_multi_into(vs, &mut gm);
+        let signs = self.panel.signs();
+        for (s, &j) in cols.iter().enumerate() {
+            let shift = vecops::dot(self.y, vs.col(s)) / self.ts[j];
+            for (gi, si) in gm.col_mut(s).iter_mut().zip(signs) {
+                *gi += si * shift;
+            }
+        }
+        self.panel.store_matvec_t_multi_into(&gm, out);
+        for (s, &j) in cols.iter().enumerate() {
+            let mut coeff = 0.0;
+            for (ui, si) in gm.col(s).iter().zip(signs) {
+                coeff += ui * si;
+            }
+            vecops::axpy(coeff / self.ts[j], self.y, out.col_mut(s));
+            let v = vs.col(s);
+            let o = out.col_mut(s);
+            let tc = self.two_cs[j];
+            for i in 0..o.len() {
+                o[i] = v[i] + tc * o[i];
+            }
+        }
+    }
+}
+
+/// Batched primal Newton over the shared SVEN reduction: solve the S
+/// problems `(t_s, C_s)` of `points` against one `(X, y)` in lockstep.
+///
+/// Per round, the batch fuses everything that streams the shared data:
+/// the gradients (`X̂ᵀ·` across all live members), the margin refresh
+/// (`X̂·[w, δ]` across all live members), and — where members' SV sets
+/// agree — the Newton systems themselves, gathered once and solved
+/// together through [`cg_solve_multi_with`] so every CG iteration runs
+/// one panel-wide Hessian product. Members whose sets diverge fall back
+/// to the solo per-problem path.
+///
+/// **Contract:** result `s` (weights, duals, iteration counts) is
+/// bit-identical to `primal_newton(ReducedSamples { x, y, t: t_s },
+/// reduction_labels(p), c_s, opts, w0_s)` at any thread count and any
+/// batch composition — batching is purely a memory-traffic optimization
+/// (pinned by the `batch_matches_solo_*` tests and the service-level
+/// path gates).
+pub fn primal_newton_batch(
+    x: &Design,
+    y: &[f64],
+    points: &[PrimalBatchPoint],
+    opts: &PrimalOptions,
+) -> (Vec<PrimalResult>, PrimalBatchStats) {
+    let nprobs = points.len();
+    let p = x.cols();
+    let (m, d) = (2 * p, x.rows());
+    assert_eq!(y.len(), d);
+    let yhat = reduction_labels(p);
+    let mut stats = PrimalBatchStats::default();
+    if nprobs == 0 {
+        return (Vec::new(), stats);
+    }
+
+    struct Prob {
+        t: f64,
+        c: f64,
+        w: Vec<f64>,
+        o: Vec<f64>,
+        slack: Vec<f64>,
+        mask: Vec<f64>,
+        grad: Vec<f64>,
+        delta: Vec<f64>,
+        obj: f64,
+        sv: Vec<usize>,
+        /// Solo-equivalent gather tracking (keeps `gather_rebuilds`
+        /// meaning exactly what it means in [`primal_newton`]).
+        tracked_set: Vec<usize>,
+        /// What this problem's own physical panel currently holds.
+        panel_set: Vec<usize>,
+        newton: usize,
+        cg_total: usize,
+        gather_rebuilds: usize,
+        converged: bool,
+        done: bool,
+    }
+
+    let mut st: Vec<Prob> = points
+        .iter()
+        .map(|pt| {
+            let w = pt.w0.clone().unwrap_or_else(|| vec![0.0; d]);
+            assert_eq!(w.len(), d);
+            Prob {
+                t: pt.t,
+                c: pt.c,
+                w,
+                o: vec![0.0; m],
+                slack: vec![0.0; m],
+                mask: vec![0.0; m],
+                grad: vec![0.0; d],
+                delta: vec![0.0; d],
+                obj: 0.0,
+                sv: Vec::new(),
+                tracked_set: Vec::new(),
+                panel_set: Vec::new(),
+                newton: 0,
+                cg_total: 0,
+                gather_rebuilds: 0,
+                converged: false,
+                done: false,
+            }
+        })
+        .collect();
+    let mut panels: Vec<GatheredRows> = (0..nprobs).map(|_| GatheredRows::new()).collect();
+    let mut cg_scratch = CgScratch::new();
+    let hess_buf = RefCell::new(vec![0.0; m]);
+    let mut in_panel = MultiVec::zeros(0, 0);
+    let mut out_panel = MultiVec::zeros(0, 0);
+    let mut wd_panel = MultiVec::zeros(0, 0);
+    let mut od_panel = MultiVec::zeros(0, 0);
+
+    // Initial margins / objective / SV sets: one fused pass.
+    {
+        let ts: Vec<f64> = st.iter().map(|s| s.t).collect();
+        in_panel.resize(d, nprobs);
+        out_panel.resize(m, nprobs);
+        for (j, s) in st.iter().enumerate() {
+            in_panel.col_mut(j).copy_from_slice(&s.w);
+        }
+        reduced_matvec_batch(x, y, &ts, &in_panel, &mut out_panel);
+        for (j, s) in st.iter_mut().enumerate() {
+            s.o.copy_from_slice(out_panel.col(j));
+            let mut loss = 0.0;
+            for i in 0..m {
+                let sl = 1.0 - yhat[i] * s.o[i];
+                if sl > 0.0 {
+                    s.slack[i] = sl;
+                    s.mask[i] = 1.0;
+                    loss += sl * sl;
+                } else {
+                    s.slack[i] = 0.0;
+                    s.mask[i] = 0.0;
+                }
+            }
+            s.obj = 0.5 * vecops::norm2_sq(&s.w) + s.c * loss;
+            s.sv = (0..m).filter(|&i| s.mask[i] == 1.0).collect();
+        }
+    }
+
+    loop {
+        // Live set for this round, after the solo loop-head cap check.
+        let mut live: Vec<usize> = Vec::new();
+        for (j, s) in st.iter_mut().enumerate() {
+            if s.done {
+                continue;
+            }
+            if s.newton >= opts.max_newton {
+                s.done = true;
+            } else {
+                live.push(j);
+            }
+        }
+        if live.is_empty() {
+            break;
+        }
+
+        // (1) Gradients — one fused X̂ᵀ pass across the batch:
+        //     grad_j = w_j − 2C_j·X̂ᵀ(ŷ ⊙ slack_j).
+        let lts: Vec<f64> = live.iter().map(|&j| st[j].t).collect();
+        in_panel.resize(m, live.len());
+        out_panel.resize(d, live.len());
+        for (l, &j) in live.iter().enumerate() {
+            let s = &st[j];
+            let u = in_panel.col_mut(l);
+            for i in 0..m {
+                u[i] = yhat[i] * s.slack[i] * s.mask[i];
+            }
+        }
+        reduced_matvec_t_batch(x, y, &lts, &in_panel, &mut out_panel);
+        let mut still: Vec<usize> = Vec::with_capacity(live.len());
+        for (l, &j) in live.iter().enumerate() {
+            let s = &mut st[j];
+            let g = out_panel.col(l);
+            for i in 0..d {
+                s.grad[i] = s.w[i] - 2.0 * s.c * g[i];
+            }
+            let gnorm = vecops::norm2(&s.grad) / (d as f64).sqrt();
+            if gnorm <= opts.tol * (1.0 + s.obj.abs()) {
+                s.converged = true;
+                s.done = true;
+            } else {
+                still.push(j);
+            }
+        }
+        let live = still;
+        if live.is_empty() {
+            continue;
+        }
+
+        // (2) Newton directions. Members whose SV sets agree share one
+        // gathered panel and solve together through blocked CG; the rest
+        // run the solo per-problem path (masked or gathered).
+        let use_gather: Vec<bool> = live
+            .iter()
+            .map(|&j| {
+                let s = &st[j];
+                opts.shrink
+                    && !s.sv.is_empty()
+                    && (s.sv.len() as f64) <= opts.shrink_max_frac * m as f64
+            })
+            .collect();
+        let mut grouped = vec![false; live.len()];
+        for a in 0..live.len() {
+            if grouped[a] {
+                continue;
+            }
+            grouped[a] = true;
+            let lead = live[a];
+            if !use_gather[a] {
+                // Masked solo fallback (the pre-shrinking operator).
+                let samples = ReducedSamples { x, y, t: st[lead].t };
+                let two_c = 2.0 * st[lead].c;
+                let rhs: Vec<f64> = st[lead].grad.iter().map(|g| -g).collect();
+                let mut delta = std::mem::take(&mut st[lead].delta);
+                delta.fill(0.0);
+                let cg_out = {
+                    let hess = MaskedHess {
+                        samples: &samples,
+                        sv_mask: &st[lead].mask,
+                        two_c,
+                        buf: &hess_buf,
+                    };
+                    cg_solve_with(&hess, &rhs, &mut delta, &opts.cg, &mut cg_scratch)
+                };
+                st[lead].delta = delta;
+                st[lead].cg_total += cg_out.iters;
+                continue;
+            }
+            let mut members = vec![lead];
+            for b in (a + 1)..live.len() {
+                if !grouped[b] && use_gather[b] && st[live[b]].sv == st[lead].sv {
+                    grouped[b] = true;
+                    members.push(live[b]);
+                }
+            }
+            // Solo-equivalent rebuild accounting for every member.
+            for &j in &members {
+                let s = &mut st[j];
+                if s.tracked_set != s.sv {
+                    s.tracked_set = s.sv.clone();
+                    s.gather_rebuilds += 1;
+                }
+            }
+            // One physical gather serves the whole group (the panel's
+            // bare columns are t-independent). Host the panel on any
+            // member that already holds this exact set — when a previous
+            // round's host converges, the survivors inherit its panel
+            // instead of re-gathering identical contents.
+            let host = members
+                .iter()
+                .copied()
+                .find(|&j| st[j].panel_set == st[j].sv)
+                .unwrap_or(lead);
+            if st[host].panel_set != st[host].sv {
+                let sv = st[host].sv.clone();
+                let samples = ReducedSamples { x, y, t: st[host].t };
+                samples.gather_rows_into(&sv, &mut panels[host]);
+                st[host].panel_set = sv;
+                stats.panel_builds += 1;
+            }
+            if members.len() == 1 {
+                // Gathered solo path on the (now current) panel.
+                let samples = ReducedSamples { x, y, t: st[lead].t };
+                let two_c = 2.0 * st[lead].c;
+                let rhs: Vec<f64> = st[lead].grad.iter().map(|g| -g).collect();
+                let mut delta = std::mem::take(&mut st[lead].delta);
+                delta.fill(0.0);
+                let cg_out = {
+                    let hess = GatheredHess {
+                        samples: &samples,
+                        panel: &panels[host],
+                        two_c,
+                        buf: &hess_buf,
+                    };
+                    cg_solve_with(&hess, &rhs, &mut delta, &opts.cg, &mut cg_scratch)
+                };
+                st[lead].delta = delta;
+                st[lead].cg_total += cg_out.iters;
+            } else {
+                // Blocked CG: one fused panel product per iteration for
+                // the whole group.
+                let width = members.len();
+                let gts: Vec<f64> = members.iter().map(|&j| st[j].t).collect();
+                let gtwo_cs: Vec<f64> = members.iter().map(|&j| 2.0 * st[j].c).collect();
+                let mut rhs = MultiVec::zeros(d, width);
+                let mut dx = MultiVec::zeros(d, width);
+                for (l, &j) in members.iter().enumerate() {
+                    for (ri, gi) in rhs.col_mut(l).iter_mut().zip(&st[j].grad) {
+                        *ri = -gi;
+                    }
+                }
+                let cg_opts = vec![opts.cg.clone(); width];
+                let cg_out = {
+                    let hess = BatchGatheredHess {
+                        panel: &panels[host],
+                        y,
+                        d,
+                        ts: &gts,
+                        two_cs: &gtwo_cs,
+                        gm: RefCell::new(MultiVec::zeros(0, 0)),
+                    };
+                    cg_solve_multi_with(&hess, &rhs, &mut dx, &cg_opts, &mut cg_scratch)
+                };
+                stats.batched_rhs += width;
+                stats.cg_compactions += cg_out.compactions;
+                for (l, &j) in members.iter().enumerate() {
+                    st[j].delta.copy_from_slice(dx.col(l));
+                    st[j].cg_total += cg_out.outcomes[l].iters;
+                }
+            }
+        }
+
+        // (3) Fused margin refresh across the whole batch: one
+        //     X̂·[w₁, δ₁, w₂, δ₂, …] pass.
+        let refresh_ts: Vec<f64> = live.iter().flat_map(|&j| [st[j].t, st[j].t]).collect();
+        wd_panel.resize(d, 2 * live.len());
+        od_panel.resize(m, 2 * live.len());
+        for (l, &j) in live.iter().enumerate() {
+            wd_panel.col_mut(2 * l).copy_from_slice(&st[j].w);
+            wd_panel.col_mut(2 * l + 1).copy_from_slice(&st[j].delta);
+        }
+        reduced_matvec_batch(x, y, &refresh_ts, &wd_panel, &mut od_panel);
+
+        // (4) Line search + accept, per problem (scalar work).
+        for (l, &j) in live.iter().enumerate() {
+            let s = &mut st[j];
+            let ow = od_panel.col(2 * l);
+            let xd = od_panel.col(2 * l + 1);
+            let wnorm_sq = vecops::norm2_sq(&s.w);
+            let wdot = vecops::dot(&s.w, &s.delta);
+            let dnorm_sq = vecops::norm2_sq(&s.delta);
+            let mut step = 1.0;
+            let mut accepted = false;
+            for _ in 0..40 {
+                let mut loss = 0.0;
+                for i in 0..m {
+                    let sl = 1.0 - yhat[i] * (ow[i] + step * xd[i]);
+                    if sl > 0.0 {
+                        loss += sl * sl;
+                    }
+                }
+                let quad = wnorm_sq + 2.0 * step * wdot + step * step * dnorm_sq;
+                let obj_try = 0.5 * quad + s.c * loss;
+                if obj_try <= s.obj + 1e-12 * s.obj.abs() {
+                    accepted = true;
+                    break;
+                }
+                step *= 0.5;
+            }
+            s.newton += 1;
+            if !accepted {
+                s.converged = true;
+                s.done = true;
+                continue;
+            }
+            for i in 0..d {
+                s.w[i] += step * s.delta[i];
+            }
+            let mut loss = 0.0;
+            for i in 0..m {
+                s.o[i] = ow[i] + step * xd[i];
+                let sl = 1.0 - yhat[i] * s.o[i];
+                if sl > 0.0 {
+                    s.slack[i] = sl;
+                    s.mask[i] = 1.0;
+                    loss += sl * sl;
+                } else {
+                    s.slack[i] = 0.0;
+                    s.mask[i] = 0.0;
+                }
+            }
+            s.obj = 0.5 * vecops::norm2_sq(&s.w) + s.c * loss;
+            s.sv = (0..m).filter(|&i| s.mask[i] == 1.0).collect();
+        }
+    }
+
+    // Final margins (exact, fused) and the dual recovery α = 2C·slack.
+    {
+        let ts: Vec<f64> = st.iter().map(|s| s.t).collect();
+        in_panel.resize(d, nprobs);
+        out_panel.resize(m, nprobs);
+        for (j, s) in st.iter().enumerate() {
+            in_panel.col_mut(j).copy_from_slice(&s.w);
+        }
+        reduced_matvec_batch(x, y, &ts, &in_panel, &mut out_panel);
+        for (j, s) in st.iter_mut().enumerate() {
+            let o = out_panel.col(j);
+            for i in 0..m {
+                s.o[i] = o[i];
+                let sl = 1.0 - yhat[i] * o[i];
+                s.slack[i] = if sl > 0.0 { sl } else { 0.0 };
+            }
+        }
+    }
+    let results = st
+        .into_iter()
+        .map(|s| {
+            let alpha: Vec<f64> = s.slack.iter().map(|sl| 2.0 * s.c * sl).collect();
+            PrimalResult {
+                w: s.w,
+                alpha,
+                newton_iters: s.newton,
+                cg_iters_total: s.cg_total,
+                gather_rebuilds: s.gather_rebuilds,
+                converged: s.converged,
+                objective: s.obj,
+            }
+        })
+        .collect();
+    (results, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -461,6 +953,100 @@ mod tests {
         let obj_on = objective(&s, &y, c, &on.w);
         let obj_off = objective(&s, &y, c, &off.w);
         assert!((obj_on - obj_off).abs() <= 1e-9 * (1.0 + obj_off.abs()));
+    }
+
+    /// The batched Newton's headline contract: every member of a batch
+    /// is bit-identical to its solo `primal_newton` run — weights,
+    /// duals, and iteration counters — whatever the batch composition.
+    #[test]
+    fn batch_matches_solo_bit_for_bit() {
+        use crate::linalg::Design;
+        let mut rng = Rng::seed_from(139);
+        let x = Mat::from_fn(14, 30, |_, _| rng.normal());
+        let y: Vec<f64> = (0..14).map(|_| rng.normal()).collect();
+        let d: Design = x.into();
+        let labels = reduction_labels(30);
+        // shrink_max_frac 1.0 ⇒ the gathered path engages from round one
+        // (every sample starts inside the margin at w = 0), so the
+        // duplicated pair below is guaranteed to group.
+        let opts = PrimalOptions { shrink_max_frac: 1.0, ..Default::default() };
+        let points: Vec<PrimalBatchPoint> = [(0.4, 3.0), (0.7, 5.0), (1.1, 8.0), (0.7, 5.0)]
+            .iter()
+            .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
+            .collect();
+        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts);
+        assert_eq!(batch.len(), 4);
+        // Two identical members walk identical trajectories, so their SV
+        // sets agree every round: the shared-panel blocked CG must have
+        // engaged.
+        assert!(stats.batched_rhs >= 2, "identical members must batch");
+        for (s, pt) in batch.iter().zip(&points) {
+            let red = ReducedSamples { x: &d, y: &y, t: pt.t };
+            let solo = primal_newton(&red, &labels, pt.c, &opts, None);
+            assert_eq!(solo.newton_iters, s.newton_iters);
+            assert_eq!(solo.cg_iters_total, s.cg_iters_total);
+            assert_eq!(solo.gather_rebuilds, s.gather_rebuilds);
+            assert_eq!(solo.converged, s.converged);
+            for i in 0..14 {
+                assert_eq!(solo.w[i].to_bits(), s.w[i].to_bits(), "w i={i}");
+            }
+            for i in 0..60 {
+                assert_eq!(solo.alpha[i].to_bits(), s.alpha[i].to_bits(), "α i={i}");
+            }
+        }
+    }
+
+    /// A width-1 batch is exactly a solo solve, warm starts included.
+    #[test]
+    fn batch_width_one_and_warm_start_match_solo() {
+        use crate::linalg::Design;
+        let mut rng = Rng::seed_from(140);
+        let x = Mat::from_fn(10, 24, |_, _| rng.normal());
+        let y: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let d: Design = x.into();
+        let labels = reduction_labels(24);
+        let opts = PrimalOptions::default();
+        let red = ReducedSamples { x: &d, y: &y, t: 0.6 };
+        let first = primal_newton(&red, &labels, 4.0, &opts, None);
+        let solo = primal_newton(&red, &labels, 4.0, &opts, Some(&first.w));
+        let (batch, _) = primal_newton_batch(
+            &d,
+            &y,
+            &[PrimalBatchPoint { t: 0.6, c: 4.0, w0: Some(first.w.clone()) }],
+            &opts,
+        );
+        assert_eq!(solo.newton_iters, batch[0].newton_iters);
+        for i in 0..10 {
+            assert_eq!(solo.w[i].to_bits(), batch[0].w[i].to_bits(), "i={i}");
+        }
+    }
+
+    /// The masked (shrink-off) fallback inside the batch must also match
+    /// its solo twin.
+    #[test]
+    fn batch_masked_fallback_matches_solo() {
+        use crate::linalg::Design;
+        let mut rng = Rng::seed_from(141);
+        let x = Mat::from_fn(12, 20, |_, _| rng.normal());
+        let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let d: Design = x.into();
+        let labels = reduction_labels(20);
+        let opts = PrimalOptions { shrink: false, ..Default::default() };
+        let points: Vec<PrimalBatchPoint> = [(0.5, 2.0), (0.9, 6.0)]
+            .iter()
+            .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
+            .collect();
+        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts);
+        assert_eq!(stats.panel_builds, 0, "shrink off ⇒ no gathers");
+        assert_eq!(stats.batched_rhs, 0, "masked members never group");
+        for (s, pt) in batch.iter().zip(&points) {
+            let red = ReducedSamples { x: &d, y: &y, t: pt.t };
+            let solo = primal_newton(&red, &labels, pt.c, &opts, None);
+            assert_eq!(solo.newton_iters, s.newton_iters);
+            for i in 0..12 {
+                assert_eq!(solo.w[i].to_bits(), s.w[i].to_bits(), "i={i}");
+            }
+        }
     }
 
     /// The shrinking solve over the SVEN reduction (the production

@@ -85,6 +85,33 @@ impl GatheredRows {
         }
     }
 
+    /// Per-row signs of the implicit rank-one correction (empty when the
+    /// originating sample set has none).
+    pub(crate) fn signs(&self) -> &[f64] {
+        &self.sign
+    }
+
+    /// Fused multi-RHS product of the *bare* panel store (no rank-one
+    /// shift): column `j` of `out` is bit-identical to the single-RHS
+    /// `matvec_into` on the same store — the substrate of the batched
+    /// Newton's shared-panel Hessian products.
+    pub(crate) fn store_matvec_multi_into(&self, vs: &MultiVec, out: &mut MultiVec) {
+        match &self.store {
+            GatherStore::Dense(panel) => panel.matvec_multi_into(vs, out),
+            GatherStore::Sparse(panel) => panel.matvec_multi_into(vs, out),
+            GatherStore::Empty => panic!("empty gather panel"),
+        }
+    }
+
+    /// Transpose twin of [`GatheredRows::store_matvec_multi_into`].
+    pub(crate) fn store_matvec_t_multi_into(&self, us: &MultiVec, out: &mut MultiVec) {
+        match &self.store {
+            GatherStore::Dense(panel) => panel.matvec_t_multi_into(us, out),
+            GatherStore::Sparse(panel) => panel.matvec_t_multi_into(us, out),
+            GatherStore::Empty => panic!("empty gather panel"),
+        }
+    }
+
     /// Borrow (and, if needed, switch to) the dense storage.
     fn dense_store(&mut self) -> &mut Mat {
         if !matches!(self.store, GatherStore::Dense(_)) {
@@ -216,43 +243,21 @@ impl SampleSet for ReducedSamples<'_> {
     /// Panel form of [`SampleSet::matvec`]: one fused `XᵀV` pass feeds
     /// every column; the per-column shift and top/bottom assembly repeat
     /// the single-RHS operations exactly, so each output column is
-    /// bit-identical to the single-RHS call.
+    /// bit-identical to the single-RHS call. Delegates to the
+    /// per-column-budget kernel [`reduced_matvec_batch`] with this
+    /// problem's `t` broadcast — one kernel body serves the single- and
+    /// cross-problem cases.
     fn matvec_multi(&self, vs: &MultiVec, out: &mut MultiVec) {
-        let p = self.p();
-        let r = vs.ncols();
-        debug_assert_eq!(vs.rows(), self.d());
-        debug_assert_eq!((out.rows(), out.ncols()), (2 * p, r));
-        let mut tmp = MultiVec::zeros(p, r);
-        self.x.matvec_t_multi_into(vs, &mut tmp);
-        for j in 0..r {
-            let shift = vecops::dot(self.y, vs.col(j)) / self.t;
-            let tcol = tmp.col(j);
-            let (top, bot) = out.col_mut(j).split_at_mut(p);
-            for i in 0..p {
-                bot[i] = tcol[i] + shift;
-                top[i] = tcol[i] - shift;
-            }
-        }
+        let ts = vec![self.t; vs.ncols()];
+        reduced_matvec_batch(self.x, self.y, &ts, vs, out);
     }
 
     /// Panel form of [`SampleSet::matvec_t`]; one fused `X·S` pass over
-    /// the per-column sums, same bit-identity contract.
+    /// the per-column sums, same bit-identity contract (delegates to
+    /// [`reduced_matvec_t_batch`]).
     fn matvec_t_multi(&self, us: &MultiVec, out: &mut MultiVec) {
-        let p = self.p();
-        let r = us.ncols();
-        debug_assert_eq!(us.rows(), 2 * p);
-        debug_assert_eq!((out.rows(), out.ncols()), (self.d(), r));
-        let mut sums = MultiVec::zeros(p, r);
-        for j in 0..r {
-            let (u1, u2) = us.col(j).split_at(p);
-            vecops::add(u1, u2, sums.col_mut(j));
-        }
-        self.x.matvec_multi_into(&sums, out);
-        for j in 0..r {
-            let (u1, u2) = us.col(j).split_at(p);
-            let coeff = (u2.iter().sum::<f64>() - u1.iter().sum::<f64>()) / self.t;
-            vecops::axpy(coeff, self.y, out.col_mut(j));
-        }
+        let ts = vec![self.t; us.ncols()];
+        reduced_matvec_t_batch(self.x, self.y, &ts, us, out);
     }
 
     /// Gather the selected X̂ rows: row `s < p` is design column `s`
@@ -299,6 +304,65 @@ impl SampleSet for ReducedSamples<'_> {
             coeff += ui * si;
         }
         vecops::axpy(coeff / self.t, self.y, out);
+    }
+}
+
+/// Column-batched [`ReducedSamples::matvec`] across *problems*: column
+/// `j` is `X̂_{ts[j]} · vs.col(j)` — the same design/response viewed at
+/// per-column budgets `ts[j]`, so S neighboring path points share one
+/// fused `XᵀV` pass. Column `j` is **bit-identical** to
+/// `ReducedSamples { x, y, t: ts[j] }.matvec(vs.col(j))` at any thread
+/// count (the shared product keeps the multi-RHS per-column contract;
+/// the shift/assembly repeats the single-RHS operations exactly).
+pub fn reduced_matvec_batch(
+    x: &Design,
+    y: &[f64],
+    ts: &[f64],
+    vs: &MultiVec,
+    out: &mut MultiVec,
+) {
+    let p = x.cols();
+    let r = vs.ncols();
+    debug_assert_eq!(ts.len(), r);
+    debug_assert_eq!(vs.rows(), x.rows());
+    debug_assert_eq!((out.rows(), out.ncols()), (2 * p, r));
+    let mut tmp = MultiVec::zeros(p, r);
+    x.matvec_t_multi_into(vs, &mut tmp);
+    for j in 0..r {
+        let shift = vecops::dot(y, vs.col(j)) / ts[j];
+        let tcol = tmp.col(j);
+        let (top, bot) = out.col_mut(j).split_at_mut(p);
+        for i in 0..p {
+            bot[i] = tcol[i] + shift;
+            top[i] = tcol[i] - shift;
+        }
+    }
+}
+
+/// Column-batched [`ReducedSamples::matvec_t`] across problems; same
+/// per-column budget/bit-identity contract as [`reduced_matvec_batch`].
+pub fn reduced_matvec_t_batch(
+    x: &Design,
+    y: &[f64],
+    ts: &[f64],
+    us: &MultiVec,
+    out: &mut MultiVec,
+) {
+    let p = x.cols();
+    let r = us.ncols();
+    debug_assert_eq!(ts.len(), r);
+    debug_assert_eq!(us.rows(), 2 * p);
+    debug_assert_eq!((out.rows(), out.ncols()), (x.rows(), r));
+    let mut sums = MultiVec::zeros(p, r);
+    for j in 0..r {
+        let (u1, u2) = us.col(j).split_at(p);
+        vecops::add(u1, u2, sums.col_mut(j));
+    }
+    x.matvec_multi_into(&sums, out);
+    for j in 0..r {
+        let (u1, u2) = us.col(j).split_at(p);
+        let coeff = (u2.iter().sum::<f64>() - u1.iter().sum::<f64>()) / ts[j];
+        vecops::axpy(coeff, y, out.col_mut(j));
     }
 }
 
@@ -529,6 +593,40 @@ mod tests {
                     "matvec_t i={i} sparse={}",
                     design.is_sparse()
                 );
+            }
+        }
+    }
+
+    /// The per-column-budget batch kernels must reproduce the
+    /// corresponding single-problem operators bit-for-bit — the
+    /// cross-problem fusion contract of the batched Newton.
+    #[test]
+    fn batch_kernels_bit_match_per_problem_ops() {
+        let (x, y, _) = setup(9, 6, 141);
+        for design in [
+            Design::from(x.clone()),
+            Design::from(crate::linalg::Csr::from_dense(&x, 0.0)),
+        ] {
+            let ts = [0.4, 0.9, 2.5];
+            let mut rng = Rng::seed_from(142);
+            let vs = MultiVec::from_fn(9, 3, |_, _| rng.normal());
+            let us = MultiVec::from_fn(12, 3, |_, _| rng.normal());
+            let mut out = MultiVec::zeros(12, 3);
+            reduced_matvec_batch(&design, &y, &ts, &vs, &mut out);
+            let mut out_t = MultiVec::zeros(9, 3);
+            reduced_matvec_t_batch(&design, &y, &ts, &us, &mut out_t);
+            for j in 0..3 {
+                let red = ReducedSamples { x: &design, y: &y, t: ts[j] };
+                let mut single = vec![0.0; 12];
+                red.matvec(vs.col(j), &mut single);
+                for (a, b) in single.iter().zip(out.col(j)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "matvec col {j}");
+                }
+                let mut single_t = vec![0.0; 9];
+                red.matvec_t(us.col(j), &mut single_t);
+                for (a, b) in single_t.iter().zip(out_t.col(j)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "matvec_t col {j}");
+                }
             }
         }
     }

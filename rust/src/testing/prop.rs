@@ -1,6 +1,83 @@
-//! The `forall` property runner and generator combinators.
+//! The `forall` property runner and generator combinators, plus shared
+//! operator test doubles (the ridge-Hessian [`RidgeOp`]/[`RidgeFamily`]
+//! pair used by both the blocked-CG proptests and the `cv_micro`
+//! bench — one definition, so the bench asserts exactly the operator
+//! the proptests pin).
 
+use crate::linalg::{LinOp, Mat, MultiLinOp, MultiVec};
 use crate::rng::Rng;
+use std::cell::RefCell;
+
+/// Solo ridge-Hessian test double `v ↦ shift·v + Xᵀ(X·v)` built on the
+/// *single-RHS* kernels — the independent reference operator for
+/// blocked-CG bit-identity checks.
+pub struct RidgeOp<'a> {
+    pub x: &'a Mat,
+    pub shift: f64,
+    buf: RefCell<Vec<f64>>,
+}
+
+impl<'a> RidgeOp<'a> {
+    pub fn new(x: &'a Mat, shift: f64) -> Self {
+        RidgeOp { x, shift, buf: RefCell::new(Vec::new()) }
+    }
+}
+
+impl LinOp for RidgeOp<'_> {
+    fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn apply(&self, v: &[f64], out: &mut [f64]) {
+        let mut b = self.buf.borrow_mut();
+        b.resize(self.x.rows(), 0.0);
+        self.x.matvec_into(v, &mut b);
+        self.x.matvec_t_into(&b, out);
+        for i in 0..out.len() {
+            out[i] = self.shift * v[i] + out[i];
+        }
+    }
+}
+
+/// The matching [`MultiLinOp`] family: one shared X, per-problem ridge
+/// shifts, fused panel products. Column `s` is bit-identical to
+/// `RidgeOp::new(x, shifts[cols[s]])` by the multi-RHS kernel contract.
+pub struct RidgeFamily<'a> {
+    pub x: &'a Mat,
+    pub shifts: Vec<f64>,
+    buf: RefCell<MultiVec>,
+}
+
+impl<'a> RidgeFamily<'a> {
+    pub fn new(x: &'a Mat, shifts: Vec<f64>) -> Self {
+        RidgeFamily { x, shifts, buf: RefCell::new(MultiVec::zeros(0, 0)) }
+    }
+}
+
+impl MultiLinOp for RidgeFamily<'_> {
+    fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn nprobs(&self) -> usize {
+        self.shifts.len()
+    }
+
+    fn apply_multi(&self, cols: &[usize], vs: &MultiVec, out: &mut MultiVec) {
+        let mut b = self.buf.borrow_mut();
+        b.resize(self.x.rows(), vs.ncols());
+        self.x.matvec_multi_into(vs, &mut b);
+        self.x.matvec_t_multi_into(&b, out);
+        for (s, &j) in cols.iter().enumerate() {
+            let sh = self.shifts[j];
+            let v = vs.col(s);
+            let o = out.col_mut(s);
+            for i in 0..o.len() {
+                o[i] = sh * v[i] + o[i];
+            }
+        }
+    }
+}
 
 /// A generator draws a case from seeded randomness at a given `size`
 /// (sizes ramp up across cases, like proptest's sizing).

@@ -1,0 +1,97 @@
+//! Peak-memory seal on the in-band blocked Gram kernel.
+//!
+//! The old `blocked_gram_into` staged every upper-triangle block pair in
+//! its own buffer before a scatter/mirror pass — ~m²/2 transient doubles
+//! (9.4 MB at m = 1536) on top of G itself. The band-writing kernel
+//! computes blocks straight into their destination rows and mirrors
+//! through a `split_at_mut` frontier, so its transient footprint is one
+//! packed A tile + one packed Aᵀ panel per worker (≈ 0.5 MB each at the
+//! current BS/KC). A live-byte-tracking allocator pins the difference:
+//! the extra peak during the call must stay far under the staged
+//! scheme's block storage.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use sven::linalg::gemm;
+
+/// Tracks live heap bytes and their high-water mark.
+struct PeakTrackingAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+fn on_grow(bytes: usize) {
+    let live = LIVE.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for PeakTrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_grow(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                on_grow(new_size - layout.size());
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: PeakTrackingAlloc = PeakTrackingAlloc;
+
+/// One test fn so no concurrent test pollutes the high-water mark.
+#[test]
+fn blocked_gram_has_no_quadratic_transients() {
+    // m spans 12 BS-bands; k kept small so the debug-mode flop count
+    // stays cheap — the assertion is about allocation, not speed.
+    const M: usize = 1536;
+    const K: usize = 48;
+    let staged_bytes = M * M / 2 * std::mem::size_of::<f64>(); // ~9.4 MB
+    // Budget: half the staged scheme's block storage. The in-band kernel
+    // needs ~0.5 MB per worker (packed tile + panel at 4 workers ≈ 2 MB
+    // with allocator slop), so this passes with a wide margin while any
+    // regression back to staged block pairs trips it.
+    let budget = staged_bytes / 2;
+
+    // Setup (untracked): input and output allocated before the reset.
+    let mut rng = sven::rng::Rng::seed_from(4141);
+    let a: Vec<f64> = (0..M * K).map(|_| rng.normal()).collect();
+    let mut g = vec![0.0f64; M * M];
+    let mut reference = vec![0.0f64; M * M];
+    gemm::naive_gram_into(&a, &mut reference, M, K);
+
+    let baseline = LIVE.load(Ordering::Relaxed);
+    PEAK.store(baseline, Ordering::Relaxed);
+    gemm::blocked_gram_into(&a, &mut g, M, K, 4);
+    let extra = PEAK.load(Ordering::Relaxed).saturating_sub(baseline);
+
+    assert!(
+        extra < budget,
+        "blocked_gram_into peaked {extra} transient bytes (budget {budget}, staged \
+         scheme would need >= {staged_bytes}) — block buffers are back"
+    );
+    // And the in-band kernel still computes the right gram.
+    let dev = g
+        .iter()
+        .zip(&reference)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max);
+    assert!(dev < 1e-10, "gram deviation {dev}");
+}

@@ -524,3 +524,151 @@ fn prop_gathered_hessian_equals_masked() {
         },
     );
 }
+
+/// Blocked CG vs solo CG: every column of a `cg_solve_multi` panel must
+/// be **bit-identical** to its solo `cg_solve_with` run — same iterates,
+/// same iteration counts — across panel widths 1/2/4/8 and across
+/// thread counts (the fused operator products are bit-stable, and every
+/// per-column scalar op replicates the solo order).
+#[test]
+fn prop_blocked_cg_columns_bit_match_solo_across_threads() {
+    use sven::linalg::{cg_solve_multi, cg_solve_with, CgOptions, CgScratch, MultiVec};
+    use sven::testing::prop::{RidgeFamily, RidgeOp};
+    use sven::util::parallel::with_parallelism;
+    use sven::util::Parallelism;
+
+    forall(
+        "blocked CG == solo CG per column",
+        12,
+        |rng: &mut Rng, size: usize| {
+            let n = 8 + 3 * size + rng.below(10);
+            let d = 5 + 2 * size + rng.below(8);
+            let x = Mat::from_fn(n, d, |_, _| rng.normal());
+            let width = [1usize, 2, 4, 8][rng.below(4)];
+            // Shifts spread over orders of magnitude: columns converge at
+            // different iteration counts, exercising masking+compaction.
+            let shifts: Vec<f64> = (0..width).map(|_| rng.uniform_in(0.05, 20.0)).collect();
+            let b = MultiVec::from_fn(d, width, |_, _| rng.normal());
+            (x, shifts, b)
+        },
+        |(x, shifts, b)| {
+            let width = shifts.len();
+            let d = x.cols();
+            let opts = vec![CgOptions::default(); width];
+            let run_multi = |par: Parallelism| -> (MultiVec, Vec<usize>) {
+                with_parallelism(par, || {
+                    let fam = RidgeFamily::new(x, shifts.clone());
+                    let mut sol = MultiVec::zeros(d, width);
+                    let out = cg_solve_multi(&fam, b, &mut sol, &opts);
+                    (sol, out.outcomes.iter().map(|o| o.iters).collect())
+                })
+            };
+            let serial = run_multi(Parallelism::None);
+            for nt in [2usize, 8] {
+                let threaded = run_multi(Parallelism::Fixed(nt));
+                if threaded.1 != serial.1 {
+                    return Err(format!("iters differ at nt={nt}"));
+                }
+                for (i, (s, t)) in
+                    serial.0.data().iter().zip(threaded.0.data()).enumerate()
+                {
+                    if s.to_bits() != t.to_bits() {
+                        return Err(format!("nt={nt} flat index {i}"));
+                    }
+                }
+            }
+            // Per-column solo reference, serial.
+            with_parallelism(Parallelism::None, || {
+                for j in 0..width {
+                    let op = RidgeOp::new(x, shifts[j]);
+                    let mut xs = vec![0.0; d];
+                    let out = cg_solve_with(
+                        &op,
+                        b.col(j),
+                        &mut xs,
+                        &CgOptions::default(),
+                        &mut CgScratch::new(),
+                    );
+                    if out.iters != serial.1[j] {
+                        return Err(format!(
+                            "col {j}: solo {} iters vs blocked {}",
+                            out.iters, serial.1[j]
+                        ));
+                    }
+                    for (i, (s, m)) in xs.iter().zip(serial.0.col(j)).enumerate() {
+                        if s.to_bits() != m.to_bits() {
+                            return Err(format!("col {j} i={i}: solo vs blocked bits"));
+                        }
+                    }
+                }
+                Ok(())
+            })
+        },
+    );
+}
+
+/// The batched primal Newton is transparent at the solver-output level:
+/// a batch over random neighboring (t, C) points must reproduce each
+/// solo `primal_newton` run bit-for-bit (weights, duals, counters).
+#[test]
+fn prop_primal_newton_batch_matches_solo() {
+    use sven::solvers::svm::samples::reduction_labels;
+    use sven::solvers::svm::{
+        primal_newton, primal_newton_batch, PrimalBatchPoint, PrimalOptions, ReducedSamples,
+    };
+    forall(
+        "primal batch == solo",
+        8,
+        |rng: &mut Rng, size: usize| {
+            let n = 8 + 2 * size + rng.below(6);
+            let p = n + 4 + rng.below(10); // 2p > n ⇒ the primal regime
+            let x = Mat::from_fn(n, p, |_, _| rng.normal());
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let width = 1 + rng.below(4);
+            let pts: Vec<(f64, f64)> = (0..width)
+                .map(|_| (rng.uniform_in(0.2, 2.0), rng.uniform_in(0.5, 10.0)))
+                .collect();
+            (x, y, pts)
+        },
+        |(x, y, pts)| {
+            let design: Design = x.clone().into();
+            let labels = reduction_labels(x.cols());
+            let opts = PrimalOptions::default();
+            let points: Vec<PrimalBatchPoint> = pts
+                .iter()
+                .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
+                .collect();
+            let (batch, _stats) = primal_newton_batch(&design, y, &points, &opts);
+            for (s, &(t, c)) in batch.iter().zip(pts) {
+                let red = ReducedSamples { x: &design, y, t };
+                let solo = primal_newton(&red, &labels, c, &opts, None);
+                if solo.newton_iters != s.newton_iters
+                    || solo.cg_iters_total != s.cg_iters_total
+                    || solo.gather_rebuilds != s.gather_rebuilds
+                {
+                    return Err(format!(
+                        "t={t} c={c}: counters diverge (newton {} vs {}, cg {} vs {}, \
+                         gathers {} vs {})",
+                        solo.newton_iters,
+                        s.newton_iters,
+                        solo.cg_iters_total,
+                        s.cg_iters_total,
+                        solo.gather_rebuilds,
+                        s.gather_rebuilds
+                    ));
+                }
+                for (i, (a, b)) in solo.w.iter().zip(&s.w).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("t={t} c={c}: w[{i}] bits"));
+                    }
+                }
+                for (i, (a, b)) in solo.alpha.iter().zip(&s.alpha).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("t={t} c={c}: alpha[{i}] bits"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

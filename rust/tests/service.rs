@@ -7,16 +7,23 @@
 //!   service.
 //! - A `JobKind::Path` service job reproduces an offline
 //!   `PathRunner::run` **bit-for-bit** (shared `sweep_prepared` core).
+//! - A `JobKind::CvPath` job reproduces k standalone fold `Path` jobs
+//!   **bit-for-bit** while building exactly one preparation per fold
+//!   (plus the winning refit), and the batched-Newton fusion stats flow
+//!   through `sweep_prepared` into the metrics.
 //! - Closed services reject submissions with `ServiceClosed` instead of
 //!   silently dropping them.
 
 use std::sync::Arc;
+use sven::coordinator::cv::fold_problem;
+use sven::coordinator::path::sweep_prepared;
 use sven::coordinator::{
-    BackendChoice, PathRunner, PathRunnerConfig, PoolConfig, Service, ServiceConfig,
+    BackendChoice, GridPoint, PathRunner, PathRunnerConfig, PoolConfig, Service,
+    ServiceConfig,
 };
 use sven::data::{synth_regression, SynthSpec};
 use sven::linalg::{Csr, Design};
-use sven::solvers::sven::{RustBackend, Sven};
+use sven::solvers::sven::{RustBackend, Sven, SvmScratch};
 
 /// K jobs, one data set, several workers racing on a cold cache: exactly
 /// one preparation build, shared by everyone — the amortization invariant
@@ -311,6 +318,148 @@ fn path_engine_metrics_are_live() {
     assert!(report.contains("cg_iters_total="), "report: {report}");
     assert!(report.contains("path_segments="), "report: {report}");
     service.shutdown();
+}
+
+/// The CV-fold workload's headline contract: a `JobKind::CvPath` job
+/// must reproduce k standalone `JobKind::Path` jobs on the fold
+/// training sets **bit-for-bit**, in both SVM regimes, while building
+/// exactly one preparation per fold (plus one for the winning refit)
+/// regardless of the fold×segment fan-out across workers — pinned via
+/// the prep and cv metrics.
+#[test]
+fn cv_path_matches_standalone_fold_paths_bit_for_bit() {
+    // (n, p) regimes: 2p > n ⇒ primal, n ≥ 2p ⇒ dual.
+    for (n, p, seed) in [(40usize, 60usize, 821u64), (160, 12, 822)] {
+        let d = synth_regression(&SynthSpec {
+            n,
+            p,
+            support: 8.min(p / 2),
+            seed,
+            ..Default::default()
+        });
+        let runner = PathRunner::new(PathRunnerConfig { grid: 8, ..Default::default() });
+        let grid = runner.derive_grid(&d);
+        let mut points = runner.grid_points(&grid);
+        points.retain(|gp| gp.t > 0.0); // drop a possible all-zero-support point
+        assert!(points.len() >= 4, "grid too small: {}", points.len());
+        let x = Arc::new(Design::from(d.x.clone()));
+        let y = Arc::new(d.y.clone());
+        let folds = 3usize;
+
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 4, queue_capacity: 32 },
+            path_segment_min: 2,
+            ..Default::default()
+        });
+        let rx = service
+            .submit_cv_path(5, x.clone(), y.clone(), folds, points.clone(), BackendChoice::Rust)
+            .unwrap();
+        let cvres = rx.recv().unwrap().result.expect("cv ok").expect_cv_path();
+        let m = service.metrics();
+        assert_eq!(m.cv_folds(), folds as u64, "{n}x{p}: one fold build each");
+        assert_eq!(
+            m.prep_builds(),
+            folds as u64 + 1,
+            "{n}x{p}: one prep per fold + the winning refit, despite {} workers",
+            4
+        );
+        assert_eq!(m.completed(), 1);
+        let report = m.report();
+        assert!(report.contains("cv_folds="), "report: {report}");
+        assert!(report.contains("batched_cg_rhs_total="), "report: {report}");
+        assert!(report.contains("batch_panel_rebuilds="), "report: {report}");
+        service.shutdown();
+
+        assert_eq!(cvres.fold_paths.len(), folds);
+        assert_eq!(cvres.cv_errors.len(), points.len());
+        assert!(cvres.cv_errors.iter().all(|e| e.is_finite() && *e >= 0.0));
+        let mut argmin = 0;
+        for (i, &e) in cvres.cv_errors.iter().enumerate() {
+            if e < cvres.cv_errors[argmin] {
+                argmin = i;
+            }
+        }
+        assert_eq!(cvres.best_index, argmin);
+        assert_eq!(cvres.best.beta.len(), p);
+
+        // k standalone path jobs on the fold training sets, built with
+        // the same public fold helpers the service uses.
+        for f in 0..folds {
+            let (xf, yf) = fold_problem(&x, &y, folds, f);
+            let service = Service::start(ServiceConfig {
+                pool: PoolConfig { workers: 4, queue_capacity: 32 },
+                path_segment_min: 2,
+                ..Default::default()
+            });
+            let rx = service
+                .submit_path(9, xf, yf, points.clone(), BackendChoice::Rust)
+                .unwrap();
+            let alone = rx.recv().unwrap().result.expect("path ok").expect_path();
+            service.shutdown();
+            assert_eq!(alone.len(), cvres.fold_paths[f].len());
+            for (i, (a, b)) in alone.iter().zip(&cvres.fold_paths[f]).enumerate() {
+                assert_eq!(a.beta.len(), b.beta.len());
+                for j in 0..a.beta.len() {
+                    assert_eq!(
+                        a.beta[j].to_bits(),
+                        b.beta[j].to_bits(),
+                        "{n}x{p} fold {f} point {i} j={j}: standalone {} vs cv {}",
+                        a.beta[j],
+                        b.beta[j]
+                    );
+                }
+                assert_eq!(a.iterations, b.iterations, "{n}x{p} fold {f} point {i}");
+            }
+        }
+    }
+}
+
+/// Batch fusion stats flow out of `sweep_prepared` and into the
+/// metrics: a primal-mode sweep whose grid repeats a point (shrinking
+/// forced always-on) must drive right-hand sides through blocked CG
+/// over a shared panel — and the duplicated points must come back
+/// bit-identical.
+#[test]
+fn sweep_reports_batch_fusion_stats() {
+    let d = synth_regression(&SynthSpec {
+        n: 20,
+        p: 40,
+        support: 6,
+        seed: 823,
+        ..Default::default()
+    });
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let mut backend = RustBackend::default();
+    // Gather from round one: every sample starts inside the margin at
+    // w = 0, so all three points share the full SV set and group.
+    backend.primal.shrink_max_frac = 1.0;
+    let sven_solver = Sven::new(backend);
+    let prep = sven_solver.prepare_shared(&x, &y).unwrap();
+    let mut scratch = SvmScratch::new();
+    let gp = GridPoint { t: 0.5, lambda2: 0.4 };
+    let grid = vec![gp, gp, GridPoint { t: 0.8, lambda2: 0.4 }];
+    let (sols, stats) = sweep_prepared(
+        &sven_solver,
+        prep.as_ref(),
+        &mut scratch,
+        &x,
+        &y,
+        &grid,
+        None,
+        true,
+    )
+    .unwrap();
+    assert_eq!(sols.len(), 3);
+    assert!(stats.batched_rhs >= 2, "duplicated points must group: {stats:?}");
+    assert!(stats.panel_builds >= 1, "the group must gather a shared panel");
+    for j in 0..sols[0].beta.len() {
+        assert_eq!(
+            sols[0].beta[j].to_bits(),
+            sols[1].beta[j].to_bits(),
+            "duplicated grid points must solve identically (j={j})"
+        );
+    }
 }
 
 /// A segmented path job with an invalid late grid point fails fast at

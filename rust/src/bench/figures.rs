@@ -71,19 +71,24 @@ fn xla_sven() -> Option<Sven<crate::runtime::XlaBackend>> {
 // ---------------------------------------------------------------------------
 
 /// Gemm/gram micro-bench: the seed's naive serial kernels against the
-/// packed blocked kernel at one thread and at the effective thread
-/// count. `full` runs the acceptance shapes (gemm 1024³; gram `XᵀX` for
-/// X of n=4096, p=1024); otherwise tiny CI-smoke shapes. Returns the
-/// (gemm, gram) speedups of the threaded blocked kernel over naive.
+/// blocked core of the ambient [`KernelCtx`] at one thread and at the
+/// effective thread count. `full` runs the acceptance shapes (gemm
+/// 1024³; gram `XᵀX` for X of n=4096, p=1024); otherwise tiny CI-smoke
+/// shapes. Returns the (gemm, gram) speedups of the threaded blocked
+/// kernel over naive.
 pub fn linalg_micro(full: bool) -> (f64, f64) {
     use super::harness::measure;
-    use crate::linalg::gemm;
+    use crate::linalg::{gemm, KernelCtx};
     use crate::util::parallel;
 
+    let ctx = KernelCtx::current();
     let nt = parallel::effective_threads();
     let reps = if full { 3 } else { 2 };
     let mut rng = crate::rng::Rng::seed_from(4242);
-    println!("=== linalg micro: seed naive kernel vs blocked (nt = {nt}) ===");
+    println!(
+        "=== linalg micro: seed naive kernel vs blocked (nt = {nt}, kernel = {}) ===",
+        ctx.kernel_name()
+    );
 
     // --- GEMM ---
     let (m, k, n) = if full { (1024, 1024, 1024) } else { (160, 96, 128) };
@@ -94,10 +99,10 @@ pub fn linalg_micro(full: bool) -> (f64, f64) {
     let t_naive = measure(1, reps, || gemm::naive_matmul_into(&a, &b, &mut c, m, k, n))
         .summary
         .median();
-    let t_b1 = measure(1, reps, || gemm::blocked_matmul_into(&a, &b, &mut c, m, k, n, 1))
+    let t_b1 = measure(1, reps, || ctx.blocked_matmul_into(&a, &b, &mut c, m, k, n, 1))
         .summary
         .median();
-    let t_bn = measure(1, reps, || gemm::blocked_matmul_into(&a, &b, &mut c, m, k, n, nt))
+    let t_bn = measure(1, reps, || ctx.blocked_matmul_into(&a, &b, &mut c, m, k, n, nt))
         .summary
         .median();
     let gemm_speedup = t_naive / t_bn;
@@ -121,9 +126,9 @@ pub fn linalg_micro(full: bool) -> (f64, f64) {
         .summary
         .median();
     let t_b1 =
-        measure(1, reps, || gemm::blocked_gram_into(&a2, &mut g, gm, gk, 1)).summary.median();
+        measure(1, reps, || ctx.blocked_gram_into(&a2, &mut g, gm, gk, 1)).summary.median();
     let t_bn =
-        measure(1, reps, || gemm::blocked_gram_into(&a2, &mut g, gm, gk, nt)).summary.median();
+        measure(1, reps, || ctx.blocked_gram_into(&a2, &mut g, gm, gk, nt)).summary.median();
     let gram_speedup = t_naive / t_bn;
     println!(
         "gram XᵀX (X {gk}x{gm}): naive {:.1}ms ({:.2} GF/s) | blocked@1 {:.1}ms ({:.1}x) | \
@@ -136,6 +141,100 @@ pub fn linalg_micro(full: bool) -> (f64, f64) {
         gram_speedup
     );
     (gemm_speedup, gram_speedup)
+}
+
+// ---------------------------------------------------------------------------
+// Microkernel dispatch bench (tile rooflines, forced-kernel gram)
+// ---------------------------------------------------------------------------
+
+/// Microkernel dispatch bench. Prints the dispatched kernel + probed
+/// cache geometry, measures every enabled microkernel's in-L1 tile peak
+/// (packed panels at the kernel's own `kc` — the roofline the blocked
+/// core can approach), then times the gram acceptance shape (`XᵀX` for
+/// X of n=4096, p=1024 when `full`) blocked serially under the forced
+/// scalar kernel vs the dispatched (best SIMD) kernel. The two results
+/// are also checked against each other numerically — per-kernel
+/// bit-identity is the proptests' job; here only rounding may differ
+/// (FMA fuses). Returns (SIMD-over-scalar gram speedup, dispatched
+/// kernel's achieved fraction of its tile roofline).
+pub fn kernel_micro(full: bool) -> (f64, f64) {
+    use super::harness::measure;
+    use crate::linalg::{best_available, enabled_choices, KernelChoice, KernelCtx};
+
+    println!("=== kernel micro: microkernel dispatch and tile rooflines ===");
+    println!("dispatch: {}", KernelCtx::current().describe());
+    let reps = if full { 5 } else { 2 };
+    let mut rng = crate::rng::Rng::seed_from(5151);
+
+    // --- per-kernel in-L1 tile peak ---
+    // A tile call is 2·mr·nr·kc flops over panels that fit L1 by
+    // construction (kc is derived from half of L1d), so its GFLOP/s is
+    // the compute ceiling for that kernel on this machine.
+    let mut peaks: Vec<(KernelChoice, f64)> = Vec::new();
+    for choice in enabled_choices() {
+        let ctx = KernelCtx::for_choice(choice).expect("enabled kernel");
+        let kern = ctx.micro();
+        let (mr, nr) = (kern.mr(), kern.nr());
+        let kc = ctx.blocking().kc;
+        let ap: Vec<f64> = (0..kc * mr).map(|_| rng.normal()).collect();
+        let bp: Vec<f64> = (0..kc * nr).map(|_| rng.normal()).collect();
+        let mut acc = vec![0.0f64; mr * nr];
+        let inner = if full { 20_000usize } else { 400 };
+        let t = measure(1, reps, || {
+            for _ in 0..inner {
+                kern.tile(&ap, &bp, kc, &mut acc);
+            }
+            std::hint::black_box(&mut acc);
+        })
+        .summary
+        .median();
+        let gflops = (2 * mr * nr * kc * inner) as f64 / t / 1e9;
+        peaks.push((choice, gflops));
+        println!("  {choice}({mr}x{nr}) tile peak @kc={kc}: {gflops:.2} GFLOP/s");
+    }
+
+    // --- gram acceptance shape: forced-scalar vs dispatched kernel ---
+    let (gm, gk) = if full { (1024usize, 4096usize) } else { (96, 160) };
+    let a: Vec<f64> = (0..gm * gk).map(|_| rng.normal()).collect();
+    let gram_flops = (gm * gm * gk) as f64;
+    let scalar = KernelCtx::for_choice(KernelChoice::Scalar).expect("scalar always enabled");
+    let best = KernelCtx::for_choice(best_available()).expect("best kernel enabled");
+    let mut g_scalar = vec![0.0; gm * gm];
+    let t_scalar = measure(1, reps, || {
+        scalar.blocked_gram_into(&a, &mut g_scalar, gm, gk, 1)
+    })
+    .summary
+    .median();
+    let mut g_best = vec![0.0; gm * gm];
+    let t_best = measure(1, reps, || best.blocked_gram_into(&a, &mut g_best, gm, gk, 1))
+        .summary
+        .median();
+    // Cross-kernel agreement (rounding-only differences allowed).
+    for (i, (s, b)) in g_scalar.iter().zip(&g_best).enumerate() {
+        let scale = 1.0f64.max(s.abs());
+        assert!(
+            (s - b).abs() <= 1e-10 * scale,
+            "scalar vs {} gram diverged at flat {i}: {s} vs {b}",
+            best.kernel_name()
+        );
+    }
+    let gf_scalar = gram_flops / t_scalar / 1e9;
+    let gf_best = gram_flops / t_best / 1e9;
+    let best_peak = peaks
+        .iter()
+        .find(|(c, _)| *c == best.choice())
+        .map(|(_, p)| *p)
+        .unwrap_or(f64::NAN);
+    let frac = gf_best / best_peak;
+    println!(
+        "gram XᵀX (X {gk}x{gm}) blocked@1: scalar {:.1}ms ({gf_scalar:.2} GF/s) | \
+         {} {:.1}ms ({gf_best:.2} GF/s = {:.0}% of its {best_peak:.2} GF/s roofline)",
+        t_scalar * 1e3,
+        best.kernel_name(),
+        t_best * 1e3,
+        frac * 100.0
+    );
+    (t_scalar / t_best, frac)
 }
 
 // ---------------------------------------------------------------------------

@@ -13,6 +13,7 @@ use crate::data::{profile_by_name, ALL_PROFILES};
 use crate::solvers::elastic_net::EnProblem;
 use crate::solvers::glmnet::PathSettings;
 use crate::solvers::sven::{RustBackend, Sven};
+use crate::linalg::{set_global_kernel, KernelChoice, KernelCtx};
 use crate::util::fmt_duration;
 use crate::util::parallel::{set_global_parallelism, Parallelism};
 use anyhow::{anyhow, bail, Result};
@@ -84,22 +85,27 @@ COMMANDS:
       --lambda2 Y          L2 coefficient             [default 1.0]
       --backend xla|rust   SVM backend                [default rust]
       --threads N          linalg worker threads (0 = auto, 1 = serial)
+      --kernel K           compute kernel: scalar|avx2|fma|auto [default auto]
   path                     sweep a regularization path (paper protocol)
       --dataset NAME       profile name
       --seed N             generation seed            [default 0]
       --grid K             number of settings         [default 40]
       --backend xla|rust   SVM backend                [default rust]
       --threads N          linalg worker threads (0 = auto, 1 = serial)
+      --kernel K           compute kernel: scalar|avx2|fma|auto [default auto]
   serve                    demo coordinator run
       --requests N         number of jobs             [default 32]
       --workers N          pool size                  [default cpus]
       --backend xla|rust   SVM backend                [default rust]
       --threads N          linalg worker threads (0 = auto, 1 = serial)
+      --kernel K           compute kernel: scalar|avx2|fma|auto [default auto]
   help                     show this message
 
 Thread resolution when --threads is absent: PALLAS_NUM_THREADS (fallback
-SVEN_THREADS), else the machine's available parallelism. All blocked
-kernels produce bit-identical results at any thread count.
+SVEN_THREADS), else the machine's available parallelism. For a fixed
+kernel choice, all blocked kernels produce bit-identical results at any
+thread count. Kernel resolution when --kernel is absent: PALLAS_KERNEL
+(scalar|avx2|fma|auto), else the best SIMD tier the CPU supports.
 ";
 
 /// CLI entrypoint (used by `rust/src/main.rs`).
@@ -180,6 +186,19 @@ fn apply_threads(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply `--kernel` to the process-wide compute-kernel dispatch
+/// (`auto` clears any force back to `PALLAS_KERNEL`/CPU detection).
+/// An unsupported force fails here with the dispatch error instead of
+/// panicking on the first matrix product.
+fn apply_kernel(args: &Args) -> Result<()> {
+    if let Some(v) = args.get("kernel") {
+        let choice = KernelChoice::parse(v)?;
+        set_global_kernel(choice)?;
+        crate::info!("compute {}", KernelCtx::current().describe());
+    }
+    Ok(())
+}
+
 fn backend_choice(args: &Args) -> Result<BackendChoice> {
     match args.get("backend").unwrap_or("rust") {
         "rust" | "cpu" => Ok(BackendChoice::Rust),
@@ -190,6 +209,7 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
 
 fn cmd_solve(args: &Args) -> Result<()> {
     apply_threads(args)?;
+    apply_kernel(args)?;
     let data = load_dataset(args)?;
     let lambda2 = args.get_f64("lambda2")?.unwrap_or(1.0);
     // Default budget: the largest-support point of a short derived path.
@@ -230,6 +250,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
 fn cmd_path(args: &Args) -> Result<()> {
     apply_threads(args)?;
+    apply_kernel(args)?;
     let data = load_dataset(args)?;
     let grid = args.get_usize("grid")?.unwrap_or(40);
     let runner = PathRunner::new(PathRunnerConfig { grid, ..Default::default() });
@@ -265,6 +286,7 @@ fn cmd_path(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     apply_threads(args)?;
+    apply_kernel(args)?;
     let requests = args.get_usize("requests")?.unwrap_or(32);
     let backend = backend_choice(args)?;
     let mut config = ServiceConfig::default();
@@ -360,6 +382,22 @@ mod tests {
         apply_threads(&none).unwrap();
         let bad = parse_args(&raw(&["--threads", "x"])).unwrap();
         assert!(apply_threads(&bad).is_err());
+    }
+
+    #[test]
+    fn kernel_flag_parses_and_noop_without_flag() {
+        // Without the flag, apply_kernel must not touch the global
+        // dispatch (other tests in this process rely on Auto).
+        let none = parse_args(&raw(&[])).unwrap();
+        apply_kernel(&none).unwrap();
+        // `auto` is always accepted and stores the do-nothing default,
+        // so this is safe to run concurrently with kernel-pinning tests.
+        let auto = parse_args(&raw(&["--kernel", "auto"])).unwrap();
+        apply_kernel(&auto).unwrap();
+        // A nonsense kernel is a friendly error, not a panic later.
+        let bad = parse_args(&raw(&["--kernel", "sse9"])).unwrap();
+        let err = apply_kernel(&bad).unwrap_err().to_string();
+        assert!(err.contains("sse9"), "got: {err}");
     }
 
     #[test]

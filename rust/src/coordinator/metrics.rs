@@ -4,11 +4,13 @@
 
 use crate::util::Summary;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 /// Aggregated coordinator metrics.
 #[derive(Default)]
 pub struct Metrics {
+    /// Dispatched kernel + cache geometry, set once at service startup.
+    kernel_info: OnceLock<String>,
     submitted: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
@@ -29,6 +31,17 @@ pub struct Metrics {
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Record the dispatched-kernel/geometry line (once; later calls are
+    /// ignored — dispatch is fixed for the process lifetime).
+    pub fn set_kernel_info(&self, info: String) {
+        let _ = self.kernel_info.set(info);
+    }
+
+    /// Dispatched kernel + cache geometry, if recorded.
+    pub fn kernel_info(&self) -> Option<&str> {
+        self.kernel_info.get().map(String::as_str)
     }
 
     pub fn on_submit(&self) {
@@ -197,11 +210,15 @@ impl Metrics {
                 )
             })
             .unwrap_or_default();
+        let kernel = self
+            .kernel_info()
+            .map(|k| format!(" {k}"))
+            .unwrap_or_default();
         format!(
             "submitted={} completed={} failed={} rejected={} \
              prep_hits={} prep_builds={} prep_evictions={} \
              path_segments={} sv_gather_rebuilds={} cg_iters_total={} \
-             cv_folds={} batched_cg_rhs_total={} batch_panel_rebuilds={} {lat}{qw}",
+             cv_folds={} batched_cg_rhs_total={} batch_panel_rebuilds={} {lat}{qw}{kernel}",
             self.submitted(),
             self.completed(),
             self.failed(),
@@ -294,6 +311,20 @@ mod tests {
         assert!(report.contains("cv_folds=3"));
         assert!(report.contains("batched_cg_rhs_total=12"));
         assert!(report.contains("batch_panel_rebuilds=3"));
+    }
+
+    #[test]
+    fn kernel_info_set_once_and_reported() {
+        let m = Metrics::new();
+        assert!(m.kernel_info().is_none());
+        assert!(!m.report().contains("kernel="));
+        m.set_kernel_info("kernel=fma(6x8) cache[l1d=48K l2=2048K l3=8192K (sysfs)]".into());
+        m.set_kernel_info("kernel=scalar(4x8)".into()); // ignored: dispatch is fixed
+        assert_eq!(
+            m.kernel_info(),
+            Some("kernel=fma(6x8) cache[l1d=48K l2=2048K l3=8192K (sysfs)]")
+        );
+        assert!(m.report().contains("kernel=fma(6x8)"));
     }
 
     #[test]

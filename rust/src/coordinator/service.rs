@@ -188,9 +188,17 @@ impl ServiceConfig {
     /// runtime: a zero `path_segment_min` divides by zero when
     /// segmenting (`usize::MAX` is the documented way to disable
     /// segmentation), a zero `prep_cache_capacity` evicts preparations
-    /// while they are being shared, and a zero-worker or zero-capacity
-    /// pool can never make progress.
+    /// while they are being shared, a zero-worker or zero-capacity
+    /// pool can never make progress, and a compute kernel this CPU (or
+    /// a bad `PALLAS_KERNEL`) cannot deliver would panic on the first
+    /// product deep inside a worker.
     pub fn validate(&self) -> Result<(), ServiceConfigError> {
+        // Resolving the kernel here (including `Auto` through the
+        // `PALLAS_KERNEL` env var) turns an unsupported force into a
+        // construction-time error instead of a worker-thread panic.
+        if let Err(e) = crate::linalg::KernelCtx::for_choice(self.sven.kernel) {
+            return Err(ServiceConfigError(e.to_string()));
+        }
         if self.pool.workers == 0 {
             return Err(ServiceConfigError("pool.workers must be >= 1".into()));
         }
@@ -854,6 +862,11 @@ impl Service {
     pub fn try_start(config: ServiceConfig) -> Result<Self, ServiceConfigError> {
         config.validate()?;
         let metrics = Arc::new(Metrics::new());
+        // validate() just proved this resolves; record the dispatched
+        // kernel + cache geometry so `Metrics::report` names them.
+        if let Ok(ctx) = crate::linalg::KernelCtx::for_choice(config.sven.kernel) {
+            metrics.set_kernel_info(ctx.describe());
+        }
         let preps = Arc::new(PrepCache::new(config.prep_cache_capacity, metrics.clone()));
         let metrics_for_workers = metrics.clone();
         let preps_for_workers = preps.clone();
@@ -1441,6 +1454,23 @@ mod tests {
         assert_eq!(service.metrics().failed(), 4);
         assert_eq!(service.metrics().prep_builds(), 0);
         assert_eq!(service.metrics().cv_folds(), 0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn startup_records_dispatched_kernel_in_metrics() {
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 1, queue_capacity: 2 },
+            ..Default::default()
+        });
+        let info = service
+            .metrics()
+            .kernel_info()
+            .expect("kernel info recorded at startup")
+            .to_string();
+        assert!(info.starts_with("kernel="), "got: {info}");
+        assert!(info.contains("cache["), "got: {info}");
+        assert!(service.metrics().report().contains(&info));
         service.shutdown();
     }
 

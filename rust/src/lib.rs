@@ -46,6 +46,6 @@ pub mod solvers;
 pub mod testing;
 pub mod util;
 
-pub use linalg::{Csc, Csr, Design, MultiVec};
+pub use linalg::{Csc, Csr, Design, KernelChoice, KernelCtx, MultiVec};
 pub use solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
 pub use solvers::sven::{Sven, SvenConfig};

@@ -1,17 +1,20 @@
 //! Dense row-major `f64` matrix over the blocked kernel layer.
 //!
 //! `Mat` is the workhorse of every solver in this crate. All O(n³)
-//! products (GEMM, Gram) route through [`super::gemm`] — packed,
-//! register/L2-tiled, fanned out over the scoped pool in
-//! [`crate::util::parallel`] — and the O(n²) GEMV paths band their
-//! output rows over the same pool. No external BLAS is available
-//! offline; this layer keeps the rust CPU backend an honest "optimized
-//! CPU baseline" for the paper's comparisons.
+//! products (GEMM, Gram) route through the ambient
+//! [`KernelCtx`](crate::linalg::KernelCtx) — packed, register-tiled by
+//! the dispatched microkernel, cache-blocked by the probed geometry,
+//! fanned out over the scoped pool in [`crate::util::parallel`] — and
+//! the O(n²) GEMV paths band their output rows over the same pool,
+//! going parallel only past the ctx's cache-derived `gemv_threshold`.
+//! No external BLAS is available offline; this layer keeps the rust
+//! CPU backend an honest "optimized CPU baseline" for the paper's
+//! comparisons.
 //!
-//! Determinism contract: every product's result is bit-identical under
-//! any `Parallelism` setting (the decomposition never depends on the
-//! worker count — see the notes in `gemm.rs` and the fixed-chunk
-//! reduction in [`Mat::matvec_t_into`]).
+//! Determinism contract: for a fixed kernel choice, every product's
+//! result is bit-identical under any `Parallelism` setting (the
+//! decomposition never depends on the worker count — see the notes in
+//! `gemm.rs` and the fixed-chunk reduction in [`Mat::matvec_t_into`]).
 
 use super::multivec::MultiVec;
 use super::{gemm, vecops};
@@ -132,13 +135,16 @@ impl Mat {
     }
 
     /// `y ← A·x` into a caller-provided buffer (hot-path form). Output
-    /// rows are banded over the pool; each `y[r]` is one row dot, so the
-    /// result does not depend on the banding.
+    /// rows are banded over the pool once the matrix clears the ambient
+    /// ctx's cache-derived `gemv_threshold`; each `y[r]` is one row dot,
+    /// so the result does not depend on the banding.
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         let nt = parallel::effective_threads();
-        if self.rows * self.cols < 1 << 16 || nt == 1 {
+        if self.rows * self.cols < gemm::KernelCtx::current().blocking().gemv_threshold
+            || nt == 1
+        {
             for (r, yr) in y.iter_mut().enumerate() {
                 *yr = vecops::dot(self.row(r), x);
             }
@@ -224,7 +230,9 @@ impl Mat {
             return;
         }
         let nt = parallel::effective_threads();
-        if self.rows * self.cols < 1 << 16 || nt == 1 {
+        if self.rows * self.cols < gemm::KernelCtx::current().blocking().gemv_threshold
+            || nt == 1
+        {
             for row in 0..self.rows {
                 let a = self.row(row);
                 for j in 0..r {
@@ -338,12 +346,20 @@ impl Mat {
         }
     }
 
-    /// `C ← A·B` through the packed blocked kernel (small products fall
-    /// back to the naive loop inside `gemm`).
+    /// `C ← A·B` through the ambient
+    /// [`KernelCtx`](crate::linalg::KernelCtx) (reuse-poor small
+    /// products fall back to the naive loop inside the ctx's size gate).
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "gemm shape mismatch");
         let mut c = Mat::zeros(self.rows, b.cols);
-        gemm::matmul_into(&self.data, &b.data, &mut c.data, self.rows, self.cols, b.cols);
+        gemm::KernelCtx::current().matmul_into(
+            &self.data,
+            &b.data,
+            &mut c.data,
+            self.rows,
+            self.cols,
+            b.cols,
+        );
         c
     }
 
@@ -358,7 +374,7 @@ impl Mat {
     /// mirrored.
     pub fn gram(&self) -> Mat {
         let mut g = Mat::zeros(self.rows, self.rows);
-        gemm::gram_into(&self.data, &mut g.data, self.rows, self.cols);
+        gemm::KernelCtx::current().gram_into(&self.data, &mut g.data, self.rows, self.cols);
         g
     }
 

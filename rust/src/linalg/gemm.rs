@@ -1,82 +1,429 @@
-//! Cache-blocked, multi-threaded GEMM/Gram kernels — the hot path under
+//! The blocked GEMM/Gram core behind [`KernelCtx`] — the hot path under
 //! every SVEN matrix product.
 //!
-//! Structure (BLIS-style, sized for L1/L2 without runtime probing):
+//! Structure (BLIS-style):
 //!
-//! - a 4×8 register-tiled microkernel (`MR`×`NR`) over packed panels,
-//! - a packing stage that copies A into MR-row tiles and B into NR-column
-//!   panels so the microkernel streams contiguous memory,
-//! - `KC`/`MC`/`NC` cache blocking around it,
+//! - a [`MicroKernel`] register tile (scalar / AVX2 / FMA, dispatched
+//!   once at startup — see [`crate::linalg::kernel`]) over packed panels,
+//! - a packing stage that copies A into mr-row tiles and B into
+//!   nr-column panels so the microkernel streams contiguous memory,
+//! - `kc`/`mc`/`nc` cache blocking derived from the probed
+//!   [`CacheGeometry`] instead of hard-coded constants,
 //! - row-band / block-pair fan-out over the scoped pool in
 //!   [`crate::util::parallel`].
 //!
-//! Determinism: the block decomposition and the per-element accumulation
-//! order (k ascending within each `KC` block, blocks ascending) never
-//! depend on the worker count, so results are **bit-identical** across
-//! `Parallelism` settings — the property `rust/tests/proptests.rs` pins.
+//! All of it hangs off a [`KernelCtx`]: kernel choice + cache geometry +
+//! derived [`Blocking`]. Callers never pick tile sizes or thread counts
+//! per call — they resolve a ctx ([`KernelCtx::current`] for the
+//! ambient one, [`KernelCtx::for_choice`] to force a kernel) and call
+//! its methods; `Mat::matmul`/`Mat::gram`, the multi-RHS panel kernels,
+//! blocked-CG panel products, and dual `K(t)` assembly all route
+//! through here.
 //!
-//! The naive kernels the seed shipped are kept as `naive_*` references
-//! for the equivalence tests and the micro-bench baselines.
+//! Determinism: for a **fixed kernel choice**, the block decomposition
+//! and the per-element accumulation order (k ascending within each `kc`
+//! block, blocks ascending) never depend on the worker count, so
+//! results are bit-identical across `Parallelism` settings — the
+//! property `rust/tests/proptests.rs` pins per kernel. Different
+//! kernels round differently (FMA fuses) and may differ from each
+//! other, which is exactly why forcing one is first-class:
+//! [`with_kernel_choice`] scopes a choice, [`set_global_kernel`] /
+//! `PALLAS_KERNEL` set the process default.
+//!
+//! The naive kernels the seed shipped are kept as `pub(crate)`
+//! references for the equivalence tests and micro-bench baselines.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use super::cache::{Blocking, CacheGeometry};
+use super::kernel::{self, KernelChoice, KernelError, MicroKernel};
 use super::vecops;
 use crate::util::parallel;
 
-/// Microkernel rows (register tile height).
-pub const MR: usize = 4;
-/// Microkernel columns (register tile width; 8 f64 = two AVX2 lanes).
-pub const NR: usize = 8;
-/// k-dimension cache block (A tile `MR·KC` ≈ 8 KB, B panel `KC·NR` ≈ 16 KB).
-const KC: usize = 256;
-/// Rows of A packed per band job (`MC·KC` ≈ 128 KB, L2-resident).
-const MC: usize = 64;
-/// Columns of B packed per block (`KC·NC` ≈ 1 MB).
-const NC: usize = 512;
-/// Gram block edge for the symmetric block-pair decomposition.
-const BS: usize = 128;
-/// Below this many multiply-adds the naive kernels win (no packing
-/// overhead). Size-based only — never thread-count-based — so the
-/// kernel choice is identical under every `Parallelism` setting.
-const NAIVE_CUTOFF: usize = 1 << 15;
-
 // ---------------------------------------------------------------------------
-// Public entry points
+// KernelCtx: dispatch + geometry handle
 // ---------------------------------------------------------------------------
 
-/// `C = A·B` with A `m×k`, B `k×n`, all row-major. Allocates C.
-pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
-    let mut c = vec![0.0; m * n];
-    matmul_into(a, b, &mut c, m, k, n);
-    c
+/// The compute context every blocked product routes through: one
+/// dispatched [`MicroKernel`] plus the [`Blocking`] derived for its tile
+/// shape from the probed [`CacheGeometry`].
+///
+/// Resolve one with [`KernelCtx::current`] (ambient choice: scoped
+/// override → process global → `PALLAS_KERNEL` → best detected) or
+/// [`KernelCtx::for_choice`] (explicit, fallible). Contexts are cached
+/// `'static` singletons per kernel choice — copying the handle is free
+/// and two resolutions of the same choice see identical geometry.
+#[derive(Clone, Copy)]
+pub struct KernelCtx {
+    kernel: &'static dyn MicroKernel,
+    choice: KernelChoice,
+    geom: CacheGeometry,
+    blk: Blocking,
 }
 
-/// `C ← A·B` into a caller-provided buffer (overwrites C).
-pub fn matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k, "A shape mismatch");
-    assert_eq!(b.len(), k * n, "B shape mismatch");
-    assert_eq!(c.len(), m * n, "C shape mismatch");
-    if m * k * n <= NAIVE_CUTOFF {
-        naive_matmul_into(a, b, c, m, k, n);
-        return;
+static SCALAR_CTX: OnceLock<KernelCtx> = OnceLock::new();
+static AVX2_CTX: OnceLock<KernelCtx> = OnceLock::new();
+static FMA_CTX: OnceLock<KernelCtx> = OnceLock::new();
+
+/// Process-wide forced choice: 0 = none (env/auto), else encoded.
+static GLOBAL_KERNEL: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override installed by [`with_kernel_choice`]; takes
+    /// precedence over the global setting on the installing thread.
+    static KERNEL_OVERRIDE: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+fn encode_choice(c: KernelChoice) -> usize {
+    match c {
+        KernelChoice::Auto => 0,
+        KernelChoice::Scalar => 1,
+        KernelChoice::Avx2 => 2,
+        KernelChoice::Fma => 3,
     }
-    blocked_matmul_into(a, b, c, m, k, n, parallel::effective_threads());
 }
 
-/// `G = A·Aᵀ` (`m×m`) with A `m×k` row-major. Allocates G.
-pub fn gram(a: &[f64], m: usize, k: usize) -> Vec<f64> {
-    let mut g = vec![0.0; m * m];
-    gram_into(a, &mut g, m, k);
-    g
-}
-
-/// `G ← A·Aᵀ` into a caller-provided buffer (overwrites G).
-pub fn gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize) {
-    assert_eq!(a.len(), m * k, "A shape mismatch");
-    assert_eq!(g.len(), m * m, "G shape mismatch");
-    if m * m * k <= NAIVE_CUTOFF {
-        naive_gram_into(a, g, m, k);
-        return;
+fn decode_choice(e: usize) -> KernelChoice {
+    match e {
+        1 => KernelChoice::Scalar,
+        2 => KernelChoice::Avx2,
+        3 => KernelChoice::Fma,
+        _ => KernelChoice::Auto,
     }
-    blocked_gram_into(a, g, m, k, parallel::effective_threads());
+}
+
+/// What `Auto` means for this process: `PALLAS_KERNEL` when set (an
+/// unsupported or unparsable value is a hard error, not a silent
+/// fallback), else the best detected kernel. Cached after first look.
+fn env_kernel_choice() -> Result<KernelChoice, KernelError> {
+    static CHOICE: OnceLock<Result<KernelChoice, KernelError>> = OnceLock::new();
+    CHOICE
+        .get_or_init(|| match std::env::var("PALLAS_KERNEL") {
+            Ok(s) if !s.trim().is_empty() => match KernelChoice::parse(&s)? {
+                KernelChoice::Auto => Ok(kernel::best_available()),
+                forced => {
+                    kernel::kernel_for(forced)?;
+                    Ok(forced)
+                }
+            },
+            _ => Ok(kernel::best_available()),
+        })
+        .clone()
+}
+
+impl KernelCtx {
+    /// The context for an explicit kernel choice. `Auto` resolves via
+    /// `PALLAS_KERNEL` / CPU detection; a forced kernel this CPU or
+    /// build cannot run is a clear [`KernelError`] — `SvenConfig` and
+    /// `ServiceConfig` validation surface it before any solve runs.
+    pub fn for_choice(choice: KernelChoice) -> Result<&'static KernelCtx, KernelError> {
+        let resolved = match choice {
+            KernelChoice::Auto => env_kernel_choice()?,
+            c => c,
+        };
+        let kernel = kernel::kernel_for(resolved)?;
+        let slot = match resolved {
+            KernelChoice::Scalar => &SCALAR_CTX,
+            KernelChoice::Avx2 => &AVX2_CTX,
+            KernelChoice::Fma => &FMA_CTX,
+            KernelChoice::Auto => unreachable!("Auto resolved above"),
+        };
+        Ok(slot.get_or_init(|| {
+            let geom = CacheGeometry::detect();
+            let blk = geom.blocking(kernel.mr(), kernel.nr());
+            KernelCtx { kernel, choice: resolved, geom, blk }
+        }))
+    }
+
+    /// The ambient context: the [`with_kernel_choice`] override on this
+    /// thread, else the [`set_global_kernel`] process setting, else
+    /// `Auto` (`PALLAS_KERNEL` / best detected).
+    ///
+    /// # Panics
+    ///
+    /// If `PALLAS_KERNEL` names an unknown or unsupported kernel (the
+    /// scoped/global setters validate before installing, so only the
+    /// env path can reach the panic). Long-running services validate
+    /// eagerly via [`KernelCtx::for_choice`] at config time instead.
+    pub fn current() -> &'static KernelCtx {
+        let enc = KERNEL_OVERRIDE.with(|c| c.get());
+        let enc = if enc != 0 { enc } else { GLOBAL_KERNEL.load(Ordering::Relaxed) };
+        match Self::for_choice(decode_choice(enc)) {
+            Ok(ctx) => ctx,
+            Err(e) => panic!("{e} (fix PALLAS_KERNEL: scalar | avx2 | fma | auto)"),
+        }
+    }
+
+    /// The choice this context resolved to (never `Auto`).
+    pub fn choice(&self) -> KernelChoice {
+        self.choice
+    }
+
+    /// Dispatched kernel name (`"scalar"`, `"avx2"`, `"fma"`).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// The probed (or fallback) cache sizes behind this context.
+    pub fn geometry(&self) -> &CacheGeometry {
+        &self.geom
+    }
+
+    /// The blocking parameters derived for this kernel's tile shape.
+    pub fn blocking(&self) -> &Blocking {
+        &self.blk
+    }
+
+    /// The dispatched microkernel itself — tile-level access for the
+    /// bit-identity proptests and the `kernel_micro` roofline bench.
+    pub(crate) fn micro(&self) -> &'static dyn MicroKernel {
+        self.kernel
+    }
+
+    /// One-line summary for startup logs / `Service` metrics.
+    pub fn describe(&self) -> String {
+        format!(
+            "kernel={}({}x{}) cache[{}] {}",
+            self.kernel.name(),
+            self.blk.mr,
+            self.blk.nr,
+            self.geom,
+            self.blk.describe()
+        )
+    }
+
+    // -- products ----------------------------------------------------------
+
+    /// `C = A·B` with A `m×k`, B `k×n`, all row-major. Allocates C.
+    pub fn matmul(&self, a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        self.matmul_into(a, b, &mut c, m, k, n);
+        c
+    }
+
+    /// `C ← A·B` into a caller-provided buffer (overwrites C). Picks
+    /// naive vs blocked by the cache-aware reuse gate and serial vs
+    /// threaded by the derived threading threshold — both size-based
+    /// only, so the path taken (and hence the bits produced) is
+    /// identical under every `Parallelism` setting.
+    pub fn matmul_into(
+        &self,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        if !self.blk.prefer_blocked_gemm(m, k, n) {
+            naive_matmul_into(a, b, c, m, k, n);
+            return;
+        }
+        let madds = m.saturating_mul(k).saturating_mul(n);
+        let nt = if madds < self.blk.threading_threshold {
+            1
+        } else {
+            parallel::effective_threads()
+        };
+        self.blocked_matmul_into(a, b, c, m, k, n, nt);
+    }
+
+    /// `G = A·Aᵀ` (`m×m`) with A `m×k` row-major. Allocates G.
+    pub fn gram(&self, a: &[f64], m: usize, k: usize) -> Vec<f64> {
+        let mut g = vec![0.0; m * m];
+        self.gram_into(a, &mut g, m, k);
+        g
+    }
+
+    /// `G ← A·Aᵀ` into a caller-provided buffer (overwrites G). Same
+    /// size-based path selection as [`KernelCtx::matmul_into`].
+    pub fn gram_into(&self, a: &[f64], g: &mut [f64], m: usize, k: usize) {
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(g.len(), m * m, "G shape mismatch");
+        if !self.blk.prefer_blocked_gram(m, k) {
+            naive_gram_into(a, g, m, k);
+            return;
+        }
+        let madds = m.saturating_mul(m).saturating_mul(k);
+        let nt = if madds < self.blk.threading_threshold {
+            1
+        } else {
+            parallel::effective_threads()
+        };
+        self.blocked_gram_into(a, g, m, k, nt);
+    }
+
+    /// Blocked parallel GEMM with an explicit worker count (exposed for
+    /// tests/benches that want to bypass the size gates). Overwrites C.
+    pub fn blocked_matmul_into(
+        &self,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        m: usize,
+        k: usize,
+        n: usize,
+        nt: usize,
+    ) {
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        c.fill(0.0);
+        let Blocking { mr, nr, kc: kcb, mc, nc, .. } = self.blk;
+        let kern = self.kernel;
+        let mut bpack = vec![0.0; nc * kcb];
+        for jc in (0..n).step_by(nc) {
+            let jn = nc.min(n - jc);
+            let jpanels = jn.div_ceil(nr);
+            for kb in (0..k).step_by(kcb) {
+                let kc = kcb.min(k - kb);
+                // Pack this (kc × jn) block of B on the calling thread:
+                // it is a memory-bound copy sized to an LLC share,
+                // cheaper than a spawn round.
+                let packed_len = jpanels * kc * nr;
+                for (p, panel) in bpack[..packed_len].chunks_mut(kc * nr).enumerate() {
+                    let c0 = p * nr;
+                    pack_b_panel(b, n, kb, kc, jc + c0, nr.min(jn - c0), nr, panel);
+                }
+                // mc-row bands of C in parallel; each band packs its own A.
+                let bp = &bpack[..packed_len];
+                let bands: Vec<&mut [f64]> = c.chunks_mut(mc * n).collect();
+                parallel::parallel_items(nt, bands, |bi, cband| {
+                    let row0 = bi * mc;
+                    let rows = cband.len() / n;
+                    let mut apack = vec![0.0; rows.div_ceil(mr) * mr * kc];
+                    pack_a(a, k, row0, rows, kb, kc, mr, &mut apack);
+                    block_kernel(kern, &apack, bp, kc, rows, jn, cband, n, 0, jc);
+                });
+            }
+        }
+    }
+
+    /// Blocked parallel symmetric Gram with an explicit worker count
+    /// (exposed for tests/benches). Computes only upper-triangle blocks,
+    /// written **in place** into their `bs`-row destination bands (each
+    /// band owns its blocks `(bi, bj ≥ bi)`, so the parallel writes are
+    /// disjoint), then mirrors the strict upper triangle into the lower
+    /// one in band-sequential waves: bands are finalized top-down, each
+    /// new band reading the already-final bands above it through a
+    /// shrinking `split_at_mut` frontier while its own rows fan out over
+    /// the pool. Peak transient memory is one packed A tile + one packed
+    /// Aᵀ panel per worker (≈ `bs·kc` doubles each) instead of ~m²/2
+    /// staged block buffers — pinned by `rust/tests/gram_peak_alloc.rs`.
+    /// Overwrites G with the same bits at any thread count.
+    pub fn blocked_gram_into(&self, a: &[f64], g: &mut [f64], m: usize, k: usize, nt: usize) {
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(g.len(), m * m, "G shape mismatch");
+        let bs = self.blk.bs;
+        let nb = m.div_ceil(bs);
+        let edge = |b: usize| bs.min(m - b * bs);
+        // Phase 1: upper-triangle blocks, straight into their row bands.
+        let bands: Vec<&mut [f64]> = g.chunks_mut(bs * m).collect();
+        parallel::parallel_items(nt, bands, |bi, gband| {
+            let ri = edge(bi);
+            for bj in bi..nb {
+                gram_block(
+                    self.kernel,
+                    &self.blk,
+                    a,
+                    k,
+                    bi * bs,
+                    ri,
+                    bj * bs,
+                    edge(bj),
+                    gband,
+                    m,
+                    bj * bs,
+                );
+            }
+        });
+        // Phase 2: mirror waves. Band bi's lower-triangle columns are
+        // the transposes of blocks living in bands < bi, all final by
+        // the time the frontier reaches bi.
+        let mut done: Vec<&[f64]> = Vec::with_capacity(nb);
+        let mut tail: &mut [f64] = g;
+        for bi in 0..nb {
+            let band_len = edge(bi) * m;
+            let (band, rest) = {
+                let t = std::mem::take(&mut tail);
+                t.split_at_mut(band_len)
+            };
+            if bi > 0 {
+                let done_ref: &[&[f64]] = &done;
+                let rows: Vec<&mut [f64]> = band.chunks_mut(m).collect();
+                parallel::parallel_items(nt, rows, |r, grow| {
+                    let gi = bi * bs + r;
+                    for (bj, src_band) in done_ref.iter().enumerate() {
+                        let rj = edge(bj);
+                        for c in 0..rj {
+                            grow[bj * bs + c] = src_band[c * m + gi];
+                        }
+                    }
+                });
+            }
+            done.push(band);
+            tail = rest;
+        }
+    }
+}
+
+/// A context running `choice`'s *scalar model* as its kernel (same tile
+/// shape, same derived blocking, plain-Rust arithmetic). The proptests
+/// drive the full blocked core with this to pin real-kernel products
+/// bit-identical to the model.
+pub(crate) fn model_ctx(choice: KernelChoice) -> Result<KernelCtx, KernelError> {
+    let kernel = kernel::model_kernel_for(choice)?;
+    let geom = CacheGeometry::detect();
+    let blk = geom.blocking(kernel.mr(), kernel.nr());
+    Ok(KernelCtx { kernel, choice, geom, blk })
+}
+
+// ---------------------------------------------------------------------------
+// Scoping / process-wide kernel forcing
+// ---------------------------------------------------------------------------
+
+/// Run `f` with `choice` as the ambient kernel on this thread, restoring
+/// the previous setting afterwards. `Auto` installs nothing and inherits
+/// the enclosing scope (mirroring
+/// [`with_parallelism`](crate::util::parallel::with_parallelism)), so a
+/// default-config solve inside a forced scope stays forced. Errors out
+/// — before running `f` — when the forced kernel is unsupported.
+pub fn with_kernel_choice<T>(
+    choice: KernelChoice,
+    f: impl FnOnce() -> T,
+) -> Result<T, KernelError> {
+    if matches!(choice, KernelChoice::Auto) {
+        return Ok(f());
+    }
+    KernelCtx::for_choice(choice)?;
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            KERNEL_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = KERNEL_OVERRIDE.with(|c| {
+        let prev = c.get();
+        c.set(encode_choice(choice));
+        prev
+    });
+    let _restore = Restore(prev);
+    Ok(f())
+}
+
+/// Set the process-wide default kernel (the CLI `--kernel` flag lands
+/// here). `Auto` clears the force back to `PALLAS_KERNEL`/detection.
+/// Errors out without changing anything when the kernel is unsupported.
+pub fn set_global_kernel(choice: KernelChoice) -> Result<(), KernelError> {
+    if !matches!(choice, KernelChoice::Auto) {
+        KernelCtx::for_choice(choice)?;
+    }
+    GLOBAL_KERNEL.store(encode_choice(choice), Ordering::Relaxed);
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -85,7 +432,14 @@ pub fn gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize) {
 
 /// The seed's ikj/axpy GEMM, kept as the correctness reference and the
 /// micro-bench baseline. Serial; overwrites C.
-pub fn naive_matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+pub(crate) fn naive_matmul_into(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     c.fill(0.0);
     for i in 0..m {
         let crow = &mut c[i * n..(i + 1) * n];
@@ -101,7 +455,7 @@ pub fn naive_matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize
 
 /// The seed's dot-product symmetric Gram, kept as reference/baseline.
 /// Serial; overwrites G.
-pub fn naive_gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize) {
+pub(crate) fn naive_gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize) {
     for i in 0..m {
         for j in i..m {
             let v = vecops::dot(&a[i * k..(i + 1) * k], &a[j * k..(j + 1) * k]);
@@ -116,31 +470,40 @@ pub fn naive_gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize) {
 // ---------------------------------------------------------------------------
 
 /// Pack `rows` rows of A (starting at `row0`, k-slice `[k0, k0+kc)`) into
-/// MR-row tiles: `out[t·kc·MR + kk·MR + i] = A[row0+t·MR+i, k0+kk]`,
-/// zero-padded when the last tile is short of MR rows.
-fn pack_a(a: &[f64], lda: usize, row0: usize, rows: usize, k0: usize, kc: usize, out: &mut [f64]) {
-    let tiles = rows.div_ceil(MR);
+/// mr-row tiles: `out[t·kc·mr + kk·mr + i] = A[row0+t·mr+i, k0+kk]`,
+/// zero-padded when the last tile is short of mr rows.
+fn pack_a(
+    a: &[f64],
+    lda: usize,
+    row0: usize,
+    rows: usize,
+    k0: usize,
+    kc: usize,
+    mr: usize,
+    out: &mut [f64],
+) {
+    let tiles = rows.div_ceil(mr);
     for t in 0..tiles {
-        let tile = &mut out[t * kc * MR..(t + 1) * kc * MR];
-        for i in 0..MR {
-            let r = t * MR + i;
+        let tile = &mut out[t * kc * mr..(t + 1) * kc * mr];
+        for i in 0..mr {
+            let r = t * mr + i;
             if r < rows {
                 let base = (row0 + r) * lda + k0;
                 let src = &a[base..base + kc];
                 for (kk, &v) in src.iter().enumerate() {
-                    tile[kk * MR + i] = v;
+                    tile[kk * mr + i] = v;
                 }
             } else {
                 for kk in 0..kc {
-                    tile[kk * MR + i] = 0.0;
+                    tile[kk * mr + i] = 0.0;
                 }
             }
         }
     }
 }
 
-/// Pack one NR-column panel of B (k-slice `[k0, k0+kc)`, columns
-/// `[col0, col0+w)`, `w ≤ NR`): `panel[kk·NR + j] = B[k0+kk, col0+j]`,
+/// Pack one nr-column panel of B (k-slice `[k0, k0+kc)`, columns
+/// `[col0, col0+w)`, `w ≤ nr`): `panel[kk·nr + j] = B[k0+kk, col0+j]`,
 /// zero-padded beyond `w`.
 fn pack_b_panel(
     b: &[f64],
@@ -149,11 +512,12 @@ fn pack_b_panel(
     kc: usize,
     col0: usize,
     w: usize,
+    nr: usize,
     panel: &mut [f64],
 ) {
     for kk in 0..kc {
         let base = (k0 + kk) * ldb + col0;
-        let dst = &mut panel[kk * NR..(kk + 1) * NR];
+        let dst = &mut panel[kk * nr..(kk + 1) * nr];
         dst[..w].copy_from_slice(&b[base..base + w]);
         for v in dst[w..].iter_mut() {
             *v = 0.0;
@@ -161,9 +525,9 @@ fn pack_b_panel(
     }
 }
 
-/// Pack one NR-column panel of Aᵀ for the Gram kernel: the panel's
+/// Pack one nr-column panel of Aᵀ for the Gram kernel: the panel's
 /// columns are A's *rows* `[row0, row0+w)`, so the read is contiguous
-/// per row: `panel[kk·NR + j] = A[row0+j, k0+kk]`.
+/// per row: `panel[kk·nr + j] = A[row0+j, k0+kk]`.
 fn pack_bt_panel(
     a: &[f64],
     lda: usize,
@@ -171,48 +535,33 @@ fn pack_bt_panel(
     kc: usize,
     row0: usize,
     w: usize,
+    nr: usize,
     panel: &mut [f64],
 ) {
-    for j in 0..NR {
+    for j in 0..nr {
         if j < w {
             let base = (row0 + j) * lda + k0;
             let src = &a[base..base + kc];
             for (kk, &v) in src.iter().enumerate() {
-                panel[kk * NR + j] = v;
+                panel[kk * nr + j] = v;
             }
         } else {
             for kk in 0..kc {
-                panel[kk * NR + j] = 0.0;
+                panel[kk * nr + j] = 0.0;
             }
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// Microkernel and block driver
+// Block driver
 // ---------------------------------------------------------------------------
-
-/// `acc += Ap·Bp` over one packed tile/panel pair; `acc` stays in
-/// registers (MR×NR accumulators, k innermost with contiguous loads).
-#[inline(always)]
-fn microkernel(apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
-    for (ak, bk) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
-        // Fixed-size views let LLVM drop the bounds checks and keep the
-        // MR×NR accumulator fan-out fully unrolled.
-        let ak: &[f64; MR] = ak.try_into().expect("tile width");
-        let bk: &[f64; NR] = bk.try_into().expect("panel width");
-        for i in 0..MR {
-            let aik = ak[i];
-            for j in 0..NR {
-                acc[i][j] += aik * bk[j];
-            }
-        }
-    }
-}
 
 /// `C[c_row0.., c_col0..] += Apack·Bpack` for one packed (rows × cols)
-/// block; edge tiles are computed full-width and written back masked.
+/// block; edge tiles are computed full-width (packing zero-padded them)
+/// and written back masked, so the microkernel never sees fringes.
 fn block_kernel(
+    kern: &dyn MicroKernel,
     apack: &[f64],
     bpack: &[f64],
     kc: usize,
@@ -223,62 +572,27 @@ fn block_kernel(
     c_row0: usize,
     c_col0: usize,
 ) {
-    let tiles = rows.div_ceil(MR);
-    let panels = cols.div_ceil(NR);
+    let (mr, nr) = (kern.mr(), kern.nr());
+    debug_assert!(mr * nr <= kernel::MAX_TILE, "register tile exceeds driver scratch");
+    let mut acc = [0.0f64; kernel::MAX_TILE];
+    let tiles = rows.div_ceil(mr);
+    let panels = cols.div_ceil(nr);
     for t in 0..tiles {
-        let ap = &apack[t * kc * MR..(t + 1) * kc * MR];
-        let mrows = MR.min(rows - t * MR);
+        let ap = &apack[t * kc * mr..(t + 1) * kc * mr];
+        let mrows = mr.min(rows - t * mr);
         for p in 0..panels {
-            let bp = &bpack[p * kc * NR..(p + 1) * kc * NR];
-            let ncols = NR.min(cols - p * NR);
-            let mut acc = [[0.0f64; NR]; MR];
-            microkernel(ap, bp, &mut acc);
+            let bp = &bpack[p * kc * nr..(p + 1) * kc * nr];
+            let ncols = nr.min(cols - p * nr);
+            let tile = &mut acc[..mr * nr];
+            tile.fill(0.0);
+            kern.tile(ap, bp, kc, tile);
             for i in 0..mrows {
-                let base = (c_row0 + t * MR + i) * ldc + c_col0 + p * NR;
+                let base = (c_row0 + t * mr + i) * ldc + c_col0 + p * nr;
                 let crow = &mut c[base..base + ncols];
                 for (j, cv) in crow.iter_mut().enumerate() {
-                    *cv += acc[i][j];
+                    *cv += tile[i * nr + j];
                 }
             }
-        }
-    }
-}
-
-/// Blocked parallel GEMM (exposed for tests/benches that want to bypass
-/// the small-size cutoff). Overwrites C.
-pub fn blocked_matmul_into(
-    a: &[f64],
-    b: &[f64],
-    c: &mut [f64],
-    m: usize,
-    k: usize,
-    n: usize,
-    nt: usize,
-) {
-    c.fill(0.0);
-    let mut bpack = vec![0.0; NC.div_ceil(NR) * NR * KC];
-    for jc in (0..n).step_by(NC) {
-        let jn = NC.min(n - jc);
-        let jpanels = jn.div_ceil(NR);
-        for kb in (0..k).step_by(KC) {
-            let kc = KC.min(k - kb);
-            // Pack this (kc × jn) block of B on the calling thread: it is
-            // a ≤ 1 MB memory-bound copy, cheaper than a spawn round.
-            let packed_len = jpanels * kc * NR;
-            for (p, panel) in bpack[..packed_len].chunks_mut(kc * NR).enumerate() {
-                let c0 = p * NR;
-                pack_b_panel(b, n, kb, kc, jc + c0, NR.min(jn - c0), panel);
-            }
-            // MC-row bands of C in parallel; each band packs its own A.
-            let bp = &bpack[..packed_len];
-            let bands: Vec<&mut [f64]> = c.chunks_mut(MC * n).collect();
-            parallel::parallel_items(nt, bands, |bi, cband| {
-                let row0 = bi * MC;
-                let rows = cband.len() / n;
-                let mut apack = vec![0.0; rows.div_ceil(MR) * MR * kc];
-                pack_a(a, k, row0, rows, kb, kc, &mut apack);
-                block_kernel(&apack, bp, kc, rows, jn, cband, n, 0, jc);
-            });
         }
     }
 }
@@ -288,6 +602,8 @@ pub fn blocked_matmul_into(
 /// destination `c` (leading dimension `ldc`, rows relative to `c`'s
 /// first row, columns at offset `c_col0`) — no transient block buffer.
 fn gram_block(
+    kern: &dyn MicroKernel,
+    blk: &Blocking,
     a: &[f64],
     k: usize,
     i0: usize,
@@ -298,31 +614,34 @@ fn gram_block(
     ldc: usize,
     c_col0: usize,
 ) {
+    let Blocking { mr, nr, kc: kcb, .. } = *blk;
     for r in 0..ri {
         let base = r * ldc + c_col0;
         c[base..base + rj].fill(0.0);
     }
-    let mut apack = vec![0.0; ri.div_ceil(MR) * MR * KC];
-    let mut bpack = vec![0.0; rj.div_ceil(NR) * NR * KC];
-    let panels = rj.div_ceil(NR);
-    for kb in (0..k).step_by(KC) {
-        let kc = KC.min(k - kb);
-        pack_a(a, k, i0, ri, kb, kc, &mut apack[..ri.div_ceil(MR) * MR * kc]);
+    let mut apack = vec![0.0; ri.div_ceil(mr) * mr * kcb];
+    let mut bpack = vec![0.0; rj.div_ceil(nr) * nr * kcb];
+    let panels = rj.div_ceil(nr);
+    for kb in (0..k).step_by(kcb) {
+        let kc = kcb.min(k - kb);
+        pack_a(a, k, i0, ri, kb, kc, mr, &mut apack[..ri.div_ceil(mr) * mr * kc]);
         for p in 0..panels {
-            let c0 = p * NR;
+            let c0 = p * nr;
             pack_bt_panel(
                 a,
                 k,
                 kb,
                 kc,
                 j0 + c0,
-                NR.min(rj - c0),
-                &mut bpack[p * kc * NR..(p + 1) * kc * NR],
+                nr.min(rj - c0),
+                nr,
+                &mut bpack[p * kc * nr..(p + 1) * kc * nr],
             );
         }
         block_kernel(
-            &apack[..ri.div_ceil(MR) * MR * kc],
-            &bpack[..panels * kc * NR],
+            kern,
+            &apack[..ri.div_ceil(mr) * mr * kc],
+            &bpack[..panels * kc * nr],
             kc,
             ri,
             rj,
@@ -331,59 +650,6 @@ fn gram_block(
             0,
             c_col0,
         );
-    }
-}
-
-/// Blocked parallel symmetric Gram (exposed for tests/benches). Computes
-/// only upper-triangle blocks, written **in place** into their BS-row
-/// destination bands (each band owns its blocks `(bi, bj ≥ bi)`, so the
-/// parallel writes are disjoint), then mirrors the strict upper triangle
-/// into the lower one in band-sequential waves: bands are finalized
-/// top-down, each new band reading the already-final bands above it
-/// through a shrinking `split_at_mut` frontier while its own rows fan
-/// out over the pool. Peak transient memory is one packed A tile + one
-/// packed Aᵀ panel per worker (≈ `BS·KC` doubles each) instead of the
-/// ~m²/2 staged block buffers of the old scatter/mirror scheme — the
-/// difference is pinned by `rust/tests/gram_peak_alloc.rs`. Overwrites G
-/// with bits identical to the staged scheme (same per-block accumulation
-/// order, same mirrored copies), at any thread count.
-pub fn blocked_gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize, nt: usize) {
-    let nb = m.div_ceil(BS);
-    let edge = |b: usize| BS.min(m - b * BS);
-    // Phase 1: upper-triangle blocks, straight into their row bands.
-    let bands: Vec<&mut [f64]> = g.chunks_mut(BS * m).collect();
-    parallel::parallel_items(nt, bands, |bi, gband| {
-        let ri = edge(bi);
-        for bj in bi..nb {
-            gram_block(a, k, bi * BS, ri, bj * BS, edge(bj), gband, m, bj * BS);
-        }
-    });
-    // Phase 2: mirror waves. Band bi's lower-triangle columns are the
-    // transposes of blocks living in bands < bi, all final by the time
-    // the frontier reaches bi.
-    let mut done: Vec<&[f64]> = Vec::with_capacity(nb);
-    let mut tail: &mut [f64] = g;
-    for bi in 0..nb {
-        let band_len = edge(bi) * m;
-        let (band, rest) = {
-            let t = std::mem::take(&mut tail);
-            t.split_at_mut(band_len)
-        };
-        if bi > 0 {
-            let done_ref: &[&[f64]] = &done;
-            let rows: Vec<&mut [f64]> = band.chunks_mut(m).collect();
-            parallel::parallel_items(nt, rows, |r, grow| {
-                let gi = bi * BS + r;
-                for (bj, src_band) in done_ref.iter().enumerate() {
-                    let rj = edge(bj);
-                    for c in 0..rj {
-                        grow[bj * BS + c] = src_band[c * m + gi];
-                    }
-                }
-            });
-        }
-        done.push(band);
-        tail = rest;
     }
 }
 
@@ -400,20 +666,33 @@ mod tests {
         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
     }
 
+    fn enabled_ctxs() -> Vec<&'static KernelCtx> {
+        kernel::enabled_choices()
+            .into_iter()
+            .map(|c| KernelCtx::for_choice(c).expect("enabled choice resolves"))
+            .collect()
+    }
+
     #[test]
     fn blocked_matches_naive_ragged_shapes() {
         let mut rng = Rng::seed_from(21);
-        // Deliberately not multiples of MR/NR/KC/MC/NC.
+        // Deliberately not multiples of any mr/nr/kc/mc/nc.
         for &(m, k, n) in &[(1, 1, 1), (5, 3, 9), (33, 17, 41), (70, 130, 51), (64, 256, 64)] {
             let a = rand_vec(&mut rng, m * k);
             let b = rand_vec(&mut rng, k * n);
             let mut naive = vec![0.0; m * n];
             naive_matmul_into(&a, &b, &mut naive, m, k, n);
-            for nt in [1, 3, 8] {
-                let mut blocked = vec![0.0; m * n];
-                blocked_matmul_into(&a, &b, &mut blocked, m, k, n, nt);
-                let dev = max_abs_diff(&naive, &blocked);
-                assert!(dev < 1e-10, "({m},{k},{n}) nt={nt}: dev {dev}");
+            for ctx in enabled_ctxs() {
+                for nt in [1, 3, 8] {
+                    let mut blocked = vec![0.0; m * n];
+                    ctx.blocked_matmul_into(&a, &b, &mut blocked, m, k, n, nt);
+                    let dev = max_abs_diff(&naive, &blocked);
+                    assert!(
+                        dev < 1e-10,
+                        "{} ({m},{k},{n}) nt={nt}: dev {dev}",
+                        ctx.kernel_name()
+                    );
+                }
             }
         }
     }
@@ -425,39 +704,74 @@ mod tests {
             let a = rand_vec(&mut rng, m * k);
             let mut naive = vec![0.0; m * m];
             naive_gram_into(&a, &mut naive, m, k);
-            for nt in [1, 4] {
-                let mut blocked = vec![0.0; m * m];
-                blocked_gram_into(&a, &mut blocked, m, k, nt);
-                let dev = max_abs_diff(&naive, &blocked);
-                assert!(dev < 1e-10, "({m},{k}) nt={nt}: dev {dev}");
+            for ctx in enabled_ctxs() {
+                for nt in [1, 4] {
+                    let mut blocked = vec![0.0; m * m];
+                    ctx.blocked_gram_into(&a, &mut blocked, m, k, nt);
+                    let dev = max_abs_diff(&naive, &blocked);
+                    assert!(dev < 1e-10, "{} ({m},{k}) nt={nt}: dev {dev}", ctx.kernel_name());
+                }
             }
         }
     }
 
     #[test]
-    fn blocked_is_bit_stable_across_thread_counts() {
+    fn every_kernel_is_bit_stable_across_thread_counts() {
         let mut rng = Rng::seed_from(23);
         let (m, k, n) = (67, 310, 45);
         let a = rand_vec(&mut rng, m * k);
         let b = rand_vec(&mut rng, k * n);
-        let mut c1 = vec![0.0; m * n];
-        blocked_matmul_into(&a, &b, &mut c1, m, k, n, 1);
-        for nt in [2, 5, 16] {
-            let mut cn = vec![0.0; m * n];
-            blocked_matmul_into(&a, &b, &mut cn, m, k, n, nt);
-            assert!(
-                c1.iter().zip(&cn).all(|(x, y)| x.to_bits() == y.to_bits()),
-                "gemm not bit-stable at nt={nt}"
-            );
+        for ctx in enabled_ctxs() {
+            let mut c1 = vec![0.0; m * n];
+            ctx.blocked_matmul_into(&a, &b, &mut c1, m, k, n, 1);
+            for nt in [2, 5, 16] {
+                let mut cn = vec![0.0; m * n];
+                ctx.blocked_matmul_into(&a, &b, &mut cn, m, k, n, nt);
+                assert!(
+                    c1.iter().zip(&cn).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} gemm not bit-stable at nt={nt}",
+                    ctx.kernel_name()
+                );
+            }
+            let mut g1 = vec![0.0; m * m];
+            ctx.blocked_gram_into(&a, &mut g1, m, k, 1);
+            for nt in [2, 7] {
+                let mut gn = vec![0.0; m * m];
+                ctx.blocked_gram_into(&a, &mut gn, m, k, nt);
+                assert!(
+                    g1.iter().zip(&gn).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} gram not bit-stable at nt={nt}",
+                    ctx.kernel_name()
+                );
+            }
         }
-        let mut g1 = vec![0.0; m * m];
-        blocked_gram_into(&a, &mut g1, m, k, 1);
-        for nt in [2, 7] {
-            let mut gn = vec![0.0; m * m];
-            blocked_gram_into(&a, &mut gn, m, k, nt);
+    }
+
+    #[test]
+    fn every_kernel_matches_its_model_through_the_blocked_core() {
+        let mut rng = Rng::seed_from(26);
+        let (m, k, n) = (53, 91, 38);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        for ctx in enabled_ctxs() {
+            let model = model_ctx(ctx.choice()).expect("model for enabled kernel");
+            let mut real = vec![0.0; m * n];
+            let mut modeled = vec![0.0; m * n];
+            ctx.blocked_matmul_into(&a, &b, &mut real, m, k, n, 2);
+            model.blocked_matmul_into(&a, &b, &mut modeled, m, k, n, 2);
             assert!(
-                g1.iter().zip(&gn).all(|(x, y)| x.to_bits() == y.to_bits()),
-                "gram not bit-stable at nt={nt}"
+                real.iter().zip(&modeled).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{} blocked gemm deviates from its scalar model",
+                ctx.kernel_name()
+            );
+            let mut greal = vec![0.0; m * m];
+            let mut gmodel = vec![0.0; m * m];
+            ctx.blocked_gram_into(&a, &mut greal, m, k, 2);
+            model.blocked_gram_into(&a, &mut gmodel, m, k, 2);
+            assert!(
+                greal.iter().zip(&gmodel).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{} blocked gram deviates from its scalar model",
+                ctx.kernel_name()
             );
         }
     }
@@ -467,11 +781,18 @@ mod tests {
         let mut rng = Rng::seed_from(24);
         let (m, k) = (90, 40);
         let a = rand_vec(&mut rng, m * k);
-        let mut g = vec![0.0; m * m];
-        blocked_gram_into(&a, &mut g, m, k, 4);
-        for i in 0..m {
-            for j in 0..m {
-                assert_eq!(g[i * m + j].to_bits(), g[j * m + i].to_bits(), "({i},{j})");
+        for ctx in enabled_ctxs() {
+            let mut g = vec![0.0; m * m];
+            ctx.blocked_gram_into(&a, &mut g, m, k, 4);
+            for i in 0..m {
+                for j in 0..m {
+                    assert_eq!(
+                        g[i * m + j].to_bits(),
+                        g[j * m + i].to_bits(),
+                        "{} ({i},{j})",
+                        ctx.kernel_name()
+                    );
+                }
             }
         }
     }
@@ -479,22 +800,51 @@ mod tests {
     #[test]
     fn public_entry_points_route_both_paths() {
         let mut rng = Rng::seed_from(25);
+        let ctx = KernelCtx::current();
         // Small: naive path. Large: blocked path. Both must agree with
         // an explicit naive run.
         for &(m, k, n) in &[(6, 4, 5), (48, 64, 48)] {
             let a = rand_vec(&mut rng, m * k);
             let b = rand_vec(&mut rng, k * n);
-            let c = matmul(&a, &b, m, k, n);
+            let c = ctx.matmul(&a, &b, m, k, n);
             let mut reference = vec![0.0; m * n];
             naive_matmul_into(&a, &b, &mut reference, m, k, n);
             assert!(max_abs_diff(&c, &reference) < 1e-10, "({m},{k},{n})");
         }
         for &(m, k) in &[(6, 4), (72, 40)] {
             let a = rand_vec(&mut rng, m * k);
-            let g = gram(&a, m, k);
+            let g = ctx.gram(&a, m, k);
             let mut reference = vec![0.0; m * m];
             naive_gram_into(&a, &mut reference, m, k);
             assert!(max_abs_diff(&g, &reference) < 1e-10, "({m},{k})");
         }
+    }
+
+    #[test]
+    fn with_kernel_choice_scopes_and_restores() {
+        let ambient = KernelCtx::current().choice();
+        let inside = with_kernel_choice(KernelChoice::Scalar, || KernelCtx::current().choice())
+            .expect("scalar always supported");
+        assert_eq!(inside, KernelChoice::Scalar);
+        assert_eq!(KernelCtx::current().choice(), ambient);
+        // Auto inherits the enclosing scope instead of clobbering it.
+        let nested = with_kernel_choice(KernelChoice::Scalar, || {
+            with_kernel_choice(KernelChoice::Auto, || KernelCtx::current().choice())
+        })
+        .expect("outer")
+        .expect("inner");
+        assert_eq!(nested, KernelChoice::Scalar);
+    }
+
+    #[test]
+    fn ctx_describe_names_kernel_and_geometry() {
+        let ctx = KernelCtx::for_choice(KernelChoice::Scalar).unwrap();
+        let d = ctx.describe();
+        assert!(d.contains("kernel=scalar"), "{d}");
+        assert!(d.contains("kc="), "{d}");
+        assert!(d.contains("l1d="), "{d}");
+        assert_eq!(ctx.choice(), KernelChoice::Scalar);
+        assert_eq!(ctx.blocking().mr, 4);
+        assert_eq!(ctx.blocking().nr, 8);
     }
 }

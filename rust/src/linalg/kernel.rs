@@ -1,0 +1,583 @@
+//! Microkernels: the register-tile inner loops of the blocked GEMM/Gram
+//! core, selected once at startup by runtime CPU-feature detection.
+//!
+//! A [`MicroKernel`] computes one `mr × nr` register tile over *packed*
+//! operands (see the contract on the trait). Three implementations
+//! ship:
+//!
+//! - [`ScalarKernel`] — the crate's original fixed 4×8 tile, plain
+//!   mul/add, written so LLVM autovectorizes it. Always available; the
+//!   reference every other kernel is tested against.
+//! - [`Avx2Kernel`] — explicit AVX2 intrinsics, 4×8 tile held in eight
+//!   256-bit accumulators, separate multiply and add. Because each
+//!   output element still sees exactly one rounding per multiply and
+//!   one per add, in the same k-ascending order, its results are
+//!   **bit-identical** to [`ScalarKernel`].
+//! - [`FmaKernel`] — FMA intrinsics, 6×8 tile in twelve 256-bit
+//!   accumulators, one fused multiply-add (single rounding) per step.
+//!   Its scalar model is the same loop with [`f64::mul_add`]; results
+//!   are bit-identical to that model but *not* to the mul/add kernels —
+//!   which is why forcing a kernel is first-class (see
+//!   [`KernelChoice`] and `PALLAS_KERNEL`).
+//!
+//! Per-kernel determinism: for a fixed kernel the accumulation order is
+//! fixed, so every result is bit-identical at any thread count.
+//! Cross-kernel identity is explicitly *not* promised.
+
+use std::fmt;
+
+/// Largest `mr·nr` any shipped kernel uses; the block driver keeps its
+/// accumulator tile on the stack at this size.
+pub(crate) const MAX_TILE: usize = 64;
+
+/// One register-tile inner loop of the blocked GEMM/Gram core.
+///
+/// # Contract
+///
+/// `tile(ap, bp, kc, acc)` must compute, for `0 ≤ i < mr`, `0 ≤ j < nr`:
+///
+/// ```text
+/// acc[i·nr + j] += Σ_{kk=0..kc} ap[kk·mr + i] · bp[kk·nr + j]
+/// ```
+///
+/// with `kk` ascending and each step applied to the running element
+/// accumulator in order (one rounding per multiply and one per add —
+/// or one fused rounding for an FMA kernel, in which case
+/// [`MicroKernel::tile_model`] must be overridden to match).
+///
+/// - **Packing**: `ap` is a k-major packed A tile (`ap[kk·mr + i]`,
+///   length `≥ kc·mr`) and `bp` a k-major packed B panel
+///   (`bp[kk·nr + j]`, length `≥ kc·nr`), both produced by the packing
+///   stage in `gemm.rs`, which zero-pads row/column tails to the full
+///   `mr`/`nr` — a kernel always runs the full tile and the driver
+///   masks the write-back, so implementations never see fringes.
+/// - **Aliasing**: `acc` (length `≥ mr·nr`, row-major) must not alias
+///   either packed panel; the driver owns it exclusively.
+/// - **Determinism**: two calls with the same inputs must produce the
+///   same bits, on every thread (no internal reordering, no FTZ/DAZ
+///   mode changes).
+pub trait MicroKernel: Send + Sync {
+    /// Kernel name for logs/metrics (`"scalar"`, `"avx2"`, `"fma"`).
+    fn name(&self) -> &'static str;
+    /// Register-tile rows.
+    fn mr(&self) -> usize;
+    /// Register-tile columns.
+    fn nr(&self) -> usize;
+    /// Accumulate one `mr×nr` tile over `kc` packed steps (see the
+    /// trait-level contract).
+    fn tile(&self, ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64]);
+    /// The kernel's *scalar model*: a plain-Rust loop with the exact
+    /// rounding semantics `tile` promises. Proptests pin
+    /// `tile == tile_model` bit-for-bit on every enabled kernel. The
+    /// default model is the one-rounding-per-mul-and-add loop; FMA
+    /// kernels override it with the fused ([`f64::mul_add`]) loop.
+    fn tile_model(&self, ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64]) {
+        scalar_tile(self.mr(), self.nr(), false, ap, bp, kc, acc);
+    }
+}
+
+/// Generic scalar tile loop: the rounding model shared by every kernel.
+/// `fused` selects one fused rounding per step ([`f64::mul_add`])
+/// instead of separate multiply and add.
+pub(crate) fn scalar_tile(
+    mr: usize,
+    nr: usize,
+    fused: bool,
+    ap: &[f64],
+    bp: &[f64],
+    kc: usize,
+    acc: &mut [f64],
+) {
+    for kk in 0..kc {
+        let a = &ap[kk * mr..(kk + 1) * mr];
+        let b = &bp[kk * nr..(kk + 1) * nr];
+        for i in 0..mr {
+            let aik = a[i];
+            let row = &mut acc[i * nr..(i + 1) * nr];
+            if fused {
+                for j in 0..nr {
+                    row[j] = aik.mul_add(b[j], row[j]);
+                }
+            } else {
+                for j in 0..nr {
+                    row[j] += aik * b[j];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar kernel (always available)
+// ---------------------------------------------------------------------------
+
+/// The original autovectorized 4×8 tile: fixed-size array views let
+/// LLVM drop bounds checks and unroll the fan-out; plain mul/add.
+pub struct ScalarKernel;
+
+const S_MR: usize = 4;
+const S_NR: usize = 8;
+
+impl MicroKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn mr(&self) -> usize {
+        S_MR
+    }
+
+    fn nr(&self) -> usize {
+        S_NR
+    }
+
+    fn tile(&self, ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64]) {
+        // Load acc into the register tile first so every element's chain
+        // is `acc₀ + t₁ + t₂ + …` — the model's in-place order exactly
+        // (summing into a zeroed tile and adding at the end would
+        // re-associate the chain).
+        let mut c = [[0.0f64; S_NR]; S_MR];
+        for (i, ci) in c.iter_mut().enumerate() {
+            ci.copy_from_slice(&acc[i * S_NR..(i + 1) * S_NR]);
+        }
+        for (ak, bk) in
+            ap[..kc * S_MR].chunks_exact(S_MR).zip(bp[..kc * S_NR].chunks_exact(S_NR))
+        {
+            let ak: &[f64; S_MR] = ak.try_into().expect("tile width");
+            let bk: &[f64; S_NR] = bk.try_into().expect("panel width");
+            for i in 0..S_MR {
+                let aik = ak[i];
+                for j in 0..S_NR {
+                    c[i][j] += aik * bk[j];
+                }
+            }
+        }
+        for (i, ci) in c.iter().enumerate() {
+            acc[i * S_NR..(i + 1) * S_NR].copy_from_slice(ci);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 SIMD kernels
+// ---------------------------------------------------------------------------
+
+/// Explicit AVX2 4×8 tile (separate mul + add; bit-identical to
+/// [`ScalarKernel`]). Constructible only when `avx2` is detected.
+#[cfg(target_arch = "x86_64")]
+pub struct Avx2Kernel;
+
+#[cfg(target_arch = "x86_64")]
+impl MicroKernel for Avx2Kernel {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn mr(&self) -> usize {
+        4
+    }
+
+    fn nr(&self) -> usize {
+        8
+    }
+
+    fn tile(&self, ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64]) {
+        assert!(ap.len() >= kc * 4 && bp.len() >= kc * 8 && acc.len() >= 32);
+        // SAFETY: `kernel_for` only hands out this kernel when the
+        // `avx2` feature was detected at runtime, and the slice bounds
+        // were just checked.
+        unsafe { avx2_tile_4x8(ap.as_ptr(), bp.as_ptr(), kc, acc.as_mut_ptr()) }
+    }
+}
+
+/// 4×8 AVX2 tile: accumulators are loaded from `acc`, so the per-element
+/// chain is exactly `acc[e] + t₁ + t₂ + …` — the scalar model's order.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_tile_4x8(ap: *const f64, bp: *const f64, kc: usize, acc: *mut f64) {
+    use std::arch::x86_64::*;
+    let mut c00 = _mm256_loadu_pd(acc);
+    let mut c01 = _mm256_loadu_pd(acc.add(4));
+    let mut c10 = _mm256_loadu_pd(acc.add(8));
+    let mut c11 = _mm256_loadu_pd(acc.add(12));
+    let mut c20 = _mm256_loadu_pd(acc.add(16));
+    let mut c21 = _mm256_loadu_pd(acc.add(20));
+    let mut c30 = _mm256_loadu_pd(acc.add(24));
+    let mut c31 = _mm256_loadu_pd(acc.add(28));
+    for kk in 0..kc {
+        let b0 = _mm256_loadu_pd(bp.add(kk * 8));
+        let b1 = _mm256_loadu_pd(bp.add(kk * 8 + 4));
+        let a0 = _mm256_set1_pd(*ap.add(kk * 4));
+        c00 = _mm256_add_pd(c00, _mm256_mul_pd(a0, b0));
+        c01 = _mm256_add_pd(c01, _mm256_mul_pd(a0, b1));
+        let a1 = _mm256_set1_pd(*ap.add(kk * 4 + 1));
+        c10 = _mm256_add_pd(c10, _mm256_mul_pd(a1, b0));
+        c11 = _mm256_add_pd(c11, _mm256_mul_pd(a1, b1));
+        let a2 = _mm256_set1_pd(*ap.add(kk * 4 + 2));
+        c20 = _mm256_add_pd(c20, _mm256_mul_pd(a2, b0));
+        c21 = _mm256_add_pd(c21, _mm256_mul_pd(a2, b1));
+        let a3 = _mm256_set1_pd(*ap.add(kk * 4 + 3));
+        c30 = _mm256_add_pd(c30, _mm256_mul_pd(a3, b0));
+        c31 = _mm256_add_pd(c31, _mm256_mul_pd(a3, b1));
+    }
+    _mm256_storeu_pd(acc, c00);
+    _mm256_storeu_pd(acc.add(4), c01);
+    _mm256_storeu_pd(acc.add(8), c10);
+    _mm256_storeu_pd(acc.add(12), c11);
+    _mm256_storeu_pd(acc.add(16), c20);
+    _mm256_storeu_pd(acc.add(20), c21);
+    _mm256_storeu_pd(acc.add(24), c30);
+    _mm256_storeu_pd(acc.add(28), c31);
+}
+
+/// FMA 6×8 tile (one fused rounding per step; bit-identical to its
+/// `mul_add` scalar model, *not* to the mul/add kernels). Constructible
+/// only when `avx2` **and** `fma` are detected.
+#[cfg(target_arch = "x86_64")]
+pub struct FmaKernel;
+
+#[cfg(target_arch = "x86_64")]
+impl MicroKernel for FmaKernel {
+    fn name(&self) -> &'static str {
+        "fma"
+    }
+
+    fn mr(&self) -> usize {
+        6
+    }
+
+    fn nr(&self) -> usize {
+        8
+    }
+
+    fn tile(&self, ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64]) {
+        assert!(ap.len() >= kc * 6 && bp.len() >= kc * 8 && acc.len() >= 48);
+        // SAFETY: handed out only when `avx2` and `fma` were detected;
+        // bounds just checked.
+        unsafe { fma_tile_6x8(ap.as_ptr(), bp.as_ptr(), kc, acc.as_mut_ptr()) }
+    }
+
+    fn tile_model(&self, ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64]) {
+        scalar_tile(6, 8, true, ap, bp, kc, acc);
+    }
+}
+
+/// 6×8 FMA tile: twelve accumulators + two B vectors + one broadcast
+/// fill 15 of the 16 ymm registers.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn fma_tile_6x8(ap: *const f64, bp: *const f64, kc: usize, acc: *mut f64) {
+    use std::arch::x86_64::*;
+    let mut c: [[__m256d; 2]; 6] = [[_mm256_setzero_pd(); 2]; 6];
+    for (i, ci) in c.iter_mut().enumerate() {
+        ci[0] = _mm256_loadu_pd(acc.add(i * 8));
+        ci[1] = _mm256_loadu_pd(acc.add(i * 8 + 4));
+    }
+    for kk in 0..kc {
+        let b0 = _mm256_loadu_pd(bp.add(kk * 8));
+        let b1 = _mm256_loadu_pd(bp.add(kk * 8 + 4));
+        for (i, ci) in c.iter_mut().enumerate() {
+            let a = _mm256_set1_pd(*ap.add(kk * 6 + i));
+            ci[0] = _mm256_fmadd_pd(a, b0, ci[0]);
+            ci[1] = _mm256_fmadd_pd(a, b1, ci[1]);
+        }
+    }
+    for (i, ci) in c.iter().enumerate() {
+        _mm256_storeu_pd(acc.add(i * 8), ci[0]);
+        _mm256_storeu_pd(acc.add(i * 8 + 4), ci[1]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Choice, detection, errors
+// ---------------------------------------------------------------------------
+
+/// Which microkernel the blocked core should use.
+///
+/// `Auto` resolves from the `PALLAS_KERNEL` environment variable when
+/// set (`scalar | avx2 | fma | auto`), else to the best kernel the CPU
+/// supports. Forcing an unsupported kernel is a hard error, surfaced by
+/// [`crate::linalg::KernelCtx::for_choice`] (and by `SvenConfig` /
+/// `ServiceConfig` validation before any solve runs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// `PALLAS_KERNEL` if set, else the best detected kernel.
+    #[default]
+    Auto,
+    /// The autovectorized reference tile.
+    Scalar,
+    /// Explicit AVX2 (bit-identical to `Scalar`).
+    Avx2,
+    /// FMA (fused roundings; differs from the mul/add kernels).
+    Fma,
+}
+
+impl KernelChoice {
+    /// Parse a `PALLAS_KERNEL` / CLI value.
+    pub fn parse(s: &str) -> Result<Self, KernelError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelChoice::Auto),
+            "scalar" => Ok(KernelChoice::Scalar),
+            "avx2" => Ok(KernelChoice::Avx2),
+            "fma" => Ok(KernelChoice::Fma),
+            other => Err(KernelError(format!(
+                "unknown kernel {other:?} (expected scalar | avx2 | fma | auto)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Avx2 => "avx2",
+            KernelChoice::Fma => "fma",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A kernel was forced (`PALLAS_KERNEL`, `SvenConfig::kernel`, CLI
+/// `--kernel`) that this build or this CPU cannot run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelError(pub(crate) String);
+
+impl fmt::Display for KernelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "kernel dispatch: {}", self.0)
+    }
+}
+
+impl std::error::Error for KernelError {}
+
+static SCALAR: ScalarKernel = ScalarKernel;
+#[cfg(target_arch = "x86_64")]
+static AVX2: Avx2Kernel = Avx2Kernel;
+#[cfg(target_arch = "x86_64")]
+static FMA: FmaKernel = FmaKernel;
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_detected() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn fma_detected() -> bool {
+    std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+}
+
+/// The best kernel this CPU supports (what `Auto` resolves to when
+/// `PALLAS_KERNEL` is unset).
+pub fn best_available() -> KernelChoice {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fma_detected() {
+            return KernelChoice::Fma;
+        }
+        if avx2_detected() {
+            return KernelChoice::Avx2;
+        }
+    }
+    KernelChoice::Scalar
+}
+
+/// Every kernel choice this machine can actually run, scalar first.
+pub fn enabled_choices() -> Vec<KernelChoice> {
+    let mut v = vec![KernelChoice::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_detected() {
+            v.push(KernelChoice::Avx2);
+        }
+        if fma_detected() {
+            v.push(KernelChoice::Fma);
+        }
+    }
+    v
+}
+
+/// Resolve a non-`Auto` choice to its kernel, or a clear error when the
+/// CPU/build cannot run it.
+pub(crate) fn kernel_for(
+    choice: KernelChoice,
+) -> Result<&'static dyn MicroKernel, KernelError> {
+    match choice {
+        KernelChoice::Auto => {
+            unreachable!("Auto must be resolved by the caller (KernelCtx::for_choice)")
+        }
+        KernelChoice::Scalar => Ok(&SCALAR),
+        KernelChoice::Avx2 => avx2_kernel(),
+        KernelChoice::Fma => fma_kernel(),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_kernel() -> Result<&'static dyn MicroKernel, KernelError> {
+    if avx2_detected() {
+        Ok(&AVX2)
+    } else {
+        Err(KernelError("avx2 kernel forced but the CPU does not report AVX2".into()))
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_kernel() -> Result<&'static dyn MicroKernel, KernelError> {
+    Err(KernelError("avx2 kernel forced but this build targets a non-x86_64 arch".into()))
+}
+
+#[cfg(target_arch = "x86_64")]
+fn fma_kernel() -> Result<&'static dyn MicroKernel, KernelError> {
+    if fma_detected() {
+        Ok(&FMA)
+    } else {
+        Err(KernelError("fma kernel forced but the CPU does not report AVX2+FMA".into()))
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn fma_kernel() -> Result<&'static dyn MicroKernel, KernelError> {
+    Err(KernelError("fma kernel forced but this build targets a non-x86_64 arch".into()))
+}
+
+/// A kernel's scalar model wearing the kernel's shape: `tile` runs the
+/// wrapped kernel's [`MicroKernel::tile_model`]. The proptests drive the
+/// whole blocked core with this to pin blocked products bit-identical to
+/// plain-Rust arithmetic per kernel.
+pub(crate) struct ModelKernel(&'static dyn MicroKernel);
+
+impl MicroKernel for ModelKernel {
+    fn name(&self) -> &'static str {
+        "model"
+    }
+
+    fn mr(&self) -> usize {
+        self.0.mr()
+    }
+
+    fn nr(&self) -> usize {
+        self.0.nr()
+    }
+
+    fn tile(&self, ap: &[f64], bp: &[f64], kc: usize, acc: &mut [f64]) {
+        self.0.tile_model(ap, bp, kc, acc);
+    }
+}
+
+static SCALAR_MODEL: ModelKernel = ModelKernel(&SCALAR);
+#[cfg(target_arch = "x86_64")]
+static AVX2_MODEL: ModelKernel = ModelKernel(&AVX2);
+#[cfg(target_arch = "x86_64")]
+static FMA_MODEL: ModelKernel = ModelKernel(&FMA);
+
+/// The model twin of `kernel_for(choice)` (same support requirements,
+/// same error on unsupported forces).
+pub(crate) fn model_kernel_for(
+    choice: KernelChoice,
+) -> Result<&'static dyn MicroKernel, KernelError> {
+    kernel_for(choice)?;
+    match choice {
+        KernelChoice::Scalar => Ok(&SCALAR_MODEL),
+        #[cfg(target_arch = "x86_64")]
+        KernelChoice::Avx2 => Ok(&AVX2_MODEL),
+        #[cfg(target_arch = "x86_64")]
+        KernelChoice::Fma => Ok(&FMA_MODEL),
+        _ => unreachable!("kernel_for accepted the choice"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn packed(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn choice_parse_roundtrip() {
+        for c in [
+            KernelChoice::Auto,
+            KernelChoice::Scalar,
+            KernelChoice::Avx2,
+            KernelChoice::Fma,
+        ] {
+            assert_eq!(KernelChoice::parse(&c.to_string()).unwrap(), c);
+        }
+        assert_eq!(KernelChoice::parse(" FMA "), Ok(KernelChoice::Fma));
+        assert!(KernelChoice::parse("avx512").is_err());
+        assert!(KernelChoice::parse("").is_err());
+    }
+
+    #[test]
+    fn enabled_always_includes_scalar_and_best() {
+        let enabled = enabled_choices();
+        assert_eq!(enabled[0], KernelChoice::Scalar);
+        assert!(enabled.contains(&best_available()));
+        for &c in &enabled {
+            let k = kernel_for(c).expect("enabled kernel must resolve");
+            assert!(k.mr() * k.nr() <= MAX_TILE, "{} tile too large", k.name());
+        }
+    }
+
+    #[test]
+    fn scalar_tile_matches_its_model_bitwise() {
+        let mut rng = Rng::seed_from(91);
+        for kc in [1usize, 2, 7, 33] {
+            let ap = packed(&mut rng, kc * S_MR);
+            let bp = packed(&mut rng, kc * S_NR);
+            let mut a1 = vec![0.0; S_MR * S_NR];
+            let mut a2 = vec![0.0; S_MR * S_NR];
+            SCALAR.tile(&ap, &bp, kc, &mut a1);
+            SCALAR.tile_model(&ap, &bp, kc, &mut a2);
+            for (x, y) in a1.iter().zip(&a2) {
+                assert_eq!(x.to_bits(), y.to_bits(), "kc={kc}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_enabled_kernel_matches_its_model_bitwise() {
+        let mut rng = Rng::seed_from(92);
+        for &choice in &enabled_choices() {
+            let k = kernel_for(choice).unwrap();
+            let (mr, nr) = (k.mr(), k.nr());
+            for kc in [1usize, 5, 64] {
+                let ap = packed(&mut rng, kc * mr);
+                let bp = packed(&mut rng, kc * nr);
+                // Non-zero starting acc exercises the += contract.
+                let start = packed(&mut rng, mr * nr);
+                let mut a1 = start.clone();
+                let mut a2 = start.clone();
+                k.tile(&ap, &bp, kc, &mut a1);
+                k.tile_model(&ap, &bp, kc, &mut a2);
+                for (e, (x, y)) in a1.iter().zip(&a2).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{} kc={kc} elem={e}: {x} vs {y}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_force_is_a_clear_error() {
+        // Whatever this machine supports, the error path must render a
+        // human-readable message; exercise it via a fabricated
+        // non-x86_64 style check when possible.
+        #[cfg(target_arch = "x86_64")]
+        {
+            if !fma_detected() {
+                let e = kernel_for(KernelChoice::Fma).unwrap_err();
+                assert!(e.to_string().contains("fma"));
+            }
+        }
+        let e = KernelChoice::parse("neon").unwrap_err();
+        assert!(e.to_string().contains("neon"));
+    }
+}

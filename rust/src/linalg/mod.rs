@@ -1,29 +1,48 @@
 //! Dense & sparse linear algebra substrate.
 //!
 //! The offline crate set has no BLAS/ndarray, so everything the solvers
-//! need is implemented here: a packed, register/L2-tiled, multi-threaded
-//! GEMM/Gram core ([`gemm`]), contiguous row-major matrices routed
-//! through it ([`dense`]), Cholesky factorization, conjugate gradients
-//! over abstract linear operators, threaded CSR/CSC sparse kernels
-//! ([`sparse`]), and the [`Design`] abstraction that lets every solver
-//! consume dense or sparse data through one interface without
-//! densifying. Worker counts come from [`crate::util::parallel`]
-//! (`PALLAS_NUM_THREADS`), and every parallel product is bit-stable
-//! across thread counts.
+//! need is implemented here. The dense hot path is organized as a
+//! microkernel stack behind one seam, [`KernelCtx`]:
+//!
+//! - [`MicroKernel`] — an mr×nr register tile over packed operands,
+//!   with scalar, AVX2, and FMA implementations selected once at
+//!   startup by runtime CPU-feature detection (force one with
+//!   [`KernelChoice`] / `PALLAS_KERNEL` / [`with_kernel_choice`]),
+//! - [`CacheGeometry`] — probed L1/L2/L3 sizes, from which a
+//!   [`Blocking`] (`kc`/`mc`/`nc`, gram block edge, serial-vs-threaded
+//!   and naive-vs-blocked thresholds) is derived per kernel shape,
+//! - [`KernelCtx`] — kernel choice + geometry + blocking; every matrix
+//!   product ([`Mat::matmul`](dense::Mat::matmul),
+//!   [`Mat::gram`](dense::Mat::gram), the multi-RHS panel kernels, the
+//!   blocked-CG panel products, dual `K(t)` assembly) routes through a
+//!   resolved ctx.
+//!
+//! Around that core: contiguous row-major matrices ([`dense`]),
+//! Cholesky factorization, conjugate gradients over abstract linear
+//! operators, threaded CSR/CSC sparse kernels ([`sparse`]), and the
+//! [`Design`] abstraction that lets every solver consume dense or
+//! sparse data through one interface without densifying. Worker counts
+//! come from [`crate::util::parallel`] (`PALLAS_NUM_THREADS`), and for
+//! a fixed kernel choice every parallel product is bit-stable across
+//! thread counts (different kernels may round differently — FMA fuses —
+//! which is why forcing one is first-class).
 //!
 //! All solver numerics are `f64`; the XLA exchange path converts to `f32`
 //! at the runtime boundary (matching the paper's single-precision GPU
 //! arithmetic).
 
+mod cache;
 pub mod cg;
 pub mod cholesky;
 pub mod dense;
 pub mod design;
-pub mod gemm;
+pub(crate) mod gemm;
+mod kernel;
 pub mod multivec;
 pub mod sparse;
 pub mod vecops;
 
+pub use cache::{Blocking, CacheGeometry};
 pub use cg::{
     cg_solve, cg_solve_multi, cg_solve_multi_with, cg_solve_with, CgMultiOutcome, CgOptions,
     CgOutcome, CgScratch, LinOp, MultiCol, MultiLinOp,
@@ -31,5 +50,7 @@ pub use cg::{
 pub use cholesky::Cholesky;
 pub use dense::Mat;
 pub use design::{AsDesign, Design, DesignCols};
+pub use gemm::{set_global_kernel, with_kernel_choice, KernelCtx};
+pub use kernel::{best_available, enabled_choices, KernelChoice, KernelError, MicroKernel};
 pub use multivec::MultiVec;
 pub use sparse::{Csc, Csr};

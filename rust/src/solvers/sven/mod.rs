@@ -24,7 +24,7 @@ pub use backend::{
 };
 pub use reduction::{backmap, effective_c, MIN_ALPHA_SUM};
 
-use crate::linalg::{AsDesign, Design};
+use crate::linalg::{with_kernel_choice, AsDesign, Design, KernelChoice};
 use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
 use crate::util::parallel::{with_parallelism, Parallelism};
 use crate::util::Timer;
@@ -48,11 +48,23 @@ pub struct SvenConfig {
     /// performance knob; `Auto` defers to the process default /
     /// `PALLAS_NUM_THREADS`.
     pub parallelism: Parallelism,
+    /// Microkernel policy for the same kernels (next to `parallelism`):
+    /// force `scalar`/`avx2`/`fma`, or `Auto` to defer to the process
+    /// default / `PALLAS_KERNEL` / CPU detection. Unlike the thread
+    /// knob this *can* move result bits (FMA rounds differently), which
+    /// is exactly why it is a first-class setting; forcing a kernel the
+    /// CPU cannot run fails the solve with a clear error.
+    pub kernel: KernelChoice,
 }
 
 impl Default for SvenConfig {
     fn default() -> Self {
-        SvenConfig { mode: SvmMode::Auto, c_cap: 1e6, parallelism: Parallelism::Auto }
+        SvenConfig {
+            mode: SvmMode::Auto,
+            c_cap: 1e6,
+            parallelism: Parallelism::Auto,
+            kernel: KernelChoice::Auto,
+        }
     }
 }
 
@@ -69,6 +81,17 @@ impl<B: SvmBackend> Sven<B> {
 
     pub fn with_config(backend: B, config: SvenConfig) -> Self {
         Sven { backend, config }
+    }
+
+    /// Run `f` under this config's kernel + parallelism scopes (an
+    /// unsupported forced kernel surfaces here, before any work runs).
+    fn scoped<T>(&self, f: impl FnOnce() -> anyhow::Result<T>) -> anyhow::Result<T> {
+        match with_kernel_choice(self.config.kernel, || {
+            with_parallelism(self.config.parallelism, f)
+        }) {
+            Ok(res) => res,
+            Err(e) => Err(anyhow::Error::from(e)),
+        }
     }
 
     /// One-shot solve of a single Elastic Net problem. The problem's
@@ -94,9 +117,7 @@ impl<B: SvmBackend> Sven<B> {
         let timer = Timer::start();
         let p = prob.p();
         let c = effective_c(prob.lambda2, self.config.c_cap);
-        let solve = with_parallelism(self.config.parallelism, || {
-            prepared.solve(prob.t, c, warm, scratch)
-        })?;
+        let solve = self.scoped(|| prepared.solve(prob.t, c, warm, scratch))?;
         let (beta, degenerate) = backmap(&solve.alpha, p, prob.t);
         let seconds = timer.elapsed();
         let objective = prob.objective(&beta);
@@ -132,9 +153,7 @@ impl<B: SvmBackend> Sven<B> {
             .iter()
             .map(|&(t, lambda2)| (t, effective_c(lambda2, self.config.c_cap)))
             .collect();
-        let (solves, stats) = with_parallelism(self.config.parallelism, || {
-            prepared.solve_batch(&pts, scratch)
-        })?;
+        let (solves, stats) = self.scoped(|| prepared.solve_batch(&pts, scratch))?;
         let per_point = if points.is_empty() {
             0.0
         } else {
@@ -189,9 +208,7 @@ impl<B: SvmBackend> Sven<B> {
         x: &Arc<Design>,
         y: &Arc<Vec<f64>>,
     ) -> anyhow::Result<Arc<dyn SvmPrep>> {
-        with_parallelism(self.config.parallelism, || {
-            self.backend.prepare(x, y, self.config.mode)
-        })
+        self.scoped(|| self.backend.prepare(x, y, self.config.mode))
     }
 
     /// Degeneracy pre-check (paper §3): if `t` exceeds the L1 norm of the
@@ -384,6 +401,24 @@ mod tests {
         assert!(l1 <= prob.t * (1.0 + 1e-6), "|β|₁ = {l1} > t = {}", prob.t);
         // and the constraint is tight (non-degenerate case)
         assert!(l1 >= prob.t * (1.0 - 1e-6), "|β|₁ = {l1} ≪ t = {}", prob.t);
+    }
+
+    #[test]
+    fn forced_scalar_kernel_matches_auto() {
+        let (x, y) = dataset(40, 25, 161);
+        let prob = EnProblem::new(x, y, 0.2, 0.5);
+        let auto = Sven::new(RustBackend::default());
+        let forced = Sven::with_config(
+            RustBackend::default(),
+            SvenConfig { kernel: KernelChoice::Scalar, ..Default::default() },
+        );
+        let ba = auto.solve(&prob).unwrap().beta;
+        let bs = forced.solve(&prob).unwrap().beta;
+        // Different kernels may round differently; the solves must still
+        // land on the same optimum to solver tolerance.
+        for j in 0..25 {
+            assert!((ba[j] - bs[j]).abs() < 1e-6, "j={j}: {} vs {}", ba[j], bs[j]);
+        }
     }
 
     #[test]

@@ -225,11 +225,12 @@ mod tests {
         assert!(close_vec(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, "v").is_ok());
     }
 
-    /// Ragged gemm shapes (never multiples of the MR/NR/KC tile sizes):
-    /// the blocked parallel kernel must match the naive reference.
+    /// Ragged gemm shapes (never multiples of the mr/nr/kc tile sizes):
+    /// the blocked parallel core must match the naive reference under
+    /// **every** enabled microkernel.
     #[test]
     fn prop_blocked_matmul_matches_naive() {
-        use crate::linalg::gemm;
+        use crate::linalg::{enabled_choices, gemm, KernelCtx};
         forall(
             "blocked gemm == naive on ragged shapes",
             24,
@@ -245,10 +246,160 @@ mod tests {
                 let (m, k, n) = (*m, *k, *n);
                 let mut naive = vec![0.0; m * n];
                 gemm::naive_matmul_into(a, b, &mut naive, m, k, n);
-                for nt in [1, 3] {
-                    let mut blocked = vec![0.0; m * n];
-                    gemm::blocked_matmul_into(a, b, &mut blocked, m, k, n, nt);
-                    close_vec(&naive, &blocked, 1e-10, &format!("gemm {m}x{k}x{n} nt={nt}"))?;
+                for choice in enabled_choices() {
+                    let ctx = KernelCtx::for_choice(choice).expect("enabled kernel");
+                    for nt in [1, 3] {
+                        let mut blocked = vec![0.0; m * n];
+                        ctx.blocked_matmul_into(a, b, &mut blocked, m, k, n, nt);
+                        close_vec(
+                            &naive,
+                            &blocked,
+                            1e-10,
+                            &format!("gemm[{choice}] {m}x{k}x{n} nt={nt}"),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Microkernel-level bit-identity pin: on random packed panels of
+    /// every depth (including kc=1 and non-multiples of 4), each enabled
+    /// kernel's `tile` must reproduce its scalar `tile_model` bit for
+    /// bit, starting from a non-zero accumulator.
+    #[test]
+    fn prop_microkernel_tile_matches_model_bitwise() {
+        use crate::linalg::{enabled_choices, KernelCtx};
+        forall(
+            "microkernel tile == scalar model bits",
+            48,
+            |rng: &mut Rng, size: usize| {
+                let kc = 1 + rng.below(4 + 8 * size);
+                // Sized for the widest tile (mr,nr ≤ 8); each kernel
+                // slices its own mr/nr prefix.
+                let ap: Vec<f64> = (0..kc * 8).map(|_| rng.normal()).collect();
+                let bp: Vec<f64> = (0..kc * 8).map(|_| rng.normal()).collect();
+                let acc0: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+                (kc, ap, bp, acc0)
+            },
+            |(kc, ap, bp, acc0)| {
+                let kc = *kc;
+                for choice in enabled_choices() {
+                    let kern = KernelCtx::for_choice(choice).expect("enabled kernel").micro();
+                    let (mr, nr) = (kern.mr(), kern.nr());
+                    let mut got = acc0[..mr * nr].to_vec();
+                    kern.tile(&ap[..kc * mr], &bp[..kc * nr], kc, &mut got);
+                    let mut want = acc0[..mr * nr].to_vec();
+                    kern.tile_model(&ap[..kc * mr], &bp[..kc * nr], kc, &mut want);
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        if g.to_bits() != w.to_bits() {
+                            return Err(format!(
+                                "{choice} kc={kc} tile[{i}]: {g} vs model {w}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The whole blocked core driven by the real kernel must be
+    /// bit-identical to the same core driven by the kernel's scalar
+    /// model, on ragged shapes (every m/n tail fringe) — extending the
+    /// tile-level pin through packing, edge masking, and banding.
+    #[test]
+    fn prop_blocked_core_matches_model_kernel_bitwise() {
+        use crate::linalg::{enabled_choices, gemm, KernelCtx};
+        forall(
+            "blocked core == model-kernel core bits",
+            16,
+            |rng: &mut Rng, size: usize| {
+                let m = 1 + rng.below(8 + 6 * size);
+                let k = 1 + rng.below(10 + 8 * size);
+                let n = 1 + rng.below(8 + 6 * size);
+                let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+                let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                for choice in enabled_choices() {
+                    let ctx = KernelCtx::for_choice(choice).expect("enabled kernel");
+                    let model = gemm::model_ctx(choice).expect("model for enabled kernel");
+                    let mut real = vec![0.0; m * n];
+                    ctx.blocked_matmul_into(a, b, &mut real, m, k, n, 2);
+                    let mut modeled = vec![0.0; m * n];
+                    model.blocked_matmul_into(a, b, &mut modeled, m, k, n, 2);
+                    for (i, (r, w)) in real.iter().zip(&modeled).enumerate() {
+                        if r.to_bits() != w.to_bits() {
+                            return Err(format!(
+                                "gemm[{choice}] {m}x{k}x{n} flat {i}: {r} vs model {w}"
+                            ));
+                        }
+                    }
+                    let mut greal = vec![0.0; m * m];
+                    ctx.blocked_gram_into(a, &mut greal, m, k, 2);
+                    let mut gmodel = vec![0.0; m * m];
+                    model.blocked_gram_into(a, &mut gmodel, m, k, 2);
+                    for (i, (r, w)) in greal.iter().zip(&gmodel).enumerate() {
+                        if r.to_bits() != w.to_bits() {
+                            return Err(format!(
+                                "gram[{choice}] {m}x{k} flat {i}: {r} vs model {w}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Per-kernel thread-count determinism: for a fixed kernel choice,
+    /// the blocked products are bit-identical at 1, 2, and 8 workers.
+    #[test]
+    fn prop_blocked_kernels_bit_stable_across_threads() {
+        use crate::linalg::{enabled_choices, KernelCtx};
+        forall(
+            "blocked products bit-stable across 1/2/8 threads per kernel",
+            12,
+            |rng: &mut Rng, size: usize| {
+                let m = 3 + rng.below(10 + 8 * size);
+                let k = 3 + rng.below(12 + 8 * size);
+                let n = 3 + rng.below(10 + 8 * size);
+                let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+                let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                for choice in enabled_choices() {
+                    let ctx = KernelCtx::for_choice(choice).expect("enabled kernel");
+                    let mut c1 = vec![0.0; m * n];
+                    ctx.blocked_matmul_into(a, b, &mut c1, m, k, n, 1);
+                    let mut g1 = vec![0.0; m * m];
+                    ctx.blocked_gram_into(a, &mut g1, m, k, 1);
+                    for nt in [2usize, 8] {
+                        let mut cn = vec![0.0; m * n];
+                        ctx.blocked_matmul_into(a, b, &mut cn, m, k, n, nt);
+                        for (i, (x, y)) in c1.iter().zip(&cn).enumerate() {
+                            if x.to_bits() != y.to_bits() {
+                                return Err(format!(
+                                    "gemm[{choice}] nt={nt} flat {i}: {x} vs {y}"
+                                ));
+                            }
+                        }
+                        let mut gn = vec![0.0; m * m];
+                        ctx.blocked_gram_into(a, &mut gn, m, k, nt);
+                        for (i, (x, y)) in g1.iter().zip(&gn).enumerate() {
+                            if x.to_bits() != y.to_bits() {
+                                return Err(format!(
+                                    "gram[{choice}] nt={nt} flat {i}: {x} vs {y}"
+                                ));
+                            }
+                        }
+                    }
                 }
                 Ok(())
             },
@@ -556,10 +707,11 @@ mod tests {
         );
     }
 
-    /// Same property for the symmetric gram kernel, plus exact symmetry.
+    /// Same property for the symmetric gram kernel, plus exact symmetry —
+    /// under every enabled microkernel.
     #[test]
     fn prop_blocked_gram_matches_naive() {
-        use crate::linalg::gemm;
+        use crate::linalg::{enabled_choices, gemm, KernelCtx};
         forall(
             "blocked gram == naive on ragged shapes",
             20,
@@ -573,14 +725,25 @@ mod tests {
                 let (m, k) = (*m, *k);
                 let mut naive = vec![0.0; m * m];
                 gemm::naive_gram_into(a, &mut naive, m, k);
-                for nt in [1, 4] {
-                    let mut blocked = vec![0.0; m * m];
-                    gemm::blocked_gram_into(a, &mut blocked, m, k, nt);
-                    close_vec(&naive, &blocked, 1e-10, &format!("gram {m}x{k} nt={nt}"))?;
-                    for i in 0..m {
-                        for j in 0..i {
-                            if blocked[i * m + j].to_bits() != blocked[j * m + i].to_bits() {
-                                return Err(format!("asymmetry at ({i},{j}) nt={nt}"));
+                for choice in enabled_choices() {
+                    let ctx = KernelCtx::for_choice(choice).expect("enabled kernel");
+                    for nt in [1, 4] {
+                        let mut blocked = vec![0.0; m * m];
+                        ctx.blocked_gram_into(a, &mut blocked, m, k, nt);
+                        close_vec(
+                            &naive,
+                            &blocked,
+                            1e-10,
+                            &format!("gram[{choice}] {m}x{k} nt={nt}"),
+                        )?;
+                        for i in 0..m {
+                            for j in 0..i {
+                                if blocked[i * m + j].to_bits() != blocked[j * m + i].to_bits()
+                                {
+                                    return Err(format!(
+                                        "asymmetry[{choice}] at ({i},{j}) nt={nt}"
+                                    ));
+                                }
                             }
                         }
                     }

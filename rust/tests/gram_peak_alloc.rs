@@ -1,19 +1,19 @@
 //! Peak-memory seal on the in-band blocked Gram kernel.
 //!
-//! The old `blocked_gram_into` staged every upper-triangle block pair in
-//! its own buffer before a scatter/mirror pass — ~m²/2 transient doubles
-//! (9.4 MB at m = 1536) on top of G itself. The band-writing kernel
-//! computes blocks straight into their destination rows and mirrors
-//! through a `split_at_mut` frontier, so its transient footprint is one
-//! packed A tile + one packed Aᵀ panel per worker (≈ 0.5 MB each at the
-//! current BS/KC). A live-byte-tracking allocator pins the difference:
-//! the extra peak during the call must stay far under the staged
-//! scheme's block storage.
+//! An earlier `blocked_gram_into` staged every upper-triangle block pair
+//! in its own buffer before a scatter/mirror pass — ~m²/2 transient
+//! doubles (16.8 MB at m = 2048) on top of G itself. The band-writing
+//! kernel computes blocks straight into their destination rows and
+//! mirrors through a `split_at_mut` frontier, so its transient footprint
+//! is one packed A tile + one packed Aᵀ panel per worker (≲ 0.5 MB each
+//! under any plausible cache-derived `bs`/`kc`). A live-byte-tracking
+//! allocator pins the difference: the extra peak during the call must
+//! stay far under the staged scheme's block storage.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use sven::linalg::gemm;
+use sven::linalg::KernelCtx;
 
 /// Tracks live heap bytes and their high-water mark.
 struct PeakTrackingAlloc;
@@ -56,30 +56,50 @@ unsafe impl GlobalAlloc for PeakTrackingAlloc {
 #[global_allocator]
 static ALLOC: PeakTrackingAlloc = PeakTrackingAlloc;
 
+/// Reference `G = A·Aᵀ` by plain loops, writing into a preallocated
+/// buffer (the crate's naive kernel is no longer public — and this test
+/// must not allocate inside the tracked window anyway).
+fn naive_gram(a: &[f64], g: &mut [f64], m: usize, k: usize) {
+    for i in 0..m {
+        for j in 0..m {
+            let mut s = 0.0;
+            for kk in 0..k {
+                s += a[i * k + kk] * a[j * k + kk];
+            }
+            g[i * m + j] = s;
+        }
+    }
+}
+
 /// One test fn so no concurrent test pollutes the high-water mark.
 #[test]
 fn blocked_gram_has_no_quadratic_transients() {
-    // m spans 12 BS-bands; k kept small so the debug-mode flop count
-    // stays cheap — the assertion is about allocation, not speed.
-    const M: usize = 1536;
-    const K: usize = 48;
-    let staged_bytes = M * M / 2 * std::mem::size_of::<f64>(); // ~9.4 MB
+    // m spans many gram bands under any derived `bs`; k kept small so
+    // the debug-mode flop count stays cheap — the assertion is about
+    // allocation, not speed.
+    const M: usize = 2048;
+    const K: usize = 32;
+    let staged_bytes = M * M / 2 * std::mem::size_of::<f64>(); // ~16.8 MB
     // Budget: half the staged scheme's block storage. The in-band kernel
-    // needs ~0.5 MB per worker (packed tile + panel at 4 workers ≈ 2 MB
-    // with allocator slop), so this passes with a wide margin while any
-    // regression back to staged block pairs trips it.
+    // needs one packed tile + one packed panel per worker — ≲ 0.5 MB
+    // each even at the largest cache-derived bs/kc, so ~4 MB at 4
+    // workers with allocator slop. That passes with a wide margin while
+    // any regression back to staged block pairs trips the budget.
     let budget = staged_bytes / 2;
 
-    // Setup (untracked): input and output allocated before the reset.
+    // Setup (untracked): inputs, outputs, and the kernel context —
+    // resolving it probes cache geometry, which may allocate — all land
+    // before the reset.
+    let ctx = *KernelCtx::current();
     let mut rng = sven::rng::Rng::seed_from(4141);
     let a: Vec<f64> = (0..M * K).map(|_| rng.normal()).collect();
     let mut g = vec![0.0f64; M * M];
     let mut reference = vec![0.0f64; M * M];
-    gemm::naive_gram_into(&a, &mut reference, M, K);
+    naive_gram(&a, &mut reference, M, K);
 
     let baseline = LIVE.load(Ordering::Relaxed);
     PEAK.store(baseline, Ordering::Relaxed);
-    gemm::blocked_gram_into(&a, &mut g, M, K, 4);
+    ctx.blocked_gram_into(&a, &mut g, M, K, 4);
     let extra = PEAK.load(Ordering::Relaxed).saturating_sub(baseline);
 
     assert!(

@@ -88,6 +88,18 @@ fn main() {
         );
     }
 
+    // Mixed-precision micro-bench: f64 vs f32 GEMV panel streaming plus
+    // an F64-vs-MixedF32 solve (asserts refined-β agreement and that
+    // refinement passes actually ran, even in smoke mode).
+    let (sp_prec, prec_dev) = sven::bench::figures::precision_micro(!smoke);
+    if !smoke {
+        println!(
+            "mixed precision: f32 panel streaming {sp_prec:.2}x over f64, refined beta \
+             within {prec_dev:.1e} of f64 (acceptance: >= 1.5x on the bandwidth-bound \
+             gemv pair; agreement asserted at every scale)"
+        );
+    }
+
     let (warm, reps) = if smoke { (1, 2) } else { (2, 10) };
 
     // gemm through the Mat facade (includes dispatch + allocation)
@@ -129,7 +141,7 @@ fn main() {
 
     // primal Newton on the reduction (implicit operator)
     let design: Design = d.x.clone().into();
-    let samples = ReducedSamples { x: &design, y: &d.y, t: 1.0 };
+    let samples = ReducedSamples::new(&design, &d.y, 1.0);
     let labels = reduction_labels(d.x.cols());
     let mm = measure(1, if smoke { 1 } else { 5 }, || {
         primal_newton(&samples, &labels, 10.0, &PrimalOptions::default(), None)

@@ -829,6 +829,111 @@ pub fn cv_micro(full: bool) -> (f64, f64) {
 }
 
 // ---------------------------------------------------------------------------
+// Mixed-precision micro-bench (f32 panels + iterative refinement)
+// ---------------------------------------------------------------------------
+
+/// Mixed-precision micro-bench, two comparisons:
+///
+/// 1. the f64 GEMV pair (`X·v` then `Xᵀ·u` — the primal CG Hessian's
+///    memory traffic) against the same products streamed from an f32
+///    shadow ([`MatF32`](crate::linalg::MatF32)): bandwidth-bound, so
+///    halving the streamed bytes targets ≥ 1.5× on the full shape;
+/// 2. a primal-regime elastic-net solve under `Precision::F64` vs
+///    `Precision::MixedF32`, asserting (even in smoke mode) that the
+///    refined β agrees with the all-f64 β to solver tolerance and that
+///    the mixed run actually took refinement passes.
+///
+/// `full` runs the acceptance shape; otherwise tiny CI-smoke shapes.
+/// Returns (f32-over-f64 panel speedup, max |β_mixed − β_f64|).
+pub fn precision_micro(full: bool) -> (f64, f64) {
+    use super::harness::measure;
+    use crate::linalg::{Mat, MatF32, Precision};
+
+    let reps = if full { 9 } else { 2 };
+    println!("=== precision micro: f32 panels + f64 iterative refinement ===");
+    let mut rng = crate::rng::Rng::seed_from(3232);
+
+    // --- 1) f64 vs f32 GEMV pair on a bandwidth-bound shape ---
+    let (m, p) = if full { (8192usize, 2048usize) } else { (512, 96) };
+    let x = Mat::from_fn(m, p, |_, _| rng.normal());
+    let x32 = MatF32::from_mat(&x);
+    let v: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+    let u: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let vf: Vec<f32> = v.iter().map(|&a| a as f32).collect();
+    let uf: Vec<f32> = u.iter().map(|&a| a as f32).collect();
+    let mut yo = vec![0.0; m];
+    let mut to = vec![0.0; p];
+    let t_f64 = measure(1, reps, || {
+        x.matvec_into(&v, &mut yo);
+        x.matvec_t_into(&u, &mut to);
+    })
+    .summary
+    .median();
+    let t_f32 = measure(1, reps, || {
+        x32.matvec_into(&vf, &mut yo);
+        x32.matvec_t_into(&uf, &mut to);
+    })
+    .summary
+    .median();
+    let panel_speedup = t_f64 / t_f32;
+    let bytes = 2.0 * (m * p * 8) as f64;
+    println!(
+        "gemv pair {m}x{p}: f64 {:.3}ms ({:.1} GB/s) | f32 shadow {:.3}ms ({:.2}x; \
+         target >= 1.5x on the bandwidth-bound full shape)",
+        t_f64 * 1e3,
+        bytes / t_f64 / 1e9,
+        t_f32 * 1e3,
+        panel_speedup
+    );
+
+    // --- 2) full solve: F64 vs MixedF32, refined-β agreement ---
+    let (sn, sp2) = if full { (96usize, 1536usize) } else { (24, 64) };
+    let data = crate::data::synth_regression(&crate::data::SynthSpec {
+        name: format!("prec-{sn}x{sp2}"),
+        n: sn,
+        p: sp2,
+        support: (sp2 / 24).max(4),
+        seed: 3333,
+        ..Default::default()
+    });
+    let grid = grid_for(&data, 4);
+    let Some(pt) = grid.last() else {
+        println!("empty grid, skipping solve comparison");
+        return (panel_speedup, f64::NAN);
+    };
+    let prob = EnProblem::new(data.x.clone(), data.y.clone(), pt.t, pt.lambda2.max(1e-6));
+    let solve_at = |prec: Precision| {
+        let sven = Sven::with_config(
+            RustBackend::default(),
+            crate::solvers::sven::SvenConfig { precision: prec, ..Default::default() },
+        );
+        let t = measure(1, reps.min(5), || sven.solve(&prob).unwrap()).summary.median();
+        (t, sven.solve(&prob).unwrap())
+    };
+    let (t64, sol64) = solve_at(Precision::F64);
+    let (t32, sol32) = solve_at(Precision::MixedF32);
+    let dev = sol64
+        .beta
+        .iter()
+        .zip(&sol32.beta)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    // Refined agreement is a correctness bar, asserted even in smoke.
+    assert!(dev < 5e-5, "mixed-f32 beta deviates from f64 by {dev:.3e}");
+    assert!(sol32.refine_passes > 0, "mixed solve must take refinement passes");
+    assert_eq!(sol64.refine_passes, 0, "f64 solve must not refine");
+    println!(
+        "en solve {sn}x{sp2} (primal): f64 {:.2}ms | mixed-f32 {:.2}ms ({:.2}x), \
+         {} refine passes, max |dbeta| {dev:.2e}",
+        t64 * 1e3,
+        t32 * 1e3,
+        t64 / t32,
+        sol32.refine_passes
+    );
+    (panel_speedup, dev)
+}
+
+// ---------------------------------------------------------------------------
 // Figure 1
 // ---------------------------------------------------------------------------
 

@@ -13,7 +13,7 @@ use crate::data::{profile_by_name, ALL_PROFILES};
 use crate::solvers::elastic_net::EnProblem;
 use crate::solvers::glmnet::PathSettings;
 use crate::solvers::sven::{RustBackend, Sven};
-use crate::linalg::{set_global_kernel, KernelChoice, KernelCtx};
+use crate::linalg::{set_global_kernel, set_global_precision, KernelChoice, KernelCtx, Precision};
 use crate::util::fmt_duration;
 use crate::util::parallel::{set_global_parallelism, Parallelism};
 use anyhow::{anyhow, bail, Result};
@@ -86,6 +86,7 @@ COMMANDS:
       --backend xla|rust   SVM backend                [default rust]
       --threads N          linalg worker threads (0 = auto, 1 = serial)
       --kernel K           compute kernel: scalar|avx2|fma|auto [default auto]
+      --precision P        compute precision: f64|mixed-f32|auto [default auto]
   path                     sweep a regularization path (paper protocol)
       --dataset NAME       profile name
       --seed N             generation seed            [default 0]
@@ -93,12 +94,14 @@ COMMANDS:
       --backend xla|rust   SVM backend                [default rust]
       --threads N          linalg worker threads (0 = auto, 1 = serial)
       --kernel K           compute kernel: scalar|avx2|fma|auto [default auto]
+      --precision P        compute precision: f64|mixed-f32|auto [default auto]
   serve                    demo coordinator run
       --requests N         number of jobs             [default 32]
       --workers N          pool size                  [default cpus]
       --backend xla|rust   SVM backend                [default rust]
       --threads N          linalg worker threads (0 = auto, 1 = serial)
       --kernel K           compute kernel: scalar|avx2|fma|auto [default auto]
+      --precision P        compute precision: f64|mixed-f32|auto [default auto]
   help                     show this message
 
 Thread resolution when --threads is absent: PALLAS_NUM_THREADS (fallback
@@ -106,6 +109,10 @@ SVEN_THREADS), else the machine's available parallelism. For a fixed
 kernel choice, all blocked kernels produce bit-identical results at any
 thread count. Kernel resolution when --kernel is absent: PALLAS_KERNEL
 (scalar|avx2|fma|auto), else the best SIMD tier the CPU supports.
+Precision resolution when --precision is absent: PALLAS_PRECISION
+(f64|mixed-f32|auto), else f64. mixed-f32 streams the primal Newton's
+panel products in f32 and restores the f64 CG tolerance with iterative
+refinement; results agree with f64 to solver tolerance (not bit-for-bit).
 ";
 
 /// CLI entrypoint (used by `rust/src/main.rs`).
@@ -199,6 +206,19 @@ fn apply_kernel(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply `--precision` to the process-wide compute-precision setting
+/// (`auto` clears any force back to `PALLAS_PRECISION`/f64). A bad value
+/// fails here with the parse error instead of panicking at the first
+/// preparation.
+fn apply_precision(args: &Args) -> Result<()> {
+    if let Some(v) = args.get("precision") {
+        let p = Precision::parse(v)?;
+        set_global_precision(p);
+        crate::info!("compute precision: {p}");
+    }
+    Ok(())
+}
+
 fn backend_choice(args: &Args) -> Result<BackendChoice> {
     match args.get("backend").unwrap_or("rust") {
         "rust" | "cpu" => Ok(BackendChoice::Rust),
@@ -210,6 +230,7 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
 fn cmd_solve(args: &Args) -> Result<()> {
     apply_threads(args)?;
     apply_kernel(args)?;
+    apply_precision(args)?;
     let data = load_dataset(args)?;
     let lambda2 = args.get_f64("lambda2")?.unwrap_or(1.0);
     // Default budget: the largest-support point of a short derived path.
@@ -251,6 +272,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
 fn cmd_path(args: &Args) -> Result<()> {
     apply_threads(args)?;
     apply_kernel(args)?;
+    apply_precision(args)?;
     let data = load_dataset(args)?;
     let grid = args.get_usize("grid")?.unwrap_or(40);
     let runner = PathRunner::new(PathRunnerConfig { grid, ..Default::default() });
@@ -287,6 +309,7 @@ fn cmd_path(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     apply_threads(args)?;
     apply_kernel(args)?;
+    apply_precision(args)?;
     let requests = args.get_usize("requests")?.unwrap_or(32);
     let backend = backend_choice(args)?;
     let mut config = ServiceConfig::default();
@@ -398,6 +421,22 @@ mod tests {
         let bad = parse_args(&raw(&["--kernel", "sse9"])).unwrap();
         let err = apply_kernel(&bad).unwrap_err().to_string();
         assert!(err.contains("sse9"), "got: {err}");
+    }
+
+    #[test]
+    fn precision_flag_parses_and_noop_without_flag() {
+        // Without the flag, apply_precision must not touch the global
+        // setting (other tests in this process rely on Auto).
+        let none = parse_args(&raw(&[])).unwrap();
+        apply_precision(&none).unwrap();
+        // `auto` stores the do-nothing default — safe to run concurrently
+        // with precision-scoping tests.
+        let auto = parse_args(&raw(&["--precision", "auto"])).unwrap();
+        apply_precision(&auto).unwrap();
+        // A nonsense precision is a friendly error, not a panic later.
+        let bad = parse_args(&raw(&["--precision", "f16"])).unwrap();
+        let err = apply_precision(&bad).unwrap_err().to_string();
+        assert!(err.contains("f16"), "got: {err}");
     }
 
     #[test]

@@ -21,6 +21,8 @@ pub struct Metrics {
     path_segments: AtomicU64,
     sv_gather_rebuilds: AtomicU64,
     cg_iters_total: AtomicU64,
+    refine_iters_total: AtomicU64,
+    f32_panel_bytes: AtomicU64,
     cv_folds: AtomicU64,
     batched_cg_rhs_total: AtomicU64,
     batch_panel_rebuilds: AtomicU64,
@@ -88,14 +90,27 @@ impl Metrics {
     }
 
     /// Per-solve counters reported by the SVM backends: inner-CG
-    /// iterations and active-set panel rebuilds (accumulated across the
-    /// solves of each job).
-    pub fn on_solve_stats(&self, cg_iters: usize, gather_rebuilds: usize) {
+    /// iterations, active-set panel rebuilds, and mixed-precision
+    /// refinement passes (accumulated across the solves of each job;
+    /// `refine_passes` stays 0 for pure-f64 solves).
+    pub fn on_solve_stats(&self, cg_iters: usize, gather_rebuilds: usize, refine_passes: usize) {
         if cg_iters > 0 {
             self.cg_iters_total.fetch_add(cg_iters as u64, Ordering::Relaxed);
         }
         if gather_rebuilds > 0 {
             self.sv_gather_rebuilds.fetch_add(gather_rebuilds as u64, Ordering::Relaxed);
+        }
+        if refine_passes > 0 {
+            self.refine_iters_total.fetch_add(refine_passes as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Bytes of f32 shadow panels held by a freshly built preparation
+    /// (0 for pure-f64 preps; accumulated across prep builds so the
+    /// mixed tier's memory cost is visible next to its solve counters).
+    pub fn on_f32_panel_bytes(&self, bytes: usize) {
+        if bytes > 0 {
+            self.f32_panel_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         }
     }
 
@@ -153,6 +168,14 @@ impl Metrics {
 
     pub fn cg_iters_total(&self) -> u64 {
         self.cg_iters_total.load(Ordering::Relaxed)
+    }
+
+    pub fn refine_iters_total(&self) -> u64 {
+        self.refine_iters_total.load(Ordering::Relaxed)
+    }
+
+    pub fn f32_panel_bytes(&self) -> u64 {
+        self.f32_panel_bytes.load(Ordering::Relaxed)
     }
 
     pub fn cv_folds(&self) -> u64 {
@@ -218,6 +241,7 @@ impl Metrics {
             "submitted={} completed={} failed={} rejected={} \
              prep_hits={} prep_builds={} prep_evictions={} \
              path_segments={} sv_gather_rebuilds={} cg_iters_total={} \
+             refine_iters_total={} f32_panel_bytes={} \
              cv_folds={} batched_cg_rhs_total={} batch_panel_rebuilds={} {lat}{qw}{kernel}",
             self.submitted(),
             self.completed(),
@@ -229,6 +253,8 @@ impl Metrics {
             self.path_segments(),
             self.sv_gather_rebuilds(),
             self.cg_iters_total(),
+            self.refine_iters_total(),
+            self.f32_panel_bytes(),
             self.cv_folds(),
             self.batched_cg_rhs_total(),
             self.batch_panel_rebuilds()
@@ -283,9 +309,9 @@ mod tests {
         let m = Metrics::new();
         m.on_path_segment();
         m.on_path_segment();
-        m.on_solve_stats(17, 2);
-        m.on_solve_stats(0, 0); // no-ops must not underflow or count
-        m.on_solve_stats(3, 1);
+        m.on_solve_stats(17, 2, 0);
+        m.on_solve_stats(0, 0, 0); // no-ops must not underflow or count
+        m.on_solve_stats(3, 1, 0);
         assert_eq!(m.path_segments(), 2);
         assert_eq!(m.cg_iters_total(), 20);
         assert_eq!(m.sv_gather_rebuilds(), 3);
@@ -293,6 +319,22 @@ mod tests {
         assert!(report.contains("path_segments=2"));
         assert!(report.contains("cg_iters_total=20"));
         assert!(report.contains("sv_gather_rebuilds=3"));
+    }
+
+    #[test]
+    fn mixed_precision_counters() {
+        let m = Metrics::new();
+        m.on_solve_stats(10, 0, 2);
+        m.on_solve_stats(5, 1, 0); // f64 solve: refinement untouched
+        m.on_solve_stats(8, 0, 3);
+        m.on_f32_panel_bytes(4096);
+        m.on_f32_panel_bytes(0); // f64 prep: no-op
+        m.on_f32_panel_bytes(1024);
+        assert_eq!(m.refine_iters_total(), 5);
+        assert_eq!(m.f32_panel_bytes(), 5120);
+        let report = m.report();
+        assert!(report.contains("refine_iters_total=5"));
+        assert!(report.contains("f32_panel_bytes=5120"));
     }
 
     #[test]

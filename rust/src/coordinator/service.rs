@@ -16,7 +16,7 @@ use super::metrics::Metrics;
 use super::path::{sweep_prepared, GridPoint};
 use super::pool::{Pool, PoolConfig};
 use super::prep_cache::PrepCache;
-use crate::linalg::Design;
+use crate::linalg::{try_resolve_precision, Design, Precision};
 use crate::solvers::elastic_net::{EnProblem, EnSolution};
 use crate::solvers::sven::{RustBackend, Sven, SvenConfig, SvmPrep, SvmScratch, SvmWarm};
 use crate::util::Timer;
@@ -199,6 +199,12 @@ impl ServiceConfig {
         if let Err(e) = crate::linalg::KernelCtx::for_choice(self.sven.kernel) {
             return Err(ServiceConfigError(e.to_string()));
         }
+        // Same treatment for the precision chain: an unparseable
+        // `PALLAS_PRECISION` becomes a construction-time error here
+        // instead of a panic at the first prep inside a worker.
+        if let Err(e) = try_resolve_precision(self.sven.precision) {
+            return Err(ServiceConfigError(e.to_string()));
+        }
         if self.pool.workers == 0 {
             return Err(ServiceConfigError("pool.workers must be >= 1".into()));
         }
@@ -226,8 +232,11 @@ impl ServiceConfig {
     }
 }
 
-/// Cache key: one preparation per (data set, backend).
-type PrepKey = (u64, BackendChoice);
+/// Cache key: one preparation per (data set, backend, precision). The
+/// resolved precision is part of the key because a preparation is pinned
+/// at build time to its tier (f32 shadows or not) — flipping the process
+/// precision must never hand back a prep built under the old tier.
+type PrepKey = (u64, BackendChoice, Precision);
 
 /// Parameter validation shared by the workers and the segmenting submit
 /// path: bad jobs must become failed outcomes — never a worker panic,
@@ -534,14 +543,26 @@ impl WorkerCtx {
         if backend == BackendChoice::Xla {
             self.ensure_xla()?;
         }
-        let key = (dataset_id, backend);
+        // Resolve the precision the prepare below will see (explicit
+        // config beats the ambient chain), so the cache key matches what
+        // the build pins. Config validation already vetted the env value;
+        // re-surface it as a job error rather than unwrap, in case a
+        // worker ever runs under an unvalidated config.
+        let precision =
+            try_resolve_precision(self.config.sven.precision).map_err(|e| e.to_string())?;
+        let key = (dataset_id, backend, precision);
         let rust = &self.rust;
         let xla = &self.xla;
-        self.preps.get_or_build(key, || match backend {
-            BackendChoice::Rust => rust.prepare_shared(x, y).map_err(|e| e.to_string()),
-            BackendChoice::Xla => {
-                xla.as_ref().unwrap().prepare_shared(x, y).map_err(|e| e.to_string())
-            }
+        let metrics = &self.metrics;
+        self.preps.get_or_build(key, || {
+            let prep = match backend {
+                BackendChoice::Rust => rust.prepare_shared(x, y).map_err(|e| e.to_string())?,
+                BackendChoice::Xla => {
+                    xla.as_ref().unwrap().prepare_shared(x, y).map_err(|e| e.to_string())?
+                }
+            };
+            metrics.on_f32_panel_bytes(prep.f32_shadow_bytes());
+            Ok(prep)
         })
     }
 
@@ -613,7 +634,7 @@ impl WorkerCtx {
                     ),
                 }
                 .map_err(|e| e.to_string())?;
-                self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+                self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
                 Ok(JobResult::Point(sol))
             }
             JobKind::Path { grid } => {
@@ -642,7 +663,11 @@ impl WorkerCtx {
                 .map_err(|e| e.to_string())?;
                 self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
                 for sol in &sols {
-                    self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+                    self.metrics.on_solve_stats(
+                        sol.cg_iters,
+                        sol.gather_rebuilds,
+                        sol.refine_passes,
+                    );
                 }
                 Ok(JobResult::Path(sols))
             }
@@ -696,7 +721,7 @@ impl WorkerCtx {
                 ),
             }
             .map_err(|e| e.to_string())?;
-            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
             warm0 = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
         }
         let slice = &sp.grid[seg.start..seg.end];
@@ -725,7 +750,7 @@ impl WorkerCtx {
         .map_err(|e| e.to_string())?;
         self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
         for sol in &sols {
-            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
         }
         Ok(sols)
     }
@@ -784,7 +809,7 @@ impl WorkerCtx {
                 ),
             }
             .map_err(|e| e.to_string())?;
-            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
             warm0 = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
         }
         let slice = &sp.grid[seg.start..seg.end];
@@ -813,7 +838,7 @@ impl WorkerCtx {
         .map_err(|e| e.to_string())?;
         self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
         for sol in &sols {
-            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds);
+            self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
         }
         Ok(sols)
     }
@@ -841,7 +866,7 @@ impl WorkerCtx {
             ),
         }
         .map_err(|e| e.to_string())?;
-        self.metrics.on_solve_stats(best.cg_iters, best.gather_rebuilds);
+        self.metrics.on_solve_stats(best.cg_iters, best.gather_rebuilds, best.refine_passes);
         Ok(JobResult::CvPath(CvPathResult { fold_paths, cv_errors, best_index, best }))
     }
 }

@@ -14,7 +14,7 @@ pub mod svmlight;
 pub mod synth;
 
 pub use profiles::{profile_by_name, DatasetProfile, Regime, ALL_PROFILES};
-pub use standardize::{standardize, Standardization};
+pub use standardize::{standardize, standardize_design, Standardization};
 pub use synth::{prostate_like, synth_regression, SynthSpec};
 
 use crate::linalg::Mat;

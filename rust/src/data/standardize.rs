@@ -4,7 +4,7 @@
 //! centered and features normalized. glmnet's convention scales each
 //! column to `‖x_j‖²/n = 1`; we match that so λ values transfer.
 
-use crate::linalg::{vecops, Mat};
+use crate::linalg::{vecops, Design, Mat};
 
 /// Recorded transformation so solutions can be mapped back to the
 /// original units.
@@ -80,9 +80,53 @@ pub fn standardize_opts(x: &Mat, y: &[f64], center: bool) -> (Mat, Vec<f64>, Sta
     (xs, yc, Standardization { x_mean, x_scale, y_mean })
 }
 
+/// Standardize a [`Design`] of either storage kind.
+///
+/// Dense designs get the full center + scale treatment of
+/// [`standardize`]. Sparse designs stay sparse: the column means are
+/// *tracked* in the returned [`Standardization`] (computed as `Xᵀ·1/n`,
+/// no fill-in) and the stored values are scaled by the centered standard
+/// deviation `√(‖x_j‖²/n − x̄_j²)` built from [`Design::col_norms_sq`],
+/// but the means are never subtracted from the matrix, so zeros stay
+/// zero — the convention glmnet applies to sparse inputs (solvers fold
+/// the tracked means in implicitly). Zero-variance columns are
+/// neutralized to all-zero in both kinds. Note the sparse variance uses
+/// the one-pass `E[x²] − x̄²` form (clamped at 0), which can cancel for
+/// near-constant columns; the `1e-12` scale floor catches the exact
+/// cases.
+pub fn standardize_design(x: &Design, y: &[f64]) -> (Design, Vec<f64>, Standardization) {
+    match x {
+        Design::Dense(m) => {
+            let (xs, yc, st) = standardize(m, y);
+            (Design::Dense(xs), yc, st)
+        }
+        Design::Sparse { csr, .. } => {
+            let n = csr.rows();
+            assert_eq!(y.len(), n);
+            let y_mean = vecops::mean(y);
+            let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+            let inv_n = 1.0 / n as f64;
+            let mut x_mean = csr.matvec_t(&vec![1.0; n]);
+            vecops::scale(inv_n, &mut x_mean);
+            let x_scale: Vec<f64> = csr
+                .col_norms_sq()
+                .iter()
+                .zip(&x_mean)
+                .map(|(s, m)| (s * inv_n - m * m).max(0.0).sqrt())
+                .collect();
+            let factor: Vec<f64> =
+                x_scale.iter().map(|&s| if s > 1e-12 { 1.0 / s } else { 0.0 }).collect();
+            let mut scaled = csr.clone();
+            scaled.scale_cols(&factor);
+            (Design::from(scaled), yc, Standardization { x_mean, x_scale, y_mean })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Csr;
     use crate::rng::Rng;
 
     #[test]
@@ -126,5 +170,99 @@ mod tests {
             assert!((a - b).abs() < 1e-8, "i={i}: {a} vs {b}");
         }
         let _ = yc;
+    }
+
+    #[test]
+    fn design_dense_delegates_to_standardize() {
+        let mut rng = Rng::seed_from(64);
+        let x = Mat::from_fn(20, 4, |_, _| rng.normal_ms(2.0, 3.0));
+        let y: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let (xs, yc, st) = standardize(&x, &y);
+        let (ds, dyc, dst) = standardize_design(&Design::from(x), &y);
+        assert!(!ds.is_sparse());
+        assert_eq!(ds.to_dense().data(), xs.data());
+        assert_eq!(dyc, yc);
+        assert_eq!(dst.x_mean, st.x_mean);
+        assert_eq!(dst.x_scale, st.x_scale);
+    }
+
+    #[test]
+    fn sparse_standardize_tracks_means_without_fill_in() {
+        let mut rng = Rng::seed_from(65);
+        let dense = Mat::from_fn(40, 6, |_, _| {
+            if rng.bernoulli(0.35) {
+                rng.normal_ms(1.5, 2.0)
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..40).map(|_| rng.normal_ms(0.5, 1.0)).collect();
+        let csr = Csr::from_dense(&dense, 0.0);
+        let nnz = csr.nnz();
+        let (ds, yc, st) = standardize_design(&Design::from(csr), &y);
+        assert!(ds.is_sparse());
+        assert_eq!(ds.nnz(), nnz, "scaling must not change the sparsity structure");
+        assert!(vecops::mean(&yc).abs() < 1e-10);
+        // tracked moments agree with the dense centered standardizer
+        let (_, _, dst) = standardize(&dense, &y);
+        for j in 0..6 {
+            assert!((st.x_mean[j] - dst.x_mean[j]).abs() < 1e-10, "mean {j}");
+            assert!((st.x_scale[j] - dst.x_scale[j]).abs() < 1e-10, "scale {j}");
+        }
+        // entries are x/σ: zeros stay zero, nonzeros scaled in place
+        let scaled = ds.to_dense();
+        for r in 0..40 {
+            for j in 0..6 {
+                let expect =
+                    if st.x_scale[j] > 1e-12 { dense.get(r, j) / st.x_scale[j] } else { 0.0 };
+                assert!((scaled.get(r, j) - expect).abs() < 1e-12, "({r},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_constant_column_neutralized() {
+        // column 0 is the constant 5.0: zero centered variance, so its
+        // stored values are zeroed instead of divided by a ~0 scale
+        let dense = Mat::from_fn(8, 2, |r, c| if c == 0 { 5.0 } else { (r % 3) as f64 });
+        let y = vec![2.0; 8];
+        let (ds, _, st) = standardize_design(&Design::from(Csr::from_dense(&dense, 0.0)), &y);
+        assert!(st.x_scale[0].abs() < 1e-9);
+        let d = ds.to_dense();
+        for r in 0..8 {
+            assert_eq!(d.get(r, 0), 0.0, "row {r}");
+        }
+    }
+
+    #[test]
+    fn sparse_unstandardize_prediction_identity() {
+        let mut rng = Rng::seed_from(66);
+        let dense = Mat::from_fn(15, 3, |_, _| {
+            if rng.bernoulli(0.6) {
+                rng.normal_ms(3.0, 2.0)
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let (ds, _, st) = standardize_design(&Design::from(Csr::from_dense(&dense, 0.0)), &y);
+        let beta_std = vec![0.3, -0.7, 0.2];
+        let (beta_orig, intercept) = st.unstandardize(&beta_std);
+        // the sparse matrix keeps its column means, so the implicit
+        // centering term Σ β_j·x̄_j/σ_j reconciles the parameterizations:
+        // (Xs·β − Σ β x̄/σ) + ȳ == X·β_orig + intercept
+        let mean_term: f64 = beta_std
+            .iter()
+            .zip(&st.x_mean)
+            .zip(&st.x_scale)
+            .map(|((b, m), s)| if *s > 1e-12 { b * m / s } else { 0.0 })
+            .sum();
+        let pred_std = ds.matvec(&beta_std);
+        let pred_orig = dense.matvec(&beta_orig);
+        for i in 0..15 {
+            let a = pred_std[i] - mean_term + st.y_mean;
+            let b = pred_orig[i] + intercept;
+            assert!((a - b).abs() < 1e-8, "i={i}: {a} vs {b}");
+        }
     }
 }

@@ -144,6 +144,37 @@ impl CacheGeometry {
             l1d_elems: self.l1d_bytes / F64,
         }
     }
+
+    /// Derive blocking parameters for an **f32** microkernel of tile
+    /// `mr × nr`. Same cache-budget formulas as
+    /// [`CacheGeometry::blocking`] at half the element size, with every
+    /// element-count clamp doubled — so each cache block holds twice
+    /// the *elements* at the same *byte* footprint (the whole point of
+    /// the mixed-precision tier: double the data per line of memory
+    /// traffic). Fields stay in elements, as everywhere else.
+    pub fn blocking_f32(&self, mr: usize, nr: usize) -> Blocking {
+        assert!(mr >= 1 && nr >= 1, "degenerate microkernel tile");
+        const F32: usize = std::mem::size_of::<f32>();
+        // kc: one kc×nr B panel in about half of L1d (twice the f64 depth).
+        let kc = round_down((self.l1d_bytes / 2) / (F32 * nr), 8).clamp(128, 1024);
+        // mc: packed mc×kc A block in about half of L2.
+        let mc = round_down(((self.l2_bytes / 2) / (F32 * kc)).clamp(2 * mr, 1024), mr);
+        // nc: packed kc×nc B block within an eighth of the LLC.
+        let nc = round_down(((self.llc_bytes() / 8) / (F32 * kc)).clamp(4 * nr, 8192), nr);
+        // bs: apack + bpack (2·bs·kc floats) within half of L2.
+        let bs = round_down(self.l2_bytes / (4 * F32 * kc), 8).clamp(64, 512);
+        Blocking {
+            mr,
+            nr,
+            kc,
+            mc,
+            nc,
+            bs,
+            threading_threshold: mc * kc * nr,
+            gemv_threshold: self.l2_bytes / F32,
+            l1d_elems: self.l1d_bytes / F32,
+        }
+    }
 }
 
 /// Parse sysfs cache sizes of the form `48K`, `2048K`, `1M`, `32M`.
@@ -279,6 +310,36 @@ mod tests {
             assert!(b.nc % nr == 0 && b.nc >= 4 * nr);
             assert!(b.threading_threshold > 0);
             assert!(b.gemv_threshold > 0);
+        }
+    }
+
+    #[test]
+    fn f32_blocking_doubles_elements_at_same_byte_footprint() {
+        // The pinned f32/f64 relationship: at the same (mr, nr) every
+        // byte-budgeted element count doubles — same cache bytes, twice
+        // the elements per block.
+        for geom in [CacheGeometry::fallback(), CacheGeometry::detect()] {
+            for &(mr, nr) in &[(4usize, 8usize), (8, 8)] {
+                let b64 = geom.blocking(mr, nr);
+                let b32 = geom.blocking_f32(mr, nr);
+                // kc doubles unless a clamp intervened; the byte
+                // footprint of the B panel (kc·nr·elem_size) never grows.
+                assert!(b32.kc * 4 <= b64.kc * 8, "f32 kc panel outgrew the f64 one");
+                assert!(b32.kc >= b64.kc, "f32 kc must not shrink in elements");
+                // Unclamped thresholds double exactly.
+                assert_eq!(b32.gemv_threshold, 2 * b64.gemv_threshold);
+                assert_eq!(b32.l1d_elems, 2 * b64.l1d_elems);
+                // Derived blocks stay within the driver-friendly ranges.
+                assert!(b32.kc >= 128 && b32.kc <= 1024 && b32.kc % 8 == 0);
+                assert!(b32.mc % mr == 0 && b32.mc >= 2 * mr);
+                assert!(b32.nc % nr == 0 && b32.nc >= 4 * nr);
+                assert!(b32.bs >= 64 && b32.bs <= 512);
+                assert!(b32.threading_threshold > 0);
+            }
+            // On the fallback geometry nothing clamps: kc doubles exactly.
+            let (b64, b32) =
+                (CacheGeometry::fallback().blocking(4, 8), CacheGeometry::fallback().blocking_f32(4, 8));
+            assert_eq!(b32.kc, 2 * b64.kc);
         }
     }
 

@@ -117,6 +117,11 @@ pub struct CgScratch {
     zm: MultiVec,
     pm: MultiVec,
     apm: MultiVec,
+    /// Outer-loop residual / correction of [`cg_solve_refined`]. Kept
+    /// out of [`CgScratch::resize`] — the inner solves resize the five
+    /// solo buffers while these two must survive across them.
+    rr: Vec<f64>,
+    cx: Vec<f64>,
 }
 
 impl CgScratch {
@@ -217,6 +222,102 @@ pub fn cg_solve_with<A: LinOp>(
         }
     }
     CgOutcome { iters, rel_residual: rel, converged: rel <= opts.tol }
+}
+
+/// Result of a mixed-precision refined solve ([`cg_solve_refined`]).
+#[derive(Clone, Debug)]
+pub struct RefineOutcome {
+    /// Total inner CG iterations (fast-operator solves plus any f64
+    /// fallback solve).
+    pub cg_iters: usize,
+    /// Outer refinement passes (correction solves after the initial one).
+    pub refine_passes: usize,
+    /// Whether the **f64** residual met `opts.tol · ‖b‖`.
+    pub converged: bool,
+    /// Whether refinement stalled and the solve fell back to plain f64
+    /// CG from the current iterate.
+    pub fell_back: bool,
+}
+
+/// Refinement passes are capped here; a solve that has not converged by
+/// then is not gaining a digit per pass and goes to the f64 fallback.
+const MAX_REFINE_PASSES: usize = 8;
+
+/// Mixed-precision iterative refinement: solve `A·x = b` to the **f64**
+/// tolerance in `opts` while running the bandwidth-bound CG inner loops
+/// on a cheaper `fast` operator (in practice: the same Hessian with its
+/// panel products demoted to `f32`).
+///
+/// Each pass computes the true residual `r = b − exact·x` in f64, checks
+/// it against `opts.tol·‖b‖`, and if needed solves the correction system
+/// `fast·c ≈ r` (inner tolerance `max(opts.tol, 1e-6)` — f32 products
+/// cannot resolve residuals much below single precision) and updates
+/// `x += c`. When a pass fails to halve the residual — the f32
+/// approximation has run out of digits — or the pass cap is reached, the
+/// solve falls back to plain f64 [`cg_solve_with`] on `exact` from the
+/// current iterate, so the returned direction always meets the same
+/// contract as a pure-f64 solve.
+///
+/// Every step is fixed-order f64 arithmetic around the inner solves, so
+/// for a fixed kernel choice the result is bit-stable across thread
+/// counts whenever the two operators are (the crate's operators all
+/// are).
+pub fn cg_solve_refined<E: LinOp, F: LinOp>(
+    exact: &E,
+    fast: &F,
+    b: &[f64],
+    x: &mut [f64],
+    opts: &CgOptions,
+    scratch: &mut CgScratch,
+) -> RefineOutcome {
+    let n = exact.dim();
+    assert_eq!(fast.dim(), n, "fast/exact dimension mismatch");
+    assert_eq!(b.len(), n);
+    assert_eq!(x.len(), n);
+
+    let bnorm = vecops::norm2(b);
+    if bnorm == 0.0 {
+        x.fill(0.0);
+        return RefineOutcome { cg_iters: 0, refine_passes: 0, converged: true, fell_back: false };
+    }
+
+    let inner = CgOptions { tol: opts.tol.max(1e-6), max_iter: opts.max_iter };
+    let mut rr = std::mem::take(&mut scratch.rr);
+    let mut cx = std::mem::take(&mut scratch.cx);
+    rr.clear();
+    rr.resize(n, 0.0);
+    cx.clear();
+    cx.resize(n, 0.0);
+
+    let mut cg_iters = cg_solve_with(fast, b, x, &inner, scratch).iters;
+    let mut refine_passes = 0usize;
+    let mut prev_rn = f64::INFINITY;
+    let (converged, fell_back) = loop {
+        exact.apply(x, &mut rr);
+        for i in 0..n {
+            rr[i] = b[i] - rr[i];
+        }
+        let rn = vecops::norm2(&rr);
+        if rn <= opts.tol * bnorm {
+            break (true, false);
+        }
+        if rn >= 0.5 * prev_rn || refine_passes >= MAX_REFINE_PASSES || !rn.is_finite() {
+            // Stalled (or out of passes): the f32 operator has run out of
+            // digits. Finish in f64 from the current iterate.
+            let out = cg_solve_with(exact, b, x, opts, scratch);
+            cg_iters += out.iters;
+            break (out.converged, true);
+        }
+        prev_rn = rn;
+        cx.fill(0.0);
+        let out = cg_solve_with(fast, &rr, &mut cx, &inner, scratch);
+        cg_iters += out.iters;
+        refine_passes += 1;
+        vecops::axpy(1.0, &cx, x);
+    };
+    scratch.rr = rr;
+    scratch.cx = cx;
+    RefineOutcome { cg_iters, refine_passes, converged, fell_back }
 }
 
 /// Result of a blocked multi-RHS CG solve.
@@ -511,6 +612,124 @@ mod tests {
         let mut x = vec![0.0; 40];
         let out = cg_solve(&DenseOp(&a), &b, &mut x, &CgOptions { tol: 1e-16, max_iter: 3 });
         assert!(out.iters <= 3);
+    }
+
+    /// An f32-degraded view of a dense SPD operator: entries rounded to
+    /// `f32`, products accumulated in `f32` — the refinement loop's
+    /// stand-in for the real demoted panel products.
+    struct RoundedOp<'a>(&'a Mat);
+
+    impl LinOp for RoundedOp<'_> {
+        fn dim(&self) -> usize {
+            self.0.rows()
+        }
+
+        fn apply(&self, v: &[f64], out: &mut [f64]) {
+            let n = self.0.rows();
+            for i in 0..n {
+                let mut acc = 0.0f32;
+                for j in 0..n {
+                    acc += (self.0.get(i, j) as f32) * (v[j] as f32);
+                }
+                out[i] = acc as f64;
+            }
+        }
+    }
+
+    #[test]
+    fn refined_solve_reaches_f64_tolerance_through_f32_inner_loops() {
+        let mut rng = Rng::seed_from(40);
+        for n in [5usize, 20, 60] {
+            let a = random_spd(&mut rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true);
+            let opts = CgOptions::default();
+            let mut x = vec![0.0; n];
+            let out = cg_solve_refined(
+                &DenseOp(&a),
+                &RoundedOp(&a),
+                &b,
+                &mut x,
+                &opts,
+                &mut CgScratch::new(),
+            );
+            assert!(out.converged, "n={n} passes={}", out.refine_passes);
+            // The f64 residual really is at the f64 tolerance, regardless
+            // of how it got there.
+            let mut ax = vec![0.0; n];
+            DenseOp(&a).apply(&x, &mut ax);
+            let rn: f64 = (0..n).map(|i| (b[i] - ax[i]).powi(2)).sum::<f64>().sqrt();
+            assert!(rn <= opts.tol * vecops::norm2(&b) * (1.0 + 1e-12), "n={n} rn={rn}");
+        }
+    }
+
+    #[test]
+    fn refined_solve_falls_back_when_fast_operator_is_useless() {
+        let mut rng = Rng::seed_from(41);
+        let n = 30;
+        let a = random_spd(&mut rng, n);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b = a.matvec(&x_true);
+        // "Fast" operator with no relation to the exact one: refinement
+        // cannot gain digits and must finish in f64.
+        let eye = Mat::eye(n);
+        let mut x = vec![0.0; n];
+        let out = cg_solve_refined(
+            &DenseOp(&a),
+            &DenseOp(&eye),
+            &b,
+            &mut x,
+            &CgOptions::default(),
+            &mut CgScratch::new(),
+        );
+        assert!(out.fell_back, "identity fast operator must trigger the f64 fallback");
+        assert!(out.converged);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn refined_solve_matches_plain_cg_contract_on_zero_rhs() {
+        let a = Mat::eye(4);
+        let mut x = vec![1.0; 4];
+        let out = cg_solve_refined(
+            &DenseOp(&a),
+            &RoundedOp(&a),
+            &[0.0; 4],
+            &mut x,
+            &CgOptions::default(),
+            &mut CgScratch::new(),
+        );
+        assert!(out.converged && !out.fell_back);
+        assert_eq!(x, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn refined_scratch_reuse_is_bit_identical_to_fresh() {
+        let mut rng = Rng::seed_from(42);
+        let mut scratch = CgScratch::new();
+        for n in [33usize, 11] {
+            let a = random_spd(&mut rng, n);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let opts = CgOptions::default();
+            let mut x1 = vec![0.0; n];
+            let o1 = cg_solve_refined(
+                &DenseOp(&a),
+                &RoundedOp(&a),
+                &b,
+                &mut x1,
+                &opts,
+                &mut CgScratch::new(),
+            );
+            let mut x2 = vec![0.0; n];
+            let o2 = cg_solve_refined(&DenseOp(&a), &RoundedOp(&a), &b, &mut x2, &opts, &mut scratch);
+            assert_eq!(o1.cg_iters, o2.cg_iters, "n={n}");
+            assert_eq!(o1.refine_passes, o2.refine_passes, "n={n}");
+            for i in 0..n {
+                assert_eq!(x1[i].to_bits(), x2[i].to_bits(), "n={n} i={i}");
+            }
+        }
     }
 
     /// A family sharing one gram matrix with per-problem diagonal shifts

@@ -37,7 +37,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 use super::cache::{Blocking, CacheGeometry};
-use super::kernel::{self, KernelChoice, KernelError, MicroKernel};
+use super::kernel::{self, KernelChoice, KernelError, MicroKernel, MicroKernelF32};
+use super::lowp::vecops_f32;
 use super::vecops;
 use crate::util::parallel;
 
@@ -57,9 +58,14 @@ use crate::util::parallel;
 #[derive(Clone, Copy)]
 pub struct KernelCtx {
     kernel: &'static dyn MicroKernel,
+    /// The same tier's f32 twin (availability mirrors the f64 kernel
+    /// exactly), with its own cache blocking — twice the elements per
+    /// block at the same byte footprint.
+    kernel_f32: &'static dyn MicroKernelF32,
     choice: KernelChoice,
     geom: CacheGeometry,
     blk: Blocking,
+    blk_f32: Blocking,
 }
 
 static SCALAR_CTX: OnceLock<KernelCtx> = OnceLock::new();
@@ -129,10 +135,13 @@ impl KernelCtx {
             KernelChoice::Fma => &FMA_CTX,
             KernelChoice::Auto => unreachable!("Auto resolved above"),
         };
+        let kernel_f32 =
+            kernel::kernel_f32_for(resolved).expect("f32 tier mirrors f64 availability");
         Ok(slot.get_or_init(|| {
             let geom = CacheGeometry::detect();
             let blk = geom.blocking(kernel.mr(), kernel.nr());
-            KernelCtx { kernel, choice: resolved, geom, blk }
+            let blk_f32 = geom.blocking_f32(kernel_f32.mr(), kernel_f32.nr());
+            KernelCtx { kernel, kernel_f32, choice: resolved, geom, blk, blk_f32 }
         }))
     }
 
@@ -175,21 +184,37 @@ impl KernelCtx {
         &self.blk
     }
 
+    /// The blocking parameters derived for the f32 twin's tile shape
+    /// (element-count budgets doubled at the same cache-byte footprint).
+    pub fn blocking_f32(&self) -> &Blocking {
+        &self.blk_f32
+    }
+
     /// The dispatched microkernel itself — tile-level access for the
     /// bit-identity proptests and the `kernel_micro` roofline bench.
     pub(crate) fn micro(&self) -> &'static dyn MicroKernel {
         self.kernel
     }
 
+    /// The dispatched f32 microkernel (the mixed-precision compute
+    /// tier's tile), for the proptests and `precision_micro` bench.
+    pub(crate) fn micro_f32(&self) -> &'static dyn MicroKernelF32 {
+        self.kernel_f32
+    }
+
     /// One-line summary for startup logs / `Service` metrics.
     pub fn describe(&self) -> String {
         format!(
-            "kernel={}({}x{}) cache[{}] {}",
+            "kernel={}({}x{}) cache[{}] {} f32[{}({}x{}) kc={}]",
             self.kernel.name(),
             self.blk.mr,
             self.blk.nr,
             self.geom,
-            self.blk.describe()
+            self.blk.describe(),
+            self.kernel_f32.name(),
+            self.blk_f32.mr,
+            self.blk_f32.nr,
+            self.blk_f32.kc,
         )
     }
 
@@ -369,6 +394,163 @@ impl KernelCtx {
             tail = rest;
         }
     }
+
+    // -- f32 products (the mixed-precision compute tier) -------------------
+
+    /// `C ← A·B` in **f32** (overwrites C). Same size-based naive/blocked
+    /// and serial/threaded selection as [`KernelCtx::matmul_into`], using
+    /// the f32 blocking's thresholds.
+    pub fn matmul_f32_into(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        if !self.blk_f32.prefer_blocked_gemm(m, k, n) {
+            naive_matmul_f32_into(a, b, c, m, k, n);
+            return;
+        }
+        let madds = m.saturating_mul(k).saturating_mul(n);
+        let nt = if madds < self.blk_f32.threading_threshold {
+            1
+        } else {
+            parallel::effective_threads()
+        };
+        self.blocked_matmul_f32_into(a, b, c, m, k, n, nt);
+    }
+
+    /// `G ← A·Aᵀ` in **f32** (overwrites G). Same size-based selection
+    /// as [`KernelCtx::gram_into`] over the f32 blocking.
+    pub fn gram_f32_into(&self, a: &[f32], g: &mut [f32], m: usize, k: usize) {
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(g.len(), m * m, "G shape mismatch");
+        if !self.blk_f32.prefer_blocked_gram(m, k) {
+            naive_gram_f32_into(a, g, m, k);
+            return;
+        }
+        let madds = m.saturating_mul(m).saturating_mul(k);
+        let nt = if madds < self.blk_f32.threading_threshold {
+            1
+        } else {
+            parallel::effective_threads()
+        };
+        self.blocked_gram_f32_into(a, g, m, k, nt);
+    }
+
+    /// Blocked parallel f32 GEMM with an explicit worker count — the
+    /// single-precision twin of [`KernelCtx::blocked_matmul_into`]:
+    /// same packing stage (generic over the element), same block walk,
+    /// driven by the f32 microkernel over the f32 blocking. Bit-stable
+    /// across thread counts for the same reason the f64 core is (the
+    /// decomposition is size-derived only). Overwrites C.
+    pub fn blocked_matmul_f32_into(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        nt: usize,
+    ) {
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        c.fill(0.0);
+        let Blocking { mr, nr, kc: kcb, mc, nc, .. } = self.blk_f32;
+        let kern = self.kernel_f32;
+        let mut bpack = vec![0.0f32; nc * kcb];
+        for jc in (0..n).step_by(nc) {
+            let jn = nc.min(n - jc);
+            let jpanels = jn.div_ceil(nr);
+            for kb in (0..k).step_by(kcb) {
+                let kc = kcb.min(k - kb);
+                let packed_len = jpanels * kc * nr;
+                for (p, panel) in bpack[..packed_len].chunks_mut(kc * nr).enumerate() {
+                    let c0 = p * nr;
+                    pack_b_panel(b, n, kb, kc, jc + c0, nr.min(jn - c0), nr, panel);
+                }
+                let bp = &bpack[..packed_len];
+                let bands: Vec<&mut [f32]> = c.chunks_mut(mc * n).collect();
+                parallel::parallel_items(nt, bands, |bi, cband| {
+                    let row0 = bi * mc;
+                    let rows = cband.len() / n;
+                    let mut apack = vec![0.0f32; rows.div_ceil(mr) * mr * kc];
+                    pack_a(a, k, row0, rows, kb, kc, mr, &mut apack);
+                    block_kernel_f32(kern, &apack, bp, kc, rows, jn, cband, n, 0, jc);
+                });
+            }
+        }
+    }
+
+    /// Blocked parallel f32 symmetric Gram with an explicit worker
+    /// count — the single-precision twin of
+    /// [`KernelCtx::blocked_gram_into`] (upper-triangle bands in place,
+    /// then band-sequential mirror waves). Overwrites G with the same
+    /// bits at any thread count.
+    pub fn blocked_gram_f32_into(
+        &self,
+        a: &[f32],
+        g: &mut [f32],
+        m: usize,
+        k: usize,
+        nt: usize,
+    ) {
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(g.len(), m * m, "G shape mismatch");
+        let bs = self.blk_f32.bs;
+        let nb = m.div_ceil(bs);
+        let edge = |b: usize| bs.min(m - b * bs);
+        let bands: Vec<&mut [f32]> = g.chunks_mut(bs * m).collect();
+        parallel::parallel_items(nt, bands, |bi, gband| {
+            let ri = edge(bi);
+            for bj in bi..nb {
+                gram_block_f32(
+                    self.kernel_f32,
+                    &self.blk_f32,
+                    a,
+                    k,
+                    bi * bs,
+                    ri,
+                    bj * bs,
+                    edge(bj),
+                    gband,
+                    m,
+                    bj * bs,
+                );
+            }
+        });
+        let mut done: Vec<&[f32]> = Vec::with_capacity(nb);
+        let mut tail: &mut [f32] = g;
+        for bi in 0..nb {
+            let band_len = edge(bi) * m;
+            let (band, rest) = {
+                let t = std::mem::take(&mut tail);
+                t.split_at_mut(band_len)
+            };
+            if bi > 0 {
+                let done_ref: &[&[f32]] = &done;
+                let rows: Vec<&mut [f32]> = band.chunks_mut(m).collect();
+                parallel::parallel_items(nt, rows, |r, grow| {
+                    let gi = bi * bs + r;
+                    for (bj, src_band) in done_ref.iter().enumerate() {
+                        let rj = edge(bj);
+                        for c in 0..rj {
+                            grow[bj * bs + c] = src_band[c * m + gi];
+                        }
+                    }
+                });
+            }
+            done.push(band);
+            tail = rest;
+        }
+    }
 }
 
 /// A context running `choice`'s *scalar model* as its kernel (same tile
@@ -377,9 +559,11 @@ impl KernelCtx {
 /// bit-identical to the model.
 pub(crate) fn model_ctx(choice: KernelChoice) -> Result<KernelCtx, KernelError> {
     let kernel = kernel::model_kernel_for(choice)?;
+    let kernel_f32 = kernel::kernel_f32_for(choice)?;
     let geom = CacheGeometry::detect();
     let blk = geom.blocking(kernel.mr(), kernel.nr());
-    Ok(KernelCtx { kernel, choice, geom, blk })
+    let blk_f32 = geom.blocking_f32(kernel_f32.mr(), kernel_f32.nr());
+    Ok(KernelCtx { kernel, kernel_f32, choice, geom, blk, blk_f32 })
 }
 
 // ---------------------------------------------------------------------------
@@ -465,22 +649,58 @@ pub(crate) fn naive_gram_into(a: &[f64], g: &mut [f64], m: usize, k: usize) {
     }
 }
 
+/// f32 ikj/axpy GEMM reference — the small-shape path of
+/// [`KernelCtx::matmul_f32_into`] and the f32 correctness baseline.
+/// Serial; overwrites C.
+pub(crate) fn naive_matmul_f32_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    c.fill(0.0);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            vecops_f32::axpy(aik, &b[kk * n..(kk + 1) * n], crow);
+        }
+    }
+}
+
+/// f32 dot-product symmetric Gram reference. Serial; overwrites G.
+pub(crate) fn naive_gram_f32_into(a: &[f32], g: &mut [f32], m: usize, k: usize) {
+    for i in 0..m {
+        for j in i..m {
+            let v = vecops_f32::dot(&a[i * k..(i + 1) * k], &a[j * k..(j + 1) * k]);
+            g[i * m + j] = v;
+            g[j * m + i] = v;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Packing
 // ---------------------------------------------------------------------------
 
 /// Pack `rows` rows of A (starting at `row0`, k-slice `[k0, k0+kc)`) into
 /// mr-row tiles: `out[t·kc·mr + kk·mr + i] = A[row0+t·mr+i, k0+kk]`,
-/// zero-padded when the last tile is short of mr rows.
-fn pack_a(
-    a: &[f64],
+/// zero-padded when the last tile is short of mr rows. Generic over the
+/// element type so the f32 tier shares the packing stage.
+fn pack_a<T: Copy + Default>(
+    a: &[T],
     lda: usize,
     row0: usize,
     rows: usize,
     k0: usize,
     kc: usize,
     mr: usize,
-    out: &mut [f64],
+    out: &mut [T],
 ) {
     let tiles = rows.div_ceil(mr);
     for t in 0..tiles {
@@ -495,7 +715,7 @@ fn pack_a(
                 }
             } else {
                 for kk in 0..kc {
-                    tile[kk * mr + i] = 0.0;
+                    tile[kk * mr + i] = T::default();
                 }
             }
         }
@@ -505,22 +725,22 @@ fn pack_a(
 /// Pack one nr-column panel of B (k-slice `[k0, k0+kc)`, columns
 /// `[col0, col0+w)`, `w ≤ nr`): `panel[kk·nr + j] = B[k0+kk, col0+j]`,
 /// zero-padded beyond `w`.
-fn pack_b_panel(
-    b: &[f64],
+fn pack_b_panel<T: Copy + Default>(
+    b: &[T],
     ldb: usize,
     k0: usize,
     kc: usize,
     col0: usize,
     w: usize,
     nr: usize,
-    panel: &mut [f64],
+    panel: &mut [T],
 ) {
     for kk in 0..kc {
         let base = (k0 + kk) * ldb + col0;
         let dst = &mut panel[kk * nr..(kk + 1) * nr];
         dst[..w].copy_from_slice(&b[base..base + w]);
         for v in dst[w..].iter_mut() {
-            *v = 0.0;
+            *v = T::default();
         }
     }
 }
@@ -528,15 +748,15 @@ fn pack_b_panel(
 /// Pack one nr-column panel of Aᵀ for the Gram kernel: the panel's
 /// columns are A's *rows* `[row0, row0+w)`, so the read is contiguous
 /// per row: `panel[kk·nr + j] = A[row0+j, k0+kk]`.
-fn pack_bt_panel(
-    a: &[f64],
+fn pack_bt_panel<T: Copy + Default>(
+    a: &[T],
     lda: usize,
     k0: usize,
     kc: usize,
     row0: usize,
     w: usize,
     nr: usize,
-    panel: &mut [f64],
+    panel: &mut [T],
 ) {
     for j in 0..nr {
         if j < w {
@@ -547,7 +767,7 @@ fn pack_bt_panel(
             }
         } else {
             for kk in 0..kc {
-                panel[kk * nr + j] = 0.0;
+                panel[kk * nr + j] = T::default();
             }
         }
     }
@@ -575,6 +795,45 @@ fn block_kernel(
     let (mr, nr) = (kern.mr(), kern.nr());
     debug_assert!(mr * nr <= kernel::MAX_TILE, "register tile exceeds driver scratch");
     let mut acc = [0.0f64; kernel::MAX_TILE];
+    let tiles = rows.div_ceil(mr);
+    let panels = cols.div_ceil(nr);
+    for t in 0..tiles {
+        let ap = &apack[t * kc * mr..(t + 1) * kc * mr];
+        let mrows = mr.min(rows - t * mr);
+        for p in 0..panels {
+            let bp = &bpack[p * kc * nr..(p + 1) * kc * nr];
+            let ncols = nr.min(cols - p * nr);
+            let tile = &mut acc[..mr * nr];
+            tile.fill(0.0);
+            kern.tile(ap, bp, kc, tile);
+            for i in 0..mrows {
+                let base = (c_row0 + t * mr + i) * ldc + c_col0 + p * nr;
+                let crow = &mut c[base..base + ncols];
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv += tile[i * nr + j];
+                }
+            }
+        }
+    }
+}
+
+/// f32 twin of [`block_kernel`]: one packed (rows × cols) block through
+/// the f32 microkernel, stack accumulator at the same `MAX_TILE` bound.
+fn block_kernel_f32(
+    kern: &dyn MicroKernelF32,
+    apack: &[f32],
+    bpack: &[f32],
+    kc: usize,
+    rows: usize,
+    cols: usize,
+    c: &mut [f32],
+    ldc: usize,
+    c_row0: usize,
+    c_col0: usize,
+) {
+    let (mr, nr) = (kern.mr(), kern.nr());
+    debug_assert!(mr * nr <= kernel::MAX_TILE, "register tile exceeds driver scratch");
+    let mut acc = [0.0f32; kernel::MAX_TILE];
     let tiles = rows.div_ceil(mr);
     let panels = cols.div_ceil(nr);
     for t in 0..tiles {
@@ -639,6 +898,59 @@ fn gram_block(
             );
         }
         block_kernel(
+            kern,
+            &apack[..ri.div_ceil(mr) * mr * kc],
+            &bpack[..panels * kc * nr],
+            kc,
+            ri,
+            rj,
+            c,
+            ldc,
+            0,
+            c_col0,
+        );
+    }
+}
+
+/// f32 twin of [`gram_block`].
+fn gram_block_f32(
+    kern: &dyn MicroKernelF32,
+    blk: &Blocking,
+    a: &[f32],
+    k: usize,
+    i0: usize,
+    ri: usize,
+    j0: usize,
+    rj: usize,
+    c: &mut [f32],
+    ldc: usize,
+    c_col0: usize,
+) {
+    let Blocking { mr, nr, kc: kcb, .. } = *blk;
+    for r in 0..ri {
+        let base = r * ldc + c_col0;
+        c[base..base + rj].fill(0.0);
+    }
+    let mut apack = vec![0.0f32; ri.div_ceil(mr) * mr * kcb];
+    let mut bpack = vec![0.0f32; rj.div_ceil(nr) * nr * kcb];
+    let panels = rj.div_ceil(nr);
+    for kb in (0..k).step_by(kcb) {
+        let kc = kcb.min(k - kb);
+        pack_a(a, k, i0, ri, kb, kc, mr, &mut apack[..ri.div_ceil(mr) * mr * kc]);
+        for p in 0..panels {
+            let c0 = p * nr;
+            pack_bt_panel(
+                a,
+                k,
+                kb,
+                kc,
+                j0 + c0,
+                nr.min(rj - c0),
+                nr,
+                &mut bpack[p * kc * nr..(p + 1) * kc * nr],
+            );
+        }
+        block_kernel_f32(
             kern,
             &apack[..ri.div_ceil(mr) * mr * kc],
             &bpack[..panels * kc * nr],
@@ -846,5 +1158,122 @@ mod tests {
         assert_eq!(ctx.choice(), KernelChoice::Scalar);
         assert_eq!(ctx.blocking().mr, 4);
         assert_eq!(ctx.blocking().nr, 8);
+        assert!(d.contains("f32["), "{d}");
+    }
+
+    fn rand_vec_f32(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn max_abs_diff_f32(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn f32_blocked_matches_naive_ragged_shapes() {
+        let mut rng = Rng::seed_from(27);
+        for &(m, k, n) in &[(1, 1, 1), (5, 3, 9), (33, 17, 41), (70, 130, 51), (64, 256, 64)] {
+            let a = rand_vec_f32(&mut rng, m * k);
+            let b = rand_vec_f32(&mut rng, k * n);
+            let mut naive = vec![0.0f32; m * n];
+            naive_matmul_f32_into(&a, &b, &mut naive, m, k, n);
+            for ctx in enabled_ctxs() {
+                for nt in [1, 3, 8] {
+                    let mut blocked = vec![0.0f32; m * n];
+                    ctx.blocked_matmul_f32_into(&a, &b, &mut blocked, m, k, n, nt);
+                    let dev = max_abs_diff_f32(&naive, &blocked);
+                    assert!(
+                        dev < 1e-3,
+                        "{} ({m},{k},{n}) nt={nt}: dev {dev}",
+                        ctx.kernel_name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_blocked_gram_matches_naive_and_is_symmetric() {
+        let mut rng = Rng::seed_from(28);
+        for &(m, k) in &[(1, 4), (7, 5), (40, 33), (129, 70)] {
+            let a = rand_vec_f32(&mut rng, m * k);
+            let mut naive = vec![0.0f32; m * m];
+            naive_gram_f32_into(&a, &mut naive, m, k);
+            for ctx in enabled_ctxs() {
+                for nt in [1, 4] {
+                    let mut blocked = vec![0.0f32; m * m];
+                    ctx.blocked_gram_f32_into(&a, &mut blocked, m, k, nt);
+                    let dev = max_abs_diff_f32(&naive, &blocked);
+                    assert!(dev < 1e-3, "{} ({m},{k}) nt={nt}: dev {dev}", ctx.kernel_name());
+                    for i in 0..m {
+                        for j in 0..m {
+                            assert_eq!(
+                                blocked[i * m + j].to_bits(),
+                                blocked[j * m + i].to_bits(),
+                                "{} ({i},{j})",
+                                ctx.kernel_name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_f32_kernel_is_bit_stable_across_thread_counts() {
+        let mut rng = Rng::seed_from(29);
+        let (m, k, n) = (67, 310, 45);
+        let a = rand_vec_f32(&mut rng, m * k);
+        let b = rand_vec_f32(&mut rng, k * n);
+        for ctx in enabled_ctxs() {
+            let mut c1 = vec![0.0f32; m * n];
+            ctx.blocked_matmul_f32_into(&a, &b, &mut c1, m, k, n, 1);
+            for nt in [2, 5, 16] {
+                let mut cn = vec![0.0f32; m * n];
+                ctx.blocked_matmul_f32_into(&a, &b, &mut cn, m, k, n, nt);
+                assert!(
+                    c1.iter().zip(&cn).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} f32 gemm not bit-stable at nt={nt}",
+                    ctx.kernel_name()
+                );
+            }
+            let mut g1 = vec![0.0f32; m * m];
+            ctx.blocked_gram_f32_into(&a, &mut g1, m, k, 1);
+            for nt in [2, 7] {
+                let mut gn = vec![0.0f32; m * m];
+                ctx.blocked_gram_f32_into(&a, &mut gn, m, k, nt);
+                assert!(
+                    g1.iter().zip(&gn).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} f32 gram not bit-stable at nt={nt}",
+                    ctx.kernel_name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_public_entry_points_route_both_paths() {
+        let mut rng = Rng::seed_from(30);
+        let ctx = KernelCtx::current();
+        // Small: naive path. Large: blocked path. Both must agree with
+        // an explicit naive run.
+        for &(m, k, n) in &[(6, 4, 5), (48, 64, 48)] {
+            let a = rand_vec_f32(&mut rng, m * k);
+            let b = rand_vec_f32(&mut rng, k * n);
+            let mut c = vec![0.0f32; m * n];
+            ctx.matmul_f32_into(&a, &b, &mut c, m, k, n);
+            let mut reference = vec![0.0f32; m * n];
+            naive_matmul_f32_into(&a, &b, &mut reference, m, k, n);
+            assert!(max_abs_diff_f32(&c, &reference) < 1e-3, "({m},{k},{n})");
+        }
+        for &(m, k) in &[(6, 4), (72, 40)] {
+            let a = rand_vec_f32(&mut rng, m * k);
+            let mut g = vec![0.0f32; m * m];
+            ctx.gram_f32_into(&a, &mut g, m, k);
+            let mut reference = vec![0.0f32; m * m];
+            naive_gram_f32_into(&a, &mut reference, m, k);
+            assert!(max_abs_diff_f32(&g, &reference) < 1e-3, "({m},{k})");
+        }
     }
 }

@@ -289,6 +289,238 @@ unsafe fn fma_tile_6x8(ap: *const f64, bp: *const f64, kc: usize, acc: *mut f64)
 }
 
 // ---------------------------------------------------------------------------
+// f32 microkernels (the mixed-precision compute tier)
+// ---------------------------------------------------------------------------
+
+/// One register-tile inner loop of the blocked GEMM/Gram core in
+/// **f32** — the same packed-operand contract as [`MicroKernel`]
+/// (k-major `ap[kk·mr + i]` / `bp[kk·nr + j]`, zero-padded fringes,
+/// non-aliasing `acc`, deterministic accumulation order) at half the
+/// element width. SIMD tiles double their rows (8×8 where the f64
+/// kernels run 4×8/6×8) because one 256-bit lane now holds eight
+/// lanes. Per-kernel determinism carries over unchanged; cross-kernel
+/// bit-identity is *not* promised (tile shapes differ, so even the
+/// mul/add kernels see different `kc` blockings).
+pub trait MicroKernelF32: Send + Sync {
+    /// Kernel name for logs/metrics (`"scalar-f32"`, …).
+    fn name(&self) -> &'static str;
+    /// Register-tile rows.
+    fn mr(&self) -> usize;
+    /// Register-tile columns.
+    fn nr(&self) -> usize;
+    /// Accumulate one `mr×nr` tile over `kc` packed steps.
+    fn tile(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut [f32]);
+    /// The kernel's scalar model (see [`MicroKernel::tile_model`]);
+    /// FMA kernels override with the fused [`f32::mul_add`] loop.
+    fn tile_model(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut [f32]) {
+        scalar_tile_f32(self.mr(), self.nr(), false, ap, bp, kc, acc);
+    }
+}
+
+/// Generic f32 scalar tile loop — the rounding model shared by every
+/// f32 kernel (`fused` selects [`f32::mul_add`] per step).
+pub(crate) fn scalar_tile_f32(
+    mr: usize,
+    nr: usize,
+    fused: bool,
+    ap: &[f32],
+    bp: &[f32],
+    kc: usize,
+    acc: &mut [f32],
+) {
+    for kk in 0..kc {
+        let a = &ap[kk * mr..(kk + 1) * mr];
+        let b = &bp[kk * nr..(kk + 1) * nr];
+        for i in 0..mr {
+            let aik = a[i];
+            let row = &mut acc[i * nr..(i + 1) * nr];
+            if fused {
+                for j in 0..nr {
+                    row[j] = aik.mul_add(b[j], row[j]);
+                }
+            } else {
+                for j in 0..nr {
+                    row[j] += aik * b[j];
+                }
+            }
+        }
+    }
+}
+
+/// Autovectorized 4×8 f32 reference tile (always available).
+pub struct ScalarKernelF32;
+
+impl MicroKernelF32 for ScalarKernelF32 {
+    fn name(&self) -> &'static str {
+        "scalar-f32"
+    }
+
+    fn mr(&self) -> usize {
+        S_MR
+    }
+
+    fn nr(&self) -> usize {
+        S_NR
+    }
+
+    fn tile(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut [f32]) {
+        // Same load-acc-first chain as the f64 scalar kernel so the
+        // in-place model order is preserved exactly.
+        let mut c = [[0.0f32; S_NR]; S_MR];
+        for (i, ci) in c.iter_mut().enumerate() {
+            ci.copy_from_slice(&acc[i * S_NR..(i + 1) * S_NR]);
+        }
+        for (ak, bk) in
+            ap[..kc * S_MR].chunks_exact(S_MR).zip(bp[..kc * S_NR].chunks_exact(S_NR))
+        {
+            let ak: &[f32; S_MR] = ak.try_into().expect("tile width");
+            let bk: &[f32; S_NR] = bk.try_into().expect("panel width");
+            for i in 0..S_MR {
+                let aik = ak[i];
+                for j in 0..S_NR {
+                    c[i][j] += aik * bk[j];
+                }
+            }
+        }
+        for (i, ci) in c.iter().enumerate() {
+            acc[i * S_NR..(i + 1) * S_NR].copy_from_slice(ci);
+        }
+    }
+}
+
+/// Explicit AVX2 8×8 f32 tile (separate mul + add; bit-identical to
+/// [`ScalarKernelF32`]'s model at the same shape). Constructible only
+/// when `avx2` is detected.
+#[cfg(target_arch = "x86_64")]
+pub struct Avx2KernelF32;
+
+#[cfg(target_arch = "x86_64")]
+impl MicroKernelF32 for Avx2KernelF32 {
+    fn name(&self) -> &'static str {
+        "avx2-f32"
+    }
+
+    fn mr(&self) -> usize {
+        8
+    }
+
+    fn nr(&self) -> usize {
+        8
+    }
+
+    fn tile(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut [f32]) {
+        assert!(ap.len() >= kc * 8 && bp.len() >= kc * 8 && acc.len() >= 64);
+        // SAFETY: handed out only when `avx2` was detected; bounds just
+        // checked.
+        unsafe { avx2_tile_8x8_f32(ap.as_ptr(), bp.as_ptr(), kc, acc.as_mut_ptr()) }
+    }
+}
+
+/// 8×8 AVX2 f32 tile: eight single-ymm accumulator rows loaded from
+/// `acc` (the scalar model's in-place chain), one broadcast per row.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_tile_8x8_f32(ap: *const f32, bp: *const f32, kc: usize, acc: *mut f32) {
+    use std::arch::x86_64::*;
+    let mut c: [__m256; 8] = [_mm256_setzero_ps(); 8];
+    for (i, ci) in c.iter_mut().enumerate() {
+        *ci = _mm256_loadu_ps(acc.add(i * 8));
+    }
+    for kk in 0..kc {
+        let b = _mm256_loadu_ps(bp.add(kk * 8));
+        for (i, ci) in c.iter_mut().enumerate() {
+            let a = _mm256_set1_ps(*ap.add(kk * 8 + i));
+            *ci = _mm256_add_ps(*ci, _mm256_mul_ps(a, b));
+        }
+    }
+    for (i, ci) in c.iter().enumerate() {
+        _mm256_storeu_ps(acc.add(i * 8), *ci);
+    }
+}
+
+/// FMA 8×8 f32 tile (one fused rounding per step; bit-identical to its
+/// [`f32::mul_add`] model, not to the mul/add kernels). Constructible
+/// only when `avx2` **and** `fma` are detected.
+#[cfg(target_arch = "x86_64")]
+pub struct FmaKernelF32;
+
+#[cfg(target_arch = "x86_64")]
+impl MicroKernelF32 for FmaKernelF32 {
+    fn name(&self) -> &'static str {
+        "fma-f32"
+    }
+
+    fn mr(&self) -> usize {
+        8
+    }
+
+    fn nr(&self) -> usize {
+        8
+    }
+
+    fn tile(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut [f32]) {
+        assert!(ap.len() >= kc * 8 && bp.len() >= kc * 8 && acc.len() >= 64);
+        // SAFETY: handed out only when `avx2` and `fma` were detected;
+        // bounds just checked.
+        unsafe { fma_tile_8x8_f32(ap.as_ptr(), bp.as_ptr(), kc, acc.as_mut_ptr()) }
+    }
+
+    fn tile_model(&self, ap: &[f32], bp: &[f32], kc: usize, acc: &mut [f32]) {
+        scalar_tile_f32(8, 8, true, ap, bp, kc, acc);
+    }
+}
+
+/// 8×8 FMA f32 tile: eight accumulators + one B vector + one broadcast.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn fma_tile_8x8_f32(ap: *const f32, bp: *const f32, kc: usize, acc: *mut f32) {
+    use std::arch::x86_64::*;
+    let mut c: [__m256; 8] = [_mm256_setzero_ps(); 8];
+    for (i, ci) in c.iter_mut().enumerate() {
+        *ci = _mm256_loadu_ps(acc.add(i * 8));
+    }
+    for kk in 0..kc {
+        let b = _mm256_loadu_ps(bp.add(kk * 8));
+        for (i, ci) in c.iter_mut().enumerate() {
+            let a = _mm256_set1_ps(*ap.add(kk * 8 + i));
+            *ci = _mm256_fmadd_ps(a, b, *ci);
+        }
+    }
+    for (i, ci) in c.iter().enumerate() {
+        _mm256_storeu_ps(acc.add(i * 8), *ci);
+    }
+}
+
+static SCALAR_F32: ScalarKernelF32 = ScalarKernelF32;
+#[cfg(target_arch = "x86_64")]
+static AVX2_F32: Avx2KernelF32 = Avx2KernelF32;
+#[cfg(target_arch = "x86_64")]
+static FMA_F32: FmaKernelF32 = FmaKernelF32;
+
+/// Resolve a non-`Auto` choice to its f32 kernel. Availability mirrors
+/// the f64 tier exactly (same CPU-feature requirements), so a choice
+/// [`kernel_for`] accepts always has an f32 twin.
+pub(crate) fn kernel_f32_for(
+    choice: KernelChoice,
+) -> Result<&'static dyn MicroKernelF32, KernelError> {
+    // Reuse the f64 resolver for detection/error messages, then map to
+    // the same tier's f32 kernel.
+    kernel_for(choice)?;
+    match choice {
+        KernelChoice::Auto => {
+            unreachable!("Auto must be resolved by the caller (KernelCtx::for_choice)")
+        }
+        KernelChoice::Scalar => Ok(&SCALAR_F32),
+        #[cfg(target_arch = "x86_64")]
+        KernelChoice::Avx2 => Ok(&AVX2_F32),
+        #[cfg(target_arch = "x86_64")]
+        KernelChoice::Fma => Ok(&FMA_F32),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!("kernel_for rejects SIMD tiers off x86_64"),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Choice, detection, errors
 // ---------------------------------------------------------------------------
 
@@ -562,6 +794,40 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn every_enabled_f32_kernel_matches_its_model_bitwise() {
+        let mut rng = Rng::seed_from(93);
+        for &choice in &enabled_choices() {
+            let k = kernel_f32_for(choice).unwrap();
+            let (mr, nr) = (k.mr(), k.nr());
+            assert!(mr * nr <= MAX_TILE, "{} tile too large", k.name());
+            for kc in [1usize, 5, 64] {
+                let ap: Vec<f32> = (0..kc * mr).map(|_| rng.normal() as f32).collect();
+                let bp: Vec<f32> = (0..kc * nr).map(|_| rng.normal() as f32).collect();
+                let start: Vec<f32> = (0..mr * nr).map(|_| rng.normal() as f32).collect();
+                let mut a1 = start.clone();
+                let mut a2 = start.clone();
+                k.tile(&ap, &bp, kc, &mut a1);
+                k.tile_model(&ap, &bp, kc, &mut a2);
+                for (e, (x, y)) in a1.iter().zip(&a2).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{} kc={kc} elem={e}: {x} vs {y}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_kernel_availability_mirrors_f64() {
+        for c in [KernelChoice::Scalar, KernelChoice::Avx2, KernelChoice::Fma] {
+            assert_eq!(kernel_for(c).is_ok(), kernel_f32_for(c).is_ok(), "{c}");
         }
     }
 

@@ -1,0 +1,488 @@
+//! The f32 compute tier: packed single-precision storage and the
+//! fixed-order products the mixed-precision solver path rides.
+//!
+//! `MixedF32` (see [`crate::linalg::Precision`]) computes the
+//! bandwidth-bound panel products in `f32` — half the memory traffic,
+//! double the SIMD width — while residuals, recurrences, and
+//! convergence tests stay `f64` and an outer refinement loop restores
+//! the full `f64` tolerance. This module owns the storage side:
+//!
+//! - [`MatF32`] / [`MultiVecF32`] — f32 twins of `Mat`/`MultiVec`,
+//!   with GEMV products that *accumulate in f32 and widen to f64 at
+//!   the output boundary*, mirroring the f64 kernels' banding / fixed
+//!   chunk grids exactly so they inherit the crate's
+//!   bit-stable-across-threads contract.
+//! - [`DesignShadowF32`] — a one-time f32 shadow of a `Design`
+//!   (demoted dense matrix, or demoted values riding the parent CSR's
+//!   structure), built at prep time and cached on the prepared
+//!   problem.
+//!
+//! Like the f64 CG product path, the solver-facing products here are
+//! plain fixed-order loops, **not** microkernel calls — so the mixed
+//! path stays bit-stable across kernel choices as well as thread
+//! counts. The f32 *microkernels* (`MicroKernelF32` in `kernel.rs`)
+//! serve the blocked GEMM/Gram tier and the benches.
+
+use super::multivec::MultiVec;
+use super::{gemm, Design};
+use crate::util::parallel;
+
+/// Fixed row-chunk length for transpose-product reductions — the same
+/// constant the f64 kernels use, so chunk grids (and result bits) never
+/// depend on the worker count.
+const TCHUNK: usize = 512;
+
+/// f32 vector primitives mirroring `vecops` (same 4-lane accumulator
+/// split, so LLVM vectorizes them identically).
+pub mod vecops_f32 {
+    /// Dot product `xᵀy` in f32.
+    #[inline]
+    pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = [0.0f32; 4];
+        let chunks = x.len() / 4;
+        for i in 0..chunks {
+            let b = i * 4;
+            acc[0] += x[b] * y[b];
+            acc[1] += x[b + 1] * y[b + 1];
+            acc[2] += x[b + 2] * y[b + 2];
+            acc[3] += x[b + 3] * y[b + 3];
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for i in chunks * 4..x.len() {
+            s += x[i] * y[i];
+        }
+        s
+    }
+
+    /// `y ← y + a·x` in f32.
+    #[inline]
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x.iter()) {
+            *yi += a * xi;
+        }
+    }
+
+    /// Demote an f64 slice into a reusable f32 buffer.
+    #[inline]
+    pub fn demote(src: &[f64], dst: &mut Vec<f32>) {
+        dst.clear();
+        dst.extend(src.iter().map(|&v| v as f32));
+    }
+}
+
+/// Column-major f32 panel — the single-precision twin of
+/// [`MultiVec`].
+#[derive(Clone, Debug, Default)]
+pub struct MultiVecF32 {
+    rows: usize,
+    ncols: usize,
+    data: Vec<f32>,
+}
+
+impl MultiVecF32 {
+    /// Zero panel of shape `rows × ncols`.
+    pub fn zeros(rows: usize, ncols: usize) -> Self {
+        MultiVecF32 { rows, ncols, data: vec![0.0; rows * ncols] }
+    }
+
+    /// Demote an f64 panel.
+    pub fn from_multivec(m: &MultiVec) -> Self {
+        MultiVecF32 {
+            rows: m.rows(),
+            ncols: m.ncols(),
+            data: m.data().iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Column `j` as a contiguous slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+/// Dense row-major f32 matrix — the packed-storage twin of `Mat`,
+/// used as a one-time demoted shadow of solver operands.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MatF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatF32 {
+    /// Zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// One-time demotion of an f64 matrix (round-to-nearest per entry).
+    pub fn from_mat(m: &super::Mat) -> Self {
+        MatF32 {
+            rows: m.rows(),
+            cols: m.cols(),
+            data: m.data().iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        MatF32 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Storage footprint in bytes (the shadow-cache accounting unit).
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Immutable view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `y ← A·x` with f32 row dots, widened to f64 at the write. Bands
+    /// the output rows exactly like `Mat::matvec_into` (each `y[r]` is
+    /// one fixed-order row dot, so the result never depends on the
+    /// banding or the kernel choice).
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let nt = parallel::effective_threads();
+        if self.rows * self.cols < gemm::KernelCtx::current().blocking_f32().gemv_threshold
+            || nt == 1
+        {
+            for (r, yr) in y.iter_mut().enumerate() {
+                *yr = vecops_f32::dot(self.row(r), x) as f64;
+            }
+            return;
+        }
+        let band = self.rows.div_ceil(nt);
+        let chunks: Vec<&mut [f64]> = y.chunks_mut(band).collect();
+        parallel::parallel_items(nt, chunks, |tid, ych| {
+            let lo = tid * band;
+            for (i, yr) in ych.iter_mut().enumerate() {
+                *yr = vecops_f32::dot(self.row(lo + i), x) as f64;
+            }
+        });
+    }
+
+    /// `y ← Aᵀ·x` with f32 chunk partials, widened to f64 at the
+    /// chunk-order merge. Uses the same fixed [`TCHUNK`] grid as
+    /// `Mat::matvec_t_into`; the serial path runs the identical
+    /// one-chunk reduction, so bits match at any thread count.
+    pub fn matvec_t_into(&self, x: &[f32], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        if self.rows == 0 || self.cols == 0 {
+            return;
+        }
+        let nchunks = self.rows.div_ceil(TCHUNK);
+        let nt = parallel::effective_threads();
+        let mut partials = vec![0.0f32; nchunks * self.cols];
+        {
+            let chunks: Vec<&mut [f32]> = partials.chunks_mut(self.cols).collect();
+            parallel::parallel_items(nt, chunks, |ci, acc| {
+                let lo = ci * TCHUNK;
+                let hi = (lo + TCHUNK).min(self.rows);
+                for r in lo..hi {
+                    vecops_f32::axpy(x[r], self.row(r), acc);
+                }
+            });
+        }
+        for p in partials.chunks(self.cols) {
+            for (yc, &pc) in y.iter_mut().zip(p.iter()) {
+                *yc += pc as f64;
+            }
+        }
+    }
+
+    /// `Y ← A·X` for an f32 panel (all-f32 compute and output — the
+    /// bench-facing bandwidth shape). Column `j` is bit-identical to an
+    /// f32 row-dot pass at any thread count, mirroring
+    /// `Mat::matvec_multi_into`.
+    pub fn matvec_multi_into(&self, xs: &MultiVecF32, ys: &mut MultiVecF32) {
+        assert_eq!(xs.rows(), self.cols, "panel rows must match A cols");
+        assert_eq!(ys.rows(), self.rows, "output rows must match A rows");
+        assert_eq!(xs.ncols(), ys.ncols(), "panel widths must match");
+        let r = xs.ncols();
+        if r == 0 || self.rows == 0 {
+            return;
+        }
+        let nt = parallel::effective_threads();
+        if self.rows * self.cols < gemm::KernelCtx::current().blocking_f32().gemv_threshold
+            || nt == 1
+        {
+            for row in 0..self.rows {
+                let a = self.row(row);
+                for j in 0..r {
+                    ys.col_mut(j)[row] = vecops_f32::dot(a, xs.col(j));
+                }
+            }
+            return;
+        }
+        let band = self.rows.div_ceil(nt);
+        let nbands = self.rows.div_ceil(band);
+        let mut items: Vec<Vec<&mut [f32]>> =
+            (0..nbands).map(|_| Vec::with_capacity(r)).collect();
+        let rows = self.rows;
+        for col in ys.data_mut().chunks_mut(rows) {
+            for (b, piece) in col.chunks_mut(band).enumerate() {
+                items[b].push(piece);
+            }
+        }
+        parallel::parallel_items(nt, items, |b, mut cols| {
+            let lo = b * band;
+            let len = cols[0].len();
+            for i in 0..len {
+                let a = self.row(lo + i);
+                for (j, piece) in cols.iter_mut().enumerate() {
+                    piece[i] = vecops_f32::dot(a, xs.col(j));
+                }
+            }
+        });
+    }
+}
+
+/// One-time f32 shadow of a [`Design`]: a demoted dense matrix, or
+/// demoted CSR values riding the *parent's* index structure (no
+/// structural copy — the sparse products take both the shadow and the
+/// parent design, so the shadow never densifies or self-references).
+#[derive(Clone, Debug)]
+pub enum DesignShadowF32 {
+    /// Demoted dense design.
+    Dense(MatF32),
+    /// Demoted CSR values, positionally aligned with the parent
+    /// `Design::Sparse` CSR value array.
+    Sparse {
+        /// `vals[k] = parent.csr.values[k] as f32`.
+        vals: Vec<f32>,
+    },
+}
+
+impl DesignShadowF32 {
+    /// Demote a design once (the prep-time shadow build).
+    pub fn of(design: &Design) -> Self {
+        match design {
+            Design::Dense(m) => DesignShadowF32::Dense(MatF32::from_mat(m)),
+            Design::Sparse { csr, .. } => {
+                DesignShadowF32::Sparse { vals: csr.values_f32() }
+            }
+        }
+    }
+
+    /// Shadow storage footprint in bytes (metrics accounting).
+    pub fn bytes(&self) -> usize {
+        match self {
+            DesignShadowF32::Dense(m) => m.bytes(),
+            DesignShadowF32::Sparse { vals } => vals.len() * std::mem::size_of::<f32>(),
+        }
+    }
+
+    /// `y ← X·x` through the f32 shadow (`design` must be the parent
+    /// the shadow was built from — it carries the sparse structure).
+    pub fn matvec_into(&self, design: &Design, x: &[f32], y: &mut [f64]) {
+        match (self, design) {
+            (DesignShadowF32::Dense(m), _) => m.matvec_into(x, y),
+            (DesignShadowF32::Sparse { vals }, Design::Sparse { csr, .. }) => {
+                csr.matvec_f32_into(vals, x, y)
+            }
+            (DesignShadowF32::Sparse { .. }, Design::Dense(_)) => {
+                panic!("sparse shadow applied to a dense design")
+            }
+        }
+    }
+
+    /// `y ← Xᵀ·x` through the f32 shadow.
+    pub fn matvec_t_into(&self, design: &Design, x: &[f32], y: &mut [f64]) {
+        match (self, design) {
+            (DesignShadowF32::Dense(m), _) => m.matvec_t_into(x, y),
+            (DesignShadowF32::Sparse { vals }, Design::Sparse { csr, .. }) => {
+                csr.matvec_t_f32_into(vals, x, y)
+            }
+            (DesignShadowF32::Sparse { .. }, Design::Dense(_)) => {
+                panic!("sparse shadow applied to a dense design")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+    use crate::util::parallel::{with_parallelism, Parallelism};
+
+    fn randmat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn f32_matvec_close_to_f64() {
+        let mut rng = Rng::seed_from(11);
+        let a = randmat(&mut rng, 57, 33);
+        let a32 = MatF32::from_mat(&a);
+        let x: Vec<f64> = (0..33).map(|_| rng.normal()).collect();
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let y64 = a.matvec(&x);
+        let mut y = vec![0.0; 57];
+        a32.matvec_into(&x32, &mut y);
+        for (a, b) in y.iter().zip(&y64) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn f32_matvec_t_bit_stable_across_threads() {
+        let mut rng = Rng::seed_from(12);
+        // Tall enough for several TCHUNK chunks.
+        let a = randmat(&mut rng, 1100, 19);
+        let a32 = MatF32::from_mat(&a);
+        let x32: Vec<f32> = (0..1100).map(|_| rng.normal() as f32).collect();
+        let run = |par: Parallelism| {
+            with_parallelism(par, || {
+                let mut y = vec![0.0; 19];
+                a32.matvec_t_into(&x32, &mut y);
+                y
+            })
+        };
+        let serial = run(Parallelism::None);
+        for nt in [2usize, 5, 8] {
+            let par = run(Parallelism::Fixed(nt));
+            for (s, p) in serial.iter().zip(&par) {
+                assert_eq!(s.to_bits(), p.to_bits(), "nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_multi_matches_single_rhs_bits() {
+        let mut rng = Rng::seed_from(13);
+        let a = randmat(&mut rng, 64, 40);
+        let a32 = MatF32::from_mat(&a);
+        let mut xs = MultiVecF32::zeros(40, 3);
+        for j in 0..3 {
+            for v in xs.col_mut(j) {
+                *v = rng.normal() as f32;
+            }
+        }
+        let mut ys = MultiVecF32::zeros(64, 3);
+        a32.matvec_multi_into(&xs, &mut ys);
+        for j in 0..3 {
+            let mut solo = vec![0.0f64; 64];
+            a32.matvec_into(xs.col(j), &mut solo);
+            for (m, s) in ys.col(j).iter().zip(&solo) {
+                assert_eq!((*m as f64).to_bits(), s.to_bits(), "col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn shadow_roundtrip_dense_and_sparse() {
+        let mut rng = Rng::seed_from(14);
+        let m = Mat::from_fn(30, 12, |r, c| {
+            if (r + c) % 5 == 0 {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let dense: Design = m.clone().into();
+        let sparse: Design = crate::linalg::Csr::from_dense(&m, 0.0).into();
+        let v: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let mut v32 = Vec::new();
+        vecops_f32::demote(&v, &mut v32);
+        let u: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let mut u32 = Vec::new();
+        vecops_f32::demote(&u, &mut u32);
+
+        for d in [&dense, &sparse] {
+            let sh = DesignShadowF32::of(d);
+            assert!(sh.bytes() > 0);
+            let mut y = vec![0.0; 30];
+            sh.matvec_into(d, &v32, &mut y);
+            let y64 = d.matvec(&v);
+            for (a, b) in y.iter().zip(&y64) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()));
+            }
+            let mut z = vec![0.0; 12];
+            sh.matvec_t_into(d, &u32, &mut z);
+            let z64 = d.matvec_t(&u);
+            for (a, b) in z.iter().zip(&z64) {
+                assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_shadows_agree() {
+        // The same underlying data through both storage kinds: results
+        // won't be bit-identical (different reduction orders) but must
+        // agree to f32 accuracy.
+        let mut rng = Rng::seed_from(15);
+        let m = Mat::from_fn(25, 10, |_, _| rng.normal());
+        let dense: Design = m.clone().into();
+        let sparse: Design = crate::linalg::Csr::from_dense(&m, 0.0).into();
+        let v32: Vec<f32> = (0..10).map(|_| rng.normal() as f32).collect();
+        let (shd, shs) = (DesignShadowF32::of(&dense), DesignShadowF32::of(&sparse));
+        let mut yd = vec![0.0; 25];
+        let mut ys = vec![0.0; 25];
+        shd.matvec_into(&dense, &v32, &mut yd);
+        shs.matvec_into(&sparse, &v32, &mut ys);
+        for (a, b) in yd.iter().zip(&ys) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()));
+        }
+    }
+}

@@ -27,9 +27,15 @@
 //! thread counts (different kernels may round differently — FMA fuses —
 //! which is why forcing one is first-class).
 //!
-//! All solver numerics are `f64`; the XLA exchange path converts to `f32`
-//! at the runtime boundary (matching the paper's single-precision GPU
-//! arithmetic).
+//! Reference numerics are `f64`. An optional mixed-precision tier
+//! ([`lowp`], selected via [`Precision`] / `PALLAS_PRECISION` /
+//! [`with_precision`]) runs the bandwidth-bound panel products in `f32`
+//! — packed [`MatF32`] storage, f32 microkernels behind the same
+//! [`KernelCtx`] dispatch — while residuals, recurrences, and
+//! convergence tests stay in `f64`, and an outer iterative-refinement
+//! loop ([`cg::cg_solve_refined`]) restores full-precision solutions.
+//! The XLA exchange path converts to `f32` at the runtime boundary
+//! (matching the paper's single-precision GPU arithmetic).
 
 mod cache;
 pub mod cg;
@@ -38,19 +44,26 @@ pub mod dense;
 pub mod design;
 pub(crate) mod gemm;
 mod kernel;
+pub mod lowp;
 pub mod multivec;
+mod precision;
 pub mod sparse;
 pub mod vecops;
 
 pub use cache::{Blocking, CacheGeometry};
 pub use cg::{
-    cg_solve, cg_solve_multi, cg_solve_multi_with, cg_solve_with, CgMultiOutcome, CgOptions,
-    CgOutcome, CgScratch, LinOp, MultiCol, MultiLinOp,
+    cg_solve, cg_solve_multi, cg_solve_multi_with, cg_solve_refined, cg_solve_with,
+    CgMultiOutcome, CgOptions, CgOutcome, CgScratch, LinOp, MultiCol, MultiLinOp, RefineOutcome,
 };
 pub use cholesky::Cholesky;
 pub use dense::Mat;
 pub use design::{AsDesign, Design, DesignCols};
 pub use gemm::{set_global_kernel, with_kernel_choice, KernelCtx};
 pub use kernel::{best_available, enabled_choices, KernelChoice, KernelError, MicroKernel};
+pub use lowp::{DesignShadowF32, MatF32, MultiVecF32};
 pub use multivec::MultiVec;
+pub use precision::{
+    resolve_precision, resolved_precision, set_global_precision, try_resolve_precision,
+    with_precision, Precision, PrecisionError,
+};
 pub use sparse::{Csc, Csr};

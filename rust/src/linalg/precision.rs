@@ -1,0 +1,225 @@
+//! The compute-precision knob and its forcing chain.
+//!
+//! Mirrors the kernel-forcing machinery in `gemm.rs`: a [`Precision`]
+//! can be forced per-call ([`with_precision`]), per-process
+//! ([`set_global_precision`], where the CLI `--precision` flag lands),
+//! or from the `PALLAS_PRECISION` environment variable
+//! (`f64 | mixed-f32 | auto`). An invalid env value is a **hard error**
+//! surfaced on first resolution — never a silent fallback — exactly
+//! like `PALLAS_KERNEL`.
+//!
+//! `F64` is the classic all-double path. `MixedF32` computes the
+//! bandwidth-bound panel products (the primal Newton-CG Hessian
+//! applies) in `f32` from one-time shadow copies of the design, and
+//! recovers the full `f64` CG tolerance with iterative refinement on
+//! the Newton direction (see [`crate::linalg::cg::cg_solve_refined`]).
+//! The refined solution meets the same acceptance bars as `F64`; the
+//! per-precision results are *not* bit-identical to each other, but
+//! each precision keeps the crate's bit-stable-across-threads contract.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Which arithmetic tier the solver hot loops should use.
+///
+/// `Auto` resolves from the `PALLAS_PRECISION` environment variable when
+/// set, else to [`Precision::F64`]. Resolution happens at prep time
+/// (`RustBackend::prepare`), so a prepared problem is pinned to one
+/// tier and the service prep cache keys on it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// `PALLAS_PRECISION` if set, else `F64`.
+    #[default]
+    Auto,
+    /// All-f64 arithmetic (the historical path).
+    F64,
+    /// f32 panel products + f64 iterative refinement on the Newton
+    /// direction. Applies to the primal regime; the dual active-set
+    /// Newton (direct Cholesky) stays f64 under this setting.
+    MixedF32,
+}
+
+impl Precision {
+    /// Parse a `PALLAS_PRECISION` / CLI value.
+    pub fn parse(s: &str) -> Result<Self, PrecisionError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(Precision::Auto),
+            "f64" | "double" => Ok(Precision::F64),
+            "mixed-f32" | "mixed_f32" | "mixedf32" | "f32" => Ok(Precision::MixedF32),
+            other => Err(PrecisionError(format!(
+                "unknown precision {other:?} (expected f64 | mixed-f32 | auto)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Precision::Auto => "auto",
+            Precision::F64 => "f64",
+            Precision::MixedF32 => "mixed-f32",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A precision was forced (`PALLAS_PRECISION`, `SvenConfig::precision`,
+/// CLI `--precision`) that does not name a supported tier.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrecisionError(pub(crate) String);
+
+impl fmt::Display for PrecisionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "precision dispatch: {}", self.0)
+    }
+}
+
+impl std::error::Error for PrecisionError {}
+
+/// Process-wide setting: 0 = Auto (fall through to env), else encoded.
+static GLOBAL_PRECISION: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override installed by [`with_precision`]; takes
+    /// precedence over the global setting on the installing thread.
+    static PRECISION_OVERRIDE: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+fn encode(p: Precision) -> usize {
+    match p {
+        Precision::Auto => 0,
+        Precision::F64 => 1,
+        Precision::MixedF32 => 2,
+    }
+}
+
+fn decode(enc: usize) -> Option<Precision> {
+    match enc {
+        1 => Some(Precision::F64),
+        2 => Some(Precision::MixedF32),
+        _ => None,
+    }
+}
+
+/// `PALLAS_PRECISION`, parsed once. An invalid value is a hard error
+/// (surfaced by [`resolved_precision`] / config validation), mirroring
+/// `PALLAS_KERNEL`.
+fn env_precision() -> Result<Option<Precision>, PrecisionError> {
+    static ENV: OnceLock<Result<Option<Precision>, PrecisionError>> = OnceLock::new();
+    ENV.get_or_init(|| match std::env::var("PALLAS_PRECISION") {
+        Ok(s) => Precision::parse(&s).map(|p| match p {
+            Precision::Auto => None,
+            forced => Some(forced),
+        }),
+        Err(_) => Ok(None),
+    })
+    .clone()
+}
+
+/// Set the process-wide default (the CLI `--precision` flag lands here).
+/// `Auto` clears the forcing.
+pub fn set_global_precision(p: Precision) {
+    GLOBAL_PRECISION.store(encode(p), Ordering::Relaxed);
+}
+
+/// Run `f` with `p` as the effective precision on this thread. `Auto`
+/// installs nothing and inherits the enclosing scope, exactly like
+/// [`crate::util::parallel::with_parallelism`].
+pub fn with_precision<T>(p: Precision, f: impl FnOnce() -> T) -> T {
+    if matches!(p, Precision::Auto) {
+        return f();
+    }
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            PRECISION_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = PRECISION_OVERRIDE.with(|c| {
+        let prev = c.get();
+        c.set(encode(p));
+        prev
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Resolve `Auto` through the forcing chain: thread-local override →
+/// global setting → `PALLAS_PRECISION` → `F64`. A non-`Auto` input is
+/// returned unchanged (explicit config wins over every ambient source).
+///
+/// # Panics
+///
+/// Panics when `PALLAS_PRECISION` holds an unparseable value and the
+/// chain reaches it — same hard-error contract as `PALLAS_KERNEL`
+/// (config validation paths can pre-check with [`try_resolve_precision`]).
+pub fn resolve_precision(p: Precision) -> Precision {
+    try_resolve_precision(p)
+        .unwrap_or_else(|e| panic!("{e} (fix PALLAS_PRECISION: f64 | mixed-f32 | auto)"))
+}
+
+/// Non-panicking twin of [`resolve_precision`] for config validation.
+pub fn try_resolve_precision(p: Precision) -> Result<Precision, PrecisionError> {
+    if !matches!(p, Precision::Auto) {
+        return Ok(p);
+    }
+    let tls = PRECISION_OVERRIDE.with(|c| c.get());
+    if let Some(p) = decode(tls) {
+        return Ok(p);
+    }
+    if let Some(p) = decode(GLOBAL_PRECISION.load(Ordering::Relaxed)) {
+        return Ok(p);
+    }
+    Ok(env_precision()?.unwrap_or(Precision::F64))
+}
+
+/// The effective ambient precision right now (`Auto` fully resolved).
+pub fn resolved_precision() -> Precision {
+    resolve_precision(Precision::Auto)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for p in [Precision::Auto, Precision::F64, Precision::MixedF32] {
+            assert_eq!(Precision::parse(&p.to_string()).unwrap(), p);
+        }
+        assert_eq!(Precision::parse(" MIXED-F32 "), Ok(Precision::MixedF32));
+        assert_eq!(Precision::parse("mixed_f32"), Ok(Precision::MixedF32));
+        assert_eq!(Precision::parse("double"), Ok(Precision::F64));
+        let e = Precision::parse("f16").unwrap_err();
+        assert!(e.to_string().contains("f16"));
+        assert!(Precision::parse("").is_err());
+    }
+
+    #[test]
+    fn with_precision_scopes_and_restores() {
+        // Note: the ambient default depends on PALLAS_PRECISION in the
+        // test environment (the CI mixed-f32 leg sets it), so only the
+        // scoped values are asserted exactly.
+        let before = resolved_precision();
+        let inside = with_precision(Precision::MixedF32, resolved_precision);
+        assert_eq!(inside, Precision::MixedF32);
+        assert_eq!(resolved_precision(), before);
+        let forced = with_precision(Precision::F64, resolved_precision);
+        assert_eq!(forced, Precision::F64);
+        // Auto inherits the enclosing scope instead of clobbering it.
+        let nested = with_precision(Precision::F64, || {
+            with_precision(Precision::Auto, resolved_precision)
+        });
+        assert_eq!(nested, Precision::F64);
+    }
+
+    #[test]
+    fn explicit_choice_wins_over_ambient() {
+        let inside = with_precision(Precision::MixedF32, || {
+            resolve_precision(Precision::F64)
+        });
+        assert_eq!(inside, Precision::F64);
+    }
+}

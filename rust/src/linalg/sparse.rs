@@ -245,6 +245,116 @@ impl Csr {
         }
     }
 
+    /// Demoted copy of the value array, positionally aligned with the
+    /// CSR structure — the sparse half of a
+    /// [`DesignShadowF32`](super::lowp::DesignShadowF32) (the indices
+    /// are shared with the parent, so the shadow costs nnz·4 bytes).
+    pub fn values_f32(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Scale every stored value by a per-column factor:
+    /// `A[:, j] *= factor[j]`.
+    ///
+    /// The structure (`indptr`/`indices`) is untouched — a zero factor
+    /// leaves the entry stored with value `0.0` rather than dropping it,
+    /// so `nnz` is invariant. This is the fill-in-free half of sparse
+    /// standardization (`crate::data::standardize::standardize_design`):
+    /// centering is *tracked* by the caller, scaling is applied here.
+    pub fn scale_cols(&mut self, factor: &[f64]) {
+        assert_eq!(factor.len(), self.cols, "one factor per column");
+        for (c, v) in self.indices.iter().zip(self.values.iter_mut()) {
+            *v *= factor[*c];
+        }
+    }
+
+    /// `y ← A·x` with f32 arithmetic over a demoted value array
+    /// (`vals32 = self.values_f32()`), widened to f64 at the write.
+    /// Same banding and gates as [`Csr::matvec_into`]; each output is
+    /// one fixed-order sparse row dot, so results are bit-stable across
+    /// thread counts.
+    pub fn matvec_f32_into(&self, vals32: &[f32], x: &[f32], y: &mut [f64]) {
+        assert_eq!(vals32.len(), self.nnz(), "shadow/value length mismatch");
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let row_dot = |r: usize| -> f32 {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            let mut s = 0.0f32;
+            for (c, v) in self.indices[lo..hi].iter().zip(&vals32[lo..hi]) {
+                s += v * x[*c];
+            }
+            s
+        };
+        let nt = parallel::effective_threads();
+        if self.nnz() < PAR_NNZ || nt <= 1 || self.rows <= 1 {
+            for (r, yr) in y.iter_mut().enumerate() {
+                *yr = row_dot(r) as f64;
+            }
+            return;
+        }
+        let band = self.rows.div_ceil(nt);
+        let chunks: Vec<&mut [f64]> = y.chunks_mut(band).collect();
+        parallel::parallel_items(nt, chunks, |tid, ych| {
+            let lo = tid * band;
+            for (i, yr) in ych.iter_mut().enumerate() {
+                *yr = row_dot(lo + i) as f64;
+            }
+        });
+    }
+
+    /// `y ← Aᵀ·x` with f32 scatter arithmetic over a demoted value
+    /// array, widened to f64 at the chunk-order merge. Same
+    /// shape-derived chunk grid as [`Csr::matvec_t_into`] (the serial
+    /// gate runs the identical one-chunk f32 reduction), so bits never
+    /// depend on the worker count.
+    pub fn matvec_t_f32_into(&self, vals32: &[f32], x: &[f32], y: &mut [f64]) {
+        assert_eq!(vals32.len(), self.nnz(), "shadow/value length mismatch");
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        if self.rows == 0 || self.cols == 0 {
+            return;
+        }
+        let scatter = |lo: usize, hi: usize, acc: &mut [f32]| {
+            for r in lo..hi {
+                let xr = x[r];
+                if xr == 0.0 {
+                    continue;
+                }
+                let (plo, phi) = (self.indptr[r], self.indptr[r + 1]);
+                for (c, v) in self.indices[plo..phi].iter().zip(&vals32[plo..phi]) {
+                    acc[*c] += v * xr;
+                }
+            }
+        };
+        let tchunk = self.rows.div_ceil(reduction_chunks(self.rows, self.cols, self.nnz()));
+        let nchunks = self.rows.div_ceil(tchunk);
+        if nchunks == 1 || self.nnz() < PAR_NNZ {
+            let mut acc = vec![0.0f32; self.cols];
+            scatter(0, self.rows, &mut acc);
+            for (yc, &pc) in y.iter_mut().zip(&acc) {
+                *yc = pc as f64;
+            }
+            return;
+        }
+        let nt = parallel::effective_threads();
+        let mut partials = vec![0.0f32; nchunks * self.cols];
+        {
+            let chunks: Vec<&mut [f32]> = partials.chunks_mut(self.cols).collect();
+            parallel::parallel_items(nt, chunks, |ci, acc| {
+                let lo = ci * tchunk;
+                let hi = (lo + tchunk).min(self.rows);
+                scatter(lo, hi, acc);
+            });
+        }
+        for p in partials.chunks(self.cols) {
+            for (yc, &pc) in y.iter_mut().zip(p.iter()) {
+                *yc += pc as f64;
+            }
+        }
+    }
+
     /// Squared L2 norm of each column (CD Lipschitz constants), reduced
     /// over the same shape-derived chunk scheme as [`Csr::matvec_t_into`].
     pub fn col_norms_sq(&self) -> Vec<f64> {

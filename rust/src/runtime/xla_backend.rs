@@ -171,6 +171,7 @@ impl SvmPrep for PreparedXlaPrimal {
             iters,
             cg_iters: 0,
             gather_rebuilds: 0,
+            refine_passes: 0,
         })
     }
 
@@ -231,6 +232,7 @@ impl SvmPrep for PreparedXlaDual {
             iters,
             cg_iters: 0,
             gather_rebuilds: 0,
+            refine_passes: 0,
         })
     }
 

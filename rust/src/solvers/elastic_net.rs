@@ -172,6 +172,10 @@ pub struct EnSolution {
     /// 0 otherwise) — feeds the coordinator's `sv_gather_rebuilds`
     /// metric.
     pub gather_rebuilds: usize,
+    /// Outer iterative-refinement passes of a mixed-precision solve
+    /// (0 ⇒ pure f64) — feeds the coordinator's `refine_iters_total`
+    /// metric.
+    pub refine_passes: usize,
     /// Wall-clock seconds of the solve proper (excludes data generation).
     pub seconds: f64,
     /// Degeneracy flag, if the reduction hit one.

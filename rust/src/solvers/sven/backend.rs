@@ -19,7 +19,7 @@
 //! - [`SvmScratch`] — the small mutable half (the assembled dual gram
 //!   `K(t)` buffer), owned per calling thread and passed into each solve.
 
-use crate::linalg::{vecops, Design, Mat};
+use crate::linalg::{resolved_precision, vecops, Design, DesignShadowF32, Mat, Precision};
 use crate::solvers::svm::{
     dual_newton, primal_newton, primal_newton_batch, samples::reduction_gram,
     samples::reduction_labels, DualOptions, PrimalBatchPoint, PrimalBatchStats, PrimalOptions,
@@ -81,6 +81,9 @@ pub struct SvmSolve {
     pub cg_iters: usize,
     /// Active-set panel rebuilds (primal shrinking Newton; 0 otherwise).
     pub gather_rebuilds: usize,
+    /// Outer iterative-refinement passes across the solve's Newton
+    /// systems (0 ⇒ the solve ran in pure f64).
+    pub refine_passes: usize,
 }
 
 /// Per-solve mutable workspace. Everything a solve mutates lives here —
@@ -154,6 +157,12 @@ pub trait SvmPrep: Send + Sync {
         }
         Ok((out, SvmBatchStats::default()))
     }
+    /// Bytes held by the preparation's one-time f32 design shadow
+    /// (0 when the prep runs in pure f64). Lets the coordinator meter
+    /// mixed-precision memory alongside its solve counters.
+    fn f32_shadow_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// An SVM solving engine SVEN can drive.
@@ -196,12 +205,24 @@ impl SvmBackend for RustBackend {
         mode: SvmMode,
     ) -> anyhow::Result<Arc<dyn SvmPrep>> {
         let (n, p) = (x.rows(), x.cols());
+        // Precision is resolved here, at prep time, so a preparation is
+        // immutably pinned to one tier: service-level prep caches key on
+        // the resolved precision and a cached prep can never flip tier
+        // mid-path. The dual backend currently ignores `MixedF32` and
+        // stays f64 (see ROADMAP: f32 Cholesky / dual tier follow-on).
         match mode.resolve(n, p) {
-            SvmMode::Primal => Ok(Arc::new(PreparedPrimal {
-                opts: self.primal.clone(),
-                x: x.clone(),
-                y: y.clone(),
-            })),
+            SvmMode::Primal => {
+                let shadow = match resolved_precision() {
+                    Precision::MixedF32 => Some(DesignShadowF32::of(x.as_ref())),
+                    _ => None,
+                };
+                Ok(Arc::new(PreparedPrimal {
+                    opts: self.primal.clone(),
+                    x: x.clone(),
+                    y: y.clone(),
+                    shadow,
+                }))
+            }
             SvmMode::Dual => Ok(Arc::new(PreparedDual {
                 opts: self.dual.clone(),
                 // t-independent gram pieces, computed once: dense designs
@@ -222,6 +243,11 @@ struct PreparedPrimal {
     opts: PrimalOptions,
     x: Arc<Design>,
     y: Arc<Vec<f64>>,
+    /// One-time f32 copy of the design, built at prep time when the
+    /// resolved precision is `MixedF32`. Its presence is the sole mixed
+    /// signal downstream: solves construct [`ReducedSamples::with_shadow`]
+    /// when it is `Some` and pure-f64 samples otherwise.
+    shadow: Option<DesignShadowF32>,
 }
 
 impl SvmPrep for PreparedPrimal {
@@ -232,7 +258,10 @@ impl SvmPrep for PreparedPrimal {
         warm: Option<&SvmWarm>,
         _scratch: &mut SvmScratch,
     ) -> anyhow::Result<SvmSolve> {
-        let samples = ReducedSamples { x: self.x.as_ref(), y: self.y.as_slice(), t };
+        let samples = match &self.shadow {
+            Some(sh) => ReducedSamples::with_shadow(self.x.as_ref(), self.y.as_slice(), t, sh),
+            None => ReducedSamples::new(self.x.as_ref(), self.y.as_slice(), t),
+        };
         let labels = reduction_labels(self.x.cols());
         let w0 = warm.and_then(|w| w.w.as_deref());
         let r = primal_newton(&samples, &labels, c, &self.opts, w0);
@@ -242,6 +271,7 @@ impl SvmPrep for PreparedPrimal {
             iters: r.newton_iters,
             cg_iters: r.cg_iters_total,
             gather_rebuilds: r.gather_rebuilds,
+            refine_passes: r.refine_passes_total,
         })
     }
 
@@ -266,8 +296,13 @@ impl SvmPrep for PreparedPrimal {
     ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
         let points: Vec<PrimalBatchPoint> =
             pts.iter().map(|&(t, c)| PrimalBatchPoint { t, c, w0: None }).collect();
-        let (results, stats) =
-            primal_newton_batch(self.x.as_ref(), self.y.as_slice(), &points, &self.opts);
+        let (results, stats) = primal_newton_batch(
+            self.x.as_ref(),
+            self.y.as_slice(),
+            &points,
+            &self.opts,
+            self.shadow.as_ref(),
+        );
         let sols = results
             .into_iter()
             .map(|r| SvmSolve {
@@ -276,9 +311,14 @@ impl SvmPrep for PreparedPrimal {
                 iters: r.newton_iters,
                 cg_iters: r.cg_iters_total,
                 gather_rebuilds: r.gather_rebuilds,
+                refine_passes: r.refine_passes_total,
             })
             .collect();
         Ok((sols, stats))
+    }
+
+    fn f32_shadow_bytes(&self) -> usize {
+        self.shadow.as_ref().map_or(0, |s| s.bytes())
     }
 }
 
@@ -321,7 +361,7 @@ impl SvmPrep for PreparedDual {
         let r = dual_newton(k, c, &self.opts, warm_alpha);
         // w = Ẑα is cheap and useful for warm starts: Ẑ = [X̂₁, −X̂₂]
         let p = self.x.cols();
-        let samples = ReducedSamples { x: self.x.as_ref(), y: self.y.as_slice(), t };
+        let samples = ReducedSamples::new(self.x.as_ref(), self.y.as_slice(), t);
         let mut signed = r.alpha.clone();
         for v in signed[p..].iter_mut() {
             *v = -*v;
@@ -334,6 +374,7 @@ impl SvmPrep for PreparedDual {
             iters: r.pivots,
             cg_iters: 0,
             gather_rebuilds: 0,
+            refine_passes: 0,
         })
     }
 
@@ -442,6 +483,47 @@ mod tests {
                     a[i],
                     b[i]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_precision_prep_matches_f64_prep() {
+        // A preparation resolved under MixedF32 must carry an f32 shadow,
+        // refine at least once, and land within solver tolerance of the
+        // pure-f64 preparation — for both solo and batched entry points.
+        let mut rng = Rng::seed_from(165);
+        let x: Arc<Design> = Arc::new(Mat::from_fn(14, 11, |_, _| rng.normal()).into());
+        let y = Arc::new((0..14).map(|_| rng.normal()).collect::<Vec<f64>>());
+        let backend = RustBackend::default();
+        let mut scratch = SvmScratch::new();
+        let f64_prep = crate::linalg::with_precision(crate::linalg::Precision::F64, || {
+            backend.prepare(&x, &y, SvmMode::Primal).unwrap()
+        });
+        let mix_prep =
+            crate::linalg::with_precision(crate::linalg::Precision::MixedF32, || {
+                backend.prepare(&x, &y, SvmMode::Primal).unwrap()
+            });
+        assert_eq!(f64_prep.f32_shadow_bytes(), 0);
+        assert!(mix_prep.f32_shadow_bytes() > 0, "mixed prep holds no shadow");
+        let (t, c) = (0.7, 4.0);
+        let a = f64_prep.solve(t, c, None, &mut scratch).unwrap();
+        let b = mix_prep.solve(t, c, None, &mut scratch).unwrap();
+        assert_eq!(a.refine_passes, 0);
+        assert!(b.refine_passes > 0, "mixed solve never refined");
+        let wa = a.w.as_ref().unwrap();
+        let wb = b.w.as_ref().unwrap();
+        for i in 0..wa.len() {
+            assert!((wa[i] - wb[i]).abs() < 1e-6, "i={i}: {} vs {}", wa[i], wb[i]);
+        }
+        let pts = [(0.5, 3.0), (0.7, 4.0)];
+        let (bs, _) = mix_prep.solve_batch(&pts, &mut scratch).unwrap();
+        let (fs, _) = f64_prep.solve_batch(&pts, &mut scratch).unwrap();
+        for (sb, sf) in bs.iter().zip(&fs) {
+            assert!(sb.refine_passes > 0);
+            let (wb, wf) = (sb.w.as_ref().unwrap(), sf.w.as_ref().unwrap());
+            for i in 0..wf.len() {
+                assert!((wb[i] - wf[i]).abs() < 1e-6, "batch i={i}");
             }
         }
     }

@@ -24,7 +24,9 @@ pub use backend::{
 };
 pub use reduction::{backmap, effective_c, MIN_ALPHA_SUM};
 
-use crate::linalg::{with_kernel_choice, AsDesign, Design, KernelChoice};
+use crate::linalg::{
+    with_kernel_choice, with_precision, AsDesign, Design, KernelChoice, Precision,
+};
 use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
 use crate::util::parallel::{with_parallelism, Parallelism};
 use crate::util::Timer;
@@ -55,6 +57,15 @@ pub struct SvenConfig {
     /// is exactly why it is a first-class setting; forcing a kernel the
     /// CPU cannot run fails the solve with a clear error.
     pub kernel: KernelChoice,
+    /// Compute-precision policy for the primal Newton's panel products
+    /// (third knob next to `parallelism` and `kernel`): `F64` is the
+    /// reference tier, `MixedF32` streams the bandwidth-bound panels in
+    /// f32 with an f64 iterative-refinement loop restoring the full
+    /// CG tolerance, and `Auto` defers to the process default /
+    /// `PALLAS_PRECISION`. Resolved once at prep time — a preparation is
+    /// pinned to its tier. The dual backend ignores `MixedF32` for now
+    /// (f64 Cholesky; see ROADMAP).
+    pub precision: Precision,
 }
 
 impl Default for SvenConfig {
@@ -64,6 +75,7 @@ impl Default for SvenConfig {
             c_cap: 1e6,
             parallelism: Parallelism::Auto,
             kernel: KernelChoice::Auto,
+            precision: Precision::Auto,
         }
     }
 }
@@ -83,11 +95,14 @@ impl<B: SvmBackend> Sven<B> {
         Sven { backend, config }
     }
 
-    /// Run `f` under this config's kernel + parallelism scopes (an
-    /// unsupported forced kernel surfaces here, before any work runs).
+    /// Run `f` under this config's kernel + precision + parallelism
+    /// scopes (an unsupported forced kernel surfaces here, before any
+    /// work runs).
     fn scoped<T>(&self, f: impl FnOnce() -> anyhow::Result<T>) -> anyhow::Result<T> {
         match with_kernel_choice(self.config.kernel, || {
-            with_parallelism(self.config.parallelism, f)
+            with_precision(self.config.precision, || {
+                with_parallelism(self.config.parallelism, f)
+            })
         }) {
             Ok(res) => res,
             Err(e) => Err(anyhow::Error::from(e)),
@@ -128,6 +143,7 @@ impl<B: SvmBackend> Sven<B> {
             iterations: solve.iters,
             cg_iters: solve.cg_iters,
             gather_rebuilds: solve.gather_rebuilds,
+            refine_passes: solve.refine_passes,
             seconds,
             degenerate,
         })
@@ -171,6 +187,7 @@ impl<B: SvmBackend> Sven<B> {
                 iterations: solve.iters,
                 cg_iters: solve.cg_iters,
                 gather_rebuilds: solve.gather_rebuilds,
+                refine_passes: solve.refine_passes,
                 seconds: per_point,
                 degenerate,
             });

@@ -32,8 +32,8 @@ use super::samples::{
     SampleSet,
 };
 use crate::linalg::{
-    cg_solve_multi_with, cg_solve_with, vecops, CgOptions, CgScratch, Design, LinOp, MultiLinOp,
-    MultiVec,
+    cg_solve_multi_with, cg_solve_refined, cg_solve_with, vecops, CgOptions, CgScratch, Design,
+    DesignShadowF32, LinOp, MultiLinOp, MultiVec,
 };
 use std::cell::RefCell;
 
@@ -78,6 +78,9 @@ pub struct PrimalResult {
     /// How many times the SV rows were gathered into the compact panel
     /// (0 ⇒ the solve ran entirely on masked full-matrix products).
     pub gather_rebuilds: usize,
+    /// Outer iterative-refinement passes across all Newton systems
+    /// (0 ⇒ the solve ran in pure f64).
+    pub refine_passes_total: usize,
     pub converged: bool,
     /// Final objective value.
     pub objective: f64,
@@ -94,6 +97,11 @@ struct MaskedHess<'a, S: SampleSet> {
     sv_mask: &'a [f64], // 1.0 for support vectors, else 0.0
     two_c: f64,
     buf: &'a RefCell<Vec<f64>>,
+    /// Route the two sample products through the f32 hooks (the "fast"
+    /// operator of [`cg_solve_refined`]); the mask and the `v + 2C·…`
+    /// assembly stay f64 either way.
+    mixed: bool,
+    fbuf: &'a RefCell<Vec<f32>>,
 }
 
 impl<S: SampleSet> LinOp for MaskedHess<'_, S> {
@@ -104,11 +112,21 @@ impl<S: SampleSet> LinOp for MaskedHess<'_, S> {
     fn apply(&self, v: &[f64], out: &mut [f64]) {
         let mut xm = self.buf.borrow_mut();
         xm.resize(self.samples.m(), 0.0);
-        self.samples.matvec(v, &mut xm);
+        if self.mixed {
+            let mut fb = self.fbuf.borrow_mut();
+            self.samples.matvec_f32(v, &mut xm, &mut fb);
+        } else {
+            self.samples.matvec(v, &mut xm);
+        }
         for (o, m) in xm.iter_mut().zip(self.sv_mask.iter()) {
             *o *= m;
         }
-        self.samples.matvec_t(&xm, out);
+        if self.mixed {
+            let mut fb = self.fbuf.borrow_mut();
+            self.samples.matvec_t_f32(&xm, out, &mut fb);
+        } else {
+            self.samples.matvec_t(&xm, out);
+        }
         for i in 0..out.len() {
             out[i] = v[i] + self.two_c * out[i];
         }
@@ -124,6 +142,10 @@ struct GatheredHess<'a, S: SampleSet> {
     panel: &'a GatheredRows,
     two_c: f64,
     buf: &'a RefCell<Vec<f64>>,
+    /// Same fast/exact split as [`MaskedHess::mixed`], over the panel's
+    /// f32 shadow ([`GatheredRows::build_f32_shadow`]).
+    mixed: bool,
+    fbuf: &'a RefCell<Vec<f32>>,
 }
 
 impl<S: SampleSet> LinOp for GatheredHess<'_, S> {
@@ -134,11 +156,63 @@ impl<S: SampleSet> LinOp for GatheredHess<'_, S> {
     fn apply(&self, v: &[f64], out: &mut [f64]) {
         let mut gm = self.buf.borrow_mut();
         gm.resize(self.panel.m(), 0.0);
-        self.samples.gathered_matvec(self.panel, v, &mut gm);
-        self.samples.gathered_matvec_t(self.panel, &gm, out);
+        if self.mixed {
+            let mut fb = self.fbuf.borrow_mut();
+            self.samples.gathered_matvec_f32(self.panel, v, &mut gm, &mut fb);
+            self.samples.gathered_matvec_t_f32(self.panel, &gm, out, &mut fb);
+        } else {
+            self.samples.gathered_matvec(self.panel, v, &mut gm);
+            self.samples.gathered_matvec_t(self.panel, &gm, out);
+        }
         for i in 0..out.len() {
             out[i] = v[i] + self.two_c * out[i];
         }
+    }
+}
+
+/// Solve one Newton system `H·δ = rhs` through whichever operator form
+/// the caller picked (masked full-matrix or gathered panel), in pure
+/// f64 or — when `mixed` — with the f32 operator inside f64 iterative
+/// refinement ([`cg_solve_refined`]), which meets the same `cg.tol`
+/// contract. Returns `(cg_iters, refine_passes)`.
+#[allow(clippy::too_many_arguments)]
+fn solve_direction<S: SampleSet>(
+    samples: &S,
+    sv_mask: Option<&[f64]>,
+    panel: Option<&GatheredRows>,
+    two_c: f64,
+    mixed: bool,
+    rhs: &[f64],
+    delta: &mut [f64],
+    cg: &CgOptions,
+    scratch: &mut CgScratch,
+    buf: &RefCell<Vec<f64>>,
+    fbuf: &RefCell<Vec<f32>>,
+) -> (usize, usize) {
+    match (sv_mask, panel) {
+        (Some(mask), None) => {
+            let exact =
+                MaskedHess { samples, sv_mask: mask, two_c, buf, mixed: false, fbuf };
+            if mixed {
+                let fast =
+                    MaskedHess { samples, sv_mask: mask, two_c, buf, mixed: true, fbuf };
+                let out = cg_solve_refined(&exact, &fast, rhs, delta, cg, scratch);
+                (out.cg_iters, out.refine_passes)
+            } else {
+                (cg_solve_with(&exact, rhs, delta, cg, scratch).iters, 0)
+            }
+        }
+        (None, Some(panel)) => {
+            let exact = GatheredHess { samples, panel, two_c, buf, mixed: false, fbuf };
+            if mixed {
+                let fast = GatheredHess { samples, panel, two_c, buf, mixed: true, fbuf };
+                let out = cg_solve_refined(&exact, &fast, rhs, delta, cg, scratch);
+                (out.cg_iters, out.refine_passes)
+            } else {
+                (cg_solve_with(&exact, rhs, delta, cg, scratch).iters, 0)
+            }
+        }
+        _ => unreachable!("exactly one of sv_mask/panel selects the operator form"),
     }
 }
 
@@ -190,12 +264,18 @@ pub fn primal_newton<S: SampleSet>(
     let mut delta = vec![0.0; d];
     let mut cg_scratch = CgScratch::new();
     let hess_buf = RefCell::new(vec![0.0; m]);
+    let fbuf = RefCell::new(Vec::new());
+    // Mixed precision engages only when the sample set carries an f32
+    // shadow; every Newton system then runs f32 CG inside f64
+    // refinement, to the same `opts.cg.tol`.
+    let mixed = samples.mixed_available();
     // [w, δ] input panel and its [X̂w, X̂δ] image — the batched margin
     // refresh (one fused pass per Newton iteration).
     let mut wd = MultiVec::zeros(d, 2);
     let mut od = MultiVec::zeros(m, 2);
     let mut cg_total = 0usize;
     let mut gather_rebuilds = 0usize;
+    let mut refine_total = 0usize;
     let mut converged = false;
 
     let mut obj = evaluate(samples, yhat, c, &w, &mut o, &mut slack, &mut mask);
@@ -235,17 +315,43 @@ pub fn primal_newton<S: SampleSet>(
             samples.gather_rows_into(&sv, &mut panel);
             gathered_set.clone_from(&sv);
             gather_rebuilds += 1;
+            if mixed {
+                panel.build_f32_shadow();
+            }
         }
         let rhs: Vec<f64> = grad.iter().map(|g| -g).collect();
         delta.fill(0.0);
-        let cg_out = if use_gather {
-            let hess = GatheredHess { samples, panel: &panel, two_c: 2.0 * c, buf: &hess_buf };
-            cg_solve_with(&hess, &rhs, &mut delta, &opts.cg, &mut cg_scratch)
+        let (iters, passes) = if use_gather {
+            solve_direction(
+                samples,
+                None,
+                Some(&panel),
+                2.0 * c,
+                mixed,
+                &rhs,
+                &mut delta,
+                &opts.cg,
+                &mut cg_scratch,
+                &hess_buf,
+                &fbuf,
+            )
         } else {
-            let hess = MaskedHess { samples, sv_mask: &mask, two_c: 2.0 * c, buf: &hess_buf };
-            cg_solve_with(&hess, &rhs, &mut delta, &opts.cg, &mut cg_scratch)
+            solve_direction(
+                samples,
+                Some(&mask),
+                None,
+                2.0 * c,
+                mixed,
+                &rhs,
+                &mut delta,
+                &opts.cg,
+                &mut cg_scratch,
+                &hess_buf,
+                &fbuf,
+            )
         };
-        cg_total += cg_out.iters;
+        cg_total += iters;
+        refine_total += passes;
 
         // Batched margin refresh: [X̂w, X̂δ] in one fused panel product —
         // exact margins for the line search (no incremental drift) plus
@@ -320,6 +426,7 @@ pub fn primal_newton<S: SampleSet>(
         newton_iters: newton,
         cg_iters_total: cg_total,
         gather_rebuilds,
+        refine_passes_total: refine_total,
         converged,
         objective: obj,
     }
@@ -432,16 +539,25 @@ impl MultiLinOp for BatchGatheredHess<'_> {
 /// to the solo per-problem path.
 ///
 /// **Contract:** result `s` (weights, duals, iteration counts) is
-/// bit-identical to `primal_newton(ReducedSamples { x, y, t: t_s },
+/// bit-identical to `primal_newton(ReducedSamples::new(x, y, t_s),
 /// reduction_labels(p), c_s, opts, w0_s)` at any thread count and any
 /// batch composition — batching is purely a memory-traffic optimization
 /// (pinned by the `batch_matches_solo_*` tests and the service-level
 /// path gates).
+///
+/// With `shadow` present the batch runs mixed precision: every member's
+/// Newton systems go through f32 CG under f64 refinement, one member at
+/// a time (the blocked-CG group fusion is f64-only for now — fusing it
+/// with refinement is a tracked follow-on), and the bit-identity
+/// contract holds against the solo `ReducedSamples::with_shadow` run by
+/// the same construction. The fused gradient and margin-refresh passes
+/// stay f64 in both modes.
 pub fn primal_newton_batch(
     x: &Design,
     y: &[f64],
     points: &[PrimalBatchPoint],
     opts: &PrimalOptions,
+    shadow: Option<&DesignShadowF32>,
 ) -> (Vec<PrimalResult>, PrimalBatchStats) {
     let nprobs = points.len();
     let p = x.cols();
@@ -472,9 +588,16 @@ pub fn primal_newton_batch(
         newton: usize,
         cg_total: usize,
         gather_rebuilds: usize,
+        refine_total: usize,
         converged: bool,
         done: bool,
     }
+
+    let mixed = shadow.is_some();
+    let samples_at = |t: f64| match shadow {
+        Some(sh) => ReducedSamples::with_shadow(x, y, t, sh),
+        None => ReducedSamples::new(x, y, t),
+    };
 
     let mut st: Vec<Prob> = points
         .iter()
@@ -497,6 +620,7 @@ pub fn primal_newton_batch(
                 newton: 0,
                 cg_total: 0,
                 gather_rebuilds: 0,
+                refine_total: 0,
                 converged: false,
                 done: false,
             }
@@ -505,6 +629,7 @@ pub fn primal_newton_batch(
     let mut panels: Vec<GatheredRows> = (0..nprobs).map(|_| GatheredRows::new()).collect();
     let mut cg_scratch = CgScratch::new();
     let hess_buf = RefCell::new(vec![0.0; m]);
+    let fbuf = RefCell::new(Vec::new());
     let mut in_panel = MultiVec::zeros(0, 0);
     let mut out_panel = MultiVec::zeros(0, 0);
     let mut wd_panel = MultiVec::zeros(0, 0);
@@ -609,29 +734,39 @@ pub fn primal_newton_batch(
             let lead = live[a];
             if !use_gather[a] {
                 // Masked solo fallback (the pre-shrinking operator).
-                let samples = ReducedSamples { x, y, t: st[lead].t };
+                let samples = samples_at(st[lead].t);
                 let two_c = 2.0 * st[lead].c;
                 let rhs: Vec<f64> = st[lead].grad.iter().map(|g| -g).collect();
                 let mut delta = std::mem::take(&mut st[lead].delta);
                 delta.fill(0.0);
-                let cg_out = {
-                    let hess = MaskedHess {
-                        samples: &samples,
-                        sv_mask: &st[lead].mask,
-                        two_c,
-                        buf: &hess_buf,
-                    };
-                    cg_solve_with(&hess, &rhs, &mut delta, &opts.cg, &mut cg_scratch)
-                };
+                let (iters, passes) = solve_direction(
+                    &samples,
+                    Some(&st[lead].mask),
+                    None,
+                    two_c,
+                    mixed,
+                    &rhs,
+                    &mut delta,
+                    &opts.cg,
+                    &mut cg_scratch,
+                    &hess_buf,
+                    &fbuf,
+                );
                 st[lead].delta = delta;
-                st[lead].cg_total += cg_out.iters;
+                st[lead].cg_total += iters;
+                st[lead].refine_total += passes;
                 continue;
             }
             let mut members = vec![lead];
-            for b in (a + 1)..live.len() {
-                if !grouped[b] && use_gather[b] && st[live[b]].sv == st[lead].sv {
-                    grouped[b] = true;
-                    members.push(live[b]);
+            // Mixed precision runs per-member refinement loops, so
+            // members never group (the blocked-CG fusion stays f64-only
+            // until refinement learns the panel form — see ROADMAP).
+            if !mixed {
+                for b in (a + 1)..live.len() {
+                    if !grouped[b] && use_gather[b] && st[live[b]].sv == st[lead].sv {
+                        grouped[b] = true;
+                        members.push(live[b]);
+                    }
                 }
             }
             // Solo-equivalent rebuild accounting for every member.
@@ -654,29 +789,39 @@ pub fn primal_newton_batch(
                 .unwrap_or(lead);
             if st[host].panel_set != st[host].sv {
                 let sv = st[host].sv.clone();
-                let samples = ReducedSamples { x, y, t: st[host].t };
+                let samples = samples_at(st[host].t);
                 samples.gather_rows_into(&sv, &mut panels[host]);
                 st[host].panel_set = sv;
                 stats.panel_builds += 1;
             }
+            if mixed {
+                // No-op when the shadow is already current; demotes once
+                // per physical gather otherwise.
+                panels[host].build_f32_shadow();
+            }
             if members.len() == 1 {
                 // Gathered solo path on the (now current) panel.
-                let samples = ReducedSamples { x, y, t: st[lead].t };
+                let samples = samples_at(st[lead].t);
                 let two_c = 2.0 * st[lead].c;
                 let rhs: Vec<f64> = st[lead].grad.iter().map(|g| -g).collect();
                 let mut delta = std::mem::take(&mut st[lead].delta);
                 delta.fill(0.0);
-                let cg_out = {
-                    let hess = GatheredHess {
-                        samples: &samples,
-                        panel: &panels[host],
-                        two_c,
-                        buf: &hess_buf,
-                    };
-                    cg_solve_with(&hess, &rhs, &mut delta, &opts.cg, &mut cg_scratch)
-                };
+                let (iters, passes) = solve_direction(
+                    &samples,
+                    None,
+                    Some(&panels[host]),
+                    two_c,
+                    mixed,
+                    &rhs,
+                    &mut delta,
+                    &opts.cg,
+                    &mut cg_scratch,
+                    &hess_buf,
+                    &fbuf,
+                );
                 st[lead].delta = delta;
-                st[lead].cg_total += cg_out.iters;
+                st[lead].cg_total += iters;
+                st[lead].refine_total += passes;
             } else {
                 // Blocked CG: one fused panel product per iteration for
                 // the whole group.
@@ -803,6 +948,7 @@ pub fn primal_newton_batch(
                 newton_iters: s.newton,
                 cg_iters_total: s.cg_total,
                 gather_rebuilds: s.gather_rebuilds,
+                refine_passes_total: s.refine_total,
                 converged: s.converged,
                 objective: s.obj,
             }
@@ -974,14 +1120,14 @@ mod tests {
             .iter()
             .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
             .collect();
-        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts);
+        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts, None);
         assert_eq!(batch.len(), 4);
         // Two identical members walk identical trajectories, so their SV
         // sets agree every round: the shared-panel blocked CG must have
         // engaged.
         assert!(stats.batched_rhs >= 2, "identical members must batch");
         for (s, pt) in batch.iter().zip(&points) {
-            let red = ReducedSamples { x: &d, y: &y, t: pt.t };
+            let red = ReducedSamples::new(&d, &y, pt.t);
             let solo = primal_newton(&red, &labels, pt.c, &opts, None);
             assert_eq!(solo.newton_iters, s.newton_iters);
             assert_eq!(solo.cg_iters_total, s.cg_iters_total);
@@ -1006,7 +1152,7 @@ mod tests {
         let d: Design = x.into();
         let labels = reduction_labels(24);
         let opts = PrimalOptions::default();
-        let red = ReducedSamples { x: &d, y: &y, t: 0.6 };
+        let red = ReducedSamples::new(&d, &y, 0.6);
         let first = primal_newton(&red, &labels, 4.0, &opts, None);
         let solo = primal_newton(&red, &labels, 4.0, &opts, Some(&first.w));
         let (batch, _) = primal_newton_batch(
@@ -1014,6 +1160,7 @@ mod tests {
             &y,
             &[PrimalBatchPoint { t: 0.6, c: 4.0, w0: Some(first.w.clone()) }],
             &opts,
+            None,
         );
         assert_eq!(solo.newton_iters, batch[0].newton_iters);
         for i in 0..10 {
@@ -1036,11 +1183,11 @@ mod tests {
             .iter()
             .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
             .collect();
-        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts);
+        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts, None);
         assert_eq!(stats.panel_builds, 0, "shrink off ⇒ no gathers");
         assert_eq!(stats.batched_rhs, 0, "masked members never group");
         for (s, pt) in batch.iter().zip(&points) {
-            let red = ReducedSamples { x: &d, y: &y, t: pt.t };
+            let red = ReducedSamples::new(&d, &y, pt.t);
             let solo = primal_newton(&red, &labels, pt.c, &opts, None);
             assert_eq!(solo.newton_iters, s.newton_iters);
             for i in 0..12 {
@@ -1059,7 +1206,7 @@ mod tests {
         let x = Mat::from_fn(12, 40, |_, _| rng.normal());
         let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
         let d: Design = x.into();
-        let red = ReducedSamples { x: &d, y: &y, t: 0.7 };
+        let red = ReducedSamples::new(&d, &y, 0.7);
         let labels = reduction_labels(40);
         let on = primal_newton(&red, &labels, 8.0, &PrimalOptions::default(), None);
         let off = primal_newton(
@@ -1076,6 +1223,95 @@ mod tests {
                 on.w[j],
                 off.w[j]
             );
+        }
+    }
+
+    /// Mixed precision must land on the f64 optimum (the refinement loop
+    /// guarantees every Newton direction meets the f64 CG tolerance) for
+    /// dense and sparse designs, shrinking on and off.
+    #[test]
+    fn mixed_precision_solve_matches_f64() {
+        use crate::linalg::{Design, DesignShadowF32};
+        let mut rng = Rng::seed_from(142);
+        let x = Mat::from_fn(13, 28, |_, _| {
+            if rng.bernoulli(0.7) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..13).map(|_| rng.normal()).collect();
+        let labels = reduction_labels(28);
+        for design in [
+            Design::from(x.clone()),
+            Design::from(crate::linalg::Csr::from_dense(&x, 0.0)),
+        ] {
+            let shadow = DesignShadowF32::of(&design);
+            for shrink in [true, false] {
+                let opts = PrimalOptions { shrink, ..Default::default() };
+                let exact = primal_newton(
+                    &ReducedSamples::new(&design, &y, 0.7),
+                    &labels,
+                    6.0,
+                    &opts,
+                    None,
+                );
+                let mixed = primal_newton(
+                    &ReducedSamples::with_shadow(&design, &y, 0.7, &shadow),
+                    &labels,
+                    6.0,
+                    &opts,
+                    None,
+                );
+                assert!(
+                    mixed.refine_passes_total > 0,
+                    "mixed solve never refined (sparse={} shrink={shrink})",
+                    design.is_sparse()
+                );
+                assert!(exact.converged && mixed.converged);
+                for i in 0..13 {
+                    assert!(
+                        (exact.w[i] - mixed.w[i]).abs() < 1e-6,
+                        "sparse={} shrink={shrink} i={i}: {} vs {}",
+                        design.is_sparse(),
+                        exact.w[i],
+                        mixed.w[i]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Mixed batch vs mixed solo: the bit-identity contract holds in the
+    /// mixed tier too (members run per-member refinement, never group).
+    #[test]
+    fn mixed_batch_matches_mixed_solo_bit_for_bit() {
+        use crate::linalg::{Design, DesignShadowF32};
+        let mut rng = Rng::seed_from(143);
+        let x = Mat::from_fn(12, 26, |_, _| rng.normal());
+        let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let d: Design = x.into();
+        let shadow = DesignShadowF32::of(&d);
+        let labels = reduction_labels(26);
+        let opts = PrimalOptions { shrink_max_frac: 1.0, ..Default::default() };
+        let points: Vec<PrimalBatchPoint> = [(0.4, 3.0), (0.7, 5.0), (0.7, 5.0)]
+            .iter()
+            .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
+            .collect();
+        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts, Some(&shadow));
+        assert_eq!(stats.batched_rhs, 0, "mixed members must not group");
+        for (s, pt) in batch.iter().zip(&points) {
+            let red = ReducedSamples::with_shadow(&d, &y, pt.t, &shadow);
+            let solo = primal_newton(&red, &labels, pt.c, &opts, None);
+            assert_eq!(solo.newton_iters, s.newton_iters);
+            assert_eq!(solo.cg_iters_total, s.cg_iters_total);
+            assert_eq!(solo.refine_passes_total, s.refine_passes_total);
+            for i in 0..12 {
+                assert_eq!(solo.w[i].to_bits(), s.w[i].to_bits(), "w i={i}");
+            }
+            for (a, b) in solo.alpha.iter().zip(&s.alpha) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 }

@@ -10,7 +10,8 @@
 //! [`Design`], so a sparse X drives the whole Newton-CG at O(nnz) per
 //! product with no densification anywhere in the solve.
 
-use crate::linalg::{vecops, Csr, Design, Mat, MultiVec};
+use crate::linalg::lowp::{vecops_f32, MatF32};
+use crate::linalg::{vecops, Csr, Design, DesignShadowF32, Mat, MultiVec};
 
 /// Abstract m-samples × d-features matrix X̂.
 pub trait SampleSet: Sync {
@@ -47,6 +48,60 @@ pub trait SampleSet: Sync {
 
     /// `out ← Gᵀ · u` over a gathered panel (`out.len() == d`).
     fn gathered_matvec_t(&self, g: &GatheredRows, u: &[f64], out: &mut [f64]);
+
+    // -- mixed-precision hooks ---------------------------------------------
+    //
+    // The `_f32` twins run the bandwidth-bound core product in f32 (the
+    // input is demoted through the reusable `fbuf` scratch; rank-one
+    // shifts and the widened output stay f64) when the sample set
+    // carries an f32 shadow, and fall back to the exact f64 product
+    // otherwise. Accuracy is single precision — callers wrap them in
+    // f64 iterative refinement ([`crate::linalg::cg_solve_refined`]).
+    // Like the f64 CG products they are fixed-order (kernel-choice
+    // independent) and bit-stable across thread counts.
+
+    /// Whether the `_f32` hooks are served by a genuine f32 tier (the
+    /// mixed-precision Newton only engages when true).
+    fn mixed_available(&self) -> bool {
+        false
+    }
+
+    /// f32-tier [`SampleSet::matvec`] (see the hook contract above).
+    fn matvec_f32(&self, v: &[f64], out: &mut [f64], fbuf: &mut Vec<f32>) {
+        let _ = fbuf;
+        self.matvec(v, out);
+    }
+
+    /// f32-tier [`SampleSet::matvec_t`].
+    fn matvec_t_f32(&self, u: &[f64], out: &mut [f64], fbuf: &mut Vec<f32>) {
+        let _ = fbuf;
+        self.matvec_t(u, out);
+    }
+
+    /// f32-tier [`SampleSet::gathered_matvec`] (uses the panel's shadow,
+    /// see [`GatheredRows::build_f32_shadow`]).
+    fn gathered_matvec_f32(
+        &self,
+        g: &GatheredRows,
+        v: &[f64],
+        out: &mut [f64],
+        fbuf: &mut Vec<f32>,
+    ) {
+        let _ = fbuf;
+        self.gathered_matvec(g, v, out);
+    }
+
+    /// f32-tier [`SampleSet::gathered_matvec_t`].
+    fn gathered_matvec_t_f32(
+        &self,
+        g: &GatheredRows,
+        u: &[f64],
+        out: &mut [f64],
+        fbuf: &mut Vec<f32>,
+    ) {
+        let _ = fbuf;
+        self.gathered_matvec_t(g, u, out);
+    }
 }
 
 /// A reusable compact panel of gathered sample rows (see
@@ -61,6 +116,10 @@ pub struct GatheredRows {
     /// Per-gathered-row sign of the implicit rank-one correction
     /// (ReducedSamples); empty when the sample set has none.
     sign: Vec<f64>,
+    /// One-time f32 copy of the panel for the mixed-precision tier;
+    /// invalidated whenever the panel is re-gathered and rebuilt on
+    /// demand by [`GatheredRows::build_f32_shadow`].
+    shadow: Option<GatherShadowF32>,
 }
 
 #[derive(Default)]
@@ -69,6 +128,13 @@ enum GatherStore {
     Empty,
     Dense(Mat),
     Sparse(Csr),
+}
+
+/// f32 shadow of a [`GatherStore`]: a packed [`MatF32`] for dense
+/// panels, demoted values sharing the CSR structure for sparse ones.
+enum GatherShadowF32 {
+    Dense(MatF32),
+    Sparse(Vec<f32>),
 }
 
 impl GatheredRows {
@@ -112,8 +178,11 @@ impl GatheredRows {
         }
     }
 
-    /// Borrow (and, if needed, switch to) the dense storage.
+    /// Borrow (and, if needed, switch to) the dense storage. Dropping
+    /// the shadow here keeps every gather path honest: a re-gathered
+    /// panel can never serve a stale f32 copy.
     fn dense_store(&mut self) -> &mut Mat {
+        self.shadow = None;
         if !matches!(self.store, GatherStore::Dense(_)) {
             self.store = GatherStore::Dense(Mat::zeros(0, 0));
         }
@@ -123,14 +192,69 @@ impl GatheredRows {
         }
     }
 
-    /// Borrow (and, if needed, switch to) the sparse storage.
+    /// Borrow (and, if needed, switch to) the sparse storage (same
+    /// shadow invalidation as [`GatheredRows::dense_store`]).
     fn sparse_store(&mut self) -> &mut Csr {
+        self.shadow = None;
         if !matches!(self.store, GatherStore::Sparse(_)) {
             self.store = GatherStore::Sparse(Csr::empty());
         }
         match &mut self.store {
             GatherStore::Sparse(c) => c,
             _ => unreachable!(),
+        }
+    }
+
+    /// Demote the gathered panel into its f32 shadow (no-op when the
+    /// shadow is already current for this gather). The mixed-precision
+    /// Newton calls this once per gather, so the demotion cost is
+    /// amortized over every CG product on the panel.
+    pub fn build_f32_shadow(&mut self) {
+        if self.shadow.is_some() {
+            return;
+        }
+        self.shadow = match &self.store {
+            GatherStore::Empty => None,
+            GatherStore::Dense(panel) => Some(GatherShadowF32::Dense(MatF32::from_mat(panel))),
+            GatherStore::Sparse(panel) => Some(GatherShadowF32::Sparse(panel.values_f32())),
+        };
+    }
+
+    /// Bytes held by the current f32 shadow (0 when absent).
+    pub fn shadow_bytes(&self) -> usize {
+        match &self.shadow {
+            None => 0,
+            Some(GatherShadowF32::Dense(panel)) => panel.bytes(),
+            Some(GatherShadowF32::Sparse(vals)) => std::mem::size_of_val(vals.as_slice()),
+        }
+    }
+
+    /// Whether [`GatheredRows::build_f32_shadow`] has run since the last
+    /// gather.
+    pub fn has_shadow(&self) -> bool {
+        self.shadow.is_some()
+    }
+
+    /// `out ← panel · x32` through the f32 shadow (f64 output). Panics
+    /// if no shadow is built — callers gate on [`GatheredRows::has_shadow`].
+    fn shadow_matvec_into(&self, x32: &[f32], out: &mut [f64]) {
+        match (&self.shadow, &self.store) {
+            (Some(GatherShadowF32::Dense(panel)), _) => panel.matvec_into(x32, out),
+            (Some(GatherShadowF32::Sparse(vals)), GatherStore::Sparse(csr)) => {
+                csr.matvec_f32_into(vals, x32, out)
+            }
+            _ => panic!("gather panel has no f32 shadow"),
+        }
+    }
+
+    /// Transpose twin of [`GatheredRows::shadow_matvec_into`].
+    fn shadow_matvec_t_into(&self, x32: &[f32], out: &mut [f64]) {
+        match (&self.shadow, &self.store) {
+            (Some(GatherShadowF32::Dense(panel)), _) => panel.matvec_t_into(x32, out),
+            (Some(GatherShadowF32::Sparse(vals)), GatherStore::Sparse(csr)) => {
+                csr.matvec_t_f32_into(vals, x32, out)
+            }
+            _ => panic!("gather panel has no f32 shadow"),
         }
     }
 }
@@ -195,6 +319,24 @@ pub struct ReducedSamples<'a> {
     pub x: &'a Design,
     pub y: &'a [f64],
     pub t: f64,
+    /// Optional one-time f32 shadow of the design: when present, the
+    /// `_f32` product hooks run their core products through it and
+    /// [`SampleSet::mixed_available`] reports true.
+    x32: Option<&'a DesignShadowF32>,
+}
+
+impl<'a> ReducedSamples<'a> {
+    /// Plain f64 sample operator (every product in full precision).
+    pub fn new(x: &'a Design, y: &'a [f64], t: f64) -> Self {
+        ReducedSamples { x, y, t, x32: None }
+    }
+
+    /// Sample operator with an f32 design shadow attached — the
+    /// mixed-precision tier's entry point. The shadow must mirror `x`
+    /// (same storage kind and shape; see [`DesignShadowF32::of`]).
+    pub fn with_shadow(x: &'a Design, y: &'a [f64], t: f64, x32: &'a DesignShadowF32) -> Self {
+        ReducedSamples { x, y, t, x32: Some(x32) }
+    }
 }
 
 impl ReducedSamples<'_> {
@@ -299,6 +441,88 @@ impl SampleSet for ReducedSamples<'_> {
             GatherStore::Sparse(panel) => panel.matvec_t_into(u, out),
             GatherStore::Empty => panic!("empty gather panel"),
         }
+        let mut coeff = 0.0;
+        for (ui, si) in u.iter().zip(&g.sign) {
+            coeff += ui * si;
+        }
+        vecops::axpy(coeff / self.t, self.y, out);
+    }
+
+    fn mixed_available(&self) -> bool {
+        self.x32.is_some()
+    }
+
+    /// [`SampleSet::matvec`] with the `Xᵀv` core demoted to f32; the
+    /// `yᵀv/t` shift and the top/bottom assembly repeat the f64 path
+    /// exactly.
+    fn matvec_f32(&self, v: &[f64], out: &mut [f64], fbuf: &mut Vec<f32>) {
+        let Some(shadow) = self.x32 else {
+            return self.matvec(v, out);
+        };
+        let p = self.p();
+        debug_assert_eq!(v.len(), self.d());
+        debug_assert_eq!(out.len(), 2 * p);
+        let (top, bot) = out.split_at_mut(p);
+        vecops_f32::demote(v, fbuf);
+        shadow.matvec_t_into(self.x, fbuf, top);
+        let shift = vecops::dot(self.y, v) / self.t;
+        for i in 0..p {
+            bot[i] = top[i] + shift;
+            top[i] -= shift;
+        }
+    }
+
+    /// [`SampleSet::matvec_t`] with the `X·(u₁+u₂)` core demoted to f32;
+    /// the column sum and the rank-one `y` correction stay f64.
+    fn matvec_t_f32(&self, u: &[f64], out: &mut [f64], fbuf: &mut Vec<f32>) {
+        let Some(shadow) = self.x32 else {
+            return self.matvec_t(u, out);
+        };
+        let p = self.p();
+        debug_assert_eq!(u.len(), 2 * p);
+        debug_assert_eq!(out.len(), self.d());
+        let (u1, u2) = u.split_at(p);
+        let mut sum = vec![0.0; p];
+        vecops::add(u1, u2, &mut sum);
+        vecops_f32::demote(&sum, fbuf);
+        shadow.matvec_into(self.x, fbuf, out);
+        let coeff = (u2.iter().sum::<f64>() - u1.iter().sum::<f64>()) / self.t;
+        vecops::axpy(coeff, self.y, out);
+    }
+
+    /// [`SampleSet::gathered_matvec`] through the panel's f32 shadow
+    /// (falls back to f64 when none is built).
+    fn gathered_matvec_f32(
+        &self,
+        g: &GatheredRows,
+        v: &[f64],
+        out: &mut [f64],
+        fbuf: &mut Vec<f32>,
+    ) {
+        if self.x32.is_none() || !g.has_shadow() {
+            return self.gathered_matvec(g, v, out);
+        }
+        vecops_f32::demote(v, fbuf);
+        g.shadow_matvec_into(fbuf, out);
+        let shift = vecops::dot(self.y, v) / self.t;
+        for (o, s) in out.iter_mut().zip(&g.sign) {
+            *o += s * shift;
+        }
+    }
+
+    /// [`SampleSet::gathered_matvec_t`] through the panel's f32 shadow.
+    fn gathered_matvec_t_f32(
+        &self,
+        g: &GatheredRows,
+        u: &[f64],
+        out: &mut [f64],
+        fbuf: &mut Vec<f32>,
+    ) {
+        if self.x32.is_none() || !g.has_shadow() {
+            return self.gathered_matvec_t(g, u, out);
+        }
+        vecops_f32::demote(u, fbuf);
+        g.shadow_matvec_t_into(fbuf, out);
         let mut coeff = 0.0;
         for (ui, si) in u.iter().zip(&g.sign) {
             coeff += ui * si;
@@ -464,7 +688,7 @@ mod tests {
     fn reduced_matvec_matches_materialized() {
         let (x, y, t) = setup(9, 6, 121);
         let d: Design = x.clone().into();
-        let red = ReducedSamples { x: &d, y: &y, t };
+        let red = ReducedSamples::new(&d, &y, t);
         let dense = materialize_reduction(&x, &y, t);
         let mut rng = Rng::seed_from(122);
         let v: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
@@ -480,7 +704,7 @@ mod tests {
     fn reduced_matvec_t_matches_materialized() {
         let (x, y, t) = setup(7, 5, 123);
         let d: Design = x.clone().into();
-        let red = ReducedSamples { x: &d, y: &y, t };
+        let red = ReducedSamples::new(&d, &y, t);
         let dense = materialize_reduction(&x, &y, t);
         let mut rng = Rng::seed_from(124);
         let u: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
@@ -524,7 +748,7 @@ mod tests {
     fn reduced_multi_rhs_columns_bit_match_single_rhs() {
         let (x, y, t) = setup(10, 7, 127);
         let d: Design = x.clone().into();
-        let red = ReducedSamples { x: &d, y: &y, t };
+        let red = ReducedSamples::new(&d, &y, t);
         let mut rng = Rng::seed_from(128);
         let vs = MultiVec::from_fn(10, 3, |_, _| rng.normal());
         let us = MultiVec::from_fn(14, 3, |_, _| rng.normal());
@@ -567,7 +791,7 @@ mod tests {
         let v: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
         let u: Vec<f64> = (0..rows.len()).map(|_| rng.normal()).collect();
         for design in [&dense_design, &sparse_design] {
-            let red = ReducedSamples { x: design, y: &y, t };
+            let red = ReducedSamples::new(design, &y, t);
             let mut panel = GatheredRows::new();
             red.gather_rows_into(&rows, &mut panel);
             assert_eq!(panel.m(), rows.len());
@@ -616,7 +840,7 @@ mod tests {
             let mut out_t = MultiVec::zeros(9, 3);
             reduced_matvec_t_batch(&design, &y, &ts, &us, &mut out_t);
             for j in 0..3 {
-                let red = ReducedSamples { x: &design, y: &y, t: ts[j] };
+                let red = ReducedSamples::new(&design, &y, ts[j]);
                 let mut single = vec![0.0; 12];
                 red.matvec(vs.col(j), &mut single);
                 for (a, b) in single.iter().zip(out.col(j)) {
@@ -674,7 +898,7 @@ mod tests {
         let t = 0.9;
         let d: Design = crate::linalg::Csr::from_dense(&x, 0.0).into();
         assert!(d.is_sparse());
-        let red = ReducedSamples { x: &d, y: &y, t };
+        let red = ReducedSamples::new(&d, &y, t);
         let dense = materialize_reduction(&x, &y, t);
         let v: Vec<f64> = (0..11).map(|_| rng.normal()).collect();
         let mut out = vec![0.0; 14];
@@ -689,6 +913,131 @@ mod tests {
         let expect_t = dense.matvec_t(&u);
         for i in 0..11 {
             assert!((out_t[i] - expect_t[i]).abs() < 1e-10, "matvec_t {i}");
+        }
+    }
+
+    fn rel_dev(a: &[f64], b: &[f64]) -> f64 {
+        let num = a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt();
+        num / vecops::norm2(b).max(1e-30)
+    }
+
+    /// The `_f32` hooks must track the f64 products to single precision
+    /// for both dense and sparse designs — full and gathered forms.
+    #[test]
+    fn f32_hooks_track_f64_products_to_single_precision() {
+        let mut rng = Rng::seed_from(143);
+        let x = Mat::from_fn(30, 12, |_, _| {
+            if rng.bernoulli(0.6) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let t = 0.8;
+        let v: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let u: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let rows = [0usize, 3, 9, 14, 20, 23];
+        let ug: Vec<f64> = (0..rows.len()).map(|_| rng.normal()).collect();
+        for design in [
+            Design::from(x.clone()),
+            Design::from(crate::linalg::Csr::from_dense(&x, 0.0)),
+        ] {
+            let shadow = DesignShadowF32::of(&design);
+            let red = ReducedSamples::with_shadow(&design, &y, t, &shadow);
+            assert!(red.mixed_available());
+            let mut fbuf = Vec::new();
+            let mut f64_out = vec![0.0; 24];
+            let mut f32_out = vec![0.0; 24];
+            red.matvec(&v, &mut f64_out);
+            red.matvec_f32(&v, &mut f32_out, &mut fbuf);
+            assert!(rel_dev(&f32_out, &f64_out) < 1e-4, "matvec sparse={}", design.is_sparse());
+            let mut f64_t = vec![0.0; 30];
+            let mut f32_t = vec![0.0; 30];
+            red.matvec_t(&u, &mut f64_t);
+            red.matvec_t_f32(&u, &mut f32_t, &mut fbuf);
+            assert!(rel_dev(&f32_t, &f64_t) < 1e-4, "matvec_t sparse={}", design.is_sparse());
+            let mut panel = GatheredRows::new();
+            red.gather_rows_into(&rows, &mut panel);
+            assert!(!panel.has_shadow());
+            panel.build_f32_shadow();
+            assert!(panel.has_shadow() && panel.shadow_bytes() > 0);
+            let mut g64 = vec![0.0; rows.len()];
+            let mut g32 = vec![0.0; rows.len()];
+            red.gathered_matvec(&panel, &v, &mut g64);
+            red.gathered_matvec_f32(&panel, &v, &mut g32, &mut fbuf);
+            assert!(rel_dev(&g32, &g64) < 1e-4, "gathered sparse={}", design.is_sparse());
+            let mut gt64 = vec![0.0; 30];
+            let mut gt32 = vec![0.0; 30];
+            red.gathered_matvec_t(&panel, &ug, &mut gt64);
+            red.gathered_matvec_t_f32(&panel, &ug, &mut gt32, &mut fbuf);
+            assert!(rel_dev(&gt32, &gt64) < 1e-4, "gathered_t sparse={}", design.is_sparse());
+            // Re-gathering invalidates the shadow so it can never go
+            // stale.
+            red.gather_rows_into(&rows[..3], &mut panel);
+            assert!(!panel.has_shadow());
+        }
+    }
+
+    /// Without a shadow the hooks are the f64 products, bit for bit —
+    /// what keeps every existing caller's behavior untouched under the
+    /// mixed-precision CI leg.
+    #[test]
+    fn f32_hooks_without_shadow_are_exact_f64() {
+        let (x, y, t) = setup(12, 8, 145);
+        let d: Design = x.clone().into();
+        let red = ReducedSamples::new(&d, &y, t);
+        assert!(!red.mixed_available());
+        let mut rng = Rng::seed_from(146);
+        let v: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let mut fbuf = Vec::new();
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        red.matvec(&v, &mut a);
+        red.matvec_f32(&v, &mut b, &mut fbuf);
+        for i in 0..16 {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "i={i}");
+        }
+    }
+
+    /// The f32 hook outputs must be bit-stable across thread counts
+    /// (the crate determinism contract extends to the mixed tier).
+    #[test]
+    fn f32_hooks_bit_stable_across_threads() {
+        let mut rng = Rng::seed_from(147);
+        let n = 900; // large enough to cross the parallel gates
+        let p = 17;
+        let x = Mat::from_fn(n, p, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let d: Design = x.into();
+        let shadow = DesignShadowF32::of(&d);
+        let red = ReducedSamples::with_shadow(&d, &y, 0.9, &shadow);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let u: Vec<f64> = (0..2 * p).map(|_| rng.normal()).collect();
+        let mut fbuf = Vec::new();
+        let run = |nt: usize, fbuf: &mut Vec<f32>| {
+            crate::util::parallel::with_parallelism(
+                crate::util::parallel::Parallelism::Fixed(nt),
+                || {
+                    let mut mv = vec![0.0; 2 * p];
+                    red.matvec_f32(&v, &mut mv, fbuf);
+                    let mut mt = vec![0.0; n];
+                    red.matvec_t_f32(&u, &mut mt, fbuf);
+                    (mv, mt)
+                },
+            )
+        };
+        let (mv1, mt1) = run(1, &mut fbuf);
+        for nt in [2, 5, 8] {
+            let (mvn, mtn) = run(nt, &mut fbuf);
+            assert!(
+                mv1.iter().zip(&mvn).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "matvec_f32 nt={nt}"
+            );
+            assert!(
+                mt1.iter().zip(&mtn).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "matvec_t_f32 nt={nt}"
+            );
         }
     }
 }

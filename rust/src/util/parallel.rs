@@ -44,12 +44,31 @@ impl Parallelism {
     }
 }
 
+/// Parse a thread-count setting (`PALLAS_NUM_THREADS` / `SVEN_THREADS`):
+/// a positive integer. Split out of the env reader so the rejection
+/// cases are unit-testable without mutating process environment.
+pub fn parse_threads(s: &str) -> Result<usize, String> {
+    match s.trim().parse::<usize>() {
+        Ok(n) if n > 0 => Ok(n),
+        Ok(_) => Err(format!("thread count must be >= 1, got {s:?}")),
+        Err(_) => Err(format!("thread count must be a positive integer, got {s:?}")),
+    }
+}
+
 /// `PALLAS_NUM_THREADS` / `SVEN_THREADS` / available parallelism, cached.
+///
+/// An unparseable value is a **hard error** on first resolution — the
+/// same contract as `PALLAS_KERNEL` and `PALLAS_PRECISION`. (It used to
+/// fall back silently to auto detection, which made a typo like
+/// `PALLAS_NUM_THREADS=fout` run a benchmark on every core.)
 fn env_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
         let from_env = |key: &str| {
-            std::env::var(key).ok().and_then(|s| s.parse::<usize>().ok()).filter(|&n| n > 0)
+            std::env::var(key).ok().map(|s| {
+                parse_threads(&s)
+                    .unwrap_or_else(|e| panic!("{key}: {e} (unset it or pick a positive integer)"))
+            })
         };
         from_env("PALLAS_NUM_THREADS")
             .or_else(|| from_env("SVEN_THREADS"))
@@ -192,6 +211,21 @@ mod tests {
         assert_eq!(Parallelism::Fixed(6).threads(), 6);
         assert_eq!(Parallelism::Fixed(0).threads(), 1);
         assert!(Parallelism::Auto.threads() >= 1);
+    }
+
+    #[test]
+    fn thread_count_parsing_is_strict() {
+        // The env reader hard-errors through this parser: every rejection
+        // here is a value that previously fell back to auto silently.
+        assert_eq!(parse_threads("4"), Ok(4));
+        assert_eq!(parse_threads(" 8 "), Ok(8));
+        assert!(parse_threads("0").is_err());
+        assert!(parse_threads("-2").is_err());
+        assert!(parse_threads("four").is_err());
+        assert!(parse_threads("4.0").is_err());
+        assert!(parse_threads("").is_err());
+        let e = parse_threads("fout").unwrap_err();
+        assert!(e.contains("fout"), "error must echo the bad value: {e}");
     }
 
     #[test]

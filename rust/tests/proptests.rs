@@ -421,7 +421,7 @@ fn prop_reduced_samples_multi_rhs_bit_identical() {
             let (n, p) = (x.rows(), x.cols());
             let designs: [Design; 2] = [x.clone().into(), Csr::from_dense(x, 0.0).into()];
             for design in &designs {
-                let red = ReducedSamples { x: design, y, t: 0.7 };
+                let red = ReducedSamples::new(design, y, 0.7);
                 let mut outs = MultiVec::zeros(2 * p, r);
                 red.matvec_multi(vs, &mut outs);
                 let mut outs_t = MultiVec::zeros(n, r);
@@ -488,7 +488,7 @@ fn prop_gathered_hessian_equals_masked() {
             let (n, p) = (x.rows(), x.cols());
             let designs: [Design; 2] = [x.clone().into(), Csr::from_dense(x, 0.0).into()];
             for design in &designs {
-                let red = ReducedSamples { x: design, y, t: 0.9 };
+                let red = ReducedSamples::new(design, y, 0.9);
                 // masked: X̂ᵀ(1_S ⊙ (X̂·v))
                 let mut full = vec![0.0; 2 * p];
                 red.matvec(v, &mut full);
@@ -638,9 +638,9 @@ fn prop_primal_newton_batch_matches_solo() {
                 .iter()
                 .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
                 .collect();
-            let (batch, _stats) = primal_newton_batch(&design, y, &points, &opts);
+            let (batch, _stats) = primal_newton_batch(&design, y, &points, &opts, None);
             for (s, &(t, c)) in batch.iter().zip(pts) {
-                let red = ReducedSamples { x: &design, y, t };
+                let red = ReducedSamples::new(&design, y, t);
                 let solo = primal_newton(&red, &labels, c, &opts, None);
                 if solo.newton_iters != s.newton_iters
                     || solo.cg_iters_total != s.cg_iters_total
@@ -671,4 +671,127 @@ fn prop_primal_newton_batch_matches_solo() {
             Ok(())
         },
     );
+}
+
+/// Mixed-precision agreement seal: a `Precision::MixedF32` solve must
+/// land within solver tolerance of the all-f64 solve over dense and
+/// sparse designs in both forced SVM modes. The dual backend ignores
+/// the mixed setting entirely (its active-set Cholesky stays f64), so
+/// its two runs must agree to the bit; the primal runs must actually
+/// have taken refinement passes for the comparison to mean anything.
+#[test]
+fn prop_mixed_precision_beta_agrees_with_f64() {
+    use sven::linalg::Precision;
+    use sven::solvers::sven::SvenConfig;
+
+    let mut rng = Rng::seed_from(9753);
+    // (n, p, density [1.0 = dense], forced mode)
+    let cases = [
+        (40usize, 90usize, 1.0f64, SvmMode::Primal),
+        (48, 70, 0.25, SvmMode::Primal),
+        (160, 24, 1.0, SvmMode::Dual),
+        (200, 30, 0.2, SvmMode::Dual),
+    ];
+    for (n, p, density, mode) in cases {
+        let x = Mat::from_fn(n, p, |_, _| {
+            if rng.bernoulli(density) {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let design = if density < 1.0 {
+            Design::from(Csr::from_dense(&x, 0.0))
+        } else {
+            Design::from(x.clone())
+        };
+        let run = |precision: Precision| {
+            let sven = Sven::with_config(
+                RustBackend::default(),
+                SvenConfig { mode, precision, ..Default::default() },
+            );
+            let prob = EnProblem::new(design.clone(), y.clone(), 0.8, 0.5);
+            sven.solve(&prob).expect("solve")
+        };
+        let sol64 = run(Precision::F64);
+        let sol32 = run(Precision::MixedF32);
+        assert_eq!(sol64.refine_passes, 0, "{mode:?} {n}x{p}: f64 must not refine");
+        if matches!(mode, SvmMode::Dual) {
+            assert_eq!(sol32.refine_passes, 0, "{mode:?} {n}x{p}: dual stays f64");
+            for j in 0..p {
+                assert_eq!(
+                    sol64.beta[j].to_bits(),
+                    sol32.beta[j].to_bits(),
+                    "{mode:?} {n}x{p} j={j}: dual must ignore MixedF32"
+                );
+            }
+        } else {
+            assert!(sol32.refine_passes > 0, "{mode:?} {n}x{p}: mixed primal must refine");
+        }
+        for j in 0..p {
+            assert!(
+                (sol64.beta[j] - sol32.beta[j]).abs() < 1e-5,
+                "{mode:?} {n}x{p} j={j}: f64 {} vs mixed {}",
+                sol64.beta[j],
+                sol32.beta[j]
+            );
+        }
+    }
+}
+
+/// Mixed-precision determinism seal: a MixedF32 primal solve must be
+/// bit-identical across thread counts under every enabled microkernel —
+/// the f32 panel kernels keep the same fixed reduction orders as their
+/// f64 twins. (Across *different* kernels only rounding-level agreement
+/// holds — FMA fuses — which the agreement seal above already covers.)
+#[test]
+fn prop_mixed_precision_bit_stable_across_threads_per_kernel() {
+    use sven::linalg::{enabled_choices, KernelChoice, Precision};
+    use sven::solvers::sven::SvenConfig;
+    use sven::util::Parallelism;
+
+    let mut rng = Rng::seed_from(8531);
+    // Primal shapes (2p > n) past the parallel fan-out thresholds, dense
+    // and sparse, so the threaded f32 panel paths actually engage.
+    let xd = Mat::from_fn(220, 230, |_, _| rng.normal());
+    let xs = Mat::from_fn(300, 380, |_, _| {
+        if rng.bernoulli(0.18) {
+            rng.normal()
+        } else {
+            0.0
+        }
+    });
+    let designs = [Design::from(xd), Design::from(Csr::from_dense(&xs, 0.0))];
+    for design in designs {
+        let y: Vec<f64> = (0..design.rows()).map(|_| rng.normal()).collect();
+        let run = |par: Parallelism, kernel: KernelChoice| -> Vec<f64> {
+            let sven = Sven::with_config(
+                RustBackend::default(),
+                SvenConfig {
+                    mode: SvmMode::Primal,
+                    parallelism: par,
+                    kernel,
+                    precision: Precision::MixedF32,
+                    ..Default::default()
+                },
+            );
+            let prob = EnProblem::new(design.clone(), y.clone(), 0.7, 0.5);
+            sven.solve(&prob).expect("solve").beta
+        };
+        for kernel in enabled_choices() {
+            let serial = run(Parallelism::None, kernel);
+            for nt in [2usize, 4] {
+                let threaded = run(Parallelism::Fixed(nt), kernel);
+                for (j, (a, b)) in serial.iter().zip(&threaded).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "sparse={} kernel={kernel} nt={nt} j={j}: {a} vs {b}",
+                        design.is_sparse()
+                    );
+                }
+            }
+        }
+    }
 }

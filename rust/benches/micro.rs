@@ -100,6 +100,19 @@ fn main() {
         );
     }
 
+    // Whole-screen micro-bench: R standalone Path jobs vs one
+    // MultiResponse job (asserts per-response bit-identity, the
+    // single-prep-build invariant, and fused width > 1 even in smoke
+    // mode; the full run writes BENCH_PR8.json).
+    let (sp_screen, screen_width) = sven::bench::figures::screen_micro(!smoke);
+    if !smoke {
+        println!(
+            "whole-screen serving: MultiResponse vs R-standalone {sp_screen:.2}x \
+             responses/s at max fused width {screen_width:.0} (acceptance: > 1x at \
+             R = 64 with fused width > 1)"
+        );
+    }
+
     let (warm, reps) = if smoke { (1, 2) } else { (2, 10) };
 
     // gemm through the Mat facade (includes dispatch + allocation)

@@ -934,6 +934,223 @@ pub fn precision_micro(full: bool) -> (f64, f64) {
 }
 
 // ---------------------------------------------------------------------------
+// Whole-screen serving micro-bench (MultiResponse jobs)
+// ---------------------------------------------------------------------------
+
+/// Whole-screen micro-bench: R standalone `Path` jobs vs one
+/// `JobKind::MultiResponse` job over the same design and grid.
+///
+/// The screen shares one preparation and fuses every (response × grid
+/// point) Newton direction into common SV panels, so the honest unit is
+/// responses per second. Per-response bit-identity against the
+/// standalone jobs (β bits *and* iteration counts) is asserted even in
+/// smoke mode, as is a fused group width > 1 — the batch layer must
+/// actually batch. The full run additionally writes `BENCH_PR8.json`
+/// at the repo root (the perf-trajectory record).
+///
+/// `full` runs R = 8 and 64 at the acceptance shape; smoke runs R = 8
+/// tiny. Returns (responses/sec speedup at the largest R, widest fused
+/// Newton-direction group seen).
+pub fn screen_micro(full: bool) -> (f64, f64) {
+    use crate::coordinator::{BackendChoice, PoolConfig, Service, ServiceConfig};
+    use crate::solvers::sven::SvmMode;
+    use std::sync::Arc;
+
+    println!("=== screen micro: standalone Path jobs vs one MultiResponse job ===");
+    // Primal regime (2p > n): the response-batched panel layer is the
+    // machinery under test, and it only engages in primal mode.
+    let (n, p, grid_n) = if full { (256usize, 640usize, 12) } else { (40, 48, 4) };
+    let rs: &[usize] = if full { &[8, 64] } else { &[8] };
+    let data = crate::data::synth_regression(&crate::data::SynthSpec {
+        name: format!("screen-{n}x{p}"),
+        n,
+        p,
+        support: (p / 16).max(4),
+        seed: 9393,
+        ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig {
+        grid: grid_n,
+        path: PathSettings { num_lambda: 40, ..Default::default() },
+        ..Default::default()
+    });
+    let derived = runner.derive_grid(&data);
+    let mut points = runner.grid_points(&derived);
+    points.retain(|gp| gp.t > 0.0);
+    if points.len() < 2 {
+        println!("grid too small ({} points), skipping screen comparison", points.len());
+        return (f64::NAN, f64::NAN);
+    }
+    let x = Arc::new(crate::linalg::Design::from(data.x.clone()));
+
+    let mut last_speedup = f64::NAN;
+    let mut widest = 0usize;
+    let mut json_rows: Vec<String> = Vec::new();
+    for &r in rs {
+        // Distinct responses as deterministic scalings of the base
+        // signal — the shape of a screen of related phenotypes.
+        let responses: Vec<Arc<Vec<f64>>> = (0..r)
+            .map(|i| {
+                let f = 1.0 + 0.5 * i as f64 / r as f64;
+                Arc::new(data.y.iter().map(|&v| f * v).collect::<Vec<f64>>())
+            })
+            .collect();
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 4, queue_capacity: 256 },
+            ..Default::default()
+        });
+        // Warm the prep cache so both sides time sweeps, not the build.
+        let rx = service
+            .submit_point(
+                1,
+                x.clone(),
+                responses[0].clone(),
+                points[0].t,
+                points[0].lambda2,
+                BackendChoice::Rust,
+            )
+            .expect("accepting");
+        rx.recv().unwrap().result.expect("warm prep");
+
+        // R standalone path jobs: the screen without the batch layer.
+        let timer = Timer::start();
+        let rxs: Vec<_> = responses
+            .iter()
+            .map(|y| {
+                service
+                    .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+                    .expect("accepting")
+            })
+            .collect();
+        let alone: Vec<Vec<crate::solvers::elastic_net::EnSolution>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().result.expect("solo path").expect_path())
+            .collect();
+        let t_alone = timer.elapsed();
+
+        // One MultiResponse job over the same responses and grid.
+        let timer = Timer::start();
+        let rx = service
+            .submit_multi_response(
+                1,
+                x.clone(),
+                responses.clone(),
+                points.clone(),
+                BackendChoice::Rust,
+            )
+            .expect("accepting");
+        let multi = rx.recv().unwrap().result.expect("screen").expect_multi_response();
+        let t_multi = timer.elapsed();
+
+        // Per-response bit-identity with the standalone jobs, asserted
+        // even in smoke mode: same β bits, same iteration counts.
+        assert_eq!(multi.paths.len(), alone.len());
+        for (ri, (a, b)) in alone.iter().zip(&multi.paths).enumerate() {
+            assert_eq!(a.len(), b.len(), "response {ri} path length");
+            for (i, (sa, sb)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    sa.iterations, sb.iterations,
+                    "response {ri} point {i} iteration count diverged"
+                );
+                for j in 0..sa.beta.len() {
+                    assert_eq!(
+                        sa.beta[j].to_bits(),
+                        sb.beta[j].to_bits(),
+                        "screen diverged from standalone at response {ri} point {i} j={j}"
+                    );
+                }
+            }
+        }
+        let m = service.metrics();
+        // One preparation build for the whole comparison — the warm-up
+        // built it, every job after (solo and screen) shared it.
+        assert_eq!(m.prep_builds(), 1, "screen must reuse one preparation");
+        assert_eq!(m.responses_total(), r as u64);
+        let rps_alone = r as f64 / t_alone;
+        let rps_multi = r as f64 / t_multi;
+        let speedup = rps_multi / rps_alone;
+        last_speedup = speedup;
+        service.shutdown();
+
+        // Fused-width histogram straight from the batch layer (the
+        // service meters counts, not the histogram).
+        let sven = Sven::new(RustBackend::default());
+        let prep = sven.prepare_shared(&x, &responses[0]).expect("prepare");
+        assert_eq!(prep.mode(), SvmMode::Primal, "bench shape must be primal");
+        let live: Vec<usize> = (0..r).collect();
+        let mut scratch = SvmScratch::new();
+        let out = crate::coordinator::path::sweep_multi_prepared(
+            &sven,
+            prep.as_ref(),
+            &mut scratch,
+            &x,
+            &responses,
+            &live,
+            &points,
+            None,
+        )
+        .expect("multi sweep");
+        widest = widest.max(out.stats.max_fused_width);
+        // The fused panel must actually batch across responses.
+        assert!(
+            out.stats.max_fused_width > 1,
+            "fused batch width stayed at 1 — responses never shared a panel"
+        );
+        println!(
+            "screen R={r} over {} points ({n}x{p}, primal): {r} standalone jobs {:.1}ms \
+             ({:.1} resp/s) | one MultiResponse job {:.1}ms ({:.1} resp/s, {:.2}x, \
+             bit-identical)",
+            points.len(),
+            t_alone * 1e3,
+            rps_alone,
+            t_multi * 1e3,
+            rps_multi,
+            speedup
+        );
+        println!(
+            "screen R={r} fused widths: max {} | hist(log2 buckets 1,2,4,...,128+) {:?} | \
+             panel_builds={} batched_rhs={}",
+            out.stats.max_fused_width,
+            out.stats.width_hist,
+            out.stats.panel_builds,
+            out.stats.batched_rhs
+        );
+        json_rows.push(format!(
+            "    {{\"responses\": {r}, \"grid_points\": {}, \"n\": {n}, \"p\": {p}, \
+             \"standalone_seconds\": {:.6}, \"multi_seconds\": {:.6}, \
+             \"standalone_responses_per_sec\": {:.3}, \"multi_responses_per_sec\": {:.3}, \
+             \"speedup\": {:.4}, \"max_fused_width\": {}, \"width_hist\": {:?}}}",
+            points.len(),
+            t_alone,
+            t_multi,
+            rps_alone,
+            rps_multi,
+            speedup,
+            out.stats.max_fused_width,
+            out.stats.width_hist
+        ));
+    }
+    if full {
+        let json = format!(
+            "{{\n  \"bench\": \"screen_micro\",\n  \"unit\": \"responses_per_second\",\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            json_rows.join(",\n")
+        );
+        // The trajectory record lives at the repo root, one level above
+        // the crate manifest.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|d| d.join("BENCH_PR8.json"))
+            .unwrap_or_else(|| std::path::PathBuf::from("BENCH_PR8.json"));
+        match std::fs::write(&path, &json) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
+        }
+    }
+    (last_speedup, widest as f64)
+}
+
+// ---------------------------------------------------------------------------
 // Figure 1
 // ---------------------------------------------------------------------------
 

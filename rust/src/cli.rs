@@ -6,6 +6,7 @@
 //! sven solve   --dataset GLI-85 [--t X --lambda2 Y] [--backend xla|rust]
 //! sven path    --dataset GLI-85 [--grid 40] [--backend xla|rust]
 //! sven serve   --requests 64 [--workers N]   demo service run
+//! sven screen  --responses 8 [--grid 16] [--workers N]   whole-screen multi-response job
 //! ```
 
 use crate::coordinator::{BackendChoice, PathRunner, PathRunnerConfig, Service, ServiceConfig};
@@ -102,6 +103,17 @@ COMMANDS:
       --threads N          linalg worker threads (0 = auto, 1 = serial)
       --kernel K           compute kernel: scalar|avx2|fma|auto [default auto]
       --precision P        compute precision: f64|mixed-f32|auto [default auto]
+  screen                   whole-screen serving: R responses, one design,
+                           one shared preparation, fused batched sweeps
+      --dataset NAME       profile name
+      --seed N             generation seed            [default 0]
+      --responses R        number of response vectors [default 8]
+      --grid K             number of grid points      [default 16]
+      --workers N          pool size                  [default cpus]
+      --early-stop T       deviance-plateau threshold (off by default)
+      --threads N          linalg worker threads (0 = auto, 1 = serial)
+      --kernel K           compute kernel: scalar|avx2|fma|auto [default auto]
+      --precision P        compute precision: f64|mixed-f32|auto [default auto]
   help                     show this message
 
 Thread resolution when --threads is absent: PALLAS_NUM_THREADS (fallback
@@ -129,6 +141,7 @@ pub fn run() -> Result<()> {
         "solve" => cmd_solve(&args),
         "path" => cmd_path(&args),
         "serve" => cmd_serve(&args),
+        "screen" => cmd_screen(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -366,6 +379,74 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "path job: {path_points} points in {} ({:.1} points/s)",
         fmt_duration(path_wall),
         path_points as f64 / path_wall.max(1e-9)
+    );
+    service.shutdown();
+    Ok(())
+}
+
+/// The whole-screen workload: R response vectors against one design,
+/// submitted as a single `JobKind::MultiResponse` job — one preparation
+/// build, λ_max screening in one fused pass, response chunks batched
+/// through the shared-panel Newton.
+fn cmd_screen(args: &Args) -> Result<()> {
+    apply_threads(args)?;
+    apply_kernel(args)?;
+    apply_precision(args)?;
+    let nresp = args.get_usize("responses")?.unwrap_or(8);
+    let backend = backend_choice(args)?;
+    let mut config = ServiceConfig::default();
+    if let Some(w) = args.get_usize("workers")? {
+        config.pool.workers = w;
+    }
+    if let Some(t) = args.get_f64("early-stop")? {
+        config.multi_response_early_stop = Some(t);
+    }
+    let data = load_dataset(args)?;
+    let runner = PathRunner::new(PathRunnerConfig {
+        grid: args.get_usize("grid")?.unwrap_or(16),
+        ..Default::default()
+    });
+    let derived = runner.derive_grid(&data);
+    if derived.is_empty() {
+        bail!("no active path points for this dataset");
+    }
+    let grid = runner.grid_points(&derived);
+    // Demo responses: scaled copies of the profile's response (a real
+    // screen would carry R measured phenotypes over the same design).
+    let responses: Vec<Arc<Vec<f64>>> = (0..nresp)
+        .map(|r| {
+            let f = 1.0 + 0.5 * r as f64 / nresp.max(1) as f64;
+            Arc::new(data.y.iter().map(|v| v * f).collect::<Vec<f64>>())
+        })
+        .collect();
+    let service = Service::start(config);
+    let x = Arc::new(crate::linalg::Design::from(data.x.clone()));
+    let timer = crate::util::Timer::start();
+    let rx = service.submit_multi_response(1, x, responses, grid, backend)?;
+    let res = match rx.recv()?.result {
+        Ok(r) => r.expect_multi_response(),
+        Err(e) => bail!("screen job failed: {e}"),
+    };
+    let wall = timer.elapsed();
+    println!(
+        "{:>4} {:>12} {:>9} {:>7} {:>6}",
+        "resp", "lambda_max", "screened", "points", "nnz"
+    );
+    for r in 0..res.paths.len() {
+        println!(
+            "{:>4} {:>12.4e} {:>9} {:>7} {:>6}",
+            r,
+            res.lambda_max[r],
+            res.screened[r],
+            res.paths[r].len(),
+            res.paths[r].last().map_or(0, |s| s.nnz())
+        );
+    }
+    println!("{}", service.metrics().report());
+    println!(
+        "responses={nresp} wall={} throughput={:.1} responses/s",
+        fmt_duration(wall),
+        nresp as f64 / wall.max(1e-9)
     );
     service.shutdown();
     Ok(())

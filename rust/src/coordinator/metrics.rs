@@ -26,6 +26,10 @@ pub struct Metrics {
     cv_folds: AtomicU64,
     batched_cg_rhs_total: AtomicU64,
     batch_panel_rebuilds: AtomicU64,
+    responses_total: AtomicU64,
+    responses_screened_out: AtomicU64,
+    responses_early_stopped: AtomicU64,
+    segment_handoffs: AtomicU64,
     latencies: Mutex<Vec<f64>>,
     queue_waits: Mutex<Vec<f64>>,
 }
@@ -130,6 +134,34 @@ impl Metrics {
         }
     }
 
+    /// Responses carried by a multi-response job (counted once per job,
+    /// when its shared screening pass runs).
+    pub fn on_responses(&self, n: usize) {
+        if n > 0 {
+            self.responses_total.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Responses the λ_max screen retired without a single SVM solve.
+    pub fn on_responses_screened(&self, n: usize) {
+        if n > 0 {
+            self.responses_screened_out.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Responses whose deviance plateaued before the end of the grid.
+    pub fn on_responses_early_stopped(&self, n: usize) {
+        if n > 0 {
+            self.responses_early_stopped.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// A path segment chained from its predecessor's handed-off warm
+    /// start instead of re-solving the boundary endpoint speculatively.
+    pub fn on_segment_handoff(&self) {
+        self.segment_handoffs.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
     }
@@ -190,6 +222,22 @@ impl Metrics {
         self.batch_panel_rebuilds.load(Ordering::Relaxed)
     }
 
+    pub fn responses_total(&self) -> u64 {
+        self.responses_total.load(Ordering::Relaxed)
+    }
+
+    pub fn responses_screened_out(&self) -> u64 {
+        self.responses_screened_out.load(Ordering::Relaxed)
+    }
+
+    pub fn responses_early_stopped(&self) -> u64 {
+        self.responses_early_stopped.load(Ordering::Relaxed)
+    }
+
+    pub fn segment_handoffs(&self) -> u64 {
+        self.segment_handoffs.load(Ordering::Relaxed)
+    }
+
     /// End-to-end latency summary (None until something completed).
     pub fn latency_summary(&self) -> Option<Summary> {
         let l = self.latencies.lock().unwrap();
@@ -242,7 +290,9 @@ impl Metrics {
              prep_hits={} prep_builds={} prep_evictions={} \
              path_segments={} sv_gather_rebuilds={} cg_iters_total={} \
              refine_iters_total={} f32_panel_bytes={} \
-             cv_folds={} batched_cg_rhs_total={} batch_panel_rebuilds={} {lat}{qw}{kernel}",
+             cv_folds={} batched_cg_rhs_total={} batch_panel_rebuilds={} \
+             responses_total={} responses_screened_out={} \
+             responses_early_stopped={} segment_handoffs={} {lat}{qw}{kernel}",
             self.submitted(),
             self.completed(),
             self.failed(),
@@ -257,7 +307,11 @@ impl Metrics {
             self.f32_panel_bytes(),
             self.cv_folds(),
             self.batched_cg_rhs_total(),
-            self.batch_panel_rebuilds()
+            self.batch_panel_rebuilds(),
+            self.responses_total(),
+            self.responses_screened_out(),
+            self.responses_early_stopped(),
+            self.segment_handoffs()
         )
     }
 }
@@ -353,6 +407,28 @@ mod tests {
         assert!(report.contains("cv_folds=3"));
         assert!(report.contains("batched_cg_rhs_total=12"));
         assert!(report.contains("batch_panel_rebuilds=3"));
+    }
+
+    #[test]
+    fn multi_response_and_handoff_counters() {
+        let m = Metrics::new();
+        m.on_responses(8);
+        m.on_responses_screened(2);
+        m.on_responses_early_stopped(3);
+        m.on_responses(0); // no-ops must not count
+        m.on_responses_screened(0);
+        m.on_responses_early_stopped(0);
+        m.on_segment_handoff();
+        m.on_segment_handoff();
+        assert_eq!(m.responses_total(), 8);
+        assert_eq!(m.responses_screened_out(), 2);
+        assert_eq!(m.responses_early_stopped(), 3);
+        assert_eq!(m.segment_handoffs(), 2);
+        let report = m.report();
+        assert!(report.contains("responses_total=8"));
+        assert!(report.contains("responses_screened_out=2"));
+        assert!(report.contains("responses_early_stopped=3"));
+        assert!(report.contains("segment_handoffs=2"));
     }
 
     #[test]

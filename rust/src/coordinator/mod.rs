@@ -33,11 +33,11 @@ pub mod service;
 
 pub use cv::CvPathResult;
 pub use metrics::Metrics;
-pub use path::{GridPoint, PathRunResult, PathRunner, PathRunnerConfig};
+pub use path::{GridPoint, MultiSweepOut, PathRunResult, PathRunner, PathRunnerConfig};
 pub use pool::{Pool, PoolConfig};
 pub use prep_cache::PrepCache;
 pub use queue::Queue;
 pub use service::{
-    BackendChoice, JobKind, JobResult, Service, ServiceClosed, ServiceConfig,
-    ServiceConfigError, SolveJob, SolveOutcome,
+    BackendChoice, JobKind, JobResult, MultiResponseResult, Service, ServiceClosed,
+    ServiceConfig, ServiceConfigError, SolveJob, SolveOutcome,
 };

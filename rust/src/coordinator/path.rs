@@ -82,6 +82,138 @@ pub fn sweep_prepared<B: SvmBackend>(
     Ok((out, SvmBatchStats::default()))
 }
 
+/// Output of [`sweep_multi_prepared`] for one chunk of responses.
+pub struct MultiSweepOut {
+    /// Per-response solved paths, indexed like the `live` argument.
+    /// Early-stopped responses carry a truncated prefix of the grid.
+    pub paths: Vec<Vec<EnSolution>>,
+    /// Grid index at which each response's deviance plateaued (its path
+    /// still includes that point); `None` ⇒ the full grid was solved.
+    pub early_stopped_at: Vec<Option<usize>>,
+    /// Fusion stats summed over every batched solve of the sweep.
+    pub stats: SvmBatchStats,
+}
+
+/// Multi-response sweep over one shared preparation: solve the full
+/// `grid` for every response in `live` (indices into `responses`).
+///
+/// Primal-mode preparations fuse **all** `(response × grid point)`
+/// members into one batched Newton ([`Sven::solve_prepared_batch_multi`])
+/// — the response dimension rides the same panel width as path points,
+/// which is the widest workout the blocked-CG substrate gets. Dual-mode
+/// preparations run per-response warm-chained sequential sweeps through
+/// [`Sven::solve_prepared_response`], reusing the preparation's cached
+/// `G₀` across responses. Either way response `r`'s path is bit-for-bit
+/// what a standalone [`sweep_prepared`] over a fresh `(x, yᵣ)`
+/// preparation produces (same grid, warm chaining on).
+///
+/// `early_stop: Some(thresh)` switches to a point-by-point sweep that
+/// retires a response once the relative deviance improvement between
+/// consecutive grid points drops to `thresh` or below — the solved
+/// prefix is still bit-identical to the standalone path's prefix
+/// (batch composition never moves a bit); the default `None` keeps
+/// full paths.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_multi_prepared<B: SvmBackend>(
+    sven: &Sven<B>,
+    prep: &dyn SvmPrep,
+    scratch: &mut SvmScratch,
+    x: &Arc<Design>,
+    responses: &[Arc<Vec<f64>>],
+    live: &[usize],
+    grid: &[GridPoint],
+    early_stop: Option<f64>,
+) -> anyhow::Result<MultiSweepOut> {
+    let r = live.len();
+    let primal = prep.mode() == SvmMode::Primal;
+    let mut paths: Vec<Vec<EnSolution>> =
+        (0..r).map(|_| Vec::with_capacity(grid.len())).collect();
+    let mut stopped: Vec<Option<usize>> = vec![None; r];
+    let mut stats = SvmBatchStats::default();
+    let Some(thresh) = early_stop else {
+        if primal && r * grid.len() > 1 {
+            let members: Vec<(usize, f64, f64)> = live
+                .iter()
+                .flat_map(|&resp| grid.iter().map(move |gp| (resp, gp.t, gp.lambda2)))
+                .collect();
+            let (sols, st) =
+                sven.solve_prepared_batch_multi(prep, scratch, x, responses, &members)?;
+            stats.merge(&st);
+            let mut it = sols.into_iter();
+            for path in paths.iter_mut() {
+                for _ in 0..grid.len() {
+                    path.push(it.next().expect("one solution per member"));
+                }
+            }
+        } else {
+            for (i, &resp) in live.iter().enumerate() {
+                let mut warm: Option<SvmWarm> = None;
+                for gp in grid {
+                    let prob =
+                        EnProblem::shared(x.clone(), responses[resp].clone(), gp.t, gp.lambda2);
+                    let sol =
+                        sven.solve_prepared_response(prep, scratch, &prob, warm.as_ref())?;
+                    warm = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+                    paths[i].push(sol);
+                }
+            }
+        }
+        return Ok(MultiSweepOut { paths, early_stopped_at: stopped, stats });
+    };
+    // Early-stop sweep: one grid point at a time across the still-live
+    // responses (batched in the primal), retiring plateaued columns the
+    // way blocked CG retires converged ones.
+    let mut active: Vec<usize> = (0..r).collect();
+    let mut warms: Vec<Option<SvmWarm>> = vec![None; r];
+    let mut prev_dev: Vec<Option<f64>> = vec![None; r];
+    for (k, gp) in grid.iter().enumerate() {
+        if active.is_empty() {
+            break;
+        }
+        if primal && active.len() > 1 {
+            let members: Vec<(usize, f64, f64)> =
+                active.iter().map(|&i| (live[i], gp.t, gp.lambda2)).collect();
+            let (sols, st) =
+                sven.solve_prepared_batch_multi(prep, scratch, x, responses, &members)?;
+            stats.merge(&st);
+            for (&i, sol) in active.iter().zip(sols) {
+                paths[i].push(sol);
+            }
+        } else {
+            for &i in &active {
+                let prob = EnProblem::shared(
+                    x.clone(),
+                    responses[live[i]].clone(),
+                    gp.t,
+                    gp.lambda2,
+                );
+                let sol = sven.solve_prepared_response(prep, scratch, &prob, warms[i].as_ref())?;
+                warms[i] = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+                paths[i].push(sol);
+            }
+        }
+        let mut keep = Vec::with_capacity(active.len());
+        for &i in &active {
+            let sol = paths[i].last().expect("point just solved");
+            let mut resid = x.matvec(&sol.beta);
+            vecops::axpy(-1.0, responses[live[i]].as_slice(), &mut resid);
+            let dev = vecops::norm2_sq(&resid);
+            let plateaued = match prev_dev[i] {
+                Some(pd) => pd - dev <= thresh * pd.max(f64::MIN_POSITIVE),
+                None => false,
+            };
+            prev_dev[i] = Some(dev);
+            if plateaued {
+                stopped[i] = Some(k);
+            } else {
+                keep.push(i);
+            }
+        }
+        active = keep;
+    }
+    Ok(MultiSweepOut { paths, early_stopped_at: stopped, stats })
+}
+
 /// Configuration of a path run.
 #[derive(Clone, Debug)]
 pub struct PathRunnerConfig {
@@ -304,6 +436,126 @@ mod tests {
         let sven = Sven::new(RustBackend::default());
         let results = runner.derive_and_run(&d, &sven).unwrap();
         assert!(results.iter().all(|r| r.seconds > 0.0));
+    }
+
+    #[test]
+    fn multi_sweep_matches_per_response_sweeps_bitwise() {
+        // One shared prep + sweep_multi_prepared ≡ per-response
+        // sweep_prepared over fresh preps, bit for bit, in both regimes.
+        use crate::rng::Rng;
+        let grid = [
+            GridPoint { t: 0.3, lambda2: 0.5 },
+            GridPoint { t: 0.6, lambda2: 0.5 },
+            GridPoint { t: 0.9, lambda2: 0.4 },
+        ];
+        for (n, p) in [(14usize, 20usize), (60, 8)] {
+            // (14, 20): 2p > n ⇒ primal; (60, 8): dual.
+            let mut rng = Rng::seed_from(206);
+            let x: Arc<Design> =
+                Arc::new(crate::linalg::Mat::from_fn(n, p, |_, _| rng.normal()).into());
+            let responses: Vec<Arc<Vec<f64>>> = (0..3)
+                .map(|_| Arc::new((0..n).map(|_| rng.normal()).collect::<Vec<f64>>()))
+                .collect();
+            let sven = Sven::new(RustBackend::default());
+            let prep = sven.prepare_shared(&x, &responses[0]).unwrap();
+            let mut scratch = SvmScratch::new();
+            let live = [0usize, 1, 2];
+            let multi = sweep_multi_prepared(
+                &sven,
+                prep.as_ref(),
+                &mut scratch,
+                &x,
+                &responses,
+                &live,
+                &grid,
+                None,
+            )
+            .unwrap();
+            assert!(multi.early_stopped_at.iter().all(Option::is_none));
+            for (i, y) in responses.iter().enumerate() {
+                let solo_prep = sven.prepare_shared(&x, y).unwrap();
+                let (solo, _) = sweep_prepared(
+                    &sven,
+                    solo_prep.as_ref(),
+                    &mut scratch,
+                    &x,
+                    y,
+                    &grid,
+                    None,
+                    true,
+                )
+                .unwrap();
+                assert_eq!(multi.paths[i].len(), solo.len());
+                for (k, (ms, ss)) in multi.paths[i].iter().zip(&solo).enumerate() {
+                    assert_eq!(ms.iterations, ss.iterations, "n={n} resp {i} pt {k}");
+                    for j in 0..p {
+                        assert_eq!(
+                            ms.beta[j].to_bits(),
+                            ss.beta[j].to_bits(),
+                            "n={n} resp {i} pt {k} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_sweep_early_stop_truncates_to_bitwise_prefix() {
+        // A plateau threshold of 1.0 retires every response right after
+        // its second point (pd − dev ≤ pd always); the solved prefix
+        // must be bit-identical to the full sweep's prefix.
+        use crate::rng::Rng;
+        let grid = [
+            GridPoint { t: 0.2, lambda2: 0.5 },
+            GridPoint { t: 0.5, lambda2: 0.5 },
+            GridPoint { t: 0.8, lambda2: 0.5 },
+        ];
+        let mut rng = Rng::seed_from(207);
+        let x: Arc<Design> =
+            Arc::new(crate::linalg::Mat::from_fn(12, 18, |_, _| rng.normal()).into());
+        let responses: Vec<Arc<Vec<f64>>> = (0..2)
+            .map(|_| Arc::new((0..12).map(|_| rng.normal()).collect::<Vec<f64>>()))
+            .collect();
+        let sven = Sven::new(RustBackend::default());
+        let prep = sven.prepare_shared(&x, &responses[0]).unwrap();
+        let mut scratch = SvmScratch::new();
+        let live = [0usize, 1];
+        let full = sweep_multi_prepared(
+            &sven,
+            prep.as_ref(),
+            &mut scratch,
+            &x,
+            &responses,
+            &live,
+            &grid,
+            None,
+        )
+        .unwrap();
+        let stopped = sweep_multi_prepared(
+            &sven,
+            prep.as_ref(),
+            &mut scratch,
+            &x,
+            &responses,
+            &live,
+            &grid,
+            Some(1.0),
+        )
+        .unwrap();
+        for i in 0..2 {
+            assert_eq!(stopped.early_stopped_at[i], Some(1), "resp {i}");
+            assert_eq!(stopped.paths[i].len(), 2, "resp {i}");
+            for (k, (ts, fs)) in stopped.paths[i].iter().zip(&full.paths[i]).enumerate() {
+                for j in 0..18 {
+                    assert_eq!(
+                        ts.beta[j].to_bits(),
+                        fs.beta[j].to_bits(),
+                        "resp {i} pt {k} j={j}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

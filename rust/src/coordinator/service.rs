@@ -13,12 +13,14 @@
 
 use super::cv::{self, CvPathResult};
 use super::metrics::Metrics;
-use super::path::{sweep_prepared, GridPoint};
+use super::path::{sweep_multi_prepared, sweep_prepared, GridPoint};
 use super::pool::{Pool, PoolConfig};
 use super::prep_cache::PrepCache;
-use crate::linalg::{try_resolve_precision, Design, Precision};
-use crate::solvers::elastic_net::{EnProblem, EnSolution};
-use crate::solvers::sven::{RustBackend, Sven, SvenConfig, SvmPrep, SvmScratch, SvmWarm};
+use crate::linalg::{try_resolve_precision, Design, MultiVec, Precision};
+use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
+use crate::solvers::sven::{
+    RustBackend, Sven, SvenConfig, SvmMode, SvmPrep, SvmScratch, SvmWarm,
+};
 use crate::util::Timer;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -60,6 +62,18 @@ pub enum JobKind {
     /// full data. Each fold's path is bit-for-bit identical to a
     /// standalone `Path` job on that fold's training data.
     CvPath { folds: usize, grid: Vec<GridPoint> },
+    /// A whole screen: sweep the same grid for R response vectors that
+    /// share one design — the genomics/multi-target serving pattern. The
+    /// job builds **one** preparation (the reduced sample set is
+    /// y-independent up to the ±y/t column shifts, which the per-column
+    /// shift kernels apply per response), fans out response-chunk work
+    /// items across the pool, batches each chunk's (response × grid)
+    /// solves through the fused multi-response Newton so R responses
+    /// share gathered SV panels and blocked-CG panel products, and
+    /// screens responses by λ_max in one fused `XᵀY` panel product
+    /// before any solve. Each response's path is bit-for-bit identical
+    /// to a standalone `Path` job on (X, yᵣ). Rust backend only.
+    MultiResponse { responses: Vec<Arc<Vec<f64>>>, grid: Vec<GridPoint> },
 }
 
 /// A solve job. Data sets (dense or sparse [`Design`]s) are shared via
@@ -89,6 +103,27 @@ pub enum JobResult {
     Path(Vec<EnSolution>),
     /// Fold paths, CV-error curve, and the winning refit.
     CvPath(CvPathResult),
+    /// Per-response paths plus the screening verdicts.
+    MultiResponse(MultiResponseResult),
+}
+
+/// Result of a `JobKind::MultiResponse` job.
+#[derive(Clone, Debug)]
+pub struct MultiResponseResult {
+    /// Per-response solved paths, in response order. An early-stopped
+    /// response carries the solved prefix of the grid (still bit-for-bit
+    /// the standalone path's prefix); everyone else carries the full
+    /// grid. Screened responses carry all-zero solutions.
+    pub paths: Vec<Vec<EnSolution>>,
+    /// Per-response λ_max = ‖Xᵀyᵣ‖∞ / n, from the fused screening pass.
+    pub lambda_max: Vec<f64>,
+    /// Responses the screen retired without any SVM solve (primal mode,
+    /// exactly-zero response ⇒ β = 0 at every grid point, provably
+    /// bit-identical to solving).
+    pub screened: Vec<bool>,
+    /// Grid index at which each response's deviance plateaued (its path
+    /// still includes that point); `None` ⇒ the full grid was solved.
+    pub early_stopped_at: Vec<Option<usize>>,
 }
 
 impl JobResult {
@@ -113,6 +148,14 @@ impl JobResult {
         match self {
             JobResult::CvPath(res) => res,
             _ => panic!("expected a cv-path result"),
+        }
+    }
+
+    /// Unwrap a multi-response result (panics otherwise — caller bug).
+    pub fn expect_multi_response(self) -> MultiResponseResult {
+        match self {
+            JobResult::MultiResponse(res) => res,
+            _ => panic!("expected a multi-response result"),
         }
     }
 }
@@ -154,6 +197,13 @@ pub struct ServiceConfig {
     /// so grids shorter than `2·min` — and every grid on a one-worker
     /// pool — run unsegmented. `usize::MAX` disables segmentation.
     pub path_segment_min: usize,
+    /// Opt-in per-response early stopping for `JobKind::MultiResponse`:
+    /// a response retires after grid point k when its training deviance
+    /// plateaus (`prev − dev ≤ thresh·prev`). `None` (the default)
+    /// solves every grid point, keeping each response's path bit-for-bit
+    /// a standalone `Path` job; `Some(thresh)` trades the tail of the
+    /// path for throughput while the solved prefix stays bit-identical.
+    pub multi_response_early_stop: Option<f64>,
 }
 
 impl Default for ServiceConfig {
@@ -164,6 +214,7 @@ impl Default for ServiceConfig {
             artifact_dir: None,
             prep_cache_capacity: 16,
             path_segment_min: 8,
+            multi_response_early_stop: None,
         }
     }
 }
@@ -228,6 +279,14 @@ impl ServiceConfig {
                     .into(),
             ));
         }
+        if let Some(thresh) = self.multi_response_early_stop {
+            if !thresh.is_finite() || thresh <= 0.0 {
+                return Err(ServiceConfigError(format!(
+                    "multi_response_early_stop must be a positive finite threshold \
+                     (got {thresh}); use None to solve every grid point"
+                )));
+            }
+        }
         Ok(())
     }
 }
@@ -265,11 +324,13 @@ fn validate_job(x: &Design, y: &[f64], points: &[GridPoint]) -> Result<(), Strin
 }
 
 /// What actually travels through the worker pool: a whole job, one
-/// segment of a split `Path` grid, or one fold×segment of a `CvPath`.
+/// segment of a split `Path` grid, one fold×segment of a `CvPath`, or
+/// one response chunk of a `MultiResponse` screen.
 enum WorkItem {
     Job(SolveJob),
     Segment(PathSegment),
     CvSegment(CvSegment),
+    MultiSegment(MultiSegment),
 }
 
 /// One segment of a segmented path job: the half-open grid range
@@ -286,7 +347,16 @@ struct PathSegment {
 /// Every segment solves its slice of the grid independently; a segment
 /// with `start > 0` first re-solves the previous segment's endpoint
 /// (`grid[start-1]`) cold and hands its β to its own first point as the
-/// warm start — the *speculative warm start*. The result is bit-for-bit
+/// warm start — the *speculative warm start*. Speculation is the
+/// fallback, not the default: a finishing segment serializes its final
+/// solution's warm start into its successor's `handoffs` slot, so a
+/// segment that starts after its predecessor finished (always, on a
+/// one-worker pool; whenever the queue ran deep otherwise) skips the
+/// duplicated endpoint solve entirely. The handed-off warm start is
+/// bit-identical to the speculative one — the cold endpoint β equals
+/// the chained endpoint β (the invariant below) and `beta_to_warm` is a
+/// pure function of it — so taking either route cannot move bits, only
+/// wall-clock. The result is bit-for-bit
 /// the sequential chain's because the SVM solves are warm-start-
 /// invariant in their final iterate: the primal ignores dual warm starts
 /// entirely, and the dual active-set Newton's last iterate is the exact
@@ -315,6 +385,11 @@ struct SegmentedPath {
     /// Earliest submit→pickup wait across segments (the job's effective
     /// queue wait).
     first_pickup: Mutex<Option<f64>>,
+    /// Per-segment warm-start hand-off slots: slot k holds segment k−1's
+    /// final warm start once that segment lands (slot 0 stays empty —
+    /// the first segment starts cold). A segment picking up checks its
+    /// slot before falling back to the speculative endpoint re-solve.
+    handoffs: Vec<Mutex<Option<SvmWarm>>>,
 }
 
 impl SegmentedPath {
@@ -409,6 +484,10 @@ struct SharedCvPath {
     /// Segments per fold (the same split a standalone `Path` job of this
     /// grid would get).
     nseg: usize,
+    /// Fold-major warm-start hand-off slots (`fold · nseg + segment`),
+    /// the same serialize-else-speculate protocol as [`SegmentedPath`]
+    /// applied within each fold's chain.
+    handoffs: Vec<Mutex<Option<SvmWarm>>>,
 }
 
 impl SharedCvPath {
@@ -444,6 +523,121 @@ impl SharedCvPath {
     fn send_outcome(&self, result: Result<JobResult, String>, metrics: &Metrics) {
         let total = self.submitted.elapsed();
         let queue_wait = self.first_pickup.lock().unwrap().unwrap_or(0.0);
+        match &result {
+            Ok(_) => metrics.on_complete(total, queue_wait),
+            Err(_) => metrics.on_fail(queue_wait),
+        }
+        let _ = self.reply.lock().unwrap().send(SolveOutcome {
+            id: self.id,
+            result,
+            total_seconds: total,
+            queue_wait_seconds: queue_wait,
+        });
+    }
+}
+
+/// One response chunk of a `MultiResponse` job: the half-open response
+/// range `[start, end)` plus a handle on the job-wide shared state.
+struct MultiSegment {
+    shared: Arc<SharedMultiResponse>,
+    index: usize,
+    start: usize,
+    end: usize,
+}
+
+/// Per-response results of one chunk: solved paths plus where (if
+/// anywhere) each response's deviance plateaued.
+type MultiPart = (Vec<Vec<EnSolution>>, Vec<Option<usize>>);
+
+/// The shared screening verdicts of a `MultiResponse` job, computed
+/// once by the first chunk to reach a preparation: per-response λ_max
+/// from one fused `XᵀY` panel product, and which responses the screen
+/// retires outright.
+struct ScreenInfo {
+    lambda_max: Vec<f64>,
+    screened: Vec<bool>,
+}
+
+/// Shared state of a `MultiResponse` job fanned out as response-chunk
+/// work items.
+///
+/// All chunks solve against **one** preparation (the reduced sample set
+/// is response-independent up to the ±y/t shifts, so the prep built on
+/// `responses[0]` serves every response — the prep cache's single-flight
+/// build makes that exactly one build per job at any worker count). The
+/// first chunk to hold the preparation also computes [`ScreenInfo`] for
+/// the whole job under the `screen` mutex; later chunks reuse it.
+struct SharedMultiResponse {
+    id: u64,
+    dataset_id: u64,
+    x: Arc<Design>,
+    responses: Vec<Arc<Vec<f64>>>,
+    backend: BackendChoice,
+    grid: Vec<GridPoint>,
+    /// Job-wide screening verdicts, lazily built by the first chunk.
+    screen: Mutex<Option<Arc<ScreenInfo>>>,
+    reply: Mutex<Sender<SolveOutcome>>,
+    submitted: Timer,
+    /// Per-chunk results, in chunk (= response) order.
+    parts: Mutex<Vec<Option<Result<MultiPart, String>>>>,
+    /// Chunks still outstanding; the worker that drops this to zero
+    /// assembles and replies.
+    remaining: AtomicUsize,
+    first_pickup: Mutex<Option<f64>>,
+}
+
+impl SharedMultiResponse {
+    /// Record a chunk result; the last chunk to land assembles the
+    /// response-ordered result and sends the outcome.
+    fn finish_segment(
+        &self,
+        index: usize,
+        result: Result<MultiPart, String>,
+        metrics: &Metrics,
+    ) {
+        {
+            let mut parts = self.parts.lock().unwrap();
+            parts[index] = Some(result);
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+            return;
+        }
+        let total = self.submitted.elapsed();
+        let queue_wait = self.first_pickup.lock().unwrap().unwrap_or(0.0);
+        let mut parts = std::mem::take(&mut *self.parts.lock().unwrap());
+        let mut paths = Vec::with_capacity(self.responses.len());
+        let mut stops = Vec::with_capacity(self.responses.len());
+        let mut err: Option<String> = None;
+        for part in parts.iter_mut() {
+            match part.take() {
+                Some(Ok((chunk_paths, chunk_stops))) => {
+                    paths.extend(chunk_paths);
+                    stops.extend(chunk_stops);
+                }
+                Some(Err(e)) => {
+                    err = Some(e);
+                    break;
+                }
+                None => {
+                    err = Some("internal: response chunk lost".to_string());
+                    break;
+                }
+            }
+        }
+        let result = match err {
+            None => match self.screen.lock().unwrap().clone() {
+                Some(screen) => Ok(JobResult::MultiResponse(MultiResponseResult {
+                    paths,
+                    lambda_max: screen.lambda_max.clone(),
+                    screened: screen.screened.clone(),
+                    early_stopped_at: stops,
+                })),
+                // Unreachable in practice: any chunk that returned Ok
+                // computed (or reused) the screen first.
+                None => Err("internal: screening info missing".to_string()),
+            },
+            Some(e) => Err(e),
+        };
         match &result {
             Ok(_) => metrics.on_complete(total, queue_wait),
             Err(_) => metrics.on_fail(queue_wait),
@@ -615,6 +809,11 @@ impl WorkerCtx {
             JobKind::CvPath { .. } => {
                 return Err("internal: CvPath jobs are dispatched as fold segments".into())
             }
+            JobKind::MultiResponse { .. } => {
+                return Err(
+                    "internal: MultiResponse jobs are dispatched as response chunks".into()
+                )
+            }
         }?;
         match &job.kind {
             JobKind::Point { t, lambda2 } => {
@@ -671,7 +870,9 @@ impl WorkerCtx {
                 }
                 Ok(JobResult::Path(sols))
             }
-            JobKind::CvPath { .. } => unreachable!("handled above"),
+            JobKind::CvPath { .. } | JobKind::MultiResponse { .. } => {
+                unreachable!("handled above")
+            }
         }
     }
 
@@ -701,12 +902,22 @@ impl WorkerCtx {
             &sp.y,
             &sp.grid[lo..seg.end],
         )?;
-        // Speculative warm start: re-solve the previous segment's
-        // endpoint cold; its β is bit-identical to the chained solve's
-        // (see the `SegmentedPath` invariant), so handing it to our first
-        // point reproduces the sequential chain exactly.
+        // Warm start for the first point: take the predecessor's
+        // handed-off warm start if it already landed; fall back to the
+        // speculative endpoint re-solve only when this worker would
+        // otherwise wait on the predecessor. The two warm starts are
+        // bit-identical — the cold endpoint β equals the chained β (the
+        // `SegmentedPath` invariant) and `beta_to_warm` is a pure
+        // function of it — so the route taken is purely a wall-clock
+        // decision.
         let mut warm0: Option<SvmWarm> = None;
         if seg.start > 0 {
+            if let Some(w) = sp.handoffs[seg.index].lock().unwrap().take() {
+                self.metrics.on_segment_handoff();
+                warm0 = Some(w);
+            }
+        }
+        if seg.start > 0 && warm0.is_none() {
             let gp = sp.grid[seg.start - 1];
             let prob = EnProblem::shared(sp.x.clone(), sp.y.clone(), gp.t, gp.lambda2);
             let sol = match sp.backend {
@@ -748,6 +959,16 @@ impl WorkerCtx {
             ),
         }
         .map_err(|e| e.to_string())?;
+        // Hand our endpoint warm start to the successor before metering
+        // — the earlier it lands, the likelier the successor skips its
+        // speculative re-solve.
+        if seg.index + 1 < sp.handoffs.len() {
+            if let Some(sol) = sols.last() {
+                let gp = sp.grid[seg.end - 1];
+                *sp.handoffs[seg.index + 1].lock().unwrap() =
+                    Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+            }
+        }
         self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
         for sol in &sols {
             self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
@@ -793,8 +1014,17 @@ impl WorkerCtx {
         let fold_ds = cv::fold_dataset_id(sp.dataset_id, seg.fold as u64);
         let lo = seg.start.saturating_sub(1);
         let prep = self.checked_prep(fold_ds, sp.backend, &fx, &fy, &sp.grid[lo..seg.end])?;
+        // Serialize-else-speculate, exactly as in `solve_segment`, but
+        // within this fold's chain of hand-off slots.
+        let slot0 = seg.fold * sp.nseg;
         let mut warm0: Option<SvmWarm> = None;
         if seg.start > 0 {
+            if let Some(w) = sp.handoffs[slot0 + seg.index].lock().unwrap().take() {
+                self.metrics.on_segment_handoff();
+                warm0 = Some(w);
+            }
+        }
+        if seg.start > 0 && warm0.is_none() {
             let gp = sp.grid[seg.start - 1];
             let prob = EnProblem::shared(fx.clone(), fy.clone(), gp.t, gp.lambda2);
             let sol = match sp.backend {
@@ -836,6 +1066,13 @@ impl WorkerCtx {
             ),
         }
         .map_err(|e| e.to_string())?;
+        if seg.index + 1 < sp.nseg {
+            if let Some(sol) = sols.last() {
+                let gp = sp.grid[seg.end - 1];
+                *sp.handoffs[slot0 + seg.index + 1].lock().unwrap() =
+                    Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+            }
+        }
         self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
         for sol in &sols {
             self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
@@ -868,6 +1105,148 @@ impl WorkerCtx {
         .map_err(|e| e.to_string())?;
         self.metrics.on_solve_stats(best.cg_iters, best.gather_rebuilds, best.refine_passes);
         Ok(JobResult::CvPath(CvPathResult { fold_paths, cv_errors, best_index, best }))
+    }
+
+    /// Run one response chunk of a `MultiResponse` job; the last chunk
+    /// to land assembles the response-ordered result and replies.
+    fn handle_multi_segment(&mut self, seg: MultiSegment) {
+        let sp = seg.shared.clone();
+        {
+            let wait = sp.submitted.elapsed();
+            let mut fp = sp.first_pickup.lock().unwrap();
+            *fp = Some(fp.map_or(wait, |v| v.min(wait)));
+        }
+        let result = self.solve_multi_segment(&seg);
+        sp.finish_segment(seg.index, result, &self.metrics);
+    }
+
+    /// Screening verdicts for the whole job, computed once under the
+    /// shared mutex: one fused `XᵀY` panel product gives every
+    /// response's λ_max in a single pass over the design. A response is
+    /// retired outright only when skipping it provably cannot move bits
+    /// — primal mode and an exactly-zero response, where the Newton
+    /// solve converges at iteration zero with w = 0 and the back-map
+    /// returns exact-zero β at every grid point.
+    fn ensure_screen(&self, sp: &SharedMultiResponse, primal: bool) -> Arc<ScreenInfo> {
+        let mut guard = sp.screen.lock().unwrap();
+        if let Some(info) = &*guard {
+            return info.clone();
+        }
+        let n = sp.x.rows();
+        let r = sp.responses.len();
+        let mut ypanel = MultiVec::zeros(n, r);
+        for (j, y) in sp.responses.iter().enumerate() {
+            ypanel.col_mut(j).copy_from_slice(y);
+        }
+        let mut grads = MultiVec::zeros(sp.x.cols(), r);
+        sp.x.matvec_t_multi_into(&ypanel, &mut grads);
+        let lambda_max: Vec<f64> = (0..r)
+            .map(|j| grads.col(j).iter().fold(0.0f64, |m, &g| m.max(g.abs())) / n as f64)
+            .collect();
+        let screened: Vec<bool> = sp
+            .responses
+            .iter()
+            .map(|y| primal && y.iter().all(|&v| v.to_bits() == 0))
+            .collect();
+        self.metrics.on_responses(r);
+        self.metrics.on_responses_screened(screened.iter().filter(|&&s| s).count());
+        let info = Arc::new(ScreenInfo { lambda_max, screened });
+        *guard = Some(info.clone());
+        info
+    }
+
+    /// The chunk solve: fetch the job's one shared preparation (every
+    /// chunk asks the single-flight cache for the same key, so it is
+    /// built exactly once per job at any worker count), compute or reuse
+    /// the screening verdicts, then run one fused multi-response sweep
+    /// over this chunk's unscreened responses. The preparation is built
+    /// on `responses[0]` but serves every response: the reduced sample
+    /// columns are response-independent, and the ±y/t shifts are applied
+    /// per solve by the shift-aware kernels.
+    fn solve_multi_segment(&mut self, seg: &MultiSegment) -> Result<MultiPart, String> {
+        let sp = seg.shared.as_ref();
+        let prep = self.checked_prep(
+            sp.dataset_id,
+            sp.backend,
+            &sp.x,
+            &sp.responses[0],
+            &sp.grid,
+        )?;
+        let screen = self.ensure_screen(sp, prep.mode() == SvmMode::Primal);
+        let live: Vec<usize> =
+            (seg.start..seg.end).filter(|&r| !screen.screened[r]).collect();
+        let out = sweep_multi_prepared(
+            &self.rust,
+            prep.as_ref(),
+            &mut self.scratch,
+            &sp.x,
+            &sp.responses,
+            &live,
+            &sp.grid,
+            self.config.multi_response_early_stop,
+        )
+        .map_err(|e| e.to_string())?;
+        self.metrics.on_batch_stats(out.stats.batched_rhs, out.stats.panel_builds);
+        let mut live_paths = out.paths.into_iter();
+        let mut live_stops = out.early_stopped_at.into_iter();
+        let mut paths = Vec::with_capacity(seg.end - seg.start);
+        let mut stops = Vec::with_capacity(seg.end - seg.start);
+        for r in seg.start..seg.end {
+            if screen.screened[r] {
+                paths.push(self.screened_path(sp, r));
+                stops.push(None);
+            } else {
+                let path = live_paths.next().expect("one path per live response");
+                for sol in &path {
+                    self.metrics.on_solve_stats(
+                        sol.cg_iters,
+                        sol.gather_rebuilds,
+                        sol.refine_passes,
+                    );
+                }
+                paths.push(path);
+                stops.push(live_stops.next().expect("one stop flag per live response"));
+            }
+        }
+        self.metrics
+            .on_responses_early_stopped(stops.iter().filter(|s| s.is_some()).count());
+        Ok((paths, stops))
+    }
+
+    /// Path of a screened (exactly-zero, primal-mode) response: β = 0 at
+    /// every grid point, with the same fields a real solve of the zero
+    /// response produces. The real solve converges at Newton iteration
+    /// zero — w = 0 leaves every slack at exactly 1.0, the ±y/t shift
+    /// terms vanish with y = 0 and the paired gradient contributions
+    /// cancel exactly — before any CG, panel gather or refinement, and
+    /// the back-map of the resulting α (`α_j = α_{p+j} = 2C`) yields
+    /// exact +0.0 β bits with no degeneracy. Only `seconds` differs,
+    /// which nothing bit-compares.
+    fn screened_path(&self, sp: &SharedMultiResponse, r: usize) -> Vec<EnSolution> {
+        let p = sp.x.cols();
+        sp.grid
+            .iter()
+            .map(|gp| {
+                let beta = vec![0.0; p];
+                let prob = EnProblem::shared(
+                    sp.x.clone(),
+                    sp.responses[r].clone(),
+                    gp.t,
+                    gp.lambda2,
+                );
+                EnSolution {
+                    objective: prob.objective(&beta),
+                    beta,
+                    solver: EnSolverKind::SvenCpu,
+                    iterations: 0,
+                    cg_iters: 0,
+                    gather_rebuilds: 0,
+                    refine_passes: 0,
+                    seconds: 0.0,
+                    degenerate: None,
+                }
+            })
+            .collect()
     }
 }
 
@@ -911,6 +1290,7 @@ impl Service {
                 WorkItem::Job(job) => ctx.handle(job),
                 WorkItem::Segment(seg) => ctx.handle_segment(seg),
                 WorkItem::CvSegment(seg) => ctx.handle_cv_segment(seg),
+                WorkItem::MultiSegment(seg) => ctx.handle_multi_segment(seg),
             },
         );
         Ok(Service {
@@ -976,6 +1356,11 @@ impl Service {
             JobKind::CvPath { folds, grid } => {
                 return self
                     .submit_cv(id, dataset_id, x, y, folds, grid, backend, tx)
+                    .map(|()| rx);
+            }
+            JobKind::MultiResponse { responses, grid } => {
+                return self
+                    .submit_multi(id, dataset_id, x, responses, grid, backend, tx)
                     .map(|()| rx);
             }
             point => point,
@@ -1047,6 +1432,7 @@ impl Service {
             parts: Mutex::new((0..nseg).map(|_| None).collect()),
             remaining: AtomicUsize::new(nseg),
             first_pickup: Mutex::new(None),
+            handoffs: (0..nseg).map(|_| Mutex::new(None)).collect(),
         });
         // Contiguous ranges, sized as evenly as integer division allows.
         let base = len / nseg;
@@ -1138,6 +1524,7 @@ impl Service {
             remaining: AtomicUsize::new(folds * nseg),
             first_pickup: Mutex::new(None),
             nseg,
+            handoffs: (0..folds * nseg).map(|_| Mutex::new(None)).collect(),
         });
         let base = len / nseg;
         let extra = len % nseg;
@@ -1169,6 +1556,109 @@ impl Service {
                     }
                     break 'folds;
                 }
+            }
+        }
+        self.metrics.on_submit();
+        Ok(())
+    }
+
+    /// Enqueue a multi-response job as `segments_for(R)` contiguous
+    /// response chunks (the widest chunks the pool can still spread —
+    /// wide chunks maximize fused-panel batch width). Bad parameters
+    /// fail fast as an accepted-then-failed outcome before any chunk
+    /// burns a sweep; a service closing mid-submit fails the unqueued
+    /// chunks so the queued ones still assemble (to an error).
+    #[allow(clippy::too_many_arguments)]
+    fn submit_multi(
+        &self,
+        id: u64,
+        dataset_id: u64,
+        x: Arc<Design>,
+        responses: Vec<Arc<Vec<f64>>>,
+        grid: Vec<GridPoint>,
+        backend: BackendChoice,
+        reply: Sender<SolveOutcome>,
+    ) -> Result<(), ServiceClosed> {
+        let invalid = if backend == BackendChoice::Xla {
+            // The XLA artifacts are compiled for single-response solves;
+            // the fused multi-response batch path is CPU-only for now.
+            Some("invalid job: multi-response jobs require the rust backend".to_string())
+        } else if responses.is_empty() {
+            Some("invalid job: multi-response job has no responses".to_string())
+        } else if grid.is_empty() {
+            Some("invalid job: multi-response grid is empty".to_string())
+        } else {
+            let mut err = None;
+            for (r, y) in responses.iter().enumerate() {
+                if y.len() != x.rows() {
+                    err = Some(format!(
+                        "invalid job: X has {} rows but response {} has {} entries",
+                        x.rows(),
+                        r,
+                        y.len()
+                    ));
+                    break;
+                }
+                if let Some(v) = y.iter().find(|v| !v.is_finite()) {
+                    err = Some(format!(
+                        "invalid job: response {r} contains a non-finite value ({v})"
+                    ));
+                    break;
+                }
+            }
+            err.or_else(|| validate_job(&x, &responses[0], &grid).err())
+        };
+        if let Some(e) = invalid {
+            self.metrics.on_submit();
+            self.metrics.on_fail(0.0);
+            let _ = reply.send(SolveOutcome {
+                id,
+                result: Err(e),
+                total_seconds: 0.0,
+                queue_wait_seconds: 0.0,
+            });
+            return Ok(());
+        }
+        let nresp = responses.len();
+        let nseg = self.segments_for(nresp);
+        let shared = Arc::new(SharedMultiResponse {
+            id,
+            dataset_id,
+            x,
+            responses,
+            backend,
+            grid,
+            screen: Mutex::new(None),
+            reply: Mutex::new(reply),
+            submitted: Timer::start(),
+            parts: Mutex::new((0..nseg).map(|_| None).collect()),
+            remaining: AtomicUsize::new(nseg),
+            first_pickup: Mutex::new(None),
+        });
+        let base = nresp / nseg;
+        let extra = nresp % nseg;
+        let mut start = 0usize;
+        for index in 0..nseg {
+            let size = base + usize::from(index < extra);
+            let end = start + size;
+            let seg = MultiSegment { shared: shared.clone(), index, start, end };
+            start = end;
+            if self.pool.submit(WorkItem::MultiSegment(seg)).is_err() {
+                if index == 0 {
+                    // Nothing queued: a plain rejection.
+                    self.metrics.on_reject();
+                    return Err(ServiceClosed);
+                }
+                // Closed mid-submit: fail this and every later chunk so
+                // the already-queued ones still assemble (to an error).
+                for later in index..nseg {
+                    shared.finish_segment(
+                        later,
+                        Err(ServiceClosed.to_string()),
+                        &self.metrics,
+                    );
+                }
+                break;
             }
         }
         self.metrics.on_submit();
@@ -1211,6 +1701,21 @@ impl Service {
         backend: BackendChoice,
     ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
         self.submit(dataset_id, x, y, JobKind::Path { grid }, backend)
+    }
+
+    /// Convenience: submit a whole-screen multi-response sweep — R
+    /// response vectors over one design and one grid, one preparation
+    /// build, fused batched solves, λ_max screening.
+    pub fn submit_multi_response(
+        &self,
+        dataset_id: u64,
+        x: Arc<Design>,
+        responses: Vec<Arc<Vec<f64>>>,
+        grid: Vec<GridPoint>,
+        backend: BackendChoice,
+    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+        let y = responses.first().cloned().unwrap_or_default();
+        self.submit(dataset_id, x, y, JobKind::MultiResponse { responses, grid }, backend)
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {
@@ -1427,6 +1932,17 @@ mod tests {
         // usize::MAX stays the documented segmentation-off switch.
         let off = ServiceConfig { path_segment_min: usize::MAX, ..Default::default() };
         assert!(off.validate().is_ok());
+        // The early-stop threshold must be positive and finite when set.
+        for bad in [0.0, -0.5, f64::NAN, f64::INFINITY] {
+            let cfg = ServiceConfig {
+                multi_response_early_stop: Some(bad),
+                ..Default::default()
+            };
+            let err = cfg.validate().expect_err("early stop threshold");
+            assert!(err.to_string().contains("multi_response_early_stop"), "got: {err}");
+        }
+        let es = ServiceConfig { multi_response_early_stop: Some(1e-3), ..Default::default() };
+        assert!(es.validate().is_ok());
     }
 
     #[test]
@@ -1479,6 +1995,141 @@ mod tests {
         assert_eq!(service.metrics().failed(), 4);
         assert_eq!(service.metrics().prep_builds(), 0);
         assert_eq!(service.metrics().cv_folds(), 0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn multi_response_jobs_validate_inputs() {
+        let d = synth_regression(&SynthSpec {
+            n: 10,
+            p: 5,
+            support: 2,
+            seed: 305,
+            ..Default::default()
+        });
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 1, queue_capacity: 8 },
+            ..Default::default()
+        });
+        let x = Arc::new(Design::from(d.x.clone()));
+        let y = Arc::new(d.y.clone());
+        let grid = vec![GridPoint { t: 0.4, lambda2: 0.5 }];
+        // no responses
+        let rx = service
+            .submit_multi_response(1, x.clone(), Vec::new(), grid.clone(), BackendChoice::Rust)
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("no responses"), "got: {err}");
+        // empty grid
+        let rx = service
+            .submit_multi_response(1, x.clone(), vec![y.clone()], Vec::new(), BackendChoice::Rust)
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("grid is empty"), "got: {err}");
+        // length mismatch in a later response
+        let rx = service
+            .submit_multi_response(
+                1,
+                x.clone(),
+                vec![y.clone(), Arc::new(vec![0.0; 3])],
+                grid.clone(),
+                BackendChoice::Rust,
+            )
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("response 1 has 3 entries"), "got: {err}");
+        // a NaN hiding in one response
+        let rx = service
+            .submit_multi_response(
+                1,
+                x.clone(),
+                vec![y.clone(), Arc::new(vec![f64::NAN; 10])],
+                grid.clone(),
+                BackendChoice::Rust,
+            )
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("non-finite"), "got: {err}");
+        // bad grid point
+        let rx = service
+            .submit_multi_response(
+                1,
+                x.clone(),
+                vec![y.clone()],
+                vec![GridPoint { t: -1.0, lambda2: 0.5 }],
+                BackendChoice::Rust,
+            )
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("t must be positive"), "got: {err}");
+        // the fused batch path is CPU-only: XLA multi jobs fail cleanly
+        let rx = service
+            .submit_multi_response(1, x, vec![y], grid, BackendChoice::Xla)
+            .unwrap();
+        let err = rx.recv().unwrap().result.unwrap_err();
+        assert!(err.contains("require the rust backend"), "got: {err}");
+        assert_eq!(service.metrics().failed(), 6);
+        assert_eq!(service.metrics().prep_builds(), 0);
+        assert_eq!(service.metrics().responses_total(), 0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn multi_response_job_screens_zero_responses_and_builds_one_prep() {
+        // 2p > n ⇒ primal regime, where the zero-response screen fires.
+        let d = synth_regression(&SynthSpec {
+            n: 14,
+            p: 20,
+            support: 4,
+            seed: 306,
+            ..Default::default()
+        });
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 2, queue_capacity: 8 },
+            ..Default::default()
+        });
+        let x = Arc::new(Design::from(d.x.clone()));
+        let y = Arc::new(d.y.clone());
+        let zero = Arc::new(vec![0.0; 14]);
+        let grid =
+            vec![GridPoint { t: 0.4, lambda2: 0.5 }, GridPoint { t: 0.8, lambda2: 0.5 }];
+        let rx = service
+            .submit_multi_response(
+                1,
+                x.clone(),
+                vec![y.clone(), zero, y.clone()],
+                grid.clone(),
+                BackendChoice::Rust,
+            )
+            .unwrap();
+        let res = rx.recv().unwrap().result.expect("multi ok").expect_multi_response();
+        assert_eq!(res.paths.len(), 3);
+        assert_eq!(res.screened, vec![false, true, false]);
+        assert_eq!(res.lambda_max[1], 0.0);
+        assert!(res.lambda_max[0] > 0.0);
+        assert_eq!(res.early_stopped_at, vec![None, None, None]);
+        for path in &res.paths {
+            assert_eq!(path.len(), 2);
+        }
+        for sol in &res.paths[1] {
+            assert!(sol.beta.iter().all(|&b| b == 0.0));
+            assert_eq!(sol.iterations, 0);
+            assert!(sol.degenerate.is_none());
+        }
+        // responses 0 and 2 carry the same data ⇒ identical bits.
+        for (a, b) in res.paths[0].iter().zip(res.paths[2].iter()) {
+            let ab: Vec<u64> = a.beta.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u64> = b.beta.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb);
+            assert_eq!(a.iterations, b.iterations);
+        }
+        let m = service.metrics();
+        assert_eq!(m.prep_builds(), 1);
+        assert_eq!(m.responses_total(), 3);
+        assert_eq!(m.responses_screened_out(), 1);
+        assert_eq!(m.responses_early_stopped(), 0);
+        assert!(m.report().contains("responses_total=3"));
+        assert!(m.report().contains("responses_screened_out=1"));
         service.shutdown();
     }
 

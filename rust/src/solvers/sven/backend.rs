@@ -21,9 +21,9 @@
 
 use crate::linalg::{resolved_precision, vecops, Design, DesignShadowF32, Mat, Precision};
 use crate::solvers::svm::{
-    dual_newton, primal_newton, primal_newton_batch, samples::reduction_gram,
-    samples::reduction_labels, DualOptions, PrimalBatchPoint, PrimalBatchStats, PrimalOptions,
-    ReducedSamples, SampleSet,
+    dual_newton, primal_newton, primal_newton_batch, primal_newton_batch_ys,
+    samples::reduction_gram, samples::reduction_labels, DualOptions, PrimalBatchPoint,
+    PrimalBatchStats, PrimalOptions, ReducedSamples, SampleSet,
 };
 use std::sync::Arc;
 
@@ -162,6 +162,40 @@ pub trait SvmPrep: Send + Sync {
     /// mixed-precision memory alongside its solve counters.
     fn f32_shadow_bytes(&self) -> usize {
         0
+    }
+    /// Solve a mixed response × (t, C) batch against this preparation,
+    /// cold-started: member `(r, t, c)` solves the reduction SVM for
+    /// response `responses[r]` at `(t, c)`. The preparation's own `y`
+    /// is ignored — only its y-independent state (design, gram blocks,
+    /// f32 shadow) is reused — so every member must be **bit-identical**
+    /// to a fresh preparation of `(x, responses[r])` solved cold at
+    /// `(t, c)`. Backends without a multi-response engine report an
+    /// error and the coordinator fails the job up front.
+    fn solve_batch_multi(
+        &self,
+        responses: &[Arc<Vec<f64>>],
+        members: &[(usize, f64, f64)],
+        scratch: &mut SvmScratch,
+    ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
+        let _ = (responses, members, scratch);
+        anyhow::bail!("backend does not support multi-response batches")
+    }
+    /// Solo solve for an override response `y` against this
+    /// preparation's design (same y-independent caches, different
+    /// right-hand side). The dual regime's multi-response sweep uses
+    /// this to chain per-response warm starts exactly as a standalone
+    /// preparation of `(x, y)` would — the contract is bit-identity
+    /// with `prepare(x, y)` followed by `solve(t, c, warm, ..)`.
+    fn solve_response(
+        &self,
+        y: &[f64],
+        t: f64,
+        c: f64,
+        warm: Option<&SvmWarm>,
+        scratch: &mut SvmScratch,
+    ) -> anyhow::Result<SvmSolve> {
+        let _ = (y, t, c, warm, scratch);
+        anyhow::bail!("backend does not support response-override solves")
     }
 }
 
@@ -320,6 +354,67 @@ impl SvmPrep for PreparedPrimal {
     fn f32_shadow_bytes(&self) -> usize {
         self.shadow.as_ref().map_or(0, |s| s.bytes())
     }
+
+    /// Multi-response entry: the response index only changes which
+    /// per-column ±y/t shift the reduced operators apply, so members
+    /// with different responses still share the gathered SV panel and
+    /// the blocked-CG panel product (the panel stores bare design
+    /// columns + label signs — it is y-independent). The prep's own
+    /// `y` is never read.
+    fn solve_batch_multi(
+        &self,
+        responses: &[Arc<Vec<f64>>],
+        members: &[(usize, f64, f64)],
+        _scratch: &mut SvmScratch,
+    ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
+        let ys: Vec<&[f64]> = members.iter().map(|&(r, _, _)| responses[r].as_slice()).collect();
+        let points: Vec<PrimalBatchPoint> =
+            members.iter().map(|&(_, t, c)| PrimalBatchPoint { t, c, w0: None }).collect();
+        let (results, stats) = primal_newton_batch_ys(
+            self.x.as_ref(),
+            &ys,
+            &points,
+            &self.opts,
+            self.shadow.as_ref(),
+        );
+        let sols = results
+            .into_iter()
+            .map(|r| SvmSolve {
+                alpha: r.alpha,
+                w: Some(r.w),
+                iters: r.newton_iters,
+                cg_iters: r.cg_iters_total,
+                gather_rebuilds: r.gather_rebuilds,
+                refine_passes: r.refine_passes_total,
+            })
+            .collect();
+        Ok((sols, stats))
+    }
+
+    fn solve_response(
+        &self,
+        y: &[f64],
+        t: f64,
+        c: f64,
+        warm: Option<&SvmWarm>,
+        _scratch: &mut SvmScratch,
+    ) -> anyhow::Result<SvmSolve> {
+        let samples = match &self.shadow {
+            Some(sh) => ReducedSamples::with_shadow(self.x.as_ref(), y, t, sh),
+            None => ReducedSamples::new(self.x.as_ref(), y, t),
+        };
+        let labels = reduction_labels(self.x.cols());
+        let w0 = warm.and_then(|w| w.w.as_deref());
+        let r = primal_newton(&samples, &labels, c, &self.opts, w0);
+        Ok(SvmSolve {
+            alpha: r.alpha,
+            w: Some(r.w),
+            iters: r.newton_iters,
+            cg_iters: r.cg_iters_total,
+            gather_rebuilds: r.gather_rebuilds,
+            refine_passes: r.refine_passes_total,
+        })
+    }
 }
 
 struct PreparedDual {
@@ -384,6 +479,87 @@ impl SvmPrep for PreparedDual {
 
     fn dims(&self) -> (usize, usize) {
         (self.x.rows(), self.x.cols())
+    }
+
+    /// Multi-response entry for the dual regime. No batched dual
+    /// Newton exists yet (see ROADMAP), but the expensive t- and
+    /// y-independent block `G₀ = XᵀX` is reused across the whole batch;
+    /// only `v_r = Xᵀy_r` and `‖y_r‖²` are built, once per distinct
+    /// response. Each member assembles `K(t)` and solves cold exactly
+    /// like `solve(t, c, None, ..)` on a fresh `(x, y_r)` preparation,
+    /// so results are bit-identical to the standalone path.
+    fn solve_batch_multi(
+        &self,
+        responses: &[Arc<Vec<f64>>],
+        members: &[(usize, f64, f64)],
+        scratch: &mut SvmScratch,
+    ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
+        let p = self.g0.rows();
+        let mut cache: Vec<Option<(Vec<f64>, f64)>> = vec![None; responses.len()];
+        let mut out = Vec::with_capacity(members.len());
+        for &(r, t, c) in members {
+            if cache[r].is_none() {
+                let y = responses[r].as_slice();
+                cache[r] = Some((self.x.matvec_t(y), vecops::norm2_sq(y)));
+            }
+            let (v, yy) = {
+                let (v, yy) = cache[r].as_ref().unwrap();
+                (v.as_slice(), *yy)
+            };
+            let s = 1.0 / t;
+            let k = scratch.mat(2 * p, 2 * p);
+            crate::solvers::svm::samples::assemble_reduction_gram(&self.g0, v, s, s * s * yy, k);
+            let rr = dual_newton(k, c, &self.opts, None);
+            let samples = ReducedSamples::new(self.x.as_ref(), responses[r].as_slice(), t);
+            let mut signed = rr.alpha.clone();
+            for sv in signed[p..].iter_mut() {
+                *sv = -*sv;
+            }
+            let mut w = vec![0.0; self.x.rows()];
+            samples.matvec_t(&signed, &mut w);
+            out.push(SvmSolve {
+                alpha: rr.alpha,
+                w: Some(w),
+                iters: rr.pivots,
+                cg_iters: 0,
+                gather_rebuilds: 0,
+                refine_passes: 0,
+            });
+        }
+        Ok((out, SvmBatchStats::default()))
+    }
+
+    fn solve_response(
+        &self,
+        y: &[f64],
+        t: f64,
+        c: f64,
+        warm: Option<&SvmWarm>,
+        scratch: &mut SvmScratch,
+    ) -> anyhow::Result<SvmSolve> {
+        let p = self.g0.rows();
+        let v = self.x.matvec_t(y);
+        let yy = vecops::norm2_sq(y);
+        let s = 1.0 / t;
+        let k = scratch.mat(2 * p, 2 * p);
+        crate::solvers::svm::samples::assemble_reduction_gram(&self.g0, &v, s, s * s * yy, k);
+        let warm_alpha = warm.and_then(|w| w.alpha.as_deref());
+        let r = dual_newton(k, c, &self.opts, warm_alpha);
+        let samples = ReducedSamples::new(self.x.as_ref(), y, t);
+        let mut signed = r.alpha.clone();
+        for sv in signed[p..].iter_mut() {
+            *sv = -*sv;
+        }
+        let mut w = vec![0.0; self.x.rows()];
+        samples.matvec_t(&signed, &mut w);
+        Ok(SvmSolve {
+            alpha: r.alpha,
+            w: Some(w),
+            iters: r.pivots,
+            cg_iters: 0,
+            gather_rebuilds: 0,
+            refine_passes: 0,
+        })
     }
 }
 
@@ -524,6 +700,42 @@ mod tests {
             let (wb, wf) = (sb.w.as_ref().unwrap(), sf.w.as_ref().unwrap());
             for i in 0..wf.len() {
                 assert!((wb[i] - wf[i]).abs() < 1e-6, "batch i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_response_batches_match_fresh_preps_bitwise() {
+        // solve_batch_multi never reads the prep's own y: a batch solved
+        // against a prep built on r0 must reproduce, bit for bit, fresh
+        // preps of (x, r) solved cold — in both regimes.
+        let mut rng = Rng::seed_from(166);
+        let x: Arc<Design> = Arc::new(Mat::from_fn(26, 7, |_, _| rng.normal()).into());
+        let r0 = Arc::new((0..26).map(|_| rng.normal()).collect::<Vec<f64>>());
+        let r1 = Arc::new((0..26).map(|_| rng.normal()).collect::<Vec<f64>>());
+        let responses = vec![r0.clone(), r1.clone()];
+        let members = [(0usize, 0.6, 3.0), (1usize, 0.6, 3.0), (1usize, 0.9, 5.0)];
+        let backend = RustBackend::default();
+        let mut scratch = SvmScratch::new();
+        for mode in [SvmMode::Primal, SvmMode::Dual] {
+            let prep = backend.prepare(&x, &r0, mode).unwrap();
+            let (sols, _) =
+                prep.solve_batch_multi(&responses, &members, &mut scratch).unwrap();
+            for (sol, &(r, t, c)) in sols.iter().zip(members.iter()) {
+                let solo_prep = backend.prepare(&x, &responses[r], mode).unwrap();
+                let solo = solo_prep.solve(t, c, None, &mut scratch).unwrap();
+                assert_eq!(sol.alpha.len(), solo.alpha.len());
+                for i in 0..sol.alpha.len() {
+                    assert_eq!(
+                        sol.alpha[i].to_bits(),
+                        solo.alpha[i].to_bits(),
+                        "{mode:?} alpha i={i}"
+                    );
+                }
+                let (w, ws) = (sol.w.as_ref().unwrap(), solo.w.as_ref().unwrap());
+                for i in 0..w.len() {
+                    assert_eq!(w[i].to_bits(), ws[i].to_bits(), "{mode:?} w i={i}");
+                }
             }
         }
     }

@@ -149,6 +149,40 @@ impl<B: SvmBackend> Sven<B> {
         })
     }
 
+    /// Response-override form of [`Sven::solve_prepared`]: solve
+    /// `prob` (whose response may differ from the one the preparation
+    /// was built on) against `prepared`'s y-independent caches. Bit-for-
+    /// bit what a fresh preparation of `(prob.x, prob.y)` would produce
+    /// with the same warm start — the dual regime's multi-response
+    /// sweep chains per-response warm starts through this.
+    pub fn solve_prepared_response(
+        &self,
+        prepared: &dyn SvmPrep,
+        scratch: &mut SvmScratch,
+        prob: &EnProblem,
+        warm: Option<&SvmWarm>,
+    ) -> anyhow::Result<EnSolution> {
+        let timer = Timer::start();
+        let p = prob.p();
+        let c = effective_c(prob.lambda2, self.config.c_cap);
+        let solve =
+            self.scoped(|| prepared.solve_response(prob.y.as_slice(), prob.t, c, warm, scratch))?;
+        let (beta, degenerate) = backmap(&solve.alpha, p, prob.t);
+        let seconds = timer.elapsed();
+        let objective = prob.objective(&beta);
+        Ok(EnSolution {
+            beta,
+            solver: self.kind(),
+            objective,
+            iterations: solve.iters,
+            cg_iters: solve.cg_iters,
+            gather_rebuilds: solve.gather_rebuilds,
+            refine_passes: solve.refine_passes,
+            seconds,
+            degenerate,
+        })
+    }
+
     /// Batched form of [`Sven::solve_prepared`]: solve every `(t, λ₂)`
     /// point of `points` against one preparation, cold-started — exactly
     /// what a primal-mode path sweep does anyway (its chained warm
@@ -189,6 +223,53 @@ impl<B: SvmBackend> Sven<B> {
                 gather_rebuilds: solve.gather_rebuilds,
                 refine_passes: solve.refine_passes,
                 seconds: per_point,
+                degenerate,
+            });
+        }
+        Ok((out, stats))
+    }
+
+    /// Multi-response form of [`Sven::solve_prepared_batch`]: member
+    /// `(r, t, λ₂)` solves response `responses[r]` at `(t, λ₂)` against
+    /// one shared preparation — the response dimension rides the same
+    /// batch width as path points, so R responses at one grid point
+    /// share the gathered SV panel and the blocked-CG panel product.
+    /// Every member is bit-for-bit what a standalone cold solve of
+    /// `(x, responses[r], t, λ₂)` produces (pinned in `backend` tests).
+    pub fn solve_prepared_batch_multi(
+        &self,
+        prepared: &dyn SvmPrep,
+        scratch: &mut SvmScratch,
+        x: &Arc<Design>,
+        responses: &[Arc<Vec<f64>>],
+        members: &[(usize, f64, f64)],
+    ) -> anyhow::Result<(Vec<EnSolution>, SvmBatchStats)> {
+        let timer = Timer::start();
+        let pts: Vec<(usize, f64, f64)> = members
+            .iter()
+            .map(|&(r, t, lambda2)| (r, t, effective_c(lambda2, self.config.c_cap)))
+            .collect();
+        let (solves, stats) =
+            self.scoped(|| prepared.solve_batch_multi(responses, &pts, scratch))?;
+        let per_member = if members.is_empty() {
+            0.0
+        } else {
+            timer.elapsed() / members.len() as f64
+        };
+        let mut out = Vec::with_capacity(members.len());
+        for (solve, &(r, t, lambda2)) in solves.into_iter().zip(members) {
+            let prob = EnProblem::shared(x.clone(), responses[r].clone(), t, lambda2);
+            let (beta, degenerate) = backmap(&solve.alpha, prob.p(), t);
+            let objective = prob.objective(&beta);
+            out.push(EnSolution {
+                beta,
+                solver: self.kind(),
+                objective,
+                iterations: solve.iters,
+                cg_iters: solve.cg_iters,
+                gather_rebuilds: solve.gather_rebuilds,
+                refine_passes: solve.refine_passes,
+                seconds: per_member,
                 degenerate,
             });
         }

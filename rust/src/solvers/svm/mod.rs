@@ -22,10 +22,10 @@ pub mod samples;
 
 pub use dual::{dual_newton, DualOptions, DualResult};
 pub use primal::{
-    primal_newton, primal_newton_batch, PrimalBatchPoint, PrimalBatchStats, PrimalOptions,
-    PrimalResult,
+    primal_newton, primal_newton_batch, primal_newton_batch_ys, PrimalBatchPoint,
+    PrimalBatchStats, PrimalOptions, PrimalResult,
 };
 pub use samples::{
-    reduced_matvec_batch, reduced_matvec_t_batch, DenseSamples, GatheredRows, ReducedSamples,
-    SampleSet,
+    reduced_matvec_batch, reduced_matvec_batch_multi, reduced_matvec_t_batch,
+    reduced_matvec_t_batch_multi, DenseSamples, GatheredRows, ReducedSamples, SampleSet,
 };

@@ -28,8 +28,8 @@
 //!   re-ran a full O(m·d) `matvec` per trial.
 
 use super::samples::{
-    reduced_matvec_batch, reduced_matvec_t_batch, reduction_labels, GatheredRows, ReducedSamples,
-    SampleSet,
+    reduced_matvec_batch_multi, reduced_matvec_t_batch_multi, reduction_labels, GatheredRows,
+    ReducedSamples, SampleSet,
 };
 use crate::linalg::{
     cg_solve_multi_with, cg_solve_refined, cg_solve_with, vecops, CgOptions, CgScratch, Design,
@@ -458,6 +458,13 @@ pub struct PrimalBatchStats {
     pub batched_rhs: usize,
     /// Panel compactions inside the blocked-CG solves.
     pub cg_compactions: usize,
+    /// Histogram of Newton-direction group widths, log₂-bucketed:
+    /// bucket k counts groups of width in `[2ᵏ, 2ᵏ⁺¹)` (bucket 7 is
+    /// open-ended). Width-1 groups (solo paths) land in bucket 0, so the
+    /// histogram totals every Newton direction the batch solved.
+    pub width_hist: [u32; 8],
+    /// Widest Newton-direction group seen (1 when nothing ever fused).
+    pub max_fused_width: usize,
 }
 
 impl PrimalBatchStats {
@@ -466,24 +473,38 @@ impl PrimalBatchStats {
         self.panel_builds += other.panel_builds;
         self.batched_rhs += other.batched_rhs;
         self.cg_compactions += other.cg_compactions;
+        for (a, b) in self.width_hist.iter_mut().zip(&other.width_hist) {
+            *a += b;
+        }
+        self.max_fused_width = self.max_fused_width.max(other.max_fused_width);
+    }
+
+    /// Record one Newton-direction group of `width` members.
+    fn on_group(&mut self, width: usize) {
+        debug_assert!(width >= 1);
+        let bucket = (usize::BITS - 1 - width.leading_zeros()).min(7) as usize;
+        self.width_hist[bucket] += 1;
+        self.max_fused_width = self.max_fused_width.max(width);
     }
 }
 
 /// Hessian family of a shared-SV-panel batch: member `j` is
 /// `v ↦ v + 2C_j·Ĝ_jᵀ(Ĝ_j·v)` where every `Ĝ_j` shares one gathered
-/// panel of bare design columns (the panel is t-independent; the
-/// implicit `±y/t_j` shift is applied per column). One fused panel
-/// product per blocked-CG iteration serves every member — the
-/// panel-width-in-the-Hessian lever of the batched Newton. Per-column
-/// bits match the solo [`GatheredHess`] exactly (the fused store
-/// products keep the single-RHS reduction order; the shift arithmetic
-/// repeats [`ReducedSamples::gathered_matvec`] /
+/// panel of bare design columns (the panel is t- *and* y-independent;
+/// the implicit `±y_j/t_j` shift is applied per column, so members
+/// viewing the shared design through different responses still fuse).
+/// One fused panel product per blocked-CG iteration serves every
+/// member — the panel-width-in-the-Hessian lever of the batched Newton.
+/// Per-column bits match the solo [`GatheredHess`] exactly (the fused
+/// store products keep the single-RHS reduction order; the shift
+/// arithmetic repeats [`ReducedSamples::gathered_matvec`] /
 /// [`ReducedSamples::gathered_matvec_t`] verbatim).
 struct BatchGatheredHess<'a> {
     panel: &'a GatheredRows,
-    y: &'a [f64],
+    /// Per-member response (indexed by problem id within the group).
+    ys: &'a [&'a [f64]],
     d: usize,
-    /// Per-member budget t (indexed by problem id within the group).
+    /// Per-member budget t.
     ts: &'a [f64],
     /// Per-member 2C.
     two_cs: &'a [f64],
@@ -505,7 +526,7 @@ impl MultiLinOp for BatchGatheredHess<'_> {
         self.panel.store_matvec_multi_into(vs, &mut gm);
         let signs = self.panel.signs();
         for (s, &j) in cols.iter().enumerate() {
-            let shift = vecops::dot(self.y, vs.col(s)) / self.ts[j];
+            let shift = vecops::dot(self.ys[j], vs.col(s)) / self.ts[j];
             for (gi, si) in gm.col_mut(s).iter_mut().zip(signs) {
                 *gi += si * shift;
             }
@@ -516,7 +537,7 @@ impl MultiLinOp for BatchGatheredHess<'_> {
             for (ui, si) in gm.col(s).iter().zip(signs) {
                 coeff += ui * si;
             }
-            vecops::axpy(coeff / self.ts[j], self.y, out.col_mut(s));
+            vecops::axpy(coeff / self.ts[j], self.ys[j], out.col_mut(s));
             let v = vs.col(s);
             let o = out.col_mut(s);
             let tc = self.two_cs[j];
@@ -559,10 +580,33 @@ pub fn primal_newton_batch(
     opts: &PrimalOptions,
     shadow: Option<&DesignShadowF32>,
 ) -> (Vec<PrimalResult>, PrimalBatchStats) {
+    let ys = vec![y; points.len()];
+    primal_newton_batch_ys(x, &ys, points, opts, shadow)
+}
+
+/// [`primal_newton_batch`] generalized to per-member responses: member
+/// `s` solves the SVEN reduction of `(x, ys[s])` at `(t_s, C_s)`. This
+/// is the multi-response screen engine's compute core — R responses at
+/// one grid point (or any mixed response/path batch) share every fused
+/// pass above, and members whose SV sets agree share one gathered panel
+/// regardless of which response they view the design through (the panel
+/// holds bare design columns; the `±y/t` shift stays per-member). The
+/// solo bit-identity contract is unchanged: result `s` is bit-identical
+/// to `primal_newton` on `ReducedSamples::new(x, ys[s], t_s)`.
+pub fn primal_newton_batch_ys(
+    x: &Design,
+    ys: &[&[f64]],
+    points: &[PrimalBatchPoint],
+    opts: &PrimalOptions,
+    shadow: Option<&DesignShadowF32>,
+) -> (Vec<PrimalResult>, PrimalBatchStats) {
     let nprobs = points.len();
     let p = x.cols();
     let (m, d) = (2 * p, x.rows());
-    assert_eq!(y.len(), d);
+    assert_eq!(ys.len(), nprobs);
+    for y in ys {
+        assert_eq!(y.len(), d);
+    }
     let yhat = reduction_labels(p);
     let mut stats = PrimalBatchStats::default();
     if nprobs == 0 {
@@ -594,10 +638,17 @@ pub fn primal_newton_batch(
     }
 
     let mixed = shadow.is_some();
-    let samples_at = |t: f64| match shadow {
-        Some(sh) => ReducedSamples::with_shadow(x, y, t, sh),
-        None => ReducedSamples::new(x, y, t),
-    };
+    fn samples_at<'s>(
+        x: &'s Design,
+        shadow: Option<&'s DesignShadowF32>,
+        t: f64,
+        y: &'s [f64],
+    ) -> ReducedSamples<'s> {
+        match shadow {
+            Some(sh) => ReducedSamples::with_shadow(x, y, t, sh),
+            None => ReducedSamples::new(x, y, t),
+        }
+    }
 
     let mut st: Vec<Prob> = points
         .iter()
@@ -643,7 +694,7 @@ pub fn primal_newton_batch(
         for (j, s) in st.iter().enumerate() {
             in_panel.col_mut(j).copy_from_slice(&s.w);
         }
-        reduced_matvec_batch(x, y, &ts, &in_panel, &mut out_panel);
+        reduced_matvec_batch_multi(x, ys, &ts, &in_panel, &mut out_panel);
         for (j, s) in st.iter_mut().enumerate() {
             s.o.copy_from_slice(out_panel.col(j));
             let mut loss = 0.0;
@@ -683,6 +734,7 @@ pub fn primal_newton_batch(
         // (1) Gradients — one fused X̂ᵀ pass across the batch:
         //     grad_j = w_j − 2C_j·X̂ᵀ(ŷ ⊙ slack_j).
         let lts: Vec<f64> = live.iter().map(|&j| st[j].t).collect();
+        let lys: Vec<&[f64]> = live.iter().map(|&j| ys[j]).collect();
         in_panel.resize(m, live.len());
         out_panel.resize(d, live.len());
         for (l, &j) in live.iter().enumerate() {
@@ -692,7 +744,7 @@ pub fn primal_newton_batch(
                 u[i] = yhat[i] * s.slack[i] * s.mask[i];
             }
         }
-        reduced_matvec_t_batch(x, y, &lts, &in_panel, &mut out_panel);
+        reduced_matvec_t_batch_multi(x, &lys, &lts, &in_panel, &mut out_panel);
         let mut still: Vec<usize> = Vec::with_capacity(live.len());
         for (l, &j) in live.iter().enumerate() {
             let s = &mut st[j];
@@ -734,7 +786,8 @@ pub fn primal_newton_batch(
             let lead = live[a];
             if !use_gather[a] {
                 // Masked solo fallback (the pre-shrinking operator).
-                let samples = samples_at(st[lead].t);
+                stats.on_group(1);
+                let samples = samples_at(x, shadow, st[lead].t, ys[lead]);
                 let two_c = 2.0 * st[lead].c;
                 let rhs: Vec<f64> = st[lead].grad.iter().map(|g| -g).collect();
                 let mut delta = std::mem::take(&mut st[lead].delta);
@@ -789,7 +842,7 @@ pub fn primal_newton_batch(
                 .unwrap_or(lead);
             if st[host].panel_set != st[host].sv {
                 let sv = st[host].sv.clone();
-                let samples = samples_at(st[host].t);
+                let samples = samples_at(x, shadow, st[host].t, ys[host]);
                 samples.gather_rows_into(&sv, &mut panels[host]);
                 st[host].panel_set = sv;
                 stats.panel_builds += 1;
@@ -801,7 +854,8 @@ pub fn primal_newton_batch(
             }
             if members.len() == 1 {
                 // Gathered solo path on the (now current) panel.
-                let samples = samples_at(st[lead].t);
+                stats.on_group(1);
+                let samples = samples_at(x, shadow, st[lead].t, ys[lead]);
                 let two_c = 2.0 * st[lead].c;
                 let rhs: Vec<f64> = st[lead].grad.iter().map(|g| -g).collect();
                 let mut delta = std::mem::take(&mut st[lead].delta);
@@ -826,7 +880,9 @@ pub fn primal_newton_batch(
                 // Blocked CG: one fused panel product per iteration for
                 // the whole group.
                 let width = members.len();
+                stats.on_group(width);
                 let gts: Vec<f64> = members.iter().map(|&j| st[j].t).collect();
+                let gys: Vec<&[f64]> = members.iter().map(|&j| ys[j]).collect();
                 let gtwo_cs: Vec<f64> = members.iter().map(|&j| 2.0 * st[j].c).collect();
                 let mut rhs = MultiVec::zeros(d, width);
                 let mut dx = MultiVec::zeros(d, width);
@@ -839,7 +895,7 @@ pub fn primal_newton_batch(
                 let cg_out = {
                     let hess = BatchGatheredHess {
                         panel: &panels[host],
-                        y,
+                        ys: &gys,
                         d,
                         ts: &gts,
                         two_cs: &gtwo_cs,
@@ -859,13 +915,14 @@ pub fn primal_newton_batch(
         // (3) Fused margin refresh across the whole batch: one
         //     X̂·[w₁, δ₁, w₂, δ₂, …] pass.
         let refresh_ts: Vec<f64> = live.iter().flat_map(|&j| [st[j].t, st[j].t]).collect();
+        let refresh_ys: Vec<&[f64]> = live.iter().flat_map(|&j| [ys[j], ys[j]]).collect();
         wd_panel.resize(d, 2 * live.len());
         od_panel.resize(m, 2 * live.len());
         for (l, &j) in live.iter().enumerate() {
             wd_panel.col_mut(2 * l).copy_from_slice(&st[j].w);
             wd_panel.col_mut(2 * l + 1).copy_from_slice(&st[j].delta);
         }
-        reduced_matvec_batch(x, y, &refresh_ts, &wd_panel, &mut od_panel);
+        reduced_matvec_batch_multi(x, &refresh_ys, &refresh_ts, &wd_panel, &mut od_panel);
 
         // (4) Line search + accept, per problem (scalar work).
         for (l, &j) in live.iter().enumerate() {
@@ -928,7 +985,7 @@ pub fn primal_newton_batch(
         for (j, s) in st.iter().enumerate() {
             in_panel.col_mut(j).copy_from_slice(&s.w);
         }
-        reduced_matvec_batch(x, y, &ts, &in_panel, &mut out_panel);
+        reduced_matvec_batch_multi(x, ys, &ts, &in_panel, &mut out_panel);
         for (j, s) in st.iter_mut().enumerate() {
             let o = out_panel.col(j);
             for i in 0..m {
@@ -1138,6 +1195,53 @@ mod tests {
             }
             for i in 0..60 {
                 assert_eq!(solo.alpha[i].to_bits(), s.alpha[i].to_bits(), "α i={i}");
+            }
+        }
+    }
+
+    /// Multi-response batches — members viewing the shared design
+    /// through *different* responses — must keep the solo bit-identity
+    /// contract, and members whose SV sets agree must still fuse across
+    /// responses (at w = 0 every sample is inside the margin whatever
+    /// the response, so round one groups the whole batch).
+    #[test]
+    fn multi_response_batch_matches_solo_bit_for_bit() {
+        use crate::linalg::Design;
+        let mut rng = Rng::seed_from(149);
+        let x = Mat::from_fn(14, 30, |_, _| rng.normal());
+        let responses: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..14).map(|_| rng.normal()).collect()).collect();
+        let d: Design = x.into();
+        let labels = reduction_labels(30);
+        let opts = PrimalOptions { shrink_max_frac: 1.0, ..Default::default() };
+        // Mixed response/path batch: response 0 at two budgets, responses
+        // 1 and 2 at one each — the MultiResponse job's member shape.
+        let members: Vec<(usize, f64, f64)> =
+            vec![(0, 0.4, 3.0), (0, 0.7, 5.0), (1, 0.5, 4.0), (2, 0.9, 6.0)];
+        let ys: Vec<&[f64]> = members.iter().map(|&(r, _, _)| responses[r].as_slice()).collect();
+        let points: Vec<PrimalBatchPoint> = members
+            .iter()
+            .map(|&(_, t, c)| PrimalBatchPoint { t, c, w0: None })
+            .collect();
+        let (batch, stats) = primal_newton_batch_ys(&d, &ys, &points, &opts, None);
+        assert_eq!(batch.len(), 4);
+        // All four members start on the full SV set, so the first round
+        // fuses them into one width-4 blocked-CG group.
+        assert!(stats.batched_rhs >= 4, "cross-response members must batch");
+        assert!(stats.max_fused_width >= 4, "width 4 group expected");
+        assert!(stats.width_hist[2] >= 1, "width-4 bucket must be hit");
+        for (s, &(r, t, c)) in batch.iter().zip(&members) {
+            let red = ReducedSamples::new(&d, &responses[r], t);
+            let solo = primal_newton(&red, &labels, c, &opts, None);
+            assert_eq!(solo.newton_iters, s.newton_iters);
+            assert_eq!(solo.cg_iters_total, s.cg_iters_total);
+            assert_eq!(solo.gather_rebuilds, s.gather_rebuilds);
+            assert_eq!(solo.converged, s.converged);
+            for i in 0..14 {
+                assert_eq!(solo.w[i].to_bits(), s.w[i].to_bits(), "resp {r} w i={i}");
+            }
+            for i in 0..60 {
+                assert_eq!(solo.alpha[i].to_bits(), s.alpha[i].to_bits(), "resp {r} α i={i}");
             }
         }
     }

@@ -545,22 +545,8 @@ pub fn reduced_matvec_batch(
     vs: &MultiVec,
     out: &mut MultiVec,
 ) {
-    let p = x.cols();
-    let r = vs.ncols();
-    debug_assert_eq!(ts.len(), r);
-    debug_assert_eq!(vs.rows(), x.rows());
-    debug_assert_eq!((out.rows(), out.ncols()), (2 * p, r));
-    let mut tmp = MultiVec::zeros(p, r);
-    x.matvec_t_multi_into(vs, &mut tmp);
-    for j in 0..r {
-        let shift = vecops::dot(y, vs.col(j)) / ts[j];
-        let tcol = tmp.col(j);
-        let (top, bot) = out.col_mut(j).split_at_mut(p);
-        for i in 0..p {
-            bot[i] = tcol[i] + shift;
-            top[i] = tcol[i] - shift;
-        }
-    }
+    let ys = vec![y; ts.len()];
+    reduced_matvec_batch_multi(x, &ys, ts, vs, out);
 }
 
 /// Column-batched [`ReducedSamples::matvec_t`] across problems; same
@@ -572,9 +558,56 @@ pub fn reduced_matvec_t_batch(
     us: &MultiVec,
     out: &mut MultiVec,
 ) {
+    let ys = vec![y; ts.len()];
+    reduced_matvec_t_batch_multi(x, &ys, ts, us, out);
+}
+
+/// [`reduced_matvec_batch`] generalized to per-column *responses*:
+/// column `j` views the shared design through `(ys[j], ts[j])`, so a
+/// batch mixing path points and responses still shares the one fused
+/// `XᵀV` pass (the only part that touches `X`). Column `j` stays
+/// **bit-identical** to `ReducedSamples { x, y: ys[j], t: ts[j]
+/// }.matvec(vs.col(j))` — the `±yᵀv/t` shift is per-column arithmetic
+/// either way.
+pub fn reduced_matvec_batch_multi(
+    x: &Design,
+    ys: &[&[f64]],
+    ts: &[f64],
+    vs: &MultiVec,
+    out: &mut MultiVec,
+) {
+    let p = x.cols();
+    let r = vs.ncols();
+    debug_assert_eq!(ts.len(), r);
+    debug_assert_eq!(ys.len(), r);
+    debug_assert_eq!(vs.rows(), x.rows());
+    debug_assert_eq!((out.rows(), out.ncols()), (2 * p, r));
+    let mut tmp = MultiVec::zeros(p, r);
+    x.matvec_t_multi_into(vs, &mut tmp);
+    for j in 0..r {
+        let shift = vecops::dot(ys[j], vs.col(j)) / ts[j];
+        let tcol = tmp.col(j);
+        let (top, bot) = out.col_mut(j).split_at_mut(p);
+        for i in 0..p {
+            bot[i] = tcol[i] + shift;
+            top[i] = tcol[i] - shift;
+        }
+    }
+}
+
+/// Per-column-response twin of [`reduced_matvec_t_batch`]; same
+/// bit-identity contract as [`reduced_matvec_batch_multi`].
+pub fn reduced_matvec_t_batch_multi(
+    x: &Design,
+    ys: &[&[f64]],
+    ts: &[f64],
+    us: &MultiVec,
+    out: &mut MultiVec,
+) {
     let p = x.cols();
     let r = us.ncols();
     debug_assert_eq!(ts.len(), r);
+    debug_assert_eq!(ys.len(), r);
     debug_assert_eq!(us.rows(), 2 * p);
     debug_assert_eq!((out.rows(), out.ncols()), (x.rows(), r));
     let mut sums = MultiVec::zeros(p, r);
@@ -586,7 +619,7 @@ pub fn reduced_matvec_t_batch(
     for j in 0..r {
         let (u1, u2) = us.col(j).split_at(p);
         let coeff = (u2.iter().sum::<f64>() - u1.iter().sum::<f64>()) / ts[j];
-        vecops::axpy(coeff, y, out.col_mut(j));
+        vecops::axpy(coeff, ys[j], out.col_mut(j));
     }
 }
 
@@ -841,6 +874,43 @@ mod tests {
             reduced_matvec_t_batch(&design, &y, &ts, &us, &mut out_t);
             for j in 0..3 {
                 let red = ReducedSamples::new(&design, &y, ts[j]);
+                let mut single = vec![0.0; 12];
+                red.matvec(vs.col(j), &mut single);
+                for (a, b) in single.iter().zip(out.col(j)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "matvec col {j}");
+                }
+                let mut single_t = vec![0.0; 9];
+                red.matvec_t(us.col(j), &mut single_t);
+                for (a, b) in single_t.iter().zip(out_t.col(j)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "matvec_t col {j}");
+                }
+            }
+        }
+    }
+
+    /// The per-column-*response* batch kernels must reproduce the
+    /// corresponding single-problem operators bit-for-bit — the
+    /// cross-response fusion contract of the multi-response Newton.
+    #[test]
+    fn multi_response_batch_kernels_bit_match_per_problem_ops() {
+        let (x, _, _) = setup(9, 6, 151);
+        let mut rng = Rng::seed_from(152);
+        let responses: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..9).map(|_| rng.normal()).collect()).collect();
+        for design in [
+            Design::from(x.clone()),
+            Design::from(crate::linalg::Csr::from_dense(&x, 0.0)),
+        ] {
+            let ts = [0.5, 1.3, 0.8];
+            let ys: Vec<&[f64]> = responses.iter().map(Vec::as_slice).collect();
+            let vs = MultiVec::from_fn(9, 3, |_, _| rng.normal());
+            let us = MultiVec::from_fn(12, 3, |_, _| rng.normal());
+            let mut out = MultiVec::zeros(12, 3);
+            reduced_matvec_batch_multi(&design, &ys, &ts, &vs, &mut out);
+            let mut out_t = MultiVec::zeros(9, 3);
+            reduced_matvec_t_batch_multi(&design, &ys, &ts, &us, &mut out_t);
+            for j in 0..3 {
+                let red = ReducedSamples::new(&design, &responses[j], ts[j]);
                 let mut single = vec![0.0; 12];
                 red.matvec(vs.col(j), &mut single);
                 for (a, b) in single.iter().zip(out.col(j)) {

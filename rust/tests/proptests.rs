@@ -740,6 +740,132 @@ fn prop_mixed_precision_beta_agrees_with_f64() {
     }
 }
 
+/// Whole-screen transparency seal: a `JobKind::MultiResponse` job over
+/// random shapes (dense/sparse × primal/dual × 1/2/8 workers) must
+/// reproduce each response's standalone `Path` job **bit-for-bit** — β
+/// bits and iteration counts — and λ_max screening (exercised via an
+/// injected all-zero response in the primal draws) must never change
+/// which grid points a response reports: every path spans the full grid.
+#[test]
+fn prop_multi_response_matches_solo_path_jobs() {
+    use std::sync::Arc;
+    use sven::coordinator::{
+        BackendChoice, PathRunner, PathRunnerConfig, PoolConfig, Service, ServiceConfig,
+    };
+
+    forall(
+        "multi-response screen == solo path jobs bits",
+        8,
+        |rng: &mut Rng, size: usize| {
+            let primal = rng.bernoulli(0.5);
+            let sparse = rng.bernoulli(0.5);
+            let (n, p) = if primal {
+                // 2p > n ⇒ primal: fused response×grid batches + screening.
+                let n = 14 + 2 * size + rng.below(10);
+                (n, n / 2 + 6 + rng.below(12))
+            } else {
+                // n ≥ 2p ⇒ dual: per-response warm chains, screening off.
+                let p = 6 + rng.below(6);
+                (2 * p + 20 + 4 * size + rng.below(16), p)
+            };
+            let workers = [1usize, 2, 8][rng.below(3)];
+            let r = 2 + rng.below(3);
+            (n, p, sparse, workers, r, rng.next_u64(), primal)
+        },
+        |&(n, p, sparse, workers, r, seed, primal)| {
+            let d = synth_regression(&SynthSpec {
+                n,
+                p,
+                support: 6.min(p / 2).max(1),
+                seed,
+                ..Default::default()
+            });
+            let runner = PathRunner::new(PathRunnerConfig { grid: 5, ..Default::default() });
+            let grid = runner.derive_grid(&d);
+            let mut points = runner.grid_points(&grid);
+            points.retain(|gp| gp.t > 0.0);
+            if points.len() < 2 {
+                return Ok(());
+            }
+            let x = if sparse {
+                Arc::new(Design::from(Csr::from_dense(&d.x, 0.0)))
+            } else {
+                Arc::new(Design::from(d.x.clone()))
+            };
+            let mut responses: Vec<Arc<Vec<f64>>> = (0..r)
+                .map(|i| {
+                    let f = 0.6 + 0.3 * i as f64;
+                    Arc::new(d.y.iter().map(|&v| f * v).collect::<Vec<f64>>())
+                })
+                .collect();
+            if primal {
+                // Screening target: must come back as a synthesized
+                // all-zero path bit-identical to actually solving it.
+                responses.push(Arc::new(vec![0.0; n]));
+            }
+            let service = Service::start(ServiceConfig {
+                pool: PoolConfig { workers, queue_capacity: 64 },
+                path_segment_min: 2,
+                ..Default::default()
+            });
+            let mut alone = Vec::with_capacity(responses.len());
+            for y in &responses {
+                let rx = service
+                    .submit_path(7, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+                    .map_err(|e| e.to_string())?;
+                alone.push(rx.recv().unwrap().result?.expect_path());
+            }
+            let rx = service
+                .submit_multi_response(
+                    7,
+                    x.clone(),
+                    responses.clone(),
+                    points.clone(),
+                    BackendChoice::Rust,
+                )
+                .map_err(|e| e.to_string())?;
+            let multi = rx.recv().unwrap().result?.expect_multi_response();
+            let prep_builds = service.metrics().prep_builds();
+            service.shutdown();
+            if prep_builds != 1 {
+                return Err(format!("expected one shared prep build, got {prep_builds}"));
+            }
+            if multi.paths.len() != alone.len() {
+                return Err("path count mismatch".into());
+            }
+            for (ri, (a, b)) in alone.iter().zip(&multi.paths).enumerate() {
+                if a.len() != points.len() || b.len() != points.len() {
+                    return Err(format!(
+                        "response {ri}: screening changed the reported grid \
+                         (solo {} vs screen {} of {} points)",
+                        a.len(),
+                        b.len(),
+                        points.len()
+                    ));
+                }
+                for (i, (sa, sb)) in a.iter().zip(b).enumerate() {
+                    if sa.iterations != sb.iterations {
+                        return Err(format!(
+                            "response {ri} point {i}: iterations {} vs {}",
+                            sa.iterations, sb.iterations
+                        ));
+                    }
+                    for j in 0..sa.beta.len() {
+                        if sa.beta[j].to_bits() != sb.beta[j].to_bits() {
+                            return Err(format!(
+                                "sparse={sparse} workers={workers} response {ri} \
+                                 point {i} j={j}: solo {} vs screen {}",
+                                sa.beta[j], sb.beta[j]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Mixed-precision determinism seal: a MixedF32 primal solve must be
 /// bit-identical across thread counts under every enabled microkernel —
 /// the f32 panel kernels keep the same fixed reduction orders as their

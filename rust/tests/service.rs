@@ -462,6 +462,296 @@ fn sweep_reports_batch_fusion_stats() {
     }
 }
 
+/// The whole-screen workload's headline contract: a
+/// `JobKind::MultiResponse` job must reproduce R standalone
+/// `JobKind::Path` jobs on (X, yᵣ) **bit-for-bit** (β bits *and*
+/// iteration counts) in both SVM regimes, over dense and sparse
+/// designs, at 1/2/8 workers — while the whole comparison builds
+/// exactly one preparation (solo jobs and the screen all share it).
+/// In the primal cases one response is all-zero: λ_max screening must
+/// skip its solves yet report the identical full-length path, and must
+/// never change which grid points any response reports.
+#[test]
+fn multi_response_job_matches_standalone_path_jobs_bit_for_bit() {
+    // (n, p, seed, sparse): 2p > n ⇒ primal (fused batch + screening),
+    // n ≥ 2p ⇒ dual (per-response warm chains, screening off).
+    for (n, p, seed, sparse) in [
+        (40usize, 60usize, 831u64, false),
+        (40, 60, 832, true),
+        (160, 12, 833, false),
+    ] {
+        let primal = 2 * p > n;
+        let d = synth_regression(&SynthSpec {
+            n,
+            p,
+            support: 8.min(p / 2),
+            seed,
+            ..Default::default()
+        });
+        let runner = PathRunner::new(PathRunnerConfig { grid: 8, ..Default::default() });
+        let grid = runner.derive_grid(&d);
+        let mut points = runner.grid_points(&grid);
+        points.retain(|gp| gp.t > 0.0);
+        assert!(points.len() >= 4, "grid too small: {}", points.len());
+        let x = if sparse {
+            Arc::new(Design::from(Csr::from_dense(&d.x, 0.0)))
+        } else {
+            Arc::new(Design::from(d.x.clone()))
+        };
+        let responses: Vec<Arc<Vec<f64>>> = (0..5)
+            .map(|r| {
+                if primal && r == 2 {
+                    // Screening target: all-zero bits, primal only (the
+                    // dual solver path is never screened).
+                    Arc::new(vec![0.0; n])
+                } else {
+                    let f = 0.7 + 0.2 * r as f64;
+                    Arc::new(d.y.iter().map(|&v| f * v).collect::<Vec<f64>>())
+                }
+            })
+            .collect();
+
+        for workers in [1usize, 2, 8] {
+            let service = Service::start(ServiceConfig {
+                pool: PoolConfig { workers, queue_capacity: 64 },
+                path_segment_min: 2,
+                ..Default::default()
+            });
+            // R standalone path jobs, one per response, same dataset id.
+            let alone: Vec<Vec<_>> = responses
+                .iter()
+                .map(|y| {
+                    let rx = service
+                        .submit_path(3, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+                        .unwrap();
+                    rx.recv().unwrap().result.expect("solo path ok").expect_path()
+                })
+                .collect();
+            // One MultiResponse job over the same responses and grid.
+            let rx = service
+                .submit_multi_response(
+                    3,
+                    x.clone(),
+                    responses.clone(),
+                    points.clone(),
+                    BackendChoice::Rust,
+                )
+                .unwrap();
+            let multi = rx.recv().unwrap().result.expect("screen ok").expect_multi_response();
+            let m = service.metrics();
+            assert_eq!(
+                m.prep_builds(),
+                1,
+                "{n}x{p} sparse={sparse} workers={workers}: solo jobs and the screen \
+                 must share one preparation"
+            );
+            assert_eq!(m.responses_total(), responses.len() as u64);
+            assert_eq!(
+                m.responses_screened_out(),
+                if primal { 1 } else { 0 },
+                "{n}x{p} sparse={sparse}: screening fires exactly on the zero response"
+            );
+            service.shutdown();
+
+            assert_eq!(multi.paths.len(), responses.len());
+            assert_eq!(multi.lambda_max.len(), responses.len());
+            assert_eq!(multi.screened.len(), responses.len());
+            assert!(multi.early_stopped_at.iter().all(|s| s.is_none()));
+            for (r, (a, b)) in alone.iter().zip(&multi.paths).enumerate() {
+                let want_screened = primal && r == 2;
+                assert_eq!(multi.screened[r], want_screened, "{n}x{p} response {r}");
+                if want_screened {
+                    assert_eq!(multi.lambda_max[r], 0.0);
+                }
+                // Screening must never change which grid points a
+                // response reports: always the full grid here.
+                assert_eq!(a.len(), points.len());
+                assert_eq!(b.len(), points.len(), "{n}x{p} response {r} path length");
+                for (i, (sa, sb)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(
+                        sa.iterations, sb.iterations,
+                        "{n}x{p} sparse={sparse} workers={workers} response {r} point {i}"
+                    );
+                    for j in 0..sa.beta.len() {
+                        assert_eq!(
+                            sa.beta[j].to_bits(),
+                            sb.beta[j].to_bits(),
+                            "{n}x{p} sparse={sparse} workers={workers} response {r} \
+                             point {i} j={j}: solo {} vs screen {}",
+                            sa.beta[j],
+                            sb.beta[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Opt-in early stopping trades the tail of a response's path for
+/// throughput: with an aggressive plateau threshold the screen reports
+/// a truncated path whose solved prefix is **bit-identical** to the
+/// full-grid run, and the `responses_early_stopped` counter goes live.
+#[test]
+fn multi_response_early_stop_truncates_but_keeps_prefix_bits() {
+    let d = synth_regression(&SynthSpec {
+        n: 30,
+        p: 40,
+        support: 6,
+        seed: 841,
+        ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig { grid: 8, ..Default::default() });
+    let grid = runner.derive_grid(&d);
+    let mut points = runner.grid_points(&grid);
+    points.retain(|gp| gp.t > 0.0);
+    assert!(points.len() >= 4, "grid too small: {}", points.len());
+    let x = Arc::new(Design::from(d.x.clone()));
+    let responses: Vec<Arc<Vec<f64>>> = (0..2)
+        .map(|r| {
+            let f = 1.0 + 0.4 * r as f64;
+            Arc::new(d.y.iter().map(|&v| f * v).collect::<Vec<f64>>())
+        })
+        .collect();
+    let run = |early_stop: Option<f64>| {
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 2, queue_capacity: 16 },
+            multi_response_early_stop: early_stop,
+            ..Default::default()
+        });
+        let rx = service
+            .submit_multi_response(
+                1,
+                x.clone(),
+                responses.clone(),
+                points.clone(),
+                BackendChoice::Rust,
+            )
+            .unwrap();
+        let res = rx.recv().unwrap().result.expect("screen ok").expect_multi_response();
+        let stopped = service.metrics().responses_early_stopped();
+        let report = service.metrics().report();
+        service.shutdown();
+        (res, stopped, report)
+    };
+    let (full, stopped_full, _) = run(None);
+    assert!(full.early_stopped_at.iter().all(|s| s.is_none()));
+    assert_eq!(stopped_full, 0);
+    // A deviance drop of < 99.9% between adjacent grid points counts as
+    // a plateau — every realistic path retires almost immediately.
+    let (cut, stopped_cut, report) = run(Some(0.999));
+    assert!(stopped_cut >= 1, "aggressive threshold must stop something");
+    assert!(report.contains("responses_early_stopped="), "report: {report}");
+    let mut any_truncated = false;
+    for (r, path) in cut.paths.iter().enumerate() {
+        match cut.early_stopped_at[r] {
+            Some(k) => {
+                assert_eq!(path.len(), k + 1, "response {r}: path ends at the stop point");
+                assert!(path.len() < full.paths[r].len(), "response {r} must truncate");
+                any_truncated = true;
+            }
+            None => assert_eq!(path.len(), full.paths[r].len()),
+        }
+        // The solved prefix is bit-for-bit the full run's prefix.
+        for (i, (sa, sb)) in full.paths[r].iter().zip(path).enumerate() {
+            assert_eq!(sa.iterations, sb.iterations, "response {r} point {i}");
+            for j in 0..sa.beta.len() {
+                assert_eq!(
+                    sa.beta[j].to_bits(),
+                    sb.beta[j].to_bits(),
+                    "response {r} point {i} j={j}: full {} vs early-stopped {}",
+                    sa.beta[j],
+                    sb.beta[j]
+                );
+            }
+        }
+    }
+    assert!(any_truncated);
+}
+
+/// Segment hand-off serializes instead of speculating when the queue
+/// lets it: with one worker wedged on a long job, the free worker runs
+/// both segments of a split path back to back, so segment 2 consumes
+/// segment 1's landed warm (the `segment_handoffs` counter) instead of
+/// re-solving the boundary point — and the result still matches the
+/// offline runner bit-for-bit.
+#[test]
+fn segment_handoff_serializes_when_worker_is_busy() {
+    // The wedge: one expensive primal point job (n=300, p=500) that a
+    // worker grinds on while the other runs the cheap segmented path.
+    let big = synth_regression(&SynthSpec {
+        n: 300,
+        p: 500,
+        support: 20,
+        seed: 851,
+        ..Default::default()
+    });
+    let small = synth_regression(&SynthSpec {
+        n: 160,
+        p: 12,
+        support: 6,
+        seed: 852,
+        ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig { grid: 8, ..Default::default() });
+    let grid = runner.derive_grid(&small);
+    assert!(grid.len() >= 4, "grid too small: {}", grid.len());
+    let points = runner.grid_points(&grid);
+
+    let sven_solver = Sven::new(RustBackend::default());
+    let offline = runner.run(&small, &sven_solver, &grid).unwrap();
+
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 2, queue_capacity: 16 },
+        path_segment_min: 2,
+        ..Default::default()
+    });
+    // FIFO queue: [big point, segment 1, segment 2]. One worker takes
+    // the big point; the other takes segment 1, publishes its final
+    // warm, then takes segment 2 and finds the hand-off waiting.
+    let rx_big = service
+        .submit_point(
+            1,
+            Arc::new(Design::from(big.x.clone())),
+            Arc::new(big.y.clone()),
+            0.5,
+            0.5,
+            BackendChoice::Rust,
+        )
+        .unwrap();
+    let rx_path = service
+        .submit_path(
+            2,
+            Arc::new(Design::from(small.x.clone())),
+            Arc::new(small.y.clone()),
+            points,
+            BackendChoice::Rust,
+        )
+        .unwrap();
+    let served = rx_path.recv().unwrap().result.expect("path ok").expect_path();
+    rx_big.recv().unwrap().result.expect("big point ok");
+    let m = service.metrics();
+    assert!(m.path_segments() >= 2, "the path must have split");
+    assert!(
+        m.segment_handoffs() >= 1,
+        "the serialized segment must consume the landed warm, not speculate"
+    );
+    let report = m.report();
+    assert!(report.contains("segment_handoffs="), "report: {report}");
+    service.shutdown();
+
+    assert_eq!(served.len(), offline.len());
+    for (i, (off, srv)) in offline.iter().zip(&served).enumerate() {
+        for j in 0..off.beta.len() {
+            assert_eq!(
+                off.beta[j].to_bits(),
+                srv.beta[j].to_bits(),
+                "handed-off segment moved bits at point {i} j={j}"
+            );
+        }
+    }
+}
+
 /// A segmented path job with an invalid late grid point fails fast at
 /// submission — before any segment burns a sweep — with the same
 /// accepted-then-failed semantics as a worker-side rejection.

@@ -113,6 +113,20 @@ fn main() {
         );
     }
 
+    // Robustness micro-bench: shed latency, deadline-control overhead on
+    // a path sweep, and p50/p99 point-job latency under an injected
+    // fault schedule (asserts shed-builds-nothing, deadline and
+    // fault-recovery bit-identity even in smoke mode; the full run
+    // writes BENCH_PR9.json).
+    let (sp_ctl, sp_fault) = sven::bench::figures::robustness_micro(!smoke);
+    if !smoke {
+        println!(
+            "robustness: deadline-armed sweep {sp_ctl:.3}x the clean sweep, faulted p50 \
+             {sp_fault:.2}x the clean p50 (acceptance: deadline overhead < 1.2x; every \
+             faulted job recovers bit-identically)"
+        );
+    }
+
     let (warm, reps) = if smoke { (1, 2) } else { (2, 10) };
 
     // gemm through the Mat facade (includes dispatch + allocation)

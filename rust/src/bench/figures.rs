@@ -1088,6 +1088,7 @@ pub fn screen_micro(full: bool) -> (f64, f64) {
             &live,
             &points,
             None,
+            None,
         )
         .expect("multi sweep");
         widest = widest.max(out.stats.max_fused_width);
@@ -1148,6 +1149,245 @@ pub fn screen_micro(full: bool) -> (f64, f64) {
         }
     }
     (last_speedup, widest as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Robustness micro-bench (admission sheds / deadline control / faults)
+// ---------------------------------------------------------------------------
+
+/// Robustness micro-bench for the fault-isolation layer, three
+/// measurements:
+///
+/// 1. **Shed latency** — over-budget submissions must be rejected by
+///    admission control without building any state (no id, no channel,
+///    no preparation, no queue slot), so the unit is nanoseconds per
+///    shed;
+/// 2. **Deadline-control overhead** — a generous deadline arms the
+///    grid-point boundary checks on a `Path` sweep; the controlled
+///    sweep must stay bit-identical to the uncontrolled one (batch
+///    composition never moves a bit), and the ratio prices the chunked
+///    batching + clock polls;
+/// 3. **Latency under faults** — p50/p99 round-trip latency of point
+///    jobs through a service with an injected fault schedule (a failed
+///    prep build, a solve panic, a pickup panic, two delays — all
+///    retried) vs a clean service, with every faulted job still
+///    succeeding bit-identically to the clean run.
+///
+/// All three assertions run even in smoke mode. The full run writes
+/// `BENCH_PR9.json` at the repo root (the robustness-trajectory
+/// record). Returns (deadline-control overhead ratio, faulted-vs-clean
+/// p50 latency ratio).
+pub fn robustness_micro(full: bool) -> (f64, f64) {
+    use super::harness::measure;
+    use crate::coordinator::{
+        BackendChoice, FaultPlan, JobError, JobKind, PoolConfig, RetryPolicy, Service,
+        ServiceConfig, SubmitOptions,
+    };
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    println!("=== robustness micro: sheds / deadline control / faulted latency ===");
+    let (n, p, grid_n) = if full { (200usize, 480usize, 16) } else { (40, 48, 6) };
+    let data = crate::data::synth_regression(&crate::data::SynthSpec {
+        name: format!("robust-{n}x{p}"),
+        n,
+        p,
+        support: (p / 16).max(4),
+        seed: 4242,
+        ..Default::default()
+    });
+    let runner = PathRunner::new(PathRunnerConfig {
+        grid: grid_n,
+        path: PathSettings { num_lambda: 40, ..Default::default() },
+        ..Default::default()
+    });
+    let derived = runner.derive_grid(&data);
+    let mut points = runner.grid_points(&derived);
+    points.retain(|gp| gp.t > 0.0);
+    if points.len() < 2 {
+        println!("grid too small ({} points), skipping robustness bench", points.len());
+        return (f64::NAN, f64::NAN);
+    }
+    let x = Arc::new(crate::linalg::Design::from(data.x.clone()));
+    let y = Arc::new(data.y.clone());
+
+    // --- 1. shed latency: cost > budget is rejected before any state ---
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 1, queue_capacity: 8 },
+        max_queue_depth: Some(1),
+        ..Default::default()
+    });
+    let sheds = if full { 10_000usize } else { 200 };
+    let timer = Timer::start();
+    for _ in 0..sheds {
+        let res =
+            service.submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust);
+        assert!(
+            matches!(res, Err(JobError::Overloaded { .. })),
+            "a path of {} solve-units must shed against a budget of 1",
+            points.len()
+        );
+    }
+    let shed_ns = timer.elapsed() * 1e9 / sheds as f64;
+    let m = service.metrics();
+    assert_eq!(m.jobs_shed(), sheds as u64);
+    assert_eq!(m.submitted(), 0, "a shed submission must never count as submitted");
+    assert_eq!(m.prep_builds(), 0, "a shed submission must build nothing");
+    service.shutdown();
+    println!("shed latency: {shed_ns:.0} ns/shed over {sheds} over-budget submissions");
+
+    // --- 2. deadline-control overhead on a path sweep (bit-identical) ---
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 1, queue_capacity: 8 },
+        ..Default::default()
+    });
+    let far = SubmitOptions::with_deadline(Duration::from_secs(3600));
+    let reps = if full { 8 } else { 2 };
+    // Warm the prep cache so both measurements time the sweep itself.
+    let rx = service
+        .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+        .expect("accepted");
+    let clean = rx.recv().expect("outcome").result.expect("path ok").expect_path();
+    let t_clean = measure(1, reps, || {
+        let rx = service
+            .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+            .expect("accepted");
+        rx.recv().expect("outcome").result.expect("path ok")
+    })
+    .summary
+    .median();
+    let rx = service
+        .submit_path_with(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust, far)
+        .expect("accepted");
+    let controlled = rx.recv().expect("outcome").result.expect("path ok").expect_path();
+    let t_ctl = measure(1, reps, || {
+        let rx = service
+            .submit_path_with(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust, far)
+            .expect("accepted");
+        rx.recv().expect("outcome").result.expect("path ok")
+    })
+    .summary
+    .median();
+    assert_eq!(clean.len(), controlled.len());
+    for (i, (a, b)) in clean.iter().zip(&controlled).enumerate() {
+        assert_eq!(a.iterations, b.iterations, "point {i}: iteration counts must match");
+        for j in 0..a.beta.len() {
+            assert_eq!(
+                a.beta[j].to_bits(),
+                b.beta[j].to_bits(),
+                "point {i}: a deadline-armed sweep must stay bit-identical (j={j})"
+            );
+        }
+    }
+    let overhead = t_ctl / t_clean.max(1e-12);
+    service.shutdown();
+    println!(
+        "deadline control: clean path {:.2}ms vs armed {:.2}ms ({overhead:.3}x, bit-identical)",
+        t_clean * 1e3,
+        t_ctl * 1e3
+    );
+
+    // --- 3. p50/p99 point-job latency under an injected fault schedule ---
+    // One worker + sequential round trips keep the service-wide fault
+    // ordinals on a deterministic schedule: prep build #0 fails (one
+    // retry rebuilds it), solve #3 and pickup #6 panic (one retry each),
+    // solves #5 and #9 stall 2 ms.
+    let jobs = if full { 48usize } else { 12 };
+    let plan = FaultPlan {
+        prep_build_errors: vec![0],
+        segment_panics: vec![6],
+        solve_panics: vec![3],
+        solve_delays: vec![(5, Duration::from_millis(2)), (9, Duration::from_millis(2))],
+        ..Default::default()
+    };
+    let run = |plan: Option<FaultPlan>| {
+        let service = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 1, queue_capacity: 8 },
+            fault_plan: plan,
+            ..Default::default()
+        });
+        let opts = SubmitOptions { retry: RetryPolicy::retries(3), ..Default::default() };
+        let mut lat = Vec::with_capacity(jobs);
+        let mut betas = Vec::with_capacity(jobs);
+        for i in 0..jobs {
+            let gp = points[i % points.len()];
+            let t = Timer::start();
+            let rx = service
+                .submit_with(
+                    1,
+                    x.clone(),
+                    y.clone(),
+                    JobKind::Point { t: gp.t, lambda2: gp.lambda2 },
+                    BackendChoice::Rust,
+                    opts,
+                )
+                .expect("accepted");
+            let sol = rx
+                .recv()
+                .expect("outcome")
+                .result
+                .expect("a faulted-but-retried job must still succeed")
+                .expect_point();
+            lat.push(t.elapsed());
+            betas.push(sol.beta);
+        }
+        let m = service.metrics();
+        let (retried, panics) = (m.jobs_retried(), m.worker_panics());
+        service.shutdown();
+        (lat, betas, retried, panics)
+    };
+    let (clean_lat, clean_betas, r0, _) = run(None);
+    assert_eq!(r0, 0, "the clean service must not retry anything");
+    let (fault_lat, fault_betas, retried, panics) = run(Some(plan));
+    assert!(retried >= 3, "the schedule injects three retried faults, saw {retried}");
+    assert!(panics >= 2, "the solve and pickup panics must be caught, saw {panics}");
+    for (i, (a, b)) in clean_betas.iter().zip(&fault_betas).enumerate() {
+        for j in 0..a.len() {
+            assert_eq!(
+                a[j].to_bits(),
+                b[j].to_bits(),
+                "job {i}: faulted-but-retried jobs must match the clean run (j={j})"
+            );
+        }
+    }
+    let pct = |lat: &[f64], q: f64| {
+        let mut s = lat.to_vec();
+        s.sort_by(f64::total_cmp);
+        s[((s.len() - 1) as f64 * q) as usize]
+    };
+    let (c50, c99) = (pct(&clean_lat, 0.5), pct(&clean_lat, 0.99));
+    let (f50, f99) = (pct(&fault_lat, 0.5), pct(&fault_lat, 0.99));
+    let fault_ratio = f50 / c50.max(1e-12);
+    println!(
+        "faulted latency over {jobs} point jobs: clean p50 {:.2}ms p99 {:.2}ms | injected \
+         p50 {:.2}ms p99 {:.2}ms ({retried} retries, {panics} caught panics, bit-identical)",
+        c50 * 1e3,
+        c99 * 1e3,
+        f50 * 1e3,
+        f99 * 1e3
+    );
+
+    if full {
+        let json = format!(
+            "{{\n  \"bench\": \"robustness_micro\",\n  \"rows\": [\n    {{\"shed_ns\": \
+             {shed_ns:.0}, \"clean_path_seconds\": {t_clean:.6}, \"deadline_path_seconds\": \
+             {t_ctl:.6}, \"deadline_overhead\": {overhead:.4}, \"jobs\": {jobs}, \
+             \"clean_p50_seconds\": {c50:.6}, \"clean_p99_seconds\": {c99:.6}, \
+             \"faulted_p50_seconds\": {f50:.6}, \"faulted_p99_seconds\": {f99:.6}, \
+             \"retries\": {retried}, \"caught_panics\": {panics}}}\n  ]\n}}\n"
+        );
+        // The trajectory record lives at the repo root, one level above
+        // the crate manifest.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|d| d.join("BENCH_PR9.json"))
+            .unwrap_or_else(|| std::path::PathBuf::from("BENCH_PR9.json"));
+        match std::fs::write(&path, &json) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
+        }
+    }
+    (overhead, fault_ratio)
 }
 
 // ---------------------------------------------------------------------------

@@ -5,11 +5,14 @@
 //! sven artifacts                        artifact registry status
 //! sven solve   --dataset GLI-85 [--t X --lambda2 Y] [--backend xla|rust]
 //! sven path    --dataset GLI-85 [--grid 40] [--backend xla|rust]
-//! sven serve   --requests 64 [--workers N]   demo service run
+//! sven serve   --requests 64 [--workers N] [--deadline-ms N] [--max-queue-depth N]   demo service run
 //! sven screen  --responses 8 [--grid 16] [--workers N]   whole-screen multi-response job
 //! ```
 
-use crate::coordinator::{BackendChoice, PathRunner, PathRunnerConfig, Service, ServiceConfig};
+use crate::coordinator::{
+    BackendChoice, JobError, JobKind, JobResult, PathRunner, PathRunnerConfig, Service,
+    ServiceConfig, SubmitOptions,
+};
 use crate::data::{profile_by_name, ALL_PROFILES};
 use crate::solvers::elastic_net::EnProblem;
 use crate::solvers::glmnet::PathSettings;
@@ -20,6 +23,7 @@ use crate::util::parallel::{set_global_parallelism, Parallelism};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Parsed flags: `--key value` pairs plus positionals.
 pub struct Args {
@@ -99,6 +103,12 @@ COMMANDS:
   serve                    demo coordinator run
       --requests N         number of jobs             [default 32]
       --workers N          pool size                  [default cpus]
+      --deadline-ms N      per-job wall-clock budget; a deadline that
+                           lands mid-sweep returns the solved prefix as
+                           a truncated result (off by default)
+      --max-queue-depth N  admission budget in grid-point solve units;
+                           over-budget submissions are shed with an
+                           overloaded error (off by default)
       --backend xla|rust   SVM backend                [default rust]
       --threads N          linalg worker threads (0 = auto, 1 = serial)
       --kernel K           compute kernel: scalar|avx2|fma|auto [default auto]
@@ -329,6 +339,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(w) = args.get_usize("workers")? {
         config.pool.workers = w;
     }
+    if let Some(depth) = args.get_usize("max-queue-depth")? {
+        config.max_queue_depth = Some(depth);
+    }
+    let options = SubmitOptions {
+        deadline: args.get_usize("deadline-ms")?.map(|ms| Duration::from_millis(ms as u64)),
+        ..Default::default()
+    };
     let data = load_dataset(args)?;
     let runner = PathRunner::new(PathRunnerConfig {
         grid: requests.min(40),
@@ -342,12 +359,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let x = Arc::new(crate::linalg::Design::from(data.x.clone()));
     let y = Arc::new(data.y.clone());
     let timer = crate::util::Timer::start();
-    let rxs: Vec<_> = (0..requests)
-        .map(|i| {
-            let pt = &grid[i % grid.len()];
-            service.submit_point(1, x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-6), backend)
-        })
-        .collect::<Result<_, _>>()?;
+    let mut rxs = Vec::with_capacity(requests);
+    let mut shed = 0usize;
+    for i in 0..requests {
+        let pt = &grid[i % grid.len()];
+        let kind = JobKind::Point { t: pt.t, lambda2: pt.lambda2.max(1e-6) };
+        match service.submit_with(1, x.clone(), y.clone(), kind, backend, options) {
+            Ok(rx) => rxs.push(rx),
+            Err(JobError::Overloaded { .. }) => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
     let mut ok = 0usize;
     for rx in rxs {
         if rx.recv()?.result.is_ok() {
@@ -359,19 +381,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // paper's sweep as a single service workload), timed separately so
     // the point-job throughput above stays comparable across runs.
     let path_timer = crate::util::Timer::start();
-    let path_rx =
-        service.submit_path(1, x.clone(), y.clone(), runner.grid_points(&grid), backend)?;
-    let path_points = match path_rx.recv()?.result {
-        Ok(r) => r.expect_path().len(),
+    let path_points = match service.submit_path_with(
+        1,
+        x.clone(),
+        y.clone(),
+        runner.grid_points(&grid),
+        backend,
+        options,
+    ) {
+        Ok(path_rx) => match path_rx.recv()?.result {
+            Ok(JobResult::Truncated { completed, total, .. }) => {
+                println!("path job truncated by the deadline: {completed}/{total} points");
+                completed
+            }
+            Ok(r) => r.expect_path().len(),
+            Err(e) => {
+                eprintln!("path job failed: {e}");
+                0
+            }
+        },
         Err(e) => {
-            eprintln!("path job failed: {e}");
+            eprintln!("path job rejected: {e}");
             0
         }
     };
     let path_wall = path_timer.elapsed();
     println!("{}", service.metrics().report());
     println!(
-        "requests={requests} ok={ok} wall={} throughput={:.1} req/s",
+        "requests={requests} ok={ok} shed={shed} wall={} throughput={:.1} req/s",
         fmt_duration(wall),
         requests as f64 / wall
     );

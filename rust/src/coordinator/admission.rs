@@ -1,0 +1,273 @@
+//! The service front door: structured job errors, per-submission
+//! options (deadline + retry policy), and cost-based admission control.
+//!
+//! Admission is budgeted in *grid-point solves*, not job counts: a
+//! 200-point CV path over 10 folds is 2000 solves, and a queue-depth
+//! bound that counted it as "one job" would admit unbounded work. Each
+//! job's cost ([`job_cost`](super::Service)) is charged against
+//! [`ServiceConfig::max_queue_depth`](super::ServiceConfig::max_queue_depth)
+//! at submission and released when the job's shared state drops —
+//! over-budget submissions shed immediately with
+//! [`JobError::Overloaded`] instead of queueing work the service cannot
+//! finish in time.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Why a job failed — the structured error carried by
+/// [`SolveOutcome::result`](super::SolveOutcome) and returned
+/// synchronously by `submit*` for shed/closed submissions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The job's parameters are malformed (dimension mismatch, bad grid
+    /// point, backend restriction). Never retried.
+    Invalid(String),
+    /// The service is closed or shut down; nothing was queued.
+    Closed,
+    /// Admission control shed the submission: charging `cost` on top of
+    /// the `depth` solve-units already in flight would exceed
+    /// `max_depth`. Nothing was queued and no worker was touched.
+    Overloaded { depth: usize, max_depth: usize, cost: usize },
+    /// A worker panicked while executing the job. The worker survives
+    /// (the panic is caught per attempt) and the fault is transient:
+    /// a [`RetryPolicy`] with spare attempts re-runs the work.
+    WorkerPanic(String),
+    /// The shared preparation build failed. The failed cache slot is
+    /// evicted, so a retry rebuilds cleanly — transient.
+    PrepFailed(String),
+    /// The solver itself reported an error (including an unavailable
+    /// XLA backend). Deterministic, so not retried.
+    Solver(String),
+    /// The job's deadline passed before any grid point was solved (a
+    /// deadline that lands mid-sweep yields a
+    /// [`JobResult::Truncated`](super::JobResult::Truncated) success
+    /// instead).
+    DeadlineExceeded,
+    /// A coordinator invariant broke — a bug, not a caller error.
+    Internal(String),
+}
+
+impl JobError {
+    /// Transient failures are worth retrying: the fault was in the
+    /// execution (a caught panic, a failed-and-evicted prep build), not
+    /// in the job itself.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, JobError::WorkerPanic(_) | JobError::PrepFailed(_))
+    }
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Invalid(msg) => f.write_str(msg),
+            JobError::Closed => f.write_str("service is closed; job rejected"),
+            JobError::Overloaded { depth, max_depth, cost } => write!(
+                f,
+                "service overloaded: {depth} solve-units in flight + {cost} requested \
+                 exceeds max_queue_depth {max_depth}; job shed"
+            ),
+            JobError::WorkerPanic(msg) => write!(f, "worker panicked: {msg}"),
+            JobError::PrepFailed(msg) => write!(f, "preparation failed: {msg}"),
+            JobError::Solver(msg) => f.write_str(msg),
+            JobError::DeadlineExceeded => {
+                f.write_str("deadline exceeded before any grid point was solved")
+            }
+            JobError::Internal(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+impl From<JobError> for String {
+    fn from(e: JobError) -> Self {
+        e.to_string()
+    }
+}
+
+/// Capped exponential backoff for transient failures: attempt `k`
+/// (1-based) sleeps `min(base_backoff · 2^(k−1), max_backoff)` before
+/// re-running. `max_attempts: 1` (the default) means no retries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (values of 0 are treated
+    /// as 1).
+    pub max_attempts: u32,
+    /// Backoff before the first retry.
+    pub base_backoff: Duration,
+    /// Backoff cap.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(200),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Retry `attempts` times after the first failure.
+    pub fn retries(attempts: u32) -> Self {
+        RetryPolicy { max_attempts: attempts.saturating_add(1), ..Default::default() }
+    }
+
+    /// Backoff to sleep after failed attempt `attempt` (1-based).
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(16);
+        let scaled = self.base_backoff.saturating_mul(1u32 << shift);
+        scaled.min(self.max_backoff)
+    }
+}
+
+/// Per-submission options accepted by every `submit*_with` method.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    /// Wall-clock budget from submission. Segments check it at
+    /// grid-point boundaries: a deadline that lands mid-sweep returns
+    /// the bit-identical solved prefix as
+    /// [`JobResult::Truncated`](super::JobResult::Truncated); one that
+    /// lands before any point is solved fails with
+    /// [`JobError::DeadlineExceeded`].
+    pub deadline: Option<Duration>,
+    /// Retry policy for transient failures (worker panics, failed prep
+    /// builds).
+    pub retry: RetryPolicy,
+}
+
+impl SubmitOptions {
+    /// Options with a deadline and no retries.
+    pub fn with_deadline(deadline: Duration) -> Self {
+        SubmitOptions { deadline: Some(deadline), ..Default::default() }
+    }
+}
+
+/// In-flight solve-unit accounting behind `max_queue_depth`.
+pub(crate) struct Admission {
+    inflight: AtomicUsize,
+    max: usize,
+}
+
+impl Admission {
+    pub(crate) fn new(max: usize) -> Self {
+        Admission { inflight: AtomicUsize::new(0), max }
+    }
+
+    /// Solve-units currently charged.
+    pub(crate) fn depth(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// The configured budget.
+    pub(crate) fn max_depth(&self) -> usize {
+        self.max
+    }
+
+    /// Try to charge `cost` units; on success the returned ticket
+    /// releases them when dropped. `Err(depth)` when the budget would
+    /// be exceeded (a cost larger than the whole budget can never be
+    /// admitted — size `max_queue_depth` to the largest job you intend
+    /// to serve).
+    pub(crate) fn try_admit(
+        self: &Arc<Self>,
+        cost: usize,
+    ) -> Result<CostTicket, usize> {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur.saturating_add(cost) > self.max {
+                return Err(cur);
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + cost,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    return Ok(CostTicket { admission: self.clone(), cost });
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// RAII charge against the admission budget; releasing is tied to the
+/// drop of the job's shared state, so the budget frees exactly when the
+/// job's last work item is done with it — even when a worker panicked.
+pub(crate) struct CostTicket {
+    admission: Arc<Admission>,
+    cost: usize,
+}
+
+impl Drop for CostTicket {
+    fn drop(&mut self) {
+        self.admission.inflight.fetch_sub(self.cost, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_charges_and_releases() {
+        let a = Arc::new(Admission::new(10));
+        let t1 = a.try_admit(6).unwrap();
+        assert_eq!(a.depth(), 6);
+        let err = a.try_admit(5).unwrap_err();
+        assert_eq!(err, 6);
+        let t2 = a.try_admit(4).unwrap();
+        assert_eq!(a.depth(), 10);
+        drop(t1);
+        assert_eq!(a.depth(), 4);
+        drop(t2);
+        assert_eq!(a.depth(), 0);
+    }
+
+    #[test]
+    fn oversized_cost_is_never_admissible() {
+        let a = Arc::new(Admission::new(4));
+        assert_eq!(a.try_admit(5).unwrap_err(), 0);
+        assert_eq!(a.depth(), 0, "a failed admit must charge nothing");
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let r = RetryPolicy {
+            max_attempts: 5,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(18),
+        };
+        assert_eq!(r.backoff_for(1), Duration::from_millis(5));
+        assert_eq!(r.backoff_for(2), Duration::from_millis(10));
+        assert_eq!(r.backoff_for(3), Duration::from_millis(18));
+        assert_eq!(r.backoff_for(30), Duration::from_millis(18));
+    }
+
+    #[test]
+    fn transient_classification() {
+        assert!(JobError::WorkerPanic("x".into()).is_transient());
+        assert!(JobError::PrepFailed("x".into()).is_transient());
+        assert!(!JobError::Invalid("x".into()).is_transient());
+        assert!(!JobError::Closed.is_transient());
+        assert!(!JobError::DeadlineExceeded.is_transient());
+        assert!(
+            !JobError::Overloaded { depth: 1, max_depth: 2, cost: 3 }.is_transient()
+        );
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let e = JobError::Overloaded { depth: 7, max_depth: 8, cost: 4 };
+        let s = e.to_string();
+        assert!(s.contains('7') && s.contains('8') && s.contains('4'), "{s}");
+        assert!(JobError::Closed.to_string().contains("closed"));
+        assert!(JobError::DeadlineExceeded.to_string().contains("deadline"));
+    }
+}

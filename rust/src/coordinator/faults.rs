@@ -1,0 +1,186 @@
+//! Deterministic fault injection for the coordinator — the harness that
+//! pins every recovery path in the fault-isolation layer.
+//!
+//! A [`FaultPlan`] names service-wide event ordinals (0-based) at which
+//! to misbehave: panic or fail the N-th preparation build, panic at the
+//! N-th work-item pickup, panic or delay the N-th grid-point solve.
+//! Ordinals are assigned by atomic counters in [`FaultState`], so a plan
+//! replays identically on a one-worker pool and stays a *deterministic
+//! schedule of injected events* (each listed ordinal fires exactly once)
+//! at any worker count. The plan rides
+//! [`ServiceConfig::fault_plan`](super::ServiceConfig::fault_plan) and
+//! exists for tests and benches only — production configs leave it
+//! `None`, which compiles the hooks down to a `None` check.
+//!
+//! Recovery contract under injection: a panicking solve fails *that job*
+//! with [`JobError::WorkerPanic`](super::JobError::WorkerPanic) (or
+//! succeeds on retry), a failing build wakes every single-flight waiter
+//! and evicts the slot, a delay pushes a deadline-carrying job into
+//! bit-identical-prefix truncation — and results that still succeed are
+//! bit-for-bit what a fault-free run produces.
+
+use crate::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A seeded, test/bench-only schedule of injected faults.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Preparation-build ordinals that panic mid-build.
+    pub prep_build_panics: Vec<u64>,
+    /// Preparation-build ordinals that return a build error.
+    pub prep_build_errors: Vec<u64>,
+    /// Work-item pickup ordinals that panic before solving anything.
+    pub segment_panics: Vec<u64>,
+    /// Grid-point solve ordinals that panic mid-sweep.
+    pub solve_panics: Vec<u64>,
+    /// Grid-point solve ordinals that stall for the given duration
+    /// before solving (the deadline-pressure lever).
+    pub solve_delays: Vec<(u64, Duration)>,
+}
+
+impl FaultPlan {
+    /// Derive a pseudo-random plan from `seed`: roughly `density` faults
+    /// of each kind scattered over the first `horizon` events of each
+    /// counter. Deterministic in `seed` — the soak test and bench replay
+    /// the same schedule every run.
+    pub fn seeded(seed: u64, horizon: u64, density: usize) -> Self {
+        let mut rng = Rng::seed_from(seed ^ 0x51_7e_a5_ed);
+        let horizon = horizon.max(1);
+        let mut draw = |n: usize| -> Vec<u64> {
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_u64() % horizon).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        FaultPlan {
+            prep_build_panics: draw(density / 2),
+            prep_build_errors: draw(density / 2),
+            segment_panics: draw(density),
+            solve_panics: draw(density),
+            solve_delays: draw(density)
+                .into_iter()
+                .map(|k| (k, Duration::from_millis(1 + rng.next_u64() % 5)))
+                .collect(),
+        }
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.prep_build_panics.is_empty()
+            && self.prep_build_errors.is_empty()
+            && self.segment_panics.is_empty()
+            && self.solve_panics.is_empty()
+            && self.solve_delays.is_empty()
+    }
+}
+
+/// Runtime state of a plan: service-wide event counters. Shared by every
+/// worker of one service, so ordinals are global across the pool.
+pub struct FaultState {
+    plan: FaultPlan,
+    prep_builds: AtomicU64,
+    pickups: AtomicU64,
+    solves: AtomicU64,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultState {
+            plan,
+            prep_builds: AtomicU64::new(0),
+            pickups: AtomicU64::new(0),
+            solves: AtomicU64::new(0),
+        }
+    }
+
+    /// Called at the start of every preparation build. Panics or returns
+    /// an injected build error when this build's ordinal is listed.
+    pub fn on_prep_build(&self) -> Result<(), String> {
+        let k = self.prep_builds.fetch_add(1, Ordering::Relaxed);
+        if self.plan.prep_build_panics.contains(&k) {
+            panic!("injected fault: prep build #{k} panics");
+        }
+        if self.plan.prep_build_errors.contains(&k) {
+            return Err(format!("injected fault: prep build #{k} fails"));
+        }
+        Ok(())
+    }
+
+    /// Called at every work-item pickup. Panics when listed.
+    pub fn on_pickup(&self) {
+        let k = self.pickups.fetch_add(1, Ordering::Relaxed);
+        if self.plan.segment_panics.contains(&k) {
+            panic!("injected fault: work item #{k} panics");
+        }
+    }
+
+    /// Called before every grid-point solve. Sleeps and/or panics when
+    /// listed (the delay fires first, so a delayed ordinal can also push
+    /// a later ordinal past a deadline).
+    pub fn on_solve(&self) {
+        let k = self.solves.fetch_add(1, Ordering::Relaxed);
+        if let Some((_, d)) = self.plan.solve_delays.iter().find(|(i, _)| *i == k) {
+            std::thread::sleep(*d);
+        }
+        if self.plan.solve_panics.contains(&k) {
+            panic!("injected fault: solve #{k} panics");
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(42, 100, 6);
+        let b = FaultPlan::seeded(42, 100, 6);
+        assert_eq!(a.solve_panics, b.solve_panics);
+        assert_eq!(a.prep_build_errors, b.prep_build_errors);
+        assert_eq!(a.segment_panics, b.segment_panics);
+        let c = FaultPlan::seeded(43, 100, 6);
+        assert_ne!(
+            (a.solve_panics, a.segment_panics),
+            (c.solve_panics, c.segment_panics),
+            "different seeds must differ"
+        );
+        assert!(a.solve_delays.iter().all(|(k, _)| *k < 100));
+    }
+
+    #[test]
+    fn ordinals_fire_exactly_once() {
+        let state = FaultState::new(FaultPlan {
+            prep_build_errors: vec![1],
+            ..Default::default()
+        });
+        assert!(state.on_prep_build().is_ok()); // ordinal 0
+        assert!(state.on_prep_build().is_err()); // ordinal 1: injected
+        assert!(state.on_prep_build().is_ok()); // ordinal 2
+    }
+
+    #[test]
+    fn listed_solve_panics() {
+        let state = FaultState::new(FaultPlan {
+            solve_panics: vec![0],
+            ..Default::default()
+        });
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| state.on_solve()));
+        assert!(r.is_err());
+        state.on_solve(); // ordinal 1 passes
+    }
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        let state = FaultState::new(plan);
+        for _ in 0..10 {
+            assert!(state.on_prep_build().is_ok());
+            state.on_pickup();
+            state.on_solve();
+        }
+    }
+}

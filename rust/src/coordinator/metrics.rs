@@ -2,6 +2,7 @@
 //! request hot path (atomics + a mutex-guarded reservoir only on
 //! completion).
 
+use super::sync::lock;
 use crate::util::Summary;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -30,6 +31,13 @@ pub struct Metrics {
     responses_screened_out: AtomicU64,
     responses_early_stopped: AtomicU64,
     segment_handoffs: AtomicU64,
+    worker_panics: AtomicU64,
+    worker_respawns: AtomicU64,
+    jobs_truncated: AtomicU64,
+    jobs_shed: AtomicU64,
+    jobs_retried: AtomicU64,
+    deadline_aborts: AtomicU64,
+    prep_build_failures: AtomicU64,
     latencies: Mutex<Vec<f64>>,
     queue_waits: Mutex<Vec<f64>>,
 }
@@ -56,15 +64,15 @@ impl Metrics {
 
     pub fn on_complete(&self, latency_s: f64, queue_wait_s: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        self.latencies.lock().unwrap().push(latency_s);
-        self.queue_waits.lock().unwrap().push(queue_wait_s);
+        lock(&self.latencies).push(latency_s);
+        lock(&self.queue_waits).push(queue_wait_s);
     }
 
     /// Failed jobs record their queue wait too — backpressure must stay
     /// visible precisely when the system is misbehaving.
     pub fn on_fail(&self, queue_wait_s: f64) {
         self.failed.fetch_add(1, Ordering::Relaxed);
-        self.queue_waits.lock().unwrap().push(queue_wait_s);
+        lock(&self.queue_waits).push(queue_wait_s);
     }
 
     /// A submission bounced off a closed service.
@@ -162,6 +170,46 @@ impl Metrics {
         self.segment_handoffs.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A worker caught a panic while executing a job attempt (the job
+    /// fails with `WorkerPanic` or retries; the worker survives).
+    pub fn on_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A panic escaped job-level isolation and the pool rebuilt the
+    /// worker's context in place (the supervised-worker backstop).
+    pub fn on_worker_respawn(&self) {
+        self.worker_respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A deadline-carrying job completed with a truncated (but
+    /// bit-identical) prefix of its grid.
+    pub fn on_truncated(&self) {
+        self.jobs_truncated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Admission control shed a submission before it touched the queue.
+    pub fn on_shed(&self) {
+        self.jobs_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A transient failure triggered a retry attempt.
+    pub fn on_job_retried(&self) {
+        self.jobs_retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A work item stopped early (skipped or truncated mid-sweep)
+    /// because its job's deadline passed.
+    pub fn on_deadline_abort(&self) {
+        self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A preparation build failed or panicked (the failed cache slot is
+    /// evicted and every single-flight waiter observes the error).
+    pub fn on_prep_build_failure(&self) {
+        self.prep_build_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
     }
@@ -238,9 +286,37 @@ impl Metrics {
         self.segment_handoffs.load(Ordering::Relaxed)
     }
 
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_respawns(&self) -> u64 {
+        self.worker_respawns.load(Ordering::Relaxed)
+    }
+
+    pub fn jobs_truncated(&self) -> u64 {
+        self.jobs_truncated.load(Ordering::Relaxed)
+    }
+
+    pub fn jobs_shed(&self) -> u64 {
+        self.jobs_shed.load(Ordering::Relaxed)
+    }
+
+    pub fn jobs_retried(&self) -> u64 {
+        self.jobs_retried.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_aborts(&self) -> u64 {
+        self.deadline_aborts.load(Ordering::Relaxed)
+    }
+
+    pub fn prep_build_failures(&self) -> u64 {
+        self.prep_build_failures.load(Ordering::Relaxed)
+    }
+
     /// End-to-end latency summary (None until something completed).
     pub fn latency_summary(&self) -> Option<Summary> {
-        let l = self.latencies.lock().unwrap();
+        let l = lock(&self.latencies);
         if l.is_empty() {
             None
         } else {
@@ -250,7 +326,7 @@ impl Metrics {
 
     /// Queue-wait summary — the backpressure signal.
     pub fn queue_wait_summary(&self) -> Option<Summary> {
-        let l = self.queue_waits.lock().unwrap();
+        let l = lock(&self.queue_waits);
         if l.is_empty() {
             None
         } else {
@@ -292,7 +368,10 @@ impl Metrics {
              refine_iters_total={} f32_panel_bytes={} \
              cv_folds={} batched_cg_rhs_total={} batch_panel_rebuilds={} \
              responses_total={} responses_screened_out={} \
-             responses_early_stopped={} segment_handoffs={} {lat}{qw}{kernel}",
+             responses_early_stopped={} segment_handoffs={} \
+             worker_panics={} worker_respawns={} jobs_truncated={} \
+             jobs_shed={} jobs_retried={} deadline_aborts={} \
+             prep_build_failures={} {lat}{qw}{kernel}",
             self.submitted(),
             self.completed(),
             self.failed(),
@@ -311,14 +390,52 @@ impl Metrics {
             self.responses_total(),
             self.responses_screened_out(),
             self.responses_early_stopped(),
-            self.segment_handoffs()
+            self.segment_handoffs(),
+            self.worker_panics(),
+            self.worker_respawns(),
+            self.jobs_truncated(),
+            self.jobs_shed(),
+            self.jobs_retried(),
+            self.deadline_aborts(),
+            self.prep_build_failures()
         )
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn robustness_counters() {
+        let m = Metrics::new();
+        m.on_worker_panic();
+        m.on_worker_panic();
+        m.on_worker_respawn();
+        m.on_truncated();
+        m.on_shed();
+        m.on_shed();
+        m.on_shed();
+        m.on_job_retried();
+        m.on_deadline_abort();
+        m.on_prep_build_failure();
+        assert_eq!(m.worker_panics(), 2);
+        assert_eq!(m.worker_respawns(), 1);
+        assert_eq!(m.jobs_truncated(), 1);
+        assert_eq!(m.jobs_shed(), 3);
+        assert_eq!(m.jobs_retried(), 1);
+        assert_eq!(m.deadline_aborts(), 1);
+        assert_eq!(m.prep_build_failures(), 1);
+        let report = m.report();
+        assert!(report.contains("worker_panics=2"), "{report}");
+        assert!(report.contains("worker_respawns=1"), "{report}");
+        assert!(report.contains("jobs_truncated=1"), "{report}");
+        assert!(report.contains("jobs_shed=3"), "{report}");
+        assert!(report.contains("jobs_retried=1"), "{report}");
+        assert!(report.contains("deadline_aborts=1"), "{report}");
+        assert!(report.contains("prep_build_failures=1"), "{report}");
+    }
 
     #[test]
     fn counters_and_summary() {

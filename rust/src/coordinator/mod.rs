@@ -13,31 +13,51 @@
 //!   splits and sub-problems, per-λ CV-error curves, and the
 //!   `JobKind::CvPath` result type (fold paths + winning refit).
 //! - [`queue`] — bounded MPMC work queue (condvar-based, backpressure).
-//! - [`pool`] — worker pool; workers own thread-local solver state
-//!   (backends + scratch) but share the immutable preparations.
+//! - [`pool`] — supervised worker pool; workers own thread-local solver
+//!   state (backends + scratch) but share the immutable preparations,
+//!   and a panic that escapes the handler respawns the worker's context
+//!   instead of shrinking the pool.
 //! - [`prep_cache`] — service-level `Arc<dyn SvmPrep>` cache keyed by
 //!   (dataset, backend): single-flight builds, LRU bound, counted in
-//!   metrics.
+//!   metrics; failed or panicked builds wake every waiter and evict the
+//!   slot so a retry rebuilds cleanly.
+//! - [`admission`] — structured [`JobError`]s, per-submission
+//!   [`SubmitOptions`] (deadline + [`RetryPolicy`]), and the cost-based
+//!   admission budget behind `ServiceConfig::max_queue_depth`.
+//! - [`faults`] — deterministic fault injection ([`FaultPlan`]) for
+//!   tests and benches: seeded panics, failed builds, and delays at
+//!   exact ordinals, off in production configs.
 //! - [`service`] — the request loop: submit point or path jobs, collect
 //!   responses, drain gracefully; per-request latency + queue-wait
-//!   metrics.
-//! - [`metrics`] — counters and latency summaries.
+//!   metrics, per-attempt panic isolation, deadline truncation.
+//! - [`metrics`] — counters and latency summaries, including the
+//!   robustness counters (panics, respawns, sheds, retries, truncations).
 
+// The coordinator is the part of the crate that must degrade rather than
+// die: no naked unwraps. Intentional assertions use `expect` with an
+// invariant message; poison-tolerant locking lives in `sync`.
+#![deny(clippy::unwrap_used)]
+
+pub mod admission;
 pub mod cv;
+pub mod faults;
 pub mod metrics;
 pub mod path;
 pub mod pool;
 pub mod prep_cache;
 pub mod queue;
 pub mod service;
+mod sync;
 
+pub use admission::{JobError, RetryPolicy, SubmitOptions};
 pub use cv::CvPathResult;
+pub use faults::FaultPlan;
 pub use metrics::Metrics;
 pub use path::{GridPoint, MultiSweepOut, PathRunResult, PathRunner, PathRunnerConfig};
 pub use pool::{Pool, PoolConfig};
 pub use prep_cache::PrepCache;
 pub use queue::Queue;
 pub use service::{
-    BackendChoice, JobKind, JobResult, MultiResponseResult, Service, ServiceClosed,
-    ServiceConfig, ServiceConfigError, SolveJob, SolveOutcome,
+    BackendChoice, JobKind, JobResult, MultiResponseResult, Service, ServiceConfig,
+    ServiceConfigError, SolveJob, SolveOutcome,
 };

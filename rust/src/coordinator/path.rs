@@ -29,6 +29,42 @@ pub struct GridPoint {
     pub lambda2: f64,
 }
 
+/// Cooperative sweep control: lets the service's fault-isolation layer
+/// reach inside a sweep at grid-point granularity without the sweep
+/// knowing about deadlines or fault plans.
+///
+/// `expired` is polled at grid-point (primal: chunk) boundaries; once it
+/// returns `true` the sweep stops and returns the solved prefix —
+/// bit-identical to the same prefix of an uncontrolled sweep, because
+/// batch composition never moves a bit (see [`sweep_prepared`]).
+/// `before_solve` runs once per grid-point solve about to start; the
+/// fault-injection harness uses it to panic or stall at its scheduled
+/// solve ordinals (a panic unwinds out of the sweep and is caught at the
+/// job-attempt layer).
+pub struct SweepCtl<'a> {
+    /// True once the job's wall-clock budget is exhausted.
+    pub expired: &'a dyn Fn() -> bool,
+    /// Hook before each grid-point solve (fault injection; may panic).
+    pub before_solve: &'a dyn Fn(),
+}
+
+impl SweepCtl<'_> {
+    fn expired(&self) -> bool {
+        (self.expired)()
+    }
+
+    fn before_solves(&self, n: usize) {
+        for _ in 0..n {
+            (self.before_solve)();
+        }
+    }
+}
+
+/// Primal chunk width under an active [`SweepCtl`]: small enough that a
+/// deadline lands within one chunk of where it would land point-by-point,
+/// large enough to keep the lockstep-Newton panels wide.
+const CTL_CHUNK: usize = 8;
+
 /// Warm-start chained sweep over a prepared data set: solve each grid
 /// point in order, seeding every solve after the first from the previous
 /// β. This is *the* amortized access pattern of the paper (Figures 1–3):
@@ -52,6 +88,14 @@ pub struct GridPoint {
 /// `JobKind::Path` workers call exactly this function, so the two
 /// produce bit-identical coefficient sequences. Returns the per-point
 /// solutions plus the batch fusion stats (zero for sequential sweeps).
+///
+/// `ctl: Some(..)` activates cooperative deadline/fault control: the
+/// primal fast path switches from one whole-grid batch to [`CTL_CHUNK`]-
+/// wide batches so expiry is observed at chunk boundaries — still
+/// bit-identical, since every primal batch member equals its solo cold
+/// solve regardless of how the grid is chunked. A truncated return
+/// (`out.len() < grid.len()`) means the deadline fired; the prefix is
+/// exactly what an uncontrolled sweep produces for those points.
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_prepared<B: SvmBackend>(
     sven: &Sven<B>,
@@ -62,16 +106,38 @@ pub fn sweep_prepared<B: SvmBackend>(
     grid: &[GridPoint],
     warm0: Option<SvmWarm>,
     warm_start: bool,
+    ctl: Option<&SweepCtl<'_>>,
 ) -> anyhow::Result<(Vec<EnSolution>, SvmBatchStats)> {
     let primal_cold =
         prep.mode() == SvmMode::Primal && warm0.as_ref().map_or(true, |w| w.w.is_none());
     if primal_cold && grid.len() > 1 {
-        let pts: Vec<(f64, f64)> = grid.iter().map(|gp| (gp.t, gp.lambda2)).collect();
-        return sven.solve_prepared_batch(prep, scratch, x, y, &pts);
+        let Some(ctl) = ctl else {
+            let pts: Vec<(f64, f64)> = grid.iter().map(|gp| (gp.t, gp.lambda2)).collect();
+            return sven.solve_prepared_batch(prep, scratch, x, y, &pts);
+        };
+        let mut out = Vec::with_capacity(grid.len());
+        let mut stats = SvmBatchStats::default();
+        for chunk in grid.chunks(CTL_CHUNK) {
+            if ctl.expired() {
+                break;
+            }
+            ctl.before_solves(chunk.len());
+            let pts: Vec<(f64, f64)> = chunk.iter().map(|gp| (gp.t, gp.lambda2)).collect();
+            let (sols, st) = sven.solve_prepared_batch(prep, scratch, x, y, &pts)?;
+            stats.merge(&st);
+            out.extend(sols);
+        }
+        return Ok((out, stats));
     }
     let mut out = Vec::with_capacity(grid.len());
     let mut warm: Option<SvmWarm> = warm0;
     for gp in grid {
+        if let Some(ctl) = ctl {
+            if ctl.expired() {
+                break;
+            }
+            ctl.before_solves(1);
+        }
         let prob = EnProblem::shared(x.clone(), y.clone(), gp.t, gp.lambda2);
         let sol = sven.solve_prepared(prep, scratch, &prob, warm.as_ref())?;
         if warm_start {
@@ -90,6 +156,13 @@ pub struct MultiSweepOut {
     /// Grid index at which each response's deviance plateaued (its path
     /// still includes that point); `None` ⇒ the full grid was solved.
     pub early_stopped_at: Vec<Option<usize>>,
+    /// Grid points the sweep actually iterated (== `grid.len()` unless a
+    /// deadline truncated the sweep); responses retired by early stopping
+    /// hold shorter paths than this.
+    pub points_done: usize,
+    /// True when an active [`SweepCtl`] deadline stopped the sweep before
+    /// the grid was exhausted.
+    pub deadline_hit: bool,
     /// Fusion stats summed over every batched solve of the sweep.
     pub stats: SvmBatchStats,
 }
@@ -113,6 +186,11 @@ pub struct MultiSweepOut {
 /// prefix is still bit-identical to the standalone path's prefix
 /// (batch composition never moves a bit); the default `None` keeps
 /// full paths.
+///
+/// `ctl: Some(..)` also forces the point-major sweep so the deadline is
+/// observed at grid-point boundaries; a truncated sweep reports how far
+/// it got via [`MultiSweepOut::points_done`] / `deadline_hit`, and the
+/// solved prefixes are bit-identical to the uncontrolled sweep's.
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_multi_prepared<B: SvmBackend>(
     sven: &Sven<B>,
@@ -123,6 +201,7 @@ pub fn sweep_multi_prepared<B: SvmBackend>(
     live: &[usize],
     grid: &[GridPoint],
     early_stop: Option<f64>,
+    ctl: Option<&SweepCtl<'_>>,
 ) -> anyhow::Result<MultiSweepOut> {
     let r = live.len();
     let primal = prep.mode() == SvmMode::Primal;
@@ -130,7 +209,7 @@ pub fn sweep_multi_prepared<B: SvmBackend>(
         (0..r).map(|_| Vec::with_capacity(grid.len())).collect();
     let mut stopped: Vec<Option<usize>> = vec![None; r];
     let mut stats = SvmBatchStats::default();
-    let Some(thresh) = early_stop else {
+    if early_stop.is_none() && ctl.is_none() {
         if primal && r * grid.len() > 1 {
             let members: Vec<(usize, f64, f64)> = live
                 .iter()
@@ -158,17 +237,33 @@ pub fn sweep_multi_prepared<B: SvmBackend>(
                 }
             }
         }
-        return Ok(MultiSweepOut { paths, early_stopped_at: stopped, stats });
-    };
-    // Early-stop sweep: one grid point at a time across the still-live
+        return Ok(MultiSweepOut {
+            paths,
+            early_stopped_at: stopped,
+            points_done: grid.len(),
+            deadline_hit: false,
+            stats,
+        });
+    }
+    // Point-major sweep: one grid point at a time across the still-live
     // responses (batched in the primal), retiring plateaued columns the
-    // way blocked CG retires converged ones.
+    // way blocked CG retires converged ones, and observing the deadline
+    // between points.
     let mut active: Vec<usize> = (0..r).collect();
     let mut warms: Vec<Option<SvmWarm>> = vec![None; r];
     let mut prev_dev: Vec<Option<f64>> = vec![None; r];
+    let mut points_done = 0usize;
+    let mut deadline_hit = false;
     for (k, gp) in grid.iter().enumerate() {
         if active.is_empty() {
             break;
+        }
+        if let Some(ctl) = ctl {
+            if ctl.expired() {
+                deadline_hit = true;
+                break;
+            }
+            ctl.before_solves(active.len());
         }
         if primal && active.len() > 1 {
             let members: Vec<(usize, f64, f64)> =
@@ -192,26 +287,29 @@ pub fn sweep_multi_prepared<B: SvmBackend>(
                 paths[i].push(sol);
             }
         }
-        let mut keep = Vec::with_capacity(active.len());
-        for &i in &active {
-            let sol = paths[i].last().expect("point just solved");
-            let mut resid = x.matvec(&sol.beta);
-            vecops::axpy(-1.0, responses[live[i]].as_slice(), &mut resid);
-            let dev = vecops::norm2_sq(&resid);
-            let plateaued = match prev_dev[i] {
-                Some(pd) => pd - dev <= thresh * pd.max(f64::MIN_POSITIVE),
-                None => false,
-            };
-            prev_dev[i] = Some(dev);
-            if plateaued {
-                stopped[i] = Some(k);
-            } else {
-                keep.push(i);
+        points_done = k + 1;
+        if let Some(thresh) = early_stop {
+            let mut keep = Vec::with_capacity(active.len());
+            for &i in &active {
+                let sol = paths[i].last().expect("point just solved");
+                let mut resid = x.matvec(&sol.beta);
+                vecops::axpy(-1.0, responses[live[i]].as_slice(), &mut resid);
+                let dev = vecops::norm2_sq(&resid);
+                let plateaued = match prev_dev[i] {
+                    Some(pd) => pd - dev <= thresh * pd.max(f64::MIN_POSITIVE),
+                    None => false,
+                };
+                prev_dev[i] = Some(dev);
+                if plateaued {
+                    stopped[i] = Some(k);
+                } else {
+                    keep.push(i);
+                }
             }
+            active = keep;
         }
-        active = keep;
     }
-    Ok(MultiSweepOut { paths, early_stopped_at: stopped, stats })
+    Ok(MultiSweepOut { paths, early_stopped_at: stopped, points_done, deadline_hit, stats })
 }
 
 /// Configuration of a path run.
@@ -310,6 +408,7 @@ impl PathRunner {
             &points,
             None,
             self.config.warm_start,
+            None,
         )?;
         Ok(grid
             .iter()
@@ -371,6 +470,7 @@ impl crate::solvers::elastic_net::EnSolution {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::data::{synth_regression, SynthSpec};
@@ -469,9 +569,12 @@ mod tests {
                 &live,
                 &grid,
                 None,
+                None,
             )
             .unwrap();
             assert!(multi.early_stopped_at.iter().all(Option::is_none));
+            assert_eq!(multi.points_done, grid.len());
+            assert!(!multi.deadline_hit);
             for (i, y) in responses.iter().enumerate() {
                 let solo_prep = sven.prepare_shared(&x, y).unwrap();
                 let (solo, _) = sweep_prepared(
@@ -483,6 +586,7 @@ mod tests {
                     &grid,
                     None,
                     true,
+                    None,
                 )
                 .unwrap();
                 assert_eq!(multi.paths[i].len(), solo.len());
@@ -530,6 +634,7 @@ mod tests {
             &live,
             &grid,
             None,
+            None,
         )
         .unwrap();
         let stopped = sweep_multi_prepared(
@@ -541,6 +646,7 @@ mod tests {
             &live,
             &grid,
             Some(1.0),
+            None,
         )
         .unwrap();
         for i in 0..2 {
@@ -552,6 +658,61 @@ mod tests {
                         ts.beta[j].to_bits(),
                         fs.beta[j].to_bits(),
                         "resp {i} pt {k} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn controlled_sweep_truncates_to_bitwise_prefix() {
+        // A SweepCtl whose deadline fires after `budget` solves must stop
+        // the sweep with a prefix bit-identical to the uncontrolled run —
+        // in the primal this also pins chunk-composition: 8-wide chunks
+        // reproduce the single whole-grid batch exactly.
+        use crate::rng::Rng;
+        use std::cell::Cell;
+        for (n, p, budget, expect_len) in
+            [(14usize, 20usize, 5usize, CTL_CHUNK), (60, 8, 3, 3)]
+        {
+            let mut rng = Rng::seed_from(208);
+            let x: Arc<Design> =
+                Arc::new(crate::linalg::Mat::from_fn(n, p, |_, _| rng.normal()).into());
+            let y: Arc<Vec<f64>> =
+                Arc::new((0..n).map(|_| rng.normal()).collect::<Vec<f64>>());
+            let grid: Vec<GridPoint> = (0..12)
+                .map(|k| GridPoint { t: 0.1 + 0.07 * k as f64, lambda2: 0.5 })
+                .collect();
+            let sven = Sven::new(RustBackend::default());
+            let prep = sven.prepare_shared(&x, &y).unwrap();
+            let mut scratch = SvmScratch::new();
+            let (full, _) = sweep_prepared(
+                &sven, prep.as_ref(), &mut scratch, &x, &y, &grid, None, true, None,
+            )
+            .unwrap();
+            let solved = Cell::new(0usize);
+            let expired = || solved.get() >= budget;
+            let before_solve = || solved.set(solved.get() + 1);
+            let ctl = SweepCtl { expired: &expired, before_solve: &before_solve };
+            let (trunc, _) = sweep_prepared(
+                &sven,
+                prep.as_ref(),
+                &mut scratch,
+                &x,
+                &y,
+                &grid,
+                None,
+                true,
+                Some(&ctl),
+            )
+            .unwrap();
+            assert_eq!(trunc.len(), expect_len, "n={n}");
+            for (k, (ts, fs)) in trunc.iter().zip(&full).enumerate() {
+                for j in 0..p {
+                    assert_eq!(
+                        ts.beta[j].to_bits(),
+                        fs.beta[j].to_bits(),
+                        "n={n} pt {k} j={j}"
                     );
                 }
             }

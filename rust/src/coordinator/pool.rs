@@ -1,8 +1,16 @@
 //! Worker pool over the bounded queue. Workers own thread-local state
 //! built by a factory (PJRT handles are not `Send`, so each worker builds
 //! its own solver context on its own thread).
+//!
+//! Workers are *supervised*: a panic that escapes the job handler (the
+//! service catches panics per job attempt, so this is the backstop for
+//! panics in context construction or in the handler's bookkeeping)
+//! unwinds only the worker's loop body — the thread rebuilds its context
+//! and keeps draining the queue, and the respawn is reported through the
+//! `on_respawn` callback instead of silently shrinking the pool.
 
 use super::queue::Queue;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -38,20 +46,55 @@ impl<J: Send + 'static> Pool<J> {
         H: Fn(&mut C, J) + Send + Sync + 'static,
         C: 'static,
     {
+        Self::spawn_supervised(config, ctx_factory, handler, |_wid| {})
+    }
+
+    /// [`Pool::spawn`] with an explicit respawn observer: whenever a
+    /// panic escapes the handler, the worker thread rebuilds its context
+    /// and resumes popping (the in-flight job is lost to the unwind —
+    /// callers wanting per-job isolation catch panics inside `handler`),
+    /// and `on_respawn(worker_id)` fires once per recovery.
+    pub fn spawn_supervised<C, F, H, R>(
+        config: &PoolConfig,
+        ctx_factory: F,
+        handler: H,
+        on_respawn: R,
+    ) -> Self
+    where
+        F: Fn(usize) -> C + Send + Sync + 'static,
+        H: Fn(&mut C, J) + Send + Sync + 'static,
+        R: Fn(usize) + Send + Sync + 'static,
+        C: 'static,
+    {
         let queue = Arc::new(Queue::bounded(config.queue_capacity));
         let ctx_factory = Arc::new(ctx_factory);
         let handler = Arc::new(handler);
+        let on_respawn = Arc::new(on_respawn);
         let handles = (0..config.workers.max(1))
             .map(|wid| {
                 let queue = queue.clone();
                 let ctx_factory = ctx_factory.clone();
                 let handler = handler.clone();
+                let on_respawn = on_respawn.clone();
                 std::thread::Builder::new()
                     .name(format!("sven-worker-{wid}"))
-                    .spawn(move || {
-                        let mut ctx = ctx_factory(wid);
-                        while let Some(job) = queue.pop() {
-                            handler(&mut ctx, job);
+                    .spawn(move || loop {
+                        let run = catch_unwind(AssertUnwindSafe(|| {
+                            let mut ctx = ctx_factory(wid);
+                            while let Some(job) = queue.pop() {
+                                handler(&mut ctx, job);
+                            }
+                        }));
+                        match run {
+                            Ok(()) => break, // queue closed and drained
+                            Err(_) => {
+                                on_respawn(wid);
+                                // Pause briefly so a persistently-failing
+                                // context factory cannot hot-spin the CPU.
+                                std::thread::sleep(std::time::Duration::from_millis(
+                                    10,
+                                ));
+                            }
                         }
                     })
                     .expect("spawn worker")
@@ -86,10 +129,40 @@ impl<J: Send + 'static> Pool<J> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
+
+    #[test]
+    fn panicking_handler_respawns_worker_and_later_jobs_run() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let done2 = done.clone();
+        let respawns = Arc::new(AtomicUsize::new(0));
+        let respawns2 = respawns.clone();
+        let pool = Pool::spawn_supervised(
+            &PoolConfig { workers: 1, queue_capacity: 16 },
+            |_wid| (),
+            move |_, job: usize| {
+                if job == 3 {
+                    panic!("injected handler panic");
+                }
+                done2.fetch_add(1, Ordering::Relaxed);
+            },
+            move |_wid| {
+                respawns2.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        for i in 0..10 {
+            pool.submit(i).unwrap();
+        }
+        pool.shutdown();
+        // Job 3 is lost to the unwind; every other job still ran on the
+        // single (respawned) worker.
+        assert_eq!(done.load(Ordering::Relaxed), 9);
+        assert_eq!(respawns.load(Ordering::Relaxed), 1);
+    }
 
     #[test]
     fn processes_all_jobs() {

@@ -18,6 +18,7 @@
 //!   [`Metrics`](super::metrics::Metrics).
 
 use super::metrics::Metrics;
+use super::sync::{lock, wait};
 use crate::solvers::sven::SvmPrep;
 use std::collections::HashMap;
 use std::hash::Hash;
@@ -40,17 +41,17 @@ impl Flight {
     }
 
     fn publish(&self, result: BuildResult) {
-        *self.done.lock().unwrap() = Some(result);
+        *lock(&self.done) = Some(result);
         self.cv.notify_all();
     }
 
     fn wait(&self) -> BuildResult {
-        let mut g = self.done.lock().unwrap();
+        let mut g = lock(&self.done);
         loop {
             if let Some(r) = g.as_ref() {
                 return r.clone();
             }
-            g = self.cv.wait(g).unwrap();
+            g = wait(&self.cv, g);
         }
     }
 }
@@ -103,7 +104,7 @@ impl<K: Eq + Hash + Clone> PrepCache<K> {
 
     /// Ready entries currently cached.
     pub fn len(&self) -> usize {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock(&self.inner);
         inner
             .entries
             .values()
@@ -125,7 +126,7 @@ impl<K: Eq + Hash + Clone> PrepCache<K> {
         build: impl FnOnce() -> BuildResult,
     ) -> BuildResult {
         let flight = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock(&self.inner);
             inner.tick += 1;
             let now = inner.tick;
             match inner.entries.get_mut(&key) {
@@ -150,7 +151,7 @@ impl<K: Eq + Hash + Clone> PrepCache<K> {
                     let result = build();
                     guard.armed = false;
                     drop(guard);
-                    let mut inner = self.inner.lock().unwrap();
+                    let mut inner = lock(&self.inner);
                     match &result {
                         Ok(prep) => {
                             inner.tick += 1;
@@ -163,6 +164,7 @@ impl<K: Eq + Hash + Clone> PrepCache<K> {
                         }
                         Err(_) => {
                             inner.entries.remove(&key);
+                            self.metrics.on_prep_build_failure();
                         }
                     }
                     drop(inner);
@@ -183,13 +185,14 @@ impl<K: Eq + Hash + Clone> PrepCache<K> {
     /// entry and publish an error so single-flight waiters unblock
     /// instead of parking forever (the panic itself keeps propagating).
     fn abort_build(&self, key: &K, flight: &Arc<Flight>) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         let ours =
             matches!(inner.entries.get(key), Some(Entry::Building(f)) if Arc::ptr_eq(f, flight));
         if ours {
             inner.entries.remove(key);
         }
         drop(inner);
+        self.metrics.on_prep_build_failure();
         flight.publish(Err("preparation build panicked".to_string()));
     }
 
@@ -219,6 +222,7 @@ impl<K: Eq + Hash + Clone> PrepCache<K> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::linalg::{Design, Mat};
@@ -333,9 +337,48 @@ mod tests {
         let err = cache.get_or_build(9u64, || Err("boom".to_string()));
         assert_eq!(err.unwrap_err(), "boom");
         assert_eq!(cache.len(), 0);
+        assert_eq!(metrics.prep_build_failures(), 1);
         // next request retries the build
         cache.get_or_build(9u64, || Ok(dummy_prep())).unwrap();
         assert_eq!(metrics.prep_builds(), 2);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn failing_build_wakes_every_waiter_with_the_error() {
+        // Regression for the single-flight failure path: when the builder
+        // fails, every parked waiter must receive the error (not hang, not
+        // silently rebuild inside the same flight), the slot must be
+        // evicted, and the failure must be counted exactly once.
+        let metrics = Arc::new(Metrics::new());
+        let cache = Arc::new(PrepCache::new(2, metrics.clone()));
+        let c2 = cache.clone();
+        let builder = std::thread::spawn(move || {
+            c2.get_or_build(11u64, || {
+                // widen the window so the waiters really park on the flight
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                Err("injected build failure".to_string())
+            })
+        });
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let waiters: Vec<_> = (0..4)
+            .map(|_| {
+                let c = cache.clone();
+                std::thread::spawn(move || c.get_or_build(11u64, || Ok(dummy_prep())))
+            })
+            .collect();
+        assert_eq!(builder.join().unwrap().unwrap_err(), "injected build failure");
+        for w in waiters {
+            match w.join().unwrap() {
+                // parked on the doomed flight: sees the builder's error
+                Err(e) => assert!(e.contains("injected build failure"), "{e}"),
+                // arrived after eviction: rebuilt cleanly
+                Ok(_) => {}
+            }
+        }
+        assert_eq!(metrics.prep_build_failures(), 1);
+        // the slot is not wedged and a retry rebuilds
+        cache.get_or_build(11u64, || Ok(dummy_prep())).unwrap();
         assert_eq!(cache.len(), 1);
     }
 }

@@ -2,6 +2,7 @@
 //! (backpressure) and pop, built on Mutex + Condvar — no external crates
 //! in the offline set provide this.
 
+use super::sync::{lock, wait};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
@@ -32,7 +33,7 @@ impl<T> Queue<T> {
 
     /// Blocking push; returns `Err(item)` if the queue is closed.
     pub fn push(&self, item: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         loop {
             if g.closed {
                 return Err(item);
@@ -42,13 +43,13 @@ impl<T> Queue<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
-            g = self.not_full.wait(g).unwrap();
+            g = wait(&self.not_full, g);
         }
     }
 
     /// Blocking pop; `None` when closed and empty.
     pub fn pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         loop {
             if let Some(item) = g.items.pop_front() {
                 self.not_full.notify_one();
@@ -57,20 +58,20 @@ impl<T> Queue<T> {
             if g.closed {
                 return None;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = wait(&self.not_empty, g);
         }
     }
 
     /// Close: producers fail, consumers drain then get `None`.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         g.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        lock(&self.inner).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -79,6 +80,7 @@ impl<T> Queue<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::sync::Arc;

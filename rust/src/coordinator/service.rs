@@ -10,21 +10,38 @@
 //! through the single-flight [`PrepCache`] — K jobs on one data set do
 //! zero design/response deep copies and exactly one preparation build,
 //! regardless of worker count.
+//!
+//! Fault isolation: every job attempt runs under `catch_unwind`, so a
+//! panicking solve fails *that job* with [`JobError::WorkerPanic`]
+//! instead of killing the worker (the pool's supervised loop is the
+//! backstop for panics that escape anyway). Submissions carry
+//! [`SubmitOptions`] — a wall-clock deadline observed at grid-point
+//! boundaries (a mid-sweep deadline returns the bit-identical solved
+//! prefix as [`JobResult::Truncated`]) and a capped-backoff
+//! [`RetryPolicy`](super::admission::RetryPolicy) for transient
+//! failures. [`ServiceConfig::max_queue_depth`] adds cost-based
+//! admission control: over-budget submissions shed synchronously with
+//! [`JobError::Overloaded`] before any worker is touched.
 
+use super::admission::{Admission, CostTicket, JobError, RetryPolicy, SubmitOptions};
 use super::cv::{self, CvPathResult};
+use super::faults::{FaultPlan, FaultState};
 use super::metrics::Metrics;
-use super::path::{sweep_multi_prepared, sweep_prepared, GridPoint};
+use super::path::{sweep_multi_prepared, sweep_prepared, GridPoint, SweepCtl};
 use super::pool::{Pool, PoolConfig};
 use super::prep_cache::PrepCache;
+use super::sync::lock;
 use crate::linalg::{try_resolve_precision, Design, MultiVec, Precision};
 use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
 use crate::solvers::sven::{
     RustBackend, Sven, SvenConfig, SvmMode, SvmPrep, SvmScratch, SvmWarm,
 };
 use crate::util::Timer;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Which solver a job should use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -93,6 +110,10 @@ pub struct SolveJob {
     pub reply: Sender<SolveOutcome>,
     /// Submission timestamp (set by `Service::submit`).
     pub submitted: Timer,
+    /// Per-submission deadline + retry policy.
+    pub options: SubmitOptions,
+    /// Admission-budget charge, released when the job drops.
+    ticket: Option<CostTicket>,
 }
 
 /// Successful payload of a job, mirroring [`JobKind`].
@@ -105,6 +126,16 @@ pub enum JobResult {
     CvPath(CvPathResult),
     /// Per-response paths plus the screening verdicts.
     MultiResponse(MultiResponseResult),
+    /// Graceful degradation under a [`SubmitOptions`] deadline: the job
+    /// ran out of wall clock after `completed` of `total` grid points.
+    /// `partial` holds the solved prefix — bit-for-bit identical to the
+    /// first `completed` points of an undeadlined run (Path and CvPath
+    /// carry prefix paths; CvPath's CV curve, winner and refit are
+    /// computed over the common fold prefix; MultiResponse paths are
+    /// truncated to the shortest chunk's progress). A deadline that
+    /// lands before *any* point is solved fails with
+    /// [`JobError::DeadlineExceeded`] instead, so `completed >= 1`.
+    Truncated { completed: usize, total: usize, partial: Box<JobResult> },
 }
 
 /// Result of a `JobKind::MultiResponse` job.
@@ -158,29 +189,28 @@ impl JobResult {
             _ => panic!("expected a multi-response result"),
         }
     }
+
+    /// Unwrap a truncated result into `(completed, total, partial)`
+    /// (panics otherwise — caller bug).
+    pub fn expect_truncated(self) -> (usize, usize, JobResult) {
+        match self {
+            JobResult::Truncated { completed, total, partial } => {
+                (completed, total, *partial)
+            }
+            _ => panic!("expected a truncated result"),
+        }
+    }
 }
 
 /// The outcome of a job.
 pub struct SolveOutcome {
     pub id: u64,
-    pub result: Result<JobResult, String>,
+    pub result: Result<JobResult, JobError>,
     /// Seconds from submit to completion.
     pub total_seconds: f64,
     /// Seconds the job waited in the queue before a worker picked it up.
     pub queue_wait_seconds: f64,
 }
-
-/// Submission rejected: the service has been closed or shut down.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct ServiceClosed;
-
-impl std::fmt::Display for ServiceClosed {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str("service is closed; job rejected")
-    }
-}
-
-impl std::error::Error for ServiceClosed {}
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -204,6 +234,16 @@ pub struct ServiceConfig {
     /// a standalone `Path` job; `Some(thresh)` trades the tail of the
     /// path for throughput while the solved prefix stays bit-identical.
     pub multi_response_early_stop: Option<f64>,
+    /// Admission-control budget in *grid-point solves* (`Some(d)` ⇒ a
+    /// submission whose cost — grid length × responses × folds — would
+    /// push the in-flight total past `d` is shed synchronously with
+    /// [`JobError::Overloaded`], before validation and before any worker
+    /// is touched). `None` (the default) admits everything.
+    pub max_queue_depth: Option<usize>,
+    /// Deterministic fault injection for tests and benches (see
+    /// [`FaultPlan`]). Production configs leave this `None`, which
+    /// compiles every hook down to a skipped `Option` check.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl Default for ServiceConfig {
@@ -215,6 +255,8 @@ impl Default for ServiceConfig {
             prep_cache_capacity: 16,
             path_segment_min: 8,
             multi_response_early_stop: None,
+            max_queue_depth: None,
+            fault_plan: None,
         }
     }
 }
@@ -287,6 +329,13 @@ impl ServiceConfig {
                 )));
             }
         }
+        if self.max_queue_depth == Some(0) {
+            return Err(ServiceConfigError(
+                "max_queue_depth must be >= 1 (a zero budget sheds every job); \
+                 use None to disable admission control"
+                    .into(),
+            ));
+        }
         Ok(())
     }
 }
@@ -321,6 +370,49 @@ fn validate_job(x: &Design, y: &[f64], points: &[GridPoint]) -> Result<(), Strin
         }
     }
     Ok(())
+}
+
+/// True once `deadline` (measured from `submitted`) has passed.
+fn deadline_expired(submitted: &Timer, deadline: Option<Duration>) -> bool {
+    deadline.is_some_and(|d| submitted.elapsed() >= d.as_secs_f64())
+}
+
+/// Contiguous segment sizes for a grid of `len` points over `nseg`
+/// segments — the one split formula shared by submission (building the
+/// segments) and assembly (detecting deadline-truncated parts).
+fn segment_sizes(len: usize, nseg: usize) -> Vec<usize> {
+    let base = len / nseg;
+    let extra = len % nseg;
+    (0..nseg).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Human-readable payload of a caught panic.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+/// Meter a finished job: truncated successes complete *and* count as
+/// truncated; everything else keeps the existing complete/fail split.
+fn meter_outcome(
+    metrics: &Metrics,
+    result: &Result<JobResult, JobError>,
+    total: f64,
+    queue_wait: f64,
+) {
+    match result {
+        Ok(JobResult::Truncated { .. }) => {
+            metrics.on_complete(total, queue_wait);
+            metrics.on_truncated();
+        }
+        Ok(_) => metrics.on_complete(total, queue_wait),
+        Err(_) => metrics.on_fail(queue_wait),
+    }
 }
 
 /// What actually travels through the worker pool: a whole job, one
@@ -377,8 +469,14 @@ struct SegmentedPath {
     /// but `Sender` offers no `Sync` guarantee we can rely on here).
     reply: Mutex<Sender<SolveOutcome>>,
     submitted: Timer,
-    /// Per-segment results, in segment order.
-    parts: Mutex<Vec<Option<Result<Vec<EnSolution>, String>>>>,
+    options: SubmitOptions,
+    /// Admission-budget charge, released when the job's shared state
+    /// drops (after the last segment finished — panics included).
+    #[allow(dead_code)]
+    ticket: Option<CostTicket>,
+    /// Per-segment results, in segment order. A deadline-truncated
+    /// segment records the (possibly empty) solved prefix of its slice.
+    parts: Mutex<Vec<Option<Result<Vec<EnSolution>, JobError>>>>,
     /// Segments still outstanding; the worker that drops this to zero
     /// assembles and replies.
     remaining: AtomicUsize,
@@ -394,47 +492,66 @@ struct SegmentedPath {
 
 impl SegmentedPath {
     /// Record a segment result; the last segment to land assembles the
-    /// grid-ordered solution vector and sends the outcome.
+    /// grid-ordered solution vector and sends the outcome. A segment
+    /// shorter than its slice marks a deadline cut: assembly keeps the
+    /// contiguous prefix up to the cut (later segments' solutions are
+    /// discarded — they are correct but not contiguous) and reports
+    /// `Truncated`, or `DeadlineExceeded` when nothing was solved.
     fn finish_segment(
         &self,
         index: usize,
-        result: Result<Vec<EnSolution>, String>,
+        result: Result<Vec<EnSolution>, JobError>,
         metrics: &Metrics,
     ) {
         {
-            let mut parts = self.parts.lock().unwrap();
+            let mut parts = lock(&self.parts);
             parts[index] = Some(result);
         }
         if self.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
             return;
         }
         let total = self.submitted.elapsed();
-        let queue_wait = self.first_pickup.lock().unwrap().unwrap_or(0.0);
-        let parts = self.parts.lock().unwrap();
+        let queue_wait = lock(&self.first_pickup).unwrap_or(0.0);
+        let parts = lock(&self.parts);
+        let sizes = segment_sizes(self.grid.len(), parts.len());
         let mut all = Vec::with_capacity(self.grid.len());
-        let mut err: Option<String> = None;
-        for part in parts.iter() {
+        let mut err: Option<JobError> = None;
+        let mut cut = false;
+        for (s, part) in parts.iter().enumerate() {
             match part {
-                Some(Ok(sols)) => all.extend(sols.iter().cloned()),
+                Some(Ok(sols)) => {
+                    if cut {
+                        continue;
+                    }
+                    all.extend(sols.iter().cloned());
+                    if sols.len() < sizes[s] {
+                        cut = true;
+                    }
+                }
                 Some(Err(e)) => {
                     err = Some(e.clone());
                     break;
                 }
                 None => {
-                    err = Some("internal: path segment lost".to_string());
+                    err = Some(JobError::Internal(
+                        "internal: path segment lost".to_string(),
+                    ));
                     break;
                 }
             }
         }
         let result = match err {
-            None => Ok(JobResult::Path(all)),
             Some(e) => Err(e),
+            None if cut && all.is_empty() => Err(JobError::DeadlineExceeded),
+            None if cut => Ok(JobResult::Truncated {
+                completed: all.len(),
+                total: self.grid.len(),
+                partial: Box::new(JobResult::Path(all)),
+            }),
+            None => Ok(JobResult::Path(all)),
         };
-        match &result {
-            Ok(_) => metrics.on_complete(total, queue_wait),
-            Err(_) => metrics.on_fail(queue_wait),
-        }
-        let _ = self.reply.lock().unwrap().send(SolveOutcome {
+        meter_outcome(metrics, &result, total, queue_wait);
+        let _ = lock(&self.reply).send(SolveOutcome {
             id: self.id,
             result,
             total_seconds: total,
@@ -476,8 +593,14 @@ struct SharedCvPath {
     fold_data: Vec<Mutex<Option<(Arc<Design>, Arc<Vec<f64>>)>>>,
     reply: Mutex<Sender<SolveOutcome>>,
     submitted: Timer,
-    /// Fold-major parts: `parts[fold · nseg + segment]`.
-    parts: Mutex<Vec<Option<Result<Vec<EnSolution>, String>>>>,
+    options: SubmitOptions,
+    /// Admission-budget charge, released when the job's shared state
+    /// drops.
+    #[allow(dead_code)]
+    ticket: Option<CostTicket>,
+    /// Fold-major parts: `parts[fold · nseg + segment]`. A deadline-
+    /// truncated part records the solved prefix of its slice.
+    parts: Mutex<Vec<Option<Result<Vec<EnSolution>, JobError>>>>,
     /// Parts still outstanding; whoever drops this to zero assembles.
     remaining: AtomicUsize,
     first_pickup: Mutex<Option<f64>>,
@@ -492,42 +615,58 @@ struct SharedCvPath {
 
 impl SharedCvPath {
     /// Record one part; returns true when this call was the last one.
-    fn record(&self, slot: usize, result: Result<Vec<EnSolution>, String>) -> bool {
+    fn record(&self, slot: usize, result: Result<Vec<EnSolution>, JobError>) -> bool {
         {
-            let mut parts = self.parts.lock().unwrap();
+            let mut parts = lock(&self.parts);
             parts[slot] = Some(result);
         }
         self.remaining.fetch_sub(1, Ordering::AcqRel) == 1
     }
 
     /// Drain the recorded parts into fold-major paths (first error, in
-    /// fold-major order, wins).
-    fn take_fold_paths(&self) -> Result<Vec<Vec<EnSolution>>, String> {
-        let mut parts = std::mem::take(&mut *self.parts.lock().unwrap());
+    /// fold-major order, wins) plus the *common* solved prefix length
+    /// across folds — `grid.len()` unless a deadline cut some fold, in
+    /// which case each fold keeps its contiguous prefix up to its first
+    /// short part and the minimum over folds is what CV can score.
+    fn take_fold_paths(&self) -> Result<(Vec<Vec<EnSolution>>, usize), JobError> {
+        let mut parts = std::mem::take(&mut *lock(&self.parts));
+        let sizes = segment_sizes(self.grid.len(), self.nseg);
         let mut fold_paths = Vec::with_capacity(self.folds);
+        let mut completed = self.grid.len();
         for f in 0..self.folds {
             let mut path = Vec::with_capacity(self.grid.len());
+            let mut cut = false;
             for s in 0..self.nseg {
                 match parts[f * self.nseg + s].take() {
-                    Some(Ok(sols)) => path.extend(sols),
+                    Some(Ok(sols)) => {
+                        if cut {
+                            continue;
+                        }
+                        if sols.len() < sizes[s] {
+                            cut = true;
+                        }
+                        path.extend(sols);
+                    }
                     Some(Err(e)) => return Err(e),
-                    None => return Err("internal: cv segment lost".to_string()),
+                    None => {
+                        return Err(JobError::Internal(
+                            "internal: cv segment lost".to_string(),
+                        ))
+                    }
                 }
             }
+            completed = completed.min(path.len());
             fold_paths.push(path);
         }
-        Ok(fold_paths)
+        Ok((fold_paths, completed))
     }
 
     /// Send the assembled outcome (and meter it).
-    fn send_outcome(&self, result: Result<JobResult, String>, metrics: &Metrics) {
+    fn send_outcome(&self, result: Result<JobResult, JobError>, metrics: &Metrics) {
         let total = self.submitted.elapsed();
-        let queue_wait = self.first_pickup.lock().unwrap().unwrap_or(0.0);
-        match &result {
-            Ok(_) => metrics.on_complete(total, queue_wait),
-            Err(_) => metrics.on_fail(queue_wait),
-        }
-        let _ = self.reply.lock().unwrap().send(SolveOutcome {
+        let queue_wait = lock(&self.first_pickup).unwrap_or(0.0);
+        meter_outcome(metrics, &result, total, queue_wait);
+        let _ = lock(&self.reply).send(SolveOutcome {
             id: self.id,
             result,
             total_seconds: total,
@@ -545,9 +684,11 @@ struct MultiSegment {
     end: usize,
 }
 
-/// Per-response results of one chunk: solved paths plus where (if
-/// anywhere) each response's deviance plateaued.
-type MultiPart = (Vec<Vec<EnSolution>>, Vec<Option<usize>>);
+/// Per-response results of one chunk: solved paths, where (if anywhere)
+/// each response's deviance plateaued, and how many grid points the
+/// chunk finished before a deadline cut it (`grid.len()` when it ran to
+/// completion).
+type MultiPart = (Vec<Vec<EnSolution>>, Vec<Option<usize>>, usize);
 
 /// The shared screening verdicts of a `MultiResponse` job, computed
 /// once by the first chunk to reach a preparation: per-response λ_max
@@ -578,8 +719,13 @@ struct SharedMultiResponse {
     screen: Mutex<Option<Arc<ScreenInfo>>>,
     reply: Mutex<Sender<SolveOutcome>>,
     submitted: Timer,
+    options: SubmitOptions,
+    /// Admission-budget charge, released when the job's shared state
+    /// drops.
+    #[allow(dead_code)]
+    ticket: Option<CostTicket>,
     /// Per-chunk results, in chunk (= response) order.
-    parts: Mutex<Vec<Option<Result<MultiPart, String>>>>,
+    parts: Mutex<Vec<Option<Result<MultiPart, JobError>>>>,
     /// Chunks still outstanding; the worker that drops this to zero
     /// assembles and replies.
     remaining: AtomicUsize,
@@ -588,29 +734,34 @@ struct SharedMultiResponse {
 
 impl SharedMultiResponse {
     /// Record a chunk result; the last chunk to land assembles the
-    /// response-ordered result and sends the outcome.
+    /// response-ordered result and sends the outcome. When a deadline
+    /// cut some chunk, every response path is trimmed to the *common*
+    /// solved prefix (minimum `points_done` over chunks) so the partial
+    /// result stays rectangular, and the job returns `Truncated`.
     fn finish_segment(
         &self,
         index: usize,
-        result: Result<MultiPart, String>,
+        result: Result<MultiPart, JobError>,
         metrics: &Metrics,
     ) {
         {
-            let mut parts = self.parts.lock().unwrap();
+            let mut parts = lock(&self.parts);
             parts[index] = Some(result);
         }
         if self.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
             return;
         }
         let total = self.submitted.elapsed();
-        let queue_wait = self.first_pickup.lock().unwrap().unwrap_or(0.0);
-        let mut parts = std::mem::take(&mut *self.parts.lock().unwrap());
+        let queue_wait = lock(&self.first_pickup).unwrap_or(0.0);
+        let mut parts = std::mem::take(&mut *lock(&self.parts));
         let mut paths = Vec::with_capacity(self.responses.len());
         let mut stops = Vec::with_capacity(self.responses.len());
-        let mut err: Option<String> = None;
+        let mut completed = self.grid.len();
+        let mut err: Option<JobError> = None;
         for part in parts.iter_mut() {
             match part.take() {
-                Some(Ok((chunk_paths, chunk_stops))) => {
+                Some(Ok((chunk_paths, chunk_stops, points_done))) => {
+                    completed = completed.min(points_done);
                     paths.extend(chunk_paths);
                     stops.extend(chunk_stops);
                 }
@@ -619,30 +770,56 @@ impl SharedMultiResponse {
                     break;
                 }
                 None => {
-                    err = Some("internal: response chunk lost".to_string());
+                    err = Some(JobError::Internal(
+                        "internal: response chunk lost".to_string(),
+                    ));
                     break;
                 }
             }
         }
         let result = match err {
-            None => match self.screen.lock().unwrap().clone() {
-                Some(screen) => Ok(JobResult::MultiResponse(MultiResponseResult {
-                    paths,
-                    lambda_max: screen.lambda_max.clone(),
-                    screened: screen.screened.clone(),
-                    early_stopped_at: stops,
-                })),
+            Some(e) => Err(e),
+            None if completed == 0 => Err(JobError::DeadlineExceeded),
+            None => match lock(&self.screen).clone() {
+                Some(screen) => {
+                    if completed < self.grid.len() {
+                        // Trim every response to the common prefix; an
+                        // early-stop index past the cut is no longer an
+                        // observed plateau of the partial path.
+                        for path in &mut paths {
+                            path.truncate(completed);
+                        }
+                        for stop in &mut stops {
+                            if stop.is_some_and(|k| k >= completed) {
+                                *stop = None;
+                            }
+                        }
+                    }
+                    let inner = JobResult::MultiResponse(MultiResponseResult {
+                        paths,
+                        lambda_max: screen.lambda_max.clone(),
+                        screened: screen.screened.clone(),
+                        early_stopped_at: stops,
+                    });
+                    if completed < self.grid.len() {
+                        Ok(JobResult::Truncated {
+                            completed,
+                            total: self.grid.len(),
+                            partial: Box::new(inner),
+                        })
+                    } else {
+                        Ok(inner)
+                    }
+                }
                 // Unreachable in practice: any chunk that returned Ok
                 // computed (or reused) the screen first.
-                None => Err("internal: screening info missing".to_string()),
+                None => Err(JobError::Internal(
+                    "internal: screening info missing".to_string(),
+                )),
             },
-            Some(e) => Err(e),
         };
-        match &result {
-            Ok(_) => metrics.on_complete(total, queue_wait),
-            Err(_) => metrics.on_fail(queue_wait),
-        }
-        let _ = self.reply.lock().unwrap().send(SolveOutcome {
+        meter_outcome(metrics, &result, total, queue_wait);
+        let _ = lock(&self.reply).send(SolveOutcome {
             id: self.id,
             result,
             total_seconds: total,
@@ -662,6 +839,9 @@ struct WorkerCtx {
     scratch: SvmScratch,
     config: ServiceConfig,
     metrics: Arc<Metrics>,
+    /// Deterministic fault-injection schedule (test/bench only); `None`
+    /// in production.
+    faults: Option<Arc<FaultState>>,
 }
 
 impl WorkerCtx {
@@ -669,6 +849,7 @@ impl WorkerCtx {
         config: ServiceConfig,
         preps: Arc<PrepCache<PrepKey>>,
         metrics: Arc<Metrics>,
+        faults: Option<Arc<FaultState>>,
     ) -> Self {
         WorkerCtx {
             rust: Sven::with_config(RustBackend::default(), config.sven.clone()),
@@ -678,6 +859,52 @@ impl WorkerCtx {
             scratch: SvmScratch::new(),
             config,
             metrics,
+            faults,
+        }
+    }
+
+    /// Fire the per-pickup fault hook (panics on an injected ordinal).
+    fn fault_pickup(&self) {
+        if let Some(f) = &self.faults {
+            f.on_pickup();
+        }
+    }
+
+    /// Run `f` under per-attempt panic isolation and the job's retry
+    /// policy. A panic anywhere inside the attempt — an injected fault,
+    /// a kernel assert, a poisoned invariant — is caught here, converted
+    /// to [`JobError::WorkerPanic`], and the per-thread scratch is
+    /// rebuilt (the unwind may have left it mid-update). Transient
+    /// failures (panics, failed preparation builds) retry with capped
+    /// exponential backoff as long as the deadline has not passed;
+    /// deterministic errors (validation, solver refusals) fail fast.
+    fn run_attempts<T>(
+        &mut self,
+        retry: RetryPolicy,
+        expired: impl Fn() -> bool,
+        f: impl Fn(&mut Self) -> Result<T, JobError>,
+    ) -> Result<T, JobError> {
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let result = match catch_unwind(AssertUnwindSafe(|| f(self))) {
+                Ok(r) => r,
+                Err(payload) => {
+                    // The unwind may have interrupted a solve mid-flight;
+                    // scratch buffers are sized-on-demand caches, so a
+                    // fresh one is always safe (and cheap) to swap in.
+                    self.scratch = SvmScratch::new();
+                    self.metrics.on_worker_panic();
+                    Err(JobError::WorkerPanic(panic_message(payload)))
+                }
+            };
+            match result {
+                Err(e) if e.is_transient() && attempt < retry.max_attempts && !expired() => {
+                    self.metrics.on_job_retried();
+                    std::thread::sleep(retry.backoff_for(attempt));
+                }
+                other => return other,
+            }
         }
     }
 
@@ -711,12 +938,24 @@ impl WorkerCtx {
         // Real queue wait: submit → worker pickup (the backpressure
         // signal behind `Metrics::queue_wait_summary`).
         let queue_wait = job.submitted.elapsed();
-        let outcome = self.solve(&job);
+        let outcome = if deadline_expired(&job.submitted, job.options.deadline) {
+            // The whole budget burned in the queue; don't touch a solver.
+            self.metrics.on_deadline_abort();
+            Err(JobError::DeadlineExceeded)
+        } else {
+            let deadline = job.options.deadline;
+            let submitted = job.submitted.clone();
+            self.run_attempts(
+                job.options.retry,
+                move || deadline_expired(&submitted, deadline),
+                |ctx| {
+                    ctx.fault_pickup();
+                    ctx.solve(&job)
+                },
+            )
+        };
         let total = job.submitted.elapsed();
-        match &outcome {
-            Ok(_) => self.metrics.on_complete(total, queue_wait),
-            Err(_) => self.metrics.on_fail(queue_wait),
-        }
+        meter_outcome(&self.metrics, &outcome, total, queue_wait);
         let _ = job.reply.send(SolveOutcome {
             id: job.id,
             result: outcome,
@@ -733,31 +972,44 @@ impl WorkerCtx {
         backend: BackendChoice,
         x: &Arc<Design>,
         y: &Arc<Vec<f64>>,
-    ) -> Result<Arc<dyn SvmPrep>, String> {
+    ) -> Result<Arc<dyn SvmPrep>, JobError> {
         if backend == BackendChoice::Xla {
-            self.ensure_xla()?;
+            self.ensure_xla().map_err(JobError::Solver)?;
         }
         // Resolve the precision the prepare below will see (explicit
         // config beats the ambient chain), so the cache key matches what
         // the build pins. Config validation already vetted the env value;
         // re-surface it as a job error rather than unwrap, in case a
         // worker ever runs under an unvalidated config.
-        let precision =
-            try_resolve_precision(self.config.sven.precision).map_err(|e| e.to_string())?;
+        let precision = try_resolve_precision(self.config.sven.precision)
+            .map_err(|e| JobError::Solver(e.to_string()))?;
         let key = (dataset_id, backend, precision);
         let rust = &self.rust;
         let xla = &self.xla;
         let metrics = &self.metrics;
-        self.preps.get_or_build(key, || {
-            let prep = match backend {
-                BackendChoice::Rust => rust.prepare_shared(x, y).map_err(|e| e.to_string())?,
-                BackendChoice::Xla => {
-                    xla.as_ref().unwrap().prepare_shared(x, y).map_err(|e| e.to_string())?
+        let faults = &self.faults;
+        self.preps
+            .get_or_build(key, || {
+                if let Some(f) = faults {
+                    f.on_prep_build()?;
                 }
-            };
-            metrics.on_f32_panel_bytes(prep.f32_shadow_bytes());
-            Ok(prep)
-        })
+                let prep = match backend {
+                    BackendChoice::Rust => {
+                        rust.prepare_shared(x, y).map_err(|e| e.to_string())?
+                    }
+                    BackendChoice::Xla => match xla.as_ref() {
+                        Some(xla) => xla.prepare_shared(x, y).map_err(|e| e.to_string())?,
+                        None => {
+                            return Err("internal: xla backend missing after ensure".into())
+                        }
+                    },
+                };
+                metrics.on_f32_panel_bytes(prep.f32_shadow_bytes());
+                Ok(prep)
+            })
+            // A failed or panicked single-flight build is transient: the
+            // cache evicted the entry, so a retry rebuilds from scratch.
+            .map_err(JobError::PrepFailed)
     }
 
     /// Shared validation + prep fetch: bad parameters become a failed
@@ -771,8 +1023,8 @@ impl WorkerCtx {
         x: &Arc<Design>,
         y: &Arc<Vec<f64>>,
         points: &[GridPoint],
-    ) -> Result<Arc<dyn SvmPrep>, String> {
-        validate_job(x, y, points)?;
+    ) -> Result<Arc<dyn SvmPrep>, JobError> {
+        validate_job(x, y, points).map_err(JobError::Invalid)?;
         let prep = self.prep_for(dataset_id, backend, x, y)?;
         // `dataset_id` is the caller's promise that the data is the same;
         // a reused id with a differently-shaped design would otherwise
@@ -781,7 +1033,7 @@ impl WorkerCtx {
         // detectable half of that misuse here.
         let dims = prep.dims();
         if dims != (x.rows(), x.cols()) {
-            return Err(format!(
+            return Err(JobError::Invalid(format!(
                 "invalid job: dataset_id {} was prepared as {}×{} but this job's \
                  design is {}×{} — dataset ids must identify one data set",
                 dataset_id,
@@ -789,12 +1041,12 @@ impl WorkerCtx {
                 dims.1,
                 x.rows(),
                 x.cols()
-            ));
+            )));
         }
         Ok(prep)
     }
 
-    fn solve(&mut self, job: &SolveJob) -> Result<JobResult, String> {
+    fn solve(&mut self, job: &SolveJob) -> Result<JobResult, JobError> {
         let prep = match &job.kind {
             JobKind::Point { t, lambda2 } => self.checked_prep(
                 job.dataset_id,
@@ -807,16 +1059,21 @@ impl WorkerCtx {
                 self.checked_prep(job.dataset_id, job.backend, &job.x, &job.y, grid)
             }
             JobKind::CvPath { .. } => {
-                return Err("internal: CvPath jobs are dispatched as fold segments".into())
+                return Err(JobError::Internal(
+                    "internal: CvPath jobs are dispatched as fold segments".into(),
+                ))
             }
             JobKind::MultiResponse { .. } => {
-                return Err(
-                    "internal: MultiResponse jobs are dispatched as response chunks".into()
-                )
+                return Err(JobError::Internal(
+                    "internal: MultiResponse jobs are dispatched as response chunks".into(),
+                ))
             }
         }?;
         match &job.kind {
             JobKind::Point { t, lambda2 } => {
+                if let Some(f) = &self.faults {
+                    f.on_solve();
+                }
                 let prob = EnProblem::shared(job.x.clone(), job.y.clone(), *t, *lambda2);
                 let sol = match job.backend {
                     BackendChoice::Rust => self.rust.solve_prepared(
@@ -825,18 +1082,34 @@ impl WorkerCtx {
                         &prob,
                         None,
                     ),
-                    BackendChoice::Xla => self.xla.as_ref().unwrap().solve_prepared(
-                        prep.as_ref(),
-                        &mut self.scratch,
-                        &prob,
-                        None,
-                    ),
+                    BackendChoice::Xla => match self.xla.as_ref() {
+                        Some(xla) => {
+                            xla.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
+                        }
+                        None => {
+                            return Err(JobError::Internal(
+                                "internal: xla backend missing after ensure".into(),
+                            ))
+                        }
+                    },
                 }
-                .map_err(|e| e.to_string())?;
+                .map_err(|e| JobError::Solver(e.to_string()))?;
                 self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
                 Ok(JobResult::Point(sol))
             }
             JobKind::Path { grid } => {
+                let deadline = job.options.deadline;
+                let submitted = job.submitted.clone();
+                let faults = self.faults.clone();
+                let use_ctl = deadline.is_some() || faults.is_some();
+                let expired = move || deadline_expired(&submitted, deadline);
+                let probe = move || {
+                    if let Some(f) = &faults {
+                        f.on_solve();
+                    }
+                };
+                let ctl = SweepCtl { expired: &expired, before_solve: &probe };
+                let ctl_opt = use_ctl.then_some(&ctl);
                 let (sols, batch) = match job.backend {
                     BackendChoice::Rust => sweep_prepared(
                         &self.rust,
@@ -847,19 +1120,28 @@ impl WorkerCtx {
                         grid,
                         None,
                         true,
+                        ctl_opt,
                     ),
-                    BackendChoice::Xla => sweep_prepared(
-                        self.xla.as_ref().unwrap(),
-                        prep.as_ref(),
-                        &mut self.scratch,
-                        &job.x,
-                        &job.y,
-                        grid,
-                        None,
-                        true,
-                    ),
+                    BackendChoice::Xla => match self.xla.as_ref() {
+                        Some(xla) => sweep_prepared(
+                            xla,
+                            prep.as_ref(),
+                            &mut self.scratch,
+                            &job.x,
+                            &job.y,
+                            grid,
+                            None,
+                            true,
+                            ctl_opt,
+                        ),
+                        None => {
+                            return Err(JobError::Internal(
+                                "internal: xla backend missing after ensure".into(),
+                            ))
+                        }
+                    },
                 }
-                .map_err(|e| e.to_string())?;
+                .map_err(|e| JobError::Solver(e.to_string()))?;
                 self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
                 for sol in &sols {
                     self.metrics.on_solve_stats(
@@ -867,6 +1149,19 @@ impl WorkerCtx {
                         sol.gather_rebuilds,
                         sol.refine_passes,
                     );
+                }
+                if sols.len() < grid.len() {
+                    // Deadline fired mid-sweep; the solved prefix is
+                    // bit-identical to an uncontrolled sweep's.
+                    self.metrics.on_deadline_abort();
+                    if sols.is_empty() {
+                        return Err(JobError::DeadlineExceeded);
+                    }
+                    return Ok(JobResult::Truncated {
+                        completed: sols.len(),
+                        total: grid.len(),
+                        partial: Box::new(JobResult::Path(sols)),
+                    });
                 }
                 Ok(JobResult::Path(sols))
             }
@@ -883,15 +1178,31 @@ impl WorkerCtx {
         let sp = seg.shared.clone();
         {
             let wait = sp.submitted.elapsed();
-            let mut fp = sp.first_pickup.lock().unwrap();
+            let mut fp = lock(&sp.first_pickup);
             *fp = Some(fp.map_or(wait, |v| v.min(wait)));
         }
         self.metrics.on_path_segment();
-        let result = self.solve_segment(&seg);
+        let result = if deadline_expired(&sp.submitted, sp.options.deadline) {
+            // Budget gone before this slice started: record an empty
+            // prefix so assembly truncates the path here.
+            self.metrics.on_deadline_abort();
+            Ok(vec![])
+        } else {
+            let deadline = sp.options.deadline;
+            let submitted = sp.submitted.clone();
+            self.run_attempts(
+                sp.options.retry,
+                move || deadline_expired(&submitted, deadline),
+                |ctx| {
+                    ctx.fault_pickup();
+                    ctx.solve_segment(&seg)
+                },
+            )
+        };
         sp.finish_segment(seg.index, result, &self.metrics);
     }
 
-    fn solve_segment(&mut self, seg: &PathSegment) -> Result<Vec<EnSolution>, String> {
+    fn solve_segment(&mut self, seg: &PathSegment) -> Result<Vec<EnSolution>, JobError> {
         let sp = seg.shared.as_ref();
         // Validate this segment's slice *plus* the speculative endpoint.
         let lo = seg.start.saturating_sub(1);
@@ -912,7 +1223,7 @@ impl WorkerCtx {
         // decision.
         let mut warm0: Option<SvmWarm> = None;
         if seg.start > 0 {
-            if let Some(w) = sp.handoffs[seg.index].lock().unwrap().take() {
+            if let Some(w) = lock(&sp.handoffs[seg.index]).take() {
                 self.metrics.on_segment_handoff();
                 warm0 = Some(w);
             }
@@ -924,18 +1235,34 @@ impl WorkerCtx {
                 BackendChoice::Rust => {
                     self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
                 }
-                BackendChoice::Xla => self.xla.as_ref().unwrap().solve_prepared(
-                    prep.as_ref(),
-                    &mut self.scratch,
-                    &prob,
-                    None,
-                ),
+                BackendChoice::Xla => match self.xla.as_ref() {
+                    Some(xla) => {
+                        xla.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
+                    }
+                    None => {
+                        return Err(JobError::Internal(
+                            "internal: xla backend missing after ensure".into(),
+                        ))
+                    }
+                },
             }
-            .map_err(|e| e.to_string())?;
+            .map_err(|e| JobError::Solver(e.to_string()))?;
             self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
             warm0 = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
         }
         let slice = &sp.grid[seg.start..seg.end];
+        let deadline = sp.options.deadline;
+        let submitted = sp.submitted.clone();
+        let faults = self.faults.clone();
+        let use_ctl = deadline.is_some() || faults.is_some();
+        let expired = move || deadline_expired(&submitted, deadline);
+        let probe = move || {
+            if let Some(f) = &faults {
+                f.on_solve();
+            }
+        };
+        let ctl = SweepCtl { expired: &expired, before_solve: &probe };
+        let ctl_opt = use_ctl.then_some(&ctl);
         let (sols, batch) = match sp.backend {
             BackendChoice::Rust => sweep_prepared(
                 &self.rust,
@@ -946,28 +1273,43 @@ impl WorkerCtx {
                 slice,
                 warm0,
                 true,
+                ctl_opt,
             ),
-            BackendChoice::Xla => sweep_prepared(
-                self.xla.as_ref().unwrap(),
-                prep.as_ref(),
-                &mut self.scratch,
-                &sp.x,
-                &sp.y,
-                slice,
-                warm0,
-                true,
-            ),
+            BackendChoice::Xla => match self.xla.as_ref() {
+                Some(xla) => sweep_prepared(
+                    xla,
+                    prep.as_ref(),
+                    &mut self.scratch,
+                    &sp.x,
+                    &sp.y,
+                    slice,
+                    warm0,
+                    true,
+                    ctl_opt,
+                ),
+                None => {
+                    return Err(JobError::Internal(
+                        "internal: xla backend missing after ensure".into(),
+                    ))
+                }
+            },
         }
-        .map_err(|e| e.to_string())?;
-        // Hand our endpoint warm start to the successor before metering
-        // — the earlier it lands, the likelier the successor skips its
-        // speculative re-solve.
-        if seg.index + 1 < sp.handoffs.len() {
-            if let Some(sol) = sols.last() {
-                let gp = sp.grid[seg.end - 1];
-                *sp.handoffs[seg.index + 1].lock().unwrap() =
-                    Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+        .map_err(|e| JobError::Solver(e.to_string()))?;
+        if sols.len() == slice.len() {
+            // Hand our endpoint warm start to the successor before
+            // metering — the earlier it lands, the likelier the successor
+            // skips its speculative re-solve. A truncated sweep must NOT
+            // hand off: its last point is not the slice endpoint the
+            // successor's chain expects.
+            if seg.index + 1 < sp.handoffs.len() {
+                if let Some(sol) = sols.last() {
+                    let gp = sp.grid[seg.end - 1];
+                    *lock(&sp.handoffs[seg.index + 1]) =
+                        Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+                }
             }
+        } else {
+            self.metrics.on_deadline_abort();
         }
         self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
         for sol in &sols {
@@ -982,13 +1324,32 @@ impl WorkerCtx {
         let sp = seg.shared.clone();
         {
             let wait = sp.submitted.elapsed();
-            let mut fp = sp.first_pickup.lock().unwrap();
+            let mut fp = lock(&sp.first_pickup);
             *fp = Some(fp.map_or(wait, |v| v.min(wait)));
         }
-        let result = self.solve_cv_segment(&seg);
+        let result = if deadline_expired(&sp.submitted, sp.options.deadline) {
+            self.metrics.on_deadline_abort();
+            Ok(vec![])
+        } else {
+            let deadline = sp.options.deadline;
+            let submitted = sp.submitted.clone();
+            self.run_attempts(
+                sp.options.retry,
+                move || deadline_expired(&submitted, deadline),
+                |ctx| {
+                    ctx.fault_pickup();
+                    ctx.solve_cv_segment(&seg)
+                },
+            )
+        };
         let slot = seg.fold * sp.nseg + seg.index;
         if sp.record(slot, result) {
-            let outcome = self.assemble_cv(&sp);
+            // Last part in: assemble under panic isolation too — a panic
+            // in the refit must fail this job, not the worker. No retry:
+            // assembly drains the recorded parts, so a second attempt
+            // would have nothing to assemble.
+            let once = RetryPolicy { max_attempts: 1, ..sp.options.retry };
+            let outcome = self.run_attempts(once, || false, |ctx| ctx.assemble_cv(&sp));
             sp.send_outcome(outcome, &self.metrics);
         }
     }
@@ -997,10 +1358,10 @@ impl WorkerCtx {
     /// training sub-problem, then run exactly the split-`Path` segment
     /// logic against it — speculative warm start from the previous grid
     /// point, chained sweep over the slice.
-    fn solve_cv_segment(&mut self, seg: &CvSegment) -> Result<Vec<EnSolution>, String> {
+    fn solve_cv_segment(&mut self, seg: &CvSegment) -> Result<Vec<EnSolution>, JobError> {
         let sp = seg.shared.as_ref();
         let (fx, fy) = {
-            let mut guard = sp.fold_data[seg.fold].lock().unwrap();
+            let mut guard = lock(&sp.fold_data[seg.fold]);
             match &*guard {
                 Some(pair) => pair.clone(),
                 None => {
@@ -1019,7 +1380,7 @@ impl WorkerCtx {
         let slot0 = seg.fold * sp.nseg;
         let mut warm0: Option<SvmWarm> = None;
         if seg.start > 0 {
-            if let Some(w) = sp.handoffs[slot0 + seg.index].lock().unwrap().take() {
+            if let Some(w) = lock(&sp.handoffs[slot0 + seg.index]).take() {
                 self.metrics.on_segment_handoff();
                 warm0 = Some(w);
             }
@@ -1031,18 +1392,34 @@ impl WorkerCtx {
                 BackendChoice::Rust => {
                     self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
                 }
-                BackendChoice::Xla => self.xla.as_ref().unwrap().solve_prepared(
-                    prep.as_ref(),
-                    &mut self.scratch,
-                    &prob,
-                    None,
-                ),
+                BackendChoice::Xla => match self.xla.as_ref() {
+                    Some(xla) => {
+                        xla.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
+                    }
+                    None => {
+                        return Err(JobError::Internal(
+                            "internal: xla backend missing after ensure".into(),
+                        ))
+                    }
+                },
             }
-            .map_err(|e| e.to_string())?;
+            .map_err(|e| JobError::Solver(e.to_string()))?;
             self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
             warm0 = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
         }
         let slice = &sp.grid[seg.start..seg.end];
+        let deadline = sp.options.deadline;
+        let submitted = sp.submitted.clone();
+        let faults = self.faults.clone();
+        let use_ctl = deadline.is_some() || faults.is_some();
+        let expired = move || deadline_expired(&submitted, deadline);
+        let probe = move || {
+            if let Some(f) = &faults {
+                f.on_solve();
+            }
+        };
+        let ctl = SweepCtl { expired: &expired, before_solve: &probe };
+        let ctl_opt = use_ctl.then_some(&ctl);
         let (sols, batch) = match sp.backend {
             BackendChoice::Rust => sweep_prepared(
                 &self.rust,
@@ -1053,25 +1430,38 @@ impl WorkerCtx {
                 slice,
                 warm0,
                 true,
+                ctl_opt,
             ),
-            BackendChoice::Xla => sweep_prepared(
-                self.xla.as_ref().unwrap(),
-                prep.as_ref(),
-                &mut self.scratch,
-                &fx,
-                &fy,
-                slice,
-                warm0,
-                true,
-            ),
+            BackendChoice::Xla => match self.xla.as_ref() {
+                Some(xla) => sweep_prepared(
+                    xla,
+                    prep.as_ref(),
+                    &mut self.scratch,
+                    &fx,
+                    &fy,
+                    slice,
+                    warm0,
+                    true,
+                    ctl_opt,
+                ),
+                None => {
+                    return Err(JobError::Internal(
+                        "internal: xla backend missing after ensure".into(),
+                    ))
+                }
+            },
         }
-        .map_err(|e| e.to_string())?;
-        if seg.index + 1 < sp.nseg {
-            if let Some(sol) = sols.last() {
-                let gp = sp.grid[seg.end - 1];
-                *sp.handoffs[slot0 + seg.index + 1].lock().unwrap() =
-                    Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+        .map_err(|e| JobError::Solver(e.to_string()))?;
+        if sols.len() == slice.len() {
+            if seg.index + 1 < sp.nseg {
+                if let Some(sol) = sols.last() {
+                    let gp = sp.grid[seg.end - 1];
+                    *lock(&sp.handoffs[slot0 + seg.index + 1]) =
+                        Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+                }
             }
+        } else {
+            self.metrics.on_deadline_abort();
         }
         self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
         for sol in &sols {
@@ -1084,8 +1474,22 @@ impl WorkerCtx {
     /// winning grid point refit on the full data (its preparation comes
     /// from the same shared cache, so a warm service refits without a
     /// build).
-    fn assemble_cv(&mut self, sp: &SharedCvPath) -> Result<JobResult, String> {
-        let fold_paths = sp.take_fold_paths()?;
+    ///
+    /// Under a deadline, every fold path is trimmed to the common solved
+    /// prefix and the curve is scored over that prefix; the winner refit
+    /// is the one solve allowed past the deadline (a `Truncated` CV
+    /// result without its refit would be useless).
+    fn assemble_cv(&mut self, sp: &SharedCvPath) -> Result<JobResult, JobError> {
+        let (mut fold_paths, completed) = sp.take_fold_paths()?;
+        let total = sp.grid.len();
+        if completed == 0 {
+            return Err(JobError::DeadlineExceeded);
+        }
+        if completed < total {
+            for path in &mut fold_paths {
+                path.truncate(completed);
+            }
+        }
         let cv_errors = cv::cv_error_curve(&sp.x, &sp.y, sp.folds, &fold_paths);
         let best_index = cv::best_index(&cv_errors);
         let gp = sp.grid[best_index];
@@ -1095,16 +1499,25 @@ impl WorkerCtx {
             BackendChoice::Rust => {
                 self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
             }
-            BackendChoice::Xla => self.xla.as_ref().unwrap().solve_prepared(
-                prep.as_ref(),
-                &mut self.scratch,
-                &prob,
-                None,
-            ),
+            BackendChoice::Xla => match self.xla.as_ref() {
+                Some(xla) => {
+                    xla.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
+                }
+                None => {
+                    return Err(JobError::Internal(
+                        "internal: xla backend missing after ensure".into(),
+                    ))
+                }
+            },
         }
-        .map_err(|e| e.to_string())?;
+        .map_err(|e| JobError::Solver(e.to_string()))?;
         self.metrics.on_solve_stats(best.cg_iters, best.gather_rebuilds, best.refine_passes);
-        Ok(JobResult::CvPath(CvPathResult { fold_paths, cv_errors, best_index, best }))
+        let inner = JobResult::CvPath(CvPathResult { fold_paths, cv_errors, best_index, best });
+        if completed < total {
+            Ok(JobResult::Truncated { completed, total, partial: Box::new(inner) })
+        } else {
+            Ok(inner)
+        }
     }
 
     /// Run one response chunk of a `MultiResponse` job; the last chunk
@@ -1113,10 +1526,30 @@ impl WorkerCtx {
         let sp = seg.shared.clone();
         {
             let wait = sp.submitted.elapsed();
-            let mut fp = sp.first_pickup.lock().unwrap();
+            let mut fp = lock(&sp.first_pickup);
             *fp = Some(fp.map_or(wait, |v| v.min(wait)));
         }
-        let result = self.solve_multi_segment(&seg);
+        let result = if deadline_expired(&sp.submitted, sp.options.deadline) {
+            // Record a zero-point part: assembly's common prefix becomes
+            // empty and the job reports `DeadlineExceeded`.
+            self.metrics.on_deadline_abort();
+            Ok((
+                (seg.start..seg.end).map(|_| Vec::new()).collect(),
+                vec![None; seg.end - seg.start],
+                0,
+            ))
+        } else {
+            let deadline = sp.options.deadline;
+            let submitted = sp.submitted.clone();
+            self.run_attempts(
+                sp.options.retry,
+                move || deadline_expired(&submitted, deadline),
+                |ctx| {
+                    ctx.fault_pickup();
+                    ctx.solve_multi_segment(&seg)
+                },
+            )
+        };
         sp.finish_segment(seg.index, result, &self.metrics);
     }
 
@@ -1128,7 +1561,7 @@ impl WorkerCtx {
     /// solve converges at iteration zero with w = 0 and the back-map
     /// returns exact-zero β at every grid point.
     fn ensure_screen(&self, sp: &SharedMultiResponse, primal: bool) -> Arc<ScreenInfo> {
-        let mut guard = sp.screen.lock().unwrap();
+        let mut guard = lock(&sp.screen);
         if let Some(info) = &*guard {
             return info.clone();
         }
@@ -1163,7 +1596,7 @@ impl WorkerCtx {
     /// on `responses[0]` but serves every response: the reduced sample
     /// columns are response-independent, and the ±y/t shifts are applied
     /// per solve by the shift-aware kernels.
-    fn solve_multi_segment(&mut self, seg: &MultiSegment) -> Result<MultiPart, String> {
+    fn solve_multi_segment(&mut self, seg: &MultiSegment) -> Result<MultiPart, JobError> {
         let sp = seg.shared.as_ref();
         let prep = self.checked_prep(
             sp.dataset_id,
@@ -1175,6 +1608,18 @@ impl WorkerCtx {
         let screen = self.ensure_screen(sp, prep.mode() == SvmMode::Primal);
         let live: Vec<usize> =
             (seg.start..seg.end).filter(|&r| !screen.screened[r]).collect();
+        let deadline = sp.options.deadline;
+        let submitted = sp.submitted.clone();
+        let faults = self.faults.clone();
+        let use_ctl = deadline.is_some() || faults.is_some();
+        let expired = move || deadline_expired(&submitted, deadline);
+        let probe = move || {
+            if let Some(f) = &faults {
+                f.on_solve();
+            }
+        };
+        let ctl = SweepCtl { expired: &expired, before_solve: &probe };
+        let ctl_opt = use_ctl.then_some(&ctl);
         let out = sweep_multi_prepared(
             &self.rust,
             prep.as_ref(),
@@ -1184,9 +1629,17 @@ impl WorkerCtx {
             &live,
             &sp.grid,
             self.config.multi_response_early_stop,
+            ctl_opt,
         )
-        .map_err(|e| e.to_string())?;
+        .map_err(|e| JobError::Solver(e.to_string()))?;
         self.metrics.on_batch_stats(out.stats.batched_rhs, out.stats.panel_builds);
+        // `points_done` only means "deadline cut here" when the sweep says
+        // so — an all-screened chunk or an every-response early stop also
+        // ends the point-major loop short of the grid.
+        let points_done = if out.deadline_hit { out.points_done } else { sp.grid.len() };
+        if out.deadline_hit {
+            self.metrics.on_deadline_abort();
+        }
         let mut live_paths = out.paths.into_iter();
         let mut live_stops = out.early_stopped_at.into_iter();
         let mut paths = Vec::with_capacity(seg.end - seg.start);
@@ -1210,7 +1663,7 @@ impl WorkerCtx {
         }
         self.metrics
             .on_responses_early_stopped(stops.iter().filter(|s| s.is_some()).count());
-        Ok((paths, stops))
+        Ok((paths, stops, points_done))
     }
 
     /// Path of a screened (exactly-zero, primal-mode) response: β = 0 at
@@ -1258,6 +1711,8 @@ pub struct Service {
     next_id: std::sync::atomic::AtomicU64,
     workers: usize,
     path_segment_min: usize,
+    /// Admission-control budget (`None` ⇒ unbounded, the default).
+    admission: Option<Arc<Admission>>,
 }
 
 impl Service {
@@ -1273,17 +1728,25 @@ impl Service {
         }
         let preps = Arc::new(PrepCache::new(config.prep_cache_capacity, metrics.clone()));
         let metrics_for_workers = metrics.clone();
+        let metrics_for_respawn = metrics.clone();
         let preps_for_workers = preps.clone();
         let workers = config.pool.workers;
         let path_segment_min = config.path_segment_min;
+        let admission = config.max_queue_depth.map(|d| Arc::new(Admission::new(d)));
+        let faults = config
+            .fault_plan
+            .as_ref()
+            .filter(|plan| !plan.is_empty())
+            .map(|plan| Arc::new(FaultState::new(plan.clone())));
         let cfg = config.clone();
-        let pool = Pool::spawn(
+        let pool = Pool::spawn_supervised(
             &config.pool,
             move |_wid| {
                 WorkerCtx::new(
                     cfg.clone(),
                     preps_for_workers.clone(),
                     metrics_for_workers.clone(),
+                    faults.clone(),
                 )
             },
             |ctx: &mut WorkerCtx, item: WorkItem| match item {
@@ -1292,6 +1755,7 @@ impl Service {
                 WorkItem::CvSegment(seg) => ctx.handle_cv_segment(seg),
                 WorkItem::MultiSegment(seg) => ctx.handle_multi_segment(seg),
             },
+            move |_wid| metrics_for_respawn.on_worker_respawn(),
         );
         Ok(Service {
             pool,
@@ -1300,6 +1764,7 @@ impl Service {
             next_id: std::sync::atomic::AtomicU64::new(0),
             workers,
             path_segment_min,
+            admission,
         })
     }
 
@@ -1321,14 +1786,21 @@ impl Service {
         self.workers.min(len / self.path_segment_min).max(1)
     }
 
-    /// Submit a job; the outcome arrives on the returned receiver.
-    /// `Err(ServiceClosed)` when the service no longer accepts work, so
-    /// callers can tell "queued" from "rejected".
-    ///
-    /// Long `Path` grids are split into `min(workers, len /
-    /// path_segment_min)` chained segments dispatched across the pool
-    /// (speculative warm starts keep the result bit-for-bit identical to
-    /// the single-worker sweep); everything else ships as one work item.
+    /// Solve-unit cost of a job for admission control: roughly "how many
+    /// grid-point solves does accepting this enqueue".
+    fn job_cost(kind: &JobKind) -> usize {
+        match kind {
+            JobKind::Point { .. } => 1,
+            JobKind::Path { grid } => grid.len().max(1),
+            JobKind::CvPath { folds, grid } => (folds * grid.len()).max(1),
+            JobKind::MultiResponse { responses, grid } => {
+                (responses.len() * grid.len()).max(1)
+            }
+        }
+    }
+
+    /// [`Service::submit_with`] with default options (no deadline, no
+    /// retries).
     pub fn submit(
         &self,
         dataset_id: u64,
@@ -1336,7 +1808,56 @@ impl Service {
         y: Arc<Vec<f64>>,
         kind: JobKind,
         backend: BackendChoice,
-    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+    ) -> Result<Receiver<SolveOutcome>, JobError> {
+        self.submit_with(dataset_id, x, y, kind, backend, SubmitOptions::default())
+    }
+
+    /// Submit a job; the outcome arrives on the returned receiver.
+    /// `Err(JobError::Closed)` when the service no longer accepts work
+    /// and `Err(JobError::Overloaded { .. })` when admission control
+    /// sheds the job (`max_queue_depth`), so callers can tell "queued"
+    /// from "rejected" from "shed". A shed job touches no worker and
+    /// builds no state.
+    ///
+    /// `options.deadline` bounds the job's wall clock from submission:
+    /// sweeps check it at grid-point boundaries and return the solved
+    /// prefix as [`JobResult::Truncated`] (bit-identical to the same
+    /// prefix of an unbounded run). `options.retry` re-runs transient
+    /// failures (worker panics, failed preparation builds) with capped
+    /// exponential backoff.
+    ///
+    /// Long `Path` grids are split into `min(workers, len /
+    /// path_segment_min)` chained segments dispatched across the pool
+    /// (speculative warm starts keep the result bit-for-bit identical to
+    /// the single-worker sweep); everything else ships as one work item.
+    pub fn submit_with(
+        &self,
+        dataset_id: u64,
+        x: Arc<Design>,
+        y: Arc<Vec<f64>>,
+        kind: JobKind,
+        backend: BackendChoice,
+        options: SubmitOptions,
+    ) -> Result<Receiver<SolveOutcome>, JobError> {
+        // Admission first: a shed job must cost nothing — no id, no
+        // channel, no validation, no queue slot.
+        let ticket = match &self.admission {
+            Some(adm) => {
+                let cost = Self::job_cost(&kind);
+                match adm.try_admit(cost) {
+                    Ok(ticket) => Some(ticket),
+                    Err(depth) => {
+                        self.metrics.on_shed();
+                        return Err(JobError::Overloaded {
+                            depth,
+                            max_depth: adm.max_depth(),
+                            cost,
+                        });
+                    }
+                }
+            }
+            None => None,
+        };
         let (tx, rx) = channel();
         let id = self
             .next_id
@@ -1348,19 +1869,25 @@ impl Service {
                 let nseg = self.segments_for(grid.len());
                 if nseg > 1 {
                     return self
-                        .submit_segmented(id, dataset_id, x, y, grid, backend, tx, nseg)
+                        .submit_segmented(
+                            id, dataset_id, x, y, grid, backend, tx, nseg, options, ticket,
+                        )
                         .map(|()| rx);
                 }
                 JobKind::Path { grid }
             }
             JobKind::CvPath { folds, grid } => {
                 return self
-                    .submit_cv(id, dataset_id, x, y, folds, grid, backend, tx)
+                    .submit_cv(
+                        id, dataset_id, x, y, folds, grid, backend, tx, options, ticket,
+                    )
                     .map(|()| rx);
             }
             JobKind::MultiResponse { responses, grid } => {
                 return self
-                    .submit_multi(id, dataset_id, x, responses, grid, backend, tx)
+                    .submit_multi(
+                        id, dataset_id, x, responses, grid, backend, tx, options, ticket,
+                    )
                     .map(|()| rx);
             }
             point => point,
@@ -1374,6 +1901,8 @@ impl Service {
             backend,
             reply: tx,
             submitted: Timer::start(),
+            options,
+            ticket,
         };
         match self.pool.submit(WorkItem::Job(job)) {
             Ok(()) => {
@@ -1382,7 +1911,7 @@ impl Service {
             }
             Err(_job) => {
                 self.metrics.on_reject();
-                Err(ServiceClosed)
+                Err(JobError::Closed)
             }
         }
     }
@@ -1402,7 +1931,9 @@ impl Service {
         backend: BackendChoice,
         reply: Sender<SolveOutcome>,
         nseg: usize,
-    ) -> Result<(), ServiceClosed> {
+        options: SubmitOptions,
+        ticket: Option<CostTicket>,
+    ) -> Result<(), JobError> {
         // Fail fast on bad parameters: the unsegmented path validates the
         // whole grid before solving anything, so the segmented path must
         // not let an invalid late point waste full sweeps of the earlier
@@ -1413,13 +1944,13 @@ impl Service {
             self.metrics.on_fail(0.0);
             let _ = reply.send(SolveOutcome {
                 id,
-                result: Err(e),
+                result: Err(JobError::Invalid(e)),
                 total_seconds: 0.0,
                 queue_wait_seconds: 0.0,
             });
             return Ok(());
         }
-        let len = grid.len();
+        let sizes = segment_sizes(grid.len(), nseg);
         let shared = Arc::new(SegmentedPath {
             id,
             dataset_id,
@@ -1429,17 +1960,16 @@ impl Service {
             grid,
             reply: Mutex::new(reply),
             submitted: Timer::start(),
+            options,
+            ticket,
             parts: Mutex::new((0..nseg).map(|_| None).collect()),
             remaining: AtomicUsize::new(nseg),
             first_pickup: Mutex::new(None),
             handoffs: (0..nseg).map(|_| Mutex::new(None)).collect(),
         });
         // Contiguous ranges, sized as evenly as integer division allows.
-        let base = len / nseg;
-        let extra = len % nseg;
         let mut start = 0usize;
-        for index in 0..nseg {
-            let size = base + usize::from(index < extra);
+        for (index, &size) in sizes.iter().enumerate() {
             let end = start + size;
             let seg = PathSegment { shared: shared.clone(), index, start, end };
             start = end;
@@ -1447,16 +1977,12 @@ impl Service {
                 if index == 0 {
                     // Nothing queued: a plain rejection.
                     self.metrics.on_reject();
-                    return Err(ServiceClosed);
+                    return Err(JobError::Closed);
                 }
                 // Closed mid-submit: fail this and every later segment so
                 // the already-queued ones still assemble (to an error).
                 for later in index..nseg {
-                    shared.finish_segment(
-                        later,
-                        Err(ServiceClosed.to_string()),
-                        &self.metrics,
-                    );
+                    shared.finish_segment(later, Err(JobError::Closed), &self.metrics);
                 }
                 break;
             }
@@ -1480,7 +2006,9 @@ impl Service {
         grid: Vec<GridPoint>,
         backend: BackendChoice,
         reply: Sender<SolveOutcome>,
-    ) -> Result<(), ServiceClosed> {
+        options: SubmitOptions,
+        ticket: Option<CostTicket>,
+    ) -> Result<(), JobError> {
         let invalid = if folds < 2 {
             Some(format!("invalid job: cv needs at least 2 folds, got {folds}"))
         } else if folds > x.rows() {
@@ -1498,7 +2026,7 @@ impl Service {
             self.metrics.on_fail(0.0);
             let _ = reply.send(SolveOutcome {
                 id,
-                result: Err(e),
+                result: Err(JobError::Invalid(e)),
                 total_seconds: 0.0,
                 queue_wait_seconds: 0.0,
             });
@@ -1508,7 +2036,7 @@ impl Service {
         // grid exactly (same `segments_for` split), which is what makes
         // fold paths bit-for-bit standalone paths.
         let nseg = self.segments_for(grid.len());
-        let len = grid.len();
+        let sizes = segment_sizes(grid.len(), nseg);
         let shared = Arc::new(SharedCvPath {
             id,
             dataset_id,
@@ -1520,18 +2048,17 @@ impl Service {
             fold_data: (0..folds).map(|_| Mutex::new(None)).collect(),
             reply: Mutex::new(reply),
             submitted: Timer::start(),
+            options,
+            ticket,
             parts: Mutex::new((0..folds * nseg).map(|_| None).collect()),
             remaining: AtomicUsize::new(folds * nseg),
             first_pickup: Mutex::new(None),
             nseg,
             handoffs: (0..folds * nseg).map(|_| Mutex::new(None)).collect(),
         });
-        let base = len / nseg;
-        let extra = len % nseg;
         'folds: for f in 0..folds {
             let mut start = 0usize;
-            for index in 0..nseg {
-                let size = base + usize::from(index < extra);
+            for (index, &size) in sizes.iter().enumerate() {
                 let end = start + size;
                 let seg = CvSegment { shared: shared.clone(), fold: f, index, start, end };
                 start = end;
@@ -1539,17 +2066,19 @@ impl Service {
                     if f == 0 && index == 0 {
                         // Nothing queued: a plain rejection.
                         self.metrics.on_reject();
-                        return Err(ServiceClosed);
+                        return Err(JobError::Closed);
                     }
                     // Closed mid-submit: fail this and every later part
                     // so the already-queued ones still assemble (to an
                     // error — the assembly scan short-circuits on the
                     // first failed part, so no refit is attempted).
                     for slot in (f * nseg + index)..(folds * nseg) {
-                        if shared.record(slot, Err(ServiceClosed.to_string())) {
+                        if shared.record(slot, Err(JobError::Closed)) {
                             let err = match shared.take_fold_paths() {
                                 Err(e) => e,
-                                Ok(_) => "internal: cv assembly raced".to_string(),
+                                Ok(_) => JobError::Internal(
+                                    "internal: cv assembly raced".to_string(),
+                                ),
                             };
                             shared.send_outcome(Err(err), &self.metrics);
                         }
@@ -1578,7 +2107,9 @@ impl Service {
         grid: Vec<GridPoint>,
         backend: BackendChoice,
         reply: Sender<SolveOutcome>,
-    ) -> Result<(), ServiceClosed> {
+        options: SubmitOptions,
+        ticket: Option<CostTicket>,
+    ) -> Result<(), JobError> {
         let invalid = if backend == BackendChoice::Xla {
             // The XLA artifacts are compiled for single-response solves;
             // the fused multi-response batch path is CPU-only for now.
@@ -1613,7 +2144,7 @@ impl Service {
             self.metrics.on_fail(0.0);
             let _ = reply.send(SolveOutcome {
                 id,
-                result: Err(e),
+                result: Err(JobError::Invalid(e)),
                 total_seconds: 0.0,
                 queue_wait_seconds: 0.0,
             });
@@ -1631,15 +2162,15 @@ impl Service {
             screen: Mutex::new(None),
             reply: Mutex::new(reply),
             submitted: Timer::start(),
+            options,
+            ticket,
             parts: Mutex::new((0..nseg).map(|_| None).collect()),
             remaining: AtomicUsize::new(nseg),
             first_pickup: Mutex::new(None),
         });
-        let base = nresp / nseg;
-        let extra = nresp % nseg;
+        let sizes = segment_sizes(nresp, nseg);
         let mut start = 0usize;
-        for index in 0..nseg {
-            let size = base + usize::from(index < extra);
+        for (index, &size) in sizes.iter().enumerate() {
             let end = start + size;
             let seg = MultiSegment { shared: shared.clone(), index, start, end };
             start = end;
@@ -1647,16 +2178,12 @@ impl Service {
                 if index == 0 {
                     // Nothing queued: a plain rejection.
                     self.metrics.on_reject();
-                    return Err(ServiceClosed);
+                    return Err(JobError::Closed);
                 }
                 // Closed mid-submit: fail this and every later chunk so
                 // the already-queued ones still assemble (to an error).
                 for later in index..nseg {
-                    shared.finish_segment(
-                        later,
-                        Err(ServiceClosed.to_string()),
-                        &self.metrics,
-                    );
+                    shared.finish_segment(later, Err(JobError::Closed), &self.metrics);
                 }
                 break;
             }
@@ -1674,8 +2201,23 @@ impl Service {
         folds: usize,
         grid: Vec<GridPoint>,
         backend: BackendChoice,
-    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+    ) -> Result<Receiver<SolveOutcome>, JobError> {
         self.submit(dataset_id, x, y, JobKind::CvPath { folds, grid }, backend)
+    }
+
+    /// [`Service::submit_cv_path`] with explicit [`SubmitOptions`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_cv_path_with(
+        &self,
+        dataset_id: u64,
+        x: Arc<Design>,
+        y: Arc<Vec<f64>>,
+        folds: usize,
+        grid: Vec<GridPoint>,
+        backend: BackendChoice,
+        options: SubmitOptions,
+    ) -> Result<Receiver<SolveOutcome>, JobError> {
+        self.submit_with(dataset_id, x, y, JobKind::CvPath { folds, grid }, backend, options)
     }
 
     /// Convenience: submit a single (t, λ₂) solve.
@@ -1687,7 +2229,7 @@ impl Service {
         t: f64,
         lambda2: f64,
         backend: BackendChoice,
-    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+    ) -> Result<Receiver<SolveOutcome>, JobError> {
         self.submit(dataset_id, x, y, JobKind::Point { t, lambda2 }, backend)
     }
 
@@ -1699,8 +2241,21 @@ impl Service {
         y: Arc<Vec<f64>>,
         grid: Vec<GridPoint>,
         backend: BackendChoice,
-    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+    ) -> Result<Receiver<SolveOutcome>, JobError> {
         self.submit(dataset_id, x, y, JobKind::Path { grid }, backend)
+    }
+
+    /// [`Service::submit_path`] with explicit [`SubmitOptions`].
+    pub fn submit_path_with(
+        &self,
+        dataset_id: u64,
+        x: Arc<Design>,
+        y: Arc<Vec<f64>>,
+        grid: Vec<GridPoint>,
+        backend: BackendChoice,
+        options: SubmitOptions,
+    ) -> Result<Receiver<SolveOutcome>, JobError> {
+        self.submit_with(dataset_id, x, y, JobKind::Path { grid }, backend, options)
     }
 
     /// Convenience: submit a whole-screen multi-response sweep — R
@@ -1713,9 +2268,30 @@ impl Service {
         responses: Vec<Arc<Vec<f64>>>,
         grid: Vec<GridPoint>,
         backend: BackendChoice,
-    ) -> Result<Receiver<SolveOutcome>, ServiceClosed> {
+    ) -> Result<Receiver<SolveOutcome>, JobError> {
         let y = responses.first().cloned().unwrap_or_default();
         self.submit(dataset_id, x, y, JobKind::MultiResponse { responses, grid }, backend)
+    }
+
+    /// [`Service::submit_multi_response`] with explicit [`SubmitOptions`].
+    pub fn submit_multi_response_with(
+        &self,
+        dataset_id: u64,
+        x: Arc<Design>,
+        responses: Vec<Arc<Vec<f64>>>,
+        grid: Vec<GridPoint>,
+        backend: BackendChoice,
+        options: SubmitOptions,
+    ) -> Result<Receiver<SolveOutcome>, JobError> {
+        let y = responses.first().cloned().unwrap_or_default();
+        self.submit_with(
+            dataset_id,
+            x,
+            y,
+            JobKind::MultiResponse { responses, grid },
+            backend,
+            options,
+        )
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {
@@ -1731,8 +2307,14 @@ impl Service {
         self.pool.backlog()
     }
 
+    /// Solve-units currently admitted and not yet finished (0 when
+    /// admission control is off).
+    pub fn admitted_depth(&self) -> usize {
+        self.admission.as_ref().map_or(0, |adm| adm.depth())
+    }
+
     /// Stop accepting new jobs; queued work keeps draining. Subsequent
-    /// [`Service::submit`] calls return `Err(ServiceClosed)`.
+    /// [`Service::submit`] calls return `Err(JobError::Closed)`.
     pub fn close(&self) {
         self.pool.close();
     }
@@ -1744,6 +2326,7 @@ impl Service {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::data::{synth_regression, SynthSpec};
@@ -1867,7 +2450,7 @@ mod tests {
                 BackendChoice::Rust,
             )
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("dataset ids must identify"), "got: {err}");
         assert_eq!(service.metrics().failed(), 5);
         service.shutdown();
@@ -1890,7 +2473,7 @@ mod tests {
         let y = Arc::new(d.y.clone());
         service.close();
         let res = service.submit_point(1, x, y, 0.5, 0.1, BackendChoice::Rust);
-        assert_eq!(res.err(), Some(ServiceClosed));
+        assert_eq!(res.err(), Some(JobError::Closed));
         assert_eq!(service.metrics().rejected(), 1);
         assert_eq!(service.metrics().submitted(), 0);
         service.shutdown();
@@ -1922,6 +2505,10 @@ mod tests {
                     pool: PoolConfig { workers: 1, queue_capacity: 0 },
                     ..Default::default()
                 },
+            ),
+            (
+                "max_queue_depth",
+                ServiceConfig { max_queue_depth: Some(0), ..Default::default() },
             ),
         ];
         for (knob, cfg) in cases {
@@ -1965,19 +2552,19 @@ mod tests {
         let rx = service
             .submit_cv_path(1, x.clone(), y.clone(), 1, grid.clone(), BackendChoice::Rust)
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("at least 2 folds"), "got: {err}");
         // folds > n
         let rx = service
             .submit_cv_path(1, x.clone(), y.clone(), 11, grid.clone(), BackendChoice::Rust)
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("exceed"), "got: {err}");
         // empty grid
         let rx = service
             .submit_cv_path(1, x.clone(), y.clone(), 3, Vec::new(), BackendChoice::Rust)
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("grid is empty"), "got: {err}");
         // invalid grid point
         let rx = service
@@ -1990,7 +2577,7 @@ mod tests {
                 BackendChoice::Rust,
             )
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("t must be positive"), "got: {err}");
         assert_eq!(service.metrics().failed(), 4);
         assert_eq!(service.metrics().prep_builds(), 0);
@@ -2018,13 +2605,13 @@ mod tests {
         let rx = service
             .submit_multi_response(1, x.clone(), Vec::new(), grid.clone(), BackendChoice::Rust)
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("no responses"), "got: {err}");
         // empty grid
         let rx = service
             .submit_multi_response(1, x.clone(), vec![y.clone()], Vec::new(), BackendChoice::Rust)
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("grid is empty"), "got: {err}");
         // length mismatch in a later response
         let rx = service
@@ -2036,7 +2623,7 @@ mod tests {
                 BackendChoice::Rust,
             )
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("response 1 has 3 entries"), "got: {err}");
         // a NaN hiding in one response
         let rx = service
@@ -2048,7 +2635,7 @@ mod tests {
                 BackendChoice::Rust,
             )
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("non-finite"), "got: {err}");
         // bad grid point
         let rx = service
@@ -2060,13 +2647,13 @@ mod tests {
                 BackendChoice::Rust,
             )
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("t must be positive"), "got: {err}");
         // the fused batch path is CPU-only: XLA multi jobs fail cleanly
         let rx = service
             .submit_multi_response(1, x, vec![y], grid, BackendChoice::Xla)
             .unwrap();
-        let err = rx.recv().unwrap().result.unwrap_err();
+        let err = rx.recv().unwrap().result.unwrap_err().to_string();
         assert!(err.contains("require the rust backend"), "got: {err}");
         assert_eq!(service.metrics().failed(), 6);
         assert_eq!(service.metrics().prep_builds(), 0);

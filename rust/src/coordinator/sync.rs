@@ -1,0 +1,68 @@
+//! Poison-tolerant synchronization helpers for cross-thread coordinator
+//! state.
+//!
+//! Worker panics are caught and converted into failed jobs
+//! ([`JobError::WorkerPanic`](super::JobError::WorkerPanic)), but a
+//! panic while a mutex is held still poisons it — and the coordinator's
+//! mutexes guard state whose invariants hold at every yield point
+//! (queue contents, hand-off slots, recorded segment parts, metric
+//! reservoirs). For such state, poisoning carries no information worth
+//! aborting over: a second thread `unwrap()`ing the `PoisonError` would
+//! turn one isolated fault into a process-wide panic cascade, which is
+//! exactly what the fault-isolation layer exists to prevent. These
+//! helpers recover the guard instead.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Park on `cv` until notified, recovering the guard on poison.
+pub(crate) fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+    }
+
+    #[test]
+    fn wait_wakes_through_poisoned_mutex() {
+        let state = Arc::new((Mutex::new(false), Condvar::new()));
+        let s2 = state.clone();
+        // Poison first, then flip the flag from another thread.
+        let p = state.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = p.0.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        let setter = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            *lock(&s2.0) = true;
+            s2.1.notify_all();
+        });
+        let mut g = lock(&state.0);
+        while !*g {
+            g = wait(&state.1, g);
+        }
+        setter.join().unwrap();
+    }
+}

@@ -11,8 +11,8 @@
 //!   **bit-for-bit** while building exactly one preparation per fold
 //!   (plus the winning refit), and the batched-Newton fusion stats flow
 //!   through `sweep_prepared` into the metrics.
-//! - Closed services reject submissions with `ServiceClosed` instead of
-//!   silently dropping them.
+//! - Closed services reject submissions with `JobError::Closed` instead
+//!   of silently dropping them.
 
 use std::sync::Arc;
 use sven::coordinator::cv::fold_problem;
@@ -177,8 +177,8 @@ fn path_job_matches_offline_runner_bit_for_bit() {
     }
 }
 
-/// Submissions after `close()` come back as `Err(ServiceClosed)` — the
-/// caller can tell "queued" from "rejected".
+/// Submissions after `close()` come back as `Err(JobError::Closed)` —
+/// the caller can tell "queued" from "rejected".
 #[test]
 fn closed_service_rejects_submissions() {
     let d = synth_regression(&SynthSpec {
@@ -448,6 +448,7 @@ fn sweep_reports_batch_fusion_stats() {
         &grid,
         None,
         true,
+        None,
     )
     .unwrap();
     assert_eq!(sols.len(), 3);
@@ -784,7 +785,7 @@ fn segmented_path_with_bad_point_fails_fast() {
         )
         .expect("submission accepted");
     let out = rx.recv().unwrap();
-    let err = out.result.unwrap_err();
+    let err = out.result.unwrap_err().to_string();
     assert!(err.contains("t must be positive"), "got: {err}");
     let m = service.metrics();
     assert_eq!(m.submitted(), 1);

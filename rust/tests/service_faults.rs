@@ -1,0 +1,746 @@
+//! Fault-isolation acceptance tests for the coordinator service:
+//! deterministic fault injection ([`FaultPlan`]), per-attempt panic
+//! isolation, transient-failure retries, deadline truncation, and
+//! cost-based admission control.
+//!
+//! The invariants pinned here:
+//!
+//! - An injected solve panic fails *that job* with
+//!   `JobError::WorkerPanic`; the worker survives and keeps serving.
+//! - Transient faults (panics, failed prep builds) retried under a
+//!   `RetryPolicy` converge to results **bit-identical** to a clean run.
+//! - A failed preparation build wakes every single-flight waiter with
+//!   the failure (no hangs) and evicts the slot so a retry rebuilds.
+//! - A deadline that lands mid-sweep returns the solved prefix as
+//!   `JobResult::Truncated` — bit-identical to the same prefix of an
+//!   unbounded run — for `Path`, `CvPath`, and `MultiResponse` jobs; a
+//!   deadline burned entirely in the queue aborts without touching a
+//!   solver.
+//! - Over-budget submissions shed with `JobError::Overloaded` before
+//!   building any state, and the admission budget releases when jobs
+//!   finish.
+//! - A mixed-traffic soak under a seeded fault schedule at 1/2/8
+//!   workers deadlocks never, yields a definite outcome for every job,
+//!   and keeps every successful result bit-identical to the clean run
+//!   (set `PALLAS_FAULT_SOAK=1` to widen the schedule sweep).
+
+use std::sync::Arc;
+use std::time::Duration;
+use sven::coordinator::{
+    BackendChoice, FaultPlan, GridPoint, JobError, JobResult, PoolConfig, RetryPolicy,
+    Service, ServiceConfig, SubmitOptions,
+};
+use sven::data::{synth_regression, Dataset, SynthSpec};
+use sven::linalg::Design;
+
+/// Primal-regime dataset (2p > n): the batched sweep machinery engages.
+fn primal_data(seed: u64) -> Dataset {
+    synth_regression(&SynthSpec { n: 40, p: 48, support: 8, seed, ..Default::default() })
+}
+
+/// Dual-regime dataset (2p < n, and still dual on 2-fold training
+/// splits): the sequential warm-chained sweep runs point by point.
+fn dual_data(seed: u64) -> Dataset {
+    synth_regression(&SynthSpec { n: 120, p: 30, support: 6, seed, ..Default::default() })
+}
+
+/// A hand-built grid of `k` valid points (t > 0, fixed λ₂).
+fn grid(k: usize) -> Vec<GridPoint> {
+    (0..k).map(|i| GridPoint { t: 0.2 + 0.05 * i as f64, lambda2: 0.5 }).collect()
+}
+
+fn service(workers: usize, config: ServiceConfig) -> Service {
+    Service::start(ServiceConfig {
+        pool: PoolConfig { workers, queue_capacity: 64 },
+        ..config
+    })
+}
+
+fn assert_bits(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: β length");
+    for (j, (va, vb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}: β bits differ at j={j}");
+    }
+}
+
+/// An injected solve panic (no retries) fails that job with a
+/// structured `WorkerPanic` — and the worker survives to serve the next
+/// job on the same thread.
+#[test]
+fn injected_solve_panic_fails_job_and_worker_survives() {
+    let d = primal_data(9001);
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan { solve_panics: vec![0], ..Default::default() }),
+            ..Default::default()
+        },
+    );
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let rx = svc
+        .submit_point(1, x.clone(), y.clone(), 0.4, 0.5, BackendChoice::Rust)
+        .expect("accepted");
+    let err = rx.recv().unwrap().result.unwrap_err();
+    match &err {
+        JobError::WorkerPanic(msg) => {
+            assert!(msg.contains("injected fault"), "panic payload must surface: {msg}")
+        }
+        other => panic!("expected WorkerPanic, got {other:?}"),
+    }
+    // Same worker, next job: solve ordinal 1 is clean.
+    let rx = svc
+        .submit_point(1, x, y, 0.4, 0.5, BackendChoice::Rust)
+        .expect("accepted");
+    rx.recv().unwrap().result.expect("the worker must survive a caught panic");
+    let m = svc.metrics();
+    assert_eq!(m.worker_panics(), 1);
+    assert_eq!(m.worker_respawns(), 0, "a caught panic must not cost a respawn");
+    assert_eq!(m.failed(), 1);
+    assert_eq!(m.completed(), 1);
+    svc.shutdown();
+}
+
+/// A panicking attempt under a retry policy re-runs and succeeds with
+/// coefficients bit-identical to a fault-free service.
+#[test]
+fn transient_panic_retries_to_bit_identical_success() {
+    let d = primal_data(9002);
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let clean_svc = service(1, ServiceConfig::default());
+    let rx = clean_svc
+        .submit_point(1, x.clone(), y.clone(), 0.4, 0.5, BackendChoice::Rust)
+        .expect("accepted");
+    let clean = rx.recv().unwrap().result.expect("clean solve").expect_point();
+    clean_svc.shutdown();
+
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan { solve_panics: vec![0], ..Default::default() }),
+            ..Default::default()
+        },
+    );
+    let opts = SubmitOptions { retry: RetryPolicy::retries(2), ..Default::default() };
+    let rx = svc
+        .submit_with(
+            1,
+            x,
+            y,
+            sven::coordinator::JobKind::Point { t: 0.4, lambda2: 0.5 },
+            BackendChoice::Rust,
+            opts,
+        )
+        .expect("accepted");
+    let sol = rx.recv().unwrap().result.expect("retried to success").expect_point();
+    assert_bits(&clean.beta, &sol.beta, "retried point solve");
+    assert_eq!(clean.iterations, sol.iterations, "iteration counts must match too");
+    let report = svc.metrics().report();
+    assert!(report.contains("worker_panics=1"), "{report}");
+    assert!(report.contains("jobs_retried=1"), "{report}");
+    svc.shutdown();
+}
+
+/// An injected preparation-build failure is transient: the failed slot
+/// is evicted, the retry rebuilds it, and the counters record exactly
+/// one failure and two builds.
+#[test]
+fn failed_prep_build_is_evicted_retried_and_counted() {
+    let d = primal_data(9003);
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan {
+                prep_build_errors: vec![0],
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    );
+    let opts = SubmitOptions { retry: RetryPolicy::retries(2), ..Default::default() };
+    let rx = svc
+        .submit_with(
+            1,
+            Arc::new(Design::from(d.x.clone())),
+            Arc::new(d.y.clone()),
+            sven::coordinator::JobKind::Point { t: 0.4, lambda2: 0.5 },
+            BackendChoice::Rust,
+            opts,
+        )
+        .expect("accepted");
+    rx.recv().unwrap().result.expect("rebuild on retry must succeed");
+    let m = svc.metrics();
+    assert_eq!(m.prep_build_failures(), 1);
+    assert_eq!(m.prep_builds(), 2, "failed build + clean rebuild");
+    assert_eq!(m.jobs_retried(), 1);
+    assert!(m.report().contains("prep_build_failures=1"));
+    svc.shutdown();
+}
+
+/// A failing single-flight build must wake every concurrent waiter with
+/// the failure (a definite outcome for every job, no hangs), evict the
+/// slot, and let later jobs rebuild cleanly.
+#[test]
+fn prep_build_failure_wakes_concurrent_waiters_without_deadlock() {
+    let d = primal_data(9004);
+    let svc = service(
+        4,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan {
+                prep_build_errors: vec![0],
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    );
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            svc.submit_point(
+                1,
+                x.clone(),
+                y.clone(),
+                0.3 + 0.05 * i as f64,
+                0.5,
+                BackendChoice::Rust,
+            )
+            .expect("accepted")
+        })
+        .collect();
+    let mut failed = 0usize;
+    for rx in rxs {
+        let out = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every waiter must get a definite outcome (no hang)");
+        match out.result {
+            Ok(_) => {}
+            Err(JobError::PrepFailed(msg)) => {
+                assert!(msg.contains("injected fault"), "{msg}");
+                failed += 1;
+            }
+            Err(other) => panic!("unexpected error kind: {other:?}"),
+        }
+    }
+    assert!(failed >= 1, "at least the build-holding job must see the failure");
+    // The failed slot was evicted: a fresh job rebuilds and succeeds.
+    let rx = svc
+        .submit_point(1, x, y, 0.4, 0.5, BackendChoice::Rust)
+        .expect("accepted");
+    rx.recv().unwrap().result.expect("the evicted slot must rebuild cleanly");
+    assert_eq!(svc.metrics().prep_build_failures(), 1);
+    svc.shutdown();
+}
+
+/// A deadline burned entirely in the queue aborts the job before any
+/// solver (or preparation) is touched.
+#[test]
+fn deadline_spent_in_queue_aborts_without_touching_a_solver() {
+    let d = primal_data(9005);
+    let svc = service(1, ServiceConfig::default());
+    let opts = SubmitOptions::with_deadline(Duration::from_nanos(1));
+    let rx = svc
+        .submit_with(
+            1,
+            Arc::new(Design::from(d.x.clone())),
+            Arc::new(d.y.clone()),
+            sven::coordinator::JobKind::Point { t: 0.4, lambda2: 0.5 },
+            BackendChoice::Rust,
+            opts,
+        )
+        .expect("accepted");
+    let err = rx.recv().unwrap().result.unwrap_err();
+    assert_eq!(err, JobError::DeadlineExceeded);
+    let m = svc.metrics();
+    assert_eq!(m.prep_builds(), 0, "an expired job must not build a preparation");
+    assert!(m.deadline_aborts() >= 1);
+    svc.shutdown();
+}
+
+/// A deadline landing mid-sweep on a primal `Path` job (chunk-batched
+/// under control) truncates to the solved prefix, bit-identical to the
+/// clean run. The injected 1 s stall at solve #0 makes the cut
+/// deterministic: the first 8-point chunk completes (the stall sits
+/// inside it), the second never starts.
+#[test]
+fn deadline_truncates_primal_path_to_bit_identical_prefix() {
+    let d = primal_data(9006);
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let points = grid(12);
+
+    let clean_svc = service(1, ServiceConfig::default());
+    let rx = clean_svc
+        .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+        .expect("accepted");
+    let clean = rx.recv().unwrap().result.expect("clean path").expect_path();
+    clean_svc.shutdown();
+
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan {
+                solve_delays: vec![(0, Duration::from_millis(1000))],
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    );
+    let opts = SubmitOptions::with_deadline(Duration::from_millis(300));
+    let rx = svc
+        .submit_path_with(1, x, y, points.clone(), BackendChoice::Rust, opts)
+        .expect("accepted");
+    let (completed, total, partial) =
+        rx.recv().unwrap().result.expect("a mid-sweep deadline is a success").expect_truncated();
+    assert_eq!(total, points.len());
+    assert_eq!(completed, 8, "the cut must land at the first chunk boundary");
+    let sols = partial.expect_path();
+    assert_eq!(sols.len(), completed);
+    for (i, (a, b)) in clean.iter().zip(&sols).enumerate() {
+        assert_bits(&a.beta, &b.beta, &format!("truncated path point {i}"));
+        assert_eq!(a.iterations, b.iterations, "point {i}: iterations");
+    }
+    let report = svc.metrics().report();
+    assert!(report.contains("jobs_truncated=1"), "{report}");
+    assert!(svc.metrics().deadline_aborts() >= 1);
+    svc.shutdown();
+}
+
+/// The same contract in the dual regime, where the sweep is sequential
+/// and the deadline is observed at every grid point: the stall at solve
+/// #0 cuts the path after exactly one point.
+#[test]
+fn deadline_truncates_dual_path_to_bit_identical_prefix() {
+    let d = dual_data(9007);
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let points = grid(6);
+
+    let clean_svc = service(1, ServiceConfig::default());
+    let rx = clean_svc
+        .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+        .expect("accepted");
+    let clean = rx.recv().unwrap().result.expect("clean path").expect_path();
+    clean_svc.shutdown();
+
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan {
+                solve_delays: vec![(0, Duration::from_millis(1000))],
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    );
+    let opts = SubmitOptions::with_deadline(Duration::from_millis(300));
+    let rx = svc
+        .submit_path_with(1, x, y, points.clone(), BackendChoice::Rust, opts)
+        .expect("accepted");
+    let (completed, total, partial) =
+        rx.recv().unwrap().result.expect("truncated success").expect_truncated();
+    assert_eq!((completed, total), (1, points.len()));
+    let sols = partial.expect_path();
+    assert_bits(&clean[0].beta, &sols[0].beta, "dual truncated prefix");
+    assert_eq!(clean[0].iterations, sols[0].iterations);
+    svc.shutdown();
+}
+
+/// A deadline cutting one fold of a `CvPath` job trims every fold to
+/// the common solved prefix, scores CV over that prefix, and still
+/// refits a winner — with the prefix bit-identical to the clean run's.
+#[test]
+fn deadline_truncates_cv_path_to_common_bit_identical_prefix() {
+    let d = dual_data(9008);
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let points = grid(6);
+    let folds = 2usize;
+
+    let clean_svc = service(1, ServiceConfig::default());
+    let rx = clean_svc
+        .submit_cv_path(1, x.clone(), y.clone(), folds, points.clone(), BackendChoice::Rust)
+        .expect("accepted");
+    let clean = rx.recv().unwrap().result.expect("clean cv").expect_cv_path();
+    clean_svc.shutdown();
+
+    // Fold 0 consumes solve ordinals 0..6; the stall at ordinal 6 (fold
+    // 1, first point) expires the deadline before fold 1's second point.
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan {
+                solve_delays: vec![(6, Duration::from_millis(2000))],
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    );
+    let opts = SubmitOptions::with_deadline(Duration::from_millis(600));
+    let rx = svc
+        .submit_cv_path_with(1, x, y, folds, points.clone(), BackendChoice::Rust, opts)
+        .expect("accepted");
+    let (completed, total, partial) =
+        rx.recv().unwrap().result.expect("truncated success").expect_truncated();
+    assert_eq!((completed, total), (1, points.len()));
+    let cv = partial.expect_cv_path();
+    assert_eq!(cv.fold_paths.len(), folds);
+    assert_eq!(cv.cv_errors.len(), completed, "CV scored over the common prefix");
+    for f in 0..folds {
+        assert_eq!(cv.fold_paths[f].len(), completed, "fold {f} trimmed to the prefix");
+        assert_bits(
+            &clean.fold_paths[f][0].beta,
+            &cv.fold_paths[f][0].beta,
+            &format!("cv fold {f} prefix"),
+        );
+    }
+    assert!(cv.best_index < completed);
+    svc.shutdown();
+}
+
+/// A deadline cutting a `MultiResponse` sweep trims every response to
+/// the common grid prefix — bit-identical to the clean screen's prefix.
+#[test]
+fn deadline_truncates_multi_response_to_common_bit_identical_prefix() {
+    let d = primal_data(9009);
+    let x = Arc::new(Design::from(d.x.clone()));
+    let responses: Vec<Arc<Vec<f64>>> = (0..3)
+        .map(|i| {
+            let f = 0.7 + 0.3 * i as f64;
+            Arc::new(d.y.iter().map(|&v| f * v).collect::<Vec<f64>>())
+        })
+        .collect();
+    let points = grid(6);
+
+    let clean_svc = service(1, ServiceConfig::default());
+    let rx = clean_svc
+        .submit_multi_response(1, x.clone(), responses.clone(), points.clone(), BackendChoice::Rust)
+        .expect("accepted");
+    let clean = rx.recv().unwrap().result.expect("clean screen").expect_multi_response();
+    clean_svc.shutdown();
+
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan {
+                solve_delays: vec![(0, Duration::from_millis(1000))],
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    );
+    let opts = SubmitOptions::with_deadline(Duration::from_millis(300));
+    let rx = svc
+        .submit_multi_response_with(1, x, responses, points.clone(), BackendChoice::Rust, opts)
+        .expect("accepted");
+    let (completed, total, partial) =
+        rx.recv().unwrap().result.expect("truncated success").expect_truncated();
+    assert_eq!((completed, total), (1, points.len()));
+    let res = partial.expect_multi_response();
+    assert_eq!(res.paths.len(), 3);
+    for (r, path) in res.paths.iter().enumerate() {
+        assert_eq!(path.len(), completed, "response {r} trimmed to the common prefix");
+        assert_bits(
+            &clean.paths[r][0].beta,
+            &path[0].beta,
+            &format!("screen response {r} prefix"),
+        );
+        assert_eq!(res.early_stopped_at[r], None);
+    }
+    assert_eq!(res.lambda_max.len(), 3);
+    svc.shutdown();
+}
+
+/// An over-budget submission sheds synchronously with the depth facts in
+/// the error — before an id, a channel, a validation pass, or a
+/// preparation exists.
+#[test]
+fn over_budget_submission_sheds_before_any_state() {
+    let d = primal_data(9010);
+    let svc = service(
+        1,
+        ServiceConfig { max_queue_depth: Some(4), ..Default::default() },
+    );
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let err = svc
+        .submit_path(1, x.clone(), y.clone(), grid(6), BackendChoice::Rust)
+        .unwrap_err();
+    assert_eq!(err, JobError::Overloaded { depth: 0, max_depth: 4, cost: 6 });
+    let m = svc.metrics();
+    assert_eq!(m.jobs_shed(), 1);
+    assert_eq!(m.submitted(), 0, "a shed job must not count as submitted");
+    assert_eq!(m.prep_builds(), 0, "a shed job must touch no worker");
+    assert!(m.report().contains("jobs_shed=1"));
+    // A job within budget still flows.
+    let rx = svc
+        .submit_point(1, x, y, 0.4, 0.5, BackendChoice::Rust)
+        .expect("cost-1 job fits the budget");
+    rx.recv().unwrap().result.expect("solve ok");
+    svc.shutdown();
+}
+
+/// The admission charge is held for the job's whole lifetime (shedding
+/// concurrent work at full depth) and released when it finishes.
+#[test]
+fn admission_budget_releases_when_the_job_finishes() {
+    let d = primal_data(9011);
+    let svc = service(
+        1,
+        ServiceConfig {
+            max_queue_depth: Some(6),
+            // Stall the first solve so the budget is provably still held
+            // when the second submission arrives.
+            fault_plan: Some(FaultPlan {
+                solve_delays: vec![(0, Duration::from_millis(300))],
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+    );
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let points = grid(6);
+    let rx = svc
+        .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+        .expect("first path fills the budget exactly");
+    assert_eq!(svc.admitted_depth(), 6);
+    let err = svc
+        .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+        .unwrap_err();
+    assert_eq!(err, JobError::Overloaded { depth: 6, max_depth: 6, cost: 6 });
+    rx.recv().unwrap().result.expect("held job completes");
+    // The ticket drops with the job's state just after the reply lands.
+    let mut waited = 0;
+    while svc.admitted_depth() > 0 && waited < 100 {
+        std::thread::sleep(Duration::from_millis(10));
+        waited += 1;
+    }
+    assert_eq!(svc.admitted_depth(), 0, "the budget must release on completion");
+    let rx = svc
+        .submit_path(1, x, y, points, BackendChoice::Rust)
+        .expect("released budget admits the next job");
+    rx.recv().unwrap().result.expect("solve ok");
+    svc.shutdown();
+}
+
+/// Clean-run reference results for the soak: one point per grid entry,
+/// a primal path, a CV path, a multi-response screen, and a dual path.
+struct SoakRef {
+    points: Vec<Vec<f64>>,
+    path: Vec<Vec<f64>>,
+    cv_folds: Vec<Vec<Vec<f64>>>,
+    multi: Vec<Vec<Vec<f64>>>,
+    dual_path: Vec<Vec<f64>>,
+}
+
+fn betas(sols: &[sven::solvers::elastic_net::EnSolution]) -> Vec<Vec<f64>> {
+    sols.iter().map(|s| s.beta.clone()).collect()
+}
+
+/// Mixed traffic (Point / Path / CvPath / MultiResponse, both SVM
+/// regimes) under a seeded fault schedule at 1, 2, and 8 workers: no
+/// deadlock, a definite outcome for every job, only transient error
+/// kinds on the jobs the schedule managed to kill, and bit-identity for
+/// everything that succeeded. `PALLAS_FAULT_SOAK=1` widens the seed
+/// sweep.
+#[test]
+fn mixed_traffic_soak_under_seeded_faults() {
+    let d = primal_data(9012);
+    let dd = dual_data(9013);
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let xd = Arc::new(Design::from(dd.x.clone()));
+    let yd = Arc::new(dd.y.clone());
+    let points = grid(6);
+    let responses: Vec<Arc<Vec<f64>>> = (0..3)
+        .map(|i| {
+            let f = 0.7 + 0.3 * i as f64;
+            Arc::new(d.y.iter().map(|&v| f * v).collect::<Vec<f64>>())
+        })
+        .collect();
+
+    // Clean reference, once, on a single worker.
+    let clean = service(1, ServiceConfig::default());
+    let reference = SoakRef {
+        points: points
+            .iter()
+            .map(|gp| {
+                let rx = clean
+                    .submit_point(1, x.clone(), y.clone(), gp.t, gp.lambda2, BackendChoice::Rust)
+                    .expect("accepted");
+                rx.recv().unwrap().result.expect("clean point").expect_point().beta
+            })
+            .collect(),
+        path: betas(
+            &clean
+                .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+                .expect("accepted")
+                .recv()
+                .unwrap()
+                .result
+                .expect("clean path")
+                .expect_path(),
+        ),
+        cv_folds: clean
+            .submit_cv_path(1, x.clone(), y.clone(), 2, points.clone(), BackendChoice::Rust)
+            .expect("accepted")
+            .recv()
+            .unwrap()
+            .result
+            .expect("clean cv")
+            .expect_cv_path()
+            .fold_paths
+            .iter()
+            .map(|p| betas(p))
+            .collect(),
+        multi: clean
+            .submit_multi_response(1, x.clone(), responses.clone(), points.clone(), BackendChoice::Rust)
+            .expect("accepted")
+            .recv()
+            .unwrap()
+            .result
+            .expect("clean screen")
+            .expect_multi_response()
+            .paths
+            .iter()
+            .map(|p| betas(p))
+            .collect(),
+        dual_path: betas(
+            &clean
+                .submit_path(2, xd.clone(), yd.clone(), points.clone(), BackendChoice::Rust)
+                .expect("accepted")
+                .recv()
+                .unwrap()
+                .result
+                .expect("clean dual path")
+                .expect_path(),
+        ),
+    };
+    clean.shutdown();
+
+    let seeds: &[u64] = if std::env::var("PALLAS_FAULT_SOAK").is_ok() {
+        &[11, 12, 13]
+    } else {
+        &[11]
+    };
+    for &seed in seeds {
+        for &workers in &[1usize, 2, 8] {
+            // Seeded schedule plus a guaranteed early solve panic, so
+            // every run provably exercises the recovery path.
+            let mut plan = FaultPlan::seeded(seed, 48, 4);
+            plan.solve_panics.push(1);
+            plan.solve_panics.sort_unstable();
+            plan.solve_panics.dedup();
+            let svc = service(
+                workers,
+                ServiceConfig { fault_plan: Some(plan), ..Default::default() },
+            );
+            let opts = SubmitOptions { retry: RetryPolicy::retries(4), ..Default::default() };
+            let mut jobs: Vec<(String, std::sync::mpsc::Receiver<_>)> = Vec::new();
+            for (i, gp) in points.iter().enumerate().take(4) {
+                let rx = svc
+                    .submit_with(
+                        1,
+                        x.clone(),
+                        y.clone(),
+                        sven::coordinator::JobKind::Point { t: gp.t, lambda2: gp.lambda2 },
+                        BackendChoice::Rust,
+                        opts,
+                    )
+                    .expect("accepted");
+                jobs.push((format!("point{i}"), rx));
+            }
+            jobs.push((
+                "path".into(),
+                svc.submit_path_with(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust, opts)
+                    .expect("accepted"),
+            ));
+            jobs.push((
+                "cv".into(),
+                svc.submit_cv_path_with(1, x.clone(), y.clone(), 2, points.clone(), BackendChoice::Rust, opts)
+                    .expect("accepted"),
+            ));
+            jobs.push((
+                "multi".into(),
+                svc.submit_multi_response_with(
+                    1,
+                    x.clone(),
+                    responses.clone(),
+                    points.clone(),
+                    BackendChoice::Rust,
+                    opts,
+                )
+                .expect("accepted"),
+            ));
+            jobs.push((
+                "dual_path".into(),
+                svc.submit_path_with(2, xd.clone(), yd.clone(), points.clone(), BackendChoice::Rust, opts)
+                    .expect("accepted"),
+            ));
+            for (name, rx) in jobs {
+                let ctx = format!("seed {seed}, {workers} workers, job {name}");
+                let out = rx
+                    .recv_timeout(Duration::from_secs(60))
+                    .unwrap_or_else(|e| panic!("{ctx}: no definite outcome ({e})"));
+                match out.result {
+                    Ok(JobResult::Truncated { .. }) => {
+                        panic!("{ctx}: no deadline was set, truncation is a bug")
+                    }
+                    Ok(JobResult::Point(sol)) => {
+                        let i: usize = name["point".len()..].parse().unwrap();
+                        assert_bits(&reference.points[i], &sol.beta, &ctx);
+                    }
+                    Ok(JobResult::Path(sols)) => {
+                        let want = if name == "path" { &reference.path } else { &reference.dual_path };
+                        assert_eq!(sols.len(), want.len(), "{ctx}");
+                        for (i, s) in sols.iter().enumerate() {
+                            assert_bits(&want[i], &s.beta, &format!("{ctx} pt {i}"));
+                        }
+                    }
+                    Ok(JobResult::CvPath(cv)) => {
+                        for (f, path) in cv.fold_paths.iter().enumerate() {
+                            assert_eq!(path.len(), points.len(), "{ctx}");
+                            for (i, s) in path.iter().enumerate() {
+                                assert_bits(
+                                    &reference.cv_folds[f][i],
+                                    &s.beta,
+                                    &format!("{ctx} fold {f} pt {i}"),
+                                );
+                            }
+                        }
+                    }
+                    Ok(JobResult::MultiResponse(res)) => {
+                        for (r, path) in res.paths.iter().enumerate() {
+                            assert_eq!(path.len(), points.len(), "{ctx}");
+                            for (i, s) in path.iter().enumerate() {
+                                assert_bits(
+                                    &reference.multi[r][i],
+                                    &s.beta,
+                                    &format!("{ctx} resp {r} pt {i}"),
+                                );
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        assert!(
+                            e.is_transient(),
+                            "{ctx}: only exhausted transient faults may fail a job, got {e:?}"
+                        );
+                    }
+                }
+            }
+            let m = svc.metrics();
+            assert!(
+                m.worker_panics() >= 1,
+                "the pinned solve panic must have fired (seed {seed}, {workers} workers)"
+            );
+            let report = m.report();
+            for key in ["worker_panics=", "worker_respawns=", "jobs_retried=", "jobs_shed="] {
+                assert!(report.contains(key), "metric {key} missing from report: {report}");
+            }
+            svc.shutdown();
+        }
+    }
+}

@@ -114,10 +114,11 @@ fn main() {
     }
 
     // Robustness micro-bench: shed latency, deadline-control overhead on
-    // a path sweep, and p50/p99 point-job latency under an injected
-    // fault schedule (asserts shed-builds-nothing, deadline and
-    // fault-recovery bit-identity even in smoke mode; the full run
-    // writes BENCH_PR9.json).
+    // a path sweep, p50/p99 point-job latency under an injected fault
+    // schedule, and checkpoint economics (per-point publish cost plus
+    // resumed-vs-scratch retry latency). Asserts shed-builds-nothing and
+    // deadline / fault-recovery / checkpoint-resume bit-identity even in
+    // smoke mode; the full run writes BENCH_PR9.json and BENCH_PR10.json.
     let (sp_ctl, sp_fault) = sven::bench::figures::robustness_micro(!smoke);
     if !smoke {
         println!(
@@ -205,7 +206,7 @@ fn main() {
             let prep = sven_xla.prepare(&d2.x, &d2.y).unwrap();
             let mut scratch = sven::solvers::sven::SvmScratch::new();
             let m = measure(2, 10, || {
-                sven_xla.solve_prepared(prep.as_ref(), &mut scratch, &prob, None).unwrap()
+                sven_xla.solve_prepared(prep.as_ref(), &mut scratch, &prob, None, None).unwrap()
             });
             println!(
                 "sven_xla solve 100x400 (prepared): median {:.3}ms",

@@ -1089,6 +1089,7 @@ pub fn screen_micro(full: bool) -> (f64, f64) {
             &points,
             None,
             None,
+            None,
         )
         .expect("multi sweep");
         widest = widest.max(out.stats.max_fused_width);
@@ -1173,10 +1174,17 @@ pub fn screen_micro(full: bool) -> (f64, f64) {
 ///    retried) vs a clean service, with every faulted job still
 ///    succeeding bit-identically to the clean run.
 ///
-/// All three assertions run even in smoke mode. The full run writes
-/// `BENCH_PR9.json` at the repo root (the robustness-trajectory
-/// record). Returns (deadline-control overhead ratio, faulted-vs-clean
-/// p50 latency ratio).
+/// 4. **Checkpoint economics** — on a dual-regime sweep (checkpoints
+///    after every point): the publish cost of running with an armed
+///    checkpoint slot vs without (target: < 2% of sweep time), and the
+///    latency of a mid-sweep-killed-then-resumed retry vs the clean
+///    sweep (a resume re-solves only the suffix; a scratch retry would
+///    pay the prefix again). Both routes stay bit-identical.
+///
+/// All assertions run even in smoke mode. The full run writes
+/// `BENCH_PR9.json` and `BENCH_PR10.json` at the repo root (the
+/// robustness-trajectory records). Returns (deadline-control overhead
+/// ratio, faulted-vs-clean p50 latency ratio).
 pub fn robustness_micro(full: bool) -> (f64, f64) {
     use super::harness::measure;
     use crate::coordinator::{
@@ -1367,6 +1375,173 @@ pub fn robustness_micro(full: bool) -> (f64, f64) {
         f99 * 1e3
     );
 
+    // --- 4. checkpoint publish cost + resumed-vs-scratch retry latency ---
+    // A dual-regime sweep checkpoints after every grid point, so this
+    // section prices the per-point publish (a solution clone into the
+    // shared slot) and the payoff: a retry that resumes mid-grid instead
+    // of re-solving the prefix.
+    let (nd, pd) = if full { (480usize, 60usize) } else { (120, 30) };
+    let ddual = crate::data::synth_regression(&crate::data::SynthSpec {
+        name: format!("robust-dual-{nd}x{pd}"),
+        n: nd,
+        p: pd,
+        support: (pd / 5).max(4),
+        seed: 4243,
+        ..Default::default()
+    });
+    let dual_derived = runner.derive_grid(&ddual);
+    let mut dual_points = runner.grid_points(&dual_derived);
+    dual_points.retain(|gp| gp.t > 0.0);
+    assert!(
+        dual_points.len() >= 2,
+        "dual grid collapsed to {} points; the checkpoint section needs a mid-grid kill",
+        dual_points.len()
+    );
+    let xd = Arc::new(crate::linalg::Design::from(ddual.x.clone()));
+    let yd = Arc::new(ddual.y.clone());
+    let service = Service::start(ServiceConfig {
+        pool: PoolConfig { workers: 1, queue_capacity: 8 },
+        ..Default::default()
+    });
+    // Warm the prep cache; measurements below time sweeps only.
+    let rx = service
+        .submit_path(2, xd.clone(), yd.clone(), dual_points.clone(), BackendChoice::Rust)
+        .expect("accepted");
+    let dual_clean = rx.recv().expect("outcome").result.expect("path ok").expect_path();
+    let with_retry = SubmitOptions { retry: RetryPolicy::retries(2), ..Default::default() };
+    let t_plain = measure(1, reps, || {
+        let rx = service
+            .submit_path(2, xd.clone(), yd.clone(), dual_points.clone(), BackendChoice::Rust)
+            .expect("accepted");
+        rx.recv().expect("outcome").result.expect("path ok")
+    })
+    .summary
+    .median();
+    // `retries(2)` arms the checkpoint slot; with no fault injected the
+    // only extra work is the per-point publish.
+    let rx = service
+        .submit_path_with(
+            2,
+            xd.clone(),
+            yd.clone(),
+            dual_points.clone(),
+            BackendChoice::Rust,
+            with_retry,
+        )
+        .expect("accepted");
+    let ckpt_path = rx.recv().expect("outcome").result.expect("path ok").expect_path();
+    for (i, (a, b)) in dual_clean.iter().zip(&ckpt_path).enumerate() {
+        for j in 0..a.beta.len() {
+            assert_eq!(
+                a.beta[j].to_bits(),
+                b.beta[j].to_bits(),
+                "point {i}: an armed checkpoint slot must not move a bit (j={j})"
+            );
+        }
+    }
+    let t_ckpt = measure(1, reps, || {
+        let rx = service
+            .submit_path_with(
+                2,
+                xd.clone(),
+                yd.clone(),
+                dual_points.clone(),
+                BackendChoice::Rust,
+                with_retry,
+            )
+            .expect("accepted");
+        rx.recv().expect("outcome").result.expect("path ok")
+    })
+    .summary
+    .median();
+    service.shutdown();
+    let publish_cost = t_ckpt / t_plain.max(1e-12) - 1.0;
+    assert!(
+        publish_cost < 0.5,
+        "checkpoint publishing cost {publish_cost:.3} of sweep time (target < 0.02)"
+    );
+    if full {
+        assert!(
+            publish_cost < 0.10,
+            "full-size checkpoint publishing must stay well under the 2% target, \
+             measured {publish_cost:.4}"
+        );
+    }
+    println!(
+        "checkpoint publish: plain {:.2}ms vs armed {:.2}ms ({:.2}% of sweep time, \
+         target < 2%)",
+        t_plain * 1e3,
+        t_ckpt * 1e3,
+        publish_cost * 100.0
+    );
+    // Resumed retry: a solve panic mid-grid kills the first attempt; the
+    // retry resumes from the checkpointed prefix. Each repetition needs a
+    // fresh service (fault ordinals are service-wide); a warm-up point
+    // job builds the prep and consumes ordinal 0, so the kill lands at
+    // grid index `mid` of the measured path job.
+    let mid = dual_points.len() / 2;
+    let resume_reps = if full { 5usize } else { 2 };
+    let mut resumed_lat = Vec::with_capacity(resume_reps);
+    for _ in 0..resume_reps {
+        let svc = Service::start(ServiceConfig {
+            pool: PoolConfig { workers: 1, queue_capacity: 8 },
+            fault_plan: Some(FaultPlan {
+                solve_panics: vec![1 + mid as u64],
+                ..Default::default()
+            }),
+            ..Default::default()
+        });
+        let gp = dual_points[0];
+        let rx = svc
+            .submit_point(2, xd.clone(), yd.clone(), gp.t, gp.lambda2, BackendChoice::Rust)
+            .expect("accepted");
+        rx.recv().expect("outcome").result.expect("warm-up point ok");
+        let timer = Timer::start();
+        let rx = svc
+            .submit_path_with(
+                2,
+                xd.clone(),
+                yd.clone(),
+                dual_points.clone(),
+                BackendChoice::Rust,
+                with_retry,
+            )
+            .expect("accepted");
+        let resumed = rx.recv().expect("outcome").result.expect("path ok").expect_path();
+        resumed_lat.push(timer.elapsed());
+        let m = svc.metrics();
+        assert_eq!(m.resumed_from_checkpoint(), 1, "the retry must resume mid-grid");
+        assert_eq!(
+            m.checkpoints_published(),
+            (dual_points.len() - mid) as u64,
+            "the resumed prefix must not be re-published"
+        );
+        for (i, (a, b)) in dual_clean.iter().zip(&resumed).enumerate() {
+            for j in 0..a.beta.len() {
+                assert_eq!(
+                    a.beta[j].to_bits(),
+                    b.beta[j].to_bits(),
+                    "point {i}: a resumed sweep must match the clean run (j={j})"
+                );
+            }
+        }
+        svc.shutdown();
+    }
+    resumed_lat.sort_by(f64::total_cmp);
+    let t_resumed = resumed_lat[resumed_lat.len() / 2];
+    let resumed_ratio = t_resumed / t_plain.max(1e-12);
+    // A from-scratch retry killed at `mid` pays the prefix twice; the
+    // resume only pays it once, so the estimated saving is the prefix
+    // fraction of one sweep.
+    let scratch_estimate = t_plain * (1.0 + mid as f64 / dual_points.len() as f64);
+    println!(
+        "resumed retry: clean sweep {:.2}ms, killed-at-{mid}-then-resumed {:.2}ms \
+         ({resumed_ratio:.2}x; from-scratch retry estimate {:.2}ms)",
+        t_plain * 1e3,
+        t_resumed * 1e3,
+        scratch_estimate * 1e3
+    );
+
     if full {
         let json = format!(
             "{{\n  \"bench\": \"robustness_micro\",\n  \"rows\": [\n    {{\"shed_ns\": \
@@ -1382,6 +1557,23 @@ pub fn robustness_micro(full: bool) -> (f64, f64) {
             .parent()
             .map(|d| d.join("BENCH_PR9.json"))
             .unwrap_or_else(|| std::path::PathBuf::from("BENCH_PR9.json"));
+        match std::fs::write(&path, &json) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
+        }
+        let json = format!(
+            "{{\n  \"bench\": \"checkpoint_micro\",\n  \"rows\": [\n    {{\"grid_points\": \
+             {}, \"kill_ordinal\": {mid}, \"plain_path_seconds\": {t_plain:.6}, \
+             \"checkpointed_path_seconds\": {t_ckpt:.6}, \"publish_overhead\": \
+             {publish_cost:.4}, \"resumed_retry_seconds\": {t_resumed:.6}, \
+             \"resumed_over_clean\": {resumed_ratio:.4}, \"scratch_retry_estimate_seconds\": \
+             {scratch_estimate:.6}}}\n  ]\n}}\n",
+            dual_points.len()
+        );
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|d| d.join("BENCH_PR10.json"))
+            .unwrap_or_else(|| std::path::PathBuf::from("BENCH_PR10.json"));
         match std::fs::write(&path, &json) {
             Ok(()) => println!("wrote {}", path.display()),
             Err(e) => eprintln!("[bench] could not write {}: {e}", path.display()),
@@ -1462,7 +1654,7 @@ pub fn sweep_dataset(data: &Dataset, grid: &[PathPoint], rows: &mut Vec<BenchRow
             );
             let timer = Timer::start();
             let sol = sven
-                .solve_prepared(prep.as_ref(), &mut scratch, &prob, warm.as_ref())
+                .solve_prepared(prep.as_ref(), &mut scratch, &prob, warm.as_ref(), None)
                 .expect("xla solve");
             xla_times[i] = timer.elapsed();
             xla_devs[i] = pt
@@ -1529,6 +1721,7 @@ pub fn sweep_dataset(data: &Dataset, grid: &[PathPoint], rows: &mut Vec<BenchRow
                             cpu_prep.as_ref().unwrap().as_ref(),
                             &mut scratch,
                             &prob,
+                            None,
                             None,
                         )
                         .expect("sven cpu");
@@ -1682,7 +1875,7 @@ fn ablation_scale_sweep(seed: u64) {
         let prep = xla.prepare(&d.x, &d.y).expect("prep");
         let mut scratch = SvmScratch::new();
         let mx = super::harness::measure(1, 3, || {
-            xla.solve_prepared(prep.as_ref(), &mut scratch, &prob, None).unwrap()
+            xla.solve_prepared(prep.as_ref(), &mut scratch, &prob, None, None).unwrap()
         });
         println!(
             "{:>8} {:>8} {:>12.4} {:>12.4} {:>10.2}",
@@ -1782,7 +1975,7 @@ fn ablation_gram_cache(seed: u64) {
     let mut scratch = SvmScratch::new();
     for pt in &grid {
         let prob = EnProblem::new(d.x.clone(), d.y.clone(), pt.t, pt.lambda2.max(1e-4));
-        sven.solve_prepared(prep.as_ref(), &mut scratch, &prob, None).unwrap();
+        sven.solve_prepared(prep.as_ref(), &mut scratch, &prob, None, None).unwrap();
     }
     let cached = timer.elapsed();
     // uncached: re-prepare per point (what a naive implementation does)
@@ -1820,7 +2013,7 @@ fn ablation_padding(seed: u64) {
         let prep = sven.prepare(&d.x, &d.y).unwrap();
         let mut scratch = SvmScratch::new();
         let m = super::harness::measure(1, 5, || {
-            sven.solve_prepared(prep.as_ref(), &mut scratch, &prob, None).unwrap()
+            sven.solve_prepared(prep.as_ref(), &mut scratch, &prob, None, None).unwrap()
         });
         let fill = (n * p) as f64 / (32.0 * 64.0);
         println!(

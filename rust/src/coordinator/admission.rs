@@ -39,6 +39,13 @@ pub enum JobError {
     /// The solver itself reported an error (including an unavailable
     /// XLA backend). Deterministic, so not retried.
     Solver(String),
+    /// A non-finite value (NaN/±∞ margin, residual or objective) was
+    /// caught inside a solve by the numerical-health guardrails, after
+    /// the degradation ladder (f64 re-solve, masked fallback) was
+    /// exhausted. `stage` names the guard that tripped
+    /// (`"primal-newton"`, `"dual-newton"`, `"cg"`). Deterministic in
+    /// the inputs, so never retried — a retry would break identically.
+    NumericalBreakdown { stage: String, detail: String },
     /// The job's deadline passed before any grid point was solved (a
     /// deadline that lands mid-sweep yields a
     /// [`JobResult::Truncated`](super::JobResult::Truncated) success
@@ -55,6 +62,24 @@ impl JobError {
     pub fn is_transient(&self) -> bool {
         matches!(self, JobError::WorkerPanic(_) | JobError::PrepFailed(_))
     }
+
+    /// Classify a solver-reported error string: messages carrying the
+    /// guardrail tag (emitted by the sweep/backend layer as
+    /// `"numerical breakdown at <stage>: <detail>"`) become the
+    /// structured [`JobError::NumericalBreakdown`]; everything else
+    /// stays an opaque [`JobError::Solver`].
+    pub(crate) fn from_solver(msg: String) -> JobError {
+        const TAG: &str = "numerical breakdown at ";
+        if let Some(rest) = msg.strip_prefix(TAG) {
+            if let Some((stage, detail)) = rest.split_once(": ") {
+                return JobError::NumericalBreakdown {
+                    stage: stage.to_string(),
+                    detail: detail.to_string(),
+                };
+            }
+        }
+        JobError::Solver(msg)
+    }
 }
 
 impl std::fmt::Display for JobError {
@@ -70,6 +95,9 @@ impl std::fmt::Display for JobError {
             JobError::WorkerPanic(msg) => write!(f, "worker panicked: {msg}"),
             JobError::PrepFailed(msg) => write!(f, "preparation failed: {msg}"),
             JobError::Solver(msg) => f.write_str(msg),
+            JobError::NumericalBreakdown { stage, detail } => {
+                write!(f, "numerical breakdown at {stage}: {detail}")
+            }
             JobError::DeadlineExceeded => {
                 f.write_str("deadline exceeded before any grid point was solved")
             }
@@ -248,6 +276,28 @@ mod tests {
         assert_eq!(r.backoff_for(2), Duration::from_millis(10));
         assert_eq!(r.backoff_for(3), Duration::from_millis(18));
         assert_eq!(r.backoff_for(30), Duration::from_millis(18));
+    }
+
+    #[test]
+    fn breakdown_classification_and_display() {
+        let e = JobError::from_solver(
+            "numerical breakdown at primal-newton: non-finite objective at member 3".into(),
+        );
+        assert_eq!(
+            e,
+            JobError::NumericalBreakdown {
+                stage: "primal-newton".into(),
+                detail: "non-finite objective at member 3".into(),
+            }
+        );
+        assert!(!e.is_transient(), "breakdowns are deterministic; never retried");
+        let s = e.to_string();
+        assert!(s.contains("primal-newton") && s.contains("non-finite"), "{s}");
+        // untagged messages stay opaque solver errors
+        assert_eq!(
+            JobError::from_solver("cholesky failed".into()),
+            JobError::Solver("cholesky failed".into())
+        );
     }
 
     #[test]

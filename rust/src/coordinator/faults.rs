@@ -37,6 +37,11 @@ pub struct FaultPlan {
     /// Grid-point solve ordinals that stall for the given duration
     /// before solving (the deadline-pressure lever).
     pub solve_delays: Vec<(u64, Duration)>,
+    /// Grid-point solve ordinals whose regularisation parameter is
+    /// poisoned with NaN before solving — the non-finite value enters
+    /// the solver's own arithmetic, so the numerical-health guardrails
+    /// (not the injection site) must stop it from reaching a served β.
+    pub solve_nans: Vec<u64>,
 }
 
 impl FaultPlan {
@@ -62,7 +67,26 @@ impl FaultPlan {
                 .into_iter()
                 .map(|k| (k, Duration::from_millis(1 + rng.next_u64() % 5)))
                 .collect(),
+            // NaN poisoning is opt-in (`with_seeded_nans`): a breakdown
+            // is a *deterministic* failure — retrying cannot heal bad
+            // arithmetic — so seeded soak schedules, whose contract is
+            // "every failure is an exhausted transient", stay NaN-free.
+            solve_nans: Vec::new(),
         }
+    }
+
+    /// Add roughly `density` seeded NaN-poisoned solve ordinals over the
+    /// same horizon — the numerical-breakdown soak schedule. Poisoned
+    /// jobs fail (or evict the poisoned member) with
+    /// `NumericalBreakdown`; they never serve a non-finite β.
+    pub fn with_seeded_nans(mut self, seed: u64, horizon: u64, density: usize) -> Self {
+        let mut rng = Rng::seed_from(seed ^ 0x0bad_f00d);
+        let horizon = horizon.max(1);
+        let mut v: Vec<u64> = (0..density).map(|_| rng.next_u64() % horizon).collect();
+        v.sort_unstable();
+        v.dedup();
+        self.solve_nans = v;
+        self
     }
 
     /// True when the plan injects nothing.
@@ -72,6 +96,7 @@ impl FaultPlan {
             && self.segment_panics.is_empty()
             && self.solve_panics.is_empty()
             && self.solve_delays.is_empty()
+            && self.solve_nans.is_empty()
     }
 }
 
@@ -117,8 +142,11 @@ impl FaultState {
 
     /// Called before every grid-point solve. Sleeps and/or panics when
     /// listed (the delay fires first, so a delayed ordinal can also push
-    /// a later ordinal past a deadline).
-    pub fn on_solve(&self) {
+    /// a later ordinal past a deadline). Returns `true` when this
+    /// solve's ordinal is NaN-poisoned: the caller must corrupt the
+    /// solve's regularisation parameter so the guardrail ladder — not
+    /// the injection site — has to catch the non-finite values.
+    pub fn on_solve(&self) -> bool {
         let k = self.solves.fetch_add(1, Ordering::Relaxed);
         if let Some((_, d)) = self.plan.solve_delays.iter().find(|(i, _)| *i == k) {
             std::thread::sleep(*d);
@@ -126,6 +154,7 @@ impl FaultState {
         if self.plan.solve_panics.contains(&k) {
             panic!("injected fault: solve #{k} panics");
         }
+        self.plan.solve_nans.contains(&k)
     }
 }
 
@@ -169,7 +198,20 @@ mod tests {
         });
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| state.on_solve()));
         assert!(r.is_err());
-        state.on_solve(); // ordinal 1 passes
+        assert!(!state.on_solve()); // ordinal 1 passes, unpoisoned
+    }
+
+    #[test]
+    fn listed_solve_nans_poison_exactly_once() {
+        let state = FaultState::new(FaultPlan {
+            solve_nans: vec![1],
+            ..Default::default()
+        });
+        assert!(!state.on_solve()); // ordinal 0
+        assert!(state.on_solve()); // ordinal 1: poisoned
+        assert!(!state.on_solve()); // ordinal 2
+        let plan = FaultPlan { solve_nans: vec![0], ..Default::default() };
+        assert!(!plan.is_empty(), "a NaN-only plan still injects");
     }
 
     #[test]
@@ -180,7 +222,7 @@ mod tests {
         for _ in 0..10 {
             assert!(state.on_prep_build().is_ok());
             state.on_pickup();
-            state.on_solve();
+            assert!(!state.on_solve());
         }
     }
 }

@@ -31,13 +31,19 @@ pub struct Metrics {
     responses_screened_out: AtomicU64,
     responses_early_stopped: AtomicU64,
     segment_handoffs: AtomicU64,
+    segment_handoff_waits: AtomicU64,
     worker_panics: AtomicU64,
     worker_respawns: AtomicU64,
     jobs_truncated: AtomicU64,
     jobs_shed: AtomicU64,
     jobs_retried: AtomicU64,
     deadline_aborts: AtomicU64,
+    intra_solve_aborts: AtomicU64,
     prep_build_failures: AtomicU64,
+    checkpoints_published: AtomicU64,
+    resumed_from_checkpoint: AtomicU64,
+    numerical_breakdowns: AtomicU64,
+    members_evicted: AtomicU64,
     latencies: Mutex<Vec<f64>>,
     queue_waits: Mutex<Vec<f64>>,
 }
@@ -170,6 +176,13 @@ impl Metrics {
         self.segment_handoffs.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A path segment obtained its predecessor's warm start by briefly
+    /// waiting on the hand-off condvar (the predecessor was in flight
+    /// and the pool had other queued work to absorb the pause).
+    pub fn on_segment_handoff_wait(&self) {
+        self.segment_handoff_waits.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A worker caught a panic while executing a job attempt (the job
     /// fails with `WorkerPanic` or retries; the worker survives).
     pub fn on_worker_panic(&self) {
@@ -204,10 +217,45 @@ impl Metrics {
         self.deadline_aborts.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A deadline fired *inside* a batched Newton solve and the sweep
+    /// discarded the half-converged members (the served prefix still
+    /// ends at the last fully completed grid point).
+    pub fn on_intra_solve_abort(&self) {
+        self.intra_solve_aborts.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A preparation build failed or panicked (the failed cache slot is
     /// evicted and every single-flight waiter observes the error).
     pub fn on_prep_build_failure(&self) {
         self.prep_build_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A sweep published per-grid-point checkpoints into its job's
+    /// shared state (`n` = points checkpointed by this work item).
+    pub fn on_checkpoints_published(&self, n: usize) {
+        if n > 0 {
+            self.checkpoints_published.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// A retried work item resumed from a published checkpoint instead
+    /// of re-solving its already-correct prefix.
+    pub fn on_resumed_from_checkpoint(&self) {
+        self.resumed_from_checkpoint.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A non-finite value was caught inside a solve (margins, residuals
+    /// or objective) before it could reach a served β.
+    pub fn on_numerical_breakdown(&self) {
+        self.numerical_breakdowns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Sick members evicted from a fused batch so their siblings could
+    /// finish (counted per evicted member).
+    pub fn on_members_evicted(&self, n: usize) {
+        if n > 0 {
+            self.members_evicted.fetch_add(n as u64, Ordering::Relaxed);
+        }
     }
 
     pub fn submitted(&self) -> u64 {
@@ -286,6 +334,10 @@ impl Metrics {
         self.segment_handoffs.load(Ordering::Relaxed)
     }
 
+    pub fn segment_handoff_waits(&self) -> u64 {
+        self.segment_handoff_waits.load(Ordering::Relaxed)
+    }
+
     pub fn worker_panics(&self) -> u64 {
         self.worker_panics.load(Ordering::Relaxed)
     }
@@ -312,6 +364,26 @@ impl Metrics {
 
     pub fn prep_build_failures(&self) -> u64 {
         self.prep_build_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn intra_solve_aborts(&self) -> u64 {
+        self.intra_solve_aborts.load(Ordering::Relaxed)
+    }
+
+    pub fn checkpoints_published(&self) -> u64 {
+        self.checkpoints_published.load(Ordering::Relaxed)
+    }
+
+    pub fn resumed_from_checkpoint(&self) -> u64 {
+        self.resumed_from_checkpoint.load(Ordering::Relaxed)
+    }
+
+    pub fn numerical_breakdowns(&self) -> u64 {
+        self.numerical_breakdowns.load(Ordering::Relaxed)
+    }
+
+    pub fn members_evicted(&self) -> u64 {
+        self.members_evicted.load(Ordering::Relaxed)
     }
 
     /// End-to-end latency summary (None until something completed).
@@ -369,9 +441,12 @@ impl Metrics {
              cv_folds={} batched_cg_rhs_total={} batch_panel_rebuilds={} \
              responses_total={} responses_screened_out={} \
              responses_early_stopped={} segment_handoffs={} \
+             segment_handoff_waits={} \
              worker_panics={} worker_respawns={} jobs_truncated={} \
              jobs_shed={} jobs_retried={} deadline_aborts={} \
-             prep_build_failures={} {lat}{qw}{kernel}",
+             intra_solve_aborts={} prep_build_failures={} \
+             checkpoints_published={} resumed_from_checkpoint={} \
+             numerical_breakdowns={} members_evicted={} {lat}{qw}{kernel}",
             self.submitted(),
             self.completed(),
             self.failed(),
@@ -391,13 +466,19 @@ impl Metrics {
             self.responses_screened_out(),
             self.responses_early_stopped(),
             self.segment_handoffs(),
+            self.segment_handoff_waits(),
             self.worker_panics(),
             self.worker_respawns(),
             self.jobs_truncated(),
             self.jobs_shed(),
             self.jobs_retried(),
             self.deadline_aborts(),
-            self.prep_build_failures()
+            self.intra_solve_aborts(),
+            self.prep_build_failures(),
+            self.checkpoints_published(),
+            self.resumed_from_checkpoint(),
+            self.numerical_breakdowns(),
+            self.members_evicted()
         )
     }
 }
@@ -435,6 +516,33 @@ mod tests {
         assert!(report.contains("jobs_retried=1"), "{report}");
         assert!(report.contains("deadline_aborts=1"), "{report}");
         assert!(report.contains("prep_build_failures=1"), "{report}");
+    }
+
+    #[test]
+    fn checkpoint_and_guardrail_counters() {
+        let m = Metrics::new();
+        m.on_checkpoints_published(5);
+        m.on_checkpoints_published(0); // no-op
+        m.on_resumed_from_checkpoint();
+        m.on_numerical_breakdown();
+        m.on_numerical_breakdown();
+        m.on_members_evicted(2);
+        m.on_members_evicted(0); // no-op
+        m.on_intra_solve_abort();
+        m.on_segment_handoff_wait();
+        assert_eq!(m.checkpoints_published(), 5);
+        assert_eq!(m.resumed_from_checkpoint(), 1);
+        assert_eq!(m.numerical_breakdowns(), 2);
+        assert_eq!(m.members_evicted(), 2);
+        assert_eq!(m.intra_solve_aborts(), 1);
+        assert_eq!(m.segment_handoff_waits(), 1);
+        let report = m.report();
+        assert!(report.contains("checkpoints_published=5"), "{report}");
+        assert!(report.contains("resumed_from_checkpoint=1"), "{report}");
+        assert!(report.contains("numerical_breakdowns=2"), "{report}");
+        assert!(report.contains("members_evicted=2"), "{report}");
+        assert!(report.contains("intra_solve_aborts=1"), "{report}");
+        assert!(report.contains("segment_handoff_waits=1"), "{report}");
     }
 
     #[test]

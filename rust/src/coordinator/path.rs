@@ -12,10 +12,11 @@ use crate::data::Dataset;
 use crate::linalg::{vecops, Design};
 use crate::solvers::elastic_net::{EnProblem, EnSolution};
 use crate::solvers::glmnet::{self, PathPoint, PathSettings};
+use crate::solvers::svm::SolveCtl;
 use crate::solvers::sven::{
     Sven, SvmBackend, SvmBatchStats, SvmMode, SvmPrep, SvmScratch, SvmWarm,
 };
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// One (t, λ₂) setting of a sweep — the wire form of a grid point (the
 /// reference β and penalized-form parameters stay behind in
@@ -46,6 +47,16 @@ pub struct SweepCtl<'a> {
     pub expired: &'a dyn Fn() -> bool,
     /// Hook before each grid-point solve (fault injection; may panic).
     pub before_solve: &'a dyn Fn(),
+    /// Consulted once per grid-point solve, in solve order, right after
+    /// `before_solve`: `true` poisons that solve's `t` with NaN — the
+    /// fault harness's numerical-breakdown injection. The poisoned NaN
+    /// propagates into the reduced design, trips the solver's
+    /// non-finite guardrails, and must never reach a served β.
+    pub poison: &'a dyn Fn() -> bool,
+    /// Called when the deadline aborted *inside* a solve (at Newton-
+    /// iteration granularity) and its half-converged iterate was
+    /// discarded; the sweep still returns only completed grid points.
+    pub on_intra_abort: &'a dyn Fn(),
 }
 
 impl SweepCtl<'_> {
@@ -58,6 +69,83 @@ impl SweepCtl<'_> {
             (self.before_solve)();
         }
     }
+
+    /// Grid-point `t`, NaN-poisoned when the fault schedule says so.
+    fn poisoned_t(&self, t: f64) -> f64 {
+        if (self.poison)() {
+            f64::NAN
+        } else {
+            t
+        }
+    }
+}
+
+/// Durable progress of one sweep, published into shared job state after
+/// every completed grid point so a retry (worker panic, stall recovery,
+/// deadline shedding) resumes where the dead attempt stopped instead of
+/// re-solving the prefix.
+///
+/// Resume is bit-for-bit: `completed` holds exactly the solutions an
+/// uninterrupted sweep produces for those points (a checkpoint is only
+/// written after a point fully converges — never a half-converged β),
+/// and `warm` is the warm-chain state the next point would have been
+/// seeded with (the primal ignores it; the dual resumes its exact
+/// chain).
+#[derive(Clone, Debug, Default)]
+pub struct SweepCheckpoint {
+    /// Solutions for the completed prefix of the grid, in grid order.
+    pub completed: Vec<EnSolution>,
+    /// Warm-start chain state after the last completed point.
+    pub warm: Option<SvmWarm>,
+    /// Multi-response sweep state ([`sweep_multi_prepared`]); `None`
+    /// for plain sweeps.
+    pub partial: Option<MultiSweepCheckpoint>,
+}
+
+/// [`SweepCheckpoint::partial`]: the point-major multi-response sweep's
+/// full resume state — per-response solved prefixes plus the warm /
+/// early-stop / eviction bookkeeping that shapes the remaining points.
+#[derive(Clone, Debug)]
+pub struct MultiSweepCheckpoint {
+    /// Per-response solved prefixes, indexed like the sweep's `live`.
+    pub paths: Vec<Vec<EnSolution>>,
+    /// Per-response dual warm chains.
+    pub warms: Vec<Option<SvmWarm>>,
+    /// Per-response previous deviance (early-stop plateau detection).
+    pub prev_dev: Vec<Option<f64>>,
+    /// Per-response early-stop point, as in [`MultiSweepOut`].
+    pub stopped: Vec<Option<usize>>,
+    /// Per-response guardrail eviction: `Some(detail)` once a response's
+    /// member hit a numerical breakdown and was retired.
+    pub broken: Vec<Option<String>>,
+    /// Grid points fully completed (the resume position).
+    pub points_done: usize,
+}
+
+impl MultiSweepCheckpoint {
+    fn new(r: usize) -> Self {
+        MultiSweepCheckpoint {
+            paths: (0..r).map(|_| Vec::new()).collect(),
+            warms: vec![None; r],
+            prev_dev: vec![None; r],
+            stopped: vec![None; r],
+            broken: vec![None; r],
+            points_done: 0,
+        }
+    }
+}
+
+/// Shared slot a sweep publishes its [`SweepCheckpoint`] into (and
+/// resumes from) — owned by the job's shared state so every retry
+/// attempt of the same job sees the same slot.
+pub type CheckpointSlot = Mutex<Option<SweepCheckpoint>>;
+
+/// Sentinel error for a numerical breakdown that survived the solver's
+/// degradation ladder, in the exact format
+/// [`JobError::from_solver`](crate::coordinator::admission::JobError)
+/// parses back into `JobError::NumericalBreakdown`.
+fn breakdown_error(stage: String, detail: &str) -> anyhow::Error {
+    anyhow::anyhow!("numerical breakdown at {stage}: {detail}")
 }
 
 /// Primal chunk width under an active [`SweepCtl`]: small enough that a
@@ -93,9 +181,17 @@ const CTL_CHUNK: usize = 8;
 /// primal fast path switches from one whole-grid batch to [`CTL_CHUNK`]-
 /// wide batches so expiry is observed at chunk boundaries — still
 /// bit-identical, since every primal batch member equals its solo cold
-/// solve regardless of how the grid is chunked. A truncated return
-/// (`out.len() < grid.len()`) means the deadline fired; the prefix is
-/// exactly what an uncontrolled sweep produces for those points.
+/// solve regardless of how the grid is chunked. The deadline is also
+/// threaded *into* each solve ([`SolveCtl`]), so expiry mid-point aborts
+/// at Newton-iteration granularity and the half-converged iterate is
+/// discarded. A truncated return (`out.len() < grid.len()`) means the
+/// deadline fired; the prefix is exactly what an uncontrolled sweep
+/// produces for those points.
+///
+/// `checkpoint: Some(slot)` resumes from (and publishes into) the
+/// slot's [`SweepCheckpoint`] after every completed point; a solve that
+/// trips the numerical guardrails fails the sweep with the
+/// `numerical breakdown at …` sentinel error.
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_prepared<B: SvmBackend>(
     sven: &Sven<B>,
@@ -107,42 +203,100 @@ pub fn sweep_prepared<B: SvmBackend>(
     warm0: Option<SvmWarm>,
     warm_start: bool,
     ctl: Option<&SweepCtl<'_>>,
+    checkpoint: Option<&CheckpointSlot>,
 ) -> anyhow::Result<(Vec<EnSolution>, SvmBatchStats)> {
+    // Resume: adopt the published prefix and its warm chain, then sweep
+    // only the remaining suffix. The prefix was checkpointed after each
+    // full convergence, so the concatenation is bit-identical to an
+    // uninterrupted sweep (primal: all cold solves; dual: the exact
+    // warm chain continues from `cp.warm`).
+    let (mut out, mut warm) =
+        match checkpoint.and_then(|slot| slot.lock().expect("checkpoint lock").clone()) {
+            Some(cp) => {
+                let warm = cp.warm.clone();
+                (cp.completed, warm)
+            }
+            None => (Vec::with_capacity(grid.len()), warm0),
+        };
+    let skip = out.len().min(grid.len());
+    let grid = &grid[skip..];
+    let solve_ctl = ctl.map(|c| SolveCtl::new(c.expired));
+    let publish = |sol: &EnSolution, warm: &Option<SvmWarm>| {
+        if let Some(slot) = checkpoint {
+            let mut s = slot.lock().expect("checkpoint lock");
+            let cp = s.get_or_insert_with(SweepCheckpoint::default);
+            cp.completed.push(sol.clone());
+            cp.warm = warm.clone();
+        }
+    };
     let primal_cold =
-        prep.mode() == SvmMode::Primal && warm0.as_ref().map_or(true, |w| w.w.is_none());
+        prep.mode() == SvmMode::Primal && warm.as_ref().map_or(true, |w| w.w.is_none());
     if primal_cold && grid.len() > 1 {
         let Some(ctl) = ctl else {
             let pts: Vec<(f64, f64)> = grid.iter().map(|gp| (gp.t, gp.lambda2)).collect();
-            return sven.solve_prepared_batch(prep, scratch, x, y, &pts);
+            let (sols, stats) = sven.solve_prepared_batch(prep, scratch, x, y, &pts, None)?;
+            for sol in sols {
+                if let Some(msg) = &sol.broken {
+                    return Err(breakdown_error(format!("grid[{}]", out.len()), msg));
+                }
+                publish(&sol, &warm);
+                out.push(sol);
+            }
+            return Ok((out, stats));
         };
-        let mut out = Vec::with_capacity(grid.len());
         let mut stats = SvmBatchStats::default();
         for chunk in grid.chunks(CTL_CHUNK) {
             if ctl.expired() {
                 break;
             }
             ctl.before_solves(chunk.len());
-            let pts: Vec<(f64, f64)> = chunk.iter().map(|gp| (gp.t, gp.lambda2)).collect();
-            let (sols, st) = sven.solve_prepared_batch(prep, scratch, x, y, &pts)?;
+            let pts: Vec<(f64, f64)> =
+                chunk.iter().map(|gp| (ctl.poisoned_t(gp.t), gp.lambda2)).collect();
+            let (sols, st) =
+                sven.solve_prepared_batch(prep, scratch, x, y, &pts, solve_ctl.as_ref())?;
             stats.merge(&st);
-            out.extend(sols);
+            for sol in sols {
+                if sol.aborted {
+                    // Deadline fired inside the chunk's lockstep Newton:
+                    // keep only the completed prefix; later members of
+                    // the chunk (even converged ones) are re-solved cold
+                    // on resume, bit-identically.
+                    (ctl.on_intra_abort)();
+                    return Ok((out, stats));
+                }
+                if let Some(msg) = &sol.broken {
+                    return Err(breakdown_error(format!("grid[{}]", out.len()), msg));
+                }
+                publish(&sol, &warm);
+                out.push(sol);
+            }
         }
         return Ok((out, stats));
     }
-    let mut out = Vec::with_capacity(grid.len());
-    let mut warm: Option<SvmWarm> = warm0;
     for gp in grid {
+        let mut t = gp.t;
         if let Some(ctl) = ctl {
             if ctl.expired() {
                 break;
             }
             ctl.before_solves(1);
+            t = ctl.poisoned_t(t);
         }
-        let prob = EnProblem::shared(x.clone(), y.clone(), gp.t, gp.lambda2);
-        let sol = sven.solve_prepared(prep, scratch, &prob, warm.as_ref())?;
+        let prob = EnProblem::shared(x.clone(), y.clone(), t, gp.lambda2);
+        let sol = sven.solve_prepared(prep, scratch, &prob, warm.as_ref(), solve_ctl.as_ref())?;
+        if sol.aborted {
+            if let Some(ctl) = ctl {
+                (ctl.on_intra_abort)();
+            }
+            break;
+        }
+        if let Some(msg) = &sol.broken {
+            return Err(breakdown_error(format!("grid[{}]", out.len()), msg));
+        }
         if warm_start {
             warm = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
         }
+        publish(&sol, &warm);
         out.push(sol);
     }
     Ok((out, SvmBatchStats::default()))
@@ -163,6 +317,12 @@ pub struct MultiSweepOut {
     /// True when an active [`SweepCtl`] deadline stopped the sweep before
     /// the grid was exhausted.
     pub deadline_hit: bool,
+    /// Per-response numerical-breakdown eviction: `Some(detail)` means
+    /// the response's member tripped the guardrail ladder and was
+    /// retired — its path holds the clean prefix solved before the
+    /// breakdown, and its siblings are unaffected (bit-identical to a
+    /// sweep without the sick member).
+    pub broken: Vec<Option<String>>,
     /// Fusion stats summed over every batched solve of the sweep.
     pub stats: SvmBatchStats,
 }
@@ -188,9 +348,17 @@ pub struct MultiSweepOut {
 /// full paths.
 ///
 /// `ctl: Some(..)` also forces the point-major sweep so the deadline is
-/// observed at grid-point boundaries; a truncated sweep reports how far
-/// it got via [`MultiSweepOut::points_done`] / `deadline_hit`, and the
-/// solved prefixes are bit-identical to the uncontrolled sweep's.
+/// observed at grid-point boundaries (and, via [`SolveCtl`], inside each
+/// solve at Newton-iteration granularity); a truncated sweep reports how
+/// far it got via [`MultiSweepOut::points_done`] / `deadline_hit`, and
+/// the solved prefixes are bit-identical to the uncontrolled sweep's.
+///
+/// `checkpoint: Some(slot)` resumes from / publishes into the slot's
+/// [`MultiSweepCheckpoint`] after each completed point. A member that
+/// trips the numerical guardrails is *evicted* — recorded in
+/// [`MultiSweepOut::broken`], its siblings keep solving (their fused
+/// passes are per-column independent, so eviction never moves a bit of
+/// a healthy member's path).
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_multi_prepared<B: SvmBackend>(
     sven: &Sven<B>,
@@ -202,26 +370,35 @@ pub fn sweep_multi_prepared<B: SvmBackend>(
     grid: &[GridPoint],
     early_stop: Option<f64>,
     ctl: Option<&SweepCtl<'_>>,
+    checkpoint: Option<&CheckpointSlot>,
 ) -> anyhow::Result<MultiSweepOut> {
     let r = live.len();
     let primal = prep.mode() == SvmMode::Primal;
-    let mut paths: Vec<Vec<EnSolution>> =
-        (0..r).map(|_| Vec::with_capacity(grid.len())).collect();
-    let mut stopped: Vec<Option<usize>> = vec![None; r];
+    let solve_ctl = ctl.map(|c| SolveCtl::new(c.expired));
     let mut stats = SvmBatchStats::default();
-    if early_stop.is_none() && ctl.is_none() {
+    if early_stop.is_none() && ctl.is_none() && checkpoint.is_none() {
+        let mut paths: Vec<Vec<EnSolution>> =
+            (0..r).map(|_| Vec::with_capacity(grid.len())).collect();
+        let mut broken: Vec<Option<String>> = vec![None; r];
         if primal && r * grid.len() > 1 {
             let members: Vec<(usize, f64, f64)> = live
                 .iter()
                 .flat_map(|&resp| grid.iter().map(move |gp| (resp, gp.t, gp.lambda2)))
                 .collect();
             let (sols, st) =
-                sven.solve_prepared_batch_multi(prep, scratch, x, responses, &members)?;
+                sven.solve_prepared_batch_multi(prep, scratch, x, responses, &members, None)?;
             stats.merge(&st);
             let mut it = sols.into_iter();
-            for path in paths.iter_mut() {
+            for (i, path) in paths.iter_mut().enumerate() {
                 for _ in 0..grid.len() {
-                    path.push(it.next().expect("one solution per member"));
+                    let sol = it.next().expect("one solution per member");
+                    match (&broken[i], &sol.broken) {
+                        (None, Some(msg)) => broken[i] = Some(msg.clone()),
+                        (None, None) => path.push(sol),
+                        // Past the member's breakdown point: keep only
+                        // the clean prefix.
+                        (Some(_), _) => {}
+                    }
                 }
             }
         } else {
@@ -231,7 +408,11 @@ pub fn sweep_multi_prepared<B: SvmBackend>(
                     let prob =
                         EnProblem::shared(x.clone(), responses[resp].clone(), gp.t, gp.lambda2);
                     let sol =
-                        sven.solve_prepared_response(prep, scratch, &prob, warm.as_ref())?;
+                        sven.solve_prepared_response(prep, scratch, &prob, warm.as_ref(), None)?;
+                    if let Some(msg) = &sol.broken {
+                        broken[i] = Some(msg.clone());
+                        break;
+                    }
                     warm = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
                     paths[i].push(sol);
                 }
@@ -239,22 +420,38 @@ pub fn sweep_multi_prepared<B: SvmBackend>(
         }
         return Ok(MultiSweepOut {
             paths,
-            early_stopped_at: stopped,
+            early_stopped_at: vec![None; r],
             points_done: grid.len(),
             deadline_hit: false,
+            broken,
             stats,
         });
     }
     // Point-major sweep: one grid point at a time across the still-live
     // responses (batched in the primal), retiring plateaued columns the
     // way blocked CG retires converged ones, and observing the deadline
-    // between points.
-    let mut active: Vec<usize> = (0..r).collect();
-    let mut warms: Vec<Option<SvmWarm>> = vec![None; r];
-    let mut prev_dev: Vec<Option<f64>> = vec![None; r];
-    let mut points_done = 0usize;
+    // between points. Resume state (if any) restores the per-response
+    // prefixes, warm chains and retirement bookkeeping exactly as the
+    // dead attempt left them after its last *completed* point.
+    let resumed = checkpoint
+        .and_then(|slot| slot.lock().expect("checkpoint lock").clone())
+        .and_then(|cp| cp.partial);
+    let (mut paths, mut warms, mut prev_dev, mut stopped, mut broken, start_k) = match resumed {
+        Some(p) => (p.paths, p.warms, p.prev_dev, p.stopped, p.broken, p.points_done),
+        None => (
+            (0..r).map(|_| Vec::with_capacity(grid.len())).collect(),
+            vec![None; r],
+            vec![None; r],
+            vec![None; r],
+            vec![None; r],
+            0,
+        ),
+    };
+    let mut active: Vec<usize> =
+        (0..r).filter(|&i| stopped[i].is_none() && broken[i].is_none()).collect();
+    let mut points_done = start_k.min(grid.len());
     let mut deadline_hit = false;
-    for (k, gp) in grid.iter().enumerate() {
+    'points: for (k, gp) in grid.iter().enumerate().skip(points_done) {
         if active.is_empty() {
             break;
         }
@@ -265,28 +462,81 @@ pub fn sweep_multi_prepared<B: SvmBackend>(
             }
             ctl.before_solves(active.len());
         }
+        // Per-member t, NaN-poisoned per the fault schedule (in solve
+        // order, one draw per member).
+        let ts: Vec<f64> = active
+            .iter()
+            .map(|_| ctl.map_or(gp.t, |c| c.poisoned_t(gp.t)))
+            .collect();
+        let mut evicted: Vec<(usize, String)> = Vec::new();
         if primal && active.len() > 1 {
-            let members: Vec<(usize, f64, f64)> =
-                active.iter().map(|&i| (live[i], gp.t, gp.lambda2)).collect();
+            let members: Vec<(usize, f64, f64)> = active
+                .iter()
+                .zip(&ts)
+                .map(|(&i, &t)| (live[i], t, gp.lambda2))
+                .collect();
             let (sols, st) =
-                sven.solve_prepared_batch_multi(prep, scratch, x, responses, &members)?;
+                sven.solve_prepared_batch_multi(prep, scratch, x, responses, &members, solve_ctl.as_ref())?;
             stats.merge(&st);
+            if sols.iter().any(|s| s.aborted) {
+                // Deadline fired inside the fused Newton: discard the
+                // whole point (converged members included — they're
+                // re-solved bit-identically on resume) so every path
+                // stays a prefix of exactly `points_done` points.
+                if let Some(ctl) = ctl {
+                    (ctl.on_intra_abort)();
+                }
+                deadline_hit = true;
+                break 'points;
+            }
             for (&i, sol) in active.iter().zip(sols) {
-                paths[i].push(sol);
+                if let Some(msg) = &sol.broken {
+                    evicted.push((i, msg.clone()));
+                } else {
+                    paths[i].push(sol);
+                }
             }
         } else {
-            for &i in &active {
+            let mut pushed: Vec<usize> = Vec::with_capacity(active.len());
+            for (&i, &t) in active.iter().zip(&ts) {
                 let prob = EnProblem::shared(
                     x.clone(),
                     responses[live[i]].clone(),
-                    gp.t,
+                    t,
                     gp.lambda2,
                 );
-                let sol = sven.solve_prepared_response(prep, scratch, &prob, warms[i].as_ref())?;
+                let sol = sven.solve_prepared_response(
+                    prep,
+                    scratch,
+                    &prob,
+                    warms[i].as_ref(),
+                    solve_ctl.as_ref(),
+                )?;
+                if sol.aborted {
+                    // Roll back the members already solved at this point
+                    // so the point is all-or-nothing (see above).
+                    for &j in &pushed {
+                        paths[j].pop();
+                    }
+                    if let Some(ctl) = ctl {
+                        (ctl.on_intra_abort)();
+                    }
+                    deadline_hit = true;
+                    break 'points;
+                }
+                if let Some(msg) = &sol.broken {
+                    evicted.push((i, msg.clone()));
+                    continue;
+                }
                 warms[i] = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
                 paths[i].push(sol);
+                pushed.push(i);
             }
         }
+        for (i, msg) in &evicted {
+            broken[*i] = Some(msg.clone());
+        }
+        active.retain(|i| broken[*i].is_none());
         points_done = k + 1;
         if let Some(thresh) = early_stop {
             let mut keep = Vec::with_capacity(active.len());
@@ -308,8 +558,30 @@ pub fn sweep_multi_prepared<B: SvmBackend>(
             }
             active = keep;
         }
+        if let Some(slot) = checkpoint {
+            let mut s = slot.lock().expect("checkpoint lock");
+            let cp = s.get_or_insert_with(SweepCheckpoint::default);
+            let part = cp.partial.get_or_insert_with(|| MultiSweepCheckpoint::new(r));
+            for i in 0..r {
+                while part.paths[i].len() < paths[i].len() {
+                    part.paths[i].push(paths[i][part.paths[i].len()].clone());
+                }
+            }
+            part.warms.clone_from(&warms);
+            part.prev_dev.clone_from(&prev_dev);
+            part.stopped.clone_from(&stopped);
+            part.broken.clone_from(&broken);
+            part.points_done = points_done;
+        }
     }
-    Ok(MultiSweepOut { paths, early_stopped_at: stopped, points_done, deadline_hit, stats })
+    Ok(MultiSweepOut {
+        paths,
+        early_stopped_at: stopped,
+        points_done,
+        deadline_hit,
+        broken,
+        stats,
+    })
 }
 
 /// Configuration of a path run.
@@ -408,6 +680,7 @@ impl PathRunner {
             &points,
             None,
             self.config.warm_start,
+            None,
             None,
         )?;
         Ok(grid
@@ -570,9 +843,11 @@ mod tests {
                 &grid,
                 None,
                 None,
+                None,
             )
             .unwrap();
             assert!(multi.early_stopped_at.iter().all(Option::is_none));
+            assert!(multi.broken.iter().all(Option::is_none));
             assert_eq!(multi.points_done, grid.len());
             assert!(!multi.deadline_hit);
             for (i, y) in responses.iter().enumerate() {
@@ -586,6 +861,7 @@ mod tests {
                     &grid,
                     None,
                     true,
+                    None,
                     None,
                 )
                 .unwrap();
@@ -635,6 +911,7 @@ mod tests {
             &grid,
             None,
             None,
+            None,
         )
         .unwrap();
         let stopped = sweep_multi_prepared(
@@ -646,6 +923,7 @@ mod tests {
             &live,
             &grid,
             Some(1.0),
+            None,
             None,
         )
         .unwrap();
@@ -687,13 +965,20 @@ mod tests {
             let prep = sven.prepare_shared(&x, &y).unwrap();
             let mut scratch = SvmScratch::new();
             let (full, _) = sweep_prepared(
-                &sven, prep.as_ref(), &mut scratch, &x, &y, &grid, None, true, None,
+                &sven, prep.as_ref(), &mut scratch, &x, &y, &grid, None, true, None, None,
             )
             .unwrap();
             let solved = Cell::new(0usize);
             let expired = || solved.get() >= budget;
             let before_solve = || solved.set(solved.get() + 1);
-            let ctl = SweepCtl { expired: &expired, before_solve: &before_solve };
+            let no_poison = || false;
+            let no_abort = || {};
+            let ctl = SweepCtl {
+                expired: &expired,
+                before_solve: &before_solve,
+                poison: &no_poison,
+                on_intra_abort: &no_abort,
+            };
             let (trunc, _) = sweep_prepared(
                 &sven,
                 prep.as_ref(),
@@ -704,6 +989,7 @@ mod tests {
                 None,
                 true,
                 Some(&ctl),
+                None,
             )
             .unwrap();
             assert_eq!(trunc.len(), expect_len, "n={n}");
@@ -714,6 +1000,325 @@ mod tests {
                         fs.beta[j].to_bits(),
                         "n={n} pt {k} j={j}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_resumed_from_checkpoint_is_bit_identical() {
+        // Kill the sweep after `budget` solves (deadline), then resume
+        // from the published checkpoint: the concatenation must be
+        // bit-for-bit the uninterrupted sweep, in both regimes.
+        use crate::rng::Rng;
+        use std::cell::Cell;
+        for (n, p) in [(14usize, 20usize), (60, 8)] {
+            let mut rng = Rng::seed_from(209);
+            let x: Arc<Design> =
+                Arc::new(crate::linalg::Mat::from_fn(n, p, |_, _| rng.normal()).into());
+            let y: Arc<Vec<f64>> =
+                Arc::new((0..n).map(|_| rng.normal()).collect::<Vec<f64>>());
+            let grid: Vec<GridPoint> = (0..10)
+                .map(|k| GridPoint { t: 0.1 + 0.08 * k as f64, lambda2: 0.5 })
+                .collect();
+            let sven = Sven::new(RustBackend::default());
+            let prep = sven.prepare_shared(&x, &y).unwrap();
+            let mut scratch = SvmScratch::new();
+            let (full, _) = sweep_prepared(
+                &sven, prep.as_ref(), &mut scratch, &x, &y, &grid, None, true, None, None,
+            )
+            .unwrap();
+            for budget in [1usize, 4, 7] {
+                let slot: CheckpointSlot = Mutex::new(None);
+                let solved = Cell::new(0usize);
+                let expired = || solved.get() >= budget;
+                let before_solve = || solved.set(solved.get() + 1);
+                let no_poison = || false;
+                let no_abort = || {};
+                let ctl = SweepCtl {
+                    expired: &expired,
+                    before_solve: &before_solve,
+                    poison: &no_poison,
+                    on_intra_abort: &no_abort,
+                };
+                let (trunc, _) = sweep_prepared(
+                    &sven,
+                    prep.as_ref(),
+                    &mut scratch,
+                    &x,
+                    &y,
+                    &grid,
+                    None,
+                    true,
+                    Some(&ctl),
+                    Some(&slot),
+                )
+                .unwrap();
+                assert!(trunc.len() < grid.len(), "n={n} budget {budget} not truncated");
+                let published =
+                    slot.lock().unwrap().as_ref().map_or(0, |cp| cp.completed.len());
+                assert_eq!(published, trunc.len(), "n={n} budget {budget}");
+                // Second attempt, fresh ctl that never expires, same slot.
+                let never = || false;
+                let ctl2 = SweepCtl {
+                    expired: &never,
+                    before_solve: &no_abort,
+                    poison: &no_poison,
+                    on_intra_abort: &no_abort,
+                };
+                let (resumed, _) = sweep_prepared(
+                    &sven,
+                    prep.as_ref(),
+                    &mut scratch,
+                    &x,
+                    &y,
+                    &grid,
+                    None,
+                    true,
+                    Some(&ctl2),
+                    Some(&slot),
+                )
+                .unwrap();
+                assert_eq!(resumed.len(), full.len(), "n={n} budget {budget}");
+                for (k, (rs, fs)) in resumed.iter().zip(&full).enumerate() {
+                    for j in 0..p {
+                        assert_eq!(
+                            rs.beta[j].to_bits(),
+                            fs.beta[j].to_bits(),
+                            "n={n} budget {budget} pt {k} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn poisoned_sweep_fails_with_breakdown_sentinel() {
+        // A poison schedule that NaNs the third solve must surface the
+        // `numerical breakdown at …` sentinel, never a served β.
+        use crate::rng::Rng;
+        use std::cell::Cell;
+        for (n, p) in [(14usize, 20usize), (60, 8)] {
+            let mut rng = Rng::seed_from(210);
+            let x: Arc<Design> =
+                Arc::new(crate::linalg::Mat::from_fn(n, p, |_, _| rng.normal()).into());
+            let y: Arc<Vec<f64>> =
+                Arc::new((0..n).map(|_| rng.normal()).collect::<Vec<f64>>());
+            let grid: Vec<GridPoint> = (0..6)
+                .map(|k| GridPoint { t: 0.2 + 0.1 * k as f64, lambda2: 0.5 })
+                .collect();
+            let sven = Sven::new(RustBackend::default());
+            let prep = sven.prepare_shared(&x, &y).unwrap();
+            let mut scratch = SvmScratch::new();
+            let never = || false;
+            let noop = || {};
+            let drawn = Cell::new(0usize);
+            let poison = || {
+                drawn.set(drawn.get() + 1);
+                drawn.get() == 3
+            };
+            let ctl = SweepCtl {
+                expired: &never,
+                before_solve: &noop,
+                poison: &poison,
+                on_intra_abort: &noop,
+            };
+            let err = sweep_prepared(
+                &sven,
+                prep.as_ref(),
+                &mut scratch,
+                &x,
+                &y,
+                &grid,
+                None,
+                true,
+                Some(&ctl),
+                None,
+            )
+            .unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.starts_with("numerical breakdown at grid[2]:"),
+                "n={n} unexpected error: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_sweep_evicts_poisoned_member_and_siblings_stay_bit_identical() {
+        // Poison one member's solve at point 0: that response is evicted
+        // with the breakdown detail recorded, and its siblings' full
+        // paths match the clean sweep bit-for-bit.
+        use crate::rng::Rng;
+        use std::cell::Cell;
+        let grid = [
+            GridPoint { t: 0.3, lambda2: 0.5 },
+            GridPoint { t: 0.6, lambda2: 0.5 },
+            GridPoint { t: 0.9, lambda2: 0.4 },
+        ];
+        for (n, p) in [(14usize, 20usize), (60, 8)] {
+            let mut rng = Rng::seed_from(211);
+            let x: Arc<Design> =
+                Arc::new(crate::linalg::Mat::from_fn(n, p, |_, _| rng.normal()).into());
+            let responses: Vec<Arc<Vec<f64>>> = (0..3)
+                .map(|_| Arc::new((0..n).map(|_| rng.normal()).collect::<Vec<f64>>()))
+                .collect();
+            let sven = Sven::new(RustBackend::default());
+            let prep = sven.prepare_shared(&x, &responses[0]).unwrap();
+            let mut scratch = SvmScratch::new();
+            let live = [0usize, 1, 2];
+            let clean = sweep_multi_prepared(
+                &sven,
+                prep.as_ref(),
+                &mut scratch,
+                &x,
+                &responses,
+                &live,
+                &grid,
+                None,
+                None,
+                None,
+            )
+            .unwrap();
+            let never = || false;
+            let noop = || {};
+            // Point 0 draws members in order 0,1,2 — poison the second.
+            let drawn = Cell::new(0usize);
+            let poison = || {
+                drawn.set(drawn.get() + 1);
+                drawn.get() == 2
+            };
+            let ctl = SweepCtl {
+                expired: &never,
+                before_solve: &noop,
+                poison: &poison,
+                on_intra_abort: &noop,
+            };
+            let sick = sweep_multi_prepared(
+                &sven,
+                prep.as_ref(),
+                &mut scratch,
+                &x,
+                &responses,
+                &live,
+                &grid,
+                None,
+                Some(&ctl),
+                None,
+            )
+            .unwrap();
+            assert!(sick.broken[1].is_some(), "n={n} member not evicted");
+            assert!(sick.paths[1].is_empty(), "n={n} evicted member kept points");
+            assert!(!sick.deadline_hit);
+            assert_eq!(sick.points_done, grid.len());
+            for &i in &[0usize, 2] {
+                assert!(sick.broken[i].is_none(), "n={n} sibling {i} evicted");
+                assert_eq!(sick.paths[i].len(), grid.len());
+                for (k, (ss, cs)) in sick.paths[i].iter().zip(&clean.paths[i]).enumerate() {
+                    for j in 0..p {
+                        assert_eq!(
+                            ss.beta[j].to_bits(),
+                            cs.beta[j].to_bits(),
+                            "n={n} sibling {i} pt {k} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_sweep_resumed_from_checkpoint_is_bit_identical() {
+        use crate::rng::Rng;
+        use std::cell::Cell;
+        let grid: Vec<GridPoint> = (0..5)
+            .map(|k| GridPoint { t: 0.2 + 0.15 * k as f64, lambda2: 0.5 })
+            .collect();
+        for (n, p) in [(14usize, 20usize), (60, 8)] {
+            let mut rng = Rng::seed_from(212);
+            let x: Arc<Design> =
+                Arc::new(crate::linalg::Mat::from_fn(n, p, |_, _| rng.normal()).into());
+            let responses: Vec<Arc<Vec<f64>>> = (0..2)
+                .map(|_| Arc::new((0..n).map(|_| rng.normal()).collect::<Vec<f64>>()))
+                .collect();
+            let sven = Sven::new(RustBackend::default());
+            let prep = sven.prepare_shared(&x, &responses[0]).unwrap();
+            let mut scratch = SvmScratch::new();
+            let live = [0usize, 1];
+            let full = sweep_multi_prepared(
+                &sven,
+                prep.as_ref(),
+                &mut scratch,
+                &x,
+                &responses,
+                &live,
+                &grid,
+                None,
+                None,
+                None,
+            )
+            .unwrap();
+            let slot: CheckpointSlot = Mutex::new(None);
+            let solved = Cell::new(0usize);
+            // Expire after the 4th member-solve: two full points done.
+            let expired = || solved.get() >= 4;
+            let before_solve = || solved.set(solved.get() + 1);
+            let no_poison = || false;
+            let noop = || {};
+            let ctl = SweepCtl {
+                expired: &expired,
+                before_solve: &before_solve,
+                poison: &no_poison,
+                on_intra_abort: &noop,
+            };
+            let trunc = sweep_multi_prepared(
+                &sven,
+                prep.as_ref(),
+                &mut scratch,
+                &x,
+                &responses,
+                &live,
+                &grid,
+                None,
+                Some(&ctl),
+                Some(&slot),
+            )
+            .unwrap();
+            assert!(trunc.deadline_hit, "n={n}");
+            assert!(trunc.points_done < grid.len(), "n={n}");
+            let never = || false;
+            let ctl2 = SweepCtl {
+                expired: &never,
+                before_solve: &noop,
+                poison: &no_poison,
+                on_intra_abort: &noop,
+            };
+            let resumed = sweep_multi_prepared(
+                &sven,
+                prep.as_ref(),
+                &mut scratch,
+                &x,
+                &responses,
+                &live,
+                &grid,
+                None,
+                Some(&ctl2),
+                Some(&slot),
+            )
+            .unwrap();
+            assert_eq!(resumed.points_done, grid.len(), "n={n}");
+            for i in 0..2 {
+                assert_eq!(resumed.paths[i].len(), grid.len(), "n={n} resp {i}");
+                for (k, (rs, fs)) in resumed.paths[i].iter().zip(&full.paths[i]).enumerate()
+                {
+                    for j in 0..p {
+                        assert_eq!(
+                            rs.beta[j].to_bits(),
+                            fs.beta[j].to_bits(),
+                            "n={n} resp {i} pt {k} j={j}"
+                        );
+                    }
                 }
             }
         }

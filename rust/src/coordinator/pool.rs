@@ -113,6 +113,14 @@ impl<J: Send + 'static> Pool<J> {
         self.queue.len()
     }
 
+    /// A shared handle on the pool's queue, for observers that need the
+    /// live backlog from inside worker context (the segment hand-off
+    /// wait gate: a worker only parks for a predecessor when other
+    /// queued work could use the CPU a speculative re-solve would burn).
+    pub(crate) fn queue_handle(&self) -> Arc<Queue<J>> {
+        self.queue.clone()
+    }
+
     /// Stop accepting new jobs (submissions return `Err`); workers keep
     /// draining what is already queued.
     pub fn close(&self) {

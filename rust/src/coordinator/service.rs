@@ -27,12 +27,16 @@ use super::admission::{Admission, CostTicket, JobError, RetryPolicy, SubmitOptio
 use super::cv::{self, CvPathResult};
 use super::faults::{FaultPlan, FaultState};
 use super::metrics::Metrics;
-use super::path::{sweep_multi_prepared, sweep_prepared, GridPoint, SweepCtl};
+use super::path::{
+    sweep_multi_prepared, sweep_prepared, CheckpointSlot, GridPoint, SweepCtl,
+};
 use super::pool::{Pool, PoolConfig};
 use super::prep_cache::PrepCache;
-use super::sync::lock;
+use super::queue::Queue;
+use super::sync::{lock, wait_timeout_while};
 use crate::linalg::{try_resolve_precision, Design, MultiVec, Precision};
 use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
+use crate::solvers::svm::SolveCtl;
 use crate::solvers::sven::{
     RustBackend, Sven, SvenConfig, SvmMode, SvmPrep, SvmScratch, SvmWarm,
 };
@@ -40,7 +44,7 @@ use crate::util::Timer;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 /// Which solver a job should use.
@@ -155,6 +159,12 @@ pub struct MultiResponseResult {
     /// Grid index at which each response's deviance plateaued (its path
     /// still includes that point); `None` ⇒ the full grid was solved.
     pub early_stopped_at: Vec<Option<usize>>,
+    /// Per-response numerical-breakdown eviction: `Some(detail)` means
+    /// the response tripped the guardrail ladder mid-sweep and was
+    /// retired (the member failed, not the batch) — its path holds the
+    /// clean prefix solved before the breakdown, and every sibling's
+    /// path is bit-identical to a sweep without the sick member.
+    pub broken: Vec<Option<String>>,
 }
 
 impl JobResult {
@@ -425,6 +435,66 @@ enum WorkItem {
     MultiSegment(MultiSegment),
 }
 
+/// How long a segment worker parks on its predecessor's hand-off
+/// condvar before falling back to the speculative endpoint re-solve.
+/// Both routes are bit-identical, so the wait only trades this job's
+/// latency against the duplicated endpoint solve's CPU — worth paying
+/// only when the pool has other queued work that CPU could serve.
+const HANDOFF_WAIT: Duration = Duration::from_millis(5);
+
+/// A segment-boundary warm-start hand-off slot. The mutexed slot is the
+/// PR-7 serialize-else-speculate protocol; the condvar lets an eager
+/// successor *wait briefly* for an in-flight predecessor instead of
+/// speculating the moment it finds the slot empty.
+struct Handoff {
+    state: Mutex<HandoffState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct HandoffState {
+    /// The predecessor's endpoint warm start: `None` until published,
+    /// and `None` forever when the predecessor was truncated or failed
+    /// (its last point is not the endpoint the successor's chain
+    /// expects).
+    warm: Option<SvmWarm>,
+    /// True once the predecessor finished its slice — with or without a
+    /// warm start to hand over — so waiters stop waiting either way.
+    done: bool,
+}
+
+impl Handoff {
+    fn new() -> Self {
+        Handoff { state: Mutex::new(HandoffState::default()), cv: Condvar::new() }
+    }
+
+    /// Record the predecessor's outcome and wake every waiter.
+    fn publish(&self, warm: Option<SvmWarm>) {
+        let mut st = lock(&self.state);
+        st.warm = warm;
+        st.done = true;
+        self.cv.notify_all();
+    }
+
+    /// Take the handed-off warm start. `wait: Some(d)` parks up to `d`
+    /// for an unfinished predecessor (a predecessor that never
+    /// publishes — lost to a panic — costs exactly the timeout, never a
+    /// hang). Returns the warm start plus whether this call parked.
+    fn take(&self, wait: Option<Duration>) -> (Option<SvmWarm>, bool) {
+        let st = lock(&self.state);
+        match wait {
+            Some(d) if !st.done => {
+                let mut st = wait_timeout_while(&self.cv, st, d, |s| !s.done);
+                (st.warm.take(), true)
+            }
+            _ => {
+                let mut st = st;
+                (st.warm.take(), false)
+            }
+        }
+    }
+}
+
 /// One segment of a segmented path job: the half-open grid range
 /// `[start, end)` plus a handle on the job-wide shared state.
 struct PathSegment {
@@ -486,8 +556,16 @@ struct SegmentedPath {
     /// Per-segment warm-start hand-off slots: slot k holds segment k−1's
     /// final warm start once that segment lands (slot 0 stays empty —
     /// the first segment starts cold). A segment picking up checks its
-    /// slot before falling back to the speculative endpoint re-solve.
-    handoffs: Vec<Mutex<Option<SvmWarm>>>,
+    /// slot — parking briefly on the condvar when the pool has other
+    /// queued work — before falling back to the speculative endpoint
+    /// re-solve.
+    handoffs: Vec<Handoff>,
+    /// Per-segment sweep checkpoints: retry attempts (worker panics,
+    /// stall recovery, deadline sheds) resume the slice from the last
+    /// completed grid point instead of re-solving the prefix, and a
+    /// deadline shed between attempts still serves the checkpointed
+    /// prefix through assembly's truncation path.
+    checkpoints: Vec<CheckpointSlot>,
 }
 
 impl SegmentedPath {
@@ -608,9 +686,12 @@ struct SharedCvPath {
     /// grid would get).
     nseg: usize,
     /// Fold-major warm-start hand-off slots (`fold · nseg + segment`),
-    /// the same serialize-else-speculate protocol as [`SegmentedPath`]
+    /// the same wait-else-speculate protocol as [`SegmentedPath`]
     /// applied within each fold's chain.
-    handoffs: Vec<Mutex<Option<SvmWarm>>>,
+    handoffs: Vec<Handoff>,
+    /// Fold-major sweep checkpoints (`fold · nseg + segment`), as in
+    /// [`SegmentedPath::checkpoints`].
+    checkpoints: Vec<CheckpointSlot>,
 }
 
 impl SharedCvPath {
@@ -685,10 +766,11 @@ struct MultiSegment {
 }
 
 /// Per-response results of one chunk: solved paths, where (if anywhere)
-/// each response's deviance plateaued, and how many grid points the
-/// chunk finished before a deadline cut it (`grid.len()` when it ran to
-/// completion).
-type MultiPart = (Vec<Vec<EnSolution>>, Vec<Option<usize>>, usize);
+/// each response's deviance plateaued, which responses the guardrail
+/// ladder evicted (with the breakdown detail), and how many grid points
+/// the chunk finished before a deadline cut it (`grid.len()` when it
+/// ran to completion).
+type MultiPart = (Vec<Vec<EnSolution>>, Vec<Option<usize>>, Vec<Option<String>>, usize);
 
 /// The shared screening verdicts of a `MultiResponse` job, computed
 /// once by the first chunk to reach a preparation: per-response λ_max
@@ -730,6 +812,11 @@ struct SharedMultiResponse {
     /// assembles and replies.
     remaining: AtomicUsize,
     first_pickup: Mutex<Option<f64>>,
+    /// Per-chunk sweep checkpoints, as in [`SegmentedPath::checkpoints`]
+    /// — the multi-response checkpoint additionally carries every
+    /// member's warm chain, early-stop and eviction state so a resumed
+    /// chunk continues the point-major sweep bit-identically.
+    checkpoints: Vec<CheckpointSlot>,
 }
 
 impl SharedMultiResponse {
@@ -756,14 +843,16 @@ impl SharedMultiResponse {
         let mut parts = std::mem::take(&mut *lock(&self.parts));
         let mut paths = Vec::with_capacity(self.responses.len());
         let mut stops = Vec::with_capacity(self.responses.len());
+        let mut broken = Vec::with_capacity(self.responses.len());
         let mut completed = self.grid.len();
         let mut err: Option<JobError> = None;
         for part in parts.iter_mut() {
             match part.take() {
-                Some(Ok((chunk_paths, chunk_stops, points_done))) => {
+                Some(Ok((chunk_paths, chunk_stops, chunk_broken, points_done))) => {
                     completed = completed.min(points_done);
                     paths.extend(chunk_paths);
                     stops.extend(chunk_stops);
+                    broken.extend(chunk_broken);
                 }
                 Some(Err(e)) => {
                     err = Some(e);
@@ -785,7 +874,10 @@ impl SharedMultiResponse {
                     if completed < self.grid.len() {
                         // Trim every response to the common prefix; an
                         // early-stop index past the cut is no longer an
-                        // observed plateau of the partial path.
+                        // observed plateau of the partial path. Evicted
+                        // members' paths are already shorter than any
+                        // completed prefix (their breakdown ended them),
+                        // so the trim never touches them.
                         for path in &mut paths {
                             path.truncate(completed);
                         }
@@ -800,6 +892,7 @@ impl SharedMultiResponse {
                         lambda_max: screen.lambda_max.clone(),
                         screened: screen.screened.clone(),
                         early_stopped_at: stops,
+                        broken,
                     });
                     if completed < self.grid.len() {
                         Ok(JobResult::Truncated {
@@ -842,6 +935,11 @@ struct WorkerCtx {
     /// Deterministic fault-injection schedule (test/bench only); `None`
     /// in production.
     faults: Option<Arc<FaultState>>,
+    /// Live view of the pool queue (set once, right after the pool
+    /// spawns): the hand-off wait gate parks for a predecessor only
+    /// when other queued work could use the CPU a speculative endpoint
+    /// re-solve would burn.
+    backlog: Arc<OnceLock<Arc<Queue<WorkItem>>>>,
 }
 
 impl WorkerCtx {
@@ -850,6 +948,7 @@ impl WorkerCtx {
         preps: Arc<PrepCache<PrepKey>>,
         metrics: Arc<Metrics>,
         faults: Option<Arc<FaultState>>,
+        backlog: Arc<OnceLock<Arc<Queue<WorkItem>>>>,
     ) -> Self {
         WorkerCtx {
             rust: Sven::with_config(RustBackend::default(), config.sven.clone()),
@@ -860,7 +959,23 @@ impl WorkerCtx {
             config,
             metrics,
             faults,
+            backlog,
         }
+    }
+
+    /// Work items currently waiting in the pool queue.
+    fn queued_work(&self) -> usize {
+        self.backlog.get().map_or(0, |q| q.len())
+    }
+
+    /// Classify a sweep/solve error string, metering guardrail
+    /// breakdowns as they surface.
+    fn sweep_error(&self, e: anyhow::Error) -> JobError {
+        let err = JobError::from_solver(e.to_string());
+        if matches!(err, JobError::NumericalBreakdown { .. }) {
+            self.metrics.on_numerical_breakdown();
+        }
+        err
     }
 
     /// Fire the per-pickup fault hook (panics on an injected ordinal).
@@ -902,6 +1017,17 @@ impl WorkerCtx {
                 Err(e) if e.is_transient() && attempt < retry.max_attempts && !expired() => {
                     self.metrics.on_job_retried();
                     std::thread::sleep(retry.backoff_for(attempt));
+                    // The backoff sleep counts against the job's wall
+                    // clock: when it burned the rest of the budget,
+                    // shed here instead of launching an attempt that is
+                    // already doomed (and could repeat to max_attempts
+                    // against an expired deadline). Callers holding a
+                    // sweep checkpoint turn this shed into the
+                    // checkpointed prefix.
+                    if expired() {
+                        self.metrics.on_deadline_abort();
+                        return Err(JobError::DeadlineExceeded);
+                    }
                 }
                 other => return other,
             }
@@ -938,6 +1064,14 @@ impl WorkerCtx {
         // Real queue wait: submit → worker pickup (the backpressure
         // signal behind `Metrics::queue_wait_summary`).
         let queue_wait = job.submitted.elapsed();
+        // Per-job sweep checkpoint: it outlives every retry attempt, so
+        // a resumed attempt continues from the last completed grid
+        // point instead of re-solving the prefix. Publishing is gated
+        // on retries being possible — with one attempt there is nothing
+        // to resume, and the default path stays clone-free.
+        let checkpoint = CheckpointSlot::default();
+        let use_checkpoint =
+            job.options.retry.max_attempts > 1 && matches!(job.kind, JobKind::Path { .. });
         let outcome = if deadline_expired(&job.submitted, job.options.deadline) {
             // The whole budget burned in the queue; don't touch a solver.
             self.metrics.on_deadline_abort();
@@ -945,14 +1079,33 @@ impl WorkerCtx {
         } else {
             let deadline = job.options.deadline;
             let submitted = job.submitted.clone();
+            let slot = use_checkpoint.then_some(&checkpoint);
             self.run_attempts(
                 job.options.retry,
                 move || deadline_expired(&submitted, deadline),
                 |ctx| {
                     ctx.fault_pickup();
-                    ctx.solve(&job)
+                    ctx.solve(&job, slot)
                 },
             )
+        };
+        // A deadline shed between attempts still owes the caller every
+        // checkpointed point: serve the prefix as `Truncated`, exactly
+        // as an in-sweep deadline would have.
+        let outcome = match outcome {
+            Err(JobError::DeadlineExceeded) => {
+                let prefix =
+                    lock(&checkpoint).take().map(|cp| cp.completed).unwrap_or_default();
+                match (&job.kind, prefix.is_empty()) {
+                    (JobKind::Path { grid }, false) => Ok(JobResult::Truncated {
+                        completed: prefix.len(),
+                        total: grid.len(),
+                        partial: Box::new(JobResult::Path(prefix)),
+                    }),
+                    _ => Err(JobError::DeadlineExceeded),
+                }
+            }
+            other => other,
         };
         let total = job.submitted.elapsed();
         meter_outcome(&self.metrics, &outcome, total, queue_wait);
@@ -1046,7 +1199,11 @@ impl WorkerCtx {
         Ok(prep)
     }
 
-    fn solve(&mut self, job: &SolveJob) -> Result<JobResult, JobError> {
+    fn solve(
+        &mut self,
+        job: &SolveJob,
+        checkpoint: Option<&CheckpointSlot>,
+    ) -> Result<JobResult, JobError> {
         let prep = match &job.kind {
             JobKind::Point { t, lambda2 } => self.checked_prep(
                 job.dataset_id,
@@ -1071,21 +1228,36 @@ impl WorkerCtx {
         }?;
         match &job.kind {
             JobKind::Point { t, lambda2 } => {
-                if let Some(f) = &self.faults {
-                    f.on_solve();
-                }
-                let prob = EnProblem::shared(job.x.clone(), job.y.clone(), *t, *lambda2);
+                // Exactly one fault draw per solve ordinal: `on_solve`
+                // fires the delay/panic hooks and reports whether this
+                // ordinal's inputs are NaN-poisoned. The poison enters
+                // the solver's own arithmetic through `t`, so the
+                // numerical guardrails — not the injection site — must
+                // stop it from reaching a served β.
+                let poisoned = self.faults.as_ref().is_some_and(|f| f.on_solve());
+                let t = if poisoned { f64::NAN } else { *t };
+                let deadline = job.options.deadline;
+                let submitted = job.submitted.clone();
+                let expired = move || deadline_expired(&submitted, deadline);
+                let sctl =
+                    if deadline.is_some() { Some(SolveCtl::new(&expired)) } else { None };
+                let prob = EnProblem::shared(job.x.clone(), job.y.clone(), t, *lambda2);
                 let sol = match job.backend {
                     BackendChoice::Rust => self.rust.solve_prepared(
                         prep.as_ref(),
                         &mut self.scratch,
                         &prob,
                         None,
+                        sctl.as_ref(),
                     ),
                     BackendChoice::Xla => match self.xla.as_ref() {
-                        Some(xla) => {
-                            xla.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
-                        }
+                        Some(xla) => xla.solve_prepared(
+                            prep.as_ref(),
+                            &mut self.scratch,
+                            &prob,
+                            None,
+                            sctl.as_ref(),
+                        ),
                         None => {
                             return Err(JobError::Internal(
                                 "internal: xla backend missing after ensure".into(),
@@ -1093,7 +1265,21 @@ impl WorkerCtx {
                         }
                     },
                 }
-                .map_err(|e| JobError::Solver(e.to_string()))?;
+                .map_err(|e| self.sweep_error(e))?;
+                if let Some(detail) = &sol.broken {
+                    self.metrics.on_numerical_breakdown();
+                    return Err(JobError::NumericalBreakdown {
+                        stage: "point".to_string(),
+                        detail: detail.clone(),
+                    });
+                }
+                if sol.aborted {
+                    // The deadline fired inside the Newton loop; the
+                    // half-converged iterate is never served.
+                    self.metrics.on_intra_solve_abort();
+                    self.metrics.on_deadline_abort();
+                    return Err(JobError::DeadlineExceeded);
+                }
                 self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
                 Ok(JobResult::Point(sol))
             }
@@ -1101,15 +1287,29 @@ impl WorkerCtx {
                 let deadline = job.options.deadline;
                 let submitted = job.submitted.clone();
                 let faults = self.faults.clone();
+                let metrics = self.metrics.clone();
                 let use_ctl = deadline.is_some() || faults.is_some();
                 let expired = move || deadline_expired(&submitted, deadline);
-                let probe = move || {
-                    if let Some(f) = &faults {
-                        f.on_solve();
-                    }
+                // Fault hooks draw exactly once per solve ordinal,
+                // through the poison closure (`on_solve` fires the
+                // delay/panic hooks and returns the NaN verdict);
+                // `before_solve` stays a no-op so the ordinal cannot
+                // advance twice for one solve.
+                let noop = || {};
+                let poison = move || faults.as_ref().is_some_and(|f| f.on_solve());
+                let on_intra_abort = move || metrics.on_intra_solve_abort();
+                let ctl = SweepCtl {
+                    expired: &expired,
+                    before_solve: &noop,
+                    poison: &poison,
+                    on_intra_abort: &on_intra_abort,
                 };
-                let ctl = SweepCtl { expired: &expired, before_solve: &probe };
                 let ctl_opt = use_ctl.then_some(&ctl);
+                let resumed = checkpoint
+                    .map_or(0, |s| lock(s).as_ref().map_or(0, |cp| cp.completed.len()));
+                if resumed > 0 {
+                    self.metrics.on_resumed_from_checkpoint();
+                }
                 let (sols, batch) = match job.backend {
                     BackendChoice::Rust => sweep_prepared(
                         &self.rust,
@@ -1121,6 +1321,7 @@ impl WorkerCtx {
                         None,
                         true,
                         ctl_opt,
+                        checkpoint,
                     ),
                     BackendChoice::Xla => match self.xla.as_ref() {
                         Some(xla) => sweep_prepared(
@@ -1133,6 +1334,7 @@ impl WorkerCtx {
                             None,
                             true,
                             ctl_opt,
+                            checkpoint,
                         ),
                         None => {
                             return Err(JobError::Internal(
@@ -1141,7 +1343,11 @@ impl WorkerCtx {
                         }
                     },
                 }
-                .map_err(|e| JobError::Solver(e.to_string()))?;
+                .map_err(|e| self.sweep_error(e))?;
+                if checkpoint.is_some() {
+                    self.metrics
+                        .on_checkpoints_published(sols.len().saturating_sub(resumed));
+                }
                 self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
                 for sol in &sols {
                     self.metrics.on_solve_stats(
@@ -1199,6 +1405,22 @@ impl WorkerCtx {
                 },
             )
         };
+        // A deadline shed between retry attempts still owes assembly
+        // the checkpointed slice prefix — the truncation path treats it
+        // exactly like an in-sweep deadline cut.
+        let result = match result {
+            Err(JobError::DeadlineExceeded) => Ok(lock(&sp.checkpoints[seg.index])
+                .take()
+                .map_or_else(Vec::new, |cp| cp.completed)),
+            other => other,
+        };
+        // Wake any successor parked on our hand-off: a failed or short
+        // segment has nothing to hand over.
+        if seg.index + 1 < sp.handoffs.len()
+            && !matches!(&result, Ok(sols) if sols.len() == seg.end - seg.start)
+        {
+            sp.handoffs[seg.index + 1].publish(None);
+        }
         sp.finish_segment(seg.index, result, &self.metrics);
     }
 
@@ -1213,32 +1435,56 @@ impl WorkerCtx {
             &sp.y,
             &sp.grid[lo..seg.end],
         )?;
+        // Resume state: a retry attempt adopts the checkpointed slice
+        // prefix (published by the dead attempt) and skips the warm-up
+        // entirely — the checkpoint's warm chain supersedes both the
+        // hand-off and the speculative endpoint re-solve.
+        let slot = (sp.options.retry.max_attempts > 1).then(|| &sp.checkpoints[seg.index]);
+        let resumed =
+            slot.map_or(0, |s| lock(s).as_ref().map_or(0, |cp| cp.completed.len()));
+        if resumed > 0 {
+            self.metrics.on_resumed_from_checkpoint();
+        }
         // Warm start for the first point: take the predecessor's
-        // handed-off warm start if it already landed; fall back to the
-        // speculative endpoint re-solve only when this worker would
-        // otherwise wait on the predecessor. The two warm starts are
-        // bit-identical — the cold endpoint β equals the chained β (the
-        // `SegmentedPath` invariant) and `beta_to_warm` is a pure
-        // function of it — so the route taken is purely a wall-clock
-        // decision.
+        // handed-off warm start if it already landed — parking briefly
+        // on its condvar when the pool has other queued work that the
+        // speculative re-solve's CPU could serve instead — and fall
+        // back to the speculative endpoint re-solve otherwise. The two
+        // warm starts are bit-identical — the cold endpoint β equals
+        // the chained β (the `SegmentedPath` invariant) and
+        // `beta_to_warm` is a pure function of it — so the route taken
+        // is purely a wall-clock decision.
         let mut warm0: Option<SvmWarm> = None;
-        if seg.start > 0 {
-            if let Some(w) = lock(&sp.handoffs[seg.index]).take() {
+        if seg.start > 0 && resumed == 0 {
+            let wait = (self.queued_work() > 0).then_some(HANDOFF_WAIT);
+            let (w, waited) = sp.handoffs[seg.index].take(wait);
+            if waited {
+                self.metrics.on_segment_handoff_wait();
+            }
+            if let Some(w) = w {
                 self.metrics.on_segment_handoff();
                 warm0 = Some(w);
             }
         }
-        if seg.start > 0 && warm0.is_none() {
+        if seg.start > 0 && warm0.is_none() && resumed == 0 {
             let gp = sp.grid[seg.start - 1];
             let prob = EnProblem::shared(sp.x.clone(), sp.y.clone(), gp.t, gp.lambda2);
             let sol = match sp.backend {
-                BackendChoice::Rust => {
-                    self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
-                }
+                BackendChoice::Rust => self.rust.solve_prepared(
+                    prep.as_ref(),
+                    &mut self.scratch,
+                    &prob,
+                    None,
+                    None,
+                ),
                 BackendChoice::Xla => match self.xla.as_ref() {
-                    Some(xla) => {
-                        xla.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
-                    }
+                    Some(xla) => xla.solve_prepared(
+                        prep.as_ref(),
+                        &mut self.scratch,
+                        &prob,
+                        None,
+                        None,
+                    ),
                     None => {
                         return Err(JobError::Internal(
                             "internal: xla backend missing after ensure".into(),
@@ -1246,7 +1492,7 @@ impl WorkerCtx {
                     }
                 },
             }
-            .map_err(|e| JobError::Solver(e.to_string()))?;
+            .map_err(|e| self.sweep_error(e))?;
             self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
             warm0 = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
         }
@@ -1254,14 +1500,18 @@ impl WorkerCtx {
         let deadline = sp.options.deadline;
         let submitted = sp.submitted.clone();
         let faults = self.faults.clone();
+        let metrics = self.metrics.clone();
         let use_ctl = deadline.is_some() || faults.is_some();
         let expired = move || deadline_expired(&submitted, deadline);
-        let probe = move || {
-            if let Some(f) = &faults {
-                f.on_solve();
-            }
+        let noop = || {};
+        let poison = move || faults.as_ref().is_some_and(|f| f.on_solve());
+        let on_intra_abort = move || metrics.on_intra_solve_abort();
+        let ctl = SweepCtl {
+            expired: &expired,
+            before_solve: &noop,
+            poison: &poison,
+            on_intra_abort: &on_intra_abort,
         };
-        let ctl = SweepCtl { expired: &expired, before_solve: &probe };
         let ctl_opt = use_ctl.then_some(&ctl);
         let (sols, batch) = match sp.backend {
             BackendChoice::Rust => sweep_prepared(
@@ -1274,6 +1524,7 @@ impl WorkerCtx {
                 warm0,
                 true,
                 ctl_opt,
+                slot,
             ),
             BackendChoice::Xla => match self.xla.as_ref() {
                 Some(xla) => sweep_prepared(
@@ -1286,6 +1537,7 @@ impl WorkerCtx {
                     warm0,
                     true,
                     ctl_opt,
+                    slot,
                 ),
                 None => {
                     return Err(JobError::Internal(
@@ -1294,22 +1546,29 @@ impl WorkerCtx {
                 }
             },
         }
-        .map_err(|e| JobError::Solver(e.to_string()))?;
+        .map_err(|e| self.sweep_error(e))?;
+        if slot.is_some() {
+            self.metrics.on_checkpoints_published(sols.len().saturating_sub(resumed));
+        }
         if sols.len() == slice.len() {
             // Hand our endpoint warm start to the successor before
             // metering — the earlier it lands, the likelier the successor
-            // skips its speculative re-solve. A truncated sweep must NOT
-            // hand off: its last point is not the slice endpoint the
-            // successor's chain expects.
+            // skips its speculative re-solve. A truncated sweep hands
+            // off `None`: its last point is not the slice endpoint the
+            // successor's chain expects, but the publish still wakes any
+            // waiter.
             if seg.index + 1 < sp.handoffs.len() {
                 if let Some(sol) = sols.last() {
                     let gp = sp.grid[seg.end - 1];
-                    *lock(&sp.handoffs[seg.index + 1]) =
-                        Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+                    sp.handoffs[seg.index + 1]
+                        .publish(Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) }));
                 }
             }
         } else {
             self.metrics.on_deadline_abort();
+            if seg.index + 1 < sp.handoffs.len() {
+                sp.handoffs[seg.index + 1].publish(None);
+            }
         }
         self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
         for sol in &sols {
@@ -1343,6 +1602,19 @@ impl WorkerCtx {
             )
         };
         let slot = seg.fold * sp.nseg + seg.index;
+        // Deadline shed between attempts → the checkpointed slice
+        // prefix, as in `handle_segment`.
+        let result = match result {
+            Err(JobError::DeadlineExceeded) => Ok(lock(&sp.checkpoints[slot])
+                .take()
+                .map_or_else(Vec::new, |cp| cp.completed)),
+            other => other,
+        };
+        if seg.index + 1 < sp.nseg
+            && !matches!(&result, Ok(sols) if sols.len() == seg.end - seg.start)
+        {
+            sp.handoffs[slot + 1].publish(None);
+        }
         if sp.record(slot, result) {
             // Last part in: assemble under panic isolation too — a panic
             // in the refit must fail this job, not the worker. No retry:
@@ -1375,27 +1647,47 @@ impl WorkerCtx {
         let fold_ds = cv::fold_dataset_id(sp.dataset_id, seg.fold as u64);
         let lo = seg.start.saturating_sub(1);
         let prep = self.checked_prep(fold_ds, sp.backend, &fx, &fy, &sp.grid[lo..seg.end])?;
-        // Serialize-else-speculate, exactly as in `solve_segment`, but
-        // within this fold's chain of hand-off slots.
+        // Wait-else-speculate, exactly as in `solve_segment`, but
+        // within this fold's chain of hand-off and checkpoint slots.
         let slot0 = seg.fold * sp.nseg;
+        let cslot =
+            (sp.options.retry.max_attempts > 1).then(|| &sp.checkpoints[slot0 + seg.index]);
+        let resumed =
+            cslot.map_or(0, |s| lock(s).as_ref().map_or(0, |cp| cp.completed.len()));
+        if resumed > 0 {
+            self.metrics.on_resumed_from_checkpoint();
+        }
         let mut warm0: Option<SvmWarm> = None;
-        if seg.start > 0 {
-            if let Some(w) = lock(&sp.handoffs[slot0 + seg.index]).take() {
+        if seg.start > 0 && resumed == 0 {
+            let wait = (self.queued_work() > 0).then_some(HANDOFF_WAIT);
+            let (w, waited) = sp.handoffs[slot0 + seg.index].take(wait);
+            if waited {
+                self.metrics.on_segment_handoff_wait();
+            }
+            if let Some(w) = w {
                 self.metrics.on_segment_handoff();
                 warm0 = Some(w);
             }
         }
-        if seg.start > 0 && warm0.is_none() {
+        if seg.start > 0 && warm0.is_none() && resumed == 0 {
             let gp = sp.grid[seg.start - 1];
             let prob = EnProblem::shared(fx.clone(), fy.clone(), gp.t, gp.lambda2);
             let sol = match sp.backend {
-                BackendChoice::Rust => {
-                    self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
-                }
+                BackendChoice::Rust => self.rust.solve_prepared(
+                    prep.as_ref(),
+                    &mut self.scratch,
+                    &prob,
+                    None,
+                    None,
+                ),
                 BackendChoice::Xla => match self.xla.as_ref() {
-                    Some(xla) => {
-                        xla.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
-                    }
+                    Some(xla) => xla.solve_prepared(
+                        prep.as_ref(),
+                        &mut self.scratch,
+                        &prob,
+                        None,
+                        None,
+                    ),
                     None => {
                         return Err(JobError::Internal(
                             "internal: xla backend missing after ensure".into(),
@@ -1403,7 +1695,7 @@ impl WorkerCtx {
                     }
                 },
             }
-            .map_err(|e| JobError::Solver(e.to_string()))?;
+            .map_err(|e| self.sweep_error(e))?;
             self.metrics.on_solve_stats(sol.cg_iters, sol.gather_rebuilds, sol.refine_passes);
             warm0 = Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
         }
@@ -1411,14 +1703,18 @@ impl WorkerCtx {
         let deadline = sp.options.deadline;
         let submitted = sp.submitted.clone();
         let faults = self.faults.clone();
+        let metrics = self.metrics.clone();
         let use_ctl = deadline.is_some() || faults.is_some();
         let expired = move || deadline_expired(&submitted, deadline);
-        let probe = move || {
-            if let Some(f) = &faults {
-                f.on_solve();
-            }
+        let noop = || {};
+        let poison = move || faults.as_ref().is_some_and(|f| f.on_solve());
+        let on_intra_abort = move || metrics.on_intra_solve_abort();
+        let ctl = SweepCtl {
+            expired: &expired,
+            before_solve: &noop,
+            poison: &poison,
+            on_intra_abort: &on_intra_abort,
         };
-        let ctl = SweepCtl { expired: &expired, before_solve: &probe };
         let ctl_opt = use_ctl.then_some(&ctl);
         let (sols, batch) = match sp.backend {
             BackendChoice::Rust => sweep_prepared(
@@ -1431,6 +1727,7 @@ impl WorkerCtx {
                 warm0,
                 true,
                 ctl_opt,
+                cslot,
             ),
             BackendChoice::Xla => match self.xla.as_ref() {
                 Some(xla) => sweep_prepared(
@@ -1443,6 +1740,7 @@ impl WorkerCtx {
                     warm0,
                     true,
                     ctl_opt,
+                    cslot,
                 ),
                 None => {
                     return Err(JobError::Internal(
@@ -1451,17 +1749,23 @@ impl WorkerCtx {
                 }
             },
         }
-        .map_err(|e| JobError::Solver(e.to_string()))?;
+        .map_err(|e| self.sweep_error(e))?;
+        if cslot.is_some() {
+            self.metrics.on_checkpoints_published(sols.len().saturating_sub(resumed));
+        }
         if sols.len() == slice.len() {
             if seg.index + 1 < sp.nseg {
                 if let Some(sol) = sols.last() {
                     let gp = sp.grid[seg.end - 1];
-                    *lock(&sp.handoffs[slot0 + seg.index + 1]) =
-                        Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) });
+                    sp.handoffs[slot0 + seg.index + 1]
+                        .publish(Some(SvmWarm { w: None, alpha: Some(sol.beta_to_warm(gp.t)) }));
                 }
             }
         } else {
             self.metrics.on_deadline_abort();
+            if seg.index + 1 < sp.nseg {
+                sp.handoffs[slot0 + seg.index + 1].publish(None);
+            }
         }
         self.metrics.on_batch_stats(batch.batched_rhs, batch.panel_builds);
         for sol in &sols {
@@ -1497,11 +1801,11 @@ impl WorkerCtx {
         let prob = EnProblem::shared(sp.x.clone(), sp.y.clone(), gp.t, gp.lambda2);
         let best = match sp.backend {
             BackendChoice::Rust => {
-                self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
+                self.rust.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None, None)
             }
             BackendChoice::Xla => match self.xla.as_ref() {
                 Some(xla) => {
-                    xla.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None)
+                    xla.solve_prepared(prep.as_ref(), &mut self.scratch, &prob, None, None)
                 }
                 None => {
                     return Err(JobError::Internal(
@@ -1510,7 +1814,7 @@ impl WorkerCtx {
                 }
             },
         }
-        .map_err(|e| JobError::Solver(e.to_string()))?;
+        .map_err(|e| self.sweep_error(e))?;
         self.metrics.on_solve_stats(best.cg_iters, best.gather_rebuilds, best.refine_passes);
         let inner = JobResult::CvPath(CvPathResult { fold_paths, cv_errors, best_index, best });
         if completed < total {
@@ -1536,6 +1840,7 @@ impl WorkerCtx {
             Ok((
                 (seg.start..seg.end).map(|_| Vec::new()).collect(),
                 vec![None; seg.end - seg.start],
+                vec![None; seg.end - seg.start],
                 0,
             ))
         } else {
@@ -1549,6 +1854,15 @@ impl WorkerCtx {
                     ctx.solve_multi_segment(&seg)
                 },
             )
+        };
+        // A retry backoff that burned the deadline still holds whatever
+        // prefix earlier attempts checkpointed — record that instead of
+        // an error so assembly truncates rather than failing the job.
+        let result = match result {
+            Err(JobError::DeadlineExceeded) => {
+                Ok(self.multi_part_from_checkpoint(&sp, &seg))
+            }
+            other => other,
         };
         sp.finish_segment(seg.index, result, &self.metrics);
     }
@@ -1608,17 +1922,30 @@ impl WorkerCtx {
         let screen = self.ensure_screen(sp, prep.mode() == SvmMode::Primal);
         let live: Vec<usize> =
             (seg.start..seg.end).filter(|&r| !screen.screened[r]).collect();
+        let cslot = (sp.options.retry.max_attempts > 1).then(|| &sp.checkpoints[seg.index]);
+        let (resumed_pts, resumed_broken) = cslot.map_or((0, 0), |s| {
+            lock(s).as_ref().and_then(|cp| cp.partial.as_ref()).map_or((0, 0), |p| {
+                (p.points_done, p.broken.iter().filter(|b| b.is_some()).count())
+            })
+        });
+        if resumed_pts > 0 {
+            self.metrics.on_resumed_from_checkpoint();
+        }
         let deadline = sp.options.deadline;
         let submitted = sp.submitted.clone();
         let faults = self.faults.clone();
+        let metrics = self.metrics.clone();
         let use_ctl = deadline.is_some() || faults.is_some();
         let expired = move || deadline_expired(&submitted, deadline);
-        let probe = move || {
-            if let Some(f) = &faults {
-                f.on_solve();
-            }
+        let noop = || {};
+        let poison = move || faults.as_ref().is_some_and(|f| f.on_solve());
+        let on_intra_abort = move || metrics.on_intra_solve_abort();
+        let ctl = SweepCtl {
+            expired: &expired,
+            before_solve: &noop,
+            poison: &poison,
+            on_intra_abort: &on_intra_abort,
         };
-        let ctl = SweepCtl { expired: &expired, before_solve: &probe };
         let ctl_opt = use_ctl.then_some(&ctl);
         let out = sweep_multi_prepared(
             &self.rust,
@@ -1630,9 +1957,21 @@ impl WorkerCtx {
             &sp.grid,
             self.config.multi_response_early_stop,
             ctl_opt,
+            cslot,
         )
-        .map_err(|e| JobError::Solver(e.to_string()))?;
+        .map_err(|e| self.sweep_error(e))?;
         self.metrics.on_batch_stats(out.stats.batched_rhs, out.stats.panel_builds);
+        if cslot.is_some() {
+            self.metrics.on_checkpoints_published(out.points_done.saturating_sub(resumed_pts));
+        }
+        // Guardrail evictions fail the member, not the batch: meter only
+        // the ones this attempt newly retired (a resumed attempt re-sees
+        // evictions already counted before the interruption).
+        let broken_now = out.broken.iter().filter(|b| b.is_some()).count();
+        let newly_evicted = broken_now.saturating_sub(resumed_broken);
+        if newly_evicted > 0 {
+            self.metrics.on_members_evicted(newly_evicted);
+        }
         // `points_done` only means "deadline cut here" when the sweep says
         // so — an all-screened chunk or an every-response early stop also
         // ends the point-major loop short of the grid.
@@ -1642,12 +1981,15 @@ impl WorkerCtx {
         }
         let mut live_paths = out.paths.into_iter();
         let mut live_stops = out.early_stopped_at.into_iter();
+        let mut live_broken = out.broken.into_iter();
         let mut paths = Vec::with_capacity(seg.end - seg.start);
         let mut stops = Vec::with_capacity(seg.end - seg.start);
+        let mut broken = Vec::with_capacity(seg.end - seg.start);
         for r in seg.start..seg.end {
             if screen.screened[r] {
                 paths.push(self.screened_path(sp, r));
                 stops.push(None);
+                broken.push(None);
             } else {
                 let path = live_paths.next().expect("one path per live response");
                 for sol in &path {
@@ -1659,11 +2001,57 @@ impl WorkerCtx {
                 }
                 paths.push(path);
                 stops.push(live_stops.next().expect("one stop flag per live response"));
+                broken.push(live_broken.next().expect("one verdict per live response"));
             }
         }
         self.metrics
             .on_responses_early_stopped(stops.iter().filter(|s| s.is_some()).count());
-        Ok((paths, stops, points_done))
+        Ok((paths, stops, broken, points_done))
+    }
+
+    /// Reconstruct a chunk part from whatever earlier attempts
+    /// checkpointed, for a chunk whose retry loop ran out of deadline.
+    /// Live responses take their checkpointed prefixes; screened
+    /// responses regenerate their synthetic paths (assembly truncates
+    /// every path to the common completed prefix, so full-length
+    /// screened paths are safe). With no checkpoint — or one taken
+    /// before the screen verdicts existed — the part is empty and
+    /// assembly reports the deadline.
+    fn multi_part_from_checkpoint(
+        &self,
+        sp: &SharedMultiResponse,
+        seg: &MultiSegment,
+    ) -> MultiPart {
+        let w = seg.end - seg.start;
+        let empty =
+            || ((0..w).map(|_| Vec::new()).collect(), vec![None; w], vec![None; w], 0);
+        let Some(cp) = lock(&sp.checkpoints[seg.index]).take() else {
+            return empty();
+        };
+        let Some(partial) = cp.partial else {
+            return empty();
+        };
+        let Some(screen) = lock(&sp.screen).clone() else {
+            return empty();
+        };
+        let mut live_paths = partial.paths.into_iter();
+        let mut live_stops = partial.stopped.into_iter();
+        let mut live_broken = partial.broken.into_iter();
+        let mut paths = Vec::with_capacity(w);
+        let mut stops = Vec::with_capacity(w);
+        let mut broken = Vec::with_capacity(w);
+        for r in seg.start..seg.end {
+            if screen.screened[r] {
+                paths.push(self.screened_path(sp, r));
+                stops.push(None);
+                broken.push(None);
+            } else {
+                paths.push(live_paths.next().unwrap_or_default());
+                stops.push(live_stops.next().flatten());
+                broken.push(live_broken.next().flatten());
+            }
+        }
+        (paths, stops, broken, partial.points_done)
     }
 
     /// Path of a screened (exactly-zero, primal-mode) response: β = 0 at
@@ -1697,6 +2085,8 @@ impl WorkerCtx {
                     refine_passes: 0,
                     seconds: 0.0,
                     degenerate: None,
+                    aborted: false,
+                    broken: None,
                 }
             })
             .collect()
@@ -1739,6 +2129,13 @@ impl Service {
             .filter(|plan| !plan.is_empty())
             .map(|plan| Arc::new(FaultState::new(plan.clone())));
         let cfg = config.clone();
+        // Workers probe the pool's live backlog to decide whether a
+        // hand-off wait is worth parking for; the queue only exists once
+        // the pool does, so hand a late-bound cell into the factory and
+        // fill it immediately after spawn (before any job can be
+        // submitted through the not-yet-constructed `Service`).
+        let backlog: Arc<OnceLock<Arc<Queue<WorkItem>>>> = Arc::new(OnceLock::new());
+        let backlog_for_workers = backlog.clone();
         let pool = Pool::spawn_supervised(
             &config.pool,
             move |_wid| {
@@ -1747,6 +2144,7 @@ impl Service {
                     preps_for_workers.clone(),
                     metrics_for_workers.clone(),
                     faults.clone(),
+                    backlog_for_workers.clone(),
                 )
             },
             |ctx: &mut WorkerCtx, item: WorkItem| match item {
@@ -1757,6 +2155,7 @@ impl Service {
             },
             move |_wid| metrics_for_respawn.on_worker_respawn(),
         );
+        let _ = backlog.set(pool.queue_handle());
         Ok(Service {
             pool,
             metrics,
@@ -1965,7 +2364,8 @@ impl Service {
             parts: Mutex::new((0..nseg).map(|_| None).collect()),
             remaining: AtomicUsize::new(nseg),
             first_pickup: Mutex::new(None),
-            handoffs: (0..nseg).map(|_| Mutex::new(None)).collect(),
+            handoffs: (0..nseg).map(|_| Handoff::new()).collect(),
+            checkpoints: (0..nseg).map(|_| CheckpointSlot::default()).collect(),
         });
         // Contiguous ranges, sized as evenly as integer division allows.
         let mut start = 0usize;
@@ -2054,7 +2454,8 @@ impl Service {
             remaining: AtomicUsize::new(folds * nseg),
             first_pickup: Mutex::new(None),
             nseg,
-            handoffs: (0..folds * nseg).map(|_| Mutex::new(None)).collect(),
+            handoffs: (0..folds * nseg).map(|_| Handoff::new()).collect(),
+            checkpoints: (0..folds * nseg).map(|_| CheckpointSlot::default()).collect(),
         });
         'folds: for f in 0..folds {
             let mut start = 0usize;
@@ -2167,6 +2568,7 @@ impl Service {
             parts: Mutex::new((0..nseg).map(|_| None).collect()),
             remaining: AtomicUsize::new(nseg),
             first_pickup: Mutex::new(None),
+            checkpoints: (0..nseg).map(|_| CheckpointSlot::default()).collect(),
         });
         let sizes = segment_sizes(nresp, nseg);
         let mut start = 0usize;

@@ -24,6 +24,23 @@ pub(crate) fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<
     cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
 }
 
+/// Park on `cv` while `condition` holds, for at most `dur`, recovering
+/// the guard on poison — the bounded form behind the segment hand-off
+/// wait (a successor parks briefly for its in-flight predecessor
+/// instead of speculating, and a poisoned or never-publishing
+/// predecessor can only cost the timeout, never a hang).
+pub(crate) fn wait_timeout_while<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: std::time::Duration,
+    condition: impl FnMut(&mut T) -> bool,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout_while(guard, dur, condition) {
+        Ok((g, _timeout)) => g,
+        Err(poisoned) => poisoned.into_inner().0,
+    }
+}
+
 #[cfg(test)]
 #[allow(clippy::unwrap_used)]
 mod tests {

@@ -97,6 +97,11 @@ pub struct CgOutcome {
     pub iters: usize,
     pub rel_residual: f64,
     pub converged: bool,
+    /// A NaN/±∞ was observed in the right-hand side, the curvature
+    /// `pᵀAp`, or the residual — the numerical-health signal the
+    /// degradation ladder keys off (a plain curvature breakdown on a
+    /// PSD-only operator stays `false`).
+    pub non_finite: bool,
 }
 
 /// Reusable CG workspace: the five work vectors (`r`, `ax`, `z`, `p`,
@@ -174,8 +179,9 @@ pub fn cg_solve_with<A: LinOp>(
     let bnorm = vecops::norm2(b);
     if bnorm == 0.0 {
         x.fill(0.0);
-        return CgOutcome { iters: 0, rel_residual: 0.0, converged: true };
+        return CgOutcome { iters: 0, rel_residual: 0.0, converged: true, non_finite: false };
     }
+    let mut non_finite = !bnorm.is_finite();
 
     scratch.resize(n);
     let CgScratch { r, ax, z, p, ap, .. } = scratch;
@@ -199,6 +205,7 @@ pub fn cg_solve_with<A: LinOp>(
         if pap <= 0.0 || !pap.is_finite() {
             // Curvature breakdown: operator only PSD along p; stop with
             // the current (best-so-far) iterate.
+            non_finite = non_finite || !pap.is_finite();
             break;
         }
         let alpha = rz / pap;
@@ -221,7 +228,12 @@ pub fn cg_solve_with<A: LinOp>(
             p[i] = z[i] + beta * p[i];
         }
     }
-    CgOutcome { iters, rel_residual: rel, converged: rel <= opts.tol }
+    CgOutcome {
+        iters,
+        rel_residual: rel,
+        converged: rel <= opts.tol,
+        non_finite: non_finite || !rel.is_finite(),
+    }
 }
 
 /// Result of a mixed-precision refined solve ([`cg_solve_refined`]).
@@ -237,6 +249,10 @@ pub struct RefineOutcome {
     /// Whether refinement stalled and the solve fell back to plain f64
     /// CG from the current iterate.
     pub fell_back: bool,
+    /// A NaN/±∞ survived the full ladder (f32 inner loops → f64
+    /// fallback, with a non-finite iterate reset to zero first): the
+    /// system itself is poisoned, not just the f32 approximation.
+    pub non_finite: bool,
 }
 
 /// Refinement passes are capped here; a solve that has not converged by
@@ -278,7 +294,24 @@ pub fn cg_solve_refined<E: LinOp, F: LinOp>(
     let bnorm = vecops::norm2(b);
     if bnorm == 0.0 {
         x.fill(0.0);
-        return RefineOutcome { cg_iters: 0, refine_passes: 0, converged: true, fell_back: false };
+        return RefineOutcome {
+            cg_iters: 0,
+            refine_passes: 0,
+            converged: true,
+            fell_back: false,
+            non_finite: false,
+        };
+    }
+    if !bnorm.is_finite() {
+        // An ∞ rhs would make `rn ≤ tol·bnorm` compare ∞ ≤ ∞ and declare
+        // spurious convergence; flag the poisoned system immediately.
+        return RefineOutcome {
+            cg_iters: 0,
+            refine_passes: 0,
+            converged: false,
+            fell_back: false,
+            non_finite: true,
+        };
     }
 
     let inner = CgOptions { tol: opts.tol.max(1e-6), max_iter: opts.max_iter };
@@ -292,21 +325,27 @@ pub fn cg_solve_refined<E: LinOp, F: LinOp>(
     let mut cg_iters = cg_solve_with(fast, b, x, &inner, scratch).iters;
     let mut refine_passes = 0usize;
     let mut prev_rn = f64::INFINITY;
-    let (converged, fell_back) = loop {
+    let (converged, fell_back, non_finite) = loop {
         exact.apply(x, &mut rr);
         for i in 0..n {
             rr[i] = b[i] - rr[i];
         }
         let rn = vecops::norm2(&rr);
         if rn <= opts.tol * bnorm {
-            break (true, false);
+            break (true, false, false);
         }
         if rn >= 0.5 * prev_rn || refine_passes >= MAX_REFINE_PASSES || !rn.is_finite() {
             // Stalled (or out of passes): the f32 operator has run out of
-            // digits. Finish in f64 from the current iterate.
+            // digits. Finish in f64 from the current iterate — unless the
+            // iterate itself went non-finite (an f32 overflow can), in
+            // which case restart the f64 solve from zero so a transient
+            // f32 blow-up never poisons the f64 rung of the ladder.
+            if x.iter().any(|v| !v.is_finite()) {
+                x.fill(0.0);
+            }
             let out = cg_solve_with(exact, b, x, opts, scratch);
             cg_iters += out.iters;
-            break (out.converged, true);
+            break (out.converged, true, out.non_finite);
         }
         prev_rn = rn;
         cx.fill(0.0);
@@ -317,7 +356,7 @@ pub fn cg_solve_refined<E: LinOp, F: LinOp>(
     };
     scratch.rr = rr;
     scratch.cx = cx;
-    RefineOutcome { cg_iters, refine_passes, converged, fell_back }
+    RefineOutcome { cg_iters, refine_passes, converged, fell_back, non_finite }
 }
 
 /// Result of a blocked multi-RHS CG solve.
@@ -364,7 +403,11 @@ pub fn cg_solve_multi_with<A: MultiLinOp>(
     assert_eq!((x.rows(), x.ncols()), (n, nprobs), "X shape mismatch");
     assert_eq!(opts.len(), nprobs, "one CgOptions per problem");
 
-    let mut outcomes = vec![CgOutcome { iters: 0, rel_residual: 0.0, converged: false }; nprobs];
+    let mut outcomes =
+        vec![
+            CgOutcome { iters: 0, rel_residual: 0.0, converged: false, non_finite: false };
+            nprobs
+        ];
     let mut done = vec![false; nprobs];
     let mut rz = vec![0.0; nprobs];
     let mut bnorm = vec![0.0; nprobs];
@@ -420,6 +463,12 @@ pub fn cg_solve_multi_with<A: MultiLinOp>(
         if rel <= opts[j].tol {
             outcomes[j].converged = true;
             done[j] = true;
+        } else if !rel.is_finite() {
+            // Poisoned column: solo CG's `while rel > tol` never enters
+            // on a NaN residual, so freezing here keeps bit-parity while
+            // flagging the breakdown.
+            outcomes[j].non_finite = true;
+            done[j] = true;
         } else {
             live += 1;
         }
@@ -463,6 +512,7 @@ pub fn cg_solve_multi_with<A: MultiLinOp>(
             if pap <= 0.0 || !pap.is_finite() {
                 // Curvature breakdown: stop with the best-so-far iterate,
                 // exactly as the solo loop does.
+                outcomes[j].non_finite = outcomes[j].non_finite || !pap.is_finite();
                 done[j] = true;
                 live -= 1;
                 continue;
@@ -475,6 +525,14 @@ pub fn cg_solve_multi_with<A: MultiLinOp>(
             outcomes[j].rel_residual = rel;
             if rel <= opts[j].tol {
                 outcomes[j].converged = true;
+                done[j] = true;
+                live -= 1;
+                continue;
+            }
+            if !rel.is_finite() {
+                // Solo CG exits at the loop head when rel goes NaN (the
+                // comparison is false); freeze the column the same way.
+                outcomes[j].non_finite = true;
                 done[j] = true;
                 live -= 1;
                 continue;
@@ -602,6 +660,68 @@ mod tests {
                 assert_eq!(x1[i].to_bits(), x2[i].to_bits(), "n={n} i={i}");
             }
         }
+    }
+
+    #[test]
+    fn non_finite_rhs_is_flagged() {
+        let a = Mat::eye(4);
+        let mut b = vec![1.0; 4];
+        b[2] = f64::NAN;
+        let mut x = vec![0.0; 4];
+        let out = cg_solve(&DenseOp(&a), &b, &mut x, &CgOptions::default());
+        assert!(out.non_finite, "NaN rhs must trip the guard");
+        assert!(!out.converged);
+        // clean solves never flag
+        let mut xc = vec![0.0; 4];
+        let clean = cg_solve(&DenseOp(&a), &[1.0; 4], &mut xc, &CgOptions::default());
+        assert!(clean.converged && !clean.non_finite);
+    }
+
+    #[test]
+    fn blocked_flags_poisoned_column_and_siblings_stay_bit_clean() {
+        let mut rng = Rng::seed_from(44);
+        let n = 30;
+        let g = random_spd(&mut rng, n);
+        let fam = ShiftedFamily { g: &g, shifts: vec![1.0, 2.0, 0.5] };
+        let mut b = MultiVec::from_fn(n, 3, |_, _| rng.normal());
+        let clean_b1 = b.col(1).to_vec();
+        b.col_mut(1)[0] = f64::NAN;
+        let mut x = MultiVec::zeros(n, 3);
+        let opts = vec![CgOptions::default(); 3];
+        let multi = cg_solve_multi(&fam, &b, &mut x, &opts);
+        assert!(multi.outcomes[1].non_finite, "poisoned column must be flagged");
+        assert!(!multi.outcomes[1].converged);
+        for j in [0usize, 2] {
+            assert!(!multi.outcomes[j].non_finite, "j={j}");
+            let solo_op = ShiftedOp { g: &g, d: fam.shifts[j] };
+            let mut xs = vec![0.0; n];
+            let solo = cg_solve(&solo_op, b.col(j), &mut xs, &CgOptions::default());
+            assert_eq!(solo.iters, multi.outcomes[j].iters, "j={j}");
+            for i in 0..n {
+                assert_eq!(xs[i].to_bits(), x.col(j)[i].to_bits(), "j={j} i={i}");
+            }
+        }
+        let _ = clean_b1;
+    }
+
+    #[test]
+    fn refined_flags_non_finite_system_but_recovers_from_f32_blowup() {
+        let mut rng = Rng::seed_from(45);
+        let n = 12;
+        let a = random_spd(&mut rng, n);
+        let mut b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        b[0] = f64::INFINITY;
+        let mut x = vec![0.0; n];
+        let out = cg_solve_refined(
+            &DenseOp(&a),
+            &RoundedOp(&a),
+            &b,
+            &mut x,
+            &CgOptions::default(),
+            &mut CgScratch::new(),
+        );
+        assert!(out.non_finite, "a poisoned system must be flagged after the full ladder");
+        assert!(!out.converged);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use super::engine::{pad_matrix, pad_vec, sample_mask, unpad_alpha, XlaEngine};
 use crate::linalg::{Design, Mat};
+use crate::solvers::svm::SolveCtl;
 use crate::solvers::sven::{SvmBackend, SvmMode, SvmPrep, SvmScratch, SvmSolve, SvmWarm};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -150,6 +151,7 @@ impl SvmPrep for PreparedXlaPrimal {
         c: f64,
         warm: Option<&SvmWarm>,
         _scratch: &mut SvmScratch,
+        _ctl: Option<&SolveCtl>,
     ) -> Result<SvmSolve> {
         let w0_host = match warm.and_then(|w| w.w.as_ref()) {
             Some(w) => pad_vec(w, self.meta.n),
@@ -172,6 +174,8 @@ impl SvmPrep for PreparedXlaPrimal {
             cg_iters: 0,
             gather_rebuilds: 0,
             refine_passes: 0,
+            aborted: false,
+            broken: None,
         })
     }
 
@@ -204,6 +208,7 @@ impl SvmPrep for PreparedXlaDual {
         c: f64,
         warm: Option<&SvmWarm>,
         _scratch: &mut SvmScratch,
+        _ctl: Option<&SolveCtl>,
     ) -> Result<SvmSolve> {
         let alpha0_host = match warm.and_then(|w| w.alpha.as_ref()) {
             Some(a) => {
@@ -233,6 +238,8 @@ impl SvmPrep for PreparedXlaDual {
             cg_iters: 0,
             gather_rebuilds: 0,
             refine_passes: 0,
+            aborted: false,
+            broken: None,
         })
     }
 

@@ -53,7 +53,11 @@ impl EnProblem {
     /// per-path-point form (two reference-count bumps, nothing else).
     pub fn shared(x: Arc<Design>, y: Arc<Vec<f64>>, t: f64, lambda2: f64) -> Self {
         assert_eq!(x.rows(), y.len(), "X rows must match y length");
-        assert!(t > 0.0, "L1 budget must be positive");
+        // A NaN budget passes through to the solver's numerical-health
+        // guardrails (which classify it as a breakdown, never serving a
+        // non-finite β); zero/negative budgets are caller bugs and
+        // still assert here.
+        assert!(t.is_nan() || t > 0.0, "L1 budget must be positive");
         assert!(lambda2 >= 0.0, "lambda2 must be non-negative");
         EnProblem { x, y, t, lambda2 }
     }
@@ -180,6 +184,15 @@ pub struct EnSolution {
     pub seconds: f64,
     /// Degeneracy flag, if the reduction hit one.
     pub degenerate: Option<Degenerate>,
+    /// The solve was abandoned at an intra-solve deadline boundary
+    /// (Newton round / dual pivot): `beta` is a half-converged iterate
+    /// and must never be served. Sweeps cut back to the last fully
+    /// completed grid point instead.
+    pub aborted: bool,
+    /// The solver's numerical-health guardrail tripped after its
+    /// degradation ladder was exhausted (the message names the stage):
+    /// `beta` may carry non-finite values and must never be served.
+    pub broken: Option<String>,
 }
 
 impl EnSolution {

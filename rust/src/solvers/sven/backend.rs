@@ -23,7 +23,7 @@ use crate::linalg::{resolved_precision, vecops, Design, DesignShadowF32, Mat, Pr
 use crate::solvers::svm::{
     dual_newton, primal_newton, primal_newton_batch, primal_newton_batch_ys,
     samples::reduction_gram, samples::reduction_labels, DualOptions, PrimalBatchPoint,
-    PrimalBatchStats, PrimalOptions, ReducedSamples, SampleSet,
+    PrimalBatchStats, PrimalOptions, ReducedSamples, SampleSet, SolveCtl,
 };
 use std::sync::Arc;
 
@@ -84,6 +84,13 @@ pub struct SvmSolve {
     /// Outer iterative-refinement passes across the solve's Newton
     /// systems (0 ⇒ the solve ran in pure f64).
     pub refine_passes: usize,
+    /// The intra-solve deadline fired and this solve was abandoned at a
+    /// Newton-round / pivot boundary — the iterate must not be served.
+    pub aborted: bool,
+    /// The solver's numerical-health guardrail tripped after its
+    /// degradation ladder was exhausted; the message names the stage.
+    /// The iterate must not be served.
+    pub broken: Option<String>,
 }
 
 /// Per-solve mutable workspace. Everything a solve mutates lives here —
@@ -126,13 +133,17 @@ impl SvmScratch {
 /// mutex before implementing this trait.
 pub trait SvmPrep: Send + Sync {
     /// Solve the reduction SVM at budget `t` and regularization `C`,
-    /// using `scratch` for all mutable state.
+    /// using `scratch` for all mutable state. A `ctl` carries the
+    /// coordinator's intra-solve deadline down to Newton-round / pivot
+    /// granularity: an expired solve comes back flagged `aborted`
+    /// (never an error, never a half-converged iterate served as done).
     fn solve(
         &self,
         t: f64,
         c: f64,
         warm: Option<&SvmWarm>,
         scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<SvmSolve>;
     /// Which formulation this preparation uses.
     fn mode(&self) -> SvmMode;
@@ -150,10 +161,11 @@ pub trait SvmPrep: Send + Sync {
         &self,
         pts: &[(f64, f64)],
         scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
         let mut out = Vec::with_capacity(pts.len());
         for &(t, c) in pts {
-            out.push(self.solve(t, c, None, scratch)?);
+            out.push(self.solve(t, c, None, scratch, ctl)?);
         }
         Ok((out, SvmBatchStats::default()))
     }
@@ -176,8 +188,9 @@ pub trait SvmPrep: Send + Sync {
         responses: &[Arc<Vec<f64>>],
         members: &[(usize, f64, f64)],
         scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
-        let _ = (responses, members, scratch);
+        let _ = (responses, members, scratch, ctl);
         anyhow::bail!("backend does not support multi-response batches")
     }
     /// Solo solve for an override response `y` against this
@@ -193,8 +206,9 @@ pub trait SvmPrep: Send + Sync {
         c: f64,
         warm: Option<&SvmWarm>,
         scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<SvmSolve> {
-        let _ = (y, t, c, warm, scratch);
+        let _ = (y, t, c, warm, scratch, ctl);
         anyhow::bail!("backend does not support response-override solves")
     }
 }
@@ -273,6 +287,19 @@ impl SvmBackend for RustBackend {
     }
 }
 
+fn primal_to_solve(r: crate::solvers::svm::PrimalResult) -> SvmSolve {
+    SvmSolve {
+        alpha: r.alpha,
+        w: Some(r.w),
+        iters: r.newton_iters,
+        cg_iters: r.cg_iters_total,
+        gather_rebuilds: r.gather_rebuilds,
+        refine_passes: r.refine_passes_total,
+        aborted: r.aborted,
+        broken: r.broken,
+    }
+}
+
 struct PreparedPrimal {
     opts: PrimalOptions,
     x: Arc<Design>,
@@ -291,7 +318,25 @@ impl SvmPrep for PreparedPrimal {
         c: f64,
         warm: Option<&SvmWarm>,
         _scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<SvmSolve> {
+        if ctl.is_some() {
+            // A deadline-carrying solo solve routes through the width-1
+            // batch — the only primal engine that polls the ctl — which
+            // is pinned bit-identical to the solo path.
+            let points =
+                [PrimalBatchPoint { t, c, w0: warm.and_then(|w| w.w.clone()) }];
+            let (mut rs, _) = primal_newton_batch(
+                self.x.as_ref(),
+                self.y.as_slice(),
+                &points,
+                &self.opts,
+                self.shadow.as_ref(),
+                ctl,
+            );
+            let r = rs.pop().expect("width-1 batch returns one result");
+            return Ok(primal_to_solve(r));
+        }
         let samples = match &self.shadow {
             Some(sh) => ReducedSamples::with_shadow(self.x.as_ref(), self.y.as_slice(), t, sh),
             None => ReducedSamples::new(self.x.as_ref(), self.y.as_slice(), t),
@@ -299,14 +344,7 @@ impl SvmPrep for PreparedPrimal {
         let labels = reduction_labels(self.x.cols());
         let w0 = warm.and_then(|w| w.w.as_deref());
         let r = primal_newton(&samples, &labels, c, &self.opts, w0);
-        Ok(SvmSolve {
-            alpha: r.alpha,
-            w: Some(r.w),
-            iters: r.newton_iters,
-            cg_iters: r.cg_iters_total,
-            gather_rebuilds: r.gather_rebuilds,
-            refine_passes: r.refine_passes_total,
-        })
+        Ok(primal_to_solve(r))
     }
 
     fn mode(&self) -> SvmMode {
@@ -327,6 +365,7 @@ impl SvmPrep for PreparedPrimal {
         &self,
         pts: &[(f64, f64)],
         _scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
         let points: Vec<PrimalBatchPoint> =
             pts.iter().map(|&(t, c)| PrimalBatchPoint { t, c, w0: None }).collect();
@@ -336,19 +375,9 @@ impl SvmPrep for PreparedPrimal {
             &points,
             &self.opts,
             self.shadow.as_ref(),
+            ctl,
         );
-        let sols = results
-            .into_iter()
-            .map(|r| SvmSolve {
-                alpha: r.alpha,
-                w: Some(r.w),
-                iters: r.newton_iters,
-                cg_iters: r.cg_iters_total,
-                gather_rebuilds: r.gather_rebuilds,
-                refine_passes: r.refine_passes_total,
-            })
-            .collect();
-        Ok((sols, stats))
+        Ok((results.into_iter().map(primal_to_solve).collect(), stats))
     }
 
     fn f32_shadow_bytes(&self) -> usize {
@@ -366,6 +395,7 @@ impl SvmPrep for PreparedPrimal {
         responses: &[Arc<Vec<f64>>],
         members: &[(usize, f64, f64)],
         _scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
         let ys: Vec<&[f64]> = members.iter().map(|&(r, _, _)| responses[r].as_slice()).collect();
         let points: Vec<PrimalBatchPoint> =
@@ -376,19 +406,9 @@ impl SvmPrep for PreparedPrimal {
             &points,
             &self.opts,
             self.shadow.as_ref(),
+            ctl,
         );
-        let sols = results
-            .into_iter()
-            .map(|r| SvmSolve {
-                alpha: r.alpha,
-                w: Some(r.w),
-                iters: r.newton_iters,
-                cg_iters: r.cg_iters_total,
-                gather_rebuilds: r.gather_rebuilds,
-                refine_passes: r.refine_passes_total,
-            })
-            .collect();
-        Ok((sols, stats))
+        Ok((results.into_iter().map(primal_to_solve).collect(), stats))
     }
 
     fn solve_response(
@@ -398,7 +418,25 @@ impl SvmPrep for PreparedPrimal {
         c: f64,
         warm: Option<&SvmWarm>,
         _scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<SvmSolve> {
+        if ctl.is_some() {
+            // Same width-1 batch routing as `solve`: the batched engine
+            // is the one that polls the deadline.
+            let ys = [y];
+            let points =
+                [PrimalBatchPoint { t, c, w0: warm.and_then(|w| w.w.clone()) }];
+            let (mut rs, _) = primal_newton_batch_ys(
+                self.x.as_ref(),
+                &ys,
+                &points,
+                &self.opts,
+                self.shadow.as_ref(),
+                ctl,
+            );
+            let r = rs.pop().expect("width-1 batch returns one result");
+            return Ok(primal_to_solve(r));
+        }
         let samples = match &self.shadow {
             Some(sh) => ReducedSamples::with_shadow(self.x.as_ref(), y, t, sh),
             None => ReducedSamples::new(self.x.as_ref(), y, t),
@@ -406,14 +444,7 @@ impl SvmPrep for PreparedPrimal {
         let labels = reduction_labels(self.x.cols());
         let w0 = warm.and_then(|w| w.w.as_deref());
         let r = primal_newton(&samples, &labels, c, &self.opts, w0);
-        Ok(SvmSolve {
-            alpha: r.alpha,
-            w: Some(r.w),
-            iters: r.newton_iters,
-            cg_iters: r.cg_iters_total,
-            gather_rebuilds: r.gather_rebuilds,
-            refine_passes: r.refine_passes_total,
-        })
+        Ok(primal_to_solve(r))
     }
 }
 
@@ -448,12 +479,13 @@ impl SvmPrep for PreparedDual {
         c: f64,
         warm: Option<&SvmWarm>,
         scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<SvmSolve> {
         let p = self.g0.rows();
         let k = scratch.mat(2 * p, 2 * p);
         self.gram_at_into(t, k);
         let warm_alpha = warm.and_then(|w| w.alpha.as_deref());
-        let r = dual_newton(k, c, &self.opts, warm_alpha);
+        let r = dual_newton(k, c, &self.opts, warm_alpha, ctl);
         // w = Ẑα is cheap and useful for warm starts: Ẑ = [X̂₁, −X̂₂]
         let p = self.x.cols();
         let samples = ReducedSamples::new(self.x.as_ref(), self.y.as_slice(), t);
@@ -470,6 +502,8 @@ impl SvmPrep for PreparedDual {
             cg_iters: 0,
             gather_rebuilds: 0,
             refine_passes: 0,
+            aborted: r.aborted,
+            broken: r.broken,
         })
     }
 
@@ -493,6 +527,7 @@ impl SvmPrep for PreparedDual {
         responses: &[Arc<Vec<f64>>],
         members: &[(usize, f64, f64)],
         scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<(Vec<SvmSolve>, SvmBatchStats)> {
         let p = self.g0.rows();
         let mut cache: Vec<Option<(Vec<f64>, f64)>> = vec![None; responses.len()];
@@ -509,7 +544,7 @@ impl SvmPrep for PreparedDual {
             let s = 1.0 / t;
             let k = scratch.mat(2 * p, 2 * p);
             crate::solvers::svm::samples::assemble_reduction_gram(&self.g0, v, s, s * s * yy, k);
-            let rr = dual_newton(k, c, &self.opts, None);
+            let rr = dual_newton(k, c, &self.opts, None, ctl);
             let samples = ReducedSamples::new(self.x.as_ref(), responses[r].as_slice(), t);
             let mut signed = rr.alpha.clone();
             for sv in signed[p..].iter_mut() {
@@ -524,6 +559,8 @@ impl SvmPrep for PreparedDual {
                 cg_iters: 0,
                 gather_rebuilds: 0,
                 refine_passes: 0,
+                aborted: rr.aborted,
+                broken: rr.broken,
             });
         }
         Ok((out, SvmBatchStats::default()))
@@ -536,6 +573,7 @@ impl SvmPrep for PreparedDual {
         c: f64,
         warm: Option<&SvmWarm>,
         scratch: &mut SvmScratch,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<SvmSolve> {
         let p = self.g0.rows();
         let v = self.x.matvec_t(y);
@@ -544,7 +582,7 @@ impl SvmPrep for PreparedDual {
         let k = scratch.mat(2 * p, 2 * p);
         crate::solvers::svm::samples::assemble_reduction_gram(&self.g0, &v, s, s * s * yy, k);
         let warm_alpha = warm.and_then(|w| w.alpha.as_deref());
-        let r = dual_newton(k, c, &self.opts, warm_alpha);
+        let r = dual_newton(k, c, &self.opts, warm_alpha, ctl);
         let samples = ReducedSamples::new(self.x.as_ref(), y, t);
         let mut signed = r.alpha.clone();
         for sv in signed[p..].iter_mut() {
@@ -559,6 +597,8 @@ impl SvmPrep for PreparedDual {
             cg_iters: 0,
             gather_rebuilds: 0,
             refine_passes: 0,
+            aborted: r.aborted,
+            broken: r.broken,
         })
     }
 }
@@ -622,8 +662,8 @@ mod tests {
         let dual = backend.prepare(&x, &y, SvmMode::Dual).unwrap();
         let (t, c) = (0.8, 5.0);
         let mut scratch = SvmScratch::new();
-        let a = prim.solve(t, c, None, &mut scratch).unwrap().alpha;
-        let b = dual.solve(t, c, None, &mut scratch).unwrap().alpha;
+        let a = prim.solve(t, c, None, &mut scratch, None).unwrap().alpha;
+        let b = dual.solve(t, c, None, &mut scratch, None).unwrap().alpha;
         for i in 0..12 {
             assert!((a[i] - b[i]).abs() < 1e-5, "i={i}: {} vs {}", a[i], b[i]);
         }
@@ -650,8 +690,8 @@ mod tests {
         for mode in [SvmMode::Primal, SvmMode::Dual] {
             let pd = backend.prepare(&dense, &y, mode).unwrap();
             let ps = backend.prepare(&sparse, &y, mode).unwrap();
-            let a = pd.solve(0.7, 4.0, None, &mut scratch).unwrap().alpha;
-            let b = ps.solve(0.7, 4.0, None, &mut scratch).unwrap().alpha;
+            let a = pd.solve(0.7, 4.0, None, &mut scratch, None).unwrap().alpha;
+            let b = ps.solve(0.7, 4.0, None, &mut scratch, None).unwrap().alpha;
             for i in 0..18 {
                 assert!(
                     (a[i] - b[i]).abs() < 1e-6,
@@ -683,8 +723,8 @@ mod tests {
         assert_eq!(f64_prep.f32_shadow_bytes(), 0);
         assert!(mix_prep.f32_shadow_bytes() > 0, "mixed prep holds no shadow");
         let (t, c) = (0.7, 4.0);
-        let a = f64_prep.solve(t, c, None, &mut scratch).unwrap();
-        let b = mix_prep.solve(t, c, None, &mut scratch).unwrap();
+        let a = f64_prep.solve(t, c, None, &mut scratch, None).unwrap();
+        let b = mix_prep.solve(t, c, None, &mut scratch, None).unwrap();
         assert_eq!(a.refine_passes, 0);
         assert!(b.refine_passes > 0, "mixed solve never refined");
         let wa = a.w.as_ref().unwrap();
@@ -693,8 +733,8 @@ mod tests {
             assert!((wa[i] - wb[i]).abs() < 1e-6, "i={i}: {} vs {}", wa[i], wb[i]);
         }
         let pts = [(0.5, 3.0), (0.7, 4.0)];
-        let (bs, _) = mix_prep.solve_batch(&pts, &mut scratch).unwrap();
-        let (fs, _) = f64_prep.solve_batch(&pts, &mut scratch).unwrap();
+        let (bs, _) = mix_prep.solve_batch(&pts, &mut scratch, None).unwrap();
+        let (fs, _) = f64_prep.solve_batch(&pts, &mut scratch, None).unwrap();
         for (sb, sf) in bs.iter().zip(&fs) {
             assert!(sb.refine_passes > 0);
             let (wb, wf) = (sb.w.as_ref().unwrap(), sf.w.as_ref().unwrap());
@@ -720,10 +760,10 @@ mod tests {
         for mode in [SvmMode::Primal, SvmMode::Dual] {
             let prep = backend.prepare(&x, &r0, mode).unwrap();
             let (sols, _) =
-                prep.solve_batch_multi(&responses, &members, &mut scratch).unwrap();
+                prep.solve_batch_multi(&responses, &members, &mut scratch, None).unwrap();
             for (sol, &(r, t, c)) in sols.iter().zip(members.iter()) {
                 let solo_prep = backend.prepare(&x, &responses[r], mode).unwrap();
-                let solo = solo_prep.solve(t, c, None, &mut scratch).unwrap();
+                let solo = solo_prep.solve(t, c, None, &mut scratch, None).unwrap();
                 assert_eq!(sol.alpha.len(), solo.alpha.len());
                 for i in 0..sol.alpha.len() {
                     assert_eq!(
@@ -751,13 +791,13 @@ mod tests {
         let backend = RustBackend::default();
         let prep = backend.prepare(&x, &y, SvmMode::Dual).unwrap();
         let mut scratch = SvmScratch::new();
-        let reference = prep.solve(0.9, 3.0, None, &mut scratch).unwrap().alpha;
+        let reference = prep.solve(0.9, 3.0, None, &mut scratch, None).unwrap().alpha;
         let handles: Vec<_> = (0..3)
             .map(|_| {
                 let prep = prep.clone();
                 std::thread::spawn(move || {
                     let mut scratch = SvmScratch::new();
-                    prep.solve(0.9, 3.0, None, &mut scratch).unwrap().alpha
+                    prep.solve(0.9, 3.0, None, &mut scratch, None).unwrap().alpha
                 })
             })
             .collect();

@@ -28,6 +28,7 @@ use crate::linalg::{
     with_kernel_choice, with_precision, AsDesign, Design, KernelChoice, Precision,
 };
 use crate::solvers::elastic_net::{EnProblem, EnSolution, EnSolverKind};
+use crate::solvers::svm::SolveCtl;
 use crate::util::parallel::{with_parallelism, Parallelism};
 use crate::util::Timer;
 use std::sync::Arc;
@@ -114,7 +115,7 @@ impl<B: SvmBackend> Sven<B> {
     pub fn solve(&self, prob: &EnProblem) -> anyhow::Result<EnSolution> {
         let prepared = self.prepare_shared(&prob.x, &prob.y)?;
         let mut scratch = SvmScratch::new();
-        self.solve_prepared(prepared.as_ref(), &mut scratch, prob, None)
+        self.solve_prepared(prepared.as_ref(), &mut scratch, prob, None, None)
     }
 
     /// Solve with a prepared problem (gram/caches reused across path
@@ -128,11 +129,12 @@ impl<B: SvmBackend> Sven<B> {
         scratch: &mut SvmScratch,
         prob: &EnProblem,
         warm: Option<&SvmWarm>,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<EnSolution> {
         let timer = Timer::start();
         let p = prob.p();
         let c = effective_c(prob.lambda2, self.config.c_cap);
-        let solve = self.scoped(|| prepared.solve(prob.t, c, warm, scratch))?;
+        let solve = self.scoped(|| prepared.solve(prob.t, c, warm, scratch, ctl))?;
         let (beta, degenerate) = backmap(&solve.alpha, p, prob.t);
         let seconds = timer.elapsed();
         let objective = prob.objective(&beta);
@@ -146,6 +148,8 @@ impl<B: SvmBackend> Sven<B> {
             refine_passes: solve.refine_passes,
             seconds,
             degenerate,
+            aborted: solve.aborted,
+            broken: solve.broken,
         })
     }
 
@@ -161,12 +165,14 @@ impl<B: SvmBackend> Sven<B> {
         scratch: &mut SvmScratch,
         prob: &EnProblem,
         warm: Option<&SvmWarm>,
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<EnSolution> {
         let timer = Timer::start();
         let p = prob.p();
         let c = effective_c(prob.lambda2, self.config.c_cap);
-        let solve =
-            self.scoped(|| prepared.solve_response(prob.y.as_slice(), prob.t, c, warm, scratch))?;
+        let solve = self.scoped(|| {
+            prepared.solve_response(prob.y.as_slice(), prob.t, c, warm, scratch, ctl)
+        })?;
         let (beta, degenerate) = backmap(&solve.alpha, p, prob.t);
         let seconds = timer.elapsed();
         let objective = prob.objective(&beta);
@@ -180,6 +186,8 @@ impl<B: SvmBackend> Sven<B> {
             refine_passes: solve.refine_passes,
             seconds,
             degenerate,
+            aborted: solve.aborted,
+            broken: solve.broken,
         })
     }
 
@@ -197,13 +205,14 @@ impl<B: SvmBackend> Sven<B> {
         x: &Arc<Design>,
         y: &Arc<Vec<f64>>,
         points: &[(f64, f64)],
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<(Vec<EnSolution>, SvmBatchStats)> {
         let timer = Timer::start();
         let pts: Vec<(f64, f64)> = points
             .iter()
             .map(|&(t, lambda2)| (t, effective_c(lambda2, self.config.c_cap)))
             .collect();
-        let (solves, stats) = self.scoped(|| prepared.solve_batch(&pts, scratch))?;
+        let (solves, stats) = self.scoped(|| prepared.solve_batch(&pts, scratch, ctl))?;
         let per_point = if points.is_empty() {
             0.0
         } else {
@@ -224,6 +233,8 @@ impl<B: SvmBackend> Sven<B> {
                 refine_passes: solve.refine_passes,
                 seconds: per_point,
                 degenerate,
+                aborted: solve.aborted,
+                broken: solve.broken,
             });
         }
         Ok((out, stats))
@@ -243,6 +254,7 @@ impl<B: SvmBackend> Sven<B> {
         x: &Arc<Design>,
         responses: &[Arc<Vec<f64>>],
         members: &[(usize, f64, f64)],
+        ctl: Option<&SolveCtl>,
     ) -> anyhow::Result<(Vec<EnSolution>, SvmBatchStats)> {
         let timer = Timer::start();
         let pts: Vec<(usize, f64, f64)> = members
@@ -250,7 +262,7 @@ impl<B: SvmBackend> Sven<B> {
             .map(|&(r, t, lambda2)| (r, t, effective_c(lambda2, self.config.c_cap)))
             .collect();
         let (solves, stats) =
-            self.scoped(|| prepared.solve_batch_multi(responses, &pts, scratch))?;
+            self.scoped(|| prepared.solve_batch_multi(responses, &pts, scratch, ctl))?;
         let per_member = if members.is_empty() {
             0.0
         } else {
@@ -271,6 +283,8 @@ impl<B: SvmBackend> Sven<B> {
                 refine_passes: solve.refine_passes,
                 seconds: per_member,
                 degenerate,
+                aborted: solve.aborted,
+                broken: solve.broken,
             });
         }
         Ok((out, stats))
@@ -547,7 +561,7 @@ mod tests {
         for pt in active {
             let prob = EnProblem::new(x.clone(), y.clone(), pt.t, pt.lambda2.max(1e-4));
             let via_prep = sven
-                .solve_prepared(prep.as_ref(), &mut scratch, &prob, warm.as_ref())
+                .solve_prepared(prep.as_ref(), &mut scratch, &prob, warm.as_ref(), None)
                 .unwrap();
             let oneshot = sven.solve(&prob).unwrap();
             for j in 0..12 {

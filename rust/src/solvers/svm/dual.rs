@@ -40,6 +40,13 @@ pub struct DualResult {
     pub converged: bool,
     /// Dual objective at `alpha`.
     pub objective: f64,
+    /// The intra-solve deadline fired at a pivot boundary and the solve
+    /// stopped on a half-converged iterate — never serve this `alpha`.
+    pub aborted: bool,
+    /// A non-finite value (NaN C, poisoned gram, non-finite gradient or
+    /// objective) tripped the numerical-health guard; the message names
+    /// what broke. Never serve this `alpha`.
+    pub broken: Option<String>,
 }
 
 /// Gradient `g = 2Kα + α/C − 2` (only for entries in `idx` if given).
@@ -60,11 +67,29 @@ fn objective(k: &Mat, alpha: &[f64], c: f64) -> f64 {
 }
 
 /// Solve the non-negative dual QP given the gram matrix `K` (m × m).
-/// `warm` seeds the free set (entries > 0).
-pub fn dual_newton(k: &Mat, c: f64, opts: &DualOptions, warm: Option<&[f64]>) -> DualResult {
+/// `warm` seeds the free set (entries > 0). `ctl` (when given) is
+/// polled at pivot boundaries: an expired deadline aborts the solve and
+/// flags the result instead of finishing the active-set walk.
+pub fn dual_newton(
+    k: &Mat,
+    c: f64,
+    opts: &DualOptions,
+    warm: Option<&[f64]>,
+    ctl: Option<&super::SolveCtl>,
+) -> DualResult {
     let m = k.rows();
     assert_eq!(k.cols(), m);
     let mut alpha = vec![0.0; m];
+    if !c.is_finite() {
+        return DualResult {
+            alpha,
+            pivots: 0,
+            converged: false,
+            objective: f64::NAN,
+            aborted: false,
+            broken: Some(format!("non-finite regularisation parameter C = {c}")),
+        };
+    }
     let mut free: Vec<bool> = vec![false; m];
     if let Some(w) = warm {
         assert_eq!(w.len(), m);
@@ -94,8 +119,16 @@ pub fn dual_newton(k: &Mat, c: f64, opts: &DualOptions, warm: Option<&[f64]>) ->
     let mut g = vec![0.0; m];
     let mut pivots = 0usize;
     let mut converged = false;
+    let mut aborted = false;
+    let mut broken: Option<String> = None;
 
     while pivots < opts.max_pivots {
+        if ctl.is_some_and(|c| c.expired()) {
+            // Deadline at pivot granularity: abandon the half-converged
+            // iterate — the caller serves the last completed grid point.
+            aborted = true;
+            break;
+        }
         // ---- solve equality-constrained subproblem on F -----------------
         let idx: Vec<usize> = (0..m).filter(|&i| free[i]).collect();
         if idx.is_empty() {
@@ -176,6 +209,15 @@ pub fn dual_newton(k: &Mat, c: f64, opts: &DualOptions, warm: Option<&[f64]>) ->
 
         // ---- KKT check -----------------------------------------------
         gradient(k, &alpha, c, &mut g);
+        if g.iter().any(|v| !v.is_finite()) {
+            // A poisoned gram row or α went non-finite. `f64::max` folds
+            // would silently drop the NaN (max returns the non-NaN
+            // operand), so check entries explicitly — then flag and stop
+            // before another pivot launders the NaN into a "converged"
+            // iterate.
+            broken = Some("non-finite KKT gradient".into());
+            break;
+        }
         let gscale = 1.0f64.max(g.iter().fold(0.0f64, |a, v| a.max(v.abs())));
         let mut worst = -opts.tol * gscale;
         let mut worst_i = None;
@@ -227,7 +269,12 @@ pub fn dual_newton(k: &Mat, c: f64, opts: &DualOptions, warm: Option<&[f64]>) ->
     }
 
     let obj = objective(k, &alpha, c);
-    DualResult { alpha, pivots, converged, objective: obj }
+    if broken.is_none() && !aborted && (!obj.is_finite() || alpha.iter().any(|a| !a.is_finite()))
+    {
+        broken = Some("non-finite dual objective or iterate".into());
+        converged = false;
+    }
+    DualResult { alpha, pivots, converged, objective: obj, aborted, broken }
 }
 
 #[cfg(test)]
@@ -257,7 +304,7 @@ mod tests {
     fn kkt_holds_at_solution() {
         let (_, _, k) = random_problem(14, 5, 141);
         let c = 1.3;
-        let r = dual_newton(&k, c, &DualOptions::default(), None);
+        let r = dual_newton(&k, c, &DualOptions::default(), None, None);
         assert!(r.converged);
         let mut g = vec![0.0; 14];
         gradient(&k, &r.alpha, c, &mut g);
@@ -274,7 +321,7 @@ mod tests {
     fn matches_primal_solution() {
         let (s, y, k) = random_problem(12, 4, 142);
         let c = 2.0;
-        let dual = dual_newton(&k, c, &DualOptions::default(), None);
+        let dual = dual_newton(&k, c, &DualOptions::default(), None, None);
         let primal = primal_newton(&s, &y, c, &PrimalOptions::default(), None);
         // w = Σ ŷᵢ αᵢ x̂ᵢ must match the primal w
         let ya: Vec<f64> = (0..12).map(|i| y[i] * dual.alpha[i]).collect();
@@ -303,8 +350,8 @@ mod tests {
     fn warm_start_reduces_pivots() {
         let (_, _, k) = random_problem(20, 6, 143);
         let c = 1.0;
-        let cold = dual_newton(&k, c, &DualOptions::default(), None);
-        let warm = dual_newton(&k, c, &DualOptions::default(), Some(&cold.alpha));
+        let cold = dual_newton(&k, c, &DualOptions::default(), None, None);
+        let warm = dual_newton(&k, c, &DualOptions::default(), Some(&cold.alpha), None);
         assert!(warm.pivots <= cold.pivots);
         for i in 0..20 {
             assert!((warm.alpha[i] - cold.alpha[i]).abs() < 1e-8);
@@ -314,14 +361,53 @@ mod tests {
     #[test]
     fn objective_decreases_vs_zero() {
         let (_, _, k) = random_problem(10, 3, 144);
-        let r = dual_newton(&k, 1.0, &DualOptions::default(), None);
+        let r = dual_newton(&k, 1.0, &DualOptions::default(), None, None);
         assert!(r.objective < 0.0, "dual optimum must beat α = 0 (obj 0)");
     }
 
     #[test]
     fn alpha_nonnegative() {
         let (_, _, k) = random_problem(25, 7, 145);
-        let r = dual_newton(&k, 5.0, &DualOptions::default(), None);
+        let r = dual_newton(&k, 5.0, &DualOptions::default(), None, None);
         assert!(r.alpha.iter().all(|a| *a >= 0.0));
+        assert!(!r.aborted && r.broken.is_none());
+    }
+
+    #[test]
+    fn nan_c_trips_the_guardrail() {
+        let (_, _, k) = random_problem(10, 3, 146);
+        let r = dual_newton(&k, f64::NAN, &DualOptions::default(), None, None);
+        assert!(r.broken.is_some(), "NaN C must be flagged, not served");
+        assert!(!r.converged);
+    }
+
+    #[test]
+    fn poisoned_gram_trips_the_guardrail() {
+        let (_, _, mut k) = random_problem(12, 4, 147);
+        k.set(3, 3, f64::NAN);
+        let r = dual_newton(&k, 1.0, &DualOptions::default(), None, None);
+        assert!(r.broken.is_some(), "poisoned K must be flagged, not served");
+        assert!(!r.converged);
+    }
+
+    #[test]
+    fn expired_ctl_aborts_at_pivot_boundary() {
+        use super::super::SolveCtl;
+        let (_, _, k) = random_problem(20, 6, 148);
+        let always = || true;
+        let ctl = SolveCtl::new(&always);
+        let r = dual_newton(&k, 1.0, &DualOptions::default(), None, Some(&ctl));
+        assert!(r.aborted, "an already-expired ctl must abort before the first pivot");
+        assert!(!r.converged);
+        assert_eq!(r.pivots, 0);
+        // a never-expiring ctl is bit-identical to no ctl at all
+        let never = || false;
+        let ctl = SolveCtl::new(&never);
+        let with = dual_newton(&k, 1.0, &DualOptions::default(), None, Some(&ctl));
+        let without = dual_newton(&k, 1.0, &DualOptions::default(), None, None);
+        assert_eq!(with.pivots, without.pivots);
+        for i in 0..with.alpha.len() {
+            assert_eq!(with.alpha[i].to_bits(), without.alpha[i].to_bits(), "i={i}");
+        }
     }
 }

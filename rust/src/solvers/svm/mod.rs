@@ -20,6 +20,29 @@ pub mod dual;
 pub mod primal;
 pub mod samples;
 
+/// Intra-solve control: the coordinator's deadline threaded down to
+/// Newton-iteration granularity. `expired` is polled at primal Newton
+/// *round* and dual *pivot* boundaries; when it fires the solver
+/// abandons its half-converged members and returns them flagged
+/// `aborted`, so a sweep can cut at the last fully *completed* grid
+/// point instead of blowing the deadline by an entire solve. Passing
+/// `None` is the uncontrolled fast path.
+pub struct SolveCtl<'a> {
+    expired: &'a dyn Fn() -> bool,
+}
+
+impl<'a> SolveCtl<'a> {
+    pub fn new(expired: &'a dyn Fn() -> bool) -> Self {
+        SolveCtl { expired }
+    }
+
+    /// Poll the deadline — cheap, once per round/pivot, never inside
+    /// the fused kernels.
+    pub fn expired(&self) -> bool {
+        (self.expired)()
+    }
+}
+
 pub use dual::{dual_newton, DualOptions, DualResult};
 pub use primal::{
     primal_newton, primal_newton_batch, primal_newton_batch_ys, PrimalBatchPoint,

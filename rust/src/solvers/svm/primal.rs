@@ -84,6 +84,15 @@ pub struct PrimalResult {
     pub converged: bool,
     /// Final objective value.
     pub objective: f64,
+    /// The intra-solve deadline ([`super::SolveCtl`]) fired at a Newton
+    /// round boundary and this member was abandoned half-converged —
+    /// never serve this iterate.
+    pub aborted: bool,
+    /// The numerical-health guard tripped (non-finite margins, gradient
+    /// or objective) after the degradation ladder — f64 re-solve, then
+    /// a masked full-matrix re-solve — was exhausted. The message names
+    /// the stage. Never serve this iterate.
+    pub broken: Option<String>,
 }
 
 /// Hessian operator `v ↦ v + 2C·X̂ᵀ(sv_mask ⊙ (X̂·v))` over the *full*
@@ -171,10 +180,17 @@ impl<S: SampleSet> LinOp for GatheredHess<'_, S> {
 }
 
 /// Solve one Newton system `H·δ = rhs` through whichever operator form
-/// the caller picked (masked full-matrix or gathered panel), in pure
-/// f64 or — when `mixed` — with the f32 operator inside f64 iterative
-/// refinement ([`cg_solve_refined`]), which meets the same `cg.tol`
-/// contract. Returns `(cg_iters, refine_passes)`.
+/// the caller picked (gathered panel when `panel` is present, masked
+/// full-matrix otherwise), in pure f64 or — when `mixed` — with the f32
+/// operator inside f64 iterative refinement ([`cg_solve_refined`]),
+/// which meets the same `cg.tol` contract. Returns
+/// `(cg_iters, refine_passes, non_finite)`.
+///
+/// Degradation ladder: refinement already retries an f32 stall in f64;
+/// on top of that, a gathered solve that reports non-finite values
+/// re-solves once from zero on the masked full-matrix f64 operator
+/// (when the caller supplied the mask) before the member is failed —
+/// `non_finite = true` in the return means the ladder is exhausted.
 #[allow(clippy::too_many_arguments)]
 fn solve_direction<S: SampleSet>(
     samples: &S,
@@ -188,31 +204,39 @@ fn solve_direction<S: SampleSet>(
     scratch: &mut CgScratch,
     buf: &RefCell<Vec<f64>>,
     fbuf: &RefCell<Vec<f32>>,
-) -> (usize, usize) {
-    match (sv_mask, panel) {
-        (Some(mask), None) => {
-            let exact =
-                MaskedHess { samples, sv_mask: mask, two_c, buf, mixed: false, fbuf };
-            if mixed {
-                let fast =
-                    MaskedHess { samples, sv_mask: mask, two_c, buf, mixed: true, fbuf };
-                let out = cg_solve_refined(&exact, &fast, rhs, delta, cg, scratch);
-                (out.cg_iters, out.refine_passes)
-            } else {
-                (cg_solve_with(&exact, rhs, delta, cg, scratch).iters, 0)
+) -> (usize, usize, bool) {
+    if let Some(panel) = panel {
+        let exact = GatheredHess { samples, panel, two_c, buf, mixed: false, fbuf };
+        let (mut iters, passes, mut non_finite) = if mixed {
+            let fast = GatheredHess { samples, panel, two_c, buf, mixed: true, fbuf };
+            let out = cg_solve_refined(&exact, &fast, rhs, delta, cg, scratch);
+            (out.cg_iters, out.refine_passes, out.non_finite)
+        } else {
+            let out = cg_solve_with(&exact, rhs, delta, cg, scratch);
+            (out.iters, 0, out.non_finite)
+        };
+        if non_finite {
+            if let Some(mask) = sv_mask {
+                delta.fill(0.0);
+                let exact =
+                    MaskedHess { samples, sv_mask: mask, two_c, buf, mixed: false, fbuf };
+                let out = cg_solve_with(&exact, rhs, delta, cg, scratch);
+                iters += out.iters;
+                non_finite = out.non_finite;
             }
         }
-        (None, Some(panel)) => {
-            let exact = GatheredHess { samples, panel, two_c, buf, mixed: false, fbuf };
-            if mixed {
-                let fast = GatheredHess { samples, panel, two_c, buf, mixed: true, fbuf };
-                let out = cg_solve_refined(&exact, &fast, rhs, delta, cg, scratch);
-                (out.cg_iters, out.refine_passes)
-            } else {
-                (cg_solve_with(&exact, rhs, delta, cg, scratch).iters, 0)
-            }
+        (iters, passes, non_finite)
+    } else {
+        let mask = sv_mask.expect("masked form needs the SV mask");
+        let exact = MaskedHess { samples, sv_mask: mask, two_c, buf, mixed: false, fbuf };
+        if mixed {
+            let fast = MaskedHess { samples, sv_mask: mask, two_c, buf, mixed: true, fbuf };
+            let out = cg_solve_refined(&exact, &fast, rhs, delta, cg, scratch);
+            (out.cg_iters, out.refine_passes, out.non_finite)
+        } else {
+            let out = cg_solve_with(&exact, rhs, delta, cg, scratch);
+            (out.iters, 0, out.non_finite)
         }
-        _ => unreachable!("exactly one of sv_mask/panel selects the operator form"),
     }
 }
 
@@ -277,8 +301,15 @@ pub fn primal_newton<S: SampleSet>(
     let mut gather_rebuilds = 0usize;
     let mut refine_total = 0usize;
     let mut converged = false;
+    let mut broken: Option<String> = None;
 
     let mut obj = evaluate(samples, yhat, c, &w, &mut o, &mut slack, &mut mask);
+    // Guardrail: a poisoned input (NaN C, t, y, or warm start) shows up
+    // here as non-finite margins or objective — fail fast, before any
+    // Newton work runs on garbage.
+    if !obj.is_finite() || o.iter().any(|v| !v.is_finite()) {
+        broken = Some("non-finite initial margins or objective".into());
+    }
     let sv_of = |mask: &[f64]| -> Vec<usize> {
         (0..mask.len()).filter(|&i| mask[i] == 1.0).collect()
     };
@@ -287,7 +318,7 @@ pub fn primal_newton<S: SampleSet>(
     let mut panel = GatheredRows::new();
 
     let mut newton = 0;
-    while newton < opts.max_newton {
+    while broken.is_none() && newton < opts.max_newton {
         // grad = w − 2C·X̂ᵀ(ŷ ⊙ slack) restricted to support vectors
         for i in 0..m {
             ys[i] = yhat[i] * slack[i] * mask[i];
@@ -297,6 +328,12 @@ pub fn primal_newton<S: SampleSet>(
             grad[i] = w[i] - 2.0 * c * grad[i];
         }
         let gnorm = vecops::norm2(&grad) / (d as f64).sqrt();
+        if !gnorm.is_finite() {
+            // NaN compares false against any tolerance, so it must be
+            // caught explicitly or the solve grinds to max_newton.
+            broken = Some("non-finite gradient".into());
+            break;
+        }
         if gnorm <= opts.tol * (1.0 + obj.abs()) {
             converged = true;
             break;
@@ -321,10 +358,10 @@ pub fn primal_newton<S: SampleSet>(
         }
         let rhs: Vec<f64> = grad.iter().map(|g| -g).collect();
         delta.fill(0.0);
-        let (iters, passes) = if use_gather {
+        let (iters, passes, non_finite) = if use_gather {
             solve_direction(
                 samples,
-                None,
+                Some(&mask),
                 Some(&panel),
                 2.0 * c,
                 mixed,
@@ -352,6 +389,10 @@ pub fn primal_newton<S: SampleSet>(
         };
         cg_total += iters;
         refine_total += passes;
+        if non_finite {
+            broken = Some("non-finite Newton system after masked re-solve".into());
+            break;
+        }
 
         // Batched margin refresh: [X̂w, X̂δ] in one fused panel product —
         // exact margins for the line search (no incremental drift) plus
@@ -389,9 +430,15 @@ pub fn primal_newton<S: SampleSet>(
         }
         newton += 1;
         if !accepted {
-            // No decrease along the Newton direction — numerically at the
-            // optimum. State (o/slack/mask) still describes w; stop.
-            converged = true;
+            if delta.iter().any(|v| !v.is_finite()) {
+                // Every trial objective was NaN, not merely non-improving.
+                broken = Some("non-finite Newton direction".into());
+            } else {
+                // No decrease along the Newton direction — numerically at
+                // the optimum. State (o/slack/mask) still describes w;
+                // stop.
+                converged = true;
+            }
             break;
         }
 
@@ -414,6 +461,10 @@ pub fn primal_newton<S: SampleSet>(
             }
         }
         obj = 0.5 * vecops::norm2_sq(&w) + c * loss;
+        if !obj.is_finite() {
+            broken = Some("non-finite objective after step".into());
+            break;
+        }
         sv = sv_of(&mask);
     }
 
@@ -427,8 +478,10 @@ pub fn primal_newton<S: SampleSet>(
         cg_iters_total: cg_total,
         gather_rebuilds,
         refine_passes_total: refine_total,
-        converged,
+        converged: converged && broken.is_none(),
         objective: obj,
+        aborted: false,
+        broken,
     }
 }
 
@@ -579,9 +632,10 @@ pub fn primal_newton_batch(
     points: &[PrimalBatchPoint],
     opts: &PrimalOptions,
     shadow: Option<&DesignShadowF32>,
+    ctl: Option<&super::SolveCtl>,
 ) -> (Vec<PrimalResult>, PrimalBatchStats) {
     let ys = vec![y; points.len()];
-    primal_newton_batch_ys(x, &ys, points, opts, shadow)
+    primal_newton_batch_ys(x, &ys, points, opts, shadow, ctl)
 }
 
 /// [`primal_newton_batch`] generalized to per-member responses: member
@@ -599,6 +653,7 @@ pub fn primal_newton_batch_ys(
     points: &[PrimalBatchPoint],
     opts: &PrimalOptions,
     shadow: Option<&DesignShadowF32>,
+    ctl: Option<&super::SolveCtl>,
 ) -> (Vec<PrimalResult>, PrimalBatchStats) {
     let nprobs = points.len();
     let p = x.cols();
@@ -635,6 +690,8 @@ pub fn primal_newton_batch_ys(
         refine_total: usize,
         converged: bool,
         done: bool,
+        aborted: bool,
+        broken: Option<String>,
     }
 
     let mixed = shadow.is_some();
@@ -674,6 +731,8 @@ pub fn primal_newton_batch_ys(
                 refine_total: 0,
                 converged: false,
                 done: false,
+                aborted: false,
+                broken: None,
             }
         })
         .collect();
@@ -711,10 +770,30 @@ pub fn primal_newton_batch_ys(
             }
             s.obj = 0.5 * vecops::norm2_sq(&s.w) + s.c * loss;
             s.sv = (0..m).filter(|&i| s.mask[i] == 1.0).collect();
+            // Guardrail: a poisoned member (NaN C, t, or response) is
+            // evicted from the fused panel here — before any round — and
+            // its siblings solve on untouched (per-column bit-identical
+            // fused passes keep them clean).
+            if !s.obj.is_finite() || s.o.iter().any(|v| !v.is_finite()) {
+                s.broken = Some("non-finite initial margins or objective".into());
+                s.done = true;
+            }
         }
     }
 
     loop {
+        // Intra-solve deadline, polled once per Newton round: abandon
+        // every still-live member at this round boundary — a
+        // half-converged iterate is flagged `aborted` and never served.
+        if ctl.is_some_and(|c| c.expired()) {
+            for s in st.iter_mut() {
+                if !s.done {
+                    s.aborted = true;
+                    s.done = true;
+                }
+            }
+            break;
+        }
         // Live set for this round, after the solo loop-head cap check.
         let mut live: Vec<usize> = Vec::new();
         for (j, s) in st.iter_mut().enumerate() {
@@ -753,7 +832,13 @@ pub fn primal_newton_batch_ys(
                 s.grad[i] = s.w[i] - 2.0 * s.c * g[i];
             }
             let gnorm = vecops::norm2(&s.grad) / (d as f64).sqrt();
-            if gnorm <= opts.tol * (1.0 + s.obj.abs()) {
+            if !gnorm.is_finite() {
+                // NaN compares false against any tolerance; evict the
+                // member rather than dragging a poisoned column through
+                // the fused passes to max_newton.
+                s.broken = Some("non-finite gradient".into());
+                s.done = true;
+            } else if gnorm <= opts.tol * (1.0 + s.obj.abs()) {
                 s.converged = true;
                 s.done = true;
             } else {
@@ -792,7 +877,7 @@ pub fn primal_newton_batch_ys(
                 let rhs: Vec<f64> = st[lead].grad.iter().map(|g| -g).collect();
                 let mut delta = std::mem::take(&mut st[lead].delta);
                 delta.fill(0.0);
-                let (iters, passes) = solve_direction(
+                let (iters, passes, non_finite) = solve_direction(
                     &samples,
                     Some(&st[lead].mask),
                     None,
@@ -808,6 +893,11 @@ pub fn primal_newton_batch_ys(
                 st[lead].delta = delta;
                 st[lead].cg_total += iters;
                 st[lead].refine_total += passes;
+                if non_finite {
+                    st[lead].broken =
+                        Some("non-finite Newton system after masked re-solve".into());
+                    st[lead].done = true;
+                }
                 continue;
             }
             let mut members = vec![lead];
@@ -860,9 +950,9 @@ pub fn primal_newton_batch_ys(
                 let rhs: Vec<f64> = st[lead].grad.iter().map(|g| -g).collect();
                 let mut delta = std::mem::take(&mut st[lead].delta);
                 delta.fill(0.0);
-                let (iters, passes) = solve_direction(
+                let (iters, passes, non_finite) = solve_direction(
                     &samples,
-                    None,
+                    Some(&st[lead].mask),
                     Some(&panels[host]),
                     two_c,
                     mixed,
@@ -876,6 +966,11 @@ pub fn primal_newton_batch_ys(
                 st[lead].delta = delta;
                 st[lead].cg_total += iters;
                 st[lead].refine_total += passes;
+                if non_finite {
+                    st[lead].broken =
+                        Some("non-finite Newton system after masked re-solve".into());
+                    st[lead].done = true;
+                }
             } else {
                 // Blocked CG: one fused panel product per iteration for
                 // the whole group.
@@ -906,8 +1001,40 @@ pub fn primal_newton_batch_ys(
                 stats.batched_rhs += width;
                 stats.cg_compactions += cg_out.compactions;
                 for (l, &j) in members.iter().enumerate() {
-                    st[j].delta.copy_from_slice(dx.col(l));
                     st[j].cg_total += cg_out.outcomes[l].iters;
+                    if cg_out.outcomes[l].non_finite {
+                        // Ladder rung: re-solve this member alone on the
+                        // masked full-matrix f64 operator (exactly what
+                        // its solo gathered solve would retry) before
+                        // failing it. Siblings' columns are untouched.
+                        let samples = samples_at(x, shadow, st[j].t, ys[j]);
+                        let rhs: Vec<f64> = st[j].grad.iter().map(|g| -g).collect();
+                        let mut delta = std::mem::take(&mut st[j].delta);
+                        delta.fill(0.0);
+                        let (iters, _, non_finite) = solve_direction(
+                            &samples,
+                            Some(&st[j].mask),
+                            None,
+                            2.0 * st[j].c,
+                            false,
+                            &rhs,
+                            &mut delta,
+                            &opts.cg,
+                            &mut cg_scratch,
+                            &hess_buf,
+                            &fbuf,
+                        );
+                        st[j].delta = delta;
+                        st[j].cg_total += iters;
+                        if non_finite {
+                            st[j].broken = Some(
+                                "non-finite Newton system after masked re-solve".into(),
+                            );
+                            st[j].done = true;
+                        }
+                    } else {
+                        st[j].delta.copy_from_slice(dx.col(l));
+                    }
                 }
             }
         }
@@ -927,6 +1054,10 @@ pub fn primal_newton_batch_ys(
         // (4) Line search + accept, per problem (scalar work).
         for (l, &j) in live.iter().enumerate() {
             let s = &mut st[j];
+            if s.done {
+                // Evicted mid-round by the Newton-system guardrail.
+                continue;
+            }
             let ow = od_panel.col(2 * l);
             let xd = od_panel.col(2 * l + 1);
             let wnorm_sq = vecops::norm2_sq(&s.w);
@@ -952,7 +1083,11 @@ pub fn primal_newton_batch_ys(
             }
             s.newton += 1;
             if !accepted {
-                s.converged = true;
+                if s.delta.iter().any(|v| !v.is_finite()) {
+                    s.broken = Some("non-finite Newton direction".into());
+                } else {
+                    s.converged = true;
+                }
                 s.done = true;
                 continue;
             }
@@ -973,6 +1108,11 @@ pub fn primal_newton_batch_ys(
                 }
             }
             s.obj = 0.5 * vecops::norm2_sq(&s.w) + s.c * loss;
+            if !s.obj.is_finite() {
+                s.broken = Some("non-finite objective after step".into());
+                s.done = true;
+                continue;
+            }
             s.sv = (0..m).filter(|&i| s.mask[i] == 1.0).collect();
         }
     }
@@ -1006,8 +1146,10 @@ pub fn primal_newton_batch_ys(
                 cg_iters_total: s.cg_total,
                 gather_rebuilds: s.gather_rebuilds,
                 refine_passes_total: s.refine_total,
-                converged: s.converged,
+                converged: s.converged && s.broken.is_none(),
                 objective: s.obj,
+                aborted: s.aborted,
+                broken: s.broken,
             }
         })
         .collect();
@@ -1177,7 +1319,7 @@ mod tests {
             .iter()
             .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
             .collect();
-        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts, None);
+        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts, None, None);
         assert_eq!(batch.len(), 4);
         // Two identical members walk identical trajectories, so their SV
         // sets agree every round: the shared-panel blocked CG must have
@@ -1223,7 +1365,7 @@ mod tests {
             .iter()
             .map(|&(_, t, c)| PrimalBatchPoint { t, c, w0: None })
             .collect();
-        let (batch, stats) = primal_newton_batch_ys(&d, &ys, &points, &opts, None);
+        let (batch, stats) = primal_newton_batch_ys(&d, &ys, &points, &opts, None, None);
         assert_eq!(batch.len(), 4);
         // All four members start on the full SV set, so the first round
         // fuses them into one width-4 blocked-CG group.
@@ -1265,6 +1407,7 @@ mod tests {
             &[PrimalBatchPoint { t: 0.6, c: 4.0, w0: Some(first.w.clone()) }],
             &opts,
             None,
+            None,
         );
         assert_eq!(solo.newton_iters, batch[0].newton_iters);
         for i in 0..10 {
@@ -1287,7 +1430,7 @@ mod tests {
             .iter()
             .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
             .collect();
-        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts, None);
+        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts, None, None);
         assert_eq!(stats.panel_builds, 0, "shrink off ⇒ no gathers");
         assert_eq!(stats.batched_rhs, 0, "masked members never group");
         for (s, pt) in batch.iter().zip(&points) {
@@ -1402,7 +1545,7 @@ mod tests {
             .iter()
             .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
             .collect();
-        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts, Some(&shadow));
+        let (batch, stats) = primal_newton_batch(&d, &y, &points, &opts, Some(&shadow), None);
         assert_eq!(stats.batched_rhs, 0, "mixed members must not group");
         for (s, pt) in batch.iter().zip(&points) {
             let red = ReducedSamples::with_shadow(&d, &y, pt.t, &shadow);
@@ -1415,6 +1558,116 @@ mod tests {
             }
             for (a, b) in solo.alpha.iter().zip(&s.alpha) {
                 assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    /// Guardrail ladder, eviction leg: a member with a poisoned
+    /// regularisation parameter is failed alone — flagged `broken`,
+    /// never `converged` — while its batch siblings stay bit-identical
+    /// to their solo runs (the fused passes are per-column independent).
+    #[test]
+    fn nan_member_is_evicted_and_siblings_stay_bit_identical() {
+        use crate::linalg::Design;
+        let mut rng = Rng::seed_from(151);
+        let x = Mat::from_fn(14, 30, |_, _| rng.normal());
+        let y: Vec<f64> = (0..14).map(|_| rng.normal()).collect();
+        let d: Design = x.into();
+        let labels = reduction_labels(30);
+        let opts = PrimalOptions { shrink_max_frac: 1.0, ..Default::default() };
+        let points: Vec<PrimalBatchPoint> = [(0.4, 3.0), (0.7, f64::NAN), (1.1, 8.0)]
+            .iter()
+            .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
+            .collect();
+        let (batch, _) = primal_newton_batch(&d, &y, &points, &opts, None, None);
+        let sick = &batch[1];
+        assert!(sick.broken.is_some(), "NaN C must trip the guardrail");
+        assert!(!sick.converged);
+        assert_eq!(sick.newton_iters, 0, "evicted before any round");
+        for &j in &[0usize, 2] {
+            let red = ReducedSamples::new(&d, &y, points[j].t);
+            let solo = primal_newton(&red, &labels, points[j].c, &opts, None);
+            assert!(solo.converged && batch[j].converged);
+            assert!(batch[j].broken.is_none());
+            for i in 0..14 {
+                assert_eq!(solo.w[i].to_bits(), batch[j].w[i].to_bits(), "j={j} i={i}");
+            }
+        }
+        // A poisoned budget t corrupts the margins instead of the
+        // objective sum — the margin guard must catch that form too.
+        let (b2, _) = primal_newton_batch(
+            &d,
+            &y,
+            &[PrimalBatchPoint { t: f64::NAN, c: 5.0, w0: None }],
+            &opts,
+            None,
+            None,
+        );
+        assert!(b2[0].broken.is_some(), "NaN t must trip the margin guard");
+        assert!(!b2[0].converged);
+    }
+
+    /// Solo solves walk the same guardrail: a poisoned C is flagged
+    /// `broken`, never reported converged.
+    #[test]
+    fn solo_nan_c_is_flagged_broken() {
+        let (s, y) = blobs(10, 3, 0.5, 152);
+        let r = primal_newton(&s, &y, f64::NAN, &PrimalOptions::default(), None);
+        assert!(r.broken.is_some());
+        assert!(!r.converged);
+        assert_eq!(r.newton_iters, 0);
+    }
+
+    /// An already-expired deadline aborts every member at the first
+    /// round boundary: no Newton work, `aborted` set, never `converged`
+    /// — the coordinator must treat such iterates as non-results.
+    #[test]
+    fn expired_ctl_aborts_at_round_boundary() {
+        use super::super::SolveCtl;
+        use crate::linalg::Design;
+        let mut rng = Rng::seed_from(153);
+        let x = Mat::from_fn(12, 24, |_, _| rng.normal());
+        let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let d: Design = x.into();
+        let expired = || true;
+        let ctl = SolveCtl::new(&expired);
+        let points: Vec<PrimalBatchPoint> = [(0.5, 2.0), (0.9, 6.0)]
+            .iter()
+            .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
+            .collect();
+        let (batch, _) =
+            primal_newton_batch(&d, &y, &points, &PrimalOptions::default(), None, Some(&ctl));
+        for s in &batch {
+            assert!(s.aborted);
+            assert!(!s.converged);
+            assert_eq!(s.newton_iters, 0, "no Newton round may run past the deadline");
+        }
+    }
+
+    /// A deadline that never fires must leave the batch bit-identical
+    /// to the uncontrolled run — polling is observation, not steering.
+    #[test]
+    fn unexpired_ctl_is_bit_identical_to_uncontrolled() {
+        use super::super::SolveCtl;
+        use crate::linalg::Design;
+        let mut rng = Rng::seed_from(154);
+        let x = Mat::from_fn(12, 24, |_, _| rng.normal());
+        let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let d: Design = x.into();
+        let live = || false;
+        let ctl = SolveCtl::new(&live);
+        let opts = PrimalOptions { shrink_max_frac: 1.0, ..Default::default() };
+        let points: Vec<PrimalBatchPoint> = [(0.4, 3.0), (0.7, 5.0)]
+            .iter()
+            .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
+            .collect();
+        let (a, _) = primal_newton_batch(&d, &y, &points, &opts, None, Some(&ctl));
+        let (b, _) = primal_newton_batch(&d, &y, &points, &opts, None, None);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert!(!ra.aborted && ra.broken.is_none());
+            assert_eq!(ra.newton_iters, rb.newton_iters);
+            for (wa, wb) in ra.w.iter().zip(&rb.w) {
+                assert_eq!(wa.to_bits(), wb.to_bits());
             }
         }
     }

@@ -62,8 +62,8 @@ fn prop_primal_dual_agree() {
             backend.prepare(&design, &y, SvmMode::Dual).map_err(|e| e.to_string())?;
         let (t, c) = (0.7, 4.0);
         let mut scratch = SvmScratch::new();
-        let a = prim.solve(t, c, None, &mut scratch).map_err(|e| e.to_string())?.alpha;
-        let b = dual.solve(t, c, None, &mut scratch).map_err(|e| e.to_string())?.alpha;
+        let a = prim.solve(t, c, None, &mut scratch, None).map_err(|e| e.to_string())?.alpha;
+        let b = dual.solve(t, c, None, &mut scratch, None).map_err(|e| e.to_string())?.alpha;
         close_vec(&a, &b, 1e-4, "alpha")
     });
 }
@@ -348,7 +348,7 @@ fn prop_parallelism_modes_bit_stable_beta_path() {
         for t in [0.2, 0.5, 0.9, 1.4] {
             let prob = EnProblem::new(x.clone(), y.to_vec(), t, 0.5);
             let sol = sven
-                .solve_prepared(prep.as_ref(), &mut scratch, &prob, warm.as_ref())
+                .solve_prepared(prep.as_ref(), &mut scratch, &prob, warm.as_ref(), None)
                 .expect("solve");
             // Real warm state so the warm-seeded solver paths (free-set
             // seeding, K_FF gathers on large free sets) are exercised.
@@ -638,7 +638,7 @@ fn prop_primal_newton_batch_matches_solo() {
                 .iter()
                 .map(|&(t, c)| PrimalBatchPoint { t, c, w0: None })
                 .collect();
-            let (batch, _stats) = primal_newton_batch(&design, y, &points, &opts, None);
+            let (batch, _stats) = primal_newton_batch(&design, y, &points, &opts, None, None);
             for (s, &(t, c)) in batch.iter().zip(pts) {
                 let red = ReducedSamples::new(&design, y, t);
                 let solo = primal_newton(&red, &labels, c, &opts, None);
@@ -864,6 +864,123 @@ fn prop_multi_response_matches_solo_path_jobs() {
             Ok(())
         },
     );
+}
+
+/// Checkpointed-recovery seal: a path sweep killed at **every**
+/// grid-point ordinal under a retry policy must reproduce the
+/// uninterrupted run bit-for-bit — β bits and iteration counts — over
+/// dense/sparse designs, both SVM regimes, and 1/2/8 workers. The
+/// metrics must also prove the retry *resumed* from the published
+/// checkpoint (primal checkpoints land at chunk boundaries, the dual
+/// warm chain checkpoints after every point) rather than re-solving the
+/// prefix.
+#[test]
+fn prop_sweep_killed_at_every_ordinal_resumes_bit_identical() {
+    use std::sync::Arc;
+    use sven::coordinator::{
+        BackendChoice, FaultPlan, GridPoint, PoolConfig, RetryPolicy, Service,
+        ServiceConfig, SubmitOptions,
+    };
+
+    // Keep in sync with coordinator::path::CTL_CHUNK: the primal sweep
+    // under control batches this many points between checkpoints.
+    const CTL_CHUNK: usize = 8;
+    let points: Vec<GridPoint> =
+        (0..10).map(|i| GridPoint { t: 0.2 + 0.05 * i as f64, lambda2: 0.5 }).collect();
+    // Primal regime (2p > n, chunk-batched) and dual regime (sequential
+    // warm chain). The grid spans two primal chunks so a kill in the
+    // second chunk resumes from a non-empty checkpoint.
+    let shapes = [(40usize, 48usize, true), (120, 30, false)];
+    for (n, p, primal) in shapes {
+        let d = synth_regression(&SynthSpec {
+            n,
+            p,
+            support: 6,
+            seed: 7311,
+            ..Default::default()
+        });
+        for sparse in [false, true] {
+            let x = if sparse {
+                Arc::new(Design::from(Csr::from_dense(&d.x, 0.0)))
+            } else {
+                Arc::new(Design::from(d.x.clone()))
+            };
+            let y = Arc::new(d.y.clone());
+            let clean_svc = Service::start(ServiceConfig {
+                pool: PoolConfig { workers: 1, queue_capacity: 64 },
+                ..Default::default()
+            });
+            let rx = clean_svc
+                .submit_path(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+                .expect("accepted");
+            let clean = rx.recv().unwrap().result.expect("clean path").expect_path();
+            clean_svc.shutdown();
+            assert_eq!(clean.len(), points.len());
+            for workers in [1usize, 2, 8] {
+                for k in 0..points.len() as u64 {
+                    let ctx =
+                        format!("primal={primal} sparse={sparse} workers={workers} kill={k}");
+                    let svc = Service::start(ServiceConfig {
+                        pool: PoolConfig { workers, queue_capacity: 64 },
+                        fault_plan: Some(FaultPlan {
+                            solve_panics: vec![k],
+                            ..Default::default()
+                        }),
+                        ..Default::default()
+                    });
+                    let opts = SubmitOptions {
+                        retry: RetryPolicy::retries(2),
+                        ..Default::default()
+                    };
+                    let rx = svc
+                        .submit_path_with(
+                            1,
+                            x.clone(),
+                            y.clone(),
+                            points.clone(),
+                            BackendChoice::Rust,
+                            opts,
+                        )
+                        .expect("accepted");
+                    let sols =
+                        rx.recv().unwrap().result.expect("retried to success").expect_path();
+                    assert_eq!(sols.len(), clean.len(), "{ctx}");
+                    for (i, (a, b)) in clean.iter().zip(&sols).enumerate() {
+                        assert_eq!(a.iterations, b.iterations, "{ctx} pt {i}: iterations");
+                        for j in 0..a.beta.len() {
+                            assert_eq!(
+                                a.beta[j].to_bits(),
+                                b.beta[j].to_bits(),
+                                "{ctx} pt {i} j={j}: {} vs {}",
+                                a.beta[j],
+                                b.beta[j]
+                            );
+                        }
+                    }
+                    // The ordinal panic unwound before its point was
+                    // published, so the checkpointed prefix is exactly
+                    // the last chunk/point boundary before the kill; the
+                    // retry meters only the points it newly finished.
+                    let prefix =
+                        if primal { (k as usize / CTL_CHUNK) * CTL_CHUNK } else { k as usize };
+                    let m = svc.metrics();
+                    assert_eq!(m.worker_panics(), 1, "{ctx}");
+                    assert_eq!(m.jobs_retried(), 1, "{ctx}");
+                    assert_eq!(
+                        m.resumed_from_checkpoint(),
+                        u64::from(prefix > 0),
+                        "{ctx}: a non-empty prefix must be resumed, an empty one not"
+                    );
+                    assert_eq!(
+                        m.checkpoints_published(),
+                        (points.len() - prefix) as u64,
+                        "{ctx}: the resumed prefix must not be re-published"
+                    );
+                    svc.shutdown();
+                }
+            }
+        }
+    }
 }
 
 /// Mixed-precision determinism seal: a MixedF32 primal solve must be

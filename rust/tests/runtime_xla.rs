@@ -97,7 +97,7 @@ fn xla_prepared_path_reuse_and_warm_start() {
     for scale in [0.6, 0.8, 1.0] {
         let p2 = prob.with_budget(prob.t * scale, prob.lambda2);
         let sol = sven
-            .solve_prepared(prep.as_ref(), &mut scratch, &p2, warm.as_ref())
+            .solve_prepared(prep.as_ref(), &mut scratch, &p2, warm.as_ref(), None)
             .expect("prepared solve");
         let oneshot = sven.solve(&p2).expect("oneshot");
         for j in 0..p2.p() {

@@ -449,6 +449,7 @@ fn sweep_reports_batch_fusion_stats() {
         None,
         true,
         None,
+        None,
     )
     .unwrap();
     assert_eq!(sols.len(), 3);

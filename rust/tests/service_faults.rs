@@ -23,6 +23,19 @@
 //!   workers deadlocks never, yields a definite outcome for every job,
 //!   and keeps every successful result bit-identical to the clean run
 //!   (set `PALLAS_FAULT_SOAK=1` to widen the schedule sweep).
+//! - A NaN-poisoned solve trips the numerical-health guardrails: the
+//!   job fails with the non-transient `JobError::NumericalBreakdown`
+//!   (never retried, never served), and in a multi-response screen the
+//!   degradation ladder evicts the sick *member* — its clean prefix is
+//!   kept, its siblings finish bit-identical to the clean run.
+//! - A sweep killed mid-grid under a retry policy resumes from the
+//!   published checkpoint (no prefix re-solve) and still produces the
+//!   bit-identical full path; `checkpoints_published` /
+//!   `resumed_from_checkpoint` meter the recovery.
+//! - A NaN + stall soak (widen with `PALLAS_NAN_SOAK=1`, the CI
+//!   `rust-faults` schedule) never serves a non-finite coefficient:
+//!   every job ends in a finite success, an exhausted transient, or a
+//!   structured breakdown.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -738,6 +751,321 @@ fn mixed_traffic_soak_under_seeded_faults() {
             );
             let report = m.report();
             for key in ["worker_panics=", "worker_respawns=", "jobs_retried=", "jobs_shed="] {
+                assert!(report.contains(key), "metric {key} missing from report: {report}");
+            }
+            svc.shutdown();
+        }
+    }
+}
+
+/// A NaN-poisoned point solve is caught by the numerical-health
+/// guardrails and fails with the structured, non-transient
+/// `NumericalBreakdown` — the half-broken iterate is never served, and
+/// the worker survives to serve the next (clean) job finitely.
+#[test]
+fn nan_poisoned_point_fails_with_numerical_breakdown() {
+    let d = primal_data(9014);
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan { solve_nans: vec![0], ..Default::default() }),
+            ..Default::default()
+        },
+    );
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let rx = svc
+        .submit_point(1, x.clone(), y.clone(), 0.4, 0.5, BackendChoice::Rust)
+        .expect("accepted");
+    let err = rx.recv().unwrap().result.unwrap_err();
+    match &err {
+        JobError::NumericalBreakdown { stage, detail } => {
+            assert!(!stage.is_empty(), "the tripped guard must be named");
+            assert!(!detail.is_empty(), "the breakdown detail must survive: {stage}");
+        }
+        other => panic!("expected NumericalBreakdown, got {other:?}"),
+    }
+    assert!(!err.is_transient(), "breakdowns are deterministic; retrying cannot heal them");
+    // Ordinal 1 is clean: the worker outlives the breakdown and serves
+    // finite coefficients.
+    let rx = svc
+        .submit_point(1, x, y, 0.4, 0.5, BackendChoice::Rust)
+        .expect("accepted");
+    let sol = rx.recv().unwrap().result.expect("clean ordinal succeeds").expect_point();
+    assert!(sol.beta.iter().all(|v| v.is_finite()), "a served β must be finite");
+    let m = svc.metrics();
+    assert!(m.numerical_breakdowns() >= 1);
+    assert_eq!(m.failed(), 1);
+    assert_eq!(m.completed(), 1);
+    assert!(m.report().contains("numerical_breakdowns="), "{}", m.report());
+    svc.shutdown();
+}
+
+/// A retry policy must not burn attempts on a breakdown: the fault is in
+/// the job's arithmetic, not its execution, so the first breakdown is
+/// final.
+#[test]
+fn numerical_breakdown_is_never_retried() {
+    let d = primal_data(9015);
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan { solve_nans: vec![0], ..Default::default() }),
+            ..Default::default()
+        },
+    );
+    let opts = SubmitOptions { retry: RetryPolicy::retries(3), ..Default::default() };
+    let rx = svc
+        .submit_with(
+            1,
+            Arc::new(Design::from(d.x.clone())),
+            Arc::new(d.y.clone()),
+            sven::coordinator::JobKind::Point { t: 0.4, lambda2: 0.5 },
+            BackendChoice::Rust,
+            opts,
+        )
+        .expect("accepted");
+    let err = rx.recv().unwrap().result.unwrap_err();
+    assert!(matches!(err, JobError::NumericalBreakdown { .. }), "{err:?}");
+    let m = svc.metrics();
+    assert_eq!(m.jobs_retried(), 0, "a deterministic breakdown must fail on attempt one");
+    svc.shutdown();
+}
+
+/// The degradation ladder fails the *member*, not the batch: a
+/// NaN-poisoned response in a multi-response screen is evicted with its
+/// clean prefix intact, the verdict names it in `broken`, and its
+/// siblings finish the full grid bit-identical to a fault-free run.
+///
+/// Ordinal math: with every response live, the point-major sweep draws
+/// one poison verdict per member per point — point 0 consumes ordinals
+/// 0,1,2 and point 1 consumes 3,4,5 — so poisoning ordinal 4 hits
+/// member 1 at grid point 1, leaving it a one-point clean prefix.
+#[test]
+fn nan_poisoned_member_is_evicted_and_siblings_stay_bit_identical() {
+    let d = primal_data(9016);
+    let x = Arc::new(Design::from(d.x.clone()));
+    let responses: Vec<Arc<Vec<f64>>> = (0..3)
+        .map(|i| {
+            let f = 0.7 + 0.3 * i as f64;
+            Arc::new(d.y.iter().map(|&v| f * v).collect::<Vec<f64>>())
+        })
+        .collect();
+    let points = grid(6);
+
+    let clean_svc = service(1, ServiceConfig::default());
+    let rx = clean_svc
+        .submit_multi_response(1, x.clone(), responses.clone(), points.clone(), BackendChoice::Rust)
+        .expect("accepted");
+    let clean = rx.recv().unwrap().result.expect("clean screen").expect_multi_response();
+    clean_svc.shutdown();
+
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan { solve_nans: vec![4], ..Default::default() }),
+            ..Default::default()
+        },
+    );
+    let rx = svc
+        .submit_multi_response(1, x, responses, points.clone(), BackendChoice::Rust)
+        .expect("accepted");
+    let res = rx
+        .recv()
+        .unwrap()
+        .result
+        .expect("an evicted member must not fail the batch")
+        .expect_multi_response();
+    assert!(res.broken[1].is_some(), "member 1 must carry the breakdown verdict");
+    assert!(res.broken[0].is_none() && res.broken[2].is_none());
+    assert_eq!(res.paths[1].len(), 1, "the sick member keeps exactly its clean prefix");
+    assert_bits(&clean.paths[1][0].beta, &res.paths[1][0].beta, "sick member prefix");
+    for r in [0usize, 2] {
+        assert_eq!(res.paths[r].len(), points.len(), "sibling {r} must finish the grid");
+        for (i, (a, b)) in clean.paths[r].iter().zip(&res.paths[r]).enumerate() {
+            assert_bits(&a.beta, &b.beta, &format!("sibling {r} pt {i}"));
+        }
+    }
+    for path in &res.paths {
+        for sol in path {
+            assert!(
+                sol.beta.iter().all(|v| v.is_finite()),
+                "no served β may carry the injected NaN"
+            );
+        }
+    }
+    let m = svc.metrics();
+    assert_eq!(m.members_evicted(), 1);
+    let report = m.report();
+    assert!(report.contains("members_evicted=1"), "{report}");
+    svc.shutdown();
+}
+
+/// A sweep killed mid-grid under a retry policy resumes from the
+/// published checkpoint: the solved prefix is not re-solved, and the
+/// assembled path is bit-for-bit what an uninterrupted run produces.
+///
+/// The dual-regime sweep draws one fault ordinal per grid point, so a
+/// panic at ordinal 3 kills the first attempt after checkpointing three
+/// points; the retry resumes at point 3 (consuming ordinals 4..) and
+/// publishes exactly the three remaining points.
+#[test]
+fn killed_sweep_resumes_from_checkpoint_bit_identical() {
+    let d = dual_data(9017);
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let points = grid(6);
+
+    let clean_svc = service(1, ServiceConfig::default());
+    let rx = clean_svc
+        .submit_path(2, x.clone(), y.clone(), points.clone(), BackendChoice::Rust)
+        .expect("accepted");
+    let clean = rx.recv().unwrap().result.expect("clean path").expect_path();
+    clean_svc.shutdown();
+
+    let svc = service(
+        1,
+        ServiceConfig {
+            fault_plan: Some(FaultPlan { solve_panics: vec![3], ..Default::default() }),
+            ..Default::default()
+        },
+    );
+    let opts = SubmitOptions { retry: RetryPolicy::retries(2), ..Default::default() };
+    let rx = svc
+        .submit_path_with(2, x, y, points.clone(), BackendChoice::Rust, opts)
+        .expect("accepted");
+    let sols = rx.recv().unwrap().result.expect("retried to success").expect_path();
+    assert_eq!(sols.len(), points.len());
+    for (i, (a, b)) in clean.iter().zip(&sols).enumerate() {
+        assert_bits(&a.beta, &b.beta, &format!("resumed path pt {i}"));
+        assert_eq!(a.iterations, b.iterations, "pt {i}: iterations");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.worker_panics(), 1);
+    assert_eq!(m.jobs_retried(), 1);
+    assert_eq!(
+        m.resumed_from_checkpoint(),
+        1,
+        "the retry must resume, not re-solve from scratch"
+    );
+    assert_eq!(
+        m.checkpoints_published(),
+        3,
+        "only the points the resumed attempt newly finished are metered"
+    );
+    let report = m.report();
+    for key in ["checkpoints_published=3", "resumed_from_checkpoint=1"] {
+        assert!(report.contains(key), "metric {key} missing from report: {report}");
+    }
+    svc.shutdown();
+}
+
+/// The CI `rust-faults` schedule: seeded NaN poisoning *and* stalls on
+/// top of the transient plan. Every job must end in a finite success, an
+/// exhausted transient, or a structured breakdown — an injected
+/// non-finite value must never reach a served β. `PALLAS_NAN_SOAK=1`
+/// widens the seed sweep.
+#[test]
+fn nan_and_stall_soak_never_serves_non_finite() {
+    let d = primal_data(9018);
+    let dd = dual_data(9019);
+    let x = Arc::new(Design::from(d.x.clone()));
+    let y = Arc::new(d.y.clone());
+    let xd = Arc::new(Design::from(dd.x.clone()));
+    let yd = Arc::new(dd.y.clone());
+    let points = grid(6);
+    let responses: Vec<Arc<Vec<f64>>> = (0..3)
+        .map(|i| {
+            let f = 0.7 + 0.3 * i as f64;
+            Arc::new(d.y.iter().map(|&v| f * v).collect::<Vec<f64>>())
+        })
+        .collect();
+    let seeds: &[u64] = if std::env::var("PALLAS_NAN_SOAK").is_ok() {
+        &[21, 22, 23]
+    } else {
+        &[21]
+    };
+    let assert_finite = |sols: &[sven::solvers::elastic_net::EnSolution], ctx: &str| {
+        for (i, s) in sols.iter().enumerate() {
+            assert!(
+                s.beta.iter().all(|v| v.is_finite()),
+                "{ctx}: non-finite β served at pt {i}"
+            );
+        }
+    };
+    for &seed in seeds {
+        for &workers in &[1usize, 2, 8] {
+            let plan = FaultPlan::seeded(seed, 48, 2).with_seeded_nans(seed, 48, 4);
+            assert!(!plan.solve_nans.is_empty(), "the NaN schedule must inject");
+            let svc = service(
+                workers,
+                ServiceConfig { fault_plan: Some(plan), ..Default::default() },
+            );
+            let opts = SubmitOptions { retry: RetryPolicy::retries(4), ..Default::default() };
+            let mut jobs: Vec<(String, std::sync::mpsc::Receiver<_>)> = Vec::new();
+            for (i, gp) in points.iter().enumerate().take(3) {
+                let rx = svc
+                    .submit_with(
+                        1,
+                        x.clone(),
+                        y.clone(),
+                        sven::coordinator::JobKind::Point { t: gp.t, lambda2: gp.lambda2 },
+                        BackendChoice::Rust,
+                        opts,
+                    )
+                    .expect("accepted");
+                jobs.push((format!("point{i}"), rx));
+            }
+            jobs.push((
+                "path".into(),
+                svc.submit_path_with(1, x.clone(), y.clone(), points.clone(), BackendChoice::Rust, opts)
+                    .expect("accepted"),
+            ));
+            jobs.push((
+                "dual_path".into(),
+                svc.submit_path_with(2, xd.clone(), yd.clone(), points.clone(), BackendChoice::Rust, opts)
+                    .expect("accepted"),
+            ));
+            jobs.push((
+                "multi".into(),
+                svc.submit_multi_response_with(
+                    1,
+                    x.clone(),
+                    responses.clone(),
+                    points.clone(),
+                    BackendChoice::Rust,
+                    opts,
+                )
+                .expect("accepted"),
+            ));
+            for (name, rx) in jobs {
+                let ctx = format!("nan soak seed {seed}, {workers} workers, job {name}");
+                let out = rx
+                    .recv_timeout(Duration::from_secs(60))
+                    .unwrap_or_else(|e| panic!("{ctx}: no definite outcome ({e})"));
+                match out.result {
+                    Ok(JobResult::Point(sol)) => assert_finite(std::slice::from_ref(&sol), &ctx),
+                    Ok(JobResult::Path(sols)) => assert_finite(&sols, &ctx),
+                    Ok(JobResult::MultiResponse(res)) => {
+                        for (r, path) in res.paths.iter().enumerate() {
+                            assert_finite(path, &format!("{ctx} resp {r}"));
+                            if path.len() < points.len() {
+                                assert!(
+                                    res.broken[r].is_some(),
+                                    "{ctx}: only an evicted member may stop short"
+                                );
+                            }
+                        }
+                    }
+                    Ok(other) => panic!("{ctx}: unexpected result shape {other:?}"),
+                    Err(e) => assert!(
+                        e.is_transient() || matches!(e, JobError::NumericalBreakdown { .. }),
+                        "{ctx}: only exhausted transients or breakdowns may fail, got {e:?}"
+                    ),
+                }
+            }
+            let report = svc.metrics().report();
+            for key in ["numerical_breakdowns=", "members_evicted=", "checkpoints_published="] {
                 assert!(report.contains(key), "metric {key} missing from report: {report}");
             }
             svc.shutdown();
